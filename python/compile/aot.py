@@ -1,0 +1,151 @@
+"""AOT pipeline: lower every (config, op) jax entry point to HLO text.
+
+This is the only place python touches the build: ``make artifacts`` runs
+``python -m compile.aot --out ../artifacts`` once; the rust coordinator then
+loads the HLO text through PJRT (`xla` crate) and python never runs again.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+≥ 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla = "0.1.6"`` crate binds) rejects
+(``proto.id() <= INT_MAX``).  The HLO text parser reassigns ids, so text
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Every entry point is lowered with ``return_tuple=True``; the rust side
+unwraps the result tuple.  A ``manifest.json`` records, per config and op,
+the artifact path and the exact input/output shapes so the rust runtime can
+validate at load time instead of failing inside PJRT.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.configs import BUILD, CONFIGS, Config
+
+F32 = jnp.float32
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), F32)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def entry_points(cfg: Config):
+    """Yield (op_name, fn, [input ShapeDtypeStructs]) for one config.
+
+    Layer indices are 1-based to match the paper's Algorithm 1.
+    """
+    d, C = cfg.dims, cfg.tile
+    L = len(d) - 1
+    kind, g, b = cfg.act, cfg.gamma, cfg.beta
+
+    for l in range(1, L + 1):
+        # Gram pair for the parallel W_l update: z_l (d[l], C), a_{l-1}.
+        yield (f"gram_{l}", model.gram_op, [_spec(d[l], C), _spec(d[l - 1], C)])
+        # z aᵀ alone (layer-1 input-Gram caching path).
+        yield (f"zat_{l}", model.zat_op, [_spec(d[l], C), _spec(d[l - 1], C)])
+
+    for l in range(1, L):
+        # a_l update: minv (d[l], d[l]), W_{l+1}, z_{l+1}, z_l.
+        yield (
+            f"a_update_{l}",
+            functools.partial(model.a_update_op, beta_next=b, gamma=g, kind=kind),
+            [_spec(d[l], d[l]), _spec(d[l + 1], d[l]),
+             _spec(d[l + 1], C), _spec(d[l], C)],
+        )
+        # z_l update: W_l, a_{l-1}, a_l.
+        yield (
+            f"z_hidden_{l}",
+            functools.partial(model.z_hidden_op, gamma=g, beta=b, kind=kind),
+            [_spec(d[l], d[l - 1]), _spec(d[l - 1], C), _spec(d[l], C)],
+        )
+
+    # Output layer: z_L update (+ returns m for reuse), λ update, penalty.
+    yield (
+        "z_out",
+        functools.partial(model.z_out_op, beta=b),
+        [_spec(d[L], d[L - 1]), _spec(d[L - 1], C),
+         _spec(d[L], C), _spec(d[L], C)],
+    )
+    yield (
+        "lambda_update",
+        functools.partial(model.lambda_op, beta=b),
+        [_spec(d[L], C), _spec(d[L], C), _spec(d[L], C)],
+    )
+
+    # Full-network ops.
+    ws = [_spec(d[i + 1], d[i]) for i in range(L)]
+    yield ("predict", functools.partial(model.predict_op, kind=kind),
+           ws + [_spec(d[0], C)])
+    yield ("eval", functools.partial(model.eval_op, kind=kind),
+           ws + [_spec(d[0], C), _spec(d[L], C), _spec(1, C)])
+    yield ("loss_grad", functools.partial(model.loss_grad_op, kind=kind),
+           ws + [_spec(d[0], C), _spec(d[L], C), _spec(1, C)])
+
+
+def lower_config(cfg: Config, out_dir: str) -> dict:
+    os.makedirs(os.path.join(out_dir, cfg.name), exist_ok=True)
+    ops = {}
+    for op_name, fn, specs in entry_points(cfg):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        rel = f"{cfg.name}/{op_name}.hlo.txt"
+        with open(os.path.join(out_dir, rel), "w") as f:
+            f.write(text)
+        out_shapes = [list(o.shape) for o in lowered.out_info]
+        ops[op_name] = {
+            "file": rel,
+            "inputs": [list(s.shape) for s in specs],
+            "outputs": out_shapes,
+        }
+        print(f"  {cfg.name}/{op_name}: "
+              f"{len(specs)} in -> {len(out_shapes)} out, {len(text)} chars")
+    return {
+        "dims": cfg.dims,
+        "act": cfg.act,
+        "gamma": cfg.gamma,
+        "beta": cfg.beta,
+        "tile": cfg.tile,
+        "note": cfg.note,
+        "ops": ops,
+    }
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="artifact directory")
+    p.add_argument("--configs", nargs="*", default=BUILD,
+                   help="subset of configs to build")
+    args = p.parse_args()
+
+    manifest = {"format": 1, "configs": {}}
+    for name in args.configs:
+        cfg = CONFIGS[name]
+        print(f"lowering config {name} dims={cfg.dims} act={cfg.act} "
+              f"tile={cfg.tile}")
+        manifest["configs"][name] = lower_config(cfg, args.out)
+
+    path = os.path.join(args.out, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

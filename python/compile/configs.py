@@ -1,0 +1,54 @@
+"""Artifact configurations: one entry per network the rust side can run.
+
+Each config fixes the network dimensions, the activation, the penalty
+constants (baked into the artifacts — see model.py docstring) and the column
+tile ``C``.  ``compile.aot`` lowers every op of every config listed in
+``BUILD`` to ``artifacts/<name>/<op>.hlo.txt`` plus a manifest the rust
+runtime consumes.
+
+dims[0] is the input feature count; dims[-1] the output dimension (1 for the
+paper's binary tasks).  ``tile`` is the fixed sample-axis width of every
+artifact; the rust coordinator pads shard remainders up to a tile.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List
+
+
+@dataclass(frozen=True)
+class Config:
+    name: str
+    dims: List[int]
+    act: str = "relu"
+    gamma: float = 10.0  # paper §6 default
+    beta: float = 1.0    # paper §6 default
+    tile: int = 1024
+    note: str = ""
+
+
+CONFIGS = {
+    c.name: c
+    for c in [
+        # Tiny shapes for rust integration tests (fast to compile & run).
+        Config("test", [4, 3, 2], act="relu", tile=8,
+               note="integration-test net"),
+        Config("test_hardsig", [4, 3, 2], act="hardsig", tile=8,
+               note="integration-test net, hard-sigmoid activation"),
+        # Quickstart example: small synthetic binary task.
+        Config("quickstart", [16, 12, 1], act="relu", tile=256,
+               note="examples/quickstart"),
+        # Paper §7.1: SVHN 0-vs-2 HOG features, net 648-100-50-1 (two hidden
+        # layers of 100 and 50 ReLU nodes).
+        Config("svhn", [648, 100, 50, 1], act="relu", tile=2048,
+               note="paper fig 1a/1b"),
+        # Paper §7.2: HIGGS, net 28-300-1 (one hidden layer of 300 ReLU
+        # nodes, per Baldi et al. 2014).
+        Config("higgs", [28, 300, 1], act="relu", tile=4096,
+               note="paper fig 2a/2b"),
+    ]
+}
+
+# Configs built by `make artifacts` (all of them, by default).
+BUILD = list(CONFIGS)

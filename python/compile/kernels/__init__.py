@@ -1,0 +1,12 @@
+"""Pallas kernels (L1) for the ADMM trainer, plus their pure-jnp oracles.
+
+Every kernel here lowers into the L2 jax graphs in ``compile.model`` and is
+checked against ``compile.kernels.ref`` by the pytest suite.
+"""
+
+from compile.kernels import ref
+from compile.kernels.gram import gram_pair
+from compile.kernels.zout import z_out_update
+from compile.kernels.zupdate import z_hidden_update
+
+__all__ = ["ref", "gram_pair", "z_out_update", "z_hidden_update"]

@@ -1,0 +1,199 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the *correctness contract*: each Pallas kernel must agree with its
+oracle to float32 tolerance across all shapes/dtypes/parameters the test
+suite sweeps (see ``python/tests/``).  The oracles are written for clarity,
+not speed — straight-line jnp with no tiling.
+
+All activation matrices follow the paper's convention: one training sample
+per COLUMN, i.e. an activation matrix has shape ``(features, samples)``.
+
+Notation (Taylor et al., ICML 2016, Algorithm 1):
+    a_l   post-activation of layer l            (f_l, n)
+    z_l   pre-activation of layer l             (f_l, n)
+    m_l   = W_l @ a_{l-1}, the "linear guess"   (f_l, n)
+    λ     Bregman/Lagrange multiplier on z_L    (f_L, n)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Activations h_l (paper §3.1): piecewise-linear choices with closed-form
+# z-updates.  "hardsig" is the paper's non-differentiable sigmoid
+# h(x) = 0 for x<=0, x for 0<x<1, 1 for x>=1, i.e. clamp(x, 0, 1).
+# ---------------------------------------------------------------------------
+
+ACTIVATIONS = ("relu", "hardsig")
+
+
+def act(kind: str, x):
+    """Apply activation ``kind`` element-wise."""
+    if kind == "relu":
+        return jnp.maximum(x, 0.0)
+    if kind == "hardsig":
+        return jnp.clip(x, 0.0, 1.0)
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Hidden-layer output (z_l) update — paper eq. (7):
+#     argmin_z  γ ‖a − h(z)‖² + β ‖z − m‖²       (entry-wise decoupled)
+# For piecewise-linear h, restrict to each linear piece, solve the quadratic,
+# clamp into the piece, and take the piece with the lowest objective.  The
+# per-piece restriction is convex, so the clamped stationary point is the
+# piece's global minimizer; the overall min over pieces is the global
+# minimizer of the (non-convex) 1-D problem.
+# ---------------------------------------------------------------------------
+
+
+def _zh_obj(a, z, h_z, gamma, beta, m):
+    return gamma * (a - h_z) ** 2 + beta * (z - m) ** 2
+
+
+def z_hidden(a, m, gamma: float, beta: float, kind: str):
+    """Globally optimal z for eq. (7). Shapes: a, m -> (f, n)."""
+    a = jnp.asarray(a, jnp.float32)
+    m = jnp.asarray(m, jnp.float32)
+    g, b = jnp.float32(gamma), jnp.float32(beta)
+
+    if kind == "relu":
+        # piece z >= 0: h(z) = z  -> quadratic in z, argmin (γa+βm)/(γ+β)
+        z_pos = jnp.maximum((g * a + b * m) / (g + b), 0.0)
+        v_pos = _zh_obj(a, z_pos, z_pos, g, b, m)
+        # piece z <= 0: h(z) = 0  -> argmin m clamped to the piece
+        z_neg = jnp.minimum(m, 0.0)
+        v_neg = _zh_obj(a, z_neg, 0.0, g, b, m)
+        return jnp.where(v_pos <= v_neg, z_pos, z_neg)
+
+    if kind == "hardsig":
+        # piece z <= 0: h = 0
+        z0 = jnp.minimum(m, 0.0)
+        v0 = _zh_obj(a, z0, 0.0, g, b, m)
+        # piece 0 <= z <= 1: h = z
+        z1 = jnp.clip((g * a + b * m) / (g + b), 0.0, 1.0)
+        v1 = _zh_obj(a, z1, z1, g, b, m)
+        # piece z >= 1: h = 1
+        z2 = jnp.maximum(m, 1.0)
+        v2 = _zh_obj(a, z2, 1.0, g, b, m)
+        z = jnp.where(v1 <= v0, z1, z0)
+        v = jnp.minimum(v1, v0)
+        return jnp.where(v2 < v, z2, z)
+
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Output-layer (z_L) update — Algorithm 1 last block:
+#     argmin_z  ℓ(z, y) + λ·z + β (z − m)²
+# with the paper's separable hinge (§6, binary labels y ∈ {0,1}):
+#     ℓ(z, 1) = max(1 − z, 0),   ℓ(z, 0) = max(z, 0).
+# The objective is CONVEX (hinge + linear + quadratic), so comparing the two
+# per-piece clamped minimizers yields the global minimum.
+# ---------------------------------------------------------------------------
+
+
+def hinge(z, y):
+    """Paper §6 separable hinge loss, element-wise."""
+    z = jnp.asarray(z, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    return jnp.where(y > 0.5, jnp.maximum(1.0 - z, 0.0), jnp.maximum(z, 0.0))
+
+
+def _zo_obj(z, y, lam, beta, m):
+    return hinge(z, y) + lam * z + beta * (z - m) ** 2
+
+
+def z_out(y, m, lam, beta: float):
+    """Globally optimal z_L. Shapes: y, m, lam -> (f_L, n)."""
+    y = jnp.asarray(y, jnp.float32)
+    m = jnp.asarray(m, jnp.float32)
+    lam = jnp.asarray(lam, jnp.float32)
+    b = jnp.float32(beta)
+
+    # y = 1 branch: pieces z>=1 (flat hinge) and z<=1 (slope -1).
+    c1_hi = jnp.maximum(m - lam / (2.0 * b), 1.0)
+    c1_lo = jnp.minimum(m + (1.0 - lam) / (2.0 * b), 1.0)
+    z_pos = jnp.where(
+        _zo_obj(c1_hi, 1.0, lam, b, m) <= _zo_obj(c1_lo, 1.0, lam, b, m),
+        c1_hi,
+        c1_lo,
+    )
+
+    # y = 0 branch: pieces z>=0 (slope +1) and z<=0 (flat hinge).
+    c0_hi = jnp.maximum(m - (1.0 + lam) / (2.0 * b), 0.0)
+    c0_lo = jnp.minimum(m - lam / (2.0 * b), 0.0)
+    z_neg = jnp.where(
+        _zo_obj(c0_hi, 0.0, lam, b, m) <= _zo_obj(c0_lo, 0.0, lam, b, m),
+        c0_hi,
+        c0_lo,
+    )
+
+    return jnp.where(y > 0.5, z_pos, z_neg)
+
+
+# ---------------------------------------------------------------------------
+# Transpose-reduction Gram pair — paper §5 Parallel Weight update.
+# Each worker reduces its activation shard to (z aᵀ, a aᵀ); the f×f pair is
+# what crosses the network, never the f×n activations.
+# ---------------------------------------------------------------------------
+
+
+def gram(z, a):
+    """Return (z @ aᵀ, a @ aᵀ). z: (f_out, n), a: (f_in, n)."""
+    z = jnp.asarray(z, jnp.float32)
+    a = jnp.asarray(a, jnp.float32)
+    return z @ a.T, a @ a.T
+
+
+# ---------------------------------------------------------------------------
+# Activations (a_l) update — paper eq. (6), with the SPD inverse
+# (β W^T W + γ I)^{-1} computed by the caller (the rust coordinator owns the
+# small dense factorization) and passed in as `minv`.
+# ---------------------------------------------------------------------------
+
+
+def a_update(minv, w_next, z_next, z_l, beta_next: float, gamma: float, kind: str):
+    """a_l <- minv @ (β W_{l+1}ᵀ z_{l+1} + γ h(z_l))."""
+    minv = jnp.asarray(minv, jnp.float32)
+    rhs = beta_next * (jnp.asarray(w_next, jnp.float32).T @ z_next) + gamma * act(
+        kind, z_l
+    )
+    return minv @ rhs
+
+
+# ---------------------------------------------------------------------------
+# Bregman multiplier update — paper eq. (8)/(13).
+# ---------------------------------------------------------------------------
+
+
+def lambda_update(lam, z, m, beta: float):
+    """λ <- λ + β (z_L − W_L a_{L-1}), with m = W_L a_{L-1}."""
+    return jnp.asarray(lam, jnp.float32) + beta * (
+        jnp.asarray(z, jnp.float32) - jnp.asarray(m, jnp.float32)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Forward pass / evaluation / baseline-gradient references.
+# ---------------------------------------------------------------------------
+
+
+def forward(weights, a0, kind: str):
+    """Paper eq. (1): no activation after the last layer. Returns z_L."""
+    a = jnp.asarray(a0, jnp.float32)
+    z = a
+    for i, w in enumerate(weights):
+        z = jnp.asarray(w, jnp.float32) @ a
+        a = act(kind, z) if i + 1 < len(weights) else z
+    return z
+
+
+def eval_metrics(weights, a0, y, mask, kind: str):
+    """(masked summed hinge loss, masked correct count) at threshold 0.5."""
+    z = forward(weights, a0, kind)
+    losses = hinge(z, y) * mask
+    pred = (z >= 0.5).astype(jnp.float32)
+    correct = jnp.sum((pred == jnp.asarray(y, jnp.float32)).astype(jnp.float32) * mask)
+    return jnp.sum(losses), correct

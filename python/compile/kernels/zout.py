@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: output-layer z_L update (Algorithm 1, last block).
+
+Solves, entry-wise and globally, the convex problem
+
+    z* = argmin_z  ℓ(z, y) + λ·z + β (z − m)²
+
+with the paper's §6 separable hinge for binary labels y ∈ {0, 1}:
+
+    ℓ(z, 1) = max(1 − z, 0),      ℓ(z, 0) = max(z, 0).
+
+Derivation (y = 1): on z ≥ 1 the hinge is flat, the quadratic part minimizes
+at ``m − λ/2β``; on z ≤ 1 the hinge adds slope −1, shifting the minimizer to
+``m + (1−λ)/2β``.  Both clamped candidates are evaluated and the smaller
+kept; convexity makes that the global optimum.  y = 0 mirrors with slopes
+0 / +1 and a breakpoint at 0.
+
+Same BlockSpec tiling story as ``zupdate.py`` (pure element-wise VPU work).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 256
+
+
+def _hinge(z, y):
+    return jnp.where(y > 0.5, jnp.maximum(1.0 - z, 0.0), jnp.maximum(z, 0.0))
+
+
+def _obj(z, y, lam, beta, m):
+    return _hinge(z, y) + lam * z + beta * (z - m) ** 2
+
+
+def _kernel(y_ref, m_ref, lam_ref, o_ref, *, beta: float):
+    y = y_ref[...]
+    m = m_ref[...]
+    lam = lam_ref[...]
+    b = jnp.float32(beta)
+
+    # y = 1: pieces z >= 1 and z <= 1.
+    c1_hi = jnp.maximum(m - lam / (2.0 * b), 1.0)
+    c1_lo = jnp.minimum(m + (1.0 - lam) / (2.0 * b), 1.0)
+    z_pos = jnp.where(
+        _obj(c1_hi, 1.0, lam, b, m) <= _obj(c1_lo, 1.0, lam, b, m), c1_hi, c1_lo
+    )
+
+    # y = 0: pieces z >= 0 and z <= 0.
+    c0_hi = jnp.maximum(m - (1.0 + lam) / (2.0 * b), 0.0)
+    c0_lo = jnp.minimum(m - lam / (2.0 * b), 0.0)
+    z_neg = jnp.where(
+        _obj(c0_hi, 0.0, lam, b, m) <= _obj(c0_lo, 0.0, lam, b, m), c0_hi, c0_lo
+    )
+
+    o_ref[...] = jnp.where(y > 0.5, z_pos, z_neg)
+
+
+def z_out_update(y, m, lam, *, beta: float, block_n: int = DEFAULT_BLOCK_N,
+                 interpret: bool = True):
+    """Pallas z_L update over an (f_L, n) panel."""
+    y = jnp.asarray(y, jnp.float32)
+    m = jnp.asarray(m, jnp.float32)
+    lam = jnp.asarray(lam, jnp.float32)
+    f, n = m.shape
+    bn = min(block_n, n)
+    if n % bn != 0:
+        bn = n
+    grid = (n // bn,)
+    spec = pl.BlockSpec((f, bn), lambda j: (0, j))
+    kern = functools.partial(_kernel, beta=beta)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((f, n), jnp.float32),
+        interpret=interpret,
+    )(y, m, lam)

@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: hidden-layer z-update (paper eq. (7)).
+
+Solves, entry-wise and globally,
+
+    z* = argmin_z  γ ‖a − h(z)‖² + β ‖z − m‖²
+
+for the piecewise-linear activations the paper uses (ReLU and the
+non-differentiable "hard sigmoid").  Each scalar problem is solved by
+restricting to every linear piece of ``h``, minimizing the resulting convex
+quadratic in closed form, clamping into the piece, and keeping the piece
+with the lowest objective — branch-free ``where`` logic, pure VPU work.
+
+TPU mapping: the (f, n) panel is tiled along the sample axis with a
+``BlockSpec`` so every grid step streams one ``(f, block_n)`` panel of each
+operand HBM→VMEM, computes in registers, and writes one output panel.  No
+cross-column communication exists, so the kernel is trivially grid-parallel.
+
+CPU note: lowered with ``interpret=True`` — real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 256
+
+
+def _obj(a, z, h_z, gamma, beta, m):
+    return gamma * (a - h_z) ** 2 + beta * (z - m) ** 2
+
+
+def _z_relu(a, m, gamma, beta):
+    z_pos = jnp.maximum((gamma * a + beta * m) / (gamma + beta), 0.0)
+    v_pos = _obj(a, z_pos, z_pos, gamma, beta, m)
+    z_neg = jnp.minimum(m, 0.0)
+    v_neg = _obj(a, z_neg, 0.0, gamma, beta, m)
+    return jnp.where(v_pos <= v_neg, z_pos, z_neg)
+
+
+def _z_hardsig(a, m, gamma, beta):
+    z0 = jnp.minimum(m, 0.0)
+    v0 = _obj(a, z0, 0.0, gamma, beta, m)
+    z1 = jnp.clip((gamma * a + beta * m) / (gamma + beta), 0.0, 1.0)
+    v1 = _obj(a, z1, z1, gamma, beta, m)
+    z2 = jnp.maximum(m, 1.0)
+    v2 = _obj(a, z2, 1.0, gamma, beta, m)
+    z = jnp.where(v1 <= v0, z1, z0)
+    v = jnp.minimum(v1, v0)
+    return jnp.where(v2 < v, z2, z)
+
+
+def _kernel(a_ref, m_ref, o_ref, *, gamma: float, beta: float, kind: str):
+    a = a_ref[...]
+    m = m_ref[...]
+    g = jnp.float32(gamma)
+    b = jnp.float32(beta)
+    if kind == "relu":
+        o_ref[...] = _z_relu(a, m, g, b)
+    elif kind == "hardsig":
+        o_ref[...] = _z_hardsig(a, m, g, b)
+    else:  # pragma: no cover - guarded by callers
+        raise ValueError(f"unknown activation {kind!r}")
+
+
+def z_hidden_update(a, m, *, gamma: float, beta: float, kind: str,
+                    block_n: int = DEFAULT_BLOCK_N, interpret: bool = True):
+    """Pallas z-update over an (f, n) panel; n must be a multiple of the
+    chosen column block (callers pad; padded columns are independent junk).
+    """
+    a = jnp.asarray(a, jnp.float32)
+    m = jnp.asarray(m, jnp.float32)
+    f, n = a.shape
+    bn = min(block_n, n)
+    if n % bn != 0:
+        bn = n  # fall back to a single block rather than mis-tile
+    grid = (n // bn,)
+    spec = pl.BlockSpec((f, bn), lambda j: (0, j))
+    kern = functools.partial(_kernel, gamma=gamma, beta=beta, kind=kind)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((f, n), jnp.float32),
+        interpret=interpret,
+    )(a, m)

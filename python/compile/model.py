@@ -1,0 +1,180 @@
+"""L2: jax compute graphs for the ADMM trainer and the gradient baselines.
+
+These functions are the *entry points* that ``compile.aot`` lowers to HLO
+text for the rust coordinator.  They compose the L1 Pallas kernels
+(``compile.kernels``) with plain jnp glue; everything is shape-static and
+float32 so each (config, op) pair lowers to one self-contained artifact.
+
+Conventions (match ``kernels.ref`` and the rust side):
+  * activations are (features, samples) — one sample per column;
+  * the sample axis of every artifact is a fixed tile of ``C`` columns; the
+    rust coordinator pads the last tile of a shard and carries a 0/1 column
+    ``mask`` of shape (1, C) into the loss/eval/grad graphs (padded columns
+    are exact zeros in Gram products and simply ignored elsewhere);
+  * penalty constants γ, β are BAKED into the artifacts (constant folding on
+    the hot path); hyper-parameter sweeps use the rust-native math path.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+from compile.kernels import gram_pair, ref, z_hidden_update, z_out_update
+from compile.kernels.ref import act, hinge
+
+
+# ---------------------------------------------------------------------------
+# ADMM per-worker ops (one artifact each; see aot.py for the lowering).
+# ---------------------------------------------------------------------------
+
+
+def gram_op(z, a):
+    """Transpose-reduction Gram pair for the parallel W update (paper §5)."""
+    return gram_pair(z, a)
+
+
+def zat_op(z, a):
+    """`z aᵀ` alone — the rust coordinator caches the constant layer-1
+    input Gram `a_0 a_0ᵀ` across iterations and only re-reduces this half
+    (§Perf)."""
+    return (z @ a.T,)
+
+
+def a_update_op(minv, w_next, z_next, z_l, *, beta_next: float, gamma: float,
+                kind: str):
+    """Paper eq. (6). ``minv = (β W_{l+1}ᵀ W_{l+1} + γ I)^{-1}`` is computed
+    by the rust coordinator (small f×f Cholesky, shard-independent) and
+    passed in, so this artifact is pure fused matmul + activation work."""
+    rhs = beta_next * (w_next.T @ z_next) + gamma * act(kind, z_l)
+    return (minv @ rhs,)
+
+
+def z_hidden_op(w, a_prev, a, *, gamma: float, beta: float, kind: str):
+    """Paper eq. (7): fuse m = W a_prev with the entry-wise global solve."""
+    m = w @ a_prev
+    return (z_hidden_update(a, m, gamma=gamma, beta=beta, kind=kind),)
+
+
+def z_out_op(w, a_prev, y, lam, *, beta: float):
+    """Output-layer update; also returns m = W_L a_{L-1} so the λ update and
+    the objective tracker reuse it without a second matmul."""
+    m = w @ a_prev
+    z = z_out_update(y, m, lam, beta=beta)
+    return z, m
+
+
+def lambda_op(lam, z, m, *, beta: float):
+    """Bregman multiplier step, paper eq. (13)."""
+    return (lam + beta * (z - m),)
+
+
+def penalty_op(z, w, a_prev, *, beta: float):
+    """Summed quadratic penalty β‖z − W a_prev‖² of one layer (convergence
+    telemetry; cheap enough to fold into the iteration)."""
+    d = z - w @ a_prev
+    return (beta * jnp.sum(d * d),)
+
+
+# ---------------------------------------------------------------------------
+# Full-network ops: evaluation and the baselines' loss/gradient.
+# ---------------------------------------------------------------------------
+
+
+def _forward(weights: Sequence, a0, kind: str):
+    a = a0
+    z = a0
+    for i, w in enumerate(weights):
+        z = w @ a
+        a = act(kind, z) if i + 1 < len(weights) else z
+    return z
+
+
+def predict_op(*args, kind: str):
+    """(W_1..W_L, a0) -> z_L — raw scores, thresholded at 0.5 by the caller."""
+    *weights, a0 = args
+    return (_forward(weights, a0, kind),)
+
+
+def eval_op(*args, kind: str):
+    """(W_1..W_L, a0, y, mask) -> (Σ masked hinge, Σ masked correct).
+
+    Sums (not means) so per-shard results reduce exactly across workers.
+    """
+    *weights, a0, y, mask = args
+    z = _forward(weights, a0, kind)
+    loss = jnp.sum(hinge(z, y) * mask)
+    pred = (z >= 0.5).astype(jnp.float32)
+    correct = jnp.sum((pred == y).astype(jnp.float32) * mask)
+    return loss, correct
+
+
+def loss_grad_op(*args, kind: str):
+    """(W_1..W_L, a0, y, mask) -> (Σ masked hinge, dW_1..dW_L).
+
+    The gradient substrate for the SGD/CG/L-BFGS baselines (paper §7 ran
+    these via Torch on GPU; here they run on the same XLA artifacts as the
+    ADMM path).  Hand-rolled VJP of the hinge-MLP rather than ``jax.grad``
+    so the lowered HLO stays free of jvp/transpose leftovers.
+    """
+    import jax
+
+    *weights, a0, y, mask = args
+
+    def loss_fn(ws):
+        z = _forward(ws, a0, kind)
+        return jnp.sum(hinge(z, y) * mask)
+
+    loss, grads = jax.value_and_grad(loss_fn)(list(weights))
+    return (loss, *grads)
+
+
+# ---------------------------------------------------------------------------
+# Composite reference (used by python tests only, never lowered): one full
+# ADMM iteration on a single shard, mirroring rust `coordinator/trainer.rs`.
+# ---------------------------------------------------------------------------
+
+
+def admm_iteration_ref(weights, acts, zs, lam, a0, y, *, gamma: float,
+                       beta: float, kind: str, update_lambda: bool,
+                       ridge: float = 1e-4):
+    """One Algorithm-1 sweep on a single shard, all in jnp (test oracle).
+
+    ``acts``  = [a_1 … a_{L-1}],  ``zs`` = [z_1 … z_L].
+    Returns (weights, acts, zs, lam).
+    """
+    L = len(weights)
+    weights = list(weights)
+    acts = list(acts)
+    zs = list(zs)
+    prev = [a0] + acts  # prev[l] = a_{l-1} for 1-based layer l
+
+    for l in range(1, L):  # hidden layers
+        al_prev = prev[l - 1]
+        # W_l <- z_l a_{l-1}^† via ridge-regularized normal equations.
+        zat, aat = ref.gram(zs[l - 1], al_prev)
+        f = aat.shape[0]
+        eps = ridge * (jnp.trace(aat) / f + 1.0)
+        weights[l - 1] = jnp.linalg.solve(aat + eps * jnp.eye(f), zat.T).T
+        # a_l <- (β W^T W + γ I)^{-1} (β W^T z_{l+1} + γ h(z_l))
+        w_next = weights[l]
+        k = beta * (w_next.T @ w_next) + gamma * jnp.eye(w_next.shape[1])
+        minv = jnp.linalg.inv(k)
+        acts[l - 1] = ref.a_update(minv, w_next, zs[l], zs[l - 1], beta, gamma, kind)
+        prev[l] = acts[l - 1]
+        # z_l via the entry-wise global solve
+        m = weights[l - 1] @ al_prev
+        zs[l - 1] = ref.z_hidden(acts[l - 1], m, gamma, beta, kind)
+
+    # output layer
+    al_prev = prev[L - 1]
+    zat, aat = ref.gram(zs[L - 1], al_prev)
+    f = aat.shape[0]
+    eps = ridge * (jnp.trace(aat) / f + 1.0)
+    weights[L - 1] = jnp.linalg.solve(aat + eps * jnp.eye(f), zat.T).T
+    m = weights[L - 1] @ al_prev
+    zs[L - 1] = ref.z_out(y, m, lam, beta)
+    if update_lambda:
+        lam = ref.lambda_update(lam, zs[L - 1], m, beta)
+    return weights, acts, zs, lam

@@ -1,0 +1,201 @@
+"""Kernel-vs-oracle correctness: every Pallas kernel against kernels.ref.
+
+This file is the CORE correctness signal for L1: hypothesis sweeps shapes,
+parameters and activation kinds; every kernel must match its pure-jnp oracle
+to float32 tolerance, and the z-updates must additionally beat a dense 1-D
+grid search (global-optimality witness).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import gram_pair, ref, z_hidden_update, z_out_update
+
+RNG = np.random.default_rng(0)
+
+
+def _randn(*shape, scale=2.0, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else RNG
+    return (scale * rng.standard_normal(shape)).astype(np.float32)
+
+
+shapes = st.tuples(st.integers(1, 48), st.integers(1, 200))
+params = st.tuples(st.floats(0.1, 50.0), st.floats(0.1, 20.0))
+kinds = st.sampled_from(ref.ACTIVATIONS)
+seeds = st.integers(0, 2**31 - 1)
+
+
+# ---------------------------------------------------------------------------
+# z_hidden
+# ---------------------------------------------------------------------------
+
+
+def _assert_equally_optimal(obj, got, want, tol=1e-3):
+    """The z-updates may break exact ties differently between the Pallas and
+    the ref code path (different fusion -> different last-bit rounding of the
+    branch objectives).  The contract is *objective equality*: both results
+    must achieve the same globally minimal objective, entry-wise."""
+    og, ow = obj(np.asarray(got)), obj(np.asarray(want))
+    scale = 1.0 + np.maximum(np.abs(og), np.abs(ow))
+    np.testing.assert_array_less(np.abs(og - ow) / scale, tol)
+
+
+@settings(max_examples=60, deadline=None)
+@given(shapes, params, kinds, seeds)
+def test_z_hidden_matches_ref(shape, gb, kind, seed):
+    f, n = shape
+    gamma, beta = gb
+    a = _randn(f, n, seed=seed)
+    m = _randn(f, n, seed=seed + 1)
+    got = z_hidden_update(a, m, gamma=gamma, beta=beta, kind=kind)
+    want = ref.z_hidden(a, m, gamma, beta, kind)
+
+    def obj(zv):
+        h = np.asarray(ref.act(kind, jnp.asarray(zv)))
+        return gamma * (a - h) ** 2 + beta * (zv - m) ** 2
+
+    _assert_equally_optimal(obj, got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(params, kinds, seeds)
+def test_z_hidden_beats_grid_search(gb, kind, seed):
+    """Global optimality: the closed-form solution's objective is <= the best
+    of a dense grid over z (up to grid resolution)."""
+    gamma, beta = gb
+    a = _randn(4, 9, seed=seed)
+    m = _randn(4, 9, seed=seed + 1)
+    z = np.asarray(ref.z_hidden(a, m, gamma, beta, kind))
+
+    def obj(zv):
+        h = np.asarray(ref.act(kind, jnp.asarray(zv)))
+        return gamma * (a - h) ** 2 + beta * (zv - m) ** 2
+
+    grid = np.linspace(-8.0, 8.0, 4001, dtype=np.float32)
+    best = np.min(
+        np.stack([obj(np.full_like(a, g)) for g in grid], axis=0), axis=0
+    )
+    assert np.all(obj(z) <= best + 1e-3)
+
+
+def test_z_hidden_relu_known_values():
+    # a=1, m=1: both branches agree with z=1 (objective 0).
+    z = np.asarray(ref.z_hidden(np.ones((1, 1)), np.ones((1, 1)), 10, 1, "relu"))
+    np.testing.assert_allclose(z, [[1.0]], atol=1e-6)
+    # a=0, m=-2: dead branch optimal, z=m.
+    z = np.asarray(
+        ref.z_hidden(np.zeros((1, 1)), np.full((1, 1), -2.0), 10, 1, "relu")
+    )
+    np.testing.assert_allclose(z, [[-2.0]], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# z_out
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(shapes, st.floats(0.1, 20.0), seeds)
+def test_z_out_matches_ref(shape, beta, seed):
+    f, n = shape
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, 2, size=(f, n)).astype(np.float32)
+    m = _randn(f, n, seed=seed + 1)
+    lam = _randn(f, n, scale=0.5, seed=seed + 2)
+    got = z_out_update(y, m, lam, beta=beta)
+    want = ref.z_out(y, m, lam, beta)
+
+    def obj(zv):
+        h = np.asarray(ref.hinge(jnp.asarray(zv), jnp.asarray(y)))
+        return h + lam * zv + beta * (zv - m) ** 2
+
+    _assert_equally_optimal(obj, got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(0.2, 10.0), seeds)
+def test_z_out_beats_grid_search(beta, seed):
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, 2, size=(3, 7)).astype(np.float32)
+    m = _randn(3, 7, seed=seed + 1)
+    lam = _randn(3, 7, scale=0.5, seed=seed + 2)
+    z = np.asarray(ref.z_out(y, m, lam, beta))
+
+    def obj(zv):
+        h = np.asarray(ref.hinge(jnp.asarray(zv), jnp.asarray(y)))
+        return h + lam * zv + beta * (zv - m) ** 2
+
+    grid = np.linspace(-10.0, 10.0, 4001, dtype=np.float32)
+    best = np.min(
+        np.stack([obj(np.full_like(m, g)) for g in grid], axis=0), axis=0
+    )
+    assert np.all(obj(z) <= best + 1e-3)
+
+
+def test_z_out_zero_lambda_pulls_toward_margin():
+    # y=1, m=0, λ=0, β=1: candidates are max(1, 0)=1 (v=1) and
+    # min(0+0.5, 1)=0.5 (v=0.5+0.25=0.75) -> z=0.5.
+    z = np.asarray(ref.z_out(np.ones((1, 1)), np.zeros((1, 1)),
+                             np.zeros((1, 1)), 1.0))
+    np.testing.assert_allclose(z, [[0.5]], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# gram
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 40), st.integers(1, 300), seeds)
+def test_gram_matches_ref(fo, fi, n, seed):
+    z = _randn(fo, n, seed=seed)
+    a = _randn(fi, n, seed=seed + 1)
+    zat, aat = gram_pair(z, a)
+    zat_w, aat_w = ref.gram(z, a)
+    np.testing.assert_allclose(np.asarray(zat), np.asarray(zat_w),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(aat), np.asarray(aat_w),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gram_multiblock_accumulation():
+    """n spanning several grid steps must equal the single-block result."""
+    z = _randn(5, 1024, seed=7)
+    a = _randn(3, 1024, seed=8)
+    zat1, aat1 = gram_pair(z, a, block_n=128)
+    zat2, aat2 = gram_pair(z, a, block_n=1024)
+    np.testing.assert_allclose(np.asarray(zat1), np.asarray(zat2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(aat1), np.asarray(aat2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gram_zero_padding_is_exact():
+    """Zero-padded columns must not change the Gram pair (the rust
+    coordinator relies on this when padding shard remainders)."""
+    z = _randn(4, 100, seed=9)
+    a = _randn(6, 100, seed=10)
+    zp = np.concatenate([z, np.zeros((4, 28), np.float32)], axis=1)
+    ap = np.concatenate([a, np.zeros((6, 28), np.float32)], axis=1)
+    zat, aat = gram_pair(z, a)
+    zat_p, aat_p = gram_pair(zp, ap)
+    np.testing.assert_allclose(np.asarray(zat), np.asarray(zat_p), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(aat), np.asarray(aat_p), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# dtype robustness: f64 inputs are cast, not rejected.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ref.ACTIVATIONS)
+def test_f64_inputs_accepted(kind):
+    a = RNG.standard_normal((3, 5))  # float64
+    m = RNG.standard_normal((3, 5))
+    got = z_hidden_update(a, m, gamma=10.0, beta=1.0, kind=kind)
+    want = ref.z_hidden(a, m, 10.0, 1.0, kind)
+    assert np.asarray(got).dtype == np.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)

@@ -1,0 +1,121 @@
+//! Ablations over the design choices DESIGN.md §5 calls out:
+//!
+//!   A. warm start (paper §6: "frequently warm start … without Lagrange
+//!      multiplier updates")              — warmup ∈ {0, 10}
+//!   B. multiplier scheme (paper §4: classical per-constraint ADMM is
+//!      "highly unstable", Bregman is stable) — bregman | none | classical
+//!   C. penalty constants (paper §6: γ=10, β=1 "works reliably")
+//!      — γ ∈ {0.2, 1, 10}, β ∈ {0.25, 1, 4}
+//!   D. init scheme (paper §8.1 names initialization as future work)
+//!      — gaussian (paper §6) vs forward-consistent
+//!   E. momentum on weight updates (paper §8.1 future work) — μ ∈ {0, .3, .6}
+//!
+//! Output: bench_out/ablations.csv and a console table.
+//!
+//!   cargo bench --bench ablations [-- --samples N]
+
+use gradfree_admm::bench::{banner, write_csv};
+use gradfree_admm::cli::Args;
+use gradfree_admm::config::{InitScheme, MultiplierMode, TrainConfig};
+use gradfree_admm::coordinator::AdmmTrainer;
+use gradfree_admm::data::{svhn_like, Dataset, Normalizer};
+
+fn run(
+    cfg: TrainConfig,
+    train: &Dataset,
+    test: &Dataset,
+    track_penalty: bool,
+) -> gradfree_admm::Result<(f64, f64, f64)> {
+    let mut t = AdmmTrainer::new(cfg, train, test)?;
+    t.track_penalty = track_penalty;
+    let out = t.train()?;
+    let final_penalty = out
+        .recorder
+        .points
+        .last()
+        .map(|p| p.penalty)
+        .unwrap_or(f64::NAN);
+    Ok((out.recorder.best_accuracy(), out.recorder.final_accuracy(), final_penalty))
+}
+
+fn main() -> gradfree_admm::Result<()> {
+    let args = Args::parse();
+    let n: usize = args.parsed_or("samples", 4_000)?;
+    let n_test: usize = args.parsed_or("test-samples", 1_000)?;
+    banner("ablations", &format!("design-choice ablations on SVHN-like (n={n})"),
+           "§4 stability, §6 warm start + γ/β robustness, §8.1 extensions");
+
+    let mut train = svhn_like(n, 1);
+    let mut test = svhn_like(n_test, 2);
+    let norm = Normalizer::fit(&train.x);
+    norm.apply(&mut train.x);
+    norm.apply(&mut test.x);
+
+    let base = {
+        let mut c = TrainConfig::preset("svhn")?;
+        c.workers = 1;
+        c.iters = 25;
+        c.warmup_iters = 6;
+        c.init = InitScheme::Forward;
+        c.eval_every = 5;
+        c
+    };
+    let mut rows = Vec::new();
+    println!("\n{:38} {:>9} {:>9} {:>12}", "variant", "best_acc", "final", "penalty");
+    let mut emit = |tag: &str, r: gradfree_admm::Result<(f64, f64, f64)>| {
+        match r {
+            Ok((best, fin, pen)) => {
+                println!("{tag:38} {best:9.4} {fin:9.4} {pen:12.3e}");
+                rows.push(format!("{tag},{best:.4},{fin:.4},{pen:.4e}"));
+            }
+            Err(e) => {
+                // classical mode may diverge to non-SPD solves — that IS the
+                // §4 instability finding; record it.
+                println!("{tag:38} {:>9} {:>9}  ({e})", "diverged", "-");
+                rows.push(format!("{tag},diverged,,"));
+            }
+        }
+    };
+
+    // A. warm start
+    for warmup in [0usize, 10] {
+        let mut c = base.clone();
+        c.warmup_iters = warmup;
+        emit(&format!("A.warmup={warmup}"), run(c, &train, &test, true));
+    }
+
+    // B. multiplier scheme
+    for mode in [MultiplierMode::Bregman, MultiplierMode::NoMultiplier, MultiplierMode::Classical] {
+        let mut c = base.clone();
+        c.multiplier_mode = mode;
+        emit(&format!("B.multipliers={}", mode.name()), run(c, &train, &test, true));
+    }
+
+    // C. γ/β grid
+    for gamma in [0.2f32, 1.0, 10.0] {
+        for beta in [0.25f32, 1.0, 4.0] {
+            let mut c = base.clone();
+            c.gamma = gamma;
+            c.beta = beta;
+            emit(&format!("C.gamma={gamma},beta={beta}"), run(c, &train, &test, false));
+        }
+    }
+
+    // D. init scheme
+    for init in [InitScheme::Gaussian, InitScheme::Forward] {
+        let mut c = base.clone();
+        c.init = init;
+        emit(&format!("D.init={}", init.name()), run(c, &train, &test, false));
+    }
+
+    // E. momentum
+    for mu in [0.0f32, 0.3, 0.6] {
+        let mut c = base.clone();
+        c.momentum = mu;
+        emit(&format!("E.momentum={mu}"), run(c, &train, &test, false));
+    }
+
+    let path = write_csv("ablations.csv", "variant,best_acc,final_acc,final_penalty", &rows)?;
+    println!("\nwritten: {path}");
+    Ok(())
+}

@@ -1,0 +1,113 @@
+//! Figure 1a — SVHN: time for ADMM to reach 95% test accuracy vs number of
+//! cores (log-x), with the paper's GPU baseline times as reference lines.
+//!
+//! Paper numbers (§7.1): ADMM on 1,024 Cray cores: 13.3 s; GPU L-BFGS
+//! 3.2–3.3 s; GPU CG 9.3–10.1 s; GPU SGD 8.2–28.3 s.  Claim to reproduce:
+//! near-linear strong scaling of ADMM in cores, and competitiveness with
+//! the (local) gradient baselines once enough cores are used.
+//!
+//! Method on this host: measured run calibrates (compute s/col, leader s,
+//! exact collective bytes); the α–β cost model prices the collectives at
+//! core counts the host cannot hold (DESIGN.md §4).  Baselines run locally
+//! on the same data.  Output: bench_out/fig1a.csv.
+//!
+//!   cargo bench --bench fig1a [-- --samples N --test-samples N]
+
+use gradfree_admm::baselines::{train_cg, train_lbfgs, train_sgd, LocalObjective, SgdOpts};
+use gradfree_admm::bench::{banner, write_csv};
+use gradfree_admm::cli::Args;
+use gradfree_admm::cluster::CostModel;
+use gradfree_admm::config::{InitScheme, TrainConfig};
+use gradfree_admm::coordinator::AdmmTrainer;
+use gradfree_admm::data::{svhn_like, Normalizer};
+use gradfree_admm::nn::Mlp;
+
+const TARGET: f64 = 0.95;
+
+fn main() -> gradfree_admm::Result<()> {
+    let args = Args::parse();
+    let n: usize = args.parsed_or("samples", 8_000)?;
+    let n_test: usize = args.parsed_or("test-samples", 1_600)?;
+    banner(
+        "fig 1a",
+        &format!("SVHN-like time-to-95% vs cores (n={n})"),
+        "ADMM@1024c: 13.3s | L-BFGS(GPU): 3.3s | CG(GPU): 10.1s | SGD(GPU): 28.3s",
+    );
+
+    let mut train = svhn_like(n, 1);
+    let mut test = svhn_like(n_test, 2);
+    let norm = Normalizer::fit(&train.x);
+    norm.apply(&mut train.x);
+    norm.apply(&mut test.x);
+
+    // --- calibration run (measured) --------------------------------------
+    let mut cfg = TrainConfig::preset("svhn")?;
+    cfg.workers = 1;
+    cfg.iters = 80;
+    cfg.init = InitScheme::Forward;
+    cfg.eval_every = 1;
+    let mut trainer = AdmmTrainer::new(cfg, &train, &test)?;
+    trainer.target_acc = Some(TARGET);
+    let out = trainer.train()?;
+    let (iters, t_measured) = out
+        .reached_target_at
+        .map(|(i, t)| (i + 1, t))
+        .unwrap_or((out.stats.iters_run, out.stats.opt_seconds));
+    println!(
+        "measured (1 worker): {:.2}s to {:.1}% in {} iters",
+        t_measured,
+        100.0 * out.recorder.best_accuracy(),
+        iters
+    );
+
+    let profile = trainer.scaling_profile(&out.stats, n, iters, CostModel::default());
+
+    // --- baselines on the same data ---------------------------------------
+    let mlp = Mlp::new(vec![648, 100, 50, 1], gradfree_admm::config::Activation::Relu)?;
+    let sgd = train_sgd(
+        &mlp, &train, &test,
+        SgdOpts { lr: 1e-2, momentum: 0.9, batch: 128, epochs: 6, eval_every: 25, seed: 3 },
+        Some(TARGET), "sgd",
+    )?;
+    let mut obj = LocalObjective { mlp: &mlp, x: &train.x, y: &train.y };
+    let cg = train_cg(&mlp, &mut obj, &test, 100, 4, Some(TARGET), "cg")?;
+    let mut obj = LocalObjective { mlp: &mlp, x: &train.x, y: &train.y };
+    let lbfgs = train_lbfgs(&mlp, &mut obj, &test, 100, 10, 5, Some(TARGET), "lbfgs")?;
+
+    // --- the figure --------------------------------------------------------
+    let mut rows = Vec::new();
+    println!("\ncores   time_to_95%(s)   compute(s)   comm(s)   [modeled]");
+    for pt in profile.curve(&[1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2496]) {
+        println!(
+            "{:5}   {:12.3}   {:9.3}   {:7.4}",
+            pt.cores, pt.seconds_to_threshold, pt.compute_s, pt.comm_s
+        );
+        rows.push(format!(
+            "admm_modeled,{},{:.4},{:.4},{:.4}",
+            pt.cores, pt.seconds_to_threshold, pt.compute_s, pt.comm_s
+        ));
+    }
+    rows.push(format!("admm_measured,1,{t_measured:.4},,"));
+    for (name, out) in [("sgd", &sgd), ("cg", &cg), ("lbfgs", &lbfgs)] {
+        let t = out.reached_target_at.map(|(_, t)| t);
+        match t {
+            Some(t) => println!("{name:7} (local baseline) reached 95% in {t:.2}s"),
+            None => println!(
+                "{name:7} (local baseline) best {:.1}%",
+                100.0 * out.recorder.best_accuracy()
+            ),
+        }
+        rows.push(format!(
+            "{name}_baseline,local,{},,",
+            t.map(|t| format!("{t:.4}")).unwrap_or_default()
+        ));
+    }
+    println!(
+        "\nshape checks: efficiency@64={:.0}%  @1024={:.0}%  (paper: linear scaling)",
+        100.0 * profile.efficiency(64),
+        100.0 * profile.efficiency(1024)
+    );
+    let path = write_csv("fig1a.csv", "series,cores,seconds,compute_s,comm_s", &rows)?;
+    println!("written: {path}");
+    Ok(())
+}

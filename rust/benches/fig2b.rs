@@ -1,0 +1,121 @@
+//! Figure 2b — HIGGS: test accuracy vs time (log-x); ADMM (7,200 cores) vs
+//! CG vs SGD, with the paper's footnote-1 L-BFGS behaviour.
+//!
+//! Paper shape (§7.2): ADMM reaches 64% in 7.8s; L-BFGS needs 181s; CG 44
+//! minutes; SGD never reaches 64% in 7 hours; L-BFGS is nonetheless the
+//! eventual best classifier (~75%).  Claims to reproduce: the *ordering*
+//! (ADMM ≪ L-BFGS ≪ CG, SGD stragglers) and the L-BFGS eventual-best
+//! footnote.
+//!
+//!   cargo bench --bench fig2b [-- --samples N]
+
+use gradfree_admm::baselines::{train_cg, train_lbfgs, train_sgd, LocalObjective, SgdOpts};
+use gradfree_admm::bench::{banner, write_csv};
+use gradfree_admm::cli::Args;
+use gradfree_admm::cluster::CostModel;
+use gradfree_admm::config::TrainConfig;
+use gradfree_admm::coordinator::AdmmTrainer;
+use gradfree_admm::data::{higgs_like, Normalizer};
+use gradfree_admm::metrics::Recorder;
+use gradfree_admm::nn::Mlp;
+
+const TARGET: f64 = 0.64;
+
+fn main() -> gradfree_admm::Result<()> {
+    let args = Args::parse();
+    let n: usize = args.parsed_or("samples", 16_000)?;
+    let n_test: usize = args.parsed_or("test-samples", 4_000)?;
+    banner(
+        "fig 2b",
+        &format!("HIGGS-like accuracy vs time (n={n})"),
+        "ADMM@7200c 7.8s to 64%; L-BFGS 181s (best ~75%); CG 44min; SGD never (§7.2)",
+    );
+
+    let mut train = higgs_like(n, 1);
+    let mut test = higgs_like(n_test, 2);
+    let norm = Normalizer::fit(&train.x);
+    norm.apply(&mut train.x);
+    norm.apply(&mut test.x);
+
+    // --- ADMM ---------------------------------------------------------------
+    let mut cfg = TrainConfig::preset("higgs")?;
+    cfg.workers = 1;
+    cfg.gamma = 1.0;
+    cfg.iters = 50;
+    cfg.eval_every = 1;
+    let mut trainer = AdmmTrainer::new(cfg, &train, &test)?;
+    let admm = trainer.train()?;
+    let profile = trainer.scaling_profile(
+        &admm.stats, n, admm.stats.iters_run, CostModel::default(),
+    );
+    let speedup = profile.time_to_threshold(1).seconds_to_threshold
+        / profile.time_to_threshold(7200).seconds_to_threshold;
+    let mut admm_7200 = Recorder::new("admm_modeled_7200c");
+    for p in &admm.recorder.points {
+        let mut q = *p;
+        q.wall_s /= speedup;
+        admm_7200.push(q);
+    }
+
+    // --- baselines ------------------------------------------------------------
+    let mlp = Mlp::new(vec![28, 300, 1], gradfree_admm::config::Activation::Relu)?;
+    // SGD with a deliberately paper-like budget: it lingers.
+    let sgd = train_sgd(
+        &mlp, &train, &test,
+        SgdOpts { lr: 3e-3, momentum: 0.9, batch: 128, epochs: 4, eval_every: 100, seed: 3 },
+        None, "sgd",
+    )?;
+    let mut obj = LocalObjective { mlp: &mlp, x: &train.x, y: &train.y };
+    let cg = train_cg(&mlp, &mut obj, &test, 80, 4, None, "cg")?;
+    let mut obj = LocalObjective { mlp: &mlp, x: &train.x, y: &train.y };
+    let lbfgs = train_lbfgs(&mlp, &mut obj, &test, 120, 10, 5, None, "lbfgs")?;
+
+    println!("\nmethod   t64(s)      best_acc");
+    let fmt_t = |r: &Recorder| {
+        r.time_to_accuracy(TARGET)
+            .map(|t| format!("{t:8.2}"))
+            .unwrap_or_else(|| "   never".into())
+    };
+    for (name, r) in [
+        ("admm(measured 1w)", &admm.recorder),
+        ("admm(modeled 7200c)", &admm_7200),
+        ("sgd", &sgd.recorder),
+        ("cg", &cg.recorder),
+        ("lbfgs", &lbfgs.recorder),
+    ] {
+        println!("{name:20} {}   {:.3}", fmt_t(r), r.best_accuracy());
+    }
+
+    // paper-shape assertions, reported not enforced.  The paper's
+    // many-core ADMM is the thing compared (7,200 cores), so the modeled
+    // curve is the apples-to-apples series.
+    let t_admm = admm_7200.time_to_accuracy(TARGET);
+    let t_cg = cg.recorder.time_to_accuracy(TARGET);
+    println!("\nshape checks:");
+    println!(
+        "  ADMM reaches 64%: {} | CG slower than ADMM@7200c: {} | L-BFGS best overall: {}",
+        t_admm.is_some(),
+        match (t_admm, t_cg) {
+            (Some(a), Some(c)) => (c > a).to_string(),
+            (Some(_), None) => "true (CG never)".into(),
+            _ => "n/a".into(),
+        },
+        lbfgs.recorder.best_accuracy()
+            >= admm.recorder.best_accuracy().max(sgd.recorder.best_accuracy()) - 1e-9
+    );
+    println!(
+        "  L-BFGS eventual best {:.1}% vs ADMM {:.1}% (paper: 75% vs 64%)",
+        100.0 * lbfgs.recorder.best_accuracy(),
+        100.0 * admm.recorder.best_accuracy()
+    );
+
+    let mut rows = Vec::new();
+    for r in [&admm.recorder, &admm_7200, &sgd.recorder, &cg.recorder, &lbfgs.recorder] {
+        for line in r.to_csv(false).lines() {
+            rows.push(line.to_string());
+        }
+    }
+    let path = write_csv("fig2b.csv", "label,iter,wall_s,train_loss,test_acc,penalty", &rows)?;
+    println!("written: {path}");
+    Ok(())
+}

@@ -1,0 +1,114 @@
+//! Micro benchmarks: the primitive operations on the training hot path.
+//! Shapes are the paper's SVHN network at a realistic shard width.  Used by
+//! the §Perf pass (EXPERIMENTS.md) to find and verify hot-spot wins.
+//!
+//!   cargo bench --bench micro [-- --cols N]
+
+use gradfree_admm::bench::{time_fn, write_csv};
+use gradfree_admm::cli::Args;
+use gradfree_admm::cluster::CommWorld;
+use gradfree_admm::config::Activation;
+use gradfree_admm::coordinator::updates;
+use gradfree_admm::linalg::{
+    a_update_inverse, cholesky_factor, gemm_nn, gemm_nt, gemm_tn, weight_solve, Matrix,
+};
+use gradfree_admm::nn::Mlp;
+use gradfree_admm::rng::Rng;
+
+fn main() -> gradfree_admm::Result<()> {
+    let args = Args::parse();
+    let cols: usize = args.parsed_or("cols", 2_000)?;
+    let mut rng = Rng::seed_from(1);
+    println!("micro benches (sample cols = {cols}, SVHN-net shapes)\n");
+
+    let a0 = Matrix::randn(648, cols, &mut rng);
+    let z1 = Matrix::randn(100, cols, &mut rng);
+    let w1 = Matrix::randn(100, 648, &mut rng);
+    let w2 = Matrix::randn(50, 100, &mut rng);
+    let z2 = Matrix::randn(50, cols, &mut rng);
+    let a1 = Matrix::randn(100, cols, &mut rng);
+
+    let mut results = Vec::new();
+    let mut run = |label: &str, flops: f64, f: &mut dyn FnMut()| {
+        let r = time_fn(label, 1, 5, f);
+        let gflops = flops / r.per_iter_s() / 1e9;
+        println!("{}  {:>7.2} GFLOP/s", r.report(), gflops);
+        results.push(format!("{label},{:.6e},{gflops:.3}", r.per_iter_s()));
+    };
+
+    // Gram pair, layer 1 (the dominant op before input-Gram caching)
+    run(
+        "gram_nt z1*a0T+a0*a0T (transpose reduce)",
+        2.0 * cols as f64 * (100.0 * 648.0 + 648.0 * 648.0),
+        &mut || {
+            let _ = updates::gram(&z1, &a0);
+        },
+    );
+    // zat only (the cached-input path)
+    run("gemm_nt z1*a0T (cached-aat path)", 2.0 * cols as f64 * 100.0 * 648.0, &mut || {
+        let _ = gemm_nt(&z1, &a0);
+    });
+    // z-guess matmul
+    run("gemm_nn W1*a0 (m for z-update)", 2.0 * cols as f64 * 100.0 * 648.0, &mut || {
+        let _ = gemm_nn(&w1, &a0);
+    });
+    // a-update pipeline
+    let minv = a_update_inverse(&w2, 1.0, 10.0)?;
+    run(
+        "a_update (WtZ + minv solve-as-matmul)",
+        2.0 * cols as f64 * (50.0 * 100.0 + 100.0 * 100.0),
+        &mut || {
+            let _ = updates::a_update(&minv, &w2, &z2, &z1, 1.0, 10.0, Activation::Relu);
+        },
+    );
+    // gemm_tn alone
+    run("gemm_tn W2T*z2", 2.0 * cols as f64 * 50.0 * 100.0, &mut || {
+        let _ = gemm_tn(&w2, &z2);
+    });
+    // entry-wise z solves
+    let m1 = gemm_nn(&w1, &a0);
+    run("z_hidden entry-wise global solve", 0.0, &mut || {
+        let _ = updates::z_hidden(&a1, &m1, 10.0, 1.0, Activation::Relu);
+    });
+    // leader solves
+    let aat = gemm_nt(&a0, &a0);
+    let zat = gemm_nt(&z1, &a0);
+    run("weight_solve 100x648 (chol 648 + solve)", 648f64.powi(3) / 3.0, &mut || {
+        let _ = weight_solve(&zat, &aat, 1e-4).unwrap();
+    });
+    run("cholesky_factor 648", 648f64.powi(3) / 3.0, &mut || {
+        let _ = cholesky_factor(&aat).unwrap();
+    });
+    // native forward/backward (baseline substrate)
+    let mlp = Mlp::new(vec![648, 100, 50, 1], Activation::Relu)?;
+    let ws = mlp.init_weights(&mut rng);
+    let y = Matrix::from_fn(1, cols, |_, c| (c % 2) as f32);
+    run(
+        "mlp loss_grad (fwd+bwd)",
+        6.0 * cols as f64 * (648.0 * 100.0 + 100.0 * 50.0 + 50.0),
+        &mut || {
+            let _ = mlp.loss_grad(&ws, &a0, &y);
+        },
+    );
+    // collective (4 ranks, gram-pair sized buffer)
+    {
+        let world = CommWorld::new(4);
+        let r = time_fn("allreduce 4 ranks, 648x648 f32", 1, 5, || {
+            std::thread::scope(|s| {
+                for rank in 0..4 {
+                    let w = world.clone();
+                    s.spawn(move || {
+                        let mut m = Matrix::zeros(648, 648);
+                        w.allreduce_sum(rank, &mut m);
+                    });
+                }
+            });
+        });
+        println!("{}", r.report());
+        results.push(format!("allreduce_4x648x648,{:.6e},", r.per_iter_s()));
+    }
+
+    let path = write_csv("micro.csv", "op,seconds_per_iter,gflops", &results)?;
+    println!("\nwritten: {path}");
+    Ok(())
+}

@@ -1,0 +1,139 @@
+//! Nonlinear conjugate gradients (Polak–Ribière+ with Armijo backtracking),
+//! full batch — the paper's CG baseline (cf. Møller 1993; Towsey et al.
+//! 1995).
+
+use crate::data::Dataset;
+use crate::nn::Mlp;
+use crate::rng::Rng;
+use crate::Result;
+
+use super::vecops as v;
+use super::{BaselineOutcome, EvalHarness, Objective};
+
+/// Backtracking Armijo line search along `dir` from `(ws, loss, grad)`.
+/// Returns the accepted step (0.0 when the search fails entirely).
+fn line_search(
+    obj: &mut dyn Objective,
+    ws: &[crate::linalg::Matrix],
+    loss: f64,
+    grad_dot_dir: f64,
+    dir: &[crate::linalg::Matrix],
+    t0: f32,
+) -> Result<(f32, f64)> {
+    const C1: f64 = 1e-4;
+    let mut t = t0;
+    for _ in 0..30 {
+        let mut trial = v::clone_vec(ws);
+        v::axpy(&mut trial, t, dir);
+        let (l_new, _) = obj.loss_grad(&trial)?;
+        if l_new <= loss + C1 * t as f64 * grad_dot_dir {
+            return Ok((t, l_new));
+        }
+        t *= 0.5;
+    }
+    Ok((0.0, loss))
+}
+
+/// Full-batch PR+ CG.  `max_iters` bounds outer iterations; the harness's
+/// target accuracy stops earlier.
+pub fn train_cg(
+    mlp: &Mlp,
+    obj: &mut dyn Objective,
+    test: &Dataset,
+    max_iters: usize,
+    seed: u64,
+    target_acc: Option<f64>,
+    label: &str,
+) -> Result<BaselineOutcome> {
+    let mut rng = Rng::stream(seed, 88);
+    let mut ws = mlp.init_weights(&mut rng);
+    let mut harness = EvalHarness::new(mlp, test, label);
+    harness.target_acc = target_acc;
+
+    let n = obj.samples() as f64;
+    let (mut loss, mut grad) = harness.timed(|| obj.loss_grad(&ws))?;
+    let mut dir = v::neg(&grad);
+
+    for it in 0..max_iters {
+        let done = harness.record(it, &ws, loss / n);
+        if done {
+            break;
+        }
+        let step_out = harness.timed(|| -> Result<bool> {
+            let mut gdd = v::dot(&grad, &dir);
+            if gdd >= 0.0 {
+                // not a descent direction: restart with steepest descent
+                dir = v::neg(&grad);
+                gdd = v::dot(&grad, &dir);
+                if gdd >= 0.0 {
+                    return Ok(true); // zero gradient: converged
+                }
+            }
+            // scale-aware initial step
+            let t0 = (1.0 / (1.0 + v::norm(&dir))).min(1.0) as f32;
+            let (t, l_new) = line_search(obj, &ws, loss, gdd, &dir, t0.max(1e-6))?;
+            if t == 0.0 {
+                return Ok(true); // line search failed: practical convergence
+            }
+            v::axpy(&mut ws, t, &dir);
+            let (_, g_new) = obj.loss_grad(&ws)?;
+            loss = l_new;
+            // PR+ beta
+            let y = v::sub(&g_new, &grad);
+            let denom = v::dot(&grad, &grad).max(1e-30);
+            let beta = (v::dot(&g_new, &y) / denom).max(0.0) as f32;
+            let mut new_dir = v::neg(&g_new);
+            v::axpy(&mut new_dir, beta, &dir);
+            dir = new_dir;
+            grad = g_new;
+            Ok(false)
+        })?;
+        if step_out {
+            harness.record(it + 1, &ws, loss / n);
+            break;
+        }
+    }
+    if harness.recorder.points.is_empty() {
+        harness.record(0, &ws, loss / n);
+    }
+    Ok(BaselineOutcome {
+        weights: ws,
+        reached_target_at: harness.reached,
+        recorder: harness.recorder,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::LocalObjective;
+    use crate::config::Activation;
+    use crate::data::blobs;
+
+    #[test]
+    fn cg_learns_blobs() {
+        let d = blobs(5, 600, 2.5, 21);
+        let (train, test) = d.split_test(150);
+        let mlp = Mlp::new(vec![5, 6, 1], Activation::Relu).unwrap();
+        let mut obj = LocalObjective { mlp: &mlp, x: &train.x, y: &train.y };
+        let out = train_cg(&mlp, &mut obj, &test, 60, 3, None, "cg_test").unwrap();
+        assert!(
+            out.recorder.best_accuracy() > 0.95,
+            "acc={}",
+            out.recorder.best_accuracy()
+        );
+    }
+
+    #[test]
+    fn cg_loss_monotone_nonincreasing_between_restarts() {
+        let d = blobs(4, 300, 2.0, 22);
+        let (train, test) = d.split_test(50);
+        let mlp = Mlp::new(vec![4, 5, 1], Activation::Relu).unwrap();
+        let mut obj = LocalObjective { mlp: &mlp, x: &train.x, y: &train.y };
+        let out = train_cg(&mlp, &mut obj, &test, 25, 4, None, "cg_test").unwrap();
+        let losses: Vec<f64> = out.recorder.points.iter().map(|p| p.train_loss).collect();
+        for w in losses.windows(2) {
+            assert!(w[1] <= w[0] + 1e-6, "loss increased: {:?}", w);
+        }
+    }
+}

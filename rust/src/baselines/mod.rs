@@ -1,0 +1,213 @@
+//! Gradient-based baselines (paper §7): SGD, nonlinear conjugate gradients
+//! and L-BFGS, plus the hyper-parameter grid-search harness the paper ran.
+//!
+//! The paper executed these via the Torch `optim` package on a Tesla K40;
+//! here they run on the same hinge-MLP substrate as everything else —
+//! either a thread-local objective or the data-parallel worker pool
+//! (full-batch methods split gradient computation across ranks exactly like
+//! the batch methods the paper cites: Ngiam et al. 2011).
+
+mod cg;
+mod lbfgs;
+mod sgd;
+pub mod vecops;
+
+pub use cg::train_cg;
+pub use lbfgs::train_lbfgs;
+pub use sgd::{train_sgd, SgdOpts};
+
+use crate::config::Activation;
+use crate::coordinator::WorkerPool;
+use crate::data::Dataset;
+use crate::linalg::Matrix;
+use crate::metrics::{CurvePoint, Recorder, Stopwatch};
+use crate::nn::Mlp;
+use crate::Result;
+
+/// Full-batch loss/gradient oracle (Σ hinge over the whole training set).
+pub trait Objective {
+    fn loss_grad(&mut self, ws: &[Matrix]) -> Result<(f64, Vec<Matrix>)>;
+    fn samples(&self) -> usize;
+}
+
+/// Single-threaded objective over a dataset.
+pub struct LocalObjective<'a> {
+    pub mlp: &'a Mlp,
+    pub x: &'a Matrix,
+    pub y: &'a Matrix,
+}
+
+impl Objective for LocalObjective<'_> {
+    fn loss_grad(&mut self, ws: &[Matrix]) -> Result<(f64, Vec<Matrix>)> {
+        Ok(self.mlp.loss_grad(ws, self.x, self.y))
+    }
+
+    fn samples(&self) -> usize {
+        self.x.cols()
+    }
+}
+
+/// Data-parallel objective over the ADMM worker pool (reuses the same
+/// sharded ranks — and, on the PJRT backend, the `loss_grad` artifact).
+pub struct PoolObjective<'a> {
+    pub pool: &'a WorkerPool,
+    pub n: usize,
+}
+
+impl Objective for PoolObjective<'_> {
+    fn loss_grad(&mut self, ws: &[Matrix]) -> Result<(f64, Vec<Matrix>)> {
+        self.pool.loss_grad(ws)
+    }
+
+    fn samples(&self) -> usize {
+        self.n
+    }
+}
+
+/// Shared evaluation/bookkeeping for all baselines.
+pub struct EvalHarness<'a> {
+    pub mlp: &'a Mlp,
+    pub test: &'a Dataset,
+    pub recorder: Recorder,
+    pub sw_opt: f64,
+    pub target_acc: Option<f64>,
+    pub reached: Option<(usize, f64)>,
+}
+
+impl<'a> EvalHarness<'a> {
+    pub fn new(mlp: &'a Mlp, test: &'a Dataset, label: impl Into<String>) -> Self {
+        EvalHarness {
+            mlp,
+            test,
+            recorder: Recorder::new(label),
+            sw_opt: 0.0,
+            target_acc: None,
+            reached: None,
+        }
+    }
+
+    /// Record a point (outside the optimization clock). Returns `true` when
+    /// the target accuracy has been met and the caller should stop.
+    pub fn record(&mut self, iter: usize, ws: &[Matrix], train_loss: f64) -> bool {
+        let acc = self.mlp.accuracy(ws, &self.test.x, &self.test.y);
+        self.recorder.push(CurvePoint {
+            iter,
+            wall_s: self.sw_opt,
+            train_loss,
+            test_acc: acc,
+            penalty: f64::NAN,
+        });
+        if let Some(t) = self.target_acc {
+            if acc >= t {
+                if self.reached.is_none() {
+                    self.reached = Some((iter, self.sw_opt));
+                }
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Run `f` on the optimization clock.
+    pub fn timed<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let sw = Stopwatch::start();
+        let out = f();
+        self.sw_opt += sw.elapsed_s();
+        out
+    }
+}
+
+/// Outcome of one baseline run.
+pub struct BaselineOutcome {
+    pub weights: Vec<Matrix>,
+    pub recorder: Recorder,
+    pub reached_target_at: Option<(usize, f64)>,
+}
+
+/// Grid-search driver: runs `train` for every parameter combination and
+/// returns the outcome with the best (earliest time-to-target, else best
+/// final accuracy) — the paper's "thorough hyperparameter grid search".
+pub fn grid_search<P: Clone>(
+    params: &[P],
+    mut train: impl FnMut(&P) -> Result<BaselineOutcome>,
+) -> Result<(P, BaselineOutcome)> {
+    anyhow::ensure!(!params.is_empty(), "empty grid");
+    let mut best: Option<(P, BaselineOutcome)> = None;
+    for p in params {
+        let out = train(p)?;
+        let better = match &best {
+            None => true,
+            Some((_, b)) => match (out.reached_target_at, b.reached_target_at) {
+                (Some((_, t_new)), Some((_, t_old))) => t_new < t_old,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => out.recorder.best_accuracy() > b.recorder.best_accuracy(),
+            },
+        };
+        if better {
+            best = Some((p.clone(), out));
+        }
+    }
+    Ok(best.unwrap())
+}
+
+/// Build the standard (mlp, expanded test) pair used by all baselines.
+pub fn baseline_mlp(dims: &[usize], act: Activation) -> Result<Mlp> {
+    Mlp::new(dims.to_vec(), act)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_search_prefers_faster_target() {
+        let mk = |t: Option<(usize, f64)>, best_acc: f64| BaselineOutcome {
+            weights: vec![],
+            recorder: {
+                let mut r = Recorder::new("x");
+                r.push(CurvePoint {
+                    iter: 0,
+                    wall_s: 1.0,
+                    train_loss: 0.0,
+                    test_acc: best_acc,
+                    penalty: f64::NAN,
+                });
+                r
+            },
+            reached_target_at: t,
+        };
+        let (p, _) = grid_search(&[1, 2, 3], |&p| {
+            Ok(match p {
+                1 => mk(None, 0.9),
+                2 => mk(Some((5, 2.0)), 0.8),
+                _ => mk(Some((9, 1.0)), 0.7),
+            })
+        })
+        .unwrap();
+        assert_eq!(p, 3); // fastest to target wins despite lower final acc
+    }
+
+    #[test]
+    fn grid_search_falls_back_to_accuracy() {
+        let (p, _) = grid_search(&[10, 20], |&p| {
+            Ok(BaselineOutcome {
+                weights: vec![],
+                recorder: {
+                    let mut r = Recorder::new("x");
+                    r.push(CurvePoint {
+                        iter: 0,
+                        wall_s: 1.0,
+                        train_loss: 0.0,
+                        test_acc: if p == 20 { 0.9 } else { 0.5 },
+                        penalty: f64::NAN,
+                    });
+                    r
+                },
+                reached_target_at: None,
+            })
+        })
+        .unwrap();
+        assert_eq!(p, 20);
+    }
+}

@@ -1,0 +1,151 @@
+//! Minibatch SGD with classical momentum (the paper's primary baseline).
+
+use crate::data::Dataset;
+use crate::linalg::Matrix;
+use crate::nn::Mlp;
+use crate::rng::Rng;
+use crate::Result;
+
+use super::{BaselineOutcome, EvalHarness};
+
+/// SGD hyper-parameters (the grid the paper searched over lives in the
+/// benches; these are one cell of it).
+#[derive(Clone, Copy, Debug)]
+pub struct SgdOpts {
+    pub lr: f32,
+    pub momentum: f32,
+    pub batch: usize,
+    /// Total passes over the data (upper bound; target-accuracy stops early).
+    pub epochs: usize,
+    /// Evaluate every this many steps.
+    pub eval_every: usize,
+    pub seed: u64,
+}
+
+impl Default for SgdOpts {
+    fn default() -> Self {
+        SgdOpts { lr: 1e-3, momentum: 0.9, batch: 128, epochs: 20, eval_every: 50, seed: 0 }
+    }
+}
+
+/// Train with minibatch SGD; losses are per-sample means within a batch so
+/// `lr` is batch-size invariant (Torch convention, matching the paper's
+/// baseline implementation).
+pub fn train_sgd(
+    mlp: &Mlp,
+    train: &Dataset,
+    test: &Dataset,
+    opts: SgdOpts,
+    target_acc: Option<f64>,
+    label: &str,
+) -> Result<BaselineOutcome> {
+    anyhow::ensure!(opts.batch >= 1, "batch must be >= 1");
+    let mut rng = Rng::stream(opts.seed, 77);
+    let mut ws = mlp.init_weights(&mut rng);
+    let mut velocity: Vec<Matrix> =
+        ws.iter().map(|w| Matrix::zeros(w.rows(), w.cols())).collect();
+
+    let n = train.samples();
+    let batch = opts.batch.min(n);
+    let steps_per_epoch = n.div_ceil(batch);
+    let mut harness = EvalHarness::new(mlp, test, label);
+    harness.target_acc = target_acc;
+    let mut last_loss = f64::NAN;
+
+    let mut step = 0usize;
+    'outer: for _epoch in 0..opts.epochs {
+        for _ in 0..steps_per_epoch {
+            let idx = rng.sample_indices(n, batch);
+            let (bx, by) = gather_columns(train, &idx);
+            harness.timed(|| {
+                let (loss, grads) = mlp.loss_grad(&ws, &bx, &by);
+                last_loss = loss / batch as f64;
+                let scale = opts.lr / batch as f32;
+                for ((w, v), g) in ws.iter_mut().zip(&mut velocity).zip(&grads) {
+                    // v ← μ v − (lr/B) g ;  w ← w + v
+                    v.scale(opts.momentum);
+                    v.axpy(-scale, g);
+                    w.add_assign(v);
+                }
+            });
+            if step % opts.eval_every == 0 && harness.record(step, &ws, last_loss) {
+                break 'outer;
+            }
+            step += 1;
+        }
+    }
+    harness.record(step, &ws, last_loss);
+    Ok(BaselineOutcome {
+        weights: ws,
+        reached_target_at: harness.reached,
+        recorder: harness.recorder,
+    })
+}
+
+/// Copy the selected columns into a dense minibatch.
+fn gather_columns(d: &Dataset, idx: &[usize]) -> (Matrix, Matrix) {
+    let f = d.features();
+    let mut x = Matrix::zeros(f, idx.len());
+    let mut y = Matrix::zeros(1, idx.len());
+    for (j, &c) in idx.iter().enumerate() {
+        for r in 0..f {
+            *x.at_mut(r, j) = d.x.at(r, c);
+        }
+        *y.at_mut(0, j) = d.y.at(0, c);
+    }
+    (x, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Activation;
+    use crate::data::blobs;
+
+    #[test]
+    fn sgd_learns_blobs() {
+        let d = blobs(6, 800, 2.5, 11);
+        let (train, test) = d.split_test(200);
+        let mlp = Mlp::new(vec![6, 8, 1], Activation::Relu).unwrap();
+        let out = train_sgd(
+            &mlp,
+            &train,
+            &test,
+            SgdOpts { lr: 5e-2, momentum: 0.9, batch: 32, epochs: 12, eval_every: 20, seed: 1 },
+            None,
+            "sgd_test",
+        )
+        .unwrap();
+        assert!(
+            out.recorder.best_accuracy() > 0.95,
+            "acc={}",
+            out.recorder.best_accuracy()
+        );
+    }
+
+    #[test]
+    fn sgd_stops_at_target() {
+        let d = blobs(6, 800, 3.0, 12);
+        let (train, test) = d.split_test(200);
+        let mlp = Mlp::new(vec![6, 8, 1], Activation::Relu).unwrap();
+        let out = train_sgd(
+            &mlp,
+            &train,
+            &test,
+            SgdOpts { lr: 5e-2, momentum: 0.9, batch: 32, epochs: 50, eval_every: 10, seed: 2 },
+            Some(0.9),
+            "sgd_test",
+        )
+        .unwrap();
+        assert!(out.reached_target_at.is_some());
+    }
+
+    #[test]
+    fn gather_columns_selects() {
+        let d = blobs(3, 10, 1.0, 3);
+        let (x, y) = gather_columns(&d, &[7, 2]);
+        assert_eq!(x.at(1, 0), d.x.at(1, 7));
+        assert_eq!(x.at(2, 1), d.x.at(2, 2));
+        assert_eq!(y.at(0, 0), d.y.at(0, 7));
+    }
+}

@@ -1,0 +1,84 @@
+//! Flat vector-space operations over per-layer weight ensembles
+//! (`Vec<Matrix>` treated as one parameter vector) — the building blocks of
+//! CG and L-BFGS.
+
+use crate::linalg::Matrix;
+
+pub fn dot(a: &[Matrix], b: &[Matrix]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            x.as_slice()
+                .iter()
+                .zip(y.as_slice())
+                .map(|(u, v)| (*u as f64) * (*v as f64))
+                .sum::<f64>()
+        })
+        .sum()
+}
+
+pub fn norm(a: &[Matrix]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// `dst += alpha * src`
+pub fn axpy(dst: &mut [Matrix], alpha: f32, src: &[Matrix]) {
+    for (d, s) in dst.iter_mut().zip(src) {
+        d.axpy(alpha, s);
+    }
+}
+
+pub fn scale(a: &mut [Matrix], s: f32) {
+    for m in a.iter_mut() {
+        m.scale(s);
+    }
+}
+
+pub fn clone_vec(a: &[Matrix]) -> Vec<Matrix> {
+    a.to_vec()
+}
+
+/// `a - b` as a new ensemble.
+pub fn sub(a: &[Matrix], b: &[Matrix]) -> Vec<Matrix> {
+    let mut out = a.to_vec();
+    for (o, bm) in out.iter_mut().zip(b) {
+        o.sub_assign(bm);
+    }
+    out
+}
+
+/// `-a` as a new ensemble.
+pub fn neg(a: &[Matrix]) -> Vec<Matrix> {
+    let mut out = a.to_vec();
+    for m in out.iter_mut() {
+        m.scale(-1.0);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[f32]) -> Vec<Matrix> {
+        vec![Matrix::from_vec(1, xs.len(), xs.to_vec())]
+    }
+
+    #[test]
+    fn dot_and_norm() {
+        let a = v(&[1.0, 2.0]);
+        let b = v(&[3.0, -1.0]);
+        assert!((dot(&a, &b) - 1.0).abs() < 1e-12);
+        assert!((norm(&a) - 5f64.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn axpy_sub_neg() {
+        let mut a = v(&[1.0, 1.0]);
+        axpy(&mut a, 2.0, &v(&[1.0, 0.0]));
+        assert_eq!(a[0].as_slice(), &[3.0, 1.0]);
+        let d = sub(&a, &v(&[1.0, 1.0]));
+        assert_eq!(d[0].as_slice(), &[2.0, 0.0]);
+        assert_eq!(neg(&d)[0].as_slice(), &[-2.0, 0.0]);
+    }
+}

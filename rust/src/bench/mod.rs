@@ -1,0 +1,114 @@
+//! Bench harness substrate (criterion is unavailable offline): warmup +
+//! timed repetitions with summary stats, and the shared CSV/reporting
+//! helpers every figure bench uses.  Benches are `harness = false` binaries
+//! under `rust/benches/`; outputs land in `bench_out/`.
+
+use std::time::Instant;
+
+use crate::metrics::{summarize, Summary};
+
+/// Timing result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub label: String,
+    pub iters: usize,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn per_iter_s(&self) -> f64 {
+        self.summary.mean
+    }
+
+    pub fn report(&self) -> String {
+        let s = &self.summary;
+        format!(
+            "{:40} {:>12} /iter  (± {:>10}, n={})",
+            self.label,
+            humanize_s(s.mean),
+            humanize_s(s.std),
+            s.n
+        )
+    }
+}
+
+/// Time `f` for `iters` repetitions after `warmup` discarded runs.
+pub fn time_fn(label: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    BenchResult { label: label.to_string(), iters, summary: summarize(&samples) }
+}
+
+/// Time until `f` returns (single shot, for end-to-end runs).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+pub fn humanize_s(s: f64) -> String {
+    if !s.is_finite() {
+        "n/a".to_string()
+    } else if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Write CSV rows (plus header) to `bench_out/<name>.csv`.
+pub fn write_csv(name: &str, header: &str, rows: &[String]) -> crate::Result<String> {
+    let dir = std::path::Path::new("bench_out");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    let mut text = String::from(header);
+    text.push('\n');
+    for r in rows {
+        text.push_str(r);
+        text.push('\n');
+    }
+    std::fs::write(&path, text)?;
+    Ok(path.display().to_string())
+}
+
+/// Standard bench banner so `cargo bench` output is self-describing.
+pub fn banner(fig: &str, what: &str, paper: &str) {
+    println!("================================================================");
+    println!("  {fig}: {what}");
+    println!("  paper reference: {paper}");
+    println!("================================================================");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_counts_iters() {
+        let mut calls = 0;
+        let r = time_fn("noop", 2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(r.iters, 5);
+        assert_eq!(r.summary.n, 5);
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn humanize_ranges() {
+        assert!(humanize_s(2.5).ends_with(" s"));
+        assert!(humanize_s(2.5e-3).ends_with(" ms"));
+        assert!(humanize_s(2.5e-6).ends_with(" µs"));
+        assert!(humanize_s(2.5e-9).ends_with(" ns"));
+    }
+}

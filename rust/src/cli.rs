@@ -1,0 +1,132 @@
+//! Tiny CLI argument parser (substrate — clap is unavailable offline).
+//!
+//! Grammar: `gradfree <subcommand> [positional…] [--key value | --flag]`.
+//! A token starting with `--` whose successor also starts with `--` (or is
+//! absent) is a boolean flag; otherwise it consumes the next token as its
+//! value.  `--key=value` is also accepted.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    kv: BTreeMap<String, String>,
+    flags: BTreeSet<String>,
+}
+
+impl Args {
+    pub fn parse() -> Args {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn parse_from(iter: impl IntoIterator<Item = String>) -> Args {
+        let tokens: Vec<String> = iter.into_iter().collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.kv.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    args.kv.insert(stripped.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.insert(stripped.to_string());
+                }
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// Value of `--key value` / `--key=value`.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    /// Value with a default.
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Parse a typed value with a default.
+    pub fn parsed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> crate::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("bad --{key} '{v}': {e}")),
+        }
+    }
+
+    /// Boolean `--flag` presence.
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains(key)
+    }
+
+    /// First positional (the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// All `--key value` pairs (for logging the exact invocation).
+    pub fn kv_pairs(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.kv.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse_from(tokens.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_kv() {
+        let a = parse(&["train", "--iters", "50", "--dataset", "svhn"]);
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.get("iters"), Some("50"));
+        assert_eq!(a.get("dataset"), Some("svhn"));
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = parse(&["bench", "--out=x.csv", "--verbose", "--quiet"]);
+        assert_eq!(a.get("out"), Some("x.csv"));
+        assert!(a.has("verbose"));
+        assert!(a.has("quiet"));
+        assert!(!a.has("missing"));
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse(&["--a", "1", "--b"]);
+        assert_eq!(a.get("a"), Some("1"));
+        assert!(a.has("b"));
+    }
+
+    #[test]
+    fn parsed_or_defaults_and_errors() {
+        let a = parse(&["--n", "12"]);
+        assert_eq!(a.parsed_or("n", 5usize).unwrap(), 12);
+        assert_eq!(a.parsed_or("m", 5usize).unwrap(), 5);
+        let bad = parse(&["--n", "x2"]);
+        assert!(bad.parsed_or("n", 5usize).is_err());
+    }
+
+    #[test]
+    fn negative_number_values() {
+        // "-3" does not start with "--", so it is consumed as a value.
+        let a = parse(&["--shift", "-3"]);
+        assert_eq!(a.get("shift"), Some("-3"));
+    }
+}

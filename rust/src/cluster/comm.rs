@@ -1,0 +1,239 @@
+//! Thread-backed collectives with deterministic reduction order.
+//!
+//! Every rank deposits its contribution into a per-rank slot, all ranks
+//! meet at a barrier, then every rank folds the slots **in rank order** —
+//! floating-point summation order is therefore independent of thread
+//! scheduling AND of how the trainer overlaps phases, which makes training
+//! runs bit-reproducible for a fixed worker count.  Traffic is counted so
+//! the cost model can price it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+
+use crate::linalg::Matrix;
+
+/// Cumulative traffic counters (bytes that would cross the network).
+#[derive(Debug, Default)]
+pub struct CommStats {
+    pub allreduce_bytes: AtomicU64,
+    pub broadcast_bytes: AtomicU64,
+    pub allreduce_calls: AtomicU64,
+    pub broadcast_calls: AtomicU64,
+}
+
+impl CommStats {
+    pub fn total_bytes(&self) -> u64 {
+        self.allreduce_bytes.load(Ordering::Relaxed)
+            + self.broadcast_bytes.load(Ordering::Relaxed)
+    }
+}
+
+struct Inner {
+    barrier: Barrier,
+    slots: Mutex<Vec<Option<Matrix>>>,
+    stats: CommStats,
+}
+
+/// A communicator over `n_ranks` participant threads (clone one handle per
+/// rank).  All collectives are synchronous and must be entered by every
+/// rank, like their MPI namesakes.
+#[derive(Clone)]
+pub struct CommWorld {
+    n_ranks: usize,
+    inner: Arc<Inner>,
+}
+
+impl CommWorld {
+    pub fn new(n_ranks: usize) -> Self {
+        assert!(n_ranks > 0);
+        CommWorld {
+            n_ranks,
+            inner: Arc::new(Inner {
+                barrier: Barrier::new(n_ranks),
+                slots: Mutex::new(vec![None; n_ranks]),
+                stats: CommStats::default(),
+            }),
+        }
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.n_ranks
+    }
+
+    pub fn stats(&self) -> &CommStats {
+        &self.inner.stats
+    }
+
+    pub fn barrier(&self) {
+        self.inner.barrier.wait();
+    }
+
+    /// Sum `m` across all ranks; on return every rank holds the total.
+    /// Reduction is performed in rank order on every rank (deterministic).
+    pub fn allreduce_sum(&self, rank: usize, m: &mut Matrix) {
+        assert!(rank < self.n_ranks);
+        if self.n_ranks == 1 {
+            self.count_allreduce(m);
+            return;
+        }
+        {
+            let mut slots = self.inner.slots.lock().unwrap();
+            slots[rank] = Some(m.clone());
+        }
+        self.inner.barrier.wait();
+        {
+            let slots = self.inner.slots.lock().unwrap();
+            let mut acc = slots[0]
+                .as_ref()
+                .expect("rank 0 slot missing in allreduce")
+                .clone();
+            for s in slots.iter().skip(1) {
+                acc.add_assign(s.as_ref().expect("slot missing in allreduce"));
+            }
+            *m = acc;
+        }
+        self.inner.barrier.wait();
+        if rank == 0 {
+            let mut slots = self.inner.slots.lock().unwrap();
+            slots.iter_mut().for_each(|s| *s = None);
+            self.count_allreduce(m);
+        }
+        self.inner.barrier.wait();
+    }
+
+    /// Broadcast `m` from `root` to every rank.
+    pub fn broadcast(&self, rank: usize, root: usize, m: &mut Matrix) {
+        assert!(rank < self.n_ranks && root < self.n_ranks);
+        if self.n_ranks == 1 {
+            self.count_broadcast(m);
+            return;
+        }
+        if rank == root {
+            let mut slots = self.inner.slots.lock().unwrap();
+            slots[root] = Some(m.clone());
+        }
+        self.inner.barrier.wait();
+        if rank != root {
+            let slots = self.inner.slots.lock().unwrap();
+            *m = slots[root].as_ref().expect("root slot missing in broadcast").clone();
+        }
+        self.inner.barrier.wait();
+        if rank == root {
+            let mut slots = self.inner.slots.lock().unwrap();
+            slots[root] = None;
+            self.count_broadcast(m);
+        }
+        self.inner.barrier.wait();
+    }
+
+    fn count_allreduce(&self, m: &Matrix) {
+        self.inner
+            .stats
+            .allreduce_bytes
+            .fetch_add((m.len() * 4) as u64, Ordering::Relaxed);
+        self.inner.stats.allreduce_calls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn count_broadcast(&self, m: &Matrix) {
+        self.inner
+            .stats
+            .broadcast_bytes
+            .fetch_add((m.len() * 4) as u64, Ordering::Relaxed);
+        self.inner.stats.broadcast_calls.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+    use crate::rng::Rng;
+
+    fn run_ranks<F>(n: usize, f: F)
+    where
+        F: Fn(usize, CommWorld) + Send + Sync + Copy,
+    {
+        let world = CommWorld::new(n);
+        std::thread::scope(|s| {
+            for rank in 0..n {
+                let w = world.clone();
+                s.spawn(move || f(rank, w));
+            }
+        });
+    }
+
+    #[test]
+    fn allreduce_equals_serial_sum() {
+        forall("allreduce == serial sum", 15, |g| {
+            let ranks = g.usize_in(1, 8);
+            let r = g.usize_in(1, 6);
+            let c = g.usize_in(1, 6);
+            let inputs: Vec<Matrix> =
+                (0..ranks).map(|i| {
+                    let mut rng = Rng::stream(g.case as u64, i as u64);
+                    Matrix::randn(r, c, &mut rng)
+                }).collect();
+            let mut want = Matrix::zeros(r, c);
+            for m in &inputs {
+                want.add_assign(m);
+            }
+            let world = CommWorld::new(ranks);
+            let results: Vec<Matrix> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..ranks)
+                    .map(|rank| {
+                        let w = world.clone();
+                        let mut m = inputs[rank].clone();
+                        s.spawn(move || {
+                            w.allreduce_sum(rank, &mut m);
+                            m
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for (i, res) in results.iter().enumerate() {
+                if res.max_abs_diff(&want) > 1e-5 {
+                    return Err(format!("rank {i} differs by {}", res.max_abs_diff(&want)));
+                }
+                // determinism: all ranks bit-identical
+                if res.as_slice() != results[0].as_slice() {
+                    return Err(format!("rank {i} not bit-identical to rank 0"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn broadcast_distributes_root_value() {
+        run_ranks(6, |rank, world| {
+            let mut m = Matrix::from_fn(2, 2, |r, c| (rank * 100 + r * 2 + c) as f32);
+            world.broadcast(rank, 3, &mut m);
+            let want = Matrix::from_fn(2, 2, |r, c| (300 + r * 2 + c) as f32);
+            assert_eq!(m.as_slice(), want.as_slice(), "rank {rank}");
+        });
+    }
+
+    #[test]
+    fn repeated_collectives_reuse_world() {
+        run_ranks(4, |rank, world| {
+            for round in 0..5 {
+                let mut m = Matrix::from_vec(1, 1, vec![(rank + round) as f32]);
+                world.allreduce_sum(rank, &mut m);
+                let want: f32 = (0..4).map(|r| (r + round) as f32).sum();
+                assert_eq!(m.at(0, 0), want, "round {round} rank {rank}");
+            }
+        });
+    }
+
+    #[test]
+    fn traffic_counted() {
+        let world = CommWorld::new(1);
+        let mut m = Matrix::zeros(4, 4);
+        world.allreduce_sum(0, &mut m);
+        world.broadcast(0, 0, &mut m);
+        assert_eq!(world.stats().allreduce_bytes.load(Ordering::Relaxed), 64);
+        assert_eq!(world.stats().broadcast_bytes.load(Ordering::Relaxed), 64);
+        assert_eq!(world.stats().total_bytes(), 128);
+    }
+}

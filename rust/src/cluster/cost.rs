@@ -1,0 +1,106 @@
+//! α–β communication cost model (Hockney) for an Aries-class interconnect.
+//!
+//! Prices the collectives the ADMM iteration issues so measured small-scale
+//! runs extrapolate to the paper's core counts (figs 1a/2a).  A message of
+//! `b` bytes between two ranks costs `α + β·b`; tree collectives pay
+//! `⌈log₂ N⌉` rounds, and an allreduce is a reduce + broadcast (the
+//! transpose-reduction W update in the paper is literally "reduce Gram
+//! pairs to the leader, broadcast W back").
+
+/// Hockney model parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Per-message latency, seconds.
+    pub alpha_s: f64,
+    /// Per-byte transfer time, seconds (1 / bandwidth).
+    pub beta_s_per_byte: f64,
+}
+
+impl Default for CostModel {
+    /// Cray XC30 "Aries" dragonfly-class numbers: ~1.5 µs MPI latency,
+    /// ~8 GB/s effective per-link bandwidth.
+    fn default() -> Self {
+        CostModel { alpha_s: 1.5e-6, beta_s_per_byte: 1.0 / 8.0e9 }
+    }
+}
+
+impl CostModel {
+    fn rounds(n_ranks: usize) -> f64 {
+        if n_ranks <= 1 {
+            0.0
+        } else {
+            (n_ranks as f64).log2().ceil()
+        }
+    }
+
+    /// Point-to-point message time.
+    pub fn message(&self, bytes: usize) -> f64 {
+        self.alpha_s + self.beta_s_per_byte * bytes as f64
+    }
+
+    /// Binomial-tree reduce of a `bytes`-sized buffer onto one root.
+    pub fn reduce(&self, n_ranks: usize, bytes: usize) -> f64 {
+        Self::rounds(n_ranks) * self.message(bytes)
+    }
+
+    /// Binomial-tree broadcast of a `bytes`-sized buffer.
+    pub fn broadcast(&self, n_ranks: usize, bytes: usize) -> f64 {
+        Self::rounds(n_ranks) * self.message(bytes)
+    }
+
+    /// Tree allreduce = reduce + broadcast (the paper's W-update pattern).
+    pub fn allreduce(&self, n_ranks: usize, bytes: usize) -> f64 {
+        self.reduce(n_ranks, bytes) + self.broadcast(n_ranks, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+
+    #[test]
+    fn single_rank_is_free() {
+        let m = CostModel::default();
+        assert_eq!(m.allreduce(1, 1 << 20), 0.0);
+        assert_eq!(m.reduce(1, 128), 0.0);
+    }
+
+    #[test]
+    fn log_scaling() {
+        let m = CostModel::default();
+        // 2 ranks: 1 round; 1024 ranks: 10 rounds.
+        let t2 = m.reduce(2, 4096);
+        let t1024 = m.reduce(1024, 4096);
+        assert!((t1024 / t2 - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monotone_in_ranks_and_bytes() {
+        forall("cost monotone", 100, |g| {
+            let m = CostModel::default();
+            let n1 = g.usize_in(1, 4096);
+            let n2 = g.usize_in(n1, 8192);
+            let b1 = g.usize_in(1, 1 << 22);
+            let b2 = g.usize_in(b1, 1 << 23);
+            if m.allreduce(n2, b1) + 1e-15 < m.allreduce(n1, b1) {
+                return Err("not monotone in ranks".into());
+            }
+            if m.allreduce(n1, b2) + 1e-15 < m.allreduce(n1, b1) {
+                return Err("not monotone in bytes".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn latency_vs_bandwidth_regimes() {
+        let m = CostModel::default();
+        // tiny message: latency dominated
+        let t_small = m.message(8);
+        assert!(t_small < 2.0 * m.alpha_s);
+        // huge message: bandwidth dominated
+        let t_big = m.message(1 << 30);
+        assert!(t_big > 0.1 && t_big < 0.2); // ~0.134 s at 8 GB/s
+    }
+}

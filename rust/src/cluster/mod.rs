@@ -1,0 +1,18 @@
+//! Simulated MPI cluster: thread-backed collectives, an α–β communication
+//! cost model, and the strong-scaling extrapolation used by figs 1a/2a.
+//!
+//! The paper ran on a Cray XC30 with MPI over up to 7,200 cores.  Here a
+//! "rank" is an OS thread; the collectives exercise the *same sharded code
+//! path and reduce semantics* (deterministic rank-ordered summation, so
+//! results are bit-identical for any worker count), while the cost model
+//! (`cost.rs`) prices what each collective *would* cost on an
+//! Aries-class interconnect, letting `sim.rs` extrapolate measured runs to
+//! thousands of cores.  DESIGN.md §4 documents this substitution.
+
+mod comm;
+mod cost;
+mod sim;
+
+pub use comm::{CommStats, CommWorld};
+pub use cost::CostModel;
+pub use sim::{ScalingPoint, ScalingProfile};

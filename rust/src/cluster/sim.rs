@@ -1,0 +1,160 @@
+//! Strong-scaling extrapolation (figs 1a / 2a).
+//!
+//! ADMM's per-iteration cost decomposes as
+//!
+//!   T(N) = T_compute · (cols_local(N)/cols_total)·N_measured-normalization
+//!        + T_leader + Σ_l allreduce(N, gram_bytes_l) + Σ_l broadcast(N, w_bytes_l)
+//!
+//! Compute is embarrassingly parallel in the sample columns (paper §5), so
+//! per-iteration compute time is `compute_col_s · cols / N`; the leader's
+//! small dense solves and the log-N collectives are the serial terms.  The
+//! profile is *calibrated from measured runs* (compute_col_s, iters) and
+//! the cost model prices communication at core counts we cannot host.
+
+use super::CostModel;
+
+/// Calibrated per-iteration profile of one training configuration.
+#[derive(Clone, Debug)]
+pub struct ScalingProfile {
+    /// Total training columns (samples).
+    pub cols_total: usize,
+    /// Measured compute seconds per column per iteration on one core
+    /// (all per-worker update steps summed).
+    pub compute_col_s: f64,
+    /// Measured leader seconds per iteration (W solves + bookkeeping) —
+    /// does not shrink with N.
+    pub leader_s: f64,
+    /// Bytes allreduced per iteration (Σ over layers of the Gram pair).
+    pub allreduce_bytes: usize,
+    /// Bytes broadcast per iteration (Σ over layers of W_l, the a-update
+    /// inverse, etc.).
+    pub broadcast_bytes: usize,
+    /// Iterations needed to reach the accuracy threshold (measured).
+    pub iters_to_threshold: usize,
+    pub cost: CostModel,
+}
+
+/// One point of a scaling curve.
+#[derive(Clone, Copy, Debug)]
+pub struct ScalingPoint {
+    pub cores: usize,
+    pub seconds_to_threshold: f64,
+    pub compute_s: f64,
+    pub comm_s: f64,
+    pub leader_s: f64,
+}
+
+impl ScalingProfile {
+    /// Predicted seconds per iteration at `cores` ranks.
+    pub fn iteration_time(&self, cores: usize) -> f64 {
+        assert!(cores >= 1);
+        let cols_local = (self.cols_total as f64 / cores as f64).ceil();
+        let compute = self.compute_col_s * cols_local;
+        let comm = self.cost.allreduce(cores, self.allreduce_bytes)
+            + self.cost.broadcast(cores, self.broadcast_bytes);
+        compute + comm + self.leader_s
+    }
+
+    /// Predicted time-to-threshold at `cores` ranks, with the breakdown.
+    pub fn time_to_threshold(&self, cores: usize) -> ScalingPoint {
+        let cols_local = (self.cols_total as f64 / cores as f64).ceil();
+        let compute = self.compute_col_s * cols_local * self.iters_to_threshold as f64;
+        let comm = (self.cost.allreduce(cores, self.allreduce_bytes)
+            + self.cost.broadcast(cores, self.broadcast_bytes))
+            * self.iters_to_threshold as f64;
+        let leader = self.leader_s * self.iters_to_threshold as f64;
+        ScalingPoint {
+            cores,
+            seconds_to_threshold: compute + comm + leader,
+            compute_s: compute,
+            comm_s: comm,
+            leader_s: leader,
+        }
+    }
+
+    /// Curve over a list of core counts.
+    pub fn curve(&self, cores: &[usize]) -> Vec<ScalingPoint> {
+        cores.iter().map(|&c| self.time_to_threshold(c)).collect()
+    }
+
+    /// Parallel efficiency at `cores` relative to 1 core.
+    pub fn efficiency(&self, cores: usize) -> f64 {
+        let t1 = self.time_to_threshold(1).seconds_to_threshold;
+        let tn = self.time_to_threshold(cores).seconds_to_threshold;
+        t1 / (tn * cores as f64)
+    }
+
+    /// Core count beyond which communication dominates compute (the knee
+    /// of the strong-scaling curve).
+    pub fn comm_crossover(&self, max_cores: usize) -> Option<usize> {
+        let mut n = 1;
+        while n <= max_cores {
+            let p = self.time_to_threshold(n);
+            if p.comm_s > p.compute_s {
+                return Some(n);
+            }
+            n *= 2;
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile() -> ScalingProfile {
+        // Realistic SVHN-net numbers: ~4e5 flops per column per iteration
+        // at a few GFLOP/s/core ≈ 2e-4 s/col; leader solve ~1 ms.
+        ScalingProfile {
+            cols_total: 120_290,           // paper SVHN train size
+            compute_col_s: 2e-4,
+            leader_s: 1e-3,
+            allreduce_bytes: 4 * (100 * 648 + 648 * 648 + 50 * 100 + 100 * 100 + 50 + 2500),
+            broadcast_bytes: 4 * (100 * 648 + 50 * 100 + 50),
+            iters_to_threshold: 60,
+            cost: CostModel::default(),
+        }
+    }
+
+    #[test]
+    fn near_linear_scaling_in_compute_regime() {
+        let p = profile();
+        // In the paper's regime (up to ~1024 cores on SVHN) scaling is
+        // near-linear: efficiency stays above 50%.
+        for &n in &[2usize, 8, 64, 256, 1024] {
+            let e = p.efficiency(n);
+            assert!(e > 0.5, "efficiency at {n} cores = {e}");
+        }
+    }
+
+    #[test]
+    fn time_monotone_then_flattens() {
+        let p = profile();
+        let t1 = p.time_to_threshold(1).seconds_to_threshold;
+        let t64 = p.time_to_threshold(64).seconds_to_threshold;
+        let t1024 = p.time_to_threshold(1024).seconds_to_threshold;
+        assert!(t64 < t1 / 30.0, "64-core speedup too weak: {t1} -> {t64}");
+        assert!(t1024 < t64, "1024 cores should still beat 64");
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let p = profile();
+        let pt = p.time_to_threshold(128);
+        let sum = pt.compute_s + pt.comm_s + pt.leader_s;
+        assert!((sum - pt.seconds_to_threshold).abs() < 1e-12);
+    }
+
+    #[test]
+    fn crossover_exists_at_large_n() {
+        let mut p = profile();
+        p.cost.beta_s_per_byte = 1.0 / 1.0e8; // slow network -> early crossover
+        let x = p.comm_crossover(1 << 20).expect("crossover expected");
+        assert!(x > 1);
+        // with a 100x faster network the crossover moves out
+        p.cost.beta_s_per_byte = 1.0 / 1.0e10;
+        let x2 = p.comm_crossover(1 << 20).unwrap_or(usize::MAX);
+        assert!(x2 > x, "x={x} x2={x2}");
+    }
+}

@@ -1,0 +1,409 @@
+//! Experiment configuration: typed configs with JSON file loading and CLI
+//! overrides.
+//!
+//! The same `TrainConfig` drives the ADMM trainer, the baselines and every
+//! bench; `Activation` / `MultiplierMode` / `Backend` are the enums the rest
+//! of the crate dispatches on.  Defaults follow the paper (§6: γ=10, β=1,
+//! warm start; §7 network shapes per dataset).
+
+pub mod json;
+
+pub use json::Json;
+
+use crate::cli::Args;
+use crate::Result;
+
+/// Activation function h_l (paper §3.1 piecewise-linear choices).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Relu,
+    /// The paper's non-differentiable sigmoid: clamp(x, 0, 1).
+    HardSigmoid,
+}
+
+impl Activation {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "relu" => Ok(Activation::Relu),
+            "hardsig" | "hard_sigmoid" => Ok(Activation::HardSigmoid),
+            _ => anyhow::bail!("unknown activation '{s}' (relu|hardsig)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Activation::Relu => "relu",
+            Activation::HardSigmoid => "hardsig",
+        }
+    }
+
+    #[inline(always)]
+    pub fn apply(&self, x: f32) -> f32 {
+        match self {
+            Activation::Relu => x.max(0.0),
+            Activation::HardSigmoid => x.clamp(0.0, 1.0),
+        }
+    }
+}
+
+/// Lagrange-multiplier scheme (§4; `Classical` exists for the instability
+/// ablation, `None` is the warm-start / pure-penalty mode).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MultiplierMode {
+    /// Paper's method: a single Bregman multiplier on the output layer.
+    Bregman,
+    /// Pure quadratic-penalty method (what warm-start iterations run).
+    NoMultiplier,
+    /// Conventional ADMM with one multiplier per constraint — the paper
+    /// reports this as "highly unstable"; kept for the ablation bench.
+    Classical,
+}
+
+impl MultiplierMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "bregman" => Ok(Self::Bregman),
+            "none" => Ok(Self::NoMultiplier),
+            "classical" => Ok(Self::Classical),
+            _ => anyhow::bail!("unknown multiplier mode '{s}' (bregman|none|classical)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Bregman => "bregman",
+            Self::NoMultiplier => "none",
+            Self::Classical => "classical",
+        }
+    }
+}
+
+/// Initialization of the auxiliary variables {a_l}, {z_l}.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitScheme {
+    /// Paper §6: i.i.d. unit Gaussians.
+    Gaussian,
+    /// Forward-propagate the data through random Gaussian weights so a/z
+    /// start mutually consistent (a_l = h(z_l), z_l = W a_{l-1}).  Helps
+    /// deep (≥2 hidden layer) stacks mix much faster; studied by the
+    /// init ablation bench (the paper's §8.1 names initialization schemes
+    /// as future work).
+    Forward,
+}
+
+impl InitScheme {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "gaussian" => Ok(Self::Gaussian),
+            "forward" => Ok(Self::Forward),
+            _ => anyhow::bail!("unknown init scheme '{s}' (gaussian|forward)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Gaussian => "gaussian",
+            Self::Forward => "forward",
+        }
+    }
+}
+
+/// Numeric backend for the per-worker updates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT JAX/Pallas artifacts executed through PJRT (the shipped hot path).
+    Pjrt,
+    /// Rust-native twin of the same math (oracle, sweeps, scaling runs).
+    Native,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "pjrt" => Ok(Backend::Pjrt),
+            "native" => Ok(Backend::Native),
+            _ => anyhow::bail!("unknown backend '{s}' (pjrt|native)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Pjrt => "pjrt",
+            Backend::Native => "native",
+        }
+    }
+}
+
+/// Full training configuration (ADMM and baselines share it).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Artifact config name (must exist in `artifacts/manifest.json` when
+    /// `backend == Pjrt`); also names the experiment in logs.
+    pub name: String,
+    /// Layer dimensions `[d0, d1, …, dL]` (d0 = input features).
+    pub dims: Vec<usize>,
+    pub act: Activation,
+    /// Quadratic penalty on `z_l = W_l a_{l-1}` (paper β, default 1).
+    pub beta: f32,
+    /// Quadratic penalty on `a_l = h(z_l)` (paper γ, default 10).
+    pub gamma: f32,
+    /// Iterations run with multipliers frozen (paper §6 warm start).
+    pub warmup_iters: usize,
+    /// Total ADMM iterations.
+    pub iters: usize,
+    /// Simulated MPI ranks (worker threads).
+    pub workers: usize,
+    pub multiplier_mode: MultiplierMode,
+    pub backend: Backend,
+    pub init: InitScheme,
+    /// Ridge for the pseudoinverse guard (paper uses a raw pseudoinverse).
+    pub ridge: f64,
+    /// Heavy-ball momentum on weight updates (0 = off; paper §8.1
+    /// future-work extension).
+    pub momentum: f32,
+    /// Evaluate on the test set every `eval_every` iterations.
+    pub eval_every: usize,
+    pub seed: u64,
+    /// Artifacts directory (PJRT backend).
+    pub artifacts_dir: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            name: "quickstart".into(),
+            dims: vec![16, 12, 1],
+            act: Activation::Relu,
+            beta: 1.0,
+            gamma: 10.0,
+            warmup_iters: 10,
+            iters: 60,
+            workers: 4,
+            multiplier_mode: MultiplierMode::Bregman,
+            backend: Backend::Native,
+            init: InitScheme::Gaussian,
+            ridge: 1e-4,
+            momentum: 0.0,
+            eval_every: 1,
+            seed: 0,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.dims.len() >= 2, "need at least one layer");
+        anyhow::ensure!(self.dims.iter().all(|&d| d > 0), "zero-width layer");
+        anyhow::ensure!(self.beta > 0.0 && self.gamma > 0.0, "penalties must be positive");
+        anyhow::ensure!(self.workers >= 1, "need at least one worker");
+        anyhow::ensure!(self.iters >= 1, "need at least one iteration");
+        anyhow::ensure!(self.eval_every >= 1, "eval_every must be >= 1");
+        anyhow::ensure!((0.0..1.0).contains(&self.momentum), "momentum in [0,1)");
+        Ok(())
+    }
+
+    /// Load from a JSON object (all fields optional; defaults fill in).
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut c = TrainConfig::default();
+        let obj = v.as_obj()?;
+        for (k, val) in obj {
+            match k.as_str() {
+                "name" => c.name = val.as_str()?.to_string(),
+                "dims" => c.dims = val.as_usize_vec()?,
+                "act" => c.act = Activation::parse(val.as_str()?)?,
+                "beta" => c.beta = val.as_f64()? as f32,
+                "gamma" => c.gamma = val.as_f64()? as f32,
+                "warmup_iters" => c.warmup_iters = val.as_usize()?,
+                "iters" => c.iters = val.as_usize()?,
+                "workers" => c.workers = val.as_usize()?,
+                "multiplier_mode" => c.multiplier_mode = MultiplierMode::parse(val.as_str()?)?,
+                "backend" => c.backend = Backend::parse(val.as_str()?)?,
+                "init" => c.init = InitScheme::parse(val.as_str()?)?,
+                "ridge" => c.ridge = val.as_f64()?,
+                "momentum" => c.momentum = val.as_f64()? as f32,
+                "eval_every" => c.eval_every = val.as_usize()?,
+                "seed" => c.seed = val.as_f64()? as u64,
+                "artifacts_dir" => c.artifacts_dir = val.as_str()?.to_string(),
+                other => anyhow::bail!("unknown config key '{other}'"),
+            }
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading config {path}: {e}"))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Apply `--key value` CLI overrides on top of the current values.
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(v) = args.get("name") {
+            self.name = v.to_string();
+        }
+        if let Some(v) = args.get("dims") {
+            self.dims = v
+                .split(|c| c == ',' || c == 'x')
+                .map(|s| s.trim().parse::<usize>())
+                .collect::<std::result::Result<_, _>>()
+                .map_err(|e| anyhow::anyhow!("bad --dims '{v}': {e}"))?;
+        }
+        if let Some(v) = args.get("act") {
+            self.act = Activation::parse(v)?;
+        }
+        if let Some(v) = args.get("beta") {
+            self.beta = v.parse()?;
+        }
+        if let Some(v) = args.get("gamma") {
+            self.gamma = v.parse()?;
+        }
+        if let Some(v) = args.get("warmup") {
+            self.warmup_iters = v.parse()?;
+        }
+        if let Some(v) = args.get("iters") {
+            self.iters = v.parse()?;
+        }
+        if let Some(v) = args.get("workers") {
+            self.workers = v.parse()?;
+        }
+        if let Some(v) = args.get("multiplier-mode") {
+            self.multiplier_mode = MultiplierMode::parse(v)?;
+        }
+        if let Some(v) = args.get("backend") {
+            self.backend = Backend::parse(v)?;
+        }
+        if let Some(v) = args.get("init") {
+            self.init = InitScheme::parse(v)?;
+        }
+        if let Some(v) = args.get("ridge") {
+            self.ridge = v.parse()?;
+        }
+        if let Some(v) = args.get("momentum") {
+            self.momentum = v.parse()?;
+        }
+        if let Some(v) = args.get("eval-every") {
+            self.eval_every = v.parse()?;
+        }
+        if let Some(v) = args.get("seed") {
+            self.seed = v.parse()?;
+        }
+        if let Some(v) = args.get("artifacts") {
+            self.artifacts_dir = v.to_string();
+        }
+        self.validate()
+    }
+
+    /// Preset matching an artifact config (see python/compile/configs.py).
+    pub fn preset(name: &str) -> Result<Self> {
+        let mut c = TrainConfig { name: name.into(), ..TrainConfig::default() };
+        match name {
+            "test" => {
+                c.dims = vec![4, 3, 2];
+                c.iters = 20;
+                c.warmup_iters = 4;
+            }
+            "test_hardsig" => {
+                c.dims = vec![4, 3, 2];
+                c.act = Activation::HardSigmoid;
+                c.iters = 20;
+                c.warmup_iters = 4;
+            }
+            "quickstart" => {
+                c.dims = vec![16, 12, 1];
+            }
+            // Paper §7.1: two hidden layers of 100 and 50 ReLU units.
+            "svhn" => {
+                c.dims = vec![648, 100, 50, 1];
+                c.iters = 150;
+                c.warmup_iters = 10;
+            }
+            // Paper §7.2: one hidden layer of 300 ReLU units.
+            "higgs" => {
+                c.dims = vec![28, 300, 1];
+                c.iters = 120;
+                c.warmup_iters = 10;
+            }
+            other => anyhow::bail!("unknown preset '{other}'"),
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn presets_match_paper_networks() {
+        assert_eq!(TrainConfig::preset("svhn").unwrap().dims, vec![648, 100, 50, 1]);
+        assert_eq!(TrainConfig::preset("higgs").unwrap().dims, vec![28, 300, 1]);
+        assert!(TrainConfig::preset("nope").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_overrides_defaults() {
+        let c = TrainConfig::from_json(
+            &Json::parse(r#"{"dims": [8, 4, 1], "gamma": 2.5, "backend": "native",
+                             "multiplier_mode": "classical", "act": "hardsig"}"#)
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.dims, vec![8, 4, 1]);
+        assert_eq!(c.gamma, 2.5);
+        assert_eq!(c.multiplier_mode, MultiplierMode::Classical);
+        assert_eq!(c.act, Activation::HardSigmoid);
+        assert_eq!(c.beta, 1.0); // default preserved
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(TrainConfig::from_json(&Json::parse(r#"{"oops": 1}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = TrainConfig::default();
+        let args = Args::parse_from(
+            ["--dims", "5x3x1", "--gamma", "0.5", "--workers", "8"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.dims, vec![5, 3, 1]);
+        assert_eq!(c.gamma, 0.5);
+        assert_eq!(c.workers, 8);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = TrainConfig::default();
+        c.dims = vec![4];
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.gamma = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.momentum = 1.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn activation_apply() {
+        assert_eq!(Activation::Relu.apply(-2.0), 0.0);
+        assert_eq!(Activation::Relu.apply(3.0), 3.0);
+        assert_eq!(Activation::HardSigmoid.apply(-2.0), 0.0);
+        assert_eq!(Activation::HardSigmoid.apply(0.4), 0.4);
+        assert_eq!(Activation::HardSigmoid.apply(2.0), 1.0);
+    }
+}

@@ -1,0 +1,384 @@
+//! Per-worker numeric backends.
+//!
+//! `Native` runs the rust twin of the update math (`updates.rs`); `Pjrt`
+//! runs the AOT JAX/Pallas artifacts through the runtime, tiling the shard
+//! into the fixed column width the artifacts were lowered with and zero-
+//! padding the remainder (exact for Gram products, ignored for the
+//! column-decoupled updates, masked for eval/grad — see model.py).
+//!
+//! Backends are enums, not trait objects: PJRT contexts are thread-affine,
+//! so each worker thread constructs its own backend from a `BackendKind`
+//! recipe that *is* `Send`.
+
+use crate::config::{Activation, Backend, TrainConfig};
+use crate::coordinator::updates;
+use crate::linalg::{gemm_nn, Matrix};
+use crate::nn::Mlp;
+use crate::runtime::RuntimeContext;
+use crate::Result;
+
+/// Send-able recipe for constructing a backend inside a worker thread.
+#[derive(Clone, Debug)]
+pub enum BackendKind {
+    Native { gamma: f32, beta: f32, act: Activation },
+    Pjrt { artifacts_dir: String, config: String },
+}
+
+impl BackendKind {
+    pub fn from_config(cfg: &TrainConfig) -> Self {
+        match cfg.backend {
+            Backend::Native => BackendKind::Native {
+                gamma: cfg.gamma,
+                beta: cfg.beta,
+                act: cfg.act,
+            },
+            Backend::Pjrt => BackendKind::Pjrt {
+                artifacts_dir: cfg.artifacts_dir.clone(),
+                config: cfg.name.clone(),
+            },
+        }
+    }
+
+    pub fn build(&self) -> Result<WorkerBackendImpl> {
+        Ok(match self {
+            BackendKind::Native { gamma, beta, act } => {
+                WorkerBackendImpl::Native(NativeBackend {
+                    gamma: *gamma,
+                    beta: *beta,
+                    act: *act,
+                })
+            }
+            BackendKind::Pjrt { artifacts_dir, config } => {
+                WorkerBackendImpl::Pjrt(PjrtBackend::new(artifacts_dir, config)?)
+            }
+        })
+    }
+}
+
+/// Rust-native backend (also the only backend for the classical-ADMM
+/// ablation and for γ/β sweeps — artifacts bake those constants).
+pub struct NativeBackend {
+    pub gamma: f32,
+    pub beta: f32,
+    pub act: Activation,
+}
+
+/// PJRT backend over the AOT artifacts.
+pub struct PjrtBackend {
+    ctx: RuntimeContext,
+}
+
+/// The backend interface the worker loop drives.  Layer indices `l` are
+/// 1-based, matching Algorithm 1 and the artifact names (`gram_1`, …).
+pub enum WorkerBackendImpl {
+    Native(NativeBackend),
+    Pjrt(PjrtBackend),
+}
+
+impl WorkerBackendImpl {
+    pub fn gram(&mut self, l: usize, z: &Matrix, a_prev: &Matrix) -> Result<(Matrix, Matrix)> {
+        match self {
+            Self::Native(_) => Ok(updates::gram(z, a_prev)),
+            Self::Pjrt(p) => p.gram(l, z, a_prev),
+        }
+    }
+
+    /// Just `z a_prevᵀ` — used when the `a aᵀ` half is cached (layer 1's
+    /// input Gram is iteration-invariant).
+    pub fn zat_only(&mut self, l: usize, z: &Matrix, a_prev: &Matrix) -> Result<Matrix> {
+        match self {
+            Self::Native(_) => Ok(crate::linalg::gemm_nt(z, a_prev)),
+            Self::Pjrt(p) => p.zat_only(l, z, a_prev),
+        }
+    }
+
+    pub fn a_update(
+        &mut self,
+        l: usize,
+        minv: &Matrix,
+        w_next: &Matrix,
+        z_next: &Matrix,
+        z_l: &Matrix,
+    ) -> Result<Matrix> {
+        match self {
+            Self::Native(n) => Ok(updates::a_update(
+                minv, w_next, z_next, z_l, n.beta, n.gamma, n.act,
+            )),
+            Self::Pjrt(p) => p.a_update(l, minv, w_next, z_next, z_l),
+        }
+    }
+
+    pub fn z_hidden(&mut self, l: usize, w: &Matrix, a_prev: &Matrix, a: &Matrix) -> Result<Matrix> {
+        match self {
+            Self::Native(n) => {
+                let m = gemm_nn(w, a_prev);
+                Ok(updates::z_hidden(a, &m, n.gamma, n.beta, n.act))
+            }
+            Self::Pjrt(p) => p.z_hidden(l, w, a_prev, a),
+        }
+    }
+
+    /// Returns `(z_L, m = W_L a_{L-1})`.
+    pub fn z_out(
+        &mut self,
+        w: &Matrix,
+        a_prev: &Matrix,
+        y: &Matrix,
+        lam: &Matrix,
+    ) -> Result<(Matrix, Matrix)> {
+        match self {
+            Self::Native(n) => {
+                let m = gemm_nn(w, a_prev);
+                Ok((updates::z_out(y, &m, lam, n.beta), m))
+            }
+            Self::Pjrt(p) => p.z_out(w, a_prev, y, lam),
+        }
+    }
+
+    pub fn lambda_update(&mut self, lam: &mut Matrix, z: &Matrix, m: &Matrix) -> Result<()> {
+        match self {
+            Self::Native(n) => {
+                updates::lambda_update(lam, z, m, n.beta);
+                Ok(())
+            }
+            Self::Pjrt(p) => p.lambda_update(lam, z, m),
+        }
+    }
+
+    /// `(Σ hinge, Σ correct)` on a shard.
+    pub fn eval(&mut self, ws: &[Matrix], x: &Matrix, y: &Matrix, act: Activation) -> Result<(f64, f64)> {
+        match self {
+            Self::Native(_) => {
+                let mlp = Mlp::new(dims_of(ws, x), act)?;
+                let loss = mlp.loss(ws, x, y);
+                let (c, _) = mlp.accuracy_counts(ws, x, y);
+                Ok((loss, c as f64))
+            }
+            Self::Pjrt(p) => p.eval(ws, x, y),
+        }
+    }
+
+    /// `(Σ hinge, per-layer grads)` on a shard (baseline substrate).
+    pub fn loss_grad(
+        &mut self,
+        ws: &[Matrix],
+        x: &Matrix,
+        y: &Matrix,
+        act: Activation,
+    ) -> Result<(f64, Vec<Matrix>)> {
+        match self {
+            Self::Native(_) => {
+                let mlp = Mlp::new(dims_of(ws, x), act)?;
+                Ok(mlp.loss_grad(ws, x, y))
+            }
+            Self::Pjrt(p) => p.loss_grad(ws, x, y),
+        }
+    }
+
+    pub fn is_native(&self) -> bool {
+        matches!(self, Self::Native(_))
+    }
+}
+
+fn dims_of(ws: &[Matrix], x: &Matrix) -> Vec<usize> {
+    let mut dims = vec![x.rows()];
+    for w in ws {
+        dims.push(w.rows());
+    }
+    dims
+}
+
+impl PjrtBackend {
+    pub fn new(artifacts_dir: &str, config: &str) -> Result<Self> {
+        Ok(PjrtBackend { ctx: RuntimeContext::new(artifacts_dir, config)? })
+    }
+
+    pub fn executions(&self) -> u64 {
+        self.ctx.executions
+    }
+
+    fn tile(&self) -> usize {
+        self.ctx.tile()
+    }
+
+    /// Split `n` columns into `tile`-wide ranges (last one short).
+    fn tiles(&self, n: usize) -> Vec<(usize, usize)> {
+        let t = self.tile();
+        let mut out = Vec::with_capacity(n.div_ceil(t));
+        let mut c0 = 0;
+        while c0 < n {
+            out.push((c0, (c0 + t).min(n)));
+            c0 += t;
+        }
+        if out.is_empty() {
+            out.push((0, 0)); // degenerate empty shard: one zero tile
+        }
+        out
+    }
+
+    /// Pad a column slice up to the tile width.
+    fn padded(&self, m: &Matrix, c0: usize, c1: usize) -> Matrix {
+        let slice = m.col_range(c0, c1);
+        if slice.cols() == self.tile() {
+            slice
+        } else {
+            slice.pad_cols(self.tile())
+        }
+    }
+
+    pub fn gram(&mut self, l: usize, z: &Matrix, a_prev: &Matrix) -> Result<(Matrix, Matrix)> {
+        let op = format!("gram_{l}");
+        let mut zat = Matrix::zeros(z.rows(), a_prev.rows());
+        let mut aat = Matrix::zeros(a_prev.rows(), a_prev.rows());
+        for (c0, c1) in self.tiles(z.cols()) {
+            let zt = self.padded(z, c0, c1);
+            let at = self.padded(a_prev, c0, c1);
+            let out = self.ctx.run(&op, &[&zt, &at])?;
+            anyhow::ensure!(out.len() == 2, "gram returned {} outputs", out.len());
+            let mut it = out.into_iter();
+            zat.add_assign(&it.next().unwrap());
+            aat.add_assign(&it.next().unwrap());
+        }
+        Ok((zat, aat))
+    }
+
+    pub fn zat_only(&mut self, l: usize, z: &Matrix, a_prev: &Matrix) -> Result<Matrix> {
+        let op = format!("zat_{l}");
+        let mut zat = Matrix::zeros(z.rows(), a_prev.rows());
+        for (c0, c1) in self.tiles(z.cols()) {
+            let zt = self.padded(z, c0, c1);
+            let at = self.padded(a_prev, c0, c1);
+            let out = self.ctx.run(&op, &[&zt, &at])?;
+            zat.add_assign(&out[0]);
+        }
+        Ok(zat)
+    }
+
+    pub fn a_update(
+        &mut self,
+        l: usize,
+        minv: &Matrix,
+        w_next: &Matrix,
+        z_next: &Matrix,
+        z_l: &Matrix,
+    ) -> Result<Matrix> {
+        let op = format!("a_update_{l}");
+        let n = z_l.cols();
+        let mut a = Matrix::zeros(z_l.rows(), n);
+        for (c0, c1) in self.tiles(n) {
+            let zn = self.padded(z_next, c0, c1);
+            let zl = self.padded(z_l, c0, c1);
+            let out = self.ctx.run(&op, &[minv, w_next, &zn, &zl])?;
+            a.paste_cols(c0, &out[0].col_range(0, c1 - c0));
+        }
+        Ok(a)
+    }
+
+    pub fn z_hidden(&mut self, l: usize, w: &Matrix, a_prev: &Matrix, a: &Matrix) -> Result<Matrix> {
+        let op = format!("z_hidden_{l}");
+        let n = a.cols();
+        let mut z = Matrix::zeros(a.rows(), n);
+        for (c0, c1) in self.tiles(n) {
+            let ap = self.padded(a_prev, c0, c1);
+            let at = self.padded(a, c0, c1);
+            let out = self.ctx.run(&op, &[w, &ap, &at])?;
+            z.paste_cols(c0, &out[0].col_range(0, c1 - c0));
+        }
+        Ok(z)
+    }
+
+    pub fn z_out(
+        &mut self,
+        w: &Matrix,
+        a_prev: &Matrix,
+        y: &Matrix,
+        lam: &Matrix,
+    ) -> Result<(Matrix, Matrix)> {
+        let n = y.cols();
+        let mut z = Matrix::zeros(y.rows(), n);
+        let mut m = Matrix::zeros(y.rows(), n);
+        for (c0, c1) in self.tiles(n) {
+            let ap = self.padded(a_prev, c0, c1);
+            let yt = self.padded(y, c0, c1);
+            let lt = self.padded(lam, c0, c1);
+            let out = self.ctx.run("z_out", &[w, &ap, &yt, &lt])?;
+            z.paste_cols(c0, &out[0].col_range(0, c1 - c0));
+            m.paste_cols(c0, &out[1].col_range(0, c1 - c0));
+        }
+        Ok((z, m))
+    }
+
+    pub fn lambda_update(&mut self, lam: &mut Matrix, z: &Matrix, m: &Matrix) -> Result<()> {
+        let n = lam.cols();
+        let mut out_lam = Matrix::zeros(lam.rows(), n);
+        for (c0, c1) in self.tiles(n) {
+            let lt = self.padded(lam, c0, c1);
+            let zt = self.padded(z, c0, c1);
+            let mt = self.padded(m, c0, c1);
+            let out = self.ctx.run("lambda_update", &[&lt, &zt, &mt])?;
+            out_lam.paste_cols(c0, &out[0].col_range(0, c1 - c0));
+        }
+        *lam = out_lam;
+        Ok(())
+    }
+
+    fn mask(&self, real: usize) -> Matrix {
+        Matrix::from_fn(1, self.tile(), |_, c| if c < real { 1.0 } else { 0.0 })
+    }
+
+    pub fn eval(&mut self, ws: &[Matrix], x: &Matrix, y: &Matrix) -> Result<(f64, f64)> {
+        let n = x.cols();
+        let mut loss = 0.0f64;
+        let mut correct = 0.0f64;
+        for (c0, c1) in self.tiles(n) {
+            let xt = self.padded(x, c0, c1);
+            let yt = self.padded(y, c0, c1);
+            let mask = self.mask(c1 - c0);
+            let mut ins: Vec<&Matrix> = ws.iter().collect();
+            ins.push(&xt);
+            ins.push(&yt);
+            ins.push(&mask);
+            let out = self.ctx.run("eval", &ins)?;
+            loss += out[0].at(0, 0) as f64;
+            correct += out[1].at(0, 0) as f64;
+        }
+        Ok((loss, correct))
+    }
+
+    pub fn loss_grad(&mut self, ws: &[Matrix], x: &Matrix, y: &Matrix) -> Result<(f64, Vec<Matrix>)> {
+        let n = x.cols();
+        let mut loss = 0.0f64;
+        let mut grads: Vec<Matrix> =
+            ws.iter().map(|w| Matrix::zeros(w.rows(), w.cols())).collect();
+        for (c0, c1) in self.tiles(n) {
+            let xt = self.padded(x, c0, c1);
+            let yt = self.padded(y, c0, c1);
+            let mask = self.mask(c1 - c0);
+            let mut ins: Vec<&Matrix> = ws.iter().collect();
+            ins.push(&xt);
+            ins.push(&yt);
+            ins.push(&mask);
+            let out = self.ctx.run("loss_grad", &ins)?;
+            loss += out[0].at(0, 0) as f64;
+            for (g, o) in grads.iter_mut().zip(&out[1..]) {
+                g.add_assign(o);
+            }
+        }
+        Ok((loss, grads))
+    }
+
+    /// Raw scores z_L for a (possibly padded) input panel.
+    pub fn predict(&mut self, ws: &[Matrix], x: &Matrix) -> Result<Matrix> {
+        let n = x.cols();
+        let f_out = ws.last().map(|w| w.rows()).unwrap_or(1);
+        let mut z = Matrix::zeros(f_out, n);
+        for (c0, c1) in self.tiles(n) {
+            let xt = self.padded(x, c0, c1);
+            let mut ins: Vec<&Matrix> = ws.iter().collect();
+            ins.push(&xt);
+            let out = self.ctx.run("predict", &ins)?;
+            z.paste_cols(c0, &out[0].col_range(0, c1 - c0));
+        }
+        Ok(z)
+    }
+}

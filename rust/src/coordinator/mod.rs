@@ -1,0 +1,22 @@
+//! The ADMM coordinator — the paper's system contribution (Algorithm 1 +
+//! the §5 data-parallel schedule), as a leader/worker architecture:
+//!
+//! * `updates` — the closed-form minimization sub-steps, rust-native
+//!   (twin of the L1 Pallas kernels; also the classical-ADMM ablation math);
+//! * `backend` — per-worker numeric backend: `Native` (pure rust) or
+//!   `Pjrt` (the AOT JAX/Pallas artifacts via the runtime);
+//! * `worker` — persistent worker threads (simulated MPI ranks) owning
+//!   activation/output/multiplier shards and a thread-affine backend;
+//! * `trainer` — the leader: drives Algorithm 1, performs the
+//!   transpose-reduction weight update, tracks convergence and traffic,
+//!   and calibrates the scaling profile used by figs 1a/2a.
+
+mod backend;
+pub mod recurrent;
+mod trainer;
+pub mod updates;
+mod worker;
+
+pub use backend::{BackendKind, NativeBackend, PjrtBackend, WorkerBackendImpl};
+pub use trainer::{expand_labels, AdmmTrainer, TrainOutcome, TrainStats};
+pub use worker::{Cmd, Resp, WorkerPool};

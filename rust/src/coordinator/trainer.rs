@@ -1,0 +1,338 @@
+//! The leader: Algorithm 1 over the worker pool.
+//!
+//! Per iteration, for each layer `l = 1…L`:
+//!   1. workers reduce their local Gram pairs (transpose reduction, §5) —
+//!      the ONLY inter-rank communication of the algorithm;
+//!   2. the leader solves `W_l = (Z Aᵀ)(A Aᵀ + εI)⁻¹` (ridge-guarded
+//!      pseudoinverse) and, for hidden layers, factors the shard-
+//!      independent `(β W_{l+1}ᵀ W_{l+1} + γI)⁻¹`;
+//!   3. workers run the embarrassingly parallel `a_l` / `z_l` updates.
+//! The output layer runs the hinge-prox `z_L` update and, past warm-up,
+//! the Bregman multiplier step (§4).
+//!
+//! The trainer also produces the calibrated `ScalingProfile` (measured
+//! compute/leader seconds + exact collective byte counts) that figs 1a/2a
+//! extrapolate with the α–β cost model.
+
+use crate::cluster::{CostModel, ScalingProfile};
+use crate::config::{Backend, MultiplierMode, TrainConfig};
+use crate::coordinator::worker::WorkerPool;
+use crate::data::Dataset;
+use crate::linalg::{a_update_inverse, weight_solve, Matrix};
+use crate::metrics::{CurvePoint, Recorder, Stopwatch};
+use crate::nn::Mlp;
+use crate::Result;
+
+/// Accumulated measurements of one training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainStats {
+    /// Pure optimization seconds (paper §7 convention: excludes eval/IO).
+    pub opt_seconds: f64,
+    /// Leader-side dense solve seconds.
+    pub leader_seconds: f64,
+    /// Worker-phase wall seconds (max over ranks, as observed by leader).
+    pub worker_seconds: f64,
+    pub iters_run: usize,
+    /// Bytes a real cluster would allreduce per iteration (Gram pairs).
+    pub allreduce_bytes_per_iter: usize,
+    /// Bytes broadcast per iteration (W_l, minv matrices).
+    pub broadcast_bytes_per_iter: usize,
+}
+
+/// Result of `AdmmTrainer::train`.
+pub struct TrainOutcome {
+    pub weights: Vec<Matrix>,
+    pub recorder: Recorder,
+    pub stats: TrainStats,
+    /// Iteration at which `target_acc` was first met (if requested & met).
+    pub reached_target_at: Option<(usize, f64)>,
+}
+
+/// Leader/driver for ADMM training (the paper's system contribution).
+pub struct AdmmTrainer {
+    cfg: TrainConfig,
+    pool: WorkerPool,
+    weights: Vec<Matrix>,
+    prev_weights: Option<Vec<Matrix>>,
+    test_x: Matrix,
+    test_y: Matrix,
+    eval_mlp: Mlp,
+    /// Stop as soon as test accuracy reaches this (time-to-accuracy runs).
+    pub target_acc: Option<f64>,
+    /// Record feasibility penalties each eval (costs one extra phase).
+    pub track_penalty: bool,
+    pub verbose: bool,
+}
+
+impl AdmmTrainer {
+    /// Shard `train` over the configured workers; `test` is leader-side.
+    pub fn new(cfg: TrainConfig, train: &Dataset, test: &Dataset) -> Result<AdmmTrainer> {
+        cfg.validate()?;
+        anyhow::ensure!(
+            train.features() == cfg.dims[0],
+            "dataset has {} features, config dims[0] = {}",
+            train.features(),
+            cfg.dims[0]
+        );
+        if cfg.backend == Backend::Pjrt {
+            // Fail fast on artifact drift before threads spin up.
+            let manifest = crate::runtime::Manifest::load(&cfg.artifacts_dir)?;
+            manifest.validate_train_config(&cfg)?;
+        }
+        if cfg.multiplier_mode == MultiplierMode::Classical {
+            anyhow::ensure!(
+                cfg.backend == Backend::Native,
+                "classical ADMM ablation requires --backend native"
+            );
+        }
+        let d_l = *cfg.dims.last().unwrap();
+        let y_exp = expand_labels(&train.y, d_l);
+        let pool = WorkerPool::new(&cfg, &train.x, &y_exp)?;
+        let weights: Vec<Matrix> = (0..cfg.layers())
+            .map(|l| Matrix::zeros(cfg.dims[l + 1], cfg.dims[l]))
+            .collect();
+        let eval_mlp = Mlp::new(cfg.dims.clone(), cfg.act)?;
+        Ok(AdmmTrainer {
+            test_x: test.x.clone(),
+            test_y: expand_labels(&test.y, d_l),
+            pool,
+            weights,
+            prev_weights: None,
+            eval_mlp,
+            target_acc: None,
+            track_penalty: false,
+            verbose: false,
+            cfg,
+        })
+    }
+
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    pub fn weights(&self) -> &[Matrix] {
+        &self.weights
+    }
+
+    /// One full Algorithm-1 sweep. Returns leader-solve seconds.
+    fn iteration(&mut self, it: usize) -> Result<f64> {
+        let layers = self.cfg.layers();
+        let past_warmup = it >= self.cfg.warmup_iters;
+        let mut leader_s = 0.0;
+
+        for l in 1..=layers {
+            // (1) transpose-reduction Gram reduce
+            let (zat, aat) = self.pool.gram_reduce(l)?;
+
+            // (2) leader solves
+            let sw = Stopwatch::start();
+            let w_solved = weight_solve(&zat, &aat, self.cfg.ridge)?;
+            let w_new = self.apply_momentum(l - 1, w_solved);
+            let minv = if l < layers {
+                // uses the OLD W_{l+1} (updated later this sweep) — exactly
+                // Algorithm 1's in-place sequencing.
+                Some(a_update_inverse(&self.weights[l], self.cfg.beta, self.cfg.gamma)?)
+            } else {
+                None
+            };
+            leader_s += sw.elapsed_s();
+
+            // (3) worker phases
+            if l < layers {
+                let w_next_old = self.weights[l].clone();
+                self.pool.a_update(l, minv.as_ref().unwrap(), &w_next_old)?;
+                self.weights[l - 1] = w_new;
+                self.pool.z_hidden(l, &self.weights[l - 1])?;
+            } else {
+                self.weights[l - 1] = w_new;
+                let update_lambda =
+                    past_warmup && self.cfg.multiplier_mode == MultiplierMode::Bregman;
+                self.pool.z_out(&self.weights[l - 1], update_lambda)?;
+            }
+        }
+
+        if past_warmup && self.cfg.multiplier_mode == MultiplierMode::Classical {
+            self.pool.update_duals(&self.weights)?;
+        }
+        Ok(leader_s)
+    }
+
+    fn apply_momentum(&mut self, idx: usize, w_new: Matrix) -> Matrix {
+        if self.cfg.momentum == 0.0 {
+            return w_new;
+        }
+        // Heavy-ball on the weight sequence (paper §8.1 extension):
+        // W ← W_new + μ (W_new − W_prev).
+        let out = match &self.prev_weights {
+            Some(prev) if prev[idx].shape() == w_new.shape() && !prev[idx].is_empty() => {
+                let mut out = w_new.clone();
+                let mut delta = w_new.clone();
+                delta.sub_assign(&prev[idx]);
+                out.axpy(self.cfg.momentum, &delta);
+                out
+            }
+            _ => w_new.clone(),
+        };
+        if self.prev_weights.is_none() {
+            self.prev_weights = Some(
+                self.weights
+                    .iter()
+                    .map(|w| Matrix::zeros(w.rows(), w.cols()))
+                    .collect(),
+            );
+        }
+        self.prev_weights.as_mut().unwrap()[idx] = w_new;
+        out
+    }
+
+    /// Leader-side test evaluation (native math; independent of backend).
+    pub fn test_accuracy(&self) -> f64 {
+        self.eval_mlp.accuracy(&self.weights, &self.test_x, &self.test_y)
+    }
+
+    /// Full training loop; records a convergence curve.
+    pub fn train(&mut self) -> Result<TrainOutcome> {
+        let mut recorder = Recorder::new(format!(
+            "admm_{}_{}w_{}",
+            self.cfg.name,
+            self.cfg.workers,
+            self.cfg.backend.name()
+        ));
+        let mut stats = TrainStats {
+            allreduce_bytes_per_iter: self.allreduce_bytes_per_iter(),
+            broadcast_bytes_per_iter: self.broadcast_bytes_per_iter(),
+            ..TrainStats::default()
+        };
+        let mut reached: Option<(usize, f64)> = None;
+        let mut opt_s = 0.0f64;
+
+        for it in 0..self.cfg.iters {
+            let sw = Stopwatch::start();
+            let leader_s = self.iteration(it)?;
+            let iter_s = sw.elapsed_s();
+            opt_s += iter_s;
+            stats.leader_seconds += leader_s;
+            stats.worker_seconds += iter_s - leader_s;
+            stats.iters_run = it + 1;
+
+            if it % self.cfg.eval_every == 0 || it + 1 == self.cfg.iters {
+                let acc = self.test_accuracy();
+                let (train_loss, _train_acc) = self.pool.eval_train(&self.weights)?;
+                let penalty = if self.track_penalty {
+                    let (eq_z, eq_a) = self.pool.penalties(&self.weights)?;
+                    eq_z + eq_a
+                } else {
+                    f64::NAN
+                };
+                recorder.push(CurvePoint {
+                    iter: it,
+                    wall_s: opt_s,
+                    train_loss,
+                    test_acc: acc,
+                    penalty,
+                });
+                if self.verbose {
+                    eprintln!(
+                        "[admm {}] iter {it:4}  t={opt_s:8.3}s  loss={train_loss:.4}  \
+                         acc={acc:.4}{}",
+                        self.cfg.name,
+                        if penalty.is_nan() {
+                            String::new()
+                        } else {
+                            format!("  penalty={penalty:.3e}")
+                        }
+                    );
+                }
+                if let Some(t) = self.target_acc {
+                    if acc >= t && reached.is_none() {
+                        reached = Some((it, opt_s));
+                        break;
+                    }
+                }
+            }
+        }
+        stats.opt_seconds = opt_s;
+        Ok(TrainOutcome {
+            weights: self.weights.clone(),
+            recorder,
+            stats,
+            reached_target_at: reached,
+        })
+    }
+
+    /// Exact per-iteration allreduce traffic: Σ_l |z aᵀ| + |a aᵀ| floats.
+    pub fn allreduce_bytes_per_iter(&self) -> usize {
+        let d = &self.cfg.dims;
+        (1..d.len()).map(|l| 4 * (d[l] * d[l - 1] + d[l - 1] * d[l - 1])).sum()
+    }
+
+    /// Per-iteration broadcast traffic: W_l everywhere + minv per hidden.
+    pub fn broadcast_bytes_per_iter(&self) -> usize {
+        let d = &self.cfg.dims;
+        let w: usize = (1..d.len()).map(|l| 4 * d[l] * d[l - 1]).sum();
+        let minv: usize = (1..d.len() - 1).map(|l| 4 * d[l] * d[l]).sum();
+        w + minv
+    }
+
+    /// Calibrated scaling profile from a finished run (figs 1a/2a input).
+    pub fn scaling_profile(
+        &self,
+        stats: &TrainStats,
+        cols_total: usize,
+        iters_to_threshold: usize,
+        cost: CostModel,
+    ) -> ScalingProfile {
+        let per_iter_worker = stats.worker_seconds / stats.iters_run.max(1) as f64;
+        // `workers` ranks each processed cols/workers columns concurrently:
+        // one core would take workers× the observed phase wall per column.
+        let compute_col_s = per_iter_worker * self.cfg.workers as f64 / cols_total as f64;
+        ScalingProfile {
+            cols_total,
+            compute_col_s,
+            leader_s: stats.leader_seconds / stats.iters_run.max(1) as f64,
+            allreduce_bytes: stats.allreduce_bytes_per_iter,
+            broadcast_bytes: stats.broadcast_bytes_per_iter,
+            iters_to_threshold,
+            cost,
+        }
+    }
+}
+
+/// Replicate a (1 × n) label row to (rows × n) — output layers with more
+/// than one unit supervise every unit with the same binary target (used by
+/// the tiny integration-test nets; the paper's nets have d_L = 1).
+pub fn expand_labels(y: &Matrix, rows: usize) -> Matrix {
+    assert_eq!(y.rows(), 1, "labels must be a row vector");
+    if rows == 1 {
+        return y.clone();
+    }
+    Matrix::from_fn(rows, y.cols(), |_, c| y.at(0, c))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expand_labels_replicates() {
+        let y = Matrix::from_vec(1, 3, vec![1.0, 0.0, 1.0]);
+        let e = expand_labels(&y, 2);
+        assert_eq!(e.shape(), (2, 3));
+        assert_eq!(e.row(0), e.row(1));
+    }
+
+    #[test]
+    fn traffic_formulas() {
+        let cfg = TrainConfig {
+            dims: vec![4, 3, 2],
+            ..TrainConfig::default()
+        };
+        let d = crate::data::blobs(4, 20, 2.0, 0);
+        let (train, test) = d.split_test(5);
+        let t = AdmmTrainer::new(cfg, &train, &test).unwrap();
+        // allreduce: (3*4 + 4*4) + (2*3 + 3*3) = 28 + 15 = 43 floats
+        assert_eq!(t.allreduce_bytes_per_iter(), 4 * 43);
+        // broadcast: W (3*4 + 2*3 = 18) + minv (3*3) = 27 floats
+        assert_eq!(t.broadcast_bytes_per_iter(), 4 * 27);
+    }
+}

@@ -1,0 +1,332 @@
+//! Closed-form minimization sub-steps (paper §3.1), rust-native.
+//!
+//! This is the exact twin of the L1 Pallas kernels in
+//! `python/compile/kernels/` — same piecewise case analysis, same
+//! tie-breaking direction (`<=` keeps the "active" piece).  The integration
+//! test `integration_runtime.rs` asserts the two implementations agree on
+//! every op, which is what lets the native path serve as the oracle for
+//! the artifacts and the backend for γ/β sweeps.
+
+use crate::config::Activation;
+use crate::linalg::{gemm_nn, gemm_nt, Matrix};
+
+/// Entry-wise objective of the hidden z-update (eq. 7).
+#[inline(always)]
+fn zh_obj(a: f32, z: f32, h_z: f32, gamma: f32, beta: f32, m: f32) -> f32 {
+    gamma * (a - h_z) * (a - h_z) + beta * (z - m) * (z - m)
+}
+
+/// Globally optimal scalar solve of eq. (7) for one entry.
+#[inline(always)]
+pub fn z_hidden_scalar(a: f32, m: f32, gamma: f32, beta: f32, act: Activation) -> f32 {
+    match act {
+        Activation::Relu => {
+            let z_pos = ((gamma * a + beta * m) / (gamma + beta)).max(0.0);
+            let v_pos = zh_obj(a, z_pos, z_pos, gamma, beta, m);
+            let z_neg = m.min(0.0);
+            let v_neg = zh_obj(a, z_neg, 0.0, gamma, beta, m);
+            if v_pos <= v_neg {
+                z_pos
+            } else {
+                z_neg
+            }
+        }
+        Activation::HardSigmoid => {
+            let z0 = m.min(0.0);
+            let v0 = zh_obj(a, z0, 0.0, gamma, beta, m);
+            let z1 = ((gamma * a + beta * m) / (gamma + beta)).clamp(0.0, 1.0);
+            let v1 = zh_obj(a, z1, z1, gamma, beta, m);
+            let z2 = m.max(1.0);
+            let v2 = zh_obj(a, z2, 1.0, gamma, beta, m);
+            let (mut z, mut v) = if v1 <= v0 { (z1, v1) } else { (z0, v0) };
+            if v2 < v {
+                z = z2;
+                v = v2;
+            }
+            let _ = v;
+            z
+        }
+    }
+}
+
+/// Hidden-layer z-update over a panel: `argmin γ‖a−h(z)‖² + β‖z−m‖²`.
+pub fn z_hidden(a: &Matrix, m: &Matrix, gamma: f32, beta: f32, act: Activation) -> Matrix {
+    assert_eq!(a.shape(), m.shape());
+    let mut out = Matrix::zeros(a.rows(), a.cols());
+    for ((o, &av), &mv) in out
+        .as_mut_slice()
+        .iter_mut()
+        .zip(a.as_slice())
+        .zip(m.as_slice())
+    {
+        *o = z_hidden_scalar(av, mv, gamma, beta, act);
+    }
+    out
+}
+
+/// Paper §6 separable hinge, entry-wise.
+#[inline(always)]
+pub fn hinge(z: f32, y: f32) -> f32 {
+    if y > 0.5 {
+        (1.0 - z).max(0.0)
+    } else {
+        z.max(0.0)
+    }
+}
+
+#[inline(always)]
+fn zo_obj(z: f32, y: f32, lam: f32, beta: f32, m: f32) -> f32 {
+    hinge(z, y) + lam * z + beta * (z - m) * (z - m)
+}
+
+/// Globally optimal scalar output-layer solve:
+/// `argmin ℓ(z,y) + λz + β(z−m)²` (convex — two clamped candidates).
+#[inline(always)]
+pub fn z_out_scalar(y: f32, m: f32, lam: f32, beta: f32) -> f32 {
+    if y > 0.5 {
+        let c_hi = (m - lam / (2.0 * beta)).max(1.0);
+        let c_lo = (m + (1.0 - lam) / (2.0 * beta)).min(1.0);
+        if zo_obj(c_hi, y, lam, beta, m) <= zo_obj(c_lo, y, lam, beta, m) {
+            c_hi
+        } else {
+            c_lo
+        }
+    } else {
+        let c_hi = (m - (1.0 + lam) / (2.0 * beta)).max(0.0);
+        let c_lo = (m - lam / (2.0 * beta)).min(0.0);
+        if zo_obj(c_hi, y, lam, beta, m) <= zo_obj(c_lo, y, lam, beta, m) {
+            c_hi
+        } else {
+            c_lo
+        }
+    }
+}
+
+/// Output-layer z_L update over a panel.
+pub fn z_out(y: &Matrix, m: &Matrix, lam: &Matrix, beta: f32) -> Matrix {
+    assert_eq!(y.shape(), m.shape());
+    assert_eq!(lam.shape(), m.shape());
+    let mut out = Matrix::zeros(m.rows(), m.cols());
+    for (i, o) in out.as_mut_slice().iter_mut().enumerate() {
+        *o = z_out_scalar(
+            y.as_slice()[i],
+            m.as_slice()[i],
+            lam.as_slice()[i],
+            beta,
+        );
+    }
+    out
+}
+
+/// Activation update (eq. 6): `a = minv (β w_nextᵀ z_next + γ h(z_l))`.
+pub fn a_update(
+    minv: &Matrix,
+    w_next: &Matrix,
+    z_next: &Matrix,
+    z_l: &Matrix,
+    beta: f32,
+    gamma: f32,
+    act: Activation,
+) -> Matrix {
+    let mut rhs = crate::linalg::gemm_tn(w_next, z_next);
+    rhs.scale(beta);
+    for (r, &zv) in rhs.as_mut_slice().iter_mut().zip(z_l.as_slice()) {
+        *r += gamma * act.apply(zv);
+    }
+    gemm_nn(minv, &rhs)
+}
+
+/// Bregman multiplier update (eq. 13): `λ += β (z − m)`.
+pub fn lambda_update(lam: &mut Matrix, z: &Matrix, m: &Matrix, beta: f32) {
+    assert_eq!(lam.shape(), z.shape());
+    assert_eq!(lam.shape(), m.shape());
+    for ((l, &zv), &mv) in lam
+        .as_mut_slice()
+        .iter_mut()
+        .zip(z.as_slice())
+        .zip(m.as_slice())
+    {
+        *l += beta * (zv - mv);
+    }
+}
+
+/// Transpose-reduction Gram pair: `(z aᵀ, a aᵀ)`.
+pub fn gram(z: &Matrix, a: &Matrix) -> (Matrix, Matrix) {
+    (gemm_nt(z, a), gemm_nt(a, a))
+}
+
+/// Quadratic feasibility residuals of one shard, for telemetry:
+/// `(Σ_l β‖z_l − W_l a_{l-1}‖², Σ_l γ‖a_l − h(z_l)‖²)`.
+pub fn penalties(
+    ws: &[Matrix],
+    a0: &Matrix,
+    acts: &[Matrix],
+    zs: &[Matrix],
+    gamma: f32,
+    beta: f32,
+    act: Activation,
+) -> (f64, f64) {
+    let layers = ws.len();
+    let mut eq_z = 0.0f64;
+    let mut eq_a = 0.0f64;
+    for l in 0..layers {
+        let a_prev = if l == 0 { a0 } else { &acts[l - 1] };
+        let m = gemm_nn(&ws[l], a_prev);
+        let d = zs[l].max_abs_diff(&m); // cheap guard against shape bugs
+        debug_assert!(d.is_finite());
+        let mut s = 0.0f64;
+        for (zv, mv) in zs[l].as_slice().iter().zip(m.as_slice()) {
+            let r = (zv - mv) as f64;
+            s += r * r;
+        }
+        eq_z += beta as f64 * s;
+        if l < layers - 1 {
+            let mut s = 0.0f64;
+            for (av, zv) in acts[l].as_slice().iter().zip(zs[l].as_slice()) {
+                let r = (av - act.apply(*zv)) as f64;
+                s += r * r;
+            }
+            eq_a += gamma as f64 * s;
+        }
+    }
+    (eq_z, eq_a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+
+    /// z-update global optimality vs dense grid search (the same witness
+    /// the python suite uses against the Pallas kernels).
+    #[test]
+    fn z_hidden_beats_grid_search() {
+        forall("z_hidden optimal", 60, |g| {
+            let act = *g.pick(&[Activation::Relu, Activation::HardSigmoid]);
+            let gamma = g.f32_in(0.1, 30.0);
+            let beta = g.f32_in(0.1, 10.0);
+            let a = g.f32_in(-4.0, 4.0);
+            let m = g.f32_in(-4.0, 4.0);
+            let z = z_hidden_scalar(a, m, gamma, beta, act);
+            let obj =
+                |zv: f32| zh_obj(a, zv, act.apply(zv), gamma, beta, m);
+            let mut best = f32::INFINITY;
+            let mut i = -800;
+            while i <= 800 {
+                best = best.min(obj(i as f32 * 0.01));
+                i += 1;
+            }
+            if obj(z) <= best + 1e-3 {
+                Ok(())
+            } else {
+                Err(format!(
+                    "act={act:?} γ={gamma} β={beta} a={a} m={m}: obj(z)={} best={best}",
+                    obj(z)
+                ))
+            }
+        });
+    }
+
+    #[test]
+    fn z_out_beats_grid_search() {
+        forall("z_out optimal", 60, |g| {
+            let beta = g.f32_in(0.1, 10.0);
+            let y = if g.bool() { 1.0 } else { 0.0 };
+            let m = g.f32_in(-4.0, 4.0);
+            let lam = g.f32_in(-2.0, 2.0);
+            let z = z_out_scalar(y, m, lam, beta);
+            let obj = |zv: f32| zo_obj(zv, y, lam, beta, m);
+            let mut best = f32::INFINITY;
+            let mut i = -1000;
+            while i <= 1000 {
+                best = best.min(obj(i as f32 * 0.01));
+                i += 1;
+            }
+            if obj(z) <= best + 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("y={y} m={m} λ={lam} β={beta}: {} vs {best}", obj(z)))
+            }
+        });
+    }
+
+    #[test]
+    fn z_out_known_value() {
+        // y=1, m=0, λ=0, β=1 -> z = 0.5 (see python twin test).
+        assert!((z_out_scalar(1.0, 0.0, 0.0, 1.0) - 0.5).abs() < 1e-6);
+        // y=0, m=-2: hinge inactive, z stays at m.
+        assert!((z_out_scalar(0.0, -2.0, 0.0, 1.0) + 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lambda_update_matches_formula() {
+        let mut lam = Matrix::from_vec(1, 3, vec![0.1, -0.2, 0.0]);
+        let z = Matrix::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let m = Matrix::from_vec(1, 3, vec![0.5, 2.5, 3.0]);
+        lambda_update(&mut lam, &z, &m, 2.0);
+        let want = [0.1 + 1.0, -0.2 - 1.0, 0.0];
+        for (got, want) in lam.as_slice().iter().zip(want) {
+            assert!((got - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn a_update_solves_its_quadratic() {
+        // a* must beat perturbations in β‖z_next − W a‖² + γ‖a − h(z_l)‖².
+        forall("a_update optimal", 20, |g| {
+            let (f, fnx, n) = (g.usize_in(1, 6), g.usize_in(1, 6), g.usize_in(1, 8));
+            let w = g.matrix(fnx, f, 1.0);
+            let z_next = g.matrix(fnx, n, 1.0);
+            let z_l = g.matrix(f, n, 1.0);
+            let (gamma, beta) = (g.f32_in(0.5, 10.0), g.f32_in(0.5, 4.0));
+            let minv = crate::linalg::a_update_inverse(&w, beta, gamma).unwrap();
+            let a = a_update(&minv, &w, &z_next, &z_l, beta, gamma, Activation::Relu);
+            let obj = |am: &Matrix| {
+                let mut d = gemm_nn(&w, am);
+                d.sub_assign(&z_next);
+                let mut s = beta as f64 * (d.frob_norm() as f64).powi(2);
+                for (av, zv) in am.as_slice().iter().zip(z_l.as_slice()) {
+                    let r = (av - zv.max(0.0)) as f64;
+                    s += gamma as f64 * r * r;
+                }
+                s
+            };
+            let base = obj(&a);
+            for t in 0..6 {
+                let mut ap = a.clone();
+                let r = t % ap.rows();
+                let c = (t * 3) % ap.cols();
+                *ap.at_mut(r, c) += if t % 2 == 0 { 1e-2 } else { -1e-2 };
+                if obj(&ap) < base - 1e-6 {
+                    return Err(format!("perturbation improved objective at {t}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn penalties_zero_at_feasible_point() {
+        let act = Activation::Relu;
+        let mut g = crate::rng::Rng::seed_from(4);
+        let a0 = Matrix::randn(3, 10, &mut g);
+        let w1 = Matrix::randn(4, 3, &mut g);
+        let w2 = Matrix::randn(1, 4, &mut g);
+        let z1 = gemm_nn(&w1, &a0);
+        let mut a1 = z1.clone();
+        for v in a1.as_mut_slice() {
+            *v = act.apply(*v);
+        }
+        let z2 = gemm_nn(&w2, &a1);
+        let (eq_z, eq_a) = penalties(
+            &[w1, w2],
+            &a0,
+            std::slice::from_ref(&a1),
+            &[z1, z2],
+            10.0,
+            1.0,
+            act,
+        );
+        assert!(eq_z < 1e-6 && eq_a < 1e-6, "eq_z={eq_z} eq_a={eq_a}");
+    }
+}

@@ -1,0 +1,502 @@
+//! Persistent worker threads — the simulated MPI ranks of the paper's §5
+//! data-parallel scheme.
+//!
+//! Each worker owns the activation (`a_l`), output (`z_l`) and multiplier
+//! (`λ`, plus classical duals) shards for its column range, initialized
+//! i.i.d. Gaussian per paper §6, and a thread-affine numeric backend.  The
+//! leader drives Algorithm 1 phase-by-phase over command channels; only
+//! Gram pairs (transpose reduction) and scalar telemetry flow back.
+//!
+//! Failure injection: workers answer `Resp::Err` on any backend failure and
+//! the pool surfaces it as a typed error naming the rank, so a dead rank
+//! never deadlocks the leader.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::config::{Activation, MultiplierMode, TrainConfig};
+use crate::coordinator::backend::BackendKind;
+use crate::coordinator::updates;
+use crate::linalg::{gemm_nn, Matrix};
+use crate::rng::Rng;
+use crate::Result;
+
+/// Leader → worker commands (one Algorithm-1 phase each).
+pub enum Cmd {
+    /// Compute the local Gram pair of layer `l` (classical mode shifts z by
+    /// its dual first).
+    Gram { l: usize },
+    /// a_l ← minv (β W_{l+1}ᵀ z_{l+1} + γ h(z_l)); `w_next` is the leader's
+    /// (pre-update) W_{l+1}.
+    AUpdate { l: usize, minv: Matrix, w_next: Matrix },
+    /// z_l ← entry-wise global solve with the freshly updated `w`.
+    ZHidden { l: usize, w: Matrix },
+    /// z_L update (+ Bregman λ step when `update_lambda`).
+    ZOut { w: Matrix, update_lambda: bool },
+    /// Classical-ADMM per-constraint dual updates (ablation mode).
+    UpdateDuals { ws: Vec<Matrix> },
+    /// (Σ hinge, Σ correct, n) on this worker's training shard.
+    EvalTrain { ws: Vec<Matrix> },
+    /// Quadratic feasibility residuals of this shard.
+    Penalty { ws: Vec<Matrix> },
+    /// Baseline substrate: (Σ hinge, ∂W) on this shard.
+    LossGrad { ws: Vec<Matrix> },
+    Stop,
+}
+
+/// Worker → leader responses.
+pub enum Resp {
+    Gram { zat: Matrix, aat: Matrix },
+    Done,
+    EvalTrain { loss: f64, correct: f64, n: usize },
+    Penalty { eq_z: f64, eq_a: f64 },
+    LossGrad { loss: f64, grads: Vec<Matrix> },
+    Err(String),
+}
+
+struct WorkerState {
+    rank: usize,
+    x: Matrix,           // (d0, n) input shard
+    y: Matrix,           // (dL, n) label shard (rows replicated)
+    acts: Vec<Matrix>,   // a_1 … a_{L-1}
+    zs: Vec<Matrix>,     // z_1 … z_L
+    lam: Matrix,         // Bregman multiplier on z_L
+    /// Classical-mode duals: u_l for z_l = W_l a_{l-1}, v_l for a_l = h(z_l).
+    u: Vec<Matrix>,
+    v: Vec<Matrix>,
+    mode: MultiplierMode,
+    gamma: f32,
+    beta: f32,
+    act: Activation,
+    /// m = W_L a_{L-1} cached by the last ZOut (reused by the λ update).
+    last_m: Option<Matrix>,
+    /// Cached `a_0 a_0ᵀ` — the layer-1 input Gram never changes across
+    /// iterations (a_0 is the data), so the dominant Gram product of the
+    /// whole iteration is computed exactly once per run (§Perf).
+    aat1_cache: Option<Matrix>,
+}
+
+impl WorkerState {
+    fn a_prev(&self, l: usize) -> &Matrix {
+        if l == 1 {
+            &self.x
+        } else {
+            &self.acts[l - 2]
+        }
+    }
+
+    fn layers(&self) -> usize {
+        self.zs.len()
+    }
+}
+
+fn worker_loop(
+    mut st: WorkerState,
+    backend_kind: BackendKind,
+    rx: Receiver<Cmd>,
+    tx: Sender<Resp>,
+) {
+    let mut backend = match backend_kind.build() {
+        Ok(b) => b,
+        Err(e) => {
+            let _ = tx.send(Resp::Err(format!("rank {}: backend init: {e}", st.rank)));
+            return;
+        }
+    };
+    while let Ok(cmd) = rx.recv() {
+        let resp = handle(&mut st, &mut backend, cmd);
+        match resp {
+            Ok(Some(r)) => {
+                if tx.send(r).is_err() {
+                    return;
+                }
+            }
+            Ok(None) => return, // Stop
+            Err(e) => {
+                let _ = tx.send(Resp::Err(format!("rank {}: {e}", st.rank)));
+                return;
+            }
+        }
+    }
+}
+
+fn handle(
+    st: &mut WorkerState,
+    backend: &mut crate::coordinator::backend::WorkerBackendImpl,
+    cmd: Cmd,
+) -> Result<Option<Resp>> {
+    match cmd {
+        Cmd::Gram { l } => {
+            let z = &st.zs[l - 1];
+            if st.mode == MultiplierMode::Classical {
+                // scaled-dual least squares: fit (z + u) against a_prev
+                let mut z_eff = z.clone();
+                z_eff.add_assign(&st.u[l - 1]);
+                let (zat, aat) = backend.gram(l, &z_eff, st.a_prev(l))?;
+                return Ok(Some(Resp::Gram { zat, aat }));
+            }
+            // Layer 1: a_prev = a_0 = the (constant) data — reuse its Gram.
+            let (zat, aat) = if l == 1 {
+                if let Some(cached) = &st.aat1_cache {
+                    (backend.zat_only(l, z, st.a_prev(l))?, cached.clone())
+                } else {
+                    let (zat, aat) = backend.gram(l, z, st.a_prev(l))?;
+                    st.aat1_cache = Some(aat.clone());
+                    (zat, aat)
+                }
+            } else {
+                backend.gram(l, z, st.a_prev(l))?
+            };
+            Ok(Some(Resp::Gram { zat, aat }))
+        }
+        Cmd::AUpdate { l, minv, w_next } => {
+            let a = if st.mode == MultiplierMode::Classical {
+                // native-only math with dual shifts (see backend.rs docs)
+                anyhow::ensure!(
+                    backend.is_native(),
+                    "classical ADMM ablation requires --backend native"
+                );
+                let mut z_next_eff = st.zs[l].clone();
+                z_next_eff.add_assign(&st.u[l]);
+                // rhs h-term: γ (h(z_l) − v_l)
+                let mut rhs = crate::linalg::gemm_tn(&w_next, &z_next_eff);
+                rhs.scale(st.beta);
+                for i in 0..rhs.len() {
+                    let h = st.act.apply(st.zs[l - 1].as_slice()[i]);
+                    rhs.as_mut_slice()[i] += st.gamma * (h - st.v[l - 1].as_slice()[i]);
+                }
+                gemm_nn(&minv, &rhs)
+            } else {
+                backend.a_update(l, &minv, &w_next, &st.zs[l], &st.zs[l - 1])?
+            };
+            st.acts[l - 1] = a;
+            Ok(Some(Resp::Done))
+        }
+        Cmd::ZHidden { l, w } => {
+            let z = if st.mode == MultiplierMode::Classical {
+                // min γ‖(a+v) − h(z)‖² + β‖z − (W a_prev − u)‖²
+                let mut a_eff = st.acts[l - 1].clone();
+                a_eff.add_assign(&st.v[l - 1]);
+                let mut m = gemm_nn(&w, st.a_prev(l));
+                m.sub_assign(&st.u[l - 1]);
+                updates::z_hidden(&a_eff, &m, st.gamma, st.beta, st.act)
+            } else {
+                backend.z_hidden(l, &w, st.a_prev(l), &st.acts[l - 1])?
+            };
+            st.zs[l - 1] = z;
+            Ok(Some(Resp::Done))
+        }
+        Cmd::ZOut { w, update_lambda } => {
+            let ll = st.layers();
+            let (z, m) = if st.mode == MultiplierMode::Classical {
+                let mut m = gemm_nn(&w, st.a_prev(ll));
+                m.sub_assign(&st.u[ll - 1]);
+                let zero = Matrix::zeros(st.y.rows(), st.y.cols());
+                let z = updates::z_out(&st.y, &m, &zero, st.beta);
+                let m_true = gemm_nn(&w, st.a_prev(ll));
+                (z, m_true)
+            } else {
+                backend.z_out(&w, st.a_prev(ll), &st.y, &st.lam)?
+            };
+            st.zs[ll - 1] = z;
+            if update_lambda && st.mode == MultiplierMode::Bregman {
+                let z = st.zs[ll - 1].clone();
+                backend.lambda_update(&mut st.lam, &z, &m)?;
+            }
+            st.last_m = Some(m);
+            Ok(Some(Resp::Done))
+        }
+        Cmd::UpdateDuals { ws } => {
+            anyhow::ensure!(
+                st.mode == MultiplierMode::Classical,
+                "UpdateDuals only valid in classical mode"
+            );
+            for l in 1..=st.layers() {
+                // u_l += z_l − W_l a_{l-1}
+                let m = gemm_nn(&ws[l - 1], st.a_prev(l));
+                for i in 0..st.u[l - 1].len() {
+                    st.u[l - 1].as_mut_slice()[i] +=
+                        st.zs[l - 1].as_slice()[i] - m.as_slice()[i];
+                }
+                // v_l += a_l − h(z_l)  (hidden layers)
+                if l < st.layers() {
+                    for i in 0..st.v[l - 1].len() {
+                        let h = st.act.apply(st.zs[l - 1].as_slice()[i]);
+                        st.v[l - 1].as_mut_slice()[i] += st.acts[l - 1].as_slice()[i] - h;
+                    }
+                }
+            }
+            Ok(Some(Resp::Done))
+        }
+        Cmd::EvalTrain { ws } => {
+            let (loss, correct) = backend.eval(&ws, &st.x, &st.y, st.act)?;
+            Ok(Some(Resp::EvalTrain { loss, correct, n: st.x.cols() * st.y.rows() }))
+        }
+        Cmd::Penalty { ws } => {
+            let (eq_z, eq_a) =
+                updates::penalties(&ws, &st.x, &st.acts, &st.zs, st.gamma, st.beta, st.act);
+            Ok(Some(Resp::Penalty { eq_z, eq_a }))
+        }
+        Cmd::LossGrad { ws } => {
+            let (loss, grads) = backend.loss_grad(&ws, &st.x, &st.y, st.act)?;
+            Ok(Some(Resp::LossGrad { loss, grads }))
+        }
+        Cmd::Stop => Ok(None),
+    }
+}
+
+/// Leader-side handle to the worker ranks.
+pub struct WorkerPool {
+    txs: Vec<Sender<Cmd>>,
+    rxs: Vec<Receiver<Resp>>,
+    handles: Vec<JoinHandle<()>>,
+    n_workers: usize,
+    shard_cols: Vec<usize>,
+}
+
+impl WorkerPool {
+    /// Shard `x`/`y` over `cfg.workers` ranks and launch the threads.
+    /// `y` must already be expanded to (d_L × n).
+    pub fn new(cfg: &TrainConfig, x: &Matrix, y: &Matrix) -> Result<WorkerPool> {
+        anyhow::ensure!(x.cols() == y.cols(), "x/y column mismatch");
+        anyhow::ensure!(y.rows() == *cfg.dims.last().unwrap(), "y rows != d_L");
+        let shards = crate::data::shard_ranges(x.cols(), cfg.workers);
+        let backend_kind = BackendKind::from_config(cfg);
+        let layers = cfg.layers();
+
+        let mut txs = Vec::new();
+        let mut rxs = Vec::new();
+        let mut handles = Vec::new();
+        let mut shard_cols = Vec::new();
+        for shard in shards {
+            let (ctx, crx) = channel::<Cmd>();
+            let (rtx, rrx) = channel::<Resp>();
+            let n = shard.len();
+            shard_cols.push(n);
+            let mut rng = Rng::stream(cfg.seed, 1000 + shard.rank as u64);
+            let x_shard = x.col_range(shard.c0, shard.c1);
+            let (acts, zs) = match cfg.init {
+                // Paper §6: i.i.d. unit Gaussians.
+                crate::config::InitScheme::Gaussian => (
+                    (1..layers)
+                        .map(|l| Matrix::randn(cfg.dims[l], n, &mut rng))
+                        .collect::<Vec<_>>(),
+                    (1..=layers)
+                        .map(|l| Matrix::randn(cfg.dims[l], n, &mut rng))
+                        .collect::<Vec<_>>(),
+                ),
+                // Forward-consistent init: propagate the shard through
+                // shared random weights (same stream on every rank so the
+                // implied global network is consistent).
+                crate::config::InitScheme::Forward => {
+                    let mut wrng = Rng::stream(cfg.seed, 500);
+                    let mlp = crate::nn::Mlp::new(cfg.dims.clone(), cfg.act)
+                        .expect("validated dims");
+                    let ws = mlp.init_weights(&mut wrng);
+                    let mut acts = Vec::with_capacity(layers - 1);
+                    let mut zs = Vec::with_capacity(layers);
+                    let mut a = x_shard.clone();
+                    for (l, w) in ws.iter().enumerate() {
+                        let z = crate::linalg::gemm_nn(w, &a);
+                        zs.push(z.clone());
+                        if l + 1 < layers {
+                            let mut h = z;
+                            for v in h.as_mut_slice() {
+                                *v = cfg.act.apply(*v);
+                            }
+                            acts.push(h.clone());
+                            a = h;
+                        }
+                    }
+                    (acts, zs)
+                }
+            };
+            let st = WorkerState {
+                rank: shard.rank,
+                x: x_shard,
+                y: y.col_range(shard.c0, shard.c1),
+                acts,
+                zs,
+                lam: Matrix::zeros(*cfg.dims.last().unwrap(), n),
+                u: (1..=layers).map(|l| Matrix::zeros(cfg.dims[l], n)).collect(),
+                v: (1..layers).map(|l| Matrix::zeros(cfg.dims[l], n)).collect(),
+                mode: cfg.multiplier_mode,
+                gamma: cfg.gamma,
+                beta: cfg.beta,
+                act: cfg.act,
+                last_m: None,
+                aat1_cache: None,
+            };
+            let kind = backend_kind.clone();
+            handles.push(std::thread::spawn(move || worker_loop(st, kind, crx, rtx)));
+            txs.push(ctx);
+            rxs.push(rrx);
+        }
+        Ok(WorkerPool { txs, rxs, handles, n_workers: cfg.workers, shard_cols })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    pub fn shard_cols(&self) -> &[usize] {
+        &self.shard_cols
+    }
+
+    fn send_all(&self, mk: impl Fn(usize) -> Cmd) -> Result<()> {
+        for (rank, tx) in self.txs.iter().enumerate() {
+            tx.send(mk(rank))
+                .map_err(|_| anyhow::anyhow!("rank {rank} died (channel closed)"))?;
+        }
+        Ok(())
+    }
+
+    fn recv_all(&self) -> Result<Vec<Resp>> {
+        let mut out = Vec::with_capacity(self.n_workers);
+        for (rank, rx) in self.rxs.iter().enumerate() {
+            match rx.recv() {
+                Ok(Resp::Err(e)) => anyhow::bail!("worker failure: {e}"),
+                Ok(r) => out.push(r),
+                Err(_) => anyhow::bail!("rank {rank} died without responding"),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Gram phase + reduction: returns Σ over ranks of (z aᵀ, a aᵀ).
+    /// Reduction is in rank order (deterministic for fixed worker count).
+    pub fn gram_reduce(&self, l: usize) -> Result<(Matrix, Matrix)> {
+        self.send_all(|_| Cmd::Gram { l })?;
+        let mut zat: Option<Matrix> = None;
+        let mut aat: Option<Matrix> = None;
+        for resp in self.recv_all()? {
+            match resp {
+                Resp::Gram { zat: z, aat: a } => {
+                    match (&mut zat, &mut aat) {
+                        (None, None) => {
+                            zat = Some(z);
+                            aat = Some(a);
+                        }
+                        (Some(zs), Some(as_)) => {
+                            zs.add_assign(&z);
+                            as_.add_assign(&a);
+                        }
+                        _ => unreachable!(),
+                    }
+                }
+                _ => anyhow::bail!("unexpected response in gram phase"),
+            }
+        }
+        Ok((zat.unwrap(), aat.unwrap()))
+    }
+
+    pub fn a_update(&self, l: usize, minv: &Matrix, w_next: &Matrix) -> Result<()> {
+        self.send_all(|_| Cmd::AUpdate { l, minv: minv.clone(), w_next: w_next.clone() })?;
+        self.expect_done()
+    }
+
+    pub fn z_hidden(&self, l: usize, w: &Matrix) -> Result<()> {
+        self.send_all(|_| Cmd::ZHidden { l, w: w.clone() })?;
+        self.expect_done()
+    }
+
+    pub fn z_out(&self, w: &Matrix, update_lambda: bool) -> Result<()> {
+        self.send_all(|_| Cmd::ZOut { w: w.clone(), update_lambda })?;
+        self.expect_done()
+    }
+
+    pub fn update_duals(&self, ws: &[Matrix]) -> Result<()> {
+        self.send_all(|_| Cmd::UpdateDuals { ws: ws.to_vec() })?;
+        self.expect_done()
+    }
+
+    /// (mean train hinge, train accuracy).
+    pub fn eval_train(&self, ws: &[Matrix]) -> Result<(f64, f64)> {
+        self.send_all(|_| Cmd::EvalTrain { ws: ws.to_vec() })?;
+        let mut loss = 0.0;
+        let mut correct = 0.0;
+        let mut n = 0usize;
+        for resp in self.recv_all()? {
+            match resp {
+                Resp::EvalTrain { loss: l, correct: c, n: nn } => {
+                    loss += l;
+                    correct += c;
+                    n += nn;
+                }
+                _ => anyhow::bail!("unexpected response in eval phase"),
+            }
+        }
+        Ok((loss / n.max(1) as f64, correct / n.max(1) as f64))
+    }
+
+    /// Σ feasibility penalties across ranks.
+    pub fn penalties(&self, ws: &[Matrix]) -> Result<(f64, f64)> {
+        self.send_all(|_| Cmd::Penalty { ws: ws.to_vec() })?;
+        let mut eq_z = 0.0;
+        let mut eq_a = 0.0;
+        for resp in self.recv_all()? {
+            match resp {
+                Resp::Penalty { eq_z: z, eq_a: a } => {
+                    eq_z += z;
+                    eq_a += a;
+                }
+                _ => anyhow::bail!("unexpected response in penalty phase"),
+            }
+        }
+        Ok((eq_z, eq_a))
+    }
+
+    /// Data-parallel (Σ loss, Σ grads) for the baselines.
+    pub fn loss_grad(&self, ws: &[Matrix]) -> Result<(f64, Vec<Matrix>)> {
+        self.send_all(|_| Cmd::LossGrad { ws: ws.to_vec() })?;
+        let mut total = 0.0;
+        let mut grads: Option<Vec<Matrix>> = None;
+        for resp in self.recv_all()? {
+            match resp {
+                Resp::LossGrad { loss, grads: g } => {
+                    total += loss;
+                    match &mut grads {
+                        None => grads = Some(g),
+                        Some(acc) => {
+                            for (a, b) in acc.iter_mut().zip(&g) {
+                                a.add_assign(b);
+                            }
+                        }
+                    }
+                }
+                _ => anyhow::bail!("unexpected response in grad phase"),
+            }
+        }
+        Ok((total, grads.unwrap()))
+    }
+
+    fn expect_done(&self) -> Result<()> {
+        for resp in self.recv_all()? {
+            match resp {
+                Resp::Done => {}
+                _ => anyhow::bail!("unexpected response (wanted Done)"),
+            }
+        }
+        Ok(())
+    }
+
+    pub fn shutdown(mut self) {
+        for tx in &self.txs {
+            let _ = tx.send(Cmd::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for tx in &self.txs {
+            let _ = tx.send(Cmd::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! Column sharding for data parallelism (paper §5: activations, outputs and
+//! multipliers split by training-sample columns across workers).
+
+/// One worker's shard: the half-open column range `[c0, c1)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    pub rank: usize,
+    pub c0: usize,
+    pub c1: usize,
+}
+
+impl Shard {
+    pub fn len(&self) -> usize {
+        self.c1 - self.c0
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.c0 == self.c1
+    }
+}
+
+/// Partition `n` columns over `ranks` workers as evenly as possible
+/// (first `n % ranks` workers get one extra column).  Every column belongs
+/// to exactly one shard; empty shards are allowed when `ranks > n`.
+pub fn shard_ranges(n: usize, ranks: usize) -> Vec<Shard> {
+    assert!(ranks > 0, "need at least one rank");
+    let base = n / ranks;
+    let extra = n % ranks;
+    let mut out = Vec::with_capacity(ranks);
+    let mut c0 = 0;
+    for rank in 0..ranks {
+        let len = base + usize::from(rank < extra);
+        out.push(Shard { rank, c0, c1: c0 + len });
+        c0 += len;
+    }
+    debug_assert_eq!(c0, n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+
+    #[test]
+    fn exact_cover_property() {
+        forall("shards exactly cover columns", 200, |g| {
+            let n = g.usize_in(0, 5000);
+            let ranks = g.usize_in(1, 64);
+            let shards = shard_ranges(n, ranks);
+            if shards.len() != ranks {
+                return Err(format!("{} shards for {} ranks", shards.len(), ranks));
+            }
+            let mut expect = 0;
+            for (i, s) in shards.iter().enumerate() {
+                if s.rank != i {
+                    return Err(format!("rank mismatch at {i}"));
+                }
+                if s.c0 != expect {
+                    return Err(format!("gap/overlap at rank {i}: c0={} expect={expect}", s.c0));
+                }
+                expect = s.c1;
+            }
+            if expect != n {
+                return Err(format!("cover ends at {expect}, want {n}"));
+            }
+            // balance: sizes differ by at most 1
+            let min = shards.iter().map(Shard::len).min().unwrap();
+            let max = shards.iter().map(Shard::len).max().unwrap();
+            if max - min > 1 {
+                return Err(format!("imbalance {min}..{max}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn small_cases() {
+        assert_eq!(
+            shard_ranges(5, 2),
+            vec![Shard { rank: 0, c0: 0, c1: 3 }, Shard { rank: 1, c0: 3, c1: 5 }]
+        );
+        let s = shard_ranges(2, 4);
+        assert_eq!(s[2].len(), 0);
+        assert_eq!(s[3].len(), 0);
+    }
+}

@@ -1,0 +1,41 @@
+//! # gradfree-admm
+//!
+//! A reproduction of **“Training Neural Networks Without Gradients: A
+//! Scalable ADMM Approach”** (Taylor, Burmeister, Xu, Singh, Patel,
+//! Goldstein — ICML 2016) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the rust coordinator: Algorithm 1's leader/worker
+//!   schedule, the transpose-reduction parallel weight update, the simulated
+//!   MPI cluster and its communication cost model, the gradient baselines
+//!   (SGD / CG / L-BFGS), datasets, config, CLI, metrics and benches.
+//! * **L2 (`python/compile/model.py`)** — the per-worker update graphs in
+//!   jax, AOT-lowered once to HLO text artifacts.
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the compute
+//!   hot spots (entry-wise global z-updates, fused Gram pair), checked
+//!   against pure-jnp oracles.
+//!
+//! Python never runs on the training path: `runtime` loads the artifacts
+//! through PJRT (the `xla` crate) and the coordinator drives them from rust.
+//! A rust-native twin of the numeric updates (`coordinator::updates`, `nn`)
+//! serves as an independent oracle, the baselines' substrate, and the
+//! backend for hyper-parameter sweeps (artifacts bake γ/β constants).
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
+//! the paper-vs-measured record of every figure.
+
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod metrics;
+pub mod nn;
+pub mod prop;
+pub mod rng;
+pub mod runtime;
+
+/// Crate-wide result type (anyhow-backed; all public fallible APIs use it).
+pub type Result<T> = anyhow::Result<T>;

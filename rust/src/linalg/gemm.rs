@@ -1,0 +1,256 @@
+//! Cache-blocked GEMM kernels in three transposition flavours.
+//!
+//! Hot-path inventory (per ADMM iteration, per worker):
+//!   * `gemm_nt(z, a)` and `gemm_nt(a, a)` — the transpose-reduction Gram
+//!     pair (f × n panels reduced to f × f);
+//!   * `gemm_nn(w, a_prev)` — the linear guess `m = W a` of the z-updates;
+//!   * `gemm_tn(w, z)` — the `Wᵀ z_{l+1}` term of the activation update.
+//!
+//! Design: row-major operands, `ikj` loop order so the inner loop is a
+//! contiguous `axpy` over the output row (LLVM autovectorizes it to full
+//! f32 SIMD width), with `k`-panel blocking to keep the B panel resident in
+//! L1/L2.  `gemm_nt`'s inner loop is a contiguous dot product instead.
+//! Perf history lives in EXPERIMENTS.md §Perf.
+
+use super::Matrix;
+
+/// Panel size along the shared (contraction) dimension.
+const BLOCK_K: usize = 64;
+/// Panel size along the output-column dimension for `gemm_nn`.
+const BLOCK_J: usize = 256;
+
+/// `C = A·B` for `A: (m,k)`, `B: (k,n)`.
+pub fn gemm_nn(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    gemm(a, b, 1.0, 0.0, &mut c);
+    c
+}
+
+/// `C = A·Bᵀ` for `A: (m,k)`, `B: (n,k)` — the Gram/transpose-reduction op.
+///
+/// §Perf: a plain per-entry dot product ran at ~4 GFLOP/s (one dependent
+/// accumulator chain per output).  This version computes a 2×4 register
+/// tile per inner pass (8 independent accumulator chains over a shared
+/// k-strip), which lets the autovectorizer keep the FMA pipes busy, and
+/// dispatches `A Aᵀ` to a symmetric kernel that computes only the upper
+/// triangle and mirrors it.  See EXPERIMENTS.md §Perf for before/after.
+pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.cols(), "gemm_nt: contraction mismatch");
+    if std::ptr::eq(a, b) {
+        return syrk_nt(a);
+    }
+    let (m, n, k) = (a.rows(), b.rows(), a.cols());
+    let mut c = Matrix::zeros(m, n);
+    let mut i = 0;
+    while i < m {
+        let rows_a = (m - i).min(2);
+        let mut j = 0;
+        while j < n {
+            let rows_b = (n - j).min(4);
+            let mut acc = [[0.0f32; 4]; 2];
+            for (di, accr) in acc.iter_mut().enumerate().take(rows_a) {
+                let arow = a.row(i + di);
+                for (dj, accv) in accr.iter_mut().enumerate().take(rows_b) {
+                    let brow = b.row(j + dj);
+                    *accv = dot_unrolled(arow, brow, k);
+                }
+            }
+            for di in 0..rows_a {
+                for dj in 0..rows_b {
+                    *c.at_mut(i + di, j + dj) = acc[di][dj];
+                }
+            }
+            j += rows_b;
+        }
+        i += rows_a;
+    }
+    c
+}
+
+/// Unrolled 8-lane dot product (independent partial sums).
+#[inline(always)]
+fn dot_unrolled(x: &[f32], y: &[f32], k: usize) -> f32 {
+    let mut s = [0.0f32; 8];
+    let mut p = 0;
+    while p + 8 <= k {
+        s[0] += x[p] * y[p];
+        s[1] += x[p + 1] * y[p + 1];
+        s[2] += x[p + 2] * y[p + 2];
+        s[3] += x[p + 3] * y[p + 3];
+        s[4] += x[p + 4] * y[p + 4];
+        s[5] += x[p + 5] * y[p + 5];
+        s[6] += x[p + 6] * y[p + 6];
+        s[7] += x[p + 7] * y[p + 7];
+        p += 8;
+    }
+    let mut tail = 0.0f32;
+    while p < k {
+        tail += x[p] * y[p];
+        p += 1;
+    }
+    tail + (s[0] + s[1]) + (s[2] + s[3]) + (s[4] + s[5]) + (s[6] + s[7])
+}
+
+/// Symmetric rank-k product `A Aᵀ`: compute the upper triangle only
+/// (half the FLOPs of the general kernel) and mirror.
+fn syrk_nt(a: &Matrix) -> Matrix {
+    let (m, k) = (a.rows(), a.cols());
+    let mut c = Matrix::zeros(m, m);
+    for i in 0..m {
+        let arow = a.row(i);
+        for j in i..m {
+            let v = dot_unrolled(arow, a.row(j), k);
+            *c.at_mut(i, j) = v;
+            *c.at_mut(j, i) = v;
+        }
+    }
+    c
+}
+
+/// `C = Aᵀ·B` for `A: (k,m)`, `B: (k,n)`.
+pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), b.rows(), "gemm_tn: contraction mismatch");
+    let (m, n, k) = (a.cols(), b.cols(), a.rows());
+    let mut c = Matrix::zeros(m, n);
+    // ikj with A read down a column: A[p, i] is strided, but the inner j
+    // loop stays a contiguous axpy over C's row and B's row.
+    for p in 0..k {
+        let brow = b.row(p);
+        for i in 0..m {
+            let apival = a.at(p, i);
+            if apival == 0.0 {
+                continue;
+            }
+            let crow = c.row_mut(i);
+            for j in 0..n {
+                crow[j] += apival * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// General `C = alpha·A·B + beta·C` (the building block of `gemm_nn`).
+pub fn gemm(a: &Matrix, b: &Matrix, alpha: f32, beta: f32, c: &mut Matrix) {
+    assert_eq!(a.cols(), b.rows(), "gemm: contraction mismatch");
+    assert_eq!(c.rows(), a.rows(), "gemm: output rows mismatch");
+    assert_eq!(c.cols(), b.cols(), "gemm: output cols mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+
+    if beta != 1.0 {
+        if beta == 0.0 {
+            c.fill(0.0);
+        } else {
+            c.scale(beta);
+        }
+    }
+
+    // k-panel × j-panel blocking; inner loop is a contiguous axpy.
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + BLOCK_K).min(k);
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + BLOCK_J).min(n);
+            for i in 0..m {
+                let arow = a.row(i);
+                let crow = &mut c.row_mut(i)[j0..j1];
+                for p in k0..k1 {
+                    let aip = alpha * arow[p];
+                    if aip == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.row(p)[j0..j1];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += aip * bv;
+                    }
+                }
+            }
+            j0 = j1;
+        }
+        k0 = k1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn naive_nn(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0f64;
+                for p in 0..a.cols() {
+                    s += (a.at(i, p) as f64) * (b.at(p, j) as f64);
+                }
+                *c.at_mut(i, j) = s as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_nn_matches_naive() {
+        let mut rng = Rng::seed_from(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (17, 33, 65), (64, 64, 64), (5, 130, 300)] {
+            let a = Matrix::randn(m, k, &mut rng);
+            let b = Matrix::randn(k, n, &mut rng);
+            let c = gemm_nn(&a, &b);
+            let want = naive_nn(&a, &b);
+            assert!(c.allclose(&want, 1e-4, 1e-4), "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn gemm_nt_matches_transpose() {
+        let mut rng = Rng::seed_from(2);
+        for &(m, k, n) in &[(1, 4, 1), (8, 100, 8), (13, 257, 5)] {
+            let a = Matrix::randn(m, k, &mut rng);
+            let b = Matrix::randn(n, k, &mut rng);
+            let c = gemm_nt(&a, &b);
+            let want = naive_nn(&a, &b.transpose());
+            assert!(c.allclose(&want, 1e-4, 1e-4), "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn gemm_tn_matches_transpose() {
+        let mut rng = Rng::seed_from(3);
+        for &(m, k, n) in &[(1, 3, 2), (9, 40, 31), (6, 128, 6)] {
+            let a = Matrix::randn(k, m, &mut rng);
+            let b = Matrix::randn(k, n, &mut rng);
+            let c = gemm_tn(&a, &b);
+            let want = naive_nn(&a.transpose(), &b);
+            assert!(c.allclose(&want, 1e-4, 1e-4), "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn gemm_alpha_beta() {
+        let mut rng = Rng::seed_from(4);
+        let a = Matrix::randn(4, 6, &mut rng);
+        let b = Matrix::randn(6, 5, &mut rng);
+        let mut c = Matrix::randn(4, 5, &mut rng);
+        let c0 = c.clone();
+        gemm(&a, &b, 2.0, 0.5, &mut c);
+        let mut want = naive_nn(&a, &b);
+        want.scale(2.0);
+        want.axpy(0.5, &c0);
+        assert!(c.allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn gram_pair_symmetry() {
+        let mut rng = Rng::seed_from(5);
+        let a = Matrix::randn(7, 50, &mut rng);
+        let aat = gemm_nt(&a, &a);
+        for i in 0..7 {
+            for j in 0..7 {
+                assert!((aat.at(i, j) - aat.at(j, i)).abs() < 1e-5);
+            }
+            assert!(aat.at(i, i) >= 0.0);
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! Row-major dense `f32` matrix.
+//!
+//! The layout matches XLA's default (dim-0 major), so a `Matrix` buffer maps
+//! 1:1 onto a `Literal` of the same shape with no transposition — the
+//! runtime marshals by flat copy.
+
+use crate::rng::Rng;
+
+/// Row-major `rows × cols` matrix of `f32`.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl std::fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Matrix({}x{})", self.rows, self.cols)?;
+        if self.rows * self.cols <= 36 {
+            for r in 0..self.rows {
+                write!(f, "\n  {:?}", &self.data[r * self.cols..(r + 1) * self.cols])?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer/shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        Self::from_fn(n, n, |r, c| if r == c { 1.0 } else { 0.0 })
+    }
+
+    /// I.i.d. standard normal entries (paper §6 initialization).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for v in &mut m.data {
+            *v = rng.normal() as f32;
+        }
+        m
+    }
+
+    #[inline(always)]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline(always)]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline(always)]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline(always)]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline(always)]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline(always)]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    /// Copy of the column range `[c0, c1)` (used to shard sample columns).
+    pub fn col_range(&self, c0: usize, c1: usize) -> Matrix {
+        assert!(c0 <= c1 && c1 <= self.cols, "bad column range");
+        let w = c1 - c0;
+        let mut out = Matrix::zeros(self.rows, w);
+        for r in 0..self.rows {
+            out.data[r * w..(r + 1) * w]
+                .copy_from_slice(&self.data[r * self.cols + c0..r * self.cols + c1]);
+        }
+        out
+    }
+
+    /// Copy into a wider zero-padded matrix (`new_cols >= cols`); padded
+    /// columns are exact zeros (Gram-safe — see python test
+    /// `test_gram_zero_padding_is_exact`).
+    pub fn pad_cols(&self, new_cols: usize) -> Matrix {
+        assert!(new_cols >= self.cols);
+        let mut out = Matrix::zeros(self.rows, new_cols);
+        for r in 0..self.rows {
+            out.data[r * new_cols..r * new_cols + self.cols]
+                .copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Paste `src` into columns `[c0, c0 + src.cols())` of `self`
+    /// (tile-assembly helper for the PJRT backend).
+    pub fn paste_cols(&mut self, c0: usize, src: &Matrix) {
+        assert_eq!(self.rows, src.rows, "paste_cols: row mismatch");
+        assert!(c0 + src.cols <= self.cols, "paste_cols: out of range");
+        for r in 0..self.rows {
+            let dst = &mut self.data[r * self.cols + c0..r * self.cols + c0 + src.cols];
+            dst.copy_from_slice(src.row(r));
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub_assign(&mut self, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+    }
+
+    /// `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+
+    pub fn trace(&self) -> f32 {
+        let n = self.rows.min(self.cols);
+        (0..n).map(|i| self.at(i, i)).sum()
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        (self.data.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>()).sqrt() as f32
+    }
+
+    pub fn sum(&self) -> f32 {
+        self.data.iter().map(|v| *v as f64).sum::<f64>() as f32
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+    }
+
+    /// All-close with combined absolute/relative tolerance.
+    pub fn allclose(&self, other: &Matrix, rtol: f32, atol: f32) -> bool {
+        self.shape() == other.shape()
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs().max(a.abs()))
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_and_rows() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.at(0, 2), 3.0);
+        assert_eq!(m.at(1, 0), 4.0);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Matrix::from_fn(3, 5, |r, c| (r * 10 + c) as f32);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().at(4, 2), m.at(2, 4));
+    }
+
+    #[test]
+    fn col_range_extracts_columns() {
+        let m = Matrix::from_fn(2, 6, |r, c| (r * 100 + c) as f32);
+        let s = m.col_range(2, 5);
+        assert_eq!(s.shape(), (2, 3));
+        assert_eq!(s.at(1, 0), 102.0);
+        assert_eq!(s.at(0, 2), 4.0);
+    }
+
+    #[test]
+    fn pad_cols_zero_fills() {
+        let m = Matrix::from_fn(2, 3, |r, c| (r + c) as f32 + 1.0);
+        let p = m.pad_cols(5);
+        assert_eq!(p.shape(), (2, 5));
+        assert_eq!(p.at(1, 2), m.at(1, 2));
+        assert_eq!(p.at(0, 3), 0.0);
+        assert_eq!(p.at(1, 4), 0.0);
+    }
+
+    #[test]
+    fn axpy_and_norms() {
+        let mut a = Matrix::from_vec(1, 3, vec![1., 2., 2.]);
+        let b = Matrix::from_vec(1, 3, vec![1., 0., 0.]);
+        a.axpy(2.0, &b);
+        assert_eq!(a.as_slice(), &[3., 2., 2.]);
+        assert!((a.frob_norm() - (9f32 + 4. + 4.).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Matrix::from_vec(1, 2, vec![1.0, 100.0]);
+        let b = Matrix::from_vec(1, 2, vec![1.0 + 1e-6, 100.0 + 1e-3]);
+        assert!(a.allclose(&b, 1e-4, 1e-4));
+        assert!(!a.allclose(&b, 1e-9, 1e-9));
+    }
+}

@@ -1,0 +1,117 @@
+//! Dense linear algebra substrate.
+//!
+//! The paper's updates are built from a handful of dense primitives: GEMM in
+//! three transposition flavours (the transpose-reduction Gram products are
+//! `Z·Aᵀ` and `A·Aᵀ`), an SPD Cholesky solve (the ridge-regularized
+//! pseudoinverse of the weight update and the `(βWᵀW + γI)⁻¹` of the
+//! activation update), and element-wise vector ops.  No external BLAS is
+//! available offline, so this module *is* the BLAS: `Matrix` is a row-major
+//! `f32` buffer and `gemm` is a cache-blocked, autovectorizer-friendly
+//! kernel (see `gemm.rs` for the §Perf iteration log).
+
+mod chol;
+mod gemm;
+mod matrix;
+
+pub use chol::{cholesky_factor, solve_spd, spd_inverse, CholeskyFactor};
+pub use gemm::{gemm, gemm_nn, gemm_nt, gemm_tn};
+pub use matrix::Matrix;
+
+use crate::Result;
+
+/// Ridge-regularized least-squares weight update (paper Algorithm 1):
+/// `W = Z A† = (Z Aᵀ)(A Aᵀ + εI)⁻¹`, given the *already reduced* Gram pair
+/// `zat = Z Aᵀ` (f_out × f_in) and `aat = A Aᵀ` (f_in × f_in).
+///
+/// `ridge` scales with the mean diagonal so the guard is dimensionless;
+/// the paper's pseudoinverse is recovered as `ridge → 0`.
+pub fn weight_solve(zat: &Matrix, aat: &Matrix, ridge: f64) -> Result<Matrix> {
+    let f = aat.rows();
+    anyhow::ensure!(aat.cols() == f, "aat must be square, got {:?}", aat.shape());
+    anyhow::ensure!(
+        zat.cols() == f,
+        "zat cols {} must match aat dim {}",
+        zat.cols(),
+        f
+    );
+    let mut reg = aat.clone();
+    let eps = (ridge * (aat.trace() as f64 / f as f64 + 1.0)) as f32;
+    for i in 0..f {
+        *reg.at_mut(i, i) += eps;
+    }
+    // Solve (aat + εI) Xᵀ = zatᵀ  =>  W = X.
+    let factor = cholesky_factor(&reg)?;
+    let xt = factor.solve_mat(&zat.transpose())?;
+    Ok(xt.transpose())
+}
+
+/// `(β Wᵀ W + γ I)⁻¹` — the shard-independent SPD inverse of the paper's
+/// activation update (eq. 6).  Computed once per layer per iteration by the
+/// leader and shipped to workers / passed into the `a_update` artifact.
+pub fn a_update_inverse(w_next: &Matrix, beta: f32, gamma: f32) -> Result<Matrix> {
+    let f = w_next.cols();
+    let mut k = gemm_tn(w_next, w_next);
+    k.scale(beta);
+    for i in 0..f {
+        *k.at_mut(i, i) += gamma;
+    }
+    spd_inverse(&k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn weight_solve_recovers_exact_system() {
+        // Z = W_true · A with A full row rank => weight_solve(ZAᵀ, AAᵀ) ≈ W.
+        let mut rng = Rng::seed_from(7);
+        let w_true = Matrix::randn(3, 5, &mut rng);
+        let a = Matrix::randn(5, 40, &mut rng);
+        let z = gemm_nn(&w_true, &a);
+        let zat = gemm_nt(&z, &a);
+        let aat = gemm_nt(&a, &a);
+        let w = weight_solve(&zat, &aat, 1e-10).unwrap();
+        assert!(w.max_abs_diff(&w_true) < 1e-2, "{}", w.max_abs_diff(&w_true));
+    }
+
+    #[test]
+    fn weight_solve_least_squares_optimality() {
+        // For inconsistent Z, the solution must beat nearby perturbations
+        // in ‖Z − WA‖_F (ridge ~ 0).
+        let mut rng = Rng::seed_from(13);
+        let a = Matrix::randn(4, 30, &mut rng);
+        let z = Matrix::randn(2, 30, &mut rng);
+        let zat = gemm_nt(&z, &a);
+        let aat = gemm_nt(&a, &a);
+        let w = weight_solve(&zat, &aat, 1e-10).unwrap();
+        let resid = |wm: &Matrix| {
+            let mut d = gemm_nn(wm, &a);
+            d.sub_assign(&z);
+            d.frob_norm()
+        };
+        let base = resid(&w);
+        for trial in 0..20 {
+            let mut wp = w.clone();
+            let r = (trial * 7) % wp.rows();
+            let c = (trial * 11) % wp.cols();
+            *wp.at_mut(r, c) += if trial % 2 == 0 { 1e-2 } else { -1e-2 };
+            assert!(resid(&wp) >= base - 1e-5);
+        }
+    }
+
+    #[test]
+    fn a_update_inverse_is_inverse() {
+        let mut rng = Rng::seed_from(3);
+        let w = Matrix::randn(6, 4, &mut rng);
+        let inv = a_update_inverse(&w, 1.0, 10.0).unwrap();
+        let mut k = gemm_tn(&w, &w);
+        k.scale(1.0);
+        for i in 0..4 {
+            *k.at_mut(i, i) += 10.0;
+        }
+        let prod = gemm_nn(&inv, &k);
+        assert!(prod.max_abs_diff(&Matrix::identity(4)) < 1e-4);
+    }
+}

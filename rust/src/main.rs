@@ -1,0 +1,372 @@
+//! `gradfree` — launcher CLI for the ADMM trainer, baselines and tooling.
+//!
+//! Subcommands:
+//!   train      ADMM training (Algorithm 1) on a synthetic or CSV dataset
+//!   baseline   SGD / CG / L-BFGS on the same dataset
+//!   scale      measured strong-scaling sweep + cost-model extrapolation
+//!   inspect    dump the artifact manifest the runtime would load
+//!   gen-data   write a synthetic dataset to CSV
+//!
+//! Run `gradfree <cmd> --help-cmd` for per-command flags.  Examples live in
+//! `examples/` and the figure benches in `rust/benches/`.
+
+use gradfree_admm::baselines::{self, LocalObjective, SgdOpts};
+use gradfree_admm::cli::Args;
+use gradfree_admm::cluster::CostModel;
+use gradfree_admm::config::TrainConfig;
+use gradfree_admm::coordinator::AdmmTrainer;
+use gradfree_admm::data::{self, Dataset, Normalizer};
+use gradfree_admm::metrics::write_curves_csv;
+use gradfree_admm::nn::Mlp;
+use gradfree_admm::runtime::Manifest;
+use gradfree_admm::Result;
+
+fn main() {
+    let args = Args::parse();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("train") => cmd_train(args),
+        Some("predict") => cmd_predict(args),
+        Some("baseline") => cmd_baseline(args),
+        Some("scale") => cmd_scale(args),
+        Some("inspect") => cmd_inspect(args),
+        Some("gen-data") => cmd_gen_data(args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "gradfree — Training Neural Networks Without Gradients (ICML 2016) \
+         reproduction\n\n\
+         USAGE: gradfree <train|baseline|scale|inspect|gen-data> [flags]\n\n\
+         COMMON FLAGS\n  \
+         --preset test|quickstart|svhn|higgs   network + defaults\n  \
+         --dataset blobs|svhn|higgs|<csv path> data source (default: matches preset)\n  \
+         --samples N --test-samples N --seed S\n  \
+         --backend native|pjrt  --workers N  --iters N  --warmup N\n  \
+         --gamma G --beta B --momentum M --multiplier-mode bregman|none|classical\n  \
+         --target-acc A   stop at test accuracy A\n  \
+         --out curve.csv  write the convergence curve\n  \
+         --penalty        track feasibility penalties\n  \
+         --quiet          suppress per-eval lines\n\n\
+         baseline: --method sgd|cg|lbfgs --lr --batch --bmomentum --epochs --max-iters\n\
+         scale:    --cores 1,2,4,8 --model-cores 64,1024,7200 --target-acc A\n\
+         gen-data: --dataset blobs|svhn|higgs --samples N --out file.csv"
+    );
+}
+
+/// Build (train, test) per the CLI flags; features are z-scored with
+/// train-set statistics (HIGGS-like needs it; harmless elsewhere).
+fn load_data(args: &Args, cfg: &TrainConfig) -> Result<(Dataset, Dataset)> {
+    let seed = cfg.seed;
+    let dataset = args.get_or("dataset", default_dataset(&cfg.name));
+    let (mut train, mut test) = match dataset {
+        "blobs" => {
+            let n = args.parsed_or("samples", 4000usize)?;
+            let nt = args.parsed_or("test-samples", n / 5)?;
+            data::blobs(cfg.dims[0], n + nt, 2.5, seed).split_test(nt)
+        }
+        "svhn" => {
+            // paper §7.1 sizes by default, scaled down by --samples
+            let n = args.parsed_or("samples", 120_290usize)?;
+            let nt = args.parsed_or("test-samples", 5_893usize)?;
+            data::svhn_like(n + nt, seed).split_test(nt)
+        }
+        "higgs" => {
+            // paper runs 10.5M; default is laptop-scale, override for bench
+            let n = args.parsed_or("samples", 200_000usize)?;
+            let nt = args.parsed_or("test-samples", 20_000usize)?;
+            data::higgs_like(n + nt, seed).split_test(nt)
+        }
+        path => {
+            let d = data::load_csv(path, args.has("label-first"))?;
+            let nt = args.parsed_or("test-samples", d.samples() / 6)?;
+            d.split_test(nt)
+        }
+    };
+    anyhow::ensure!(
+        train.features() == cfg.dims[0],
+        "dataset '{dataset}' has {} features but config dims[0]={} — pass --dims",
+        train.features(),
+        cfg.dims[0]
+    );
+    let norm = Normalizer::fit(&train.x);
+    norm.apply(&mut train.x);
+    norm.apply(&mut test.x);
+    Ok((train, test))
+}
+
+fn default_dataset(preset: &str) -> &'static str {
+    match preset {
+        "svhn" => "svhn",
+        "higgs" => "higgs",
+        _ => "blobs",
+    }
+}
+
+fn config_from_args(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = match args.get("config-file") {
+        Some(path) => TrainConfig::from_file(path)?,
+        None => TrainConfig::preset(args.get_or("preset", "quickstart"))?,
+    };
+    cfg.apply_args(args)?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let (train, test) = load_data(args, &cfg)?;
+    println!(
+        "ADMM train: config={} dims={:?} act={} backend={} workers={} γ={} β={} \
+         mode={} train={}x{} test={}",
+        cfg.name,
+        cfg.dims,
+        cfg.act.name(),
+        cfg.backend.name(),
+        cfg.workers,
+        cfg.gamma,
+        cfg.beta,
+        cfg.multiplier_mode.name(),
+        train.features(),
+        train.samples(),
+        test.samples()
+    );
+    let mut trainer = AdmmTrainer::new(cfg, &train, &test)?;
+    trainer.verbose = !args.has("quiet");
+    trainer.track_penalty = args.has("penalty");
+    if let Some(t) = args.get("target-acc") {
+        trainer.target_acc = Some(t.parse()?);
+    }
+    let out = trainer.train()?;
+    let last = out.recorder.points.last().cloned();
+    println!(
+        "done: iters={} opt_time={:.3}s final_acc={:.4} best_acc={:.4}",
+        out.stats.iters_run,
+        out.stats.opt_seconds,
+        last.map(|p| p.test_acc).unwrap_or(f64::NAN),
+        out.recorder.best_accuracy()
+    );
+    if let Some((it, t)) = out.reached_target_at {
+        println!("target accuracy reached at iter {it} after {t:.3}s");
+    }
+    if let Some(path) = args.get("out") {
+        write_curves_csv(path, &[&out.recorder])?;
+        println!("curve written to {path}");
+    }
+    if let Some(path) = args.get("save") {
+        gradfree_admm::nn::save_model(path, &out.weights, trainer.config().act)?;
+        println!("model saved to {path}");
+    }
+    Ok(())
+}
+
+/// `gradfree predict --model m.bin --dataset <csv|blobs|svhn|higgs>`:
+/// load a checkpoint and report accuracy on a dataset.
+fn cmd_predict(args: &Args) -> Result<()> {
+    let model_path = args
+        .get("model")
+        .ok_or_else(|| anyhow::anyhow!("--model <file> required"))?;
+    let (ws, act) = gradfree_admm::nn::load_model(model_path)?;
+    let mut dims = vec![ws[0].cols()];
+    for w in &ws {
+        dims.push(w.rows());
+    }
+    let cfg = TrainConfig { dims: dims.clone(), act, ..TrainConfig::default() };
+    let (_, test) = load_data(args, &cfg)?;
+    let mlp = Mlp::new(dims, act)?;
+    let (correct, n) = mlp.accuracy_counts(&ws, &test.x, &test.y);
+    println!(
+        "model {model_path}: accuracy {:.4} ({correct}/{n})",
+        correct as f64 / n as f64
+    );
+    Ok(())
+}
+
+fn cmd_baseline(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let (train, test) = load_data(args, &cfg)?;
+    let method = args.get_or("method", "sgd");
+    let mlp = Mlp::new(cfg.dims.clone(), cfg.act)?;
+    let target = match args.get("target-acc") {
+        Some(t) => Some(t.parse()?),
+        None => None,
+    };
+    println!(
+        "baseline {method}: dims={:?} train={}x{} test={}",
+        cfg.dims,
+        train.features(),
+        train.samples(),
+        test.samples()
+    );
+    let out = match method {
+        "sgd" => baselines::train_sgd(
+            &mlp,
+            &train,
+            &test,
+            SgdOpts {
+                lr: args.parsed_or("lr", 1e-2f32)?,
+                momentum: args.parsed_or("bmomentum", 0.9f32)?,
+                batch: args.parsed_or("batch", 128usize)?,
+                epochs: args.parsed_or("epochs", 10usize)?,
+                eval_every: args.parsed_or("eval-every-steps", 100usize)?,
+                seed: cfg.seed,
+            },
+            target,
+            &format!("sgd_{}", cfg.name),
+        )?,
+        "cg" => {
+            let mut obj = LocalObjective { mlp: &mlp, x: &train.x, y: &train.y };
+            baselines::train_cg(
+                &mlp,
+                &mut obj,
+                &test,
+                args.parsed_or("max-iters", 100usize)?,
+                cfg.seed,
+                target,
+                &format!("cg_{}", cfg.name),
+            )?
+        }
+        "lbfgs" => {
+            let mut obj = LocalObjective { mlp: &mlp, x: &train.x, y: &train.y };
+            baselines::train_lbfgs(
+                &mlp,
+                &mut obj,
+                &test,
+                args.parsed_or("max-iters", 100usize)?,
+                args.parsed_or("mem", 10usize)?,
+                cfg.seed,
+                target,
+                &format!("lbfgs_{}", cfg.name),
+            )?
+        }
+        other => anyhow::bail!("unknown method '{other}' (sgd|cg|lbfgs)"),
+    };
+    println!(
+        "done: best_acc={:.4} final_acc={:.4}",
+        out.recorder.best_accuracy(),
+        out.recorder.final_accuracy()
+    );
+    if let Some((it, t)) = out.reached_target_at {
+        println!("target accuracy reached at step {it} after {t:.3}s");
+    }
+    if let Some(path) = args.get("out") {
+        write_curves_csv(path, &[&out.recorder])?;
+        println!("curve written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_scale(args: &Args) -> Result<()> {
+    let mut cfg = config_from_args(args)?;
+    let (train, test) = load_data(args, &cfg)?;
+    let target: f64 = args.parsed_or("target-acc", 0.9f64)?;
+    let cores: Vec<usize> = parse_list(args.get_or("cores", "1,2,4,8"))?;
+    let model_cores: Vec<usize> =
+        parse_list(args.get_or("model-cores", "16,64,256,1024,4096,7200"))?;
+
+    println!("measured strong scaling (threads) + cost-model extrapolation");
+    println!("cores,kind,seconds_to_acc{target},iters");
+    let mut calib = None;
+    for &w in &cores {
+        cfg.workers = w;
+        let mut trainer = AdmmTrainer::new(cfg.clone(), &train, &test)?;
+        trainer.target_acc = Some(target);
+        let out = trainer.train()?;
+        let (iters, secs) = out
+            .reached_target_at
+            .map(|(i, t)| (i + 1, t))
+            .unwrap_or((out.stats.iters_run, out.stats.opt_seconds));
+        println!("{w},measured,{secs:.4},{iters}");
+        if w == *cores.last().unwrap() {
+            calib = Some((trainer.scaling_profile(
+                &out.stats,
+                train.samples(),
+                iters,
+                CostModel::default(),
+            ),));
+        }
+    }
+    if let Some((profile,)) = calib {
+        for pt in profile.curve(&model_cores) {
+            println!(
+                "{},modeled,{:.4},{}",
+                pt.cores, pt.seconds_to_threshold, profile.iters_to_threshold
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let m = Manifest::load(dir)?;
+    println!("manifest at {dir}: {} configs", m.configs.len());
+    for (name, cfg) in &m.configs {
+        println!(
+            "  {name}: dims={:?} act={} γ={} β={} tile={} ({} ops)",
+            cfg.dims,
+            cfg.act.name(),
+            cfg.gamma,
+            cfg.beta,
+            cfg.tile,
+            cfg.ops.len()
+        );
+        if args.has("verbose") {
+            for (op, spec) in &cfg.ops {
+                println!("    {op}: {:?} -> {:?}  [{}]", spec.inputs, spec.outputs,
+                         spec.file.display());
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let dataset = args.get_or("dataset", "blobs");
+    let n = args.parsed_or("samples", 1000usize)?;
+    let seed = args.parsed_or("seed", 0u64)?;
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("--out <file.csv> required"))?;
+    let d = match dataset {
+        "blobs" => data::blobs(16, n, 2.5, seed),
+        "svhn" => data::svhn_like(n, seed),
+        "higgs" => data::higgs_like(n, seed),
+        other => anyhow::bail!("unknown dataset '{other}'"),
+    };
+    let mut text = String::new();
+    for c in 0..d.samples() {
+        use std::fmt::Write as _;
+        for r in 0..d.features() {
+            let _ = write!(text, "{},", d.x.at(r, c));
+        }
+        let _ = writeln!(text, "{}", d.y.at(0, c) as u8);
+    }
+    std::fs::write(out, text)?;
+    println!("wrote {} samples x {} features to {out}", d.samples(), d.features());
+    Ok(())
+}
+
+fn parse_list(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<usize>()
+                .map_err(|e| anyhow::anyhow!("bad list entry '{t}': {e}"))
+        })
+        .collect()
+}

@@ -1,0 +1,175 @@
+//! Metrics: wall-clock timing, convergence-curve recording, CSV output and
+//! small summary statistics.  Every figure bench writes its series through
+//! `Recorder` so the CSV schema is uniform across experiments.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// Monotonic stopwatch.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// One point on a convergence curve.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CurvePoint {
+    pub iter: usize,
+    /// Seconds of *optimization* time (paper §7: excludes data loading and
+    /// setup).
+    pub wall_s: f64,
+    pub train_loss: f64,
+    pub test_acc: f64,
+    /// Σ over layers of the quadratic constraint penalties (feasibility
+    /// telemetry; `NaN` when not tracked).
+    pub penalty: f64,
+}
+
+/// Convergence-curve recorder for one training run.
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    pub label: String,
+    pub points: Vec<CurvePoint>,
+}
+
+impl Recorder {
+    pub fn new(label: impl Into<String>) -> Self {
+        Recorder { label: label.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, p: CurvePoint) {
+        self.points.push(p);
+    }
+
+    /// First wall-clock time at which test accuracy reached `threshold`
+    /// (the paper's time-to-accuracy metric), if ever.
+    pub fn time_to_accuracy(&self, threshold: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| p.test_acc >= threshold)
+            .map(|p| p.wall_s)
+    }
+
+    pub fn best_accuracy(&self) -> f64 {
+        self.points.iter().fold(0.0, |m, p| m.max(p.test_acc))
+    }
+
+    pub fn final_accuracy(&self) -> f64 {
+        self.points.last().map(|p| p.test_acc).unwrap_or(0.0)
+    }
+
+    /// CSV rows: `label,iter,wall_s,train_loss,test_acc,penalty`.
+    pub fn to_csv(&self, include_header: bool) -> String {
+        let mut out = String::new();
+        if include_header {
+            out.push_str("label,iter,wall_s,train_loss,test_acc,penalty\n");
+        }
+        for p in &self.points {
+            let _ = writeln!(
+                out,
+                "{},{},{:.6},{:.6},{:.6},{:.6}",
+                self.label, p.iter, p.wall_s, p.train_loss, p.test_acc, p.penalty
+            );
+        }
+        out
+    }
+}
+
+/// Write several curves into one CSV file (creating parent dirs).
+pub fn write_curves_csv(path: &str, curves: &[&Recorder]) -> crate::Result<()> {
+    let mut out = String::from("label,iter,wall_s,train_loss,test_acc,penalty\n");
+    for c in curves {
+        out.push_str(&c.to_csv(false));
+    }
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// Summary statistics over a sample.
+#[derive(Clone, Copy, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    let n = xs.len();
+    if n == 0 {
+        return Summary { n: 0, mean: f64::NAN, std: f64::NAN, min: f64::NAN, max: f64::NAN };
+    }
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+        max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(iter: usize, wall_s: f64, acc: f64) -> CurvePoint {
+        CurvePoint { iter, wall_s, train_loss: 1.0, test_acc: acc, penalty: 0.0 }
+    }
+
+    #[test]
+    fn time_to_accuracy_finds_first_crossing() {
+        let mut r = Recorder::new("x");
+        r.push(pt(0, 1.0, 0.5));
+        r.push(pt(1, 2.0, 0.96));
+        r.push(pt(2, 3.0, 0.94));
+        r.push(pt(3, 4.0, 0.97));
+        assert_eq!(r.time_to_accuracy(0.95), Some(2.0));
+        assert_eq!(r.time_to_accuracy(0.99), None);
+        assert!((r.best_accuracy() - 0.97).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut r = Recorder::new("admm");
+        r.push(pt(0, 0.5, 0.9));
+        let csv = r.to_csv(true);
+        let mut lines = csv.lines();
+        assert_eq!(lines.next().unwrap(), "label,iter,wall_s,train_loss,test_acc,penalty");
+        assert!(lines.next().unwrap().starts_with("admm,0,0.5"));
+    }
+
+    #[test]
+    fn summary_stats() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.min - 1.0).abs() < 1e-12);
+        assert!((s.max - 4.0).abs() < 1e-12);
+        assert!((s.std - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_summary_is_nan() {
+        assert!(summarize(&[]).mean.is_nan());
+    }
+}

@@ -1,0 +1,107 @@
+//! Model checkpointing: a small self-describing binary format for weight
+//! ensembles (magic + version + activation + per-layer shapes + f32 LE
+//! data), so trained models round-trip between `gradfree train --save`,
+//! `gradfree predict`, and library users.
+
+use crate::config::Activation;
+use crate::linalg::Matrix;
+use crate::Result;
+
+const MAGIC: &[u8; 8] = b"GFADMM01";
+
+/// Serialize weights + activation into a byte buffer.
+pub fn serialize_model(ws: &[Matrix], act: Activation) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.push(match act {
+        Activation::Relu => 0,
+        Activation::HardSigmoid => 1,
+    });
+    out.extend_from_slice(&(ws.len() as u32).to_le_bytes());
+    for w in ws {
+        out.extend_from_slice(&(w.rows() as u32).to_le_bytes());
+        out.extend_from_slice(&(w.cols() as u32).to_le_bytes());
+        for v in w.as_slice() {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Inverse of [`serialize_model`]; validates magic, version and sizes.
+pub fn deserialize_model(bytes: &[u8]) -> Result<(Vec<Matrix>, Activation)> {
+    anyhow::ensure!(bytes.len() >= 13, "truncated model file");
+    anyhow::ensure!(&bytes[..8] == MAGIC, "bad magic (not a gradfree model)");
+    let act = match bytes[8] {
+        0 => Activation::Relu,
+        1 => Activation::HardSigmoid,
+        other => anyhow::bail!("unknown activation code {other}"),
+    };
+    let mut pos = 9;
+    let read_u32 = |b: &[u8], p: &mut usize| -> Result<u32> {
+        anyhow::ensure!(b.len() >= *p + 4, "truncated model file");
+        let v = u32::from_le_bytes(b[*p..*p + 4].try_into().unwrap());
+        *p += 4;
+        Ok(v)
+    };
+    let layers = read_u32(bytes, &mut pos)? as usize;
+    anyhow::ensure!(layers > 0 && layers < 1024, "implausible layer count {layers}");
+    let mut ws = Vec::with_capacity(layers);
+    for _ in 0..layers {
+        let rows = read_u32(bytes, &mut pos)? as usize;
+        let cols = read_u32(bytes, &mut pos)? as usize;
+        let need = rows * cols * 4;
+        anyhow::ensure!(bytes.len() >= pos + need, "truncated weight data");
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows * cols {
+            data.push(f32::from_le_bytes(
+                bytes[pos + 4 * i..pos + 4 * i + 4].try_into().unwrap(),
+            ));
+        }
+        pos += need;
+        ws.push(Matrix::from_vec(rows, cols, data));
+    }
+    anyhow::ensure!(pos == bytes.len(), "trailing bytes in model file");
+    Ok((ws, act))
+}
+
+pub fn save_model(path: &str, ws: &[Matrix], act: Activation) -> Result<()> {
+    std::fs::write(path, serialize_model(ws, act))?;
+    Ok(())
+}
+
+pub fn load_model(path: &str) -> Result<(Vec<Matrix>, Activation)> {
+    let bytes = std::fs::read(path).map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    deserialize_model(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::seed_from(1);
+        let ws = vec![Matrix::randn(3, 5, &mut rng), Matrix::randn(1, 3, &mut rng)];
+        let bytes = serialize_model(&ws, Activation::HardSigmoid);
+        let (ws2, act) = deserialize_model(&bytes).unwrap();
+        assert_eq!(act, Activation::HardSigmoid);
+        assert_eq!(ws.len(), ws2.len());
+        for (a, b) in ws.iter().zip(&ws2) {
+            assert_eq!(a.as_slice(), b.as_slice());
+        }
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let ws = vec![Matrix::zeros(2, 2)];
+        let mut bytes = serialize_model(&ws, Activation::Relu);
+        assert!(deserialize_model(&bytes[..10]).is_err()); // truncated
+        bytes[0] = b'X';
+        assert!(deserialize_model(&bytes).is_err()); // bad magic
+        let mut ok = serialize_model(&ws, Activation::Relu);
+        ok.push(0); // trailing garbage
+        assert!(deserialize_model(&ok).is_err());
+    }
+}

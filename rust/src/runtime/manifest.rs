@@ -1,0 +1,212 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime.  Shapes are validated here, at load time, so drift between
+//! the python configs and the rust configs fails with a readable error
+//! instead of a PJRT crash mid-training.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::{Activation, Json};
+use crate::Result;
+
+/// One lowered entry point.
+#[derive(Clone, Debug)]
+pub struct OpSpec {
+    pub name: String,
+    /// HLO text file, relative to the artifacts directory.
+    pub file: PathBuf,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// All ops lowered for one network config.
+#[derive(Clone, Debug)]
+pub struct ConfigManifest {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub act: Activation,
+    pub gamma: f32,
+    pub beta: f32,
+    /// Fixed sample-axis width of every artifact (rust pads up to this).
+    pub tile: usize,
+    pub ops: BTreeMap<String, OpSpec>,
+}
+
+impl ConfigManifest {
+    pub fn op(&self, name: &str) -> Result<&OpSpec> {
+        self.ops.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact op '{name}' missing from config '{}' (have: {:?}) — \
+                 re-run `make artifacts`",
+                self.name,
+                self.ops.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, ConfigManifest>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} ({e}) — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = Json::parse(text)?;
+        let format = root.field("format")?.as_usize()?;
+        anyhow::ensure!(format == 1, "unsupported manifest format {format}");
+        let mut configs = BTreeMap::new();
+        for (name, cfg) in root.field("configs")?.as_obj()? {
+            let dims = cfg.field("dims")?.as_usize_vec()?;
+            anyhow::ensure!(dims.len() >= 2, "config '{name}': bad dims {dims:?}");
+            let mut ops = BTreeMap::new();
+            for (op_name, spec) in cfg.field("ops")?.as_obj()? {
+                let inputs = spec
+                    .field("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_usize_vec())
+                    .collect::<Result<Vec<_>>>()?;
+                let outputs = spec
+                    .field("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_usize_vec())
+                    .collect::<Result<Vec<_>>>()?;
+                ops.insert(
+                    op_name.clone(),
+                    OpSpec {
+                        name: op_name.clone(),
+                        file: PathBuf::from(spec.field("file")?.as_str()?),
+                        inputs,
+                        outputs,
+                    },
+                );
+            }
+            configs.insert(
+                name.clone(),
+                ConfigManifest {
+                    name: name.clone(),
+                    dims,
+                    act: Activation::parse(cfg.field("act")?.as_str()?)?,
+                    gamma: cfg.field("gamma")?.as_f64()? as f32,
+                    beta: cfg.field("beta")?.as_f64()? as f32,
+                    tile: cfg.field("tile")?.as_usize()?,
+                    ops,
+                },
+            );
+        }
+        Ok(Manifest { dir, configs })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigManifest> {
+        self.configs.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "config '{name}' not in manifest (have: {:?}) — add it to \
+                 python/compile/configs.py and re-run `make artifacts`",
+                self.configs.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Check that a rust-side TrainConfig matches the lowered artifacts.
+    pub fn validate_train_config(&self, cfg: &crate::config::TrainConfig) -> Result<()> {
+        let m = self.config(&cfg.name)?;
+        anyhow::ensure!(
+            m.dims == cfg.dims,
+            "config '{}': artifact dims {:?} != requested dims {:?}",
+            cfg.name,
+            m.dims,
+            cfg.dims
+        );
+        anyhow::ensure!(
+            m.act == cfg.act,
+            "config '{}': artifact activation {} != requested {}",
+            cfg.name,
+            m.act.name(),
+            cfg.act.name()
+        );
+        anyhow::ensure!(
+            (m.gamma - cfg.gamma).abs() < 1e-6 && (m.beta - cfg.beta).abs() < 1e-6,
+            "config '{}': artifacts baked γ={} β={} but run requests γ={} β={} — \
+             artifacts specialize penalty constants; use --backend native for sweeps",
+            cfg.name,
+            m.gamma,
+            m.beta,
+            cfg.gamma,
+            cfg.beta
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "configs": {
+        "tiny": {
+          "dims": [4, 3, 2], "act": "relu", "gamma": 10.0, "beta": 1.0,
+          "tile": 8, "note": "",
+          "ops": {
+            "gram_1": {"file": "tiny/gram_1.hlo.txt",
+                       "inputs": [[3, 8], [4, 8]],
+                       "outputs": [[3, 4], [4, 4]]}
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let c = m.config("tiny").unwrap();
+        assert_eq!(c.dims, vec![4, 3, 2]);
+        assert_eq!(c.tile, 8);
+        let op = c.op("gram_1").unwrap();
+        assert_eq!(op.inputs.len(), 2);
+        assert_eq!(op.outputs[1], vec![4, 4]);
+        assert!(c.op("nope").is_err());
+        assert!(m.config("missing").is_err());
+    }
+
+    #[test]
+    fn validates_train_config() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let mut cfg = crate::config::TrainConfig::default();
+        cfg.name = "tiny".into();
+        cfg.dims = vec![4, 3, 2];
+        m.validate_train_config(&cfg).unwrap();
+        cfg.dims = vec![4, 5, 2];
+        assert!(m.validate_train_config(&cfg).is_err());
+        cfg.dims = vec![4, 3, 2];
+        cfg.gamma = 3.0;
+        assert!(m.validate_train_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let bad = SAMPLE.replace("\"format\": 1", "\"format\": 9");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+}

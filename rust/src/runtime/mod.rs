@@ -1,0 +1,19 @@
+//! PJRT runtime: load the AOT artifacts and execute them from rust.
+//!
+//! `python/compile/aot.py` lowers every (config, op) jax entry point to HLO
+//! **text** plus a `manifest.json` describing exact input/output shapes.
+//! This module parses the manifest (`manifest.rs`), compiles each op on a
+//! CPU PJRT client on first use, caches the loaded executable, and marshals
+//! `linalg::Matrix` (row-major f32 — the same layout XLA defaults to) in
+//! and out of `xla::Literal`s (`exec.rs`).
+//!
+//! PJRT objects wrap raw pointers without `Send`/`Sync`, so a
+//! `RuntimeContext` is thread-affine: every worker thread owns one.  That
+//! mirrors the paper's deployment (one MPI rank = one process = one local
+//! compute context).
+
+mod exec;
+mod manifest;
+
+pub use exec::RuntimeContext;
+pub use manifest::{ConfigManifest, Manifest, OpSpec};

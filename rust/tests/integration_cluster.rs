@@ -1,0 +1,136 @@
+//! Cluster/collectives integration: multi-threaded collectives under load,
+//! scaling-profile calibration from real training runs, and the
+//! determinism guarantees the coordinator relies on.
+
+use gradfree_admm::cluster::{CommWorld, CostModel};
+use gradfree_admm::config::TrainConfig;
+use gradfree_admm::coordinator::AdmmTrainer;
+use gradfree_admm::data::{blobs, Dataset, Normalizer};
+use gradfree_admm::linalg::Matrix;
+use gradfree_admm::rng::Rng;
+
+fn normalized(mut train: Dataset, mut test: Dataset) -> (Dataset, Dataset) {
+    let norm = Normalizer::fit(&train.x);
+    norm.apply(&mut train.x);
+    norm.apply(&mut test.x);
+    (train, test)
+}
+
+#[test]
+fn collectives_survive_many_rounds_under_contention() {
+    let world = CommWorld::new(7);
+    std::thread::scope(|s| {
+        for rank in 0..7 {
+            let w = world.clone();
+            s.spawn(move || {
+                let mut rng = Rng::stream(1, rank as u64);
+                for round in 0..50 {
+                    let mut m = Matrix::randn(3, 3, &mut rng);
+                    let local = m.clone();
+                    w.allreduce_sum(rank, &mut m);
+                    // own contribution must be inside the sum
+                    let mut others = m.clone();
+                    others.sub_assign(&local);
+                    assert!(others.as_slice().iter().all(|v| v.is_finite()), "round {round}");
+                    w.barrier();
+                }
+            });
+        }
+    });
+    assert_eq!(
+        world.stats().allreduce_calls.load(std::sync::atomic::Ordering::Relaxed),
+        50
+    );
+}
+
+#[test]
+fn training_is_deterministic_for_fixed_worker_count() {
+    let (train, test) = normalized(blobs(6, 900, 2.5, 61), blobs(6, 200, 2.5, 62));
+    let cfg = TrainConfig {
+        dims: vec![6, 5, 1],
+        gamma: 1.0,
+        iters: 10,
+        warmup_iters: 3,
+        workers: 4,
+        seed: 9,
+        ..TrainConfig::default()
+    };
+    let run = || {
+        AdmmTrainer::new(cfg.clone(), &train, &test)
+            .unwrap()
+            .train()
+            .unwrap()
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.weights.len(), b.weights.len());
+    for (wa, wb) in a.weights.iter().zip(&b.weights) {
+        assert_eq!(wa.as_slice(), wb.as_slice(), "training not bit-deterministic");
+    }
+}
+
+#[test]
+fn scaling_profile_from_real_run_extrapolates_sanely() {
+    let (train, test) = normalized(blobs(8, 2000, 2.5, 63), blobs(8, 400, 2.5, 64));
+    let cfg = TrainConfig {
+        dims: vec![8, 6, 1],
+        gamma: 1.0,
+        iters: 12,
+        warmup_iters: 3,
+        workers: 2,
+        seed: 10,
+        ..TrainConfig::default()
+    };
+    let mut trainer = AdmmTrainer::new(cfg, &train, &test).unwrap();
+    let out = trainer.train().unwrap();
+    let profile = trainer.scaling_profile(&out.stats, 2000, 12, CostModel::default());
+
+    // modeled curve: strong scaling while compute dominates; past the
+    // comm crossover the curve may flatten or rise (this tiny problem hits
+    // the knee early — exactly the fig-1a "not large enough to support
+    // many cores" caveat).
+    let pts = profile.curve(&[1, 2, 4, 16, 64, 256, 1024]);
+    for w in pts.windows(2) {
+        assert!(w[1].seconds_to_threshold > 0.0);
+        if w[1].compute_s > w[1].comm_s {
+            assert!(
+                w[1].seconds_to_threshold <= w[0].seconds_to_threshold * 1.01,
+                "not monotone in compute-bound regime: {w:?}"
+            );
+        }
+    }
+    assert!(
+        pts[1].seconds_to_threshold < pts[0].seconds_to_threshold,
+        "no speedup from 1 -> 2 cores"
+    );
+    // the 1-core model must roughly match the measured serial compute:
+    // workers * worker_seconds ~= compute_col_s * cols * iters
+    let t1 = profile.time_to_threshold(1);
+    let measured_serial = out.stats.worker_seconds * 2.0;
+    assert!(
+        (t1.compute_s / measured_serial) > 0.5 && (t1.compute_s / measured_serial) < 2.0,
+        "calibration off: model {} vs measured-serial {}",
+        t1.compute_s,
+        measured_serial
+    );
+}
+
+#[test]
+fn empty_shards_are_tolerated() {
+    // more workers than samples: some ranks own zero columns
+    let (train, test) = normalized(blobs(4, 6, 2.5, 65), blobs(4, 40, 2.5, 66));
+    let cfg = TrainConfig {
+        dims: vec![4, 3, 1],
+        gamma: 1.0,
+        iters: 4,
+        warmup_iters: 1,
+        workers: 8,
+        seed: 11,
+        ..TrainConfig::default()
+    };
+    let mut trainer = AdmmTrainer::new(cfg, &train, &test).unwrap();
+    let out = trainer.train().unwrap();
+    assert_eq!(out.stats.iters_run, 4);
+    for w in &out.weights {
+        assert!(w.as_slice().iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,254 @@
+//! End-to-end integration tests of the ADMM coordinator on the native
+//! backend: learning on real (synthetic) tasks, worker-count invariance,
+//! warm start, momentum, multiplier-mode behaviour, objective telemetry.
+
+use gradfree_admm::config::{Activation, Backend, MultiplierMode, TrainConfig};
+use gradfree_admm::coordinator::AdmmTrainer;
+use gradfree_admm::data::{blobs, higgs_like, svhn_like, Dataset, Normalizer};
+
+fn normalized(mut train: Dataset, mut test: Dataset) -> (Dataset, Dataset) {
+    let norm = Normalizer::fit(&train.x);
+    norm.apply(&mut train.x);
+    norm.apply(&mut test.x);
+    (train, test)
+}
+
+fn base_cfg() -> TrainConfig {
+    TrainConfig {
+        name: "itest".into(),
+        dims: vec![8, 6, 1],
+        act: Activation::Relu,
+        beta: 1.0,
+        gamma: 1.0, // toy-scale coupling (paper's 10 is tuned for §7 scales)
+        warmup_iters: 4,
+        iters: 30,
+        workers: 3,
+        multiplier_mode: MultiplierMode::Bregman,
+        backend: Backend::Native,
+        init: gradfree_admm::config::InitScheme::Gaussian,
+        ridge: 1e-4,
+        momentum: 0.0,
+        eval_every: 2,
+        seed: 7,
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+#[test]
+fn admm_learns_blobs() {
+    let (train, test) = normalized(blobs(8, 2400, 2.5, 1).split_test(400).0,
+                                   blobs(8, 600, 2.5, 2));
+    let mut trainer = AdmmTrainer::new(base_cfg(), &train, &test).unwrap();
+    let out = trainer.train().unwrap();
+    assert!(
+        out.recorder.best_accuracy() > 0.93,
+        "acc={}",
+        out.recorder.best_accuracy()
+    );
+    // weight shapes are the config's
+    assert_eq!(out.weights[0].shape(), (6, 8));
+    assert_eq!(out.weights[1].shape(), (1, 6));
+}
+
+#[test]
+fn worker_count_does_not_change_learning() {
+    // The transpose-reduction W update sums the same Gram pairs whatever the
+    // sharding; accuracy trajectories should agree closely across worker
+    // counts (exact equality is broken only by float summation order and
+    // per-worker init streams).
+    let d = blobs(8, 2000, 2.5, 3);
+    let (train, test) = normalized(d.clone().split_test(400).0, d.split_test(400).1);
+    let mut accs = Vec::new();
+    for workers in [1usize, 2, 5] {
+        let mut cfg = base_cfg();
+        cfg.workers = workers;
+        let mut t = AdmmTrainer::new(cfg, &train, &test).unwrap();
+        let out = t.train().unwrap();
+        accs.push(out.recorder.best_accuracy());
+    }
+    for w in accs.windows(2) {
+        assert!((w[0] - w[1]).abs() < 0.05, "worker-count divergence: {accs:?}");
+    }
+}
+
+#[test]
+fn svhn_like_reaches_95_with_paper_defaults() {
+    // The paper's §7.1 configuration (γ=10, β=1, warm start) on the
+    // SVHN-like task at reduced scale.
+    let (train, test) = normalized(
+        svhn_like(6000, 4).split_test(1000).0,
+        svhn_like(1500, 5),
+    );
+    let mut cfg = base_cfg();
+    cfg.dims = vec![648, 100, 50, 1];
+    cfg.gamma = 10.0;
+    cfg.init = gradfree_admm::config::InitScheme::Forward; // deep stack
+    cfg.warmup_iters = 6;
+    cfg.iters = 30;
+    cfg.workers = 4;
+    cfg.eval_every = 2;
+    let mut trainer = AdmmTrainer::new(cfg, &train, &test).unwrap();
+    trainer.target_acc = Some(0.95);
+    let out = trainer.train().unwrap();
+    assert!(
+        out.reached_target_at.is_some() || out.recorder.best_accuracy() >= 0.95,
+        "SVHN-like never hit 95%: best={}",
+        out.recorder.best_accuracy()
+    );
+}
+
+#[test]
+fn higgs_like_reaches_64() {
+    let (train, test) = normalized(
+        higgs_like(12000, 6).split_test(2000).0,
+        higgs_like(3000, 7),
+    );
+    let mut cfg = base_cfg();
+    cfg.dims = vec![28, 300, 1];
+    cfg.gamma = 1.0; // calibrated for the synthetic twin (EXPERIMENTS.md)
+    cfg.warmup_iters = 6;
+    cfg.iters = 40;
+    cfg.workers = 4;
+    cfg.eval_every = 2;
+    let mut trainer = AdmmTrainer::new(cfg, &train, &test).unwrap();
+    trainer.target_acc = Some(0.64);
+    let out = trainer.train().unwrap();
+    assert!(
+        out.reached_target_at.is_some() || out.recorder.best_accuracy() >= 0.62,
+        "HIGGS-like never approached 64%: best={}",
+        out.recorder.best_accuracy()
+    );
+}
+
+#[test]
+fn hardsig_activation_trains() {
+    let (train, test) = normalized(blobs(8, 1600, 3.0, 8).split_test(300).0,
+                                   blobs(8, 400, 3.0, 9));
+    let mut cfg = base_cfg();
+    cfg.act = Activation::HardSigmoid;
+    cfg.iters = 40;
+    let mut trainer = AdmmTrainer::new(cfg, &train, &test).unwrap();
+    let out = trainer.train().unwrap();
+    assert!(
+        out.recorder.best_accuracy() > 0.9,
+        "hardsig acc={}",
+        out.recorder.best_accuracy()
+    );
+}
+
+#[test]
+fn momentum_extension_stays_stable() {
+    let (train, test) = normalized(blobs(8, 1600, 2.5, 10).split_test(300).0,
+                                   blobs(8, 400, 2.5, 11));
+    let mut cfg = base_cfg();
+    cfg.momentum = 0.3;
+    let mut trainer = AdmmTrainer::new(cfg, &train, &test).unwrap();
+    let out = trainer.train().unwrap();
+    assert!(
+        out.recorder.best_accuracy() > 0.9,
+        "momentum acc={}",
+        out.recorder.best_accuracy()
+    );
+    let last = out.recorder.points.last().unwrap();
+    assert!(last.train_loss.is_finite());
+}
+
+#[test]
+fn no_multiplier_mode_converges_but_weaker() {
+    // Pure penalty method (λ frozen at 0): still trains, slightly laxer
+    // about matching outputs — checks the warm-start path in isolation.
+    let (train, test) = normalized(blobs(8, 1600, 2.5, 12).split_test(300).0,
+                                   blobs(8, 400, 2.5, 13));
+    let mut cfg = base_cfg();
+    cfg.multiplier_mode = MultiplierMode::NoMultiplier;
+    let mut trainer = AdmmTrainer::new(cfg, &train, &test).unwrap();
+    let out = trainer.train().unwrap();
+    assert!(
+        out.recorder.best_accuracy() > 0.85,
+        "penalty-only acc={}",
+        out.recorder.best_accuracy()
+    );
+}
+
+#[test]
+fn classical_mode_runs_and_is_tracked() {
+    // The paper reports classical per-constraint ADMM as highly unstable;
+    // the ablation bench quantifies that. Here: it must run, and it must
+    // not silently produce NaN weights (instability shows up as divergence
+    // in the penalty telemetry instead).
+    let (train, test) = normalized(blobs(8, 800, 2.5, 14).split_test(200).0,
+                                   blobs(8, 200, 2.5, 15));
+    let mut cfg = base_cfg();
+    cfg.multiplier_mode = MultiplierMode::Classical;
+    cfg.iters = 15;
+    let mut trainer = AdmmTrainer::new(cfg, &train, &test).unwrap();
+    trainer.track_penalty = true;
+    let out = trainer.train().unwrap();
+    for w in &out.weights {
+        assert!(w.as_slice().iter().all(|v| v.is_finite()), "NaN weights");
+    }
+    assert!(out.recorder.points.iter().all(|p| p.penalty.is_finite()));
+}
+
+#[test]
+fn classical_mode_requires_native_backend() {
+    let (train, test) = normalized(blobs(8, 400, 2.5, 16).split_test(100).0,
+                                   blobs(8, 100, 2.5, 17));
+    let mut cfg = base_cfg();
+    cfg.multiplier_mode = MultiplierMode::Classical;
+    cfg.backend = Backend::Pjrt;
+    assert!(AdmmTrainer::new(cfg, &train, &test).is_err());
+}
+
+#[test]
+fn penalty_telemetry_decreases_during_warmup() {
+    let (train, test) = normalized(blobs(8, 1200, 2.5, 18).split_test(300).0,
+                                   blobs(8, 300, 2.5, 19));
+    let mut cfg = base_cfg();
+    cfg.iters = 12;
+    cfg.warmup_iters = 12; // pure penalty phase
+    cfg.eval_every = 1;
+    let mut trainer = AdmmTrainer::new(cfg, &train, &test).unwrap();
+    trainer.track_penalty = true;
+    let out = trainer.train().unwrap();
+    let p = &out.recorder.points;
+    assert!(p.len() >= 6);
+    // The constraint residuals should shrink substantially from the random
+    // initialization over the first iterations.
+    assert!(
+        p.last().unwrap().penalty < p[0].penalty * 0.5,
+        "penalty did not shrink: {} -> {}",
+        p[0].penalty,
+        p.last().unwrap().penalty
+    );
+}
+
+#[test]
+fn dataset_feature_mismatch_rejected() {
+    let (train, test) = normalized(blobs(5, 400, 2.5, 20).split_test(100).0,
+                                   blobs(5, 100, 2.5, 21));
+    let cfg = base_cfg(); // dims[0] = 8 != 5
+    assert!(AdmmTrainer::new(cfg, &train, &test).is_err());
+}
+
+#[test]
+fn stats_and_traffic_are_populated() {
+    let (train, test) = normalized(blobs(8, 800, 2.5, 22).split_test(200).0,
+                                   blobs(8, 200, 2.5, 23));
+    let mut cfg = base_cfg();
+    cfg.iters = 6;
+    let mut trainer = AdmmTrainer::new(cfg, &train, &test).unwrap();
+    let out = trainer.train().unwrap();
+    assert_eq!(out.stats.iters_run, 6);
+    assert!(out.stats.opt_seconds > 0.0);
+    assert!(out.stats.allreduce_bytes_per_iter > 0);
+    assert!(out.stats.broadcast_bytes_per_iter > 0);
+    let profile = trainer.scaling_profile(
+        &out.stats,
+        train.samples(),
+        6,
+        gradfree_admm::cluster::CostModel::default(),
+    );
+    assert!(profile.compute_col_s > 0.0);
+    assert!(profile.time_to_threshold(64).seconds_to_threshold > 0.0);
+}
