@@ -1,8 +1,18 @@
 //! Micro benchmarks: the primitive operations on the training hot path.
-//! Shapes are the paper's SVHN network at a realistic shard width.  Used by
-//! the §Perf pass (EXPERIMENTS.md) to find and verify hot-spot wins.
 //!
-//!   cargo bench --bench micro [-- --cols N]
+//! §1 benchmarks the Gram-pair kernels (`gemm_nt` / `syrk` — the
+//! per-iteration FLOP king) at paper-scale shapes (HIGGS hidden layer,
+//! f ≈ 300, against a shard of n ≈ 5000 sample columns), comparing the
+//! seed's one-dot-at-a-time reference kernel against the current
+//! k-interleaved register-tiled kernel, plus an intra-rank thread sweep
+//! through `linalg::par`.  Results are written machine-readable to
+//! `bench_out/BENCH_GEMM.json` so successive PRs can track the perf
+//! trajectory.
+//!
+//! §2 keeps the SVHN-net shape inventory used by the EXPERIMENTS.md §Perf
+//! log (CSV: bench_out/micro.csv).
+//!
+//!   cargo bench --bench micro [-- --cols N --f N --n N --threads-list 1,2,4]
 
 use gradfree_admm::bench::{time_fn, write_csv};
 use gradfree_admm::cli::Args;
@@ -10,17 +20,194 @@ use gradfree_admm::cluster::CommWorld;
 use gradfree_admm::config::Activation;
 use gradfree_admm::coordinator::updates;
 use gradfree_admm::linalg::{
-    a_update_inverse, cholesky_factor, gemm_nn, gemm_nt, gemm_tn, weight_solve, Matrix,
+    a_update_inverse, cholesky_factor, gemm_nn, gemm_nt, gemm_tn, par, syrk, weight_solve,
+    Matrix,
 };
 use gradfree_admm::nn::Mlp;
 use gradfree_admm::rng::Rng;
 
+/// The seed's Gram kernels, frozen here as the §Perf "before" reference:
+/// a 2×4 tile of *independent* full-length dot products (no k-strip
+/// interleaving, so ~2 loads per FMA) and a triangle-of-dots syrk.
+mod reference {
+    use gradfree_admm::linalg::Matrix;
+
+    #[inline(always)]
+    fn dot_unrolled(x: &[f32], y: &[f32], k: usize) -> f32 {
+        let mut s = [0.0f32; 8];
+        let mut p = 0;
+        while p + 8 <= k {
+            for l in 0..8 {
+                s[l] += x[p + l] * y[p + l];
+            }
+            p += 8;
+        }
+        let mut tail = 0.0f32;
+        while p < k {
+            tail += x[p] * y[p];
+            p += 1;
+        }
+        tail + (s[0] + s[1]) + (s[2] + s[3]) + (s[4] + s[5]) + (s[6] + s[7])
+    }
+
+    pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.cols(), b.cols(), "gemm_nt: contraction mismatch");
+        let (m, n, k) = (a.rows(), b.rows(), a.cols());
+        let mut c = Matrix::zeros(m, n);
+        let mut i = 0;
+        while i < m {
+            let rows_a = (m - i).min(2);
+            let mut j = 0;
+            while j < n {
+                let rows_b = (n - j).min(4);
+                let mut acc = [[0.0f32; 4]; 2];
+                for (di, accr) in acc.iter_mut().enumerate().take(rows_a) {
+                    let arow = a.row(i + di);
+                    for (dj, accv) in accr.iter_mut().enumerate().take(rows_b) {
+                        *accv = dot_unrolled(arow, b.row(j + dj), k);
+                    }
+                }
+                for (di, accr) in acc.iter().enumerate().take(rows_a) {
+                    for (dj, accv) in accr.iter().enumerate().take(rows_b) {
+                        *c.at_mut(i + di, j + dj) = *accv;
+                    }
+                }
+                j += rows_b;
+            }
+            i += rows_a;
+        }
+        c
+    }
+
+    pub fn syrk(a: &Matrix) -> Matrix {
+        let (m, k) = (a.rows(), a.cols());
+        let mut c = Matrix::zeros(m, m);
+        for i in 0..m {
+            let arow = a.row(i);
+            for j in i..m {
+                let v = dot_unrolled(arow, a.row(j), k);
+                *c.at_mut(i, j) = v;
+                *c.at_mut(j, i) = v;
+            }
+        }
+        c
+    }
+}
+
+struct KernelRow {
+    name: &'static str,
+    variant: String,
+    threads: usize,
+    seconds: f64,
+    gflops: f64,
+}
+
+fn write_bench_gemm_json(
+    f: usize,
+    n: usize,
+    rows: &[KernelRow],
+    nt_speedup: f64,
+    syrk_speedup: f64,
+) -> gradfree_admm::Result<String> {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    out.push_str("{\n");
+    let _ = writeln!(out, "  \"schema\": 1,");
+    let _ = writeln!(out, "  \"shape\": {{\"f\": {f}, \"n\": {n}}},");
+    let _ = writeln!(
+        out,
+        "  \"gram_pair_single_thread_speedup\": {{\"gemm_nt\": {nt_speedup:.3}, \"syrk\": {syrk_speedup:.3}}},"
+    );
+    out.push_str("  \"kernels\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        // names/variants are ascii identifiers — no JSON escaping needed
+        let _ = write!(
+            out,
+            "    {{\"name\": \"{}\", \"variant\": \"{}\", \"threads\": {}, \
+             \"seconds_per_iter\": {:.6e}, \"gflops\": {:.3}}}",
+            r.name, r.variant, r.threads, r.seconds, r.gflops
+        );
+        out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    let dir = std::path::Path::new("bench_out");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("BENCH_GEMM.json");
+    std::fs::write(&path, out)?;
+    Ok(path.display().to_string())
+}
+
 fn main() -> gradfree_admm::Result<()> {
     let args = Args::parse();
     let cols: usize = args.parsed_or("cols", 2_000)?;
+    let f: usize = args.parsed_or("f", 300)?;
+    let n: usize = args.parsed_or("n", 5_000)?;
+    let threads_list: Vec<usize> = args
+        .get_or("threads-list", "1,2,4")
+        .split(',')
+        .filter_map(|t| t.trim().parse().ok())
+        .collect();
     let mut rng = Rng::seed_from(1);
-    println!("micro benches (sample cols = {cols}, SVHN-net shapes)\n");
 
+    // ---- §1: Gram-pair kernel before/after at paper scale -------------
+    println!("gram-pair kernels (f = {f}, n = {n}; paper-scale HIGGS shapes)\n");
+    let z = Matrix::randn(f, n, &mut rng);
+    let a = Matrix::randn(f, n, &mut rng);
+    let flops_nt = 2.0 * f as f64 * f as f64 * n as f64;
+    let flops_syrk = f as f64 * (f as f64 + 1.0) * n as f64; // triangle only
+
+    let mut kernel_rows: Vec<KernelRow> = Vec::new();
+    let mut bench_kernel =
+        |name: &'static str, variant: &str, threads: usize, flops: f64, fun: &mut dyn FnMut()| {
+            let r = time_fn(&format!("{name}/{variant}/t{threads}"), 1, 5, fun);
+            let gflops = flops / r.per_iter_s() / 1e9;
+            println!("{}  {:>7.2} GFLOP/s", r.report(), gflops);
+            kernel_rows.push(KernelRow {
+                name,
+                variant: variant.to_string(),
+                threads,
+                seconds: r.per_iter_s(),
+                gflops,
+            });
+            r.per_iter_s()
+        };
+
+    let t_nt_ref = bench_kernel("gemm_nt", "reference", 1, flops_nt, &mut || {
+        let _ = reference::gemm_nt(&z, &a);
+    });
+    let t_nt_new = bench_kernel("gemm_nt", "tiled", 1, flops_nt, &mut || {
+        let _ = gemm_nt(&z, &a);
+    });
+    let t_syrk_ref = bench_kernel("syrk", "reference", 1, flops_syrk, &mut || {
+        let _ = reference::syrk(&a);
+    });
+    let t_syrk_new = bench_kernel("syrk", "tiled", 1, flops_syrk, &mut || {
+        let _ = syrk(&a);
+    });
+
+    // Intra-rank thread sweep through linalg::par (bit-identical results).
+    let mut zat_buf = Matrix::default();
+    let mut aat_buf = Matrix::default();
+    for &t in &threads_list {
+        bench_kernel("gemm_nt", "tiled+par", t, flops_nt, &mut || {
+            par::gemm_nt_into(&z, &a, &mut zat_buf, t);
+        });
+        bench_kernel("syrk", "tiled+par", t, flops_syrk, &mut || {
+            par::syrk_into(&a, &mut aat_buf, t);
+        });
+    }
+
+    let nt_speedup = t_nt_ref / t_nt_new;
+    let syrk_speedup = t_syrk_ref / t_syrk_new;
+    println!(
+        "\nsingle-thread speedup vs seed reference: gemm_nt {nt_speedup:.2}x, \
+         syrk {syrk_speedup:.2}x"
+    );
+    let json_path = write_bench_gemm_json(f, n, &kernel_rows, nt_speedup, syrk_speedup)?;
+    println!("written: {json_path}\n");
+
+    // ---- §2: SVHN-net shape inventory (EXPERIMENTS.md §Perf log) ------
+    println!("micro benches (sample cols = {cols}, SVHN-net shapes)\n");
     let a0 = Matrix::randn(648, cols, &mut rng);
     let z1 = Matrix::randn(100, cols, &mut rng);
     let w1 = Matrix::randn(100, 648, &mut rng);
@@ -38,8 +225,8 @@ fn main() -> gradfree_admm::Result<()> {
 
     // Gram pair, layer 1 (the dominant op before input-Gram caching)
     run(
-        "gram_nt z1*a0T+a0*a0T (transpose reduce)",
-        2.0 * cols as f64 * (100.0 * 648.0 + 648.0 * 648.0),
+        "gram z1*a0T + syrk(a0) (transpose reduce)",
+        2.0 * cols as f64 * 100.0 * 648.0 + cols as f64 * 648.0 * 649.0,
         &mut || {
             let _ = updates::gram(&z1, &a0);
         },
@@ -52,26 +239,40 @@ fn main() -> gradfree_admm::Result<()> {
     run("gemm_nn W1*a0 (m for z-update)", 2.0 * cols as f64 * 100.0 * 648.0, &mut || {
         let _ = gemm_nn(&w1, &a0);
     });
-    // a-update pipeline
+    // a-update pipeline (zero-allocation _into path, as the workers run it)
     let minv = a_update_inverse(&w2, 1.0, 10.0)?;
+    let mut rhs_buf = Matrix::default();
+    let mut a_buf = Matrix::default();
     run(
-        "a_update (WtZ + minv solve-as-matmul)",
+        "a_update_into (WtZ + minv solve-as-matmul)",
         2.0 * cols as f64 * (50.0 * 100.0 + 100.0 * 100.0),
         &mut || {
-            let _ = updates::a_update(&minv, &w2, &z2, &z1, 1.0, 10.0, Activation::Relu);
+            updates::a_update_into(
+                &minv,
+                &w2,
+                &z2,
+                &z1,
+                1.0,
+                10.0,
+                Activation::Relu,
+                1,
+                &mut rhs_buf,
+                &mut a_buf,
+            );
         },
     );
     // gemm_tn alone
     run("gemm_tn W2T*z2", 2.0 * cols as f64 * 50.0 * 100.0, &mut || {
         let _ = gemm_tn(&w2, &z2);
     });
-    // entry-wise z solves
+    // entry-wise z solves (in place)
     let m1 = gemm_nn(&w1, &a0);
-    run("z_hidden entry-wise global solve", 0.0, &mut || {
-        let _ = updates::z_hidden(&a1, &m1, 10.0, 1.0, Activation::Relu);
+    let mut z_buf = Matrix::default();
+    run("z_hidden_into entry-wise global solve", 0.0, &mut || {
+        updates::z_hidden_into(&a1, &m1, 10.0, 1.0, Activation::Relu, &mut z_buf);
     });
     // leader solves
-    let aat = gemm_nt(&a0, &a0);
+    let aat = syrk(&a0);
     let zat = gemm_nt(&z1, &a0);
     run("weight_solve 100x648 (chol 648 + solve)", 648f64.powi(3) / 3.0, &mut || {
         let _ = weight_solve(&zat, &aat, 1e-4).unwrap();
@@ -79,15 +280,17 @@ fn main() -> gradfree_admm::Result<()> {
     run("cholesky_factor 648", 648f64.powi(3) / 3.0, &mut || {
         let _ = cholesky_factor(&aat).unwrap();
     });
-    // native forward/backward (baseline substrate)
+    // native forward/backward (baseline substrate, zero-allocation path)
     let mlp = Mlp::new(vec![648, 100, 50, 1], Activation::Relu)?;
     let ws = mlp.init_weights(&mut rng);
     let y = Matrix::from_fn(1, cols, |_, c| (c % 2) as f32);
+    let mut work = gradfree_admm::nn::MlpWorkspace::default();
+    let mut grads: Vec<Matrix> = Vec::new();
     run(
-        "mlp loss_grad (fwd+bwd)",
+        "mlp loss_grad_into (fwd+bwd)",
         6.0 * cols as f64 * (648.0 * 100.0 + 100.0 * 50.0 + 50.0),
         &mut || {
-            let _ = mlp.loss_grad(&ws, &a0, &y);
+            let _ = mlp.loss_grad_into(&ws, &a0, &y, &mut work, &mut grads);
         },
     );
     // collective (4 ranks, gram-pair sized buffer)

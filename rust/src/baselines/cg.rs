@@ -10,8 +10,11 @@ use crate::Result;
 use super::vecops as v;
 use super::{BaselineOutcome, EvalHarness, Objective};
 
-/// Backtracking Armijo line search along `dir` from `(ws, loss, grad)`.
-/// Returns the accepted step (0.0 when the search fails entirely).
+/// Backtracking Armijo line search along `dir` from `(ws, loss, grad)`,
+/// reusing the caller's `trial` buffer for every probe point.  On success
+/// `trial` holds the accepted point and the returned gradient is the one
+/// evaluated there (so the caller never re-evaluates); a step of 0.0 means
+/// the search failed entirely.
 fn line_search(
     obj: &mut dyn Objective,
     ws: &[crate::linalg::Matrix],
@@ -19,19 +22,20 @@ fn line_search(
     grad_dot_dir: f64,
     dir: &[crate::linalg::Matrix],
     t0: f32,
-) -> Result<(f32, f64)> {
+    trial: &mut Vec<crate::linalg::Matrix>,
+) -> Result<(f32, f64, Option<Vec<crate::linalg::Matrix>>)> {
     const C1: f64 = 1e-4;
     let mut t = t0;
     for _ in 0..30 {
-        let mut trial = v::clone_vec(ws);
-        v::axpy(&mut trial, t, dir);
-        let (l_new, _) = obj.loss_grad(&trial)?;
+        v::copy_into(trial, ws);
+        v::axpy(trial, t, dir);
+        let (l_new, g_new) = obj.loss_grad(trial)?;
         if l_new <= loss + C1 * t as f64 * grad_dot_dir {
-            return Ok((t, l_new));
+            return Ok((t, l_new, Some(g_new)));
         }
         t *= 0.5;
     }
-    Ok((0.0, loss))
+    Ok((0.0, loss, None))
 }
 
 /// Full-batch PR+ CG.  `max_iters` bounds outer iterations; the harness's
@@ -53,6 +57,10 @@ pub fn train_cg(
     let n = obj.samples() as f64;
     let (mut loss, mut grad) = harness.timed(|| obj.loss_grad(&ws))?;
     let mut dir = v::neg(&grad);
+    // Reused across iterations: line-search trial point and the next
+    // direction (no per-iteration ensemble clones).
+    let mut trial: Vec<crate::linalg::Matrix> = Vec::new();
+    let mut dir_next: Vec<crate::linalg::Matrix> = Vec::new();
 
     for it in 0..max_iters {
         let done = harness.record(it, &ws, loss / n);
@@ -63,7 +71,8 @@ pub fn train_cg(
             let mut gdd = v::dot(&grad, &dir);
             if gdd >= 0.0 {
                 // not a descent direction: restart with steepest descent
-                dir = v::neg(&grad);
+                v::copy_into(&mut dir, &grad);
+                v::scale(&mut dir, -1.0);
                 gdd = v::dot(&grad, &dir);
                 if gdd >= 0.0 {
                     return Ok(true); // zero gradient: converged
@@ -71,20 +80,25 @@ pub fn train_cg(
             }
             // scale-aware initial step
             let t0 = (1.0 / (1.0 + v::norm(&dir))).min(1.0) as f32;
-            let (t, l_new) = line_search(obj, &ws, loss, gdd, &dir, t0.max(1e-6))?;
+            let (t, l_new, g_new) =
+                line_search(obj, &ws, loss, gdd, &dir, t0.max(1e-6), &mut trial)?;
             if t == 0.0 {
                 return Ok(true); // line search failed: practical convergence
             }
-            v::axpy(&mut ws, t, &dir);
-            let (_, g_new) = obj.loss_grad(&ws)?;
+            let g_new = g_new.expect("accepted line-search step carries its gradient");
+            // `trial` holds the accepted point ws + t·dir (same arithmetic
+            // as an axpy on ws); swap it in and reuse the old weights as
+            // next iteration's trial buffer — no re-evaluation, no clone.
+            std::mem::swap(&mut ws, &mut trial);
             loss = l_new;
             // PR+ beta
             let y = v::sub(&g_new, &grad);
             let denom = v::dot(&grad, &grad).max(1e-30);
             let beta = (v::dot(&g_new, &y) / denom).max(0.0) as f32;
-            let mut new_dir = v::neg(&g_new);
-            v::axpy(&mut new_dir, beta, &dir);
-            dir = new_dir;
+            v::copy_into(&mut dir_next, &g_new);
+            v::scale(&mut dir_next, -1.0);
+            v::axpy(&mut dir_next, beta, &dir);
+            std::mem::swap(&mut dir, &mut dir_next);
             grad = g_new;
             Ok(false)
         })?;

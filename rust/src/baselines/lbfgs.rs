@@ -13,33 +13,34 @@ use crate::Result;
 use super::vecops as v;
 use super::{BaselineOutcome, EvalHarness, Objective};
 
-/// Two-loop recursion: H·g with implicit inverse-Hessian memory.
-fn two_loop(
+/// Two-loop recursion: H·g with implicit inverse-Hessian memory, written
+/// into the caller-owned `q` buffer (reused across iterations).
+fn two_loop_into(
     grad: &[Matrix],
     s_hist: &VecDeque<Vec<Matrix>>,
     y_hist: &VecDeque<Vec<Matrix>>,
-) -> Vec<Matrix> {
-    let mut q = v::clone_vec(grad);
+    q: &mut Vec<Matrix>,
+) {
+    v::copy_into(q, grad);
     let k = s_hist.len();
     let mut alphas = vec![0.0f64; k];
     let mut rhos = vec![0.0f64; k];
     for i in (0..k).rev() {
         rhos[i] = 1.0 / v::dot(&y_hist[i], &s_hist[i]).max(1e-30);
-        alphas[i] = rhos[i] * v::dot(&s_hist[i], &q);
-        v::axpy(&mut q, -alphas[i] as f32, &y_hist[i]);
+        alphas[i] = rhos[i] * v::dot(&s_hist[i], q);
+        v::axpy(q, -alphas[i] as f32, &y_hist[i]);
     }
     // initial scaling γ = sᵀy / yᵀy
     if k > 0 {
         let last = k - 1;
         let gamma =
             v::dot(&s_hist[last], &y_hist[last]) / v::dot(&y_hist[last], &y_hist[last]).max(1e-30);
-        v::scale(&mut q, gamma.max(1e-8) as f32);
+        v::scale(q, gamma.max(1e-8) as f32);
     }
     for i in 0..k {
-        let beta = rhos[i] * v::dot(&y_hist[i], &q);
-        v::axpy(&mut q, (alphas[i] - beta) as f32, &s_hist[i]);
+        let beta = rhos[i] * v::dot(&y_hist[i], q);
+        v::axpy(q, (alphas[i] - beta) as f32, &s_hist[i]);
     }
-    q
 }
 
 /// Full-batch L-BFGS with memory `mem`.
@@ -62,19 +63,25 @@ pub fn train_lbfgs(
     let (mut loss, mut grad) = harness.timed(|| obj.loss_grad(&ws))?;
     let mut s_hist: VecDeque<Vec<Matrix>> = VecDeque::new();
     let mut y_hist: VecDeque<Vec<Matrix>> = VecDeque::new();
+    // Reused across iterations: the search direction and the line-search
+    // trial point (no per-backtrack ensemble clones).
+    let mut dir: Vec<Matrix> = Vec::new();
+    let mut trial: Vec<Matrix> = Vec::new();
 
     for it in 0..max_iters {
         if harness.record(it, &ws, loss / n) {
             break;
         }
         let converged = harness.timed(|| -> Result<bool> {
-            let mut dir = v::neg(&two_loop(&grad, &s_hist, &y_hist));
+            two_loop_into(&grad, &s_hist, &y_hist, &mut dir);
+            v::scale(&mut dir, -1.0);
             let mut gdd = v::dot(&grad, &dir);
             if gdd >= 0.0 {
                 // memory gave a non-descent direction: reset
                 s_hist.clear();
                 y_hist.clear();
-                dir = v::neg(&grad);
+                v::copy_into(&mut dir, &grad);
+                v::scale(&mut dir, -1.0);
                 gdd = v::dot(&grad, &dir);
                 if gdd >= 0.0 {
                     return Ok(true);
@@ -85,16 +92,16 @@ pub fn train_lbfgs(
             let mut t = 1.0f32;
             let mut accepted = None;
             for _ in 0..30 {
-                let mut trial = v::clone_vec(&ws);
+                v::copy_into(&mut trial, &ws);
                 v::axpy(&mut trial, t, &dir);
                 let (l_new, g_new) = obj.loss_grad(&trial)?;
                 if l_new <= loss + C1 * t as f64 * gdd {
-                    accepted = Some((t, trial, l_new, g_new));
+                    accepted = Some((t, l_new, g_new));
                     break;
                 }
                 t *= 0.5;
             }
-            let Some((t, ws_new, l_new, g_new)) = accepted else {
+            let Some((t, l_new, g_new)) = accepted else {
                 return Ok(true); // practical convergence
             };
             let mut s = v::clone_vec(&dir);
@@ -108,7 +115,9 @@ pub fn train_lbfgs(
                     y_hist.pop_front();
                 }
             }
-            ws = ws_new;
+            // `trial` holds the accepted point; swap it in and keep the old
+            // weights as next iteration's trial buffer.
+            std::mem::swap(&mut ws, &mut trial);
             loss = l_new;
             grad = g_new;
             Ok(false)

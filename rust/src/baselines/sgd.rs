@@ -2,7 +2,7 @@
 
 use crate::data::Dataset;
 use crate::linalg::Matrix;
-use crate::nn::Mlp;
+use crate::nn::{Mlp, MlpWorkspace};
 use crate::rng::Rng;
 use crate::Result;
 
@@ -52,13 +52,20 @@ pub fn train_sgd(
     harness.target_acc = target_acc;
     let mut last_loss = f64::NAN;
 
+    // Persistent step buffers: minibatch, forward/backward scratch and
+    // gradients all reuse their heap allocations across steps.
+    let mut bx = Matrix::default();
+    let mut by = Matrix::default();
+    let mut work = MlpWorkspace::default();
+    let mut grads: Vec<Matrix> = Vec::new();
+
     let mut step = 0usize;
     'outer: for _epoch in 0..opts.epochs {
         for _ in 0..steps_per_epoch {
             let idx = rng.sample_indices(n, batch);
-            let (bx, by) = gather_columns(train, &idx);
+            gather_columns_into(train, &idx, &mut bx, &mut by);
             harness.timed(|| {
-                let (loss, grads) = mlp.loss_grad(&ws, &bx, &by);
+                let loss = mlp.loss_grad_into(&ws, &bx, &by, &mut work, &mut grads);
                 last_loss = loss / batch as f64;
                 let scale = opts.lr / batch as f32;
                 for ((w, v), g) in ws.iter_mut().zip(&mut velocity).zip(&grads) {
@@ -82,17 +89,25 @@ pub fn train_sgd(
     })
 }
 
-/// Copy the selected columns into a dense minibatch.
-fn gather_columns(d: &Dataset, idx: &[usize]) -> (Matrix, Matrix) {
+/// Copy the selected columns into caller-owned minibatch buffers.
+fn gather_columns_into(d: &Dataset, idx: &[usize], x: &mut Matrix, y: &mut Matrix) {
     let f = d.features();
-    let mut x = Matrix::zeros(f, idx.len());
-    let mut y = Matrix::zeros(1, idx.len());
+    x.resize(f, idx.len());
+    y.resize(1, idx.len());
     for (j, &c) in idx.iter().enumerate() {
         for r in 0..f {
             *x.at_mut(r, j) = d.x.at(r, c);
         }
         *y.at_mut(0, j) = d.y.at(0, c);
     }
+}
+
+/// Copy the selected columns into a dense minibatch.
+#[cfg(test)]
+fn gather_columns(d: &Dataset, idx: &[usize]) -> (Matrix, Matrix) {
+    let mut x = Matrix::default();
+    let mut y = Matrix::default();
+    gather_columns_into(d, idx, &mut x, &mut y);
     (x, y)
 }
 

@@ -38,6 +38,19 @@ pub fn clone_vec(a: &[Matrix]) -> Vec<Matrix> {
     a.to_vec()
 }
 
+/// Copy `src` into `dst`, reusing dst's existing matrix buffers — the
+/// line-search/trial-point workhorse (zero allocation once warmed up).
+pub fn copy_into(dst: &mut Vec<Matrix>, src: &[Matrix]) {
+    dst.truncate(src.len());
+    let have = dst.len();
+    for (d, s) in dst.iter_mut().zip(&src[..have]) {
+        d.copy_from(s);
+    }
+    for s in &src[have..] {
+        dst.push(s.clone());
+    }
+}
+
 /// `a - b` as a new ensemble.
 pub fn sub(a: &[Matrix], b: &[Matrix]) -> Vec<Matrix> {
     let mut out = a.to_vec();
@@ -70,6 +83,21 @@ mod tests {
         let b = v(&[3.0, -1.0]);
         assert!((dot(&a, &b) - 1.0).abs() < 1e-12);
         assert!((norm(&a) - 5f64.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn copy_into_reuses_and_matches() {
+        let src = v(&[1.0, 2.0, 3.0]);
+        let mut dst: Vec<Matrix> = Vec::new();
+        copy_into(&mut dst, &src);
+        assert_eq!(dst[0].as_slice(), src[0].as_slice());
+        // reuse with same shapes
+        let src2 = v(&[4.0, 5.0, 6.0]);
+        copy_into(&mut dst, &src2);
+        assert_eq!(dst[0].as_slice(), src2[0].as_slice());
+        // shrink
+        copy_into(&mut dst, &[]);
+        assert!(dst.is_empty());
     }
 
     #[test]

@@ -153,6 +153,11 @@ pub struct TrainConfig {
     pub iters: usize,
     /// Simulated MPI ranks (worker threads).
     pub workers: usize,
+    /// Intra-rank threads for the dense kernels (`linalg::par`).  Default 1:
+    /// ranks are themselves threads, so nesting only pays off when cores
+    /// outnumber workers.  Parallel kernels are bit-identical to serial at
+    /// any setting (see `linalg::par`).
+    pub threads: usize,
     pub multiplier_mode: MultiplierMode,
     pub backend: Backend,
     pub init: InitScheme,
@@ -179,6 +184,7 @@ impl Default for TrainConfig {
             warmup_iters: 10,
             iters: 60,
             workers: 4,
+            threads: 1,
             multiplier_mode: MultiplierMode::Bregman,
             backend: Backend::Native,
             init: InitScheme::Gaussian,
@@ -201,6 +207,7 @@ impl TrainConfig {
         anyhow::ensure!(self.dims.iter().all(|&d| d > 0), "zero-width layer");
         anyhow::ensure!(self.beta > 0.0 && self.gamma > 0.0, "penalties must be positive");
         anyhow::ensure!(self.workers >= 1, "need at least one worker");
+        anyhow::ensure!(self.threads >= 1, "need at least one intra-rank thread");
         anyhow::ensure!(self.iters >= 1, "need at least one iteration");
         anyhow::ensure!(self.eval_every >= 1, "eval_every must be >= 1");
         anyhow::ensure!((0.0..1.0).contains(&self.momentum), "momentum in [0,1)");
@@ -221,6 +228,7 @@ impl TrainConfig {
                 "warmup_iters" => c.warmup_iters = val.as_usize()?,
                 "iters" => c.iters = val.as_usize()?,
                 "workers" => c.workers = val.as_usize()?,
+                "threads" => c.threads = val.as_usize()?,
                 "multiplier_mode" => c.multiplier_mode = MultiplierMode::parse(val.as_str()?)?,
                 "backend" => c.backend = Backend::parse(val.as_str()?)?,
                 "init" => c.init = InitScheme::parse(val.as_str()?)?,
@@ -271,6 +279,9 @@ impl TrainConfig {
         }
         if let Some(v) = args.get("workers") {
             self.workers = v.parse()?;
+        }
+        if let Some(v) = args.get("threads") {
+            self.threads = v.parse()?;
         }
         if let Some(v) = args.get("multiplier-mode") {
             self.multiplier_mode = MultiplierMode::parse(v)?;

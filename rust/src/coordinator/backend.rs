@@ -12,7 +12,7 @@
 
 use crate::config::{Activation, Backend, TrainConfig};
 use crate::coordinator::updates;
-use crate::linalg::{gemm_nn, Matrix};
+use crate::linalg::{gemm_nn, par, Matrix};
 use crate::nn::Mlp;
 use crate::runtime::RuntimeContext;
 use crate::Result;
@@ -83,12 +83,60 @@ impl WorkerBackendImpl {
         }
     }
 
+    /// Gram pair into caller-owned buffers — the native arm is the
+    /// allocation-free syrk-routed hot path; PJRT computes through the
+    /// artifacts and copies out (the artifact marshaling allocates anyway).
+    pub fn gram_into(
+        &mut self,
+        l: usize,
+        z: &Matrix,
+        a_prev: &Matrix,
+        threads: usize,
+        zat: &mut Matrix,
+        aat: &mut Matrix,
+    ) -> Result<()> {
+        match self {
+            Self::Native(_) => {
+                updates::gram_into(z, a_prev, threads, zat, aat);
+                Ok(())
+            }
+            Self::Pjrt(p) => {
+                let (zr, ar) = p.gram(l, z, a_prev)?;
+                zat.copy_from(&zr);
+                aat.copy_from(&ar);
+                Ok(())
+            }
+        }
+    }
+
     /// Just `z a_prevᵀ` — used when the `a aᵀ` half is cached (layer 1's
     /// input Gram is iteration-invariant).
     pub fn zat_only(&mut self, l: usize, z: &Matrix, a_prev: &Matrix) -> Result<Matrix> {
         match self {
             Self::Native(_) => Ok(crate::linalg::gemm_nt(z, a_prev)),
             Self::Pjrt(p) => p.zat_only(l, z, a_prev),
+        }
+    }
+
+    /// `zat_only` into a caller-owned buffer.
+    pub fn zat_only_into(
+        &mut self,
+        l: usize,
+        z: &Matrix,
+        a_prev: &Matrix,
+        threads: usize,
+        zat: &mut Matrix,
+    ) -> Result<()> {
+        match self {
+            Self::Native(_) => {
+                par::gemm_nt_into(z, a_prev, zat, threads);
+                Ok(())
+            }
+            Self::Pjrt(p) => {
+                let zr = p.zat_only(l, z, a_prev)?;
+                zat.copy_from(&zr);
+                Ok(())
+            }
         }
     }
 
@@ -108,6 +156,35 @@ impl WorkerBackendImpl {
         }
     }
 
+    /// `a_update` writing into a caller-owned activation buffer, with a
+    /// caller-owned RHS scratch (the worker's `Workspace`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn a_update_into(
+        &mut self,
+        l: usize,
+        minv: &Matrix,
+        w_next: &Matrix,
+        z_next: &Matrix,
+        z_l: &Matrix,
+        threads: usize,
+        rhs: &mut Matrix,
+        out: &mut Matrix,
+    ) -> Result<()> {
+        match self {
+            Self::Native(n) => {
+                updates::a_update_into(
+                    minv, w_next, z_next, z_l, n.beta, n.gamma, n.act, threads, rhs, out,
+                );
+                Ok(())
+            }
+            Self::Pjrt(p) => {
+                let a = p.a_update(l, minv, w_next, z_next, z_l)?;
+                out.copy_from(&a);
+                Ok(())
+            }
+        }
+    }
+
     pub fn z_hidden(&mut self, l: usize, w: &Matrix, a_prev: &Matrix, a: &Matrix) -> Result<Matrix> {
         match self {
             Self::Native(n) => {
@@ -115,6 +192,33 @@ impl WorkerBackendImpl {
                 Ok(updates::z_hidden(a, &m, n.gamma, n.beta, n.act))
             }
             Self::Pjrt(p) => p.z_hidden(l, w, a_prev, a),
+        }
+    }
+
+    /// `z_hidden` writing into a caller-owned z buffer; `m` is the worker's
+    /// linear-guess scratch.
+    #[allow(clippy::too_many_arguments)]
+    pub fn z_hidden_into(
+        &mut self,
+        l: usize,
+        w: &Matrix,
+        a_prev: &Matrix,
+        a: &Matrix,
+        threads: usize,
+        m: &mut Matrix,
+        out: &mut Matrix,
+    ) -> Result<()> {
+        match self {
+            Self::Native(n) => {
+                par::gemm_nn_into(w, a_prev, m, threads);
+                updates::z_hidden_into(a, m, n.gamma, n.beta, n.act, out);
+                Ok(())
+            }
+            Self::Pjrt(p) => {
+                let z = p.z_hidden(l, w, a_prev, a)?;
+                out.copy_from(&z);
+                Ok(())
+            }
         }
     }
 
@@ -132,6 +236,35 @@ impl WorkerBackendImpl {
                 Ok((updates::z_out(y, &m, lam, n.beta), m))
             }
             Self::Pjrt(p) => p.z_out(w, a_prev, y, lam),
+        }
+    }
+
+    /// `z_out` writing `z_L` into a caller-owned buffer and the linear
+    /// guess `m = W_L a_{L-1}` into the worker's scratch (the λ-update
+    /// reads it back).
+    #[allow(clippy::too_many_arguments)]
+    pub fn z_out_into(
+        &mut self,
+        w: &Matrix,
+        a_prev: &Matrix,
+        y: &Matrix,
+        lam: &Matrix,
+        threads: usize,
+        m: &mut Matrix,
+        out: &mut Matrix,
+    ) -> Result<()> {
+        match self {
+            Self::Native(n) => {
+                par::gemm_nn_into(w, a_prev, m, threads);
+                updates::z_out_into(y, m, lam, n.beta, out);
+                Ok(())
+            }
+            Self::Pjrt(p) => {
+                let (z, mm) = p.z_out(w, a_prev, y, lam)?;
+                out.copy_from(&z);
+                m.copy_from(&mm);
+                Ok(())
+            }
         }
     }
 

@@ -31,7 +31,7 @@
 
 use crate::config::Activation;
 use crate::coordinator::updates;
-use crate::linalg::{gemm_nn, gemm_nt, gemm_tn, solve_spd, weight_solve, Matrix};
+use crate::linalg::{gemm_nn, gemm_nt, gemm_tn, solve_spd, syrk, weight_solve, Matrix};
 use crate::metrics::{CurvePoint, Recorder, Stopwatch};
 use crate::rng::Rng;
 use crate::Result;
@@ -212,7 +212,8 @@ impl RnnAdmm {
         for t in 0..t_steps {
             let s = self.stacked_input(t);
             zat.add_assign(&gemm_nt(&self.zs[t], &s));
-            aat.add_assign(&gemm_nt(&s, &s));
+            // explicit symmetric kernel — the half-FLOP self-Gram path
+            aat.add_assign(&syrk(&s));
         }
         let w = weight_solve(&zat, &aat, self.cfg.ridge)?;
         // split back into Wx | Wh

@@ -18,7 +18,7 @@ use crate::cluster::{CostModel, ScalingProfile};
 use crate::config::{Backend, MultiplierMode, TrainConfig};
 use crate::coordinator::worker::WorkerPool;
 use crate::data::Dataset;
-use crate::linalg::{a_update_inverse, weight_solve, Matrix};
+use crate::linalg::{a_update_inverse, weight_solve_into, Matrix, WeightSolveScratch};
 use crate::metrics::{CurvePoint, Recorder, Stopwatch};
 use crate::nn::Mlp;
 use crate::Result;
@@ -54,6 +54,10 @@ pub struct AdmmTrainer {
     pool: WorkerPool,
     weights: Vec<Matrix>,
     prev_weights: Option<Vec<Matrix>>,
+    /// Reusable leader-side intermediates for the per-layer ridge solve
+    /// (the output W itself is freshly owned — it moves into `weights` and
+    /// the broadcast).
+    solve_scratch: WeightSolveScratch,
     test_x: Matrix,
     test_y: Matrix,
     eval_mlp: Mlp,
@@ -98,6 +102,7 @@ impl AdmmTrainer {
             pool,
             weights,
             prev_weights: None,
+            solve_scratch: WeightSolveScratch::default(),
             eval_mlp,
             target_acc: None,
             track_penalty: false,
@@ -121,12 +126,13 @@ impl AdmmTrainer {
         let mut leader_s = 0.0;
 
         for l in 1..=layers {
-            // (1) transpose-reduction Gram reduce
+            // (1) transpose-reduction Gram reduce (into pool-owned buffers)
             let (zat, aat) = self.pool.gram_reduce(l)?;
 
             // (2) leader solves
             let sw = Stopwatch::start();
-            let w_solved = weight_solve(&zat, &aat, self.cfg.ridge)?;
+            let mut w_solved = Matrix::default();
+            weight_solve_into(zat, aat, self.cfg.ridge, &mut self.solve_scratch, &mut w_solved)?;
             let w_new = self.apply_momentum(l - 1, w_solved);
             let minv = if l < layers {
                 // uses the OLD W_{l+1} (updated later this sweep) — exactly
@@ -137,17 +143,18 @@ impl AdmmTrainer {
             };
             leader_s += sw.elapsed_s();
 
-            // (3) worker phases
+            // (3) worker phases (operands move into a shared Arc broadcast)
             if l < layers {
                 let w_next_old = self.weights[l].clone();
-                self.pool.a_update(l, minv.as_ref().unwrap(), &w_next_old)?;
+                self.pool
+                    .a_update(l, minv.expect("hidden layers factor minv"), w_next_old)?;
                 self.weights[l - 1] = w_new;
-                self.pool.z_hidden(l, &self.weights[l - 1])?;
+                self.pool.z_hidden(l, self.weights[l - 1].clone())?;
             } else {
                 self.weights[l - 1] = w_new;
                 let update_lambda =
                     past_warmup && self.cfg.multiplier_mode == MultiplierMode::Bregman;
-                self.pool.z_out(&self.weights[l - 1], update_lambda)?;
+                self.pool.z_out(self.weights[l - 1].clone(), update_lambda)?;
             }
         }
 

@@ -8,7 +8,42 @@
 //! the artifacts and the backend for γ/β sweeps.
 
 use crate::config::Activation;
-use crate::linalg::{gemm_nn, gemm_nt, Matrix};
+use crate::linalg::{gemm_nn, par, Matrix};
+
+/// Per-worker scratch for the Algorithm-1 hot loop: pre-sized buffers for
+/// the linear guess `m = W a` and the a-update RHS, plus the intra-rank
+/// thread count for the dense kernels.  (The Gram-pair buffers are NOT
+/// here — they are leader-owned and recycled through the command channels;
+/// see `WorkerPool::gram_bufs`.)  After the first iteration warms every
+/// buffer to its steady shape, a full ADMM sweep performs zero heap
+/// allocation in the worker update phases (asserted by the
+/// `alloc_regression` integration test).
+pub struct Workspace {
+    /// Linear guess `m = W a_prev` (also holds `m = W_L a_{L-1}` for the
+    /// λ-update after the z_L phase).
+    pub m: Matrix,
+    /// a-update right-hand side `β Wᵀz + γ h(z)`.
+    pub rhs: Matrix,
+    /// Intra-rank threads for `linalg::par` (1 = serial, the default —
+    /// ranks are already threads).
+    pub threads: usize,
+}
+
+impl Workspace {
+    pub fn new(threads: usize) -> Self {
+        Workspace {
+            m: Matrix::default(),
+            rhs: Matrix::default(),
+            threads: threads.max(1),
+        }
+    }
+}
+
+impl Default for Workspace {
+    fn default() -> Self {
+        Self::new(1)
+    }
+}
 
 /// Entry-wise objective of the hidden z-update (eq. 7).
 #[inline(always)]
@@ -51,8 +86,22 @@ pub fn z_hidden_scalar(a: f32, m: f32, gamma: f32, beta: f32, act: Activation) -
 
 /// Hidden-layer z-update over a panel: `argmin γ‖a−h(z)‖² + β‖z−m‖²`.
 pub fn z_hidden(a: &Matrix, m: &Matrix, gamma: f32, beta: f32, act: Activation) -> Matrix {
+    let mut out = Matrix::default();
+    z_hidden_into(a, m, gamma, beta, act, &mut out);
+    out
+}
+
+/// `z_hidden` into a caller-owned buffer (zero allocation in steady state).
+pub fn z_hidden_into(
+    a: &Matrix,
+    m: &Matrix,
+    gamma: f32,
+    beta: f32,
+    act: Activation,
+    out: &mut Matrix,
+) {
     assert_eq!(a.shape(), m.shape());
-    let mut out = Matrix::zeros(a.rows(), a.cols());
+    out.resize(a.rows(), a.cols());
     for ((o, &av), &mv) in out
         .as_mut_slice()
         .iter_mut()
@@ -61,7 +110,6 @@ pub fn z_hidden(a: &Matrix, m: &Matrix, gamma: f32, beta: f32, act: Activation) 
     {
         *o = z_hidden_scalar(av, mv, gamma, beta, act);
     }
-    out
 }
 
 /// Paper §6 separable hinge, entry-wise.
@@ -104,9 +152,16 @@ pub fn z_out_scalar(y: f32, m: f32, lam: f32, beta: f32) -> f32 {
 
 /// Output-layer z_L update over a panel.
 pub fn z_out(y: &Matrix, m: &Matrix, lam: &Matrix, beta: f32) -> Matrix {
+    let mut out = Matrix::default();
+    z_out_into(y, m, lam, beta, &mut out);
+    out
+}
+
+/// `z_out` into a caller-owned buffer (zero allocation in steady state).
+pub fn z_out_into(y: &Matrix, m: &Matrix, lam: &Matrix, beta: f32, out: &mut Matrix) {
     assert_eq!(y.shape(), m.shape());
     assert_eq!(lam.shape(), m.shape());
-    let mut out = Matrix::zeros(m.rows(), m.cols());
+    out.resize(m.rows(), m.cols());
     for (i, o) in out.as_mut_slice().iter_mut().enumerate() {
         *o = z_out_scalar(
             y.as_slice()[i],
@@ -115,7 +170,6 @@ pub fn z_out(y: &Matrix, m: &Matrix, lam: &Matrix, beta: f32) -> Matrix {
             beta,
         );
     }
-    out
 }
 
 /// Activation update (eq. 6): `a = minv (β w_nextᵀ z_next + γ h(z_l))`.
@@ -128,12 +182,34 @@ pub fn a_update(
     gamma: f32,
     act: Activation,
 ) -> Matrix {
-    let mut rhs = crate::linalg::gemm_tn(w_next, z_next);
+    let mut rhs = Matrix::default();
+    let mut out = Matrix::default();
+    a_update_into(minv, w_next, z_next, z_l, beta, gamma, act, 1, &mut rhs, &mut out);
+    out
+}
+
+/// `a_update` into a caller-owned buffer, with a caller-owned RHS scratch
+/// (zero allocation in steady state).  `threads` parallelizes the two
+/// GEMMs intra-rank (bit-identical to serial — see `linalg::par`).
+#[allow(clippy::too_many_arguments)]
+pub fn a_update_into(
+    minv: &Matrix,
+    w_next: &Matrix,
+    z_next: &Matrix,
+    z_l: &Matrix,
+    beta: f32,
+    gamma: f32,
+    act: Activation,
+    threads: usize,
+    rhs: &mut Matrix,
+    out: &mut Matrix,
+) {
+    par::gemm_tn_into(w_next, z_next, rhs, threads);
     rhs.scale(beta);
     for (r, &zv) in rhs.as_mut_slice().iter_mut().zip(z_l.as_slice()) {
         *r += gamma * act.apply(zv);
     }
-    gemm_nn(minv, &rhs)
+    par::gemm_nn_into(minv, rhs, out, threads);
 }
 
 /// Bregman multiplier update (eq. 13): `λ += β (z − m)`.
@@ -152,7 +228,19 @@ pub fn lambda_update(lam: &mut Matrix, z: &Matrix, m: &Matrix, beta: f32) {
 
 /// Transpose-reduction Gram pair: `(z aᵀ, a aᵀ)`.
 pub fn gram(z: &Matrix, a: &Matrix) -> (Matrix, Matrix) {
-    (gemm_nt(z, a), gemm_nt(a, a))
+    let mut zat = Matrix::default();
+    let mut aat = Matrix::default();
+    gram_into(z, a, 1, &mut zat, &mut aat);
+    (zat, aat)
+}
+
+/// Gram pair into caller-owned buffers.  The `a aᵀ` half is routed to the
+/// explicit `syrk` kernel — the half-FLOP symmetric path — rather than
+/// relying on `gemm_nt`'s literal-aliasing check, which only fires when
+/// both arguments are the *same reference*.
+pub fn gram_into(z: &Matrix, a: &Matrix, threads: usize, zat: &mut Matrix, aat: &mut Matrix) {
+    par::gemm_nt_into(z, a, zat, threads);
+    par::syrk_into(a, aat, threads);
 }
 
 /// Quadratic feasibility residuals of one shard, for telemetry:

@@ -3,15 +3,29 @@
 //!
 //! Each worker owns the activation (`a_l`), output (`z_l`) and multiplier
 //! (`λ`, plus classical duals) shards for its column range, initialized
-//! i.i.d. Gaussian per paper §6, and a thread-affine numeric backend.  The
-//! leader drives Algorithm 1 phase-by-phase over command channels; only
-//! Gram pairs (transpose reduction) and scalar telemetry flow back.
+//! i.i.d. Gaussian per paper §6, a thread-affine numeric backend, and a
+//! reusable `Workspace` of pre-sized scratch matrices.  The leader drives
+//! Algorithm 1 phase-by-phase over command channels; only Gram pairs
+//! (transpose reduction) and scalar telemetry flow back.
+//!
+//! ## Zero-allocation hot path
+//!
+//! In steady state (after the first iteration warms every buffer) the
+//! native-backend update phases perform **no heap allocation**: the a/z
+//! updates write in place into the shard state through the `_into` kernels,
+//! the Gram pair is computed into leader-owned buffers that ride the
+//! command/response channels and are recycled every iteration, and the
+//! broadcast payloads (`W_l`, `minv`) are shared `Arc`s instead of per-rank
+//! deep clones.  The `alloc_regression` integration test pins this down at
+//! the updates layer; channel nodes themselves (a few dozen bytes per
+//! phase) are the simulated network, not the compute path.
 //!
 //! Failure injection: workers answer `Resp::Err` on any backend failure and
 //! the pool surfaces it as a typed error naming the rank, so a dead rank
 //! never deadlocks the leader.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::config::{Activation, MultiplierMode, TrainConfig};
@@ -23,16 +37,18 @@ use crate::Result;
 
 /// Leader → worker commands (one Algorithm-1 phase each).
 pub enum Cmd {
-    /// Compute the local Gram pair of layer `l` (classical mode shifts z by
-    /// its dual first).
-    Gram { l: usize },
+    /// Compute the local Gram pair of layer `l` into the leader-owned
+    /// `zat`/`aat` buffers (recycled across iterations — the worker resizes
+    /// and overwrites, then sends them back in `Resp::Gram`).  Classical
+    /// mode shifts z by its dual first.
+    Gram { l: usize, zat: Matrix, aat: Matrix },
     /// a_l ← minv (β W_{l+1}ᵀ z_{l+1} + γ h(z_l)); `w_next` is the leader's
-    /// (pre-update) W_{l+1}.
-    AUpdate { l: usize, minv: Matrix, w_next: Matrix },
+    /// (pre-update) W_{l+1}.  Payloads are shared, not cloned per rank.
+    AUpdate { l: usize, minv: Arc<Matrix>, w_next: Arc<Matrix> },
     /// z_l ← entry-wise global solve with the freshly updated `w`.
-    ZHidden { l: usize, w: Matrix },
+    ZHidden { l: usize, w: Arc<Matrix> },
     /// z_L update (+ Bregman λ step when `update_lambda`).
-    ZOut { w: Matrix, update_lambda: bool },
+    ZOut { w: Arc<Matrix>, update_lambda: bool },
     /// Classical-ADMM per-constraint dual updates (ablation mode).
     UpdateDuals { ws: Vec<Matrix> },
     /// (Σ hinge, Σ correct, n) on this worker's training shard.
@@ -68,8 +84,9 @@ struct WorkerState {
     gamma: f32,
     beta: f32,
     act: Activation,
-    /// m = W_L a_{L-1} cached by the last ZOut (reused by the λ update).
-    last_m: Option<Matrix>,
+    /// Reusable per-worker scratch (pre-sized m / rhs buffers + intra-rank
+    /// thread count for the dense kernels).
+    scratch: updates::Workspace,
     /// Cached `a_0 a_0ᵀ` — the layer-1 input Gram never changes across
     /// iterations (a_0 is the data), so the dominant Gram product of the
     /// whole iteration is computed exactly once per run (§Perf).
@@ -126,31 +143,31 @@ fn handle(
     cmd: Cmd,
 ) -> Result<Option<Resp>> {
     match cmd {
-        Cmd::Gram { l } => {
-            let z = &st.zs[l - 1];
+        Cmd::Gram { l, mut zat, mut aat } => {
+            let threads = st.scratch.threads;
             if st.mode == MultiplierMode::Classical {
                 // scaled-dual least squares: fit (z + u) against a_prev
-                let mut z_eff = z.clone();
+                let mut z_eff = st.zs[l - 1].clone();
                 z_eff.add_assign(&st.u[l - 1]);
-                let (zat, aat) = backend.gram(l, &z_eff, st.a_prev(l))?;
+                backend.gram_into(l, &z_eff, st.a_prev(l), threads, &mut zat, &mut aat)?;
                 return Ok(Some(Resp::Gram { zat, aat }));
             }
             // Layer 1: a_prev = a_0 = the (constant) data — reuse its Gram.
-            let (zat, aat) = if l == 1 {
-                if let Some(cached) = &st.aat1_cache {
-                    (backend.zat_only(l, z, st.a_prev(l))?, cached.clone())
+            if l == 1 {
+                if st.aat1_cache.is_some() {
+                    backend.zat_only_into(l, &st.zs[0], st.a_prev(1), threads, &mut zat)?;
+                    aat.copy_from(st.aat1_cache.as_ref().unwrap());
                 } else {
-                    let (zat, aat) = backend.gram(l, z, st.a_prev(l))?;
+                    backend.gram_into(l, &st.zs[0], st.a_prev(1), threads, &mut zat, &mut aat)?;
                     st.aat1_cache = Some(aat.clone());
-                    (zat, aat)
                 }
             } else {
-                backend.gram(l, z, st.a_prev(l))?
-            };
+                backend.gram_into(l, &st.zs[l - 1], st.a_prev(l), threads, &mut zat, &mut aat)?;
+            }
             Ok(Some(Resp::Gram { zat, aat }))
         }
         Cmd::AUpdate { l, minv, w_next } => {
-            let a = if st.mode == MultiplierMode::Classical {
+            if st.mode == MultiplierMode::Classical {
                 // native-only math with dual shifts (see backend.rs docs)
                 anyhow::ensure!(
                     backend.is_native(),
@@ -165,45 +182,73 @@ fn handle(
                     let h = st.act.apply(st.zs[l - 1].as_slice()[i]);
                     rhs.as_mut_slice()[i] += st.gamma * (h - st.v[l - 1].as_slice()[i]);
                 }
-                gemm_nn(&minv, &rhs)
+                st.acts[l - 1] = gemm_nn(&minv, &rhs);
             } else {
-                backend.a_update(l, &minv, &w_next, &st.zs[l], &st.zs[l - 1])?
-            };
-            st.acts[l - 1] = a;
+                // In-place: read z_{l+1}, z_l; write a_l through the scratch.
+                let WorkerState { acts, zs, scratch, .. } = st;
+                let threads = scratch.threads;
+                backend.a_update_into(
+                    l,
+                    &minv,
+                    &w_next,
+                    &zs[l],
+                    &zs[l - 1],
+                    threads,
+                    &mut scratch.rhs,
+                    &mut acts[l - 1],
+                )?;
+            }
             Ok(Some(Resp::Done))
         }
         Cmd::ZHidden { l, w } => {
-            let z = if st.mode == MultiplierMode::Classical {
+            if st.mode == MultiplierMode::Classical {
                 // min γ‖(a+v) − h(z)‖² + β‖z − (W a_prev − u)‖²
                 let mut a_eff = st.acts[l - 1].clone();
                 a_eff.add_assign(&st.v[l - 1]);
                 let mut m = gemm_nn(&w, st.a_prev(l));
                 m.sub_assign(&st.u[l - 1]);
-                updates::z_hidden(&a_eff, &m, st.gamma, st.beta, st.act)
+                st.zs[l - 1] = updates::z_hidden(&a_eff, &m, st.gamma, st.beta, st.act);
             } else {
-                backend.z_hidden(l, &w, st.a_prev(l), &st.acts[l - 1])?
-            };
-            st.zs[l - 1] = z;
+                let WorkerState { x, acts, zs, scratch, .. } = st;
+                let threads = scratch.threads;
+                let a_prev: &Matrix = if l == 1 { &*x } else { &acts[l - 2] };
+                backend.z_hidden_into(
+                    l,
+                    &w,
+                    a_prev,
+                    &acts[l - 1],
+                    threads,
+                    &mut scratch.m,
+                    &mut zs[l - 1],
+                )?;
+            }
             Ok(Some(Resp::Done))
         }
         Cmd::ZOut { w, update_lambda } => {
             let ll = st.layers();
-            let (z, m) = if st.mode == MultiplierMode::Classical {
+            if st.mode == MultiplierMode::Classical {
                 let mut m = gemm_nn(&w, st.a_prev(ll));
                 m.sub_assign(&st.u[ll - 1]);
                 let zero = Matrix::zeros(st.y.rows(), st.y.cols());
-                let z = updates::z_out(&st.y, &m, &zero, st.beta);
-                let m_true = gemm_nn(&w, st.a_prev(ll));
-                (z, m_true)
+                st.zs[ll - 1] = updates::z_out(&st.y, &m, &zero, st.beta);
+                // classical mode never runs the Bregman λ step
             } else {
-                backend.z_out(&w, st.a_prev(ll), &st.y, &st.lam)?
-            };
-            st.zs[ll - 1] = z;
-            if update_lambda && st.mode == MultiplierMode::Bregman {
-                let z = st.zs[ll - 1].clone();
-                backend.lambda_update(&mut st.lam, &z, &m)?;
+                let WorkerState { x, y, acts, zs, lam, scratch, mode, .. } = st;
+                let threads = scratch.threads;
+                let a_prev: &Matrix = if ll == 1 { &*x } else { &acts[ll - 2] };
+                backend.z_out_into(
+                    &w,
+                    a_prev,
+                    &*y,
+                    &*lam,
+                    threads,
+                    &mut scratch.m,
+                    &mut zs[ll - 1],
+                )?;
+                if update_lambda && *mode == MultiplierMode::Bregman {
+                    backend.lambda_update(lam, &zs[ll - 1], &scratch.m)?;
+                }
             }
-            st.last_m = Some(m);
             Ok(Some(Resp::Done))
         }
         Cmd::UpdateDuals { ws } => {
@@ -252,6 +297,14 @@ pub struct WorkerPool {
     handles: Vec<JoinHandle<()>>,
     n_workers: usize,
     shard_cols: Vec<usize>,
+    /// Per-rank Gram buffers recycled through the command channels (taken
+    /// before a Gram phase, returned with the response) — steady-state Gram
+    /// phases reuse these instead of allocating f × f / f × n matrices.
+    gram_bufs: Vec<(Matrix, Matrix)>,
+    /// Rank-order reduction accumulators (deterministic summation order,
+    /// matching `cluster/comm.rs`).
+    zat_acc: Matrix,
+    aat_acc: Matrix,
 }
 
 impl WorkerPool {
@@ -324,7 +377,7 @@ impl WorkerPool {
                 gamma: cfg.gamma,
                 beta: cfg.beta,
                 act: cfg.act,
-                last_m: None,
+                scratch: updates::Workspace::new(cfg.threads),
                 aat1_cache: None,
             };
             let kind = backend_kind.clone();
@@ -332,7 +385,19 @@ impl WorkerPool {
             txs.push(ctx);
             rxs.push(rrx);
         }
-        Ok(WorkerPool { txs, rxs, handles, n_workers: cfg.workers, shard_cols })
+        let gram_bufs = (0..cfg.workers)
+            .map(|_| (Matrix::default(), Matrix::default()))
+            .collect();
+        Ok(WorkerPool {
+            txs,
+            rxs,
+            handles,
+            n_workers: cfg.workers,
+            shard_cols,
+            gram_bufs,
+            zat_acc: Matrix::default(),
+            aat_acc: Matrix::default(),
+        })
     }
 
     pub fn n_workers(&self) -> usize {
@@ -363,44 +428,54 @@ impl WorkerPool {
         Ok(out)
     }
 
-    /// Gram phase + reduction: returns Σ over ranks of (z aᵀ, a aᵀ).
-    /// Reduction is in rank order (deterministic for fixed worker count).
-    pub fn gram_reduce(&self, l: usize) -> Result<(Matrix, Matrix)> {
-        self.send_all(|_| Cmd::Gram { l })?;
-        let mut zat: Option<Matrix> = None;
-        let mut aat: Option<Matrix> = None;
-        for resp in self.recv_all()? {
-            match resp {
-                Resp::Gram { zat: z, aat: a } => {
-                    match (&mut zat, &mut aat) {
-                        (None, None) => {
-                            zat = Some(z);
-                            aat = Some(a);
-                        }
-                        (Some(zs), Some(as_)) => {
-                            zs.add_assign(&z);
-                            as_.add_assign(&a);
-                        }
-                        _ => unreachable!(),
+    /// Gram phase + reduction: returns Σ over ranks of (z aᵀ, a aᵀ),
+    /// accumulated **in rank order** into pool-owned buffers (deterministic
+    /// for a fixed worker count; zero allocation in steady state).
+    pub fn gram_reduce(&mut self, l: usize) -> Result<(&Matrix, &Matrix)> {
+        for (rank, tx) in self.txs.iter().enumerate() {
+            let (zat, aat) = std::mem::take(&mut self.gram_bufs[rank]);
+            tx.send(Cmd::Gram { l, zat, aat })
+                .map_err(|_| anyhow::anyhow!("rank {rank} died (channel closed)"))?;
+        }
+        let mut first = true;
+        for (rank, rx) in self.rxs.iter().enumerate() {
+            match rx.recv() {
+                Ok(Resp::Gram { zat, aat }) => {
+                    if first {
+                        self.zat_acc.copy_from(&zat);
+                        self.aat_acc.copy_from(&aat);
+                        first = false;
+                    } else {
+                        self.zat_acc.add_assign(&zat);
+                        self.aat_acc.add_assign(&aat);
                     }
+                    self.gram_bufs[rank] = (zat, aat);
                 }
-                _ => anyhow::bail!("unexpected response in gram phase"),
+                Ok(Resp::Err(e)) => anyhow::bail!("worker failure: {e}"),
+                Ok(_) => anyhow::bail!("unexpected response in gram phase"),
+                Err(_) => anyhow::bail!("rank {rank} died without responding"),
             }
         }
-        Ok((zat.unwrap(), aat.unwrap()))
+        Ok((&self.zat_acc, &self.aat_acc))
     }
 
-    pub fn a_update(&self, l: usize, minv: &Matrix, w_next: &Matrix) -> Result<()> {
+    /// Broadcast the a-update operands once (shared `Arc`, not per-rank
+    /// deep clones) and run the phase.
+    pub fn a_update(&self, l: usize, minv: Matrix, w_next: Matrix) -> Result<()> {
+        let minv = Arc::new(minv);
+        let w_next = Arc::new(w_next);
         self.send_all(|_| Cmd::AUpdate { l, minv: minv.clone(), w_next: w_next.clone() })?;
         self.expect_done()
     }
 
-    pub fn z_hidden(&self, l: usize, w: &Matrix) -> Result<()> {
+    pub fn z_hidden(&self, l: usize, w: Matrix) -> Result<()> {
+        let w = Arc::new(w);
         self.send_all(|_| Cmd::ZHidden { l, w: w.clone() })?;
         self.expect_done()
     }
 
-    pub fn z_out(&self, w: &Matrix, update_lambda: bool) -> Result<()> {
+    pub fn z_out(&self, w: Matrix, update_lambda: bool) -> Result<()> {
+        let w = Arc::new(w);
         self.send_all(|_| Cmd::ZOut { w: w.clone(), update_lambda })?;
         self.expect_done()
     }

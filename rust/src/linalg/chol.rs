@@ -70,14 +70,30 @@ impl CholeskyFactor {
         }
     }
 
-    /// Solve `A X = B` for a matrix right-hand side.
+    /// Solve `A X = B` for a matrix right-hand side (allocating wrapper
+    /// around `solve_mat_into`).
+    pub fn solve_mat(&self, b: &Matrix) -> Result<Matrix> {
+        let mut scratch = Vec::new();
+        let mut out = Matrix::default();
+        self.solve_mat_into(b, &mut scratch, &mut out)?;
+        Ok(out)
+    }
+
+    /// Solve `A X = B` into a caller-owned output, with a caller-owned f64
+    /// working buffer — zero heap allocation once both have warmed up to
+    /// the problem size.
     ///
     /// §Perf: the original per-column solve walked the RHS with stride
     /// `cols` (cache-hostile) and carried one dependent chain; this version
     /// keeps the whole RHS as a row-major f64 buffer and substitutes all
     /// columns simultaneously — the inner loop is a contiguous axpy across
     /// the RHS row, which autovectorizes.  See EXPERIMENTS.md §Perf.
-    pub fn solve_mat(&self, b: &Matrix) -> Result<Matrix> {
+    pub fn solve_mat_into(
+        &self,
+        b: &Matrix,
+        scratch: &mut Vec<f64>,
+        out: &mut Matrix,
+    ) -> Result<()> {
         anyhow::ensure!(
             b.rows() == self.n,
             "solve_mat: rhs has {} rows, factor dim {}",
@@ -87,16 +103,19 @@ impl CholeskyFactor {
         let n = self.n;
         let m = b.cols();
         if m == 1 {
-            let mut col: Vec<f64> = (0..n).map(|r| b.at(r, 0) as f64).collect();
-            self.solve_vec(&mut col);
-            return Ok(Matrix::from_vec(
-                n,
-                1,
-                col.into_iter().map(|v| v as f32).collect(),
-            ));
+            scratch.clear();
+            scratch.extend(b.as_slice().iter().map(|&v| v as f64));
+            self.solve_vec(scratch);
+            out.resize(n, 1);
+            for (o, v) in out.as_mut_slice().iter_mut().zip(scratch.iter()) {
+                *o = *v as f32;
+            }
+            return Ok(());
         }
         // row-major f64 working copy of B
-        let mut y: Vec<f64> = b.as_slice().iter().map(|&v| v as f64).collect();
+        scratch.clear();
+        scratch.extend(b.as_slice().iter().map(|&v| v as f64));
+        let y: &mut [f64] = scratch.as_mut_slice();
         // forward: L Y = B   (row i minus L[i,p] * row p, p < i)
         for i in 0..n {
             let (done, rest) = y.split_at_mut(i * m);
@@ -135,7 +154,11 @@ impl CholeskyFactor {
                 *yv *= inv;
             }
         }
-        Ok(Matrix::from_vec(n, m, y.into_iter().map(|v| v as f32).collect()))
+        out.resize(n, m);
+        for (o, v) in out.as_mut_slice().iter_mut().zip(y.iter()) {
+            *o = *v as f32;
+        }
+        Ok(())
     }
 }
 
@@ -178,6 +201,22 @@ mod tests {
                 "n={n} resid={}",
                 ax.max_abs_diff(&b)
             );
+        }
+    }
+
+    #[test]
+    fn solve_mat_into_matches_solve_mat_bitwise() {
+        let mut rng = Rng::seed_from(21);
+        for &(n, m) in &[(1usize, 1usize), (5, 1), (9, 4), (17, 30)] {
+            let a = random_spd(n, &mut rng);
+            let b = Matrix::randn(n, m, &mut rng);
+            let f = cholesky_factor(&a).unwrap();
+            let want = f.solve_mat(&b).unwrap();
+            let mut scratch = Vec::new();
+            let mut out = Matrix::zeros(2, 2);
+            out.fill(f32::NAN);
+            f.solve_mat_into(&b, &mut scratch, &mut out).unwrap();
+            assert_eq!(out.as_slice(), want.as_slice(), "n={n} m={m}");
         }
     }
 

@@ -1,150 +1,230 @@
-//! Cache-blocked GEMM kernels in three transposition flavours.
+//! Cache-blocked GEMM kernels in three transposition flavours, plus the
+//! explicit symmetric rank-k (`syrk`) kernel, all with `_into` variants
+//! that write into caller-owned buffers (zero allocation in steady state).
 //!
 //! Hot-path inventory (per ADMM iteration, per worker):
-//!   * `gemm_nt(z, a)` and `gemm_nt(a, a)` — the transpose-reduction Gram
-//!     pair (f × n panels reduced to f × f);
+//!   * `gemm_nt(z, a)` and `syrk(a)` — the transpose-reduction Gram pair
+//!     (f × n panels reduced to f × f);
 //!   * `gemm_nn(w, a_prev)` — the linear guess `m = W a` of the z-updates;
 //!   * `gemm_tn(w, z)` — the `Wᵀ z_{l+1}` term of the activation update.
 //!
-//! Design: row-major operands, `ikj` loop order so the inner loop is a
-//! contiguous `axpy` over the output row (LLVM autovectorizes it to full
-//! f32 SIMD width), with `k`-panel blocking to keep the B panel resident in
-//! L1/L2.  `gemm_nt`'s inner loop is a contiguous dot product instead.
-//! Perf history lives in EXPERIMENTS.md §Perf.
+//! Design: row-major operands.  `gemm_nn` uses `ikj` loop order so the
+//! inner loop is a contiguous `axpy` over the output row (LLVM
+//! autovectorizes it to full f32 SIMD width) with `k`-panel blocking to
+//! keep the B panel resident in L1/L2.  `gemm_nt` computes a 2×4 register
+//! tile whose eight dot products share one sweep over the contraction
+//! strip (the k-interleaved form cuts loads per FMA ~2.6× vs the previous
+//! one-dot-at-a-time tile); `syrk` computes only the upper triangle (half
+//! the FLOPs) with a 1×4 interleaved tile and mirrors.  Because operands
+//! are row-major on both sides of the `nt` contraction, panel packing is
+//! the identity — rows are already contiguous — so no packing buffers (or
+//! their allocations) are needed.
+//!
+//! Every kernel is written as a *row-panel* function over output rows
+//! `[i0, i1)` so `linalg::par` can split the output across scoped threads;
+//! each output element's accumulation order is a function of (shapes,
+//! constants) only — never of the panel split — which is what makes the
+//! parallel results bit-identical to the serial ones (see `par.rs` and the
+//! `linalg_parallel` integration test).  Perf history lives in
+//! EXPERIMENTS.md §Perf.
 
 use super::Matrix;
 
-/// Panel size along the shared (contraction) dimension.
+/// Panel size along the shared (contraction) dimension for `gemm_nn`.
 const BLOCK_K: usize = 64;
 /// Panel size along the output-column dimension for `gemm_nn`.
 const BLOCK_J: usize = 256;
+/// Independent accumulator lanes per dot product (one AVX2 f32 vector).
+const LANES: usize = 8;
 
-/// `C = A·B` for `A: (m,k)`, `B: (k,n)`.
-pub fn gemm_nn(a: &Matrix, b: &Matrix) -> Matrix {
-    let mut c = Matrix::zeros(a.rows(), b.cols());
-    gemm(a, b, 1.0, 0.0, &mut c);
-    c
-}
-
-/// `C = A·Bᵀ` for `A: (m,k)`, `B: (n,k)` — the Gram/transpose-reduction op.
-///
-/// §Perf: a plain per-entry dot product ran at ~4 GFLOP/s (one dependent
-/// accumulator chain per output).  This version computes a 2×4 register
-/// tile per inner pass (8 independent accumulator chains over a shared
-/// k-strip), which lets the autovectorizer keep the FMA pipes busy, and
-/// dispatches `A Aᵀ` to a symmetric kernel that computes only the upper
-/// triangle and mirrors it.  See EXPERIMENTS.md §Perf for before/after.
-pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.cols(), b.cols(), "gemm_nt: contraction mismatch");
-    if std::ptr::eq(a, b) {
-        return syrk_nt(a);
-    }
-    let (m, n, k) = (a.rows(), b.rows(), a.cols());
-    let mut c = Matrix::zeros(m, n);
-    let mut i = 0;
-    while i < m {
-        let rows_a = (m - i).min(2);
-        let mut j = 0;
-        while j < n {
-            let rows_b = (n - j).min(4);
-            let mut acc = [[0.0f32; 4]; 2];
-            for (di, accr) in acc.iter_mut().enumerate().take(rows_a) {
-                let arow = a.row(i + di);
-                for (dj, accv) in accr.iter_mut().enumerate().take(rows_b) {
-                    let brow = b.row(j + dj);
-                    *accv = dot_unrolled(arow, brow, k);
-                }
-            }
-            for di in 0..rows_a {
-                for dj in 0..rows_b {
-                    *c.at_mut(i + di, j + dj) = acc[di][dj];
-                }
-            }
-            j += rows_b;
-        }
-        i += rows_a;
-    }
-    c
+/// Fixed lane-reduction order shared by every `nt`/`syrk` code path —
+/// changing it changes result bits, so there is exactly one copy.
+#[inline(always)]
+fn fold8(s: &[f32; LANES], tail: f32) -> f32 {
+    tail + (s[0] + s[1]) + (s[2] + s[3]) + (s[4] + s[5]) + (s[6] + s[7])
 }
 
 /// Unrolled 8-lane dot product (independent partial sums).
 #[inline(always)]
 fn dot_unrolled(x: &[f32], y: &[f32], k: usize) -> f32 {
-    let mut s = [0.0f32; 8];
+    let mut s = [0.0f32; LANES];
     let mut p = 0;
-    while p + 8 <= k {
-        s[0] += x[p] * y[p];
-        s[1] += x[p + 1] * y[p + 1];
-        s[2] += x[p + 2] * y[p + 2];
-        s[3] += x[p + 3] * y[p + 3];
-        s[4] += x[p + 4] * y[p + 4];
-        s[5] += x[p + 5] * y[p + 5];
-        s[6] += x[p + 6] * y[p + 6];
-        s[7] += x[p + 7] * y[p + 7];
-        p += 8;
+    while p + LANES <= k {
+        for l in 0..LANES {
+            s[l] += x[p + l] * y[p + l];
+        }
+        p += LANES;
     }
     let mut tail = 0.0f32;
     while p < k {
         tail += x[p] * y[p];
         p += 1;
     }
-    tail + (s[0] + s[1]) + (s[2] + s[3]) + (s[4] + s[5]) + (s[6] + s[7])
+    fold8(&s, tail)
 }
 
-/// Symmetric rank-k product `A Aᵀ`: compute the upper triangle only
-/// (half the FLOPs of the general kernel) and mirror.
-fn syrk_nt(a: &Matrix) -> Matrix {
-    let (m, k) = (a.rows(), a.cols());
-    let mut c = Matrix::zeros(m, m);
-    for i in 0..m {
-        let arow = a.row(i);
-        for j in i..m {
-            let v = dot_unrolled(arow, a.row(j), k);
-            *c.at_mut(i, j) = v;
-            *c.at_mut(j, i) = v;
-        }
-    }
-    c
-}
-
-/// `C = Aᵀ·B` for `A: (k,m)`, `B: (k,n)`.
-pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.rows(), b.rows(), "gemm_tn: contraction mismatch");
-    let (m, n, k) = (a.cols(), b.cols(), a.rows());
-    let mut c = Matrix::zeros(m, n);
-    // ikj with A read down a column: A[p, i] is strided, but the inner j
-    // loop stays a contiguous axpy over C's row and B's row.
-    for p in 0..k {
-        let brow = b.row(p);
-        for i in 0..m {
-            let apival = a.at(p, i);
-            if apival == 0.0 {
-                continue;
-            }
-            let crow = c.row_mut(i);
-            for j in 0..n {
-                crow[j] += apival * brow[j];
+/// 2×4 register tile: eight dot products interleaved over one k sweep.
+/// Per-element accumulation order is identical to `dot_unrolled`, so tile
+/// and edge paths produce the same bits.
+#[inline(always)]
+fn nt_micro_2x4(
+    a0: &[f32],
+    a1: &[f32],
+    b: [&[f32]; 4],
+    k: usize,
+    out0: &mut [f32],
+    out1: &mut [f32],
+) {
+    let mut s = [[[0.0f32; LANES]; 4]; 2];
+    let mut p = 0;
+    while p + LANES <= k {
+        for (j, brow) in b.iter().enumerate() {
+            for l in 0..LANES {
+                let bv = brow[p + l];
+                s[0][j][l] += a0[p + l] * bv;
+                s[1][j][l] += a1[p + l] * bv;
             }
         }
+        p += LANES;
     }
-    c
+    let mut t = [[0.0f32; 4]; 2];
+    while p < k {
+        for (j, brow) in b.iter().enumerate() {
+            let bv = brow[p];
+            t[0][j] += a0[p] * bv;
+            t[1][j] += a1[p] * bv;
+        }
+        p += 1;
+    }
+    for j in 0..4 {
+        out0[j] = fold8(&s[0][j], t[0][j]);
+        out1[j] = fold8(&s[1][j], t[1][j]);
+    }
 }
 
-/// General `C = alpha·A·B + beta·C` (the building block of `gemm_nn`).
-pub fn gemm(a: &Matrix, b: &Matrix, alpha: f32, beta: f32, c: &mut Matrix) {
-    assert_eq!(a.cols(), b.rows(), "gemm: contraction mismatch");
-    assert_eq!(c.rows(), a.rows(), "gemm: output rows mismatch");
-    assert_eq!(c.cols(), b.cols(), "gemm: output cols mismatch");
-    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+/// 1×4 register tile (the `syrk` row kernel).
+#[inline(always)]
+fn nt_micro_1x4(a0: &[f32], b: [&[f32]; 4], k: usize, out: &mut [f32]) {
+    let mut s = [[0.0f32; LANES]; 4];
+    let mut p = 0;
+    while p + LANES <= k {
+        for (j, brow) in b.iter().enumerate() {
+            for l in 0..LANES {
+                s[j][l] += a0[p + l] * brow[p + l];
+            }
+        }
+        p += LANES;
+    }
+    let mut t = [0.0f32; 4];
+    while p < k {
+        for (j, brow) in b.iter().enumerate() {
+            t[j] += a0[p] * brow[p];
+        }
+        p += 1;
+    }
+    for j in 0..4 {
+        out[j] = fold8(&s[j], t[j]);
+    }
+}
 
-    if beta != 1.0 {
-        if beta == 0.0 {
-            c.fill(0.0);
+/// Rows `[i0, i1)` of `C = A·Bᵀ`; `cbuf` is that row panel of C.
+pub(super) fn nt_rows(a: &Matrix, b: &Matrix, cbuf: &mut [f32], i0: usize, i1: usize) {
+    let k = a.cols();
+    let n = b.rows();
+    debug_assert_eq!(cbuf.len(), (i1 - i0) * n);
+    let mut i = i0;
+    while i < i1 {
+        if i + 2 <= i1 {
+            let (a0, a1) = (a.row(i), a.row(i + 1));
+            let base0 = (i - i0) * n;
+            let base1 = base0 + n;
+            let mut j = 0;
+            while j + 4 <= n {
+                let (head, tail) = cbuf.split_at_mut(base1 + j);
+                nt_micro_2x4(
+                    a0,
+                    a1,
+                    [b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3)],
+                    k,
+                    &mut head[base0 + j..base0 + j + 4],
+                    &mut tail[..4],
+                );
+                j += 4;
+            }
+            while j < n {
+                cbuf[base0 + j] = dot_unrolled(a0, b.row(j), k);
+                cbuf[base1 + j] = dot_unrolled(a1, b.row(j), k);
+                j += 1;
+            }
+            i += 2;
         } else {
-            c.scale(beta);
+            let a0 = a.row(i);
+            let base = (i - i0) * n;
+            for j in 0..n {
+                cbuf[base + j] = dot_unrolled(a0, b.row(j), k);
+            }
+            i += 1;
         }
     }
+}
 
+/// Rows `[i0, i1)` of the **upper triangle** of `C = A·Aᵀ` (entries with
+/// `j >= i` only; the strictly-lower part of the panel is left untouched —
+/// `mirror_lower` fills it afterwards).
+pub(super) fn syrk_upper_rows(a: &Matrix, cbuf: &mut [f32], i0: usize, i1: usize) {
+    let (m, k) = (a.rows(), a.cols());
+    debug_assert_eq!(cbuf.len(), (i1 - i0) * m);
+    for i in i0..i1 {
+        let arow = a.row(i);
+        let base = (i - i0) * m;
+        let mut j = i;
+        while j + 4 <= m {
+            nt_micro_1x4(
+                arow,
+                [a.row(j), a.row(j + 1), a.row(j + 2), a.row(j + 3)],
+                k,
+                &mut cbuf[base + j..base + j + 4],
+            );
+            j += 4;
+        }
+        while j < m {
+            cbuf[base + j] = dot_unrolled(arow, a.row(j), k);
+            j += 1;
+        }
+    }
+}
+
+/// Copy the upper triangle of a square matrix onto the lower one.
+pub(super) fn mirror_lower(c: &mut Matrix) {
+    let m = c.rows();
+    debug_assert_eq!(c.cols(), m);
+    let buf = c.as_mut_slice();
+    for i in 1..m {
+        for j in 0..i {
+            buf[i * m + j] = buf[j * m + i];
+        }
+    }
+}
+
+/// Rows `[i0, i1)` of `C = alpha·A·B + beta·C_panel` (the `gemm_nn` body).
+pub(super) fn nn_rows(
+    a: &Matrix,
+    b: &Matrix,
+    alpha: f32,
+    beta: f32,
+    cbuf: &mut [f32],
+    i0: usize,
+    i1: usize,
+) {
+    let (k, n) = (a.cols(), b.cols());
+    debug_assert_eq!(cbuf.len(), (i1 - i0) * n);
+    if beta == 0.0 {
+        cbuf.fill(0.0);
+    } else if beta != 1.0 {
+        for v in cbuf.iter_mut() {
+            *v *= beta;
+        }
+    }
     // k-panel × j-panel blocking; inner loop is a contiguous axpy.
     let mut k0 = 0;
     while k0 < k {
@@ -152,9 +232,10 @@ pub fn gemm(a: &Matrix, b: &Matrix, alpha: f32, beta: f32, c: &mut Matrix) {
         let mut j0 = 0;
         while j0 < n {
             let j1 = (j0 + BLOCK_J).min(n);
-            for i in 0..m {
+            for i in i0..i1 {
                 let arow = a.row(i);
-                let crow = &mut c.row_mut(i)[j0..j1];
+                let base = (i - i0) * n;
+                let crow = &mut cbuf[base + j0..base + j1];
                 for p in k0..k1 {
                     let aip = alpha * arow[p];
                     if aip == 0.0 {
@@ -170,6 +251,110 @@ pub fn gemm(a: &Matrix, b: &Matrix, alpha: f32, beta: f32, c: &mut Matrix) {
         }
         k0 = k1;
     }
+}
+
+/// Rows `[i0, i1)` of `C = Aᵀ·B` (the panel zeroes itself first).
+pub(super) fn tn_rows(a: &Matrix, b: &Matrix, cbuf: &mut [f32], i0: usize, i1: usize) {
+    let (k, n) = (a.rows(), b.cols());
+    debug_assert_eq!(cbuf.len(), (i1 - i0) * n);
+    cbuf.fill(0.0);
+    // p-outer with A read down a column: A[p, i] is strided, but the inner
+    // j loop stays a contiguous axpy over C's row and B's row.
+    for p in 0..k {
+        let brow = b.row(p);
+        let arow = a.row(p);
+        for i in i0..i1 {
+            let apival = arow[i];
+            if apival == 0.0 {
+                continue;
+            }
+            let base = (i - i0) * n;
+            let crow = &mut cbuf[base..base + n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += apival * bv;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public API: allocating wrappers + `_into` variants.
+// ---------------------------------------------------------------------------
+
+/// `C = A·B` for `A: (m,k)`, `B: (k,n)`.
+pub fn gemm_nn(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::default();
+    gemm_nn_into(a, b, &mut c);
+    c
+}
+
+/// `C = A·B` into a caller-owned buffer (resized as needed; a same-shape
+/// call performs no allocation).
+pub fn gemm_nn_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols(), b.rows(), "gemm_nn: contraction mismatch");
+    c.resize(a.rows(), b.cols());
+    nn_rows(a, b, 1.0, 0.0, c.as_mut_slice(), 0, a.rows());
+}
+
+/// `C = A·Bᵀ` for `A: (m,k)`, `B: (n,k)` — the Gram/transpose-reduction op.
+///
+/// Literal self-aliasing (`gemm_nt(&x, &x)`) is routed to `syrk`, but that
+/// guard only catches identical references — call sites that *know* they
+/// are computing `A·Aᵀ` should call `syrk` directly (the half-FLOP path).
+pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::default();
+    gemm_nt_into(a, b, &mut c);
+    c
+}
+
+/// `C = A·Bᵀ` into a caller-owned buffer.
+pub fn gemm_nt_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    if std::ptr::eq(a, b) {
+        syrk_into(a, c);
+        return;
+    }
+    assert_eq!(a.cols(), b.cols(), "gemm_nt: contraction mismatch");
+    c.resize(a.rows(), b.rows());
+    nt_rows(a, b, c.as_mut_slice(), 0, a.rows());
+}
+
+/// Symmetric rank-k product `C = A·Aᵀ`: computes the upper triangle only
+/// (half the FLOPs of the general kernel) and mirrors it.
+pub fn syrk(a: &Matrix) -> Matrix {
+    let mut c = Matrix::default();
+    syrk_into(a, &mut c);
+    c
+}
+
+/// `C = A·Aᵀ` into a caller-owned buffer.
+pub fn syrk_into(a: &Matrix, c: &mut Matrix) {
+    let m = a.rows();
+    c.resize(m, m);
+    syrk_upper_rows(a, c.as_mut_slice(), 0, m);
+    mirror_lower(c);
+}
+
+/// `C = Aᵀ·B` for `A: (k,m)`, `B: (k,n)`.
+pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::default();
+    gemm_tn_into(a, b, &mut c);
+    c
+}
+
+/// `C = Aᵀ·B` into a caller-owned buffer.
+pub fn gemm_tn_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.rows(), b.rows(), "gemm_tn: contraction mismatch");
+    c.resize(a.cols(), b.cols());
+    tn_rows(a, b, c.as_mut_slice(), 0, a.cols());
+}
+
+/// General `C = alpha·A·B + beta·C`.  Unlike the `_into` family this does
+/// NOT resize `C` (beta reads it), so shapes must match exactly.
+pub fn gemm(a: &Matrix, b: &Matrix, alpha: f32, beta: f32, c: &mut Matrix) {
+    assert_eq!(a.cols(), b.rows(), "gemm: contraction mismatch");
+    assert_eq!(c.rows(), a.rows(), "gemm: output rows mismatch");
+    assert_eq!(c.cols(), b.cols(), "gemm: output cols mismatch");
+    nn_rows(a, b, alpha, beta, c.as_mut_slice(), 0, a.rows());
 }
 
 #[cfg(test)]
@@ -206,7 +391,7 @@ mod tests {
     #[test]
     fn gemm_nt_matches_transpose() {
         let mut rng = Rng::seed_from(2);
-        for &(m, k, n) in &[(1, 4, 1), (8, 100, 8), (13, 257, 5)] {
+        for &(m, k, n) in &[(1, 4, 1), (8, 100, 8), (13, 257, 5), (2, 9, 4), (3, 16, 6)] {
             let a = Matrix::randn(m, k, &mut rng);
             let b = Matrix::randn(n, k, &mut rng);
             let c = gemm_nt(&a, &b);
@@ -245,12 +430,53 @@ mod tests {
     fn gram_pair_symmetry() {
         let mut rng = Rng::seed_from(5);
         let a = Matrix::randn(7, 50, &mut rng);
-        let aat = gemm_nt(&a, &a);
+        let aat = syrk(&a);
         for i in 0..7 {
             for j in 0..7 {
                 assert!((aat.at(i, j) - aat.at(j, i)).abs() < 1e-5);
             }
             assert!(aat.at(i, i) >= 0.0);
         }
+    }
+
+    #[test]
+    fn syrk_matches_general_kernel_bitwise() {
+        let mut rng = Rng::seed_from(6);
+        for &(m, k) in &[(1usize, 1usize), (3, 17), (9, 100), (12, 33)] {
+            let a = Matrix::randn(m, k, &mut rng);
+            let b = a.clone();
+            // general nt kernel on a distinct (non-aliased) copy
+            let general = gemm_nt(&a, &b);
+            let sy = syrk(&a);
+            assert_eq!(sy.as_slice(), general.as_slice(), "({m},{k})");
+            // literal aliasing dispatches to syrk
+            let aliased = gemm_nt(&a, &a);
+            assert_eq!(aliased.as_slice(), sy.as_slice());
+        }
+    }
+
+    #[test]
+    fn into_variants_overwrite_dirty_buffers() {
+        let mut rng = Rng::seed_from(7);
+        let a = Matrix::randn(5, 19, &mut rng);
+        let b = Matrix::randn(7, 19, &mut rng);
+        let want = gemm_nt(&a, &b);
+        let mut c = Matrix::zeros(3, 3);
+        c.fill(f32::NAN);
+        gemm_nt_into(&a, &b, &mut c);
+        assert_eq!(c.as_slice(), want.as_slice());
+
+        let bt = b.transpose(); // (19, 7)
+        let want_nn = gemm_nn(&a, &bt);
+        let mut c2 = Matrix::from_vec(1, 1, vec![f32::NAN]);
+        gemm_nn_into(&a, &bt, &mut c2);
+        assert_eq!(c2.as_slice(), want_nn.as_slice());
+
+        let at = a.transpose(); // (19, 5)
+        let want_tn = gemm_tn(&at, &bt);
+        let mut c3 = Matrix::zeros(40, 2);
+        c3.fill(f32::NAN);
+        gemm_tn_into(&at, &bt, &mut c3);
+        assert_eq!(c3.as_slice(), want_tn.as_slice());
     }
 }

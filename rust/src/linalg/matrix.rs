@@ -26,9 +26,36 @@ impl std::fmt::Debug for Matrix {
     }
 }
 
+impl Default for Matrix {
+    /// Empty 0×0 matrix — the canonical "unsized scratch buffer" state for
+    /// `Workspace`-style reuse (see `resize`).
+    fn default() -> Self {
+        Matrix { rows: 0, cols: 0, data: Vec::new() }
+    }
+}
+
 impl Matrix {
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Reshape in place to `rows × cols`, reusing the heap buffer whenever
+    /// capacity allows — a same-shape resize is a no-op, which is what makes
+    /// the `_into` kernels allocation-free in steady state.  Contents are
+    /// unspecified afterwards; every `_into` kernel fully overwrites its
+    /// output.
+    pub fn resize(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Copy shape and contents from `src`, reusing this buffer's capacity.
+    pub fn copy_from(&mut self, src: &Matrix) {
+        self.rows = src.rows;
+        self.cols = src.cols;
+        self.data.clear();
+        self.data.extend_from_slice(&src.data);
     }
 
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
@@ -112,13 +139,19 @@ impl Matrix {
     }
 
     pub fn transpose(&self) -> Matrix {
-        let mut t = Matrix::zeros(self.cols, self.rows);
+        let mut t = Matrix::default();
+        self.transpose_into(&mut t);
+        t
+    }
+
+    /// Transpose into a caller-owned buffer (no allocation in steady state).
+    pub fn transpose_into(&self, out: &mut Matrix) {
+        out.resize(self.cols, self.rows);
         for r in 0..self.rows {
             for c in 0..self.cols {
-                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
             }
         }
-        t
     }
 
     /// Copy of the column range `[c0, c1)` (used to shard sample columns).
@@ -274,6 +307,29 @@ mod tests {
         a.axpy(2.0, &b);
         assert_eq!(a.as_slice(), &[3., 2., 2.]);
         assert!((a.frob_norm() - (9f32 + 4. + 4.).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn resize_reuses_capacity_and_copy_from_matches() {
+        let mut m = Matrix::zeros(4, 6);
+        let cap = m.data.capacity();
+        m.resize(2, 3);
+        assert_eq!(m.shape(), (2, 3));
+        m.resize(4, 6);
+        assert_eq!(m.data.capacity(), cap, "shrink/grow must not reallocate");
+
+        let src = Matrix::from_fn(3, 2, |r, c| (r * 2 + c) as f32);
+        let mut dst = Matrix::zeros(5, 5);
+        dst.copy_from(&src);
+        assert_eq!(dst, src);
+    }
+
+    #[test]
+    fn transpose_into_matches_transpose() {
+        let m = Matrix::from_fn(3, 5, |r, c| (r * 10 + c) as f32);
+        let mut t = Matrix::default();
+        m.transpose_into(&mut t);
+        assert_eq!(t, m.transpose());
     }
 
     #[test]

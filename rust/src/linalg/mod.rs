@@ -12,9 +12,12 @@
 mod chol;
 mod gemm;
 mod matrix;
+pub mod par;
 
 pub use chol::{cholesky_factor, solve_spd, spd_inverse, CholeskyFactor};
-pub use gemm::{gemm, gemm_nn, gemm_nt, gemm_tn};
+pub use gemm::{
+    gemm, gemm_nn, gemm_nn_into, gemm_nt, gemm_nt_into, gemm_tn, gemm_tn_into, syrk, syrk_into,
+};
 pub use matrix::Matrix;
 
 use crate::Result;
@@ -26,6 +29,32 @@ use crate::Result;
 /// `ridge` scales with the mean diagonal so the guard is dimensionless;
 /// the paper's pseudoinverse is recovered as `ridge → 0`.
 pub fn weight_solve(zat: &Matrix, aat: &Matrix, ridge: f64) -> Result<Matrix> {
+    let mut scratch = WeightSolveScratch::default();
+    let mut w = Matrix::default();
+    weight_solve_into(zat, aat, ridge, &mut scratch, &mut w)?;
+    Ok(w)
+}
+
+/// Reusable leader-side scratch for `weight_solve_into` — all four
+/// intermediates of the ridge solve, so repeated same-shape solves perform
+/// no heap allocation (the Cholesky factor itself still allocates its f64
+/// triangle once per call; it is `features²` small).
+#[derive(Default)]
+pub struct WeightSolveScratch {
+    reg: Matrix,
+    rhs: Matrix,
+    xt: Matrix,
+    f64buf: Vec<f64>,
+}
+
+/// `weight_solve` writing into a caller-owned output matrix.
+pub fn weight_solve_into(
+    zat: &Matrix,
+    aat: &Matrix,
+    ridge: f64,
+    s: &mut WeightSolveScratch,
+    w: &mut Matrix,
+) -> Result<()> {
     let f = aat.rows();
     anyhow::ensure!(aat.cols() == f, "aat must be square, got {:?}", aat.shape());
     anyhow::ensure!(
@@ -34,15 +63,17 @@ pub fn weight_solve(zat: &Matrix, aat: &Matrix, ridge: f64) -> Result<Matrix> {
         zat.cols(),
         f
     );
-    let mut reg = aat.clone();
+    s.reg.copy_from(aat);
     let eps = (ridge * (aat.trace() as f64 / f as f64 + 1.0)) as f32;
     for i in 0..f {
-        *reg.at_mut(i, i) += eps;
+        *s.reg.at_mut(i, i) += eps;
     }
     // Solve (aat + εI) Xᵀ = zatᵀ  =>  W = X.
-    let factor = cholesky_factor(&reg)?;
-    let xt = factor.solve_mat(&zat.transpose())?;
-    Ok(xt.transpose())
+    let factor = cholesky_factor(&s.reg)?;
+    zat.transpose_into(&mut s.rhs);
+    factor.solve_mat_into(&s.rhs, &mut s.f64buf, &mut s.xt)?;
+    s.xt.transpose_into(w);
+    Ok(())
 }
 
 /// `(β Wᵀ W + γ I)⁻¹` — the shard-independent SPD inverse of the paper's
@@ -99,6 +130,23 @@ mod tests {
             *wp.at_mut(r, c) += if trial % 2 == 0 { 1e-2 } else { -1e-2 };
             assert!(resid(&wp) >= base - 1e-5);
         }
+    }
+
+    #[test]
+    fn weight_solve_into_matches_and_reuses_buffers() {
+        let mut rng = Rng::seed_from(17);
+        let a = Matrix::randn(6, 50, &mut rng);
+        let z = Matrix::randn(3, 50, &mut rng);
+        let zat = gemm_nt(&z, &a);
+        let aat = syrk(&a);
+        let want = weight_solve(&zat, &aat, 1e-6).unwrap();
+        let mut scratch = WeightSolveScratch::default();
+        let mut w = Matrix::default();
+        // run twice through the same scratch: second solve must agree too
+        weight_solve_into(&zat, &aat, 1e-6, &mut scratch, &mut w).unwrap();
+        assert_eq!(w.as_slice(), want.as_slice());
+        weight_solve_into(&zat, &aat, 1e-6, &mut scratch, &mut w).unwrap();
+        assert_eq!(w.as_slice(), want.as_slice());
     }
 
     #[test]

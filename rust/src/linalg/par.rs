@@ -1,0 +1,221 @@
+//! Intra-rank parallel GEMM: a dependency-free `std::thread::scope`
+//! row-panel parallelizer for the dense kernels in `gemm.rs`.
+//!
+//! ## Determinism contract
+//!
+//! Matches `cluster/comm.rs`: results must be bit-identical run-to-run and
+//! across thread counts.  That holds here *by construction*, not by a
+//! reduction protocol — the output rows are split into disjoint panels,
+//! each panel is computed by the **same row-panel kernel** the serial path
+//! uses, and every output element's floating-point accumulation order is a
+//! fixed function of the operand shapes (a deterministic fixed-split
+//! lane/tile pattern, see `gemm.rs`), never of the panel boundaries or of
+//! thread scheduling.  There is no cross-thread floating-point reduction at
+//! all; the only shared-write structure is the disjoint row split.  The
+//! `linalg_parallel` integration test asserts `par == serial` bitwise over
+//! odd shapes and thread counts.
+//!
+//! ## Cost model
+//!
+//! Threads are spawned per call (~10 µs each); at the paper's shard shapes
+//! (f ≈ 100–650, n ≈ thousands of columns) a Gram panel costs hundreds of
+//! µs to ms, so spawn overhead is noise.  Callers pass `threads` explicitly
+//! (the coordinator wires `TrainConfig::threads` through each worker's
+//! `Workspace`); `threads <= 1` short-circuits to the serial kernel with no
+//! spawn and no allocation — that is the default, since ranks themselves
+//! are already threads and oversubscription would hurt.
+
+use super::gemm;
+use super::Matrix;
+
+/// Host parallelism cap: `GRADFREE_THREADS` env override, else the number
+/// of available cores.  Used by benches; the trainer takes its count from
+/// `TrainConfig::threads`.
+pub fn available_threads() -> usize {
+    if let Ok(v) = std::env::var("GRADFREE_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Split `rows` into `parts` contiguous ranges, as evenly as possible
+/// (first `rows % parts` ranges get one extra row).  Deterministic.
+pub fn split_rows(rows: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.max(1).min(rows.max(1));
+    let base = rows / parts;
+    let extra = rows % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut r0 = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < extra);
+        out.push((r0, r0 + len));
+        r0 += len;
+    }
+    debug_assert_eq!(r0, rows);
+    out
+}
+
+/// Split `m` rows of an upper-triangular workload (row `i` costs `m - i`)
+/// into `parts` ranges of roughly equal element count, so the `syrk`
+/// triangle phase load-balances.  Deterministic function of `(m, parts)`.
+fn split_triangle(m: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.max(1).min(m.max(1));
+    let total = m * (m + 1) / 2;
+    let mut out = Vec::with_capacity(parts);
+    let mut row = 0;
+    let mut acc = 0usize;
+    for p in 1..=parts {
+        let target = total * p / parts;
+        let start = row;
+        while row < m && acc < target {
+            acc += m - row;
+            row += 1;
+        }
+        if p == parts {
+            row = m;
+        }
+        out.push((start, row));
+    }
+    out
+}
+
+/// Run `f(panel, i0, i1)` over disjoint row panels of `c` on scoped threads.
+fn run_row_panels<F>(c: &mut Matrix, ranges: &[(usize, usize)], f: F)
+where
+    F: Fn(&mut [f32], usize, usize) + Sync,
+{
+    let n = c.cols();
+    std::thread::scope(|s| {
+        let mut rest = c.as_mut_slice();
+        for &(i0, i1) in ranges {
+            let (panel, tail) = rest.split_at_mut((i1 - i0) * n);
+            rest = tail;
+            if i1 == i0 {
+                continue;
+            }
+            let f = &f;
+            s.spawn(move || f(panel, i0, i1));
+        }
+    });
+}
+
+#[inline]
+fn effective(threads: usize, rows: usize) -> usize {
+    threads.max(1).min(rows.max(1))
+}
+
+/// Parallel `C = A·B` (row-split `gemm_nn`).
+pub fn gemm_nn_into(a: &Matrix, b: &Matrix, c: &mut Matrix, threads: usize) {
+    let t = effective(threads, a.rows());
+    if t <= 1 {
+        gemm::gemm_nn_into(a, b, c);
+        return;
+    }
+    assert_eq!(a.cols(), b.rows(), "gemm_nn: contraction mismatch");
+    c.resize(a.rows(), b.cols());
+    let ranges = split_rows(a.rows(), t);
+    run_row_panels(c, &ranges, |panel, i0, i1| {
+        gemm::nn_rows(a, b, 1.0, 0.0, panel, i0, i1)
+    });
+}
+
+/// Parallel `C = A·Bᵀ` (row-split `gemm_nt`; literal self-aliasing routes
+/// to `syrk_into`).
+pub fn gemm_nt_into(a: &Matrix, b: &Matrix, c: &mut Matrix, threads: usize) {
+    if std::ptr::eq(a, b) {
+        syrk_into(a, c, threads);
+        return;
+    }
+    let t = effective(threads, a.rows());
+    if t <= 1 {
+        gemm::gemm_nt_into(a, b, c);
+        return;
+    }
+    assert_eq!(a.cols(), b.cols(), "gemm_nt: contraction mismatch");
+    c.resize(a.rows(), b.rows());
+    let ranges = split_rows(a.rows(), t);
+    run_row_panels(c, &ranges, |panel, i0, i1| gemm::nt_rows(a, b, panel, i0, i1));
+}
+
+/// Parallel `C = Aᵀ·B` (row-split `gemm_tn`).
+pub fn gemm_tn_into(a: &Matrix, b: &Matrix, c: &mut Matrix, threads: usize) {
+    let t = effective(threads, a.cols());
+    if t <= 1 {
+        gemm::gemm_tn_into(a, b, c);
+        return;
+    }
+    assert_eq!(a.rows(), b.rows(), "gemm_tn: contraction mismatch");
+    c.resize(a.cols(), b.cols());
+    let ranges = split_rows(a.cols(), t);
+    run_row_panels(c, &ranges, |panel, i0, i1| gemm::tn_rows(a, b, panel, i0, i1));
+}
+
+/// Parallel `C = A·Aᵀ`: triangle-balanced row split for the upper-triangle
+/// phase, then a serial mirror (O(m²) copies, negligible next to the
+/// O(m²k/2) triangle FLOPs).
+pub fn syrk_into(a: &Matrix, c: &mut Matrix, threads: usize) {
+    let m = a.rows();
+    let t = effective(threads, m);
+    if t <= 1 {
+        gemm::syrk_into(a, c);
+        return;
+    }
+    c.resize(m, m);
+    let ranges = split_triangle(m, t);
+    run_row_panels(c, &ranges, |panel, i0, i1| {
+        gemm::syrk_upper_rows(a, panel, i0, i1)
+    });
+    gemm::mirror_lower(c);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn split_rows_covers_everything() {
+        for &(rows, parts) in &[(0usize, 3usize), (1, 4), (7, 3), (100, 7), (4, 4)] {
+            let r = split_rows(rows, parts);
+            assert_eq!(r.first().map(|x| x.0).unwrap_or(0), 0);
+            assert_eq!(r.last().map(|x| x.1).unwrap_or(0), rows);
+            for w in r.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "ranges must be contiguous");
+            }
+        }
+    }
+
+    #[test]
+    fn split_triangle_covers_and_balances() {
+        let r = split_triangle(100, 4);
+        assert_eq!(r.first().unwrap().0, 0);
+        assert_eq!(r.last().unwrap().1, 100);
+        for w in r.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+        }
+        // earlier (heavier per-row) panels must take fewer rows
+        assert!(r[0].1 - r[0].0 < r[3].1 - r[3].0);
+    }
+
+    #[test]
+    fn parallel_kernels_match_serial_bitwise() {
+        let mut rng = Rng::seed_from(42);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (5, 33, 7), (64, 100, 48), (13, 257, 3)] {
+            let a = Matrix::randn(m, k, &mut rng);
+            let b = Matrix::randn(n, k, &mut rng);
+            for threads in [2, 3, 4] {
+                let mut c_par = Matrix::default();
+                gemm_nt_into(&a, &b, &mut c_par, threads);
+                let serial = crate::linalg::gemm_nt(&a, &b);
+                assert_eq!(c_par.as_slice(), serial.as_slice(), "nt ({m},{k},{n}) t={threads}");
+
+                let mut s_par = Matrix::default();
+                syrk_into(&a, &mut s_par, threads);
+                let s_serial = crate::linalg::syrk(&a);
+                assert_eq!(s_par.as_slice(), s_serial.as_slice(), "syrk ({m},{k}) t={threads}");
+            }
+        }
+    }
+}

@@ -57,7 +57,7 @@ fn print_usage() {
          --preset test|quickstart|svhn|higgs   network + defaults\n  \
          --dataset blobs|svhn|higgs|<csv path> data source (default: matches preset)\n  \
          --samples N --test-samples N --seed S\n  \
-         --backend native|pjrt  --workers N  --iters N  --warmup N\n  \
+         --backend native|pjrt  --workers N  --threads N  --iters N  --warmup N\n  \
          --gamma G --beta B --momentum M --multiplier-mode bregman|none|classical\n  \
          --target-acc A   stop at test accuracy A\n  \
          --out curve.csv  write the convergence curve\n  \

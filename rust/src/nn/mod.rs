@@ -7,8 +7,22 @@
 //! after the last layer, binary labels and the §6 separable hinge.
 
 use crate::config::Activation;
-use crate::linalg::{gemm_nn, gemm_nt, gemm_tn, Matrix};
+use crate::linalg::{gemm_nn, gemm_nn_into, gemm_nt_into, gemm_tn_into, Matrix};
 use crate::Result;
+
+/// Reusable forward/backward scratch for `Mlp::loss_grad_into` — hidden
+/// activations, output scores and the two backprop deltas.  After the first
+/// call warms every buffer, repeated same-shape loss/gradient evaluations
+/// (the SGD/CG/L-BFGS hot loops) perform zero heap allocation.
+#[derive(Default)]
+pub struct MlpWorkspace {
+    /// Post-activation a_1 … a_{L-1} (a_0 is the caller's `x`, by ref).
+    acts: Vec<Matrix>,
+    /// Raw output scores z_L.
+    z: Matrix,
+    delta: Matrix,
+    back: Matrix,
+}
 
 /// Network shape + activation (weights travel separately so optimizers can
 /// own them).
@@ -73,97 +87,120 @@ impl Mlp {
         a
     }
 
-    /// Forward pass that keeps every post-activation (for backprop):
-    /// returns `(activations, z_L)` where `activations[l]` = a_l (a_0 = x).
-    fn forward_trace(&self, ws: &[Matrix], x: &Matrix) -> (Vec<Matrix>, Matrix) {
-        let mut acts = Vec::with_capacity(ws.len());
-        acts.push(x.clone());
-        let mut a = x.clone();
-        for (l, w) in ws.iter().enumerate() {
-            let mut z = gemm_nn(w, &a);
-            if l + 1 < ws.len() {
-                for v in z.as_mut_slice() {
-                    *v = self.act.apply(*v);
-                }
-                acts.push(z.clone());
-                a = z;
-            } else {
-                return (acts, z);
-            }
-        }
-        unreachable!("no layers")
-    }
-
     /// Summed hinge loss over all samples (paper §6 form).
     pub fn loss(&self, ws: &[Matrix], x: &Matrix, y: &Matrix) -> f64 {
         let z = self.forward(ws, x);
         hinge_loss_sum(&z, y)
     }
 
-    /// (summed hinge loss, per-layer weight gradients) via backprop.
+    /// (summed hinge loss, per-layer weight gradients) via backprop
+    /// (allocating wrapper around `loss_grad_into`).
+    pub fn loss_grad(&self, ws: &[Matrix], x: &Matrix, y: &Matrix) -> (f64, Vec<Matrix>) {
+        let mut work = MlpWorkspace::default();
+        let mut grads = Vec::new();
+        let loss = self.loss_grad_into(ws, x, y, &mut work, &mut grads);
+        (loss, grads)
+    }
+
+    /// Backprop into caller-owned gradient buffers through a reusable
+    /// workspace — the baselines' zero-allocation hot path.
     ///
     /// Subgradient convention at the hinge kink: 0 (matches what jax's
     /// `max(1−z, 0)` VJP produces, keeping native == artifact numerics).
-    pub fn loss_grad(&self, ws: &[Matrix], x: &Matrix, y: &Matrix) -> (f64, Vec<Matrix>) {
-        let (acts, z) = self.forward_trace(ws, x);
-        let loss = hinge_loss_sum(&z, y);
+    pub fn loss_grad_into(
+        &self,
+        ws: &[Matrix],
+        x: &Matrix,
+        y: &Matrix,
+        work: &mut MlpWorkspace,
+        grads: &mut Vec<Matrix>,
+    ) -> f64 {
+        let layers = ws.len();
+        while work.acts.len() < layers.saturating_sub(1) {
+            work.acts.push(Matrix::default());
+        }
+        while grads.len() < layers {
+            grads.push(Matrix::default());
+        }
+        grads.truncate(layers);
+
+        // Forward, keeping every post-activation (a_0 stays the caller's x).
+        for l in 0..layers - 1 {
+            let (done, rest) = work.acts.split_at_mut(l);
+            let a_prev: &Matrix = if l == 0 { x } else { &done[l - 1] };
+            let buf = &mut rest[0];
+            gemm_nn_into(&ws[l], a_prev, buf);
+            for v in buf.as_mut_slice() {
+                *v = self.act.apply(*v);
+            }
+        }
+        {
+            let a_prev: &Matrix = if layers == 1 { x } else { &work.acts[layers - 2] };
+            gemm_nn_into(&ws[layers - 1], a_prev, &mut work.z);
+        }
+        let loss = hinge_loss_sum(&work.z, y);
 
         // dL/dz_L, entry-wise.
-        let mut delta = Matrix::zeros(z.rows(), z.cols());
-        for r in 0..z.rows() {
-            for c in 0..z.cols() {
-                let zv = z.at(r, c);
-                let yv = y.at(r, c);
-                *delta.at_mut(r, c) = if yv > 0.5 {
-                    if zv < 1.0 {
-                        -1.0
-                    } else {
-                        0.0
-                    }
-                } else if zv > 0.0 {
-                    1.0
+        work.delta.resize(work.z.rows(), work.z.cols());
+        for (d, (&zv, &yv)) in work
+            .delta
+            .as_mut_slice()
+            .iter_mut()
+            .zip(work.z.as_slice().iter().zip(y.as_slice()))
+        {
+            *d = if yv > 0.5 {
+                if zv < 1.0 {
+                    -1.0
                 } else {
                     0.0
-                };
-            }
+                }
+            } else if zv > 0.0 {
+                1.0
+            } else {
+                0.0
+            };
         }
 
-        let mut grads = vec![Matrix::zeros(0, 0); ws.len()];
-        for l in (0..ws.len()).rev() {
+        for l in (0..layers).rev() {
             // dW_l = delta · a_{l-1}ᵀ
-            grads[l] = gemm_nt(&delta, &acts[l]);
+            {
+                let a_prev: &Matrix = if l == 0 { x } else { &work.acts[l - 1] };
+                gemm_nt_into(&work.delta, a_prev, &mut grads[l]);
+            }
             if l > 0 {
                 // delta_{l-1} = (W_lᵀ delta) ⊙ h'(a_{l-1})
-                let mut back = gemm_tn(&ws[l], &delta);
-                let a_prev = &acts[l];
-                for r in 0..back.rows() {
-                    for c in 0..back.cols() {
-                        let av = a_prev.at(r, c);
-                        let dh = match self.act {
-                            // a = relu(z): derivative is 1 where a > 0
-                            Activation::Relu => {
-                                if av > 0.0 {
-                                    1.0
-                                } else {
-                                    0.0
-                                }
+                gemm_tn_into(&ws[l], &work.delta, &mut work.back);
+                let a_prev = &work.acts[l - 1];
+                for (bv, &av) in work
+                    .back
+                    .as_mut_slice()
+                    .iter_mut()
+                    .zip(a_prev.as_slice())
+                {
+                    let dh = match self.act {
+                        // a = relu(z): derivative is 1 where a > 0
+                        Activation::Relu => {
+                            if av > 0.0 {
+                                1.0
+                            } else {
+                                0.0
                             }
-                            // a = clamp(z,0,1): derivative 1 strictly inside
-                            Activation::HardSigmoid => {
-                                if av > 0.0 && av < 1.0 {
-                                    1.0
-                                } else {
-                                    0.0
-                                }
+                        }
+                        // a = clamp(z,0,1): derivative 1 strictly inside
+                        Activation::HardSigmoid => {
+                            if av > 0.0 && av < 1.0 {
+                                1.0
+                            } else {
+                                0.0
                             }
-                        };
-                        *back.at_mut(r, c) *= dh;
-                    }
+                        }
+                    };
+                    *bv *= dh;
                 }
-                delta = back;
+                std::mem::swap(&mut work.delta, &mut work.back);
             }
         }
-        (loss, grads)
+        loss
     }
 
     /// (correct count, sample count) at the paper's 0.5 threshold.
@@ -261,6 +298,22 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn loss_grad_into_matches_loss_grad_across_reuse() {
+        let (mlp, ws, x, y) = toy();
+        let (want_loss, want_grads) = mlp.loss_grad(&ws, &x, &y);
+        let mut work = MlpWorkspace::default();
+        let mut grads = Vec::new();
+        for pass in 0..3 {
+            let loss = mlp.loss_grad_into(&ws, &x, &y, &mut work, &mut grads);
+            assert_eq!(loss, want_loss, "pass {pass}");
+            assert_eq!(grads.len(), want_grads.len());
+            for (g, w) in grads.iter().zip(&want_grads) {
+                assert_eq!(g.as_slice(), w.as_slice(), "pass {pass}");
+            }
+        }
     }
 
     #[test]

@@ -1,15 +1,72 @@
 //! Executable cache + Matrix↔Literal marshaling.
+//!
+//! The real implementation needs the `xla` crate (PJRT bindings), which is
+//! not vendored in the offline build environment, so everything touching
+//! `xla::` is gated behind the `pjrt` cargo feature.  Without the feature
+//! the module compiles to a stub whose constructor returns a descriptive
+//! error after validating the manifest — the native backend, baselines and
+//! benches are unaffected.
 
+// Fail loudly and actionably if the feature is enabled before the `xla`
+// dependency exists (otherwise the first error would be an opaque
+// `unresolved extern crate xla`).  Enabling for real: add the `xla`
+// dependency, change the feature to `pjrt = ["dep:xla"]` in
+// rust/Cargo.toml, and delete this guard.
+#[cfg(feature = "pjrt")]
+compile_error!(
+    "the `pjrt` feature requires the `xla` crate, which is not vendored \
+     offline: add `xla` to [dependencies], set `pjrt = [\"dep:xla\"]`, and \
+     remove this compile_error! in rust/src/runtime/exec.rs"
+);
+
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 
 use crate::linalg::Matrix;
 use crate::runtime::{ConfigManifest, Manifest};
 use crate::Result;
 
+/// Stub context compiled when the `pjrt` feature is off: construction
+/// validates the manifest (so artifact drift still fails loudly) and then
+/// reports that PJRT execution is unavailable in this build.
+#[cfg(not(feature = "pjrt"))]
+pub struct RuntimeContext {
+    manifest: ConfigManifest,
+    /// Cumulative host<->device marshaling + execution counters.
+    pub executions: u64,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl RuntimeContext {
+    pub fn new(artifacts_dir: &str, config_name: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let _ = manifest.config(config_name)?;
+        anyhow::bail!(
+            "runtime built without the `pjrt` feature: rebuild with the `xla` \
+             dependency and `--features pjrt` to execute AOT artifacts \
+             (use `--backend native` otherwise)"
+        )
+    }
+
+    pub fn manifest(&self) -> &ConfigManifest {
+        &self.manifest
+    }
+
+    /// Column tile every artifact was lowered with.
+    pub fn tile(&self) -> usize {
+        self.manifest.tile
+    }
+
+    pub fn run(&mut self, op: &str, _inputs: &[&Matrix]) -> Result<Vec<Matrix>> {
+        anyhow::bail!("runtime built without the `pjrt` feature: cannot execute '{op}'")
+    }
+}
+
 /// Thread-affine PJRT execution context for one artifact config.
 ///
 /// Compiles each op lazily on first use and caches the loaded executable;
 /// `run` validates shapes against the manifest before touching PJRT.
+#[cfg(feature = "pjrt")]
 pub struct RuntimeContext {
     client: xla::PjRtClient,
     manifest: ConfigManifest,
@@ -19,6 +76,7 @@ pub struct RuntimeContext {
     pub executions: u64,
 }
 
+#[cfg(feature = "pjrt")]
 impl RuntimeContext {
     /// Build a context for `config_name` from `artifacts_dir/manifest.json`.
     pub fn new(artifacts_dir: &str, config_name: &str) -> Result<Self> {
@@ -118,6 +176,7 @@ impl RuntimeContext {
 
 /// Row-major f32 Matrix -> rank-2 Literal (XLA default layout is row-major,
 /// so this is a flat copy).
+#[cfg(feature = "pjrt")]
 pub fn matrix_to_literal(m: &Matrix) -> Result<xla::Literal> {
     let lit = xla::Literal::vec1(m.as_slice());
     lit.reshape(&[m.rows() as i64, m.cols() as i64])
@@ -125,6 +184,7 @@ pub fn matrix_to_literal(m: &Matrix) -> Result<xla::Literal> {
 }
 
 /// Rank-≤2 f32 Literal -> Matrix (scalars/vectors become 1×n).
+#[cfg(feature = "pjrt")]
 pub fn literal_to_matrix(lit: &xla::Literal, shape: &[usize]) -> Result<Matrix> {
     let data = lit
         .to_vec::<f32>()

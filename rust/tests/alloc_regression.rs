@@ -1,0 +1,201 @@
+//! Zero-allocation regression: one full steady-state ADMM iteration's
+//! worth of worker update phases — Gram pair (with the layer-1 input-Gram
+//! cache), a-updates, z-updates, the output solve and the λ step — must
+//! perform **zero heap allocations** once the `Workspace`/state buffers
+//! have warmed up, and so must the baselines' `loss_grad_into` substrate.
+//!
+//! The shim is a counting `#[global_allocator]` wrapping `System`; the
+//! whole check lives in a single `#[test]` so no sibling test can allocate
+//! while the counter is armed.  The channel/leader machinery is excluded
+//! on purpose: mpsc nodes and `Arc` broadcasts are the *simulated network*
+//! (bytes, priced by the cost model), not the compute hot path this test
+//! pins down.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+struct CountingAlloc;
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn armed<T>(f: impl FnOnce() -> T) -> (T, usize) {
+    ALLOCS.store(0, Ordering::SeqCst);
+    ARMED.store(true, Ordering::SeqCst);
+    let out = f();
+    ARMED.store(false, Ordering::SeqCst);
+    (out, ALLOCS.load(Ordering::SeqCst))
+}
+
+use gradfree_admm::config::Activation;
+use gradfree_admm::coordinator::updates::{self, Workspace};
+use gradfree_admm::linalg::{a_update_inverse, par, Matrix};
+use gradfree_admm::nn::{Mlp, MlpWorkspace};
+use gradfree_admm::rng::Rng;
+
+/// The worker-side state of one rank for a [7, 6, 5, 1] net: shard data,
+/// activations/outputs/multiplier, the reusable `Workspace`, and the
+/// layer-1 input-Gram cache — everything Algorithm 1 touches per sweep.
+struct WorkerSim {
+    x: Matrix,
+    y: Matrix,
+    acts: Vec<Matrix>, // a_1, a_2
+    zs: Vec<Matrix>,   // z_1, z_2, z_3
+    lam: Matrix,
+    ws: Vec<Matrix>,    // fixed weights (the leader's broadcast)
+    minvs: Vec<Matrix>, // fixed (β WᵀW + γI)⁻¹ per hidden layer
+    scratch: Workspace,
+    zat: Matrix,
+    aat: Matrix,
+    aat1_cache: Matrix,
+    gamma: f32,
+    beta: f32,
+    act: Activation,
+}
+
+impl WorkerSim {
+    fn new(n: usize) -> Self {
+        let dims = [7usize, 6, 5, 1];
+        let mut rng = Rng::seed_from(5);
+        let ws: Vec<Matrix> = (0..3)
+            .map(|l| Matrix::randn(dims[l + 1], dims[l], &mut rng))
+            .collect();
+        let (gamma, beta) = (10.0f32, 1.0f32);
+        let minvs = (0..2)
+            .map(|l| a_update_inverse(&ws[l + 1], beta, gamma).unwrap())
+            .collect();
+        WorkerSim {
+            x: Matrix::randn(dims[0], n, &mut rng),
+            y: Matrix::from_fn(dims[3], n, |_, c| (c % 2) as f32),
+            acts: (1..3).map(|l| Matrix::randn(dims[l], n, &mut rng)).collect(),
+            zs: (1..4).map(|l| Matrix::randn(dims[l], n, &mut rng)).collect(),
+            lam: Matrix::zeros(dims[3], n),
+            ws,
+            minvs,
+            scratch: Workspace::new(1),
+            zat: Matrix::default(),
+            aat: Matrix::default(),
+            aat1_cache: Matrix::default(),
+            gamma,
+            beta,
+            act: Activation::Relu,
+        }
+    }
+
+    /// One full Algorithm-1 sweep of worker phases (native backend math,
+    /// exactly what `coordinator::worker::handle` runs per layer).
+    fn iteration(&mut self) {
+        let t = self.scratch.threads;
+        for l in 1..=3usize {
+            // Gram phase (layer 1 reuses the cached input Gram).
+            if l == 1 {
+                if self.aat1_cache.is_empty() {
+                    updates::gram_into(&self.zs[0], &self.x, t, &mut self.zat, &mut self.aat);
+                    self.aat1_cache.copy_from(&self.aat);
+                } else {
+                    par::gemm_nt_into(&self.zs[0], &self.x, &mut self.zat, t);
+                    self.aat.copy_from(&self.aat1_cache);
+                }
+            } else {
+                let a_prev = &self.acts[l - 2];
+                updates::gram_into(&self.zs[l - 1], a_prev, t, &mut self.zat, &mut self.aat);
+            }
+            // Worker update phases (the leader's solve is out of scope —
+            // its Cholesky factor is leader-side and features² small).
+            if l < 3 {
+                updates::a_update_into(
+                    &self.minvs[l - 1],
+                    &self.ws[l],
+                    &self.zs[l],
+                    &self.zs[l - 1],
+                    self.beta,
+                    self.gamma,
+                    self.act,
+                    t,
+                    &mut self.scratch.rhs,
+                    &mut self.acts[l - 1],
+                );
+                let a_prev: &Matrix = if l == 1 { &self.x } else { &self.acts[l - 2] };
+                par::gemm_nn_into(&self.ws[l - 1], a_prev, &mut self.scratch.m, t);
+                updates::z_hidden_into(
+                    &self.acts[l - 1],
+                    &self.scratch.m,
+                    self.gamma,
+                    self.beta,
+                    self.act,
+                    &mut self.zs[l - 1],
+                );
+            } else {
+                let a_prev = &self.acts[1];
+                par::gemm_nn_into(&self.ws[2], a_prev, &mut self.scratch.m, t);
+                updates::z_out_into(&self.y, &self.scratch.m, &self.lam, self.beta, &mut self.zs[2]);
+                updates::lambda_update(&mut self.lam, &self.zs[2], &self.scratch.m, self.beta);
+            }
+        }
+    }
+}
+
+#[test]
+fn steady_state_hot_loops_allocate_nothing() {
+    // ---- ADMM worker phases ------------------------------------------
+    let mut sim = WorkerSim::new(33);
+    // Warm up: first iteration sizes every buffer, second proves stability.
+    sim.iteration();
+    sim.iteration();
+    let (_, admm_allocs) = armed(|| {
+        sim.iteration();
+        sim.iteration();
+    });
+    assert_eq!(
+        admm_allocs, 0,
+        "steady-state ADMM worker phases must not allocate ({admm_allocs} allocations)"
+    );
+
+    // ---- baselines substrate: loss_grad_into -------------------------
+    let mlp = Mlp::new(vec![7, 6, 5, 1], Activation::Relu).unwrap();
+    let mut rng = Rng::seed_from(9);
+    let ws = mlp.init_weights(&mut rng);
+    let x = Matrix::randn(7, 33, &mut rng);
+    let y = Matrix::from_fn(1, 33, |_, c| (c % 2) as f32);
+    let mut work = MlpWorkspace::default();
+    let mut grads: Vec<Matrix> = Vec::new();
+    let warm = mlp.loss_grad_into(&ws, &x, &y, &mut work, &mut grads);
+    let ((), grad_allocs) = armed(|| {
+        let again = mlp.loss_grad_into(&ws, &x, &y, &mut work, &mut grads);
+        assert_eq!(again, warm);
+    });
+    assert_eq!(
+        grad_allocs, 0,
+        "steady-state loss_grad_into must not allocate ({grad_allocs} allocations)"
+    );
+}

@@ -23,6 +23,7 @@ fn base_cfg() -> TrainConfig {
         warmup_iters: 4,
         iters: 30,
         workers: 3,
+        threads: 1,
         multiplier_mode: MultiplierMode::Bregman,
         backend: Backend::Native,
         init: gradfree_admm::config::InitScheme::Gaussian,

@@ -1,0 +1,190 @@
+//! Parallel-kernel determinism contract: the `linalg::par` row-panel
+//! parallelizer and every `_into` variant must be **bit-identical** to the
+//! serial allocating kernels, across odd shapes (1×1, tall-skinny, wide),
+//! thread counts, and repeated runs — matching the determinism contract of
+//! `cluster/comm.rs`.
+
+use gradfree_admm::linalg::{
+    self, cholesky_factor, gemm_nn, gemm_nn_into, gemm_nt, gemm_nt_into, gemm_tn, gemm_tn_into,
+    par, syrk, syrk_into, Matrix,
+};
+use gradfree_admm::prop::forall;
+
+/// Pre-dirty a buffer so a kernel that skips any output element fails the
+/// bitwise comparison (NaN never equals anything, including itself).
+fn dirty() -> Matrix {
+    let mut m = Matrix::zeros(3, 3);
+    m.fill(f32::NAN);
+    m
+}
+
+#[test]
+fn into_variants_match_allocating_kernels_bitwise() {
+    forall("into == alloc", 40, |g| {
+        let m = g.usize_in(1, 40);
+        let k = g.usize_in(1, 300);
+        let n = g.usize_in(1, 40);
+        let a = g.matrix(m, k, 1.0);
+        let b = g.matrix(n, k, 1.0);
+
+        let want_nt = gemm_nt(&a, &b);
+        let mut c = dirty();
+        gemm_nt_into(&a, &b, &mut c);
+        if c.as_slice() != want_nt.as_slice() {
+            return Err(format!("gemm_nt_into differs at ({m},{k},{n})"));
+        }
+
+        let bt = b.transpose(); // (k, n)
+        let want_nn = gemm_nn(&a, &bt);
+        let mut c = dirty();
+        gemm_nn_into(&a, &bt, &mut c);
+        if c.as_slice() != want_nn.as_slice() {
+            return Err(format!("gemm_nn_into differs at ({m},{k},{n})"));
+        }
+
+        let at = a.transpose(); // (k, m)
+        let want_tn = gemm_tn(&at, &bt);
+        let mut c = dirty();
+        gemm_tn_into(&at, &bt, &mut c);
+        if c.as_slice() != want_tn.as_slice() {
+            return Err(format!("gemm_tn_into differs at ({m},{k},{n})"));
+        }
+
+        let want_sy = syrk(&a);
+        let mut c = dirty();
+        syrk_into(&a, &mut c);
+        if c.as_slice() != want_sy.as_slice() {
+            return Err(format!("syrk_into differs at ({m},{k})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parallel_matches_serial_bitwise_over_odd_shapes() {
+    // Explicit odd-shape corners plus randomized shapes; threads beyond the
+    // row count exercise the clamping path.
+    let corners = [
+        (1usize, 1usize, 1usize),
+        (1, 257, 1),
+        (2, 1000, 3),    // tall-skinny contraction
+        (257, 9, 2),     // tall output
+        (3, 33, 300),    // wide output
+        (64, 128, 64),
+    ];
+    for &(m, k, n) in &corners {
+        let mut rng = gradfree_admm::rng::Rng::seed_from((m * 1000 + k * 10 + n) as u64);
+        let a = Matrix::randn(m, k, &mut rng);
+        let b = Matrix::randn(n, k, &mut rng);
+        let bt = b.transpose();
+        let serial_nt = gemm_nt(&a, &b);
+        let serial_nn = gemm_nn(&a, &bt);
+        let serial_tn = gemm_tn(&a.transpose(), &bt);
+        let serial_sy = syrk(&a);
+        for threads in [1usize, 2, 3, 4, 7] {
+            let mut c = dirty();
+            par::gemm_nt_into(&a, &b, &mut c, threads);
+            assert_eq!(c.as_slice(), serial_nt.as_slice(), "nt ({m},{k},{n}) t={threads}");
+
+            let mut c = dirty();
+            par::gemm_nn_into(&a, &bt, &mut c, threads);
+            assert_eq!(c.as_slice(), serial_nn.as_slice(), "nn ({m},{k},{n}) t={threads}");
+
+            let at = a.transpose();
+            let mut c = dirty();
+            par::gemm_tn_into(&at, &bt, &mut c, threads);
+            assert_eq!(c.as_slice(), serial_tn.as_slice(), "tn ({m},{k},{n}) t={threads}");
+
+            let mut c = dirty();
+            par::syrk_into(&a, &mut c, threads);
+            assert_eq!(c.as_slice(), serial_sy.as_slice(), "syrk ({m},{k}) t={threads}");
+        }
+    }
+}
+
+#[test]
+fn parallel_runs_are_bit_deterministic_across_repeats() {
+    let mut rng = gradfree_admm::rng::Rng::seed_from(99);
+    let a = Matrix::randn(37, 211, &mut rng);
+    let b = Matrix::randn(23, 211, &mut rng);
+    let mut first = Matrix::default();
+    par::gemm_nt_into(&a, &b, &mut first, 4);
+    for _ in 0..5 {
+        let mut again = Matrix::default();
+        par::gemm_nt_into(&a, &b, &mut again, 4);
+        assert_eq!(again.as_slice(), first.as_slice());
+    }
+    let mut sy_first = Matrix::default();
+    par::syrk_into(&a, &mut sy_first, 4);
+    for _ in 0..5 {
+        let mut again = Matrix::default();
+        par::syrk_into(&a, &mut again, 4);
+        assert_eq!(again.as_slice(), sy_first.as_slice());
+    }
+}
+
+#[test]
+fn syrk_agrees_with_general_kernel_and_is_exactly_symmetric() {
+    forall("syrk == nt(a, a-copy)", 30, |g| {
+        let m = g.usize_in(1, 30);
+        let k = g.usize_in(1, 200);
+        let a = g.matrix(m, k, 1.0);
+        let a_copy = a.clone();
+        let general = gemm_nt(&a, &a_copy); // distinct refs: general kernel
+        let sy = syrk(&a);
+        if sy.as_slice() != general.as_slice() {
+            return Err(format!("syrk != gemm_nt at ({m},{k})"));
+        }
+        for i in 0..m {
+            for j in 0..m {
+                if sy.at(i, j).to_bits() != sy.at(j, i).to_bits() {
+                    return Err(format!("asymmetry at ({i},{j})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gram_into_routes_syrk_and_matches_gram() {
+    use gradfree_admm::coordinator::updates;
+    let mut rng = gradfree_admm::rng::Rng::seed_from(7);
+    let z = Matrix::randn(9, 123, &mut rng);
+    let a = Matrix::randn(13, 123, &mut rng);
+    let (want_zat, want_aat) = updates::gram(&z, &a);
+    for threads in [1usize, 3] {
+        let mut zat = dirty();
+        let mut aat = dirty();
+        updates::gram_into(&z, &a, threads, &mut zat, &mut aat);
+        assert_eq!(zat.as_slice(), want_zat.as_slice());
+        assert_eq!(aat.as_slice(), want_aat.as_slice());
+        assert_eq!(aat.as_slice(), syrk(&a).as_slice(), "aat must take the syrk path");
+    }
+}
+
+#[test]
+fn cholesky_solve_into_and_weight_solve_into_match_bitwise() {
+    let mut rng = gradfree_admm::rng::Rng::seed_from(31);
+    let g = Matrix::randn(12, 40, &mut rng);
+    let mut spd = syrk(&g);
+    for i in 0..12 {
+        *spd.at_mut(i, i) += 1.0;
+    }
+    let b = Matrix::randn(12, 7, &mut rng);
+    let f = cholesky_factor(&spd).unwrap();
+    let want = f.solve_mat(&b).unwrap();
+    let mut scratch = Vec::new();
+    let mut out = dirty();
+    f.solve_mat_into(&b, &mut scratch, &mut out).unwrap();
+    assert_eq!(out.as_slice(), want.as_slice());
+
+    let z = Matrix::randn(5, 40, &mut rng);
+    let zat = gemm_nt(&z, &g);
+    let aat = syrk(&g);
+    let want_w = linalg::weight_solve(&zat, &aat, 1e-6).unwrap();
+    let mut ws_scratch = linalg::WeightSolveScratch::default();
+    let mut w = dirty();
+    linalg::weight_solve_into(&zat, &aat, 1e-6, &mut ws_scratch, &mut w).unwrap();
+    assert_eq!(w.as_slice(), want_w.as_slice());
+}
