@@ -1,0 +1,172 @@
+//! bench-serve: end-to-end latency/throughput of the inference server.
+//!
+//! Drives `serve::Server` over real TCP with the `serve::client` load
+//! generator at a target QPS (default: closed loop), once with singleton
+//! dispatch (`max_batch = 1`) and once micro-batched (`max_batch ≥ 8`),
+//! on the same model and workload.  Reports p50/p95/p99/mean latency and
+//! throughput per scenario and writes them machine-readable to
+//! `bench_out/BENCH_SERVE.json` so successive PRs can track the serving
+//! perf trajectory (the acceptance gate is batched throughput > singleton
+//! throughput).
+//!
+//!   cargo bench --bench serve [-- --dims 648x300x1 --conns 16 --requests 200
+//!                                 --qps 0 --max-batch 32 --max-wait-us 200]
+
+use std::collections::BTreeMap;
+
+use gradfree_admm::bench::banner;
+use gradfree_admm::cli::Args;
+use gradfree_admm::config::{Activation, Json, ServeConfig};
+use gradfree_admm::metrics::{latency_summary, LatencySummary};
+use gradfree_admm::nn::Mlp;
+use gradfree_admm::rng::Rng;
+use gradfree_admm::serve::{run_load, LoadOpts, Server};
+
+struct Scenario {
+    label: &'static str,
+    max_batch: usize,
+    max_wait_us: u64,
+    throughput_rps: f64,
+    latency: LatencySummary,
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn latency_json(ms_scale: f64, s: &LatencySummary) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("mean".into(), num(s.mean * ms_scale));
+    m.insert("p50".into(), num(s.p50 * ms_scale));
+    m.insert("p95".into(), num(s.p95 * ms_scale));
+    m.insert("p99".into(), num(s.p99 * ms_scale));
+    m.insert("max".into(), num(s.max * ms_scale));
+    Json::Obj(m)
+}
+
+fn write_bench_serve_json(
+    dims: &[usize],
+    opts: &LoadOpts,
+    scenarios: &[Scenario],
+    speedup: f64,
+) -> gradfree_admm::Result<String> {
+    let mut root = BTreeMap::new();
+    root.insert("schema".into(), num(1.0));
+    root.insert(
+        "model_dims".into(),
+        Json::Arr(dims.iter().map(|&d| num(d as f64)).collect()),
+    );
+    let mut w = BTreeMap::new();
+    w.insert("conns".into(), num(opts.conns as f64));
+    w.insert("requests_per_conn".into(), num(opts.requests_per_conn as f64));
+    w.insert("target_qps".into(), num(opts.target_qps));
+    root.insert("workload".into(), Json::Obj(w));
+    root.insert(
+        "scenarios".into(),
+        Json::Arr(
+            scenarios
+                .iter()
+                .map(|s| {
+                    let mut m = BTreeMap::new();
+                    m.insert("label".into(), Json::Str(s.label.into()));
+                    m.insert("max_batch".into(), num(s.max_batch as f64));
+                    m.insert("max_wait_us".into(), num(s.max_wait_us as f64));
+                    m.insert("throughput_rps".into(), num(s.throughput_rps));
+                    m.insert("latency_ms".into(), latency_json(1e3, &s.latency));
+                    Json::Obj(m)
+                })
+                .collect(),
+        ),
+    );
+    root.insert("batched_over_singleton_throughput".into(), num(speedup));
+    let dir = std::path::Path::new("bench_out");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("BENCH_SERVE.json");
+    std::fs::write(&path, Json::Obj(root).to_string_pretty())?;
+    Ok(path.display().to_string())
+}
+
+fn main() -> gradfree_admm::Result<()> {
+    let args = Args::parse();
+    let dims: Vec<usize> = args
+        .get_or("dims", "648x300x1")
+        .split(|c| c == ',' || c == 'x')
+        .map(|s| s.trim().parse::<usize>())
+        .collect::<std::result::Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("bad --dims: {e}"))?;
+    let opts = LoadOpts {
+        conns: args.parsed_or("conns", 16usize)?,
+        requests_per_conn: args.parsed_or("requests", 200usize)?,
+        target_qps: args.parsed_or("qps", 0.0f64)?,
+    };
+    let max_batch: usize = args.parsed_or("max-batch", 32)?;
+    let max_wait_us: u64 = args.parsed_or("max-wait-us", 200)?;
+
+    banner(
+        "bench-serve",
+        "micro-batched inference server latency/throughput",
+        "§5 (sample-parallel compute) applied to the serving path",
+    );
+
+    // Model + workload: random weights are perf-equivalent to trained ones.
+    let mut rng = Rng::seed_from(1);
+    let mlp = Mlp::new(dims.clone(), Activation::Relu)?;
+    let ws = mlp.init_weights(&mut rng);
+    let inputs: Vec<Vec<f32>> = (0..64)
+        .map(|_| (0..dims[0]).map(|_| rng.normal() as f32).collect())
+        .collect();
+    println!(
+        "model dims {dims:?}; {} conns x {} reqs, target_qps={}\n",
+        opts.conns, opts.requests_per_conn, opts.target_qps
+    );
+
+    let cases: Vec<(&'static str, usize, u64)> = vec![
+        ("singleton", 1, 0),
+        ("batched", max_batch.max(8), max_wait_us),
+    ];
+    let mut scenarios = Vec::new();
+    for (label, mb, wait) in cases {
+        let cfg = ServeConfig {
+            host: "127.0.0.1".into(),
+            port: 0,
+            threads: opts.conns,
+            max_batch: mb,
+            max_wait_us: wait,
+        };
+        let server = Server::start(&cfg, ws.clone(), Activation::Relu)?;
+        let report = run_load(server.addr(), &inputs, opts)?;
+        server.shutdown();
+        anyhow::ensure!(
+            report.errors == 0,
+            "{label}: {} request errors under load",
+            report.errors
+        );
+        let latency = latency_summary(&report.latencies_s);
+        let rps = report.throughput_rps();
+        println!(
+            "{label:10} max_batch={mb:<3} max_wait_us={wait:<4} {:>9.0} req/s   \
+             latency ms: mean {:.3}  p50 {:.3}  p95 {:.3}  p99 {:.3}",
+            rps,
+            latency.mean * 1e3,
+            latency.p50 * 1e3,
+            latency.p95 * 1e3,
+            latency.p99 * 1e3,
+        );
+        scenarios.push(Scenario {
+            label,
+            max_batch: mb,
+            max_wait_us: wait,
+            throughput_rps: rps,
+            latency,
+        });
+    }
+
+    let speedup = scenarios[1].throughput_rps / scenarios[0].throughput_rps;
+    println!(
+        "\nmicro-batching (batch {}) vs singleton throughput: {speedup:.2}x",
+        scenarios[1].max_batch
+    );
+    let path = write_bench_serve_json(&dims, &opts, &scenarios, speedup)?;
+    println!("written: {path}");
+    Ok(())
+}

@@ -53,6 +53,12 @@ impl Args {
         self.get(key).unwrap_or(default)
     }
 
+    /// Value of a mandatory `--key value` with a uniform error message.
+    pub fn require(&self, key: &str) -> crate::Result<&str> {
+        self.get(key)
+            .ok_or_else(|| anyhow::anyhow!("--{key} <value> required"))
+    }
+
     /// Parse a typed value with a default.
     pub fn parsed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> crate::Result<T>
     where
@@ -121,6 +127,14 @@ mod tests {
         assert_eq!(a.parsed_or("m", 5usize).unwrap(), 5);
         let bad = parse(&["--n", "x2"]);
         assert!(bad.parsed_or("n", 5usize).is_err());
+    }
+
+    #[test]
+    fn require_present_and_missing() {
+        let a = parse(&["serve", "--model", "m.gfadmm"]);
+        assert_eq!(a.require("model").unwrap(), "m.gfadmm");
+        let err = a.require("port").unwrap_err().to_string();
+        assert!(err.contains("--port"), "{err}");
     }
 
     #[test]

@@ -119,9 +119,19 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literals; `{n}` would emit
+                    // them verbatim and produce an unparseable document.
+                    // Follow the common serializer convention (serde_json,
+                    // JSON.stringify) and degrade to null.
+                    out.push_str("null");
+                } else if n.fract() == 0.0
+                    && n.abs() < 1e15
+                    && !(*n == 0.0 && n.is_sign_negative())
+                {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
+                    // shortest round-trip repr; -0.0 keeps its sign ("-0")
                     let _ = write!(out, "{n}");
                 }
             }
@@ -410,6 +420,49 @@ mod tests {
         assert_eq!(v, re);
         let rc = Json::parse(&v.to_string_compact()).unwrap();
         assert_eq!(v, rc);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(Json::Num(bad).to_string_compact(), "null");
+            assert_eq!(Json::Num(bad).to_string_pretty(), "null");
+        }
+        // ... even nested — and the output must stay parseable.
+        let v = Json::Arr(vec![Json::Num(1.5), Json::Num(f64::NAN), Json::Num(2.0)]);
+        let text = v.to_string_compact();
+        assert_eq!(text, "[1.5,null,2]");
+        assert_eq!(
+            Json::parse(&text).unwrap(),
+            Json::Arr(vec![Json::Num(1.5), Json::Null, Json::Num(2.0)])
+        );
+    }
+
+    #[test]
+    fn negative_zero_keeps_its_sign() {
+        let text = Json::Num(-0.0).to_string_compact();
+        assert_eq!(text, "-0");
+        match Json::parse(&text).unwrap() {
+            Json::Num(n) => assert!(n == 0.0 && n.is_sign_negative()),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(Json::Num(0.0).to_string_compact(), "0");
+    }
+
+    #[test]
+    fn string_escape_roundtrip() {
+        let gnarly = "quote\" backslash\\ newline\n tab\t cr\r ctrl\u{1} unicode\u{20ac}";
+        let v = Json::Obj(BTreeMap::from([(
+            "weird key \"\\\n".to_string(),
+            Json::Str(gnarly.to_string()),
+        )]));
+        for text in [v.to_string_compact(), v.to_string_pretty()] {
+            let re = Json::parse(&text).unwrap();
+            assert_eq!(re, v, "through {text:?}");
+        }
+        // spot-check the escape forms on the wire
+        let wire = Json::Str("a\"b\\c\nd\u{1}".into()).to_string_compact();
+        assert_eq!(wire, "\"a\\\"b\\\\c\\nd\\u0001\"");
     }
 
     #[test]

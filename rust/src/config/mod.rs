@@ -346,6 +346,84 @@ impl TrainConfig {
     }
 }
 
+/// Inference-server configuration (`gradfree serve`): bind address, the
+/// connection-handler pool, and the micro-batcher's admission knobs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind host (serve loopback by default; set 0.0.0.0 to expose).
+    pub host: String,
+    /// Bind port; 0 asks the OS for an ephemeral port (tests, benches).
+    pub port: u16,
+    /// Connection-handler threads — the maximum number of concurrently
+    /// served TCP connections.
+    pub threads: usize,
+    /// Upper bound on requests packed into one forward-pass micro-batch.
+    pub max_batch: usize,
+    /// How long the batcher waits for the batch to fill once the first
+    /// request of a batch has arrived (0 = dispatch immediately).
+    pub max_wait_us: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            host: "127.0.0.1".into(),
+            port: 7878,
+            threads: 4,
+            max_batch: 32,
+            max_wait_us: 200,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.host.is_empty(), "empty bind host");
+        anyhow::ensure!(self.threads >= 1, "need at least one handler thread");
+        anyhow::ensure!(self.max_batch >= 1, "max_batch must be >= 1");
+        anyhow::ensure!(
+            self.max_batch <= 4096,
+            "implausible max_batch {} (cap 4096)",
+            self.max_batch
+        );
+        Ok(())
+    }
+
+    /// Load from a JSON object (all fields optional; defaults fill in).
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut c = ServeConfig::default();
+        for (k, val) in v.as_obj()? {
+            match k.as_str() {
+                "host" => c.host = val.as_str()?.to_string(),
+                "port" => c.port = u16::try_from(val.as_usize()?)?,
+                "threads" => c.threads = val.as_usize()?,
+                "max_batch" => c.max_batch = val.as_usize()?,
+                "max_wait_us" => c.max_wait_us = val.as_usize()? as u64,
+                other => anyhow::bail!("unknown serve config key '{other}'"),
+            }
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Apply `--key value` CLI overrides on top of the current values.
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(v) = args.get("host") {
+            self.host = v.to_string();
+        }
+        self.port = args.parsed_or("port", self.port)?;
+        self.threads = args.parsed_or("threads", self.threads)?;
+        self.max_batch = args.parsed_or("max-batch", self.max_batch)?;
+        self.max_wait_us = args.parsed_or("max-wait-us", self.max_wait_us)?;
+        self.validate()
+    }
+
+    /// `host:port` bind address string.
+    pub fn addr(&self) -> String {
+        format!("{}:{}", self.host, self.port)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -353,6 +431,40 @@ mod tests {
     #[test]
     fn default_is_valid() {
         TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn serve_config_json_and_cli_overrides() {
+        let c = ServeConfig::from_json(
+            &Json::parse(r#"{"port": 9000, "max_batch": 8, "max_wait_us": 50}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.port, 9000);
+        assert_eq!(c.max_batch, 8);
+        assert_eq!(c.max_wait_us, 50);
+        assert_eq!(c.threads, 4); // default preserved
+        assert_eq!(c.addr(), "127.0.0.1:9000");
+
+        let mut c = ServeConfig::default();
+        let args = Args::parse_from(
+            ["--port", "0", "--max-batch", "1", "--threads", "2"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        c.apply_args(&args).unwrap();
+        assert_eq!((c.port, c.max_batch, c.threads), (0, 1, 2));
+    }
+
+    #[test]
+    fn serve_config_rejects_invalid() {
+        assert!(ServeConfig::from_json(&Json::parse(r#"{"oops": 1}"#).unwrap()).is_err());
+        assert!(ServeConfig::from_json(&Json::parse(r#"{"port": 70000}"#).unwrap()).is_err());
+        let mut c = ServeConfig::default();
+        c.max_batch = 0;
+        assert!(c.validate().is_err());
+        let mut c = ServeConfig::default();
+        c.threads = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

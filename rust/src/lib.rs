@@ -36,6 +36,7 @@ pub mod nn;
 pub mod prop;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 
 /// Crate-wide result type (anyhow-backed; all public fallible APIs use it).
 pub type Result<T> = anyhow::Result<T>;

@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   train      ADMM training (Algorithm 1) on a synthetic or CSV dataset
+//!   predict    evaluate a saved checkpoint on a dataset
+//!   serve      micro-batched inference server (JSON lines over TCP)
 //!   baseline   SGD / CG / L-BFGS on the same dataset
 //!   scale      measured strong-scaling sweep + cost-model extrapolation
 //!   inspect    dump the artifact manifest the runtime would load
@@ -13,7 +15,7 @@
 use gradfree_admm::baselines::{self, LocalObjective, SgdOpts};
 use gradfree_admm::cli::Args;
 use gradfree_admm::cluster::CostModel;
-use gradfree_admm::config::TrainConfig;
+use gradfree_admm::config::{ServeConfig, TrainConfig};
 use gradfree_admm::coordinator::AdmmTrainer;
 use gradfree_admm::data::{self, Dataset, Normalizer};
 use gradfree_admm::metrics::write_curves_csv;
@@ -37,6 +39,7 @@ fn run(args: &Args) -> Result<()> {
     match args.subcommand() {
         Some("train") => cmd_train(args),
         Some("predict") => cmd_predict(args),
+        Some("serve") => cmd_serve(args),
         Some("baseline") => cmd_baseline(args),
         Some("scale") => cmd_scale(args),
         Some("inspect") => cmd_inspect(args),
@@ -52,7 +55,7 @@ fn print_usage() {
     println!(
         "gradfree — Training Neural Networks Without Gradients (ICML 2016) \
          reproduction\n\n\
-         USAGE: gradfree <train|baseline|scale|inspect|gen-data> [flags]\n\n\
+         USAGE: gradfree <train|predict|serve|baseline|scale|inspect|gen-data> [flags]\n\n\
          COMMON FLAGS\n  \
          --preset test|quickstart|svhn|higgs   network + defaults\n  \
          --dataset blobs|svhn|higgs|<csv path> data source (default: matches preset)\n  \
@@ -65,7 +68,10 @@ fn print_usage() {
          --quiet          suppress per-eval lines\n\n\
          baseline: --method sgd|cg|lbfgs --lr --batch --bmomentum --epochs --max-iters\n\
          scale:    --cores 1,2,4,8 --model-cores 64,1024,7200 --target-acc A\n\
-         gen-data: --dataset blobs|svhn|higgs --samples N --out file.csv"
+         gen-data: --dataset blobs|svhn|higgs --samples N --out file.csv\n\
+         predict:  --model ckpt.gfadmm [--dataset ...]\n\
+         serve:    --model ckpt.gfadmm [--host H] [--port P] [--threads N]\n\
+         \x20          [--max-batch N] [--max-wait-us U] [--serve-config file.json]"
     );
 }
 
@@ -160,6 +166,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         last.map(|p| p.test_acc).unwrap_or(f64::NAN),
         out.recorder.best_accuracy()
     );
+    let gaps = out.recorder.eval_gap_summary();
+    if gaps.n > 0 {
+        // Same p50/p95/p99 schema bench-serve reports for request latency.
+        println!(
+            "eval cadence: mean {:.3}s  p50 {:.3}s  p95 {:.3}s  p99 {:.3}s per interval",
+            gaps.mean, gaps.p50, gaps.p95, gaps.p99
+        );
+    }
     if let Some((it, t)) = out.reached_target_at {
         println!("target accuracy reached at iter {it} after {t:.3}s");
     }
@@ -177,9 +191,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 /// `gradfree predict --model m.bin --dataset <csv|blobs|svhn|higgs>`:
 /// load a checkpoint and report accuracy on a dataset.
 fn cmd_predict(args: &Args) -> Result<()> {
-    let model_path = args
-        .get("model")
-        .ok_or_else(|| anyhow::anyhow!("--model <file> required"))?;
+    let model_path = args.require("model")?;
     let (ws, act) = gradfree_admm::nn::load_model(model_path)?;
     let mut dims = vec![ws[0].cols()];
     for w in &ws {
@@ -193,6 +205,39 @@ fn cmd_predict(args: &Args) -> Result<()> {
         "model {model_path}: accuracy {:.4} ({correct}/{n})",
         correct as f64 / n as f64
     );
+    Ok(())
+}
+
+/// `gradfree serve --model m.gfadmm [--port ..]`: load a checkpoint and
+/// serve it over the JSON line protocol until killed (see `serve` module
+/// docs for the protocol and EXPERIMENTS.md §Serving for a quickstart).
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model_path = args.require("model")?;
+    let (ws, act) = gradfree_admm::nn::load_model(model_path)?;
+    let mut cfg = match args.get("serve-config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("reading serve config {path}: {e}"))?;
+            ServeConfig::from_json(&gradfree_admm::config::Json::parse(&text)?)?
+        }
+        None => ServeConfig::default(),
+    };
+    cfg.apply_args(args)?;
+    let dims: Vec<usize> = std::iter::once(ws[0].cols())
+        .chain(ws.iter().map(|w| w.rows()))
+        .collect();
+    let server = gradfree_admm::serve::Server::start(&cfg, ws, act)?;
+    println!(
+        "serving {model_path} (dims={dims:?} act={}) on {}  \
+         [threads={} max_batch={} max_wait_us={}]",
+        act.name(),
+        server.addr(),
+        cfg.threads,
+        cfg.max_batch,
+        cfg.max_wait_us
+    );
+    println!(r#"protocol: {{"id":N,"x":[..]}} -> {{"argmax":K,"id":N,"y":[..]}} (one JSON object per line)"#);
+    server.wait();
     Ok(())
 }
 

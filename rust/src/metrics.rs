@@ -72,6 +72,18 @@ impl Recorder {
         self.points.last().map(|p| p.test_acc).unwrap_or(0.0)
     }
 
+    /// Distribution of the wall-clock gaps between consecutive recorded
+    /// points — per-eval iteration latency, in the same p50/p95/p99 schema
+    /// the serve bench reports for request latency.
+    pub fn eval_gap_summary(&self) -> LatencySummary {
+        let gaps: Vec<f64> = self
+            .points
+            .windows(2)
+            .map(|w| w[1].wall_s - w[0].wall_s)
+            .collect();
+        latency_summary(&gaps)
+    }
+
     /// CSV rows: `label,iter,wall_s,train_loss,test_acc,penalty`.
     pub fn to_csv(&self, include_header: bool) -> String {
         let mut out = String::new();
@@ -100,6 +112,56 @@ pub fn write_curves_csv(path: &str, curves: &[&Recorder]) -> crate::Result<()> {
     }
     std::fs::write(path, out)?;
     Ok(())
+}
+
+/// Latency distribution summary (mean + tail percentiles), the shared
+/// schema of `bench-serve` request latencies and `Recorder` inter-eval
+/// gaps.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencySummary {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Nearest-rank percentile over an **ascending-sorted** slice; `q` in
+/// [0, 1].  NaN on empty input.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let rank = (q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.max(1) - 1]
+}
+
+/// Sort a copy of `samples` and summarize mean/p50/p95/p99/min/max.
+pub fn latency_summary(samples: &[f64]) -> LatencySummary {
+    if samples.is_empty() {
+        return LatencySummary {
+            n: 0,
+            mean: f64::NAN,
+            p50: f64::NAN,
+            p95: f64::NAN,
+            p99: f64::NAN,
+            min: f64::NAN,
+            max: f64::NAN,
+        };
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency sample"));
+    LatencySummary {
+        n: sorted.len(),
+        mean: sorted.iter().sum::<f64>() / sorted.len() as f64,
+        p50: percentile(&sorted, 0.50),
+        p95: percentile(&sorted, 0.95),
+        p99: percentile(&sorted, 0.99),
+        min: sorted[0],
+        max: sorted[sorted.len() - 1],
+    }
 }
 
 /// Summary statistics over a sample.
@@ -171,5 +233,46 @@ mod tests {
     #[test]
     fn empty_summary_is_nan() {
         assert!(summarize(&[]).mean.is_nan());
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let sorted: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&sorted, 0.50), 50.0);
+        assert_eq!(percentile(&sorted, 0.95), 95.0);
+        assert_eq!(percentile(&sorted, 0.99), 99.0);
+        assert_eq!(percentile(&sorted, 0.0), 1.0);
+        assert_eq!(percentile(&sorted, 1.0), 100.0);
+        // small n: p99 of 4 samples is the max (rank ceil(3.96) = 4)
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 0.99), 4.0);
+        assert_eq!(percentile(&[7.0], 0.5), 7.0);
+        assert!(percentile(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn latency_summary_sorts_unordered_input() {
+        let s = latency_summary(&[4.0, 1.0, 3.0, 2.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.p50, 2.0);
+        assert_eq!(s.p95, 4.0);
+        assert_eq!(s.p99, 4.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!(latency_summary(&[]).p50.is_nan());
+    }
+
+    #[test]
+    fn recorder_eval_gap_summary() {
+        let mut r = Recorder::new("x");
+        for (i, w) in [0.0, 1.0, 3.0, 6.0].iter().enumerate() {
+            r.push(pt(i, *w, 0.5));
+        }
+        let s = r.eval_gap_summary();
+        assert_eq!(s.n, 3);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.p50, 2.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(Recorder::new("empty").eval_gap_summary().n, 0);
     }
 }

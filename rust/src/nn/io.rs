@@ -50,14 +50,19 @@ pub fn deserialize_model(bytes: &[u8]) -> Result<(Vec<Matrix>, Activation)> {
     for _ in 0..layers {
         let rows = read_u32(bytes, &mut pos)? as usize;
         let cols = read_u32(bytes, &mut pos)? as usize;
-        let need = rows * cols * 4;
-        anyhow::ensure!(bytes.len() >= pos + need, "truncated weight data");
-        let mut data = Vec::with_capacity(rows * cols);
-        for i in 0..rows * cols {
-            data.push(f32::from_le_bytes(
-                bytes[pos + 4 * i..pos + 4 * i + 4].try_into().unwrap(),
-            ));
-        }
+        // Checked: a crafted header like 2^31 x 2^31 would wrap `rows *
+        // cols * 4` to 0 in release and dodge the truncation check.
+        let need = rows
+            .checked_mul(cols)
+            .and_then(|e| e.checked_mul(4))
+            .ok_or_else(|| anyhow::anyhow!("implausible layer shape {rows}x{cols}"))?;
+        // `bytes.len() - pos` cannot underflow (read_u32 bounds pos), and
+        // unlike `pos + need` it cannot wrap for near-usize::MAX `need`.
+        anyhow::ensure!(bytes.len() - pos >= need, "truncated weight data");
+        let data: Vec<f32> = bytes[pos..pos + need]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
         pos += need;
         ws.push(Matrix::from_vec(rows, cols, data));
     }
@@ -81,16 +86,35 @@ mod tests {
     use crate::rng::Rng;
 
     #[test]
-    fn roundtrip() {
+    fn roundtrip_both_activations() {
         let mut rng = Rng::seed_from(1);
         let ws = vec![Matrix::randn(3, 5, &mut rng), Matrix::randn(1, 3, &mut rng)];
-        let bytes = serialize_model(&ws, Activation::HardSigmoid);
-        let (ws2, act) = deserialize_model(&bytes).unwrap();
-        assert_eq!(act, Activation::HardSigmoid);
-        assert_eq!(ws.len(), ws2.len());
-        for (a, b) in ws.iter().zip(&ws2) {
-            assert_eq!(a.as_slice(), b.as_slice());
+        for act in [Activation::Relu, Activation::HardSigmoid] {
+            let bytes = serialize_model(&ws, act);
+            let (ws2, act2) = deserialize_model(&bytes).unwrap();
+            assert_eq!(act2, act);
+            assert_eq!(ws.len(), ws2.len());
+            for (a, b) in ws.iter().zip(&ws2) {
+                assert_eq!(a.shape(), b.shape());
+                assert_eq!(a.as_slice(), b.as_slice());
+            }
         }
+    }
+
+    #[test]
+    fn roundtrip_preserves_special_float_bits() {
+        // The wire format is raw f32 LE — non-finite and signed-zero bit
+        // patterns must survive exactly (chunks_exact conversion path).
+        let w = Matrix::from_vec(
+            1,
+            5,
+            vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0, 1.5e-40],
+        );
+        let bytes = serialize_model(std::slice::from_ref(&w), Activation::Relu);
+        let (ws2, _) = deserialize_model(&bytes).unwrap();
+        let got: Vec<u32> = ws2[0].as_slice().iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = w.as_slice().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want);
     }
 
     #[test]
@@ -103,5 +127,33 @@ mod tests {
         let mut ok = serialize_model(&ws, Activation::Relu);
         ok.push(0); // trailing garbage
         assert!(deserialize_model(&ok).is_err());
+    }
+
+    #[test]
+    fn rejects_overflowing_layer_shape() {
+        // Header claiming a 2^31 x 2^31 layer: rows*cols*4 wraps to 0 on
+        // 64-bit, which must not bypass the truncation check.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.push(0); // relu
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // one layer
+        bytes.extend_from_slice(&(1u32 << 31).to_le_bytes()); // rows
+        bytes.extend_from_slice(&(1u32 << 31).to_le_bytes()); // cols
+        let err = deserialize_model(&bytes).unwrap_err().to_string();
+        assert!(err.contains("implausible"), "{err}");
+
+        // Shape whose element count fits usize but whose byte count is
+        // near usize::MAX: must hit the truncation error, not overflow
+        // `pos + need`.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.push(0);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&0x7FFF_FFFFu32.to_le_bytes()); // rows
+        bytes.extend_from_slice(&0x8000_0001u32.to_le_bytes()); // cols
+        let err = deserialize_model(&bytes).unwrap_err().to_string();
+        // ("implausible" on 32-bit targets, where the element count itself
+        // overflows usize)
+        assert!(err.contains("truncated") || err.contains("implausible"), "{err}");
     }
 }

@@ -7,7 +7,7 @@
 //! after the last layer, binary labels and the §6 separable hinge.
 
 use crate::config::Activation;
-use crate::linalg::{gemm_nn, gemm_nn_into, gemm_nt_into, gemm_tn_into, Matrix};
+use crate::linalg::{gemm_nn_into, gemm_nt_into, gemm_tn_into, Matrix};
 use crate::Result;
 
 /// Reusable forward/backward scratch for `Mlp::loss_grad_into` — hidden
@@ -22,6 +22,15 @@ pub struct MlpWorkspace {
     z: Matrix,
     delta: Matrix,
     back: Matrix,
+}
+
+impl MlpWorkspace {
+    /// The output scores written by the most recent `forward_into` /
+    /// `loss_grad_into` call (the serve batcher scatters per-request
+    /// columns out of this buffer without re-borrowing the whole `Mlp`).
+    pub fn output(&self) -> &Matrix {
+        &self.z
+    }
 }
 
 /// Network shape + activation (weights travel separately so optimizers can
@@ -74,17 +83,43 @@ impl Mlp {
 
     /// Forward pass returning the raw output scores `z_L` (1 sample/col).
     pub fn forward(&self, ws: &[Matrix], x: &Matrix) -> Matrix {
-        let mut a = x.clone();
-        for (l, w) in ws.iter().enumerate() {
-            let mut z = gemm_nn(w, &a);
-            if l + 1 < ws.len() {
-                for v in z.as_mut_slice() {
-                    *v = self.act.apply(*v);
-                }
-            }
-            a = z;
+        let mut work = MlpWorkspace::default();
+        self.forward_into(ws, x, &mut work).clone()
+    }
+
+    /// Forward pass through a reusable workspace — the inference hot path
+    /// (the serve batcher runs every micro-batch through this).  After the
+    /// first call warms the buffers at the widest batch, repeated calls at
+    /// any narrower batch perform zero heap allocations.
+    ///
+    /// Per-column results are bit-identical whatever the batch width: every
+    /// GEMM kernel accumulates each output element in an order that depends
+    /// only on the contraction length (see `linalg::gemm`), so packing a
+    /// request into a wider micro-batch cannot change its scores.
+    pub fn forward_into<'w>(
+        &self,
+        ws: &[Matrix],
+        x: &Matrix,
+        work: &'w mut MlpWorkspace,
+    ) -> &'w Matrix {
+        let layers = ws.len();
+        while work.acts.len() < layers.saturating_sub(1) {
+            work.acts.push(Matrix::default());
         }
-        a
+        for l in 0..layers.saturating_sub(1) {
+            let (done, rest) = work.acts.split_at_mut(l);
+            let a_prev: &Matrix = if l == 0 { x } else { &done[l - 1] };
+            let buf = &mut rest[0];
+            gemm_nn_into(&ws[l], a_prev, buf);
+            for v in buf.as_mut_slice() {
+                *v = self.act.apply(*v);
+            }
+        }
+        {
+            let a_prev: &Matrix = if layers == 1 { x } else { &work.acts[layers - 2] };
+            gemm_nn_into(&ws[layers - 1], a_prev, &mut work.z);
+        }
+        &work.z
     }
 
     /// Summed hinge loss over all samples (paper §6 form).
@@ -298,6 +333,40 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn forward_into_matches_forward_across_reuse() {
+        let (mlp, ws, x, _) = toy();
+        let want = mlp.forward(&ws, &x);
+        let mut work = MlpWorkspace::default();
+        // Re-run through one workspace, including after a wider warm-up and
+        // a shape change, to prove buffer reuse never perturbs results.
+        for pass in 0..3 {
+            let z = mlp.forward_into(&ws, &x, &mut work);
+            assert_eq!(z.as_slice(), want.as_slice(), "pass {pass}");
+            assert_eq!(work.output().as_slice(), want.as_slice(), "pass {pass}");
+        }
+    }
+
+    #[test]
+    fn forward_batched_columns_match_singletons_bitwise() {
+        // The serve batcher's correctness contract: packing a request into
+        // a wider micro-batch must not change its scores by a single bit.
+        let (mlp, ws, x, _) = toy();
+        let batched = mlp.forward(&ws, &x);
+        let mut work = MlpWorkspace::default();
+        for c in 0..x.cols() {
+            let col = x.col_range(c, c + 1);
+            let single = mlp.forward_into(&ws, &col, &mut work);
+            for r in 0..batched.rows() {
+                assert_eq!(
+                    single.at(r, 0).to_bits(),
+                    batched.at(r, c).to_bits(),
+                    "column {c}, row {r}"
+                );
+            }
+        }
     }
 
     #[test]

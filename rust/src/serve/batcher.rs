@@ -1,0 +1,345 @@
+//! Micro-batching scheduler: packs concurrently queued predict requests
+//! into one column-batched forward pass.
+//!
+//! Two layers:
+//!
+//! * [`BatchEngine`] — the pure compute core.  Owns the weight ensemble
+//!   and a reusable [`MlpWorkspace`]; the gather (`begin`/`set_col`) →
+//!   `forward` → scatter (`col_into`) cycle performs zero heap
+//!   allocations once warmed at the widest batch (pinned by
+//!   `tests/alloc_regression.rs`, same counting-allocator harness as the
+//!   training hot path).
+//! * [`Batcher`] — the admission loop on its own thread.  It blocks on an
+//!   mpsc queue for the first request of a batch, then keeps admitting
+//!   until `max_batch` requests are staged or `max_wait` has elapsed, runs
+//!   the engine once, and scatters per-request replies back through each
+//!   job's channel.  Queue order is preserved, so a connection's pipelined
+//!   requests come back in submission order.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::Activation;
+use crate::linalg::Matrix;
+use crate::nn::{Mlp, MlpWorkspace};
+use crate::Result;
+
+/// Index of the maximum score (ties break low — deterministic).
+pub fn argmax(y: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, v) in y.iter().enumerate().skip(1) {
+        if *v > y[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// The compute core of the serve path: weights + reusable workspace +
+/// the gather/scatter staging buffer.
+pub struct BatchEngine {
+    mlp: Mlp,
+    ws: Vec<Matrix>,
+    work: MlpWorkspace,
+    /// Column-batched input under assembly (features × batch).
+    x: Matrix,
+}
+
+impl BatchEngine {
+    /// Build from a checkpoint-shaped weight ensemble (dims are derived
+    /// from the weight shapes, as `gradfree predict` does).
+    pub fn new(ws: Vec<Matrix>, act: Activation) -> Result<Self> {
+        anyhow::ensure!(!ws.is_empty(), "empty weight ensemble");
+        let mut dims = vec![ws[0].cols()];
+        for w in &ws {
+            dims.push(w.rows());
+        }
+        let mlp = Mlp::new(dims, act)?;
+        mlp.check_weights(&ws)?;
+        Ok(BatchEngine { mlp, ws, work: MlpWorkspace::default(), x: Matrix::default() })
+    }
+
+    /// Model input dimension (request `x` length).
+    pub fn features(&self) -> usize {
+        self.mlp.dims[0]
+    }
+
+    /// Model output dimension (response `y` length).
+    pub fn out_dim(&self) -> usize {
+        *self.mlp.dims.last().unwrap()
+    }
+
+    /// Start assembling a `batch`-wide input (contents unspecified until
+    /// every column is set).
+    pub fn begin(&mut self, batch: usize) {
+        self.x.resize(self.features(), batch);
+    }
+
+    /// Gather one request's features into column `j`.
+    pub fn set_col(&mut self, j: usize, xs: &[f32]) {
+        assert_eq!(xs.len(), self.features(), "feature-length mismatch");
+        for (r, v) in xs.iter().enumerate() {
+            *self.x.at_mut(r, j) = *v;
+        }
+    }
+
+    /// One forward pass over the assembled batch.
+    pub fn forward(&mut self) {
+        self.mlp.forward_into(&self.ws, &self.x, &mut self.work);
+    }
+
+    /// Scatter column `j` of the scores into a caller-owned buffer
+    /// (clear + extend: allocation-free once the buffer's capacity is
+    /// warmed to `out_dim`).
+    pub fn col_into(&self, j: usize, out: &mut Vec<f32>) {
+        let y = self.work.output();
+        out.clear();
+        out.extend((0..y.rows()).map(|r| y.at(r, j)));
+    }
+
+    /// Convenience single-request path (`gradfree predict`-style use).
+    pub fn predict_into(&mut self, xs: &[f32], out: &mut Vec<f32>) {
+        self.begin(1);
+        self.set_col(0, xs);
+        self.forward();
+        self.col_into(0, out);
+    }
+}
+
+/// One queued predict request: features in, one reply out through the
+/// submitter's channel (connections reuse a single reply channel for all
+/// their requests — replies arrive in submission order).
+pub struct BatchJob {
+    pub id: u64,
+    pub x: Vec<f32>,
+    pub reply: Sender<BatchReply>,
+}
+
+/// The batcher's answer to one job.
+pub enum BatchReply {
+    Ok { id: u64, y: Vec<f32>, argmax: usize },
+    Err { id: u64, msg: String },
+}
+
+/// Handle to the batcher thread.  Dropping it (after all submitters are
+/// gone) drains the queue and joins the thread.
+pub struct Batcher {
+    tx: Option<Sender<BatchJob>>,
+    thread: Option<JoinHandle<()>>,
+    features: usize,
+    out_dim: usize,
+}
+
+impl Batcher {
+    /// Spawn the batcher thread around an engine.
+    pub fn start(engine: BatchEngine, max_batch: usize, max_wait: Duration) -> Batcher {
+        assert!(max_batch >= 1, "max_batch must be >= 1");
+        let (features, out_dim) = (engine.features(), engine.out_dim());
+        let (tx, rx) = std::sync::mpsc::channel();
+        let thread = std::thread::Builder::new()
+            .name("serve-batcher".into())
+            .spawn(move || batch_loop(rx, engine, max_batch, max_wait))
+            .expect("spawn batcher thread");
+        Batcher { tx: Some(tx), thread: Some(thread), features, out_dim }
+    }
+
+    /// A submission handle for one connection/worker.
+    pub fn submitter(&self) -> Sender<BatchJob> {
+        self.tx.as_ref().expect("batcher running").clone()
+    }
+
+    pub fn features(&self) -> usize {
+        self.features
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        // Close our submission side; the loop exits once every outstanding
+        // submitter clone is gone and the queue is drained.
+        self.tx.take();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// The admission loop: stage up to `max_batch` jobs within `max_wait` of
+/// the first, run one forward pass, scatter replies in arrival order.
+fn batch_loop(
+    rx: Receiver<BatchJob>,
+    mut engine: BatchEngine,
+    max_batch: usize,
+    max_wait: Duration,
+) {
+    let features = engine.features();
+    let mut staged: Vec<BatchJob> = Vec::with_capacity(max_batch);
+    let mut ybuf: Vec<f32> = Vec::with_capacity(engine.out_dim());
+    loop {
+        match rx.recv() {
+            Ok(job) => staged.push(job),
+            Err(_) => return, // all submitters gone, queue drained
+        }
+        let deadline = Instant::now() + max_wait;
+        while staged.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(job) => staged.push(job),
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // Gather the well-formed jobs into columns.
+        let mut cols = 0;
+        for job in &staged {
+            if job.x.len() == features {
+                cols += 1;
+            }
+        }
+        engine.begin(cols);
+        let mut j = 0;
+        for job in &staged {
+            if job.x.len() == features {
+                engine.set_col(j, &job.x);
+                j += 1;
+            }
+        }
+        if cols > 0 {
+            engine.forward();
+        }
+
+        // Scatter replies in arrival order (send failures mean the
+        // connection went away — drop the reply on the floor).
+        let mut j = 0;
+        for job in staged.drain(..) {
+            if job.x.len() == features {
+                engine.col_into(j, &mut ybuf);
+                let am = argmax(&ybuf);
+                let _ = job
+                    .reply
+                    .send(BatchReply::Ok { id: job.id, y: ybuf.clone(), argmax: am });
+                j += 1;
+            } else {
+                let msg = format!(
+                    "feature-length mismatch: got {}, model wants {features}",
+                    job.x.len()
+                );
+                let _ = job.reply.send(BatchReply::Err { id: job.id, msg });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn engine() -> (BatchEngine, Mlp, Vec<Matrix>, Matrix) {
+        let mlp = Mlp::new(vec![5, 4, 2], Activation::Relu).unwrap();
+        let mut rng = Rng::seed_from(11);
+        let ws = mlp.init_weights(&mut rng);
+        let x = Matrix::randn(5, 12, &mut rng);
+        (BatchEngine::new(ws.clone(), Activation::Relu).unwrap(), mlp, ws, x)
+    }
+
+    fn col(x: &Matrix, c: usize) -> Vec<f32> {
+        (0..x.rows()).map(|r| x.at(r, c)).collect()
+    }
+
+    #[test]
+    fn argmax_ties_break_low() {
+        assert_eq!(argmax(&[1.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[2.0, 2.0]), 0);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn engine_matches_direct_forward_bitwise() {
+        let (mut eng, mlp, ws, x) = engine();
+        assert_eq!((eng.features(), eng.out_dim()), (5, 2));
+        let want = mlp.forward(&ws, &x);
+        // Batched through the engine
+        eng.begin(x.cols());
+        for c in 0..x.cols() {
+            eng.set_col(c, &col(&x, c));
+        }
+        eng.forward();
+        let mut y = Vec::new();
+        for c in 0..x.cols() {
+            eng.col_into(c, &mut y);
+            for r in 0..want.rows() {
+                assert_eq!(y[r].to_bits(), want.at(r, c).to_bits(), "col {c}");
+            }
+        }
+        // Singleton path after a batch (buffer narrowing) still matches
+        eng.predict_into(&col(&x, 3), &mut y);
+        for r in 0..want.rows() {
+            assert_eq!(y[r].to_bits(), want.at(r, 3).to_bits());
+        }
+    }
+
+    #[test]
+    fn engine_rejects_bad_weights() {
+        assert!(BatchEngine::new(vec![], Activation::Relu).is_err());
+    }
+
+    #[test]
+    fn batcher_packs_and_scatters_concurrent_jobs() {
+        let (eng, mlp, ws, x) = engine();
+        let want = mlp.forward(&ws, &x);
+        // Generous wait so the burst below lands in few forward passes.
+        let batcher = Batcher::start(eng, 8, Duration::from_millis(20));
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        let tx = batcher.submitter();
+        for c in 0..x.cols() {
+            tx.send(BatchJob { id: c as u64, x: col(&x, c), reply: rtx.clone() }).unwrap();
+        }
+        // Mis-shaped job replies with an error, in order.
+        tx.send(BatchJob { id: 99, x: vec![1.0; 3], reply: rtx.clone() }).unwrap();
+        for c in 0..x.cols() {
+            match rrx.recv().unwrap() {
+                BatchReply::Ok { id, y, argmax: am } => {
+                    assert_eq!(id, c as u64);
+                    let want_col: Vec<f32> = (0..want.rows()).map(|r| want.at(r, c)).collect();
+                    assert_eq!(y, want_col);
+                    assert_eq!(am, argmax(&want_col));
+                }
+                BatchReply::Err { .. } => panic!("unexpected error for job {c}"),
+            }
+        }
+        match rrx.recv().unwrap() {
+            BatchReply::Err { id, msg } => {
+                assert_eq!(id, 99);
+                assert!(msg.contains("mismatch"), "{msg}");
+            }
+            BatchReply::Ok { .. } => panic!("mis-shaped job must error"),
+        }
+        drop(tx);
+        drop(batcher); // joins cleanly with the queue drained
+    }
+
+    #[test]
+    fn batcher_zero_wait_serves_singletons() {
+        let (eng, mlp, ws, x) = engine();
+        let want = mlp.forward(&ws, &x);
+        let batcher = Batcher::start(eng, 1, Duration::ZERO);
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        let tx = batcher.submitter();
+        tx.send(BatchJob { id: 0, x: col(&x, 0), reply: rtx }).unwrap();
+        match rrx.recv().unwrap() {
+            BatchReply::Ok { y, .. } => {
+                assert_eq!(y[0].to_bits(), want.at(0, 0).to_bits());
+            }
+            BatchReply::Err { msg, .. } => panic!("{msg}"),
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Client side of the serve protocol: a blocking line-protocol client and
+//! the closed-loop/paced load generator behind `cargo bench --bench serve`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use super::protocol::{self, Response};
+use crate::Result;
+
+/// A blocking client over one TCP connection.  `predict` is synchronous;
+/// `predict_batch` pipelines a burst of requests in one write so the
+/// server can pack them into a single micro-batch.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+}
+
+impl Client {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::with_capacity(64 * 1024, stream), writer, next_id: 0 })
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    fn read_response(&mut self) -> Result<Response> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        anyhow::ensure!(n > 0, "server closed the connection");
+        protocol::parse_response(line.trim_end())
+    }
+
+    /// One synchronous predict round-trip.
+    pub fn predict(&mut self, x: &[f32]) -> Result<Response> {
+        let id = self.fresh_id();
+        let mut buf = protocol::request_line(id, x);
+        buf.push('\n');
+        self.writer.write_all(buf.as_bytes())?;
+        self.writer.flush()?;
+        let resp = self.read_response()?;
+        anyhow::ensure!(resp.id == id, "response id {} for request {id}", resp.id);
+        Ok(resp)
+    }
+
+    /// Pipeline a burst: write every request back-to-back, then read the
+    /// responses (the protocol answers in order).
+    pub fn predict_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Response>> {
+        let mut buf = String::new();
+        let first_id = self.next_id;
+        for x in xs {
+            buf.push_str(&protocol::request_line(self.fresh_id(), x));
+            buf.push('\n');
+        }
+        self.writer.write_all(buf.as_bytes())?;
+        self.writer.flush()?;
+        let mut out = Vec::with_capacity(xs.len());
+        for i in 0..xs.len() {
+            let resp = self.read_response()?;
+            let want = first_id + i as u64;
+            anyhow::ensure!(resp.id == want, "response id {} for request {want}", resp.id);
+            out.push(resp);
+        }
+        Ok(out)
+    }
+}
+
+/// Load-generator knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadOpts {
+    /// Concurrent connections (one thread each).
+    pub conns: usize,
+    /// Synchronous requests issued per connection.
+    pub requests_per_conn: usize,
+    /// Aggregate pacing target across all connections; 0 = closed loop
+    /// (each connection fires its next request as soon as the previous
+    /// response lands).
+    pub target_qps: f64,
+}
+
+/// What a load run measured.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// Per-request round-trip latencies (seconds), all connections pooled.
+    pub latencies_s: Vec<f64>,
+    /// Wall-clock of the whole run (connect to last response).
+    pub wall_s: f64,
+    pub ok: usize,
+    pub errors: usize,
+}
+
+impl LoadReport {
+    pub fn throughput_rps(&self) -> f64 {
+        self.ok as f64 / self.wall_s
+    }
+}
+
+/// Drive a server with `opts.conns` concurrent connections cycling over
+/// `inputs`, at `target_qps` (or flat out).  Returns pooled latencies for
+/// `metrics::latency_summary`.
+pub fn run_load<A: ToSocketAddrs + Clone + Send + Sync>(
+    addr: A,
+    inputs: &[Vec<f32>],
+    opts: LoadOpts,
+) -> Result<LoadReport> {
+    anyhow::ensure!(opts.conns >= 1, "need at least one connection");
+    anyhow::ensure!(!inputs.is_empty(), "need at least one input vector");
+    let t0 = Instant::now();
+    let interval = if opts.target_qps > 0.0 {
+        Some(Duration::from_secs_f64(opts.conns as f64 / opts.target_qps))
+    } else {
+        None
+    };
+    let addr_ref = &addr;
+    let per_conn: Vec<Result<(Vec<f64>, usize)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..opts.conns)
+            .map(|c| {
+                s.spawn(move || -> Result<(Vec<f64>, usize)> {
+                    let mut client = Client::connect(addr_ref.clone())?;
+                    let mut lat = Vec::with_capacity(opts.requests_per_conn);
+                    let mut errors = 0usize;
+                    let start = Instant::now();
+                    for i in 0..opts.requests_per_conn {
+                        if let Some(iv) = interval {
+                            let due = start + iv.mul_f64(i as f64);
+                            let now = Instant::now();
+                            if due > now {
+                                std::thread::sleep(due - now);
+                            }
+                        }
+                        let x = &inputs[(c + i * opts.conns) % inputs.len()];
+                        let t = Instant::now();
+                        match client.predict(x) {
+                            Ok(_) => lat.push(t.elapsed().as_secs_f64()),
+                            Err(_) => errors += 1,
+                        }
+                    }
+                    Ok((lat, errors))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("load thread panicked"))
+            .collect()
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut latencies_s = Vec::with_capacity(opts.conns * opts.requests_per_conn);
+    let mut errors = 0;
+    for r in per_conn {
+        let (lat, errs) = r?;
+        latencies_s.extend(lat);
+        errors += errs;
+    }
+    let ok = latencies_s.len();
+    Ok(LoadReport { latencies_s, wall_s, ok, errors })
+}

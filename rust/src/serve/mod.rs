@@ -1,0 +1,78 @@
+//! Inference serving: a micro-batched prediction server over a
+//! dependency-free JSON line protocol on TCP.
+//!
+//! The paper's observation (§5) that ADMM compute is embarrassingly
+//! parallel in *sample columns* applies unchanged to inference: requests
+//! that arrive concurrently can be packed side-by-side into one
+//! column-batched `Matrix` and pushed through a single forward pass, which
+//! turns f×1 memory-bound GEMV work into f×B GEMM work that amortizes every
+//! weight load B ways.  This module is the path from a trained checkpoint
+//! (`nn::io`, `gradfree train --save`) to answering network requests
+//! (`gradfree serve`).
+//!
+//! # Architecture
+//!
+//! ```text
+//!  TCP clients ──► acceptor/handler pool ──► mpsc queue ──► batcher thread
+//!   (client.rs)      (server.rs, N threads)                  (batcher.rs)
+//!                                                          packs ≤ max_batch
+//!                                                          columns, waits
+//!                                                          ≤ max_wait_us,
+//!                                                          one forward pass,
+//!                                                          scatters replies
+//! ```
+//!
+//! * [`BatchEngine`] (batcher.rs) owns the weights and a reusable
+//!   [`crate::nn::MlpWorkspace`]; after the first maximal batch warms the
+//!   buffers, the gather → forward → scatter cycle performs **zero heap
+//!   allocations** (pinned by `tests/alloc_regression.rs`).  Because every
+//!   GEMM kernel accumulates each output element in a batch-width-
+//!   independent order (`linalg::gemm`), a request's scores are
+//!   bit-identical whether it rides a full micro-batch or a singleton.
+//! * The batcher (one thread) drains the queue: it dispatches as soon as
+//!   `max_batch` requests are staged or `max_wait_us` has elapsed since the
+//!   first staged request — latency is bounded by one wait window plus one
+//!   forward pass.
+//! * The server (server.rs) runs a fixed pool of `threads` handler threads,
+//!   each accepting and serving one connection at a time; a pipelined burst
+//!   of lines on one connection is drained into the same micro-batch.
+//!   Shutdown is graceful: stop flag + self-connect wake-ups, then the
+//!   batcher drains and joins.
+//!
+//! # Wire protocol (JSON lines over TCP)
+//!
+//! One JSON object per `\n`-terminated line, answered in order:
+//!
+//! ```text
+//! → {"id": 7, "x": [0.1, -2.5, …]}           x.len() == model input dim
+//! ← {"argmax": 0, "id": 7, "y": [1.25]}      y = raw output scores z_L
+//! ← {"error": "…", "id": 7}                  malformed request / bad shape
+//! ```
+//!
+//! `id` is an opaque non-negative integer echoed back so pipelining clients
+//! can match responses; `argmax` is the row index of the max score (the
+//! predicted class for one-hot heads; for the paper's 1-output binary nets
+//! compare `y[0]` against the 0.5 threshold instead).  Checkpoints use the
+//! self-describing `GFADMM01` binary format documented in `nn/io.rs` and
+//! EXPERIMENTS.md §Serving.
+//!
+//! # Quickstart
+//!
+//! ```text
+//! gradfree train --preset quickstart --save model.gfadmm
+//! gradfree serve --model model.gfadmm --port 7878 &
+//! printf '{"id":1,"x":[0.1,…]}\n' | nc 127.0.0.1 7878
+//! cargo bench --bench serve          # latency/throughput, BENCH_SERVE.json
+//! ```
+
+pub mod batcher;
+pub mod client;
+pub mod protocol;
+pub mod server;
+
+pub use batcher::{argmax, BatchEngine, BatchJob, BatchReply, Batcher};
+pub use client::{run_load, Client, LoadOpts, LoadReport};
+pub use protocol::{
+    error_line, parse_request, parse_response, request_line, response_line, Request, Response,
+};
+pub use server::Server;

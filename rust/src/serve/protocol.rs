@@ -1,0 +1,182 @@
+//! The serve wire protocol: one JSON object per line (see `serve` module
+//! docs for the grammar).  Built on `config::json` — requests and
+//! responses are parsed and emitted through the same `Json` tree the rest
+//! of the repo uses, so the protocol inherits its escape handling and the
+//! non-finite → `null` serialization rule.
+//!
+//! f32 fidelity: scores travel as JSON numbers printed from `f64`.  An
+//! `f32` widened to `f64` is exact, Rust's shortest-round-trip formatting
+//! re-parses to the same `f64`, and narrowing back recovers the original
+//! `f32` — so `parse_response(response_line(..))` returns bit-identical
+//! scores (asserted by `roundtrip_preserves_f32_bits` below).  The one
+//! exception: JSON has no NaN/Infinity literals, so non-finite scores
+//! (possible with a non-finite checkpoint or an f32 overflow in the
+//! forward pass) serialize as `null`, which `parse_response` reads back
+//! as NaN rather than rejecting the response.
+
+use std::collections::BTreeMap;
+
+use crate::config::Json;
+use crate::Result;
+
+/// A parsed predict request: `{"id": N, "x": [..]}`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub x: Vec<f32>,
+}
+
+/// A parsed predict response: `{"argmax": K, "id": N, "y": [..]}`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    pub y: Vec<f32>,
+    pub argmax: usize,
+}
+
+fn id_of(v: &Json) -> Result<u64> {
+    let n = v.field("id")?.as_f64()?;
+    anyhow::ensure!(
+        n >= 0.0 && n.fract() == 0.0 && n <= 2f64.powi(53),
+        "id must be a non-negative integer, got {n}"
+    );
+    Ok(n as u64)
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let v = Json::parse(line)?;
+    let id = id_of(&v)?;
+    let xs = v.field("x")?.as_arr()?;
+    anyhow::ensure!(!xs.is_empty(), "empty feature vector");
+    let x = xs
+        .iter()
+        .map(|e| e.as_f64().map(|f| f as f32))
+        .collect::<Result<Vec<f32>>>()?;
+    Ok(Request { id, x })
+}
+
+/// Serialize one request line (client side; no trailing newline).
+pub fn request_line(id: u64, x: &[f32]) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("id".to_string(), Json::Num(id as f64));
+    m.insert(
+        "x".to_string(),
+        Json::Arr(x.iter().map(|&v| Json::Num(v as f64)).collect()),
+    );
+    Json::Obj(m).to_string_compact()
+}
+
+/// Serialize one success response line (no trailing newline).
+pub fn response_line(id: u64, y: &[f32], argmax: usize) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("argmax".to_string(), Json::Num(argmax as f64));
+    m.insert("id".to_string(), Json::Num(id as f64));
+    m.insert(
+        "y".to_string(),
+        Json::Arr(y.iter().map(|&v| Json::Num(v as f64)).collect()),
+    );
+    Json::Obj(m).to_string_compact()
+}
+
+/// Serialize one error response line (no trailing newline).  `id` is
+/// echoed when the request parsed far enough to recover one.
+pub fn error_line(id: Option<u64>, msg: &str) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("error".to_string(), Json::Str(msg.to_string()));
+    if let Some(id) = id {
+        m.insert("id".to_string(), Json::Num(id as f64));
+    }
+    Json::Obj(m).to_string_compact()
+}
+
+/// Parse one response line; a protocol-level `{"error": ..}` response
+/// becomes an `Err` carrying the server's message.
+pub fn parse_response(line: &str) -> Result<Response> {
+    let v = Json::parse(line)?;
+    if let Some(e) = v.get("error") {
+        anyhow::bail!("server error: {}", e.as_str().unwrap_or("?"));
+    }
+    let id = id_of(&v)?;
+    let y = v
+        .field("y")?
+        .as_arr()?
+        .iter()
+        .map(|e| match e {
+            // Non-finite scores serialize as null (module docs).
+            Json::Null => Ok(f32::NAN),
+            _ => e.as_f64().map(|f| f as f32),
+        })
+        .collect::<Result<Vec<f32>>>()?;
+    let argmax = v.field("argmax")?.as_usize()?;
+    anyhow::ensure!(argmax < y.len(), "argmax {argmax} out of range for {} scores", y.len());
+    Ok(Response { id, y, argmax })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let line = request_line(42, &[0.5, -1.25, 3.0]);
+        assert_eq!(line, r#"{"id":42,"x":[0.5,-1.25,3]}"#);
+        let req = parse_request(&line).unwrap();
+        assert_eq!(req, Request { id: 42, x: vec![0.5, -1.25, 3.0] });
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let line = response_line(7, &[0.125, 2.5], 1);
+        assert_eq!(line, r#"{"argmax":1,"id":7,"y":[0.125,2.5]}"#);
+        let r = parse_response(&line).unwrap();
+        assert_eq!(r, Response { id: 7, y: vec![0.125, 2.5], argmax: 1 });
+    }
+
+    #[test]
+    fn roundtrip_preserves_f32_bits() {
+        // Awkward values: non-dyadic decimals, tiny/huge magnitudes,
+        // negative zero — every one must survive the JSON hop bit-for-bit.
+        let xs: Vec<f32> = vec![0.1, -2.5e-7, 3.4e38, 1.0 / 3.0, -0.0, 6.02214e23];
+        let back = parse_request(&request_line(0, &xs)).unwrap().x;
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} -> {b}");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"x": [1]}"#).is_err()); // missing id
+        assert!(parse_request(r#"{"id": 1}"#).is_err()); // missing x
+        assert!(parse_request(r#"{"id": 1, "x": []}"#).is_err()); // empty x
+        assert!(parse_request(r#"{"id": -1, "x": [1]}"#).is_err()); // bad id
+        assert!(parse_request(r#"{"id": 1.5, "x": [1]}"#).is_err()); // bad id
+        assert!(parse_request(r#"{"id": 1, "x": ["a"]}"#).is_err()); // bad feature
+    }
+
+    #[test]
+    fn error_lines() {
+        assert_eq!(error_line(Some(3), "boom"), r#"{"error":"boom","id":3}"#);
+        assert_eq!(error_line(None, "bad"), r#"{"error":"bad"}"#);
+        let err = parse_response(r#"{"error":"boom","id":3}"#).unwrap_err();
+        assert!(err.to_string().contains("boom"));
+    }
+
+    #[test]
+    fn response_argmax_validated() {
+        assert!(parse_response(r#"{"argmax":2,"id":1,"y":[1,2]}"#).is_err());
+    }
+
+    #[test]
+    fn non_finite_scores_survive_as_nan() {
+        // A model with non-finite scores must still produce a response the
+        // bundled client can read (nulls come back as NaN).
+        let line = response_line(1, &[f32::INFINITY, 0.5, f32::NAN], 1);
+        assert_eq!(line, r#"{"argmax":1,"id":1,"y":[null,0.5,null]}"#);
+        let r = parse_response(&line).unwrap();
+        assert!(r.y[0].is_nan() && r.y[2].is_nan());
+        assert_eq!(r.y[1], 0.5);
+        assert_eq!(r.argmax, 1);
+    }
+}

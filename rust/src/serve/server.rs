@@ -1,0 +1,267 @@
+//! The TCP front of the serve subsystem: a fixed pool of handler threads
+//! accepting connections on a shared listener, speaking the line protocol
+//! (`protocol.rs`) and feeding the micro-batcher (`batcher.rs`).
+//!
+//! Design notes:
+//!
+//! * **Fixed thread pool, connection-per-thread.**  Each of the
+//!   `ServeConfig::threads` handler threads accepts one connection at a
+//!   time on a `try_clone` of the listener and serves it to completion —
+//!   the pool size bounds concurrent connections, and there is no
+//!   per-connection spawn on the accept path.
+//! * **Pipelining.**  After the blocking read of a request line, any
+//!   further complete lines already buffered on the connection are drained
+//!   and submitted in the same burst, so a client that writes N requests
+//!   back-to-back gets them packed into the same micro-batch.  Responses
+//!   are always written in request order.
+//! * **Graceful shutdown.**  `Server::shutdown` (also on Drop) raises a
+//!   stop flag, self-connects once per acceptor to unblock `accept`, joins
+//!   the pool, and finally drops the batcher, which drains its queue and
+//!   joins its thread.  Handlers read with a short timeout so an idle open
+//!   connection observes the flag within ~100 ms instead of pinning its
+//!   thread until the client closes.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::batcher::{BatchEngine, BatchJob, BatchReply, Batcher};
+use super::protocol;
+use crate::config::{Activation, ServeConfig};
+use crate::linalg::Matrix;
+use crate::Result;
+
+/// A running inference server; shuts down gracefully on `shutdown` / Drop.
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptors: Vec<JoinHandle<()>>,
+    batcher: Option<Batcher>,
+}
+
+impl Server {
+    /// Bind and start serving a weight ensemble (e.g. from
+    /// `nn::load_model`).  Returns once the listener is live; with
+    /// `cfg.port == 0` the bound ephemeral port is in `addr()`.
+    pub fn start(cfg: &ServeConfig, ws: Vec<Matrix>, act: Activation) -> Result<Server> {
+        cfg.validate()?;
+        let engine = BatchEngine::new(ws, act)?;
+        let batcher =
+            Batcher::start(engine, cfg.max_batch, Duration::from_micros(cfg.max_wait_us));
+        let listener = TcpListener::bind(cfg.addr())
+            .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr()))?;
+        let addr = listener.local_addr()?;
+        // Build the handle before spawning so an error partway through the
+        // pool (try_clone/spawn failing under fd or thread exhaustion)
+        // drops a Server whose cleanup stops and joins the acceptors
+        // already running — otherwise their submitter clones would keep
+        // the batcher alive and `?` would deadlock in Batcher::drop.
+        let mut server = Server {
+            addr,
+            stop: Arc::new(AtomicBool::new(false)),
+            acceptors: Vec::with_capacity(cfg.threads),
+            batcher: Some(batcher),
+        };
+        for i in 0..cfg.threads {
+            let l = listener.try_clone()?;
+            let stop = server.stop.clone();
+            let tx = server.batcher.as_ref().expect("batcher running").submitter();
+            server.acceptors.push(
+                std::thread::Builder::new()
+                    .name(format!("serve-conn-{i}"))
+                    .spawn(move || accept_loop(l, stop, tx))
+                    .map_err(|e| anyhow::anyhow!("spawning handler thread: {e}"))?,
+            );
+        }
+        // The acceptors own listener clones; dropping the original here
+        // keeps the socket open exactly as long as the pool runs.
+        drop(listener);
+        Ok(server)
+    }
+
+    /// The bound address (the real port when the config asked for 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn port(&self) -> u16 {
+        self.addr.port()
+    }
+
+    /// Graceful shutdown: stop accepting, finish in-flight connections,
+    /// drain the batcher.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    /// Block until the pool exits (a stop flag raised by another handle —
+    /// or forever, for the `gradfree serve` foreground process).
+    pub fn wait(mut self) {
+        for t in self.acceptors.drain(..) {
+            let _ = t.join();
+        }
+        self.batcher.take();
+    }
+
+    fn stop_and_join(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return; // already stopped
+        }
+        // One wake-up connect per (possibly accept-blocked) handler.
+        for _ in &self.acceptors {
+            let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(200));
+        }
+        for t in self.acceptors.drain(..) {
+            let _ = t.join();
+        }
+        // Last submitter handles died with the acceptors; this drains the
+        // queue and joins the batcher thread.
+        self.batcher.take();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn accept_loop(listener: TcpListener, stop: Arc<AtomicBool>, tx: Sender<BatchJob>) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if stop.load(Ordering::SeqCst) {
+                    return; // wake-up connect (or a straggler) — exit
+                }
+                let _ = handle_conn(stream, &tx, &stop);
+            }
+            Err(_) => {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                // Transient accept error (EMFILE, ECONNABORTED, …): back
+                // off instead of spinning.
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+    }
+}
+
+/// What a drained request line turned into, in arrival order: a job the
+/// batcher will answer, or an immediate parse-error response.
+enum Pending {
+    Submitted,
+    Error(String),
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    tx: &Sender<BatchJob>,
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    let _ = stream.set_nodelay(true);
+    // A read timeout keeps an idle connection from pinning its handler
+    // past shutdown: the blocking read below re-checks the stop flag every
+    // period instead of blocking until the client closes.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let mut writer = stream.try_clone()?;
+    // Sized for a pipelined burst of wide requests (a 648-feature line is
+    // ~8 KiB — the BufReader default — which would leave `buffer()` empty
+    // and defeat same-connection micro-batching).
+    let mut reader = BufReader::with_capacity(256 * 1024, stream);
+    // One reply channel per connection: the batcher preserves submission
+    // order, so responses pair with requests positionally.
+    let (rtx, rrx) = std::sync::mpsc::channel::<BatchReply>();
+    let mut line = String::new();
+    let mut pending: Vec<Pending> = Vec::new();
+    loop {
+        line.clear();
+        // Blocking read of the next request line, stop-aware: on timeout,
+        // bytes already read stay appended to `line` (the protocol is
+        // ASCII, so no multi-byte scalar can straddle a retry) and the
+        // next read_line call picks up where it left off.
+        loop {
+            match reader.read_line(&mut line) {
+                Ok(0) => return Ok(()), // client closed
+                Ok(_) => break,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    if stop.load(Ordering::SeqCst) {
+                        return Ok(());
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        pending.clear();
+        submit_line(&line, tx, &rtx, &mut pending);
+        // Drain any complete lines the client pipelined behind this one so
+        // the whole burst can share a micro-batch.
+        while reader.buffer().contains(&b'\n') {
+            line.clear();
+            if reader.read_line(&mut line)? == 0 {
+                break;
+            }
+            submit_line(&line, tx, &rtx, &mut pending);
+        }
+        // Write responses in request order.
+        for p in &pending {
+            match p {
+                Pending::Error(msg) => {
+                    writer.write_all(msg.as_bytes())?;
+                    writer.write_all(b"\n")?;
+                }
+                Pending::Submitted => match rrx.recv() {
+                    Ok(BatchReply::Ok { id, y, argmax }) => {
+                        writer.write_all(protocol::response_line(id, &y, argmax).as_bytes())?;
+                        writer.write_all(b"\n")?;
+                    }
+                    Ok(BatchReply::Err { id, msg }) => {
+                        writer.write_all(protocol::error_line(Some(id), &msg).as_bytes())?;
+                        writer.write_all(b"\n")?;
+                    }
+                    // Batcher gone mid-request: the server is shutting
+                    // down; close the connection.
+                    Err(_) => return Ok(()),
+                },
+            }
+        }
+        writer.flush()?;
+    }
+}
+
+/// Parse and enqueue one request line, recording what the response slot
+/// will be.  Blank lines are ignored (keep-alive friendly).
+fn submit_line(
+    line: &str,
+    tx: &Sender<BatchJob>,
+    rtx: &Sender<BatchReply>,
+    pending: &mut Vec<Pending>,
+) {
+    let trimmed = line.trim();
+    if trimmed.is_empty() {
+        return;
+    }
+    match protocol::parse_request(trimmed) {
+        Ok(req) => {
+            let job = BatchJob { id: req.id, x: req.x, reply: rtx.clone() };
+            match tx.send(job) {
+                Ok(()) => pending.push(Pending::Submitted),
+                Err(_) => pending.push(Pending::Error(protocol::error_line(
+                    Some(req.id),
+                    "server shutting down",
+                ))),
+            }
+        }
+        Err(e) => pending.push(Pending::Error(protocol::error_line(None, &format!("{e:#}")))),
+    }
+}

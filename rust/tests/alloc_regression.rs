@@ -2,7 +2,9 @@
 //! worth of worker update phases — Gram pair (with the layer-1 input-Gram
 //! cache), a-updates, z-updates, the output solve and the λ step — must
 //! perform **zero heap allocations** once the `Workspace`/state buffers
-//! have warmed up, and so must the baselines' `loss_grad_into` substrate.
+//! have warmed up, and so must the baselines' `loss_grad_into` substrate
+//! and the serve batcher's gather → forward → scatter cycle
+//! (`serve::BatchEngine`), at any batch width up to the warmed maximum.
 //!
 //! The shim is a counting `#[global_allocator]` wrapping `System`; the
 //! whole check lives in a single `#[test]` so no sibling test can allocate
@@ -197,5 +199,47 @@ fn steady_state_hot_loops_allocate_nothing() {
     assert_eq!(
         grad_allocs, 0,
         "steady-state loss_grad_into must not allocate ({grad_allocs} allocations)"
+    );
+
+    // ---- serve path: micro-batched inference engine ------------------
+    // Reply channels and response JSON are connection machinery (like the
+    // ADMM test's mpsc/Arc exclusions); the pinned claim is the batcher's
+    // gather → forward → scatter compute cycle.
+    let max_batch = 16usize;
+    let mut engine =
+        gradfree_admm::serve::BatchEngine::new(ws.clone(), Activation::Relu).unwrap();
+    // Pre-extract request feature vectors (the batcher receives them as
+    // owned Vecs from the protocol layer).
+    let reqs: Vec<Vec<f32>> = (0..max_batch)
+        .map(|c| (0..x.rows()).map(|r| x.at(r, c)).collect())
+        .collect();
+    let mut ybuf: Vec<f32> = Vec::with_capacity(engine.out_dim());
+    let mut run_batch = |engine: &mut gradfree_admm::serve::BatchEngine,
+                         ybuf: &mut Vec<f32>,
+                         b: usize| {
+        engine.begin(b);
+        for (j, r) in reqs.iter().take(b).enumerate() {
+            engine.set_col(j, r);
+        }
+        engine.forward();
+        let mut check = 0.0f32;
+        for j in 0..b {
+            engine.col_into(j, ybuf);
+            check += ybuf[0];
+        }
+        check
+    };
+    // Warm at the widest batch; steady state must hold for narrower and
+    // re-widened batches alike.
+    let warm_check = run_batch(&mut engine, &mut ybuf, max_batch);
+    let ((), serve_allocs) = armed(|| {
+        for &b in &[max_batch, 5, 1, max_batch] {
+            let _ = run_batch(&mut engine, &mut ybuf, b);
+        }
+        assert_eq!(run_batch(&mut engine, &mut ybuf, max_batch), warm_check);
+    });
+    assert_eq!(
+        serve_allocs, 0,
+        "steady-state serve batch forward must not allocate ({serve_allocs} allocations)"
     );
 }
