@@ -9,8 +9,14 @@
 //!   D. init scheme (paper §8.1 names initialization as future work)
 //!      — gaussian (paper §6) vs forward-consistent
 //!   E. momentum on weight updates (paper §8.1 future work) — μ ∈ {0, .3, .6}
+//!   F. problem kind (the `Problem` API sweep): hinge / l2 / multihinge on
+//!      their first-class synthetic tasks — iters/sec and final objective
+//!      per loss, confirming the trait-style indirection adds no
+//!      measurable hot-path cost (hinge throughput must match the
+//!      pre-redesign trainer) → bench_out/BENCH_PROBLEMS.json
 //!
-//! Output: bench_out/ablations.csv and a console table.
+//! Output: bench_out/ablations.csv, bench_out/BENCH_PROBLEMS.json and a
+//! console table.
 //!
 //!   cargo bench --bench ablations [-- --samples N]
 
@@ -18,7 +24,8 @@ use gradfree_admm::bench::{banner, write_csv};
 use gradfree_admm::cli::Args;
 use gradfree_admm::config::{InitScheme, MultiplierMode, TrainConfig};
 use gradfree_admm::coordinator::AdmmTrainer;
-use gradfree_admm::data::{svhn_like, Dataset, Normalizer};
+use gradfree_admm::data::{multi_blobs, svhn_like, synth_regression, Dataset, Normalizer};
+use gradfree_admm::problem::Problem;
 
 fn run(
     cfg: TrainConfig,
@@ -117,5 +124,128 @@ fn main() -> gradfree_admm::Result<()> {
 
     let path = write_csv("ablations.csv", "variant,best_acc,final_acc,final_penalty", &rows)?;
     println!("\nwritten: {path}");
+
+    // F. problem-kind sweep → BENCH_PROBLEMS.json
+    problems_sweep(&args)?;
     Ok(())
+}
+
+struct ProblemRow {
+    loss: &'static str,
+    dims: Vec<usize>,
+    iters: usize,
+    opt_seconds: f64,
+    iters_per_sec: f64,
+    final_objective: f64,
+    best_acc: f64,
+}
+
+/// One small ADMM run per `Problem` on its first-class synthetic task,
+/// measuring pure-optimization throughput (the paper's §7 clock) and the
+/// final mean train objective.  The hinge row is the regression baseline:
+/// the `Problem` dispatch replaced inlined hinge calls on the z_out hot
+/// path, and this sweep is how we check the indirection stayed free.
+fn problems_sweep(args: &Args) -> gradfree_admm::Result<()> {
+    let n: usize = args.parsed_or("problem-samples", 4_000)?;
+    let n_test = n / 5;
+    println!("\nF. problem kinds (n={n})\n");
+    println!("{:12} {:>9} {:>12} {:>14} {:>9}", "loss", "iters/s", "opt_s", "final_obj", "best");
+
+    let mut rows: Vec<ProblemRow> = Vec::new();
+    for problem in Problem::ALL {
+        // train/test are independent draws of the same fixed task (the
+        // generators plant the task identity outside the seed)
+        let (dims, mut train, mut test) = match problem {
+            Problem::BinaryHinge => (
+                vec![16, 12, 1],
+                gradfree_admm::data::blobs(16, n, 2.5, 1),
+                gradfree_admm::data::blobs(16, n_test, 2.5, 2),
+            ),
+            Problem::LeastSquares => (
+                vec![16, 12, 1],
+                synth_regression(16, n, 0.1, 1),
+                synth_regression(16, n_test, 0.1, 2),
+            ),
+            Problem::MulticlassHinge => (
+                vec![16, 12, 3],
+                multi_blobs(16, 3, n, 2.5, 1),
+                multi_blobs(16, 3, n_test, 2.5, 2),
+            ),
+        };
+        let norm = Normalizer::fit(&train.x);
+        norm.apply(&mut train.x);
+        norm.apply(&mut test.x);
+        let cfg = TrainConfig {
+            name: format!("ablation-{}", problem.name()),
+            dims: dims.clone(),
+            problem,
+            gamma: 1.0,
+            iters: 30,
+            warmup_iters: 6,
+            workers: 1,
+            eval_every: 30, // eval off the hot path: measure optimization
+            ..TrainConfig::default()
+        };
+        let mut t = AdmmTrainer::new(cfg, &train, &test)?;
+        let out = t.train()?;
+        let final_objective = out
+            .recorder
+            .points
+            .last()
+            .map(|p| p.train_loss)
+            .unwrap_or(f64::NAN);
+        let iters_per_sec = out.stats.iters_run as f64 / out.stats.opt_seconds.max(1e-12);
+        println!(
+            "{:12} {:>9.2} {:>12.4} {:>14.6} {:>9.4}",
+            problem.name(),
+            iters_per_sec,
+            out.stats.opt_seconds,
+            final_objective,
+            out.recorder.best_accuracy()
+        );
+        rows.push(ProblemRow {
+            loss: problem.name(),
+            dims,
+            iters: out.stats.iters_run,
+            opt_seconds: out.stats.opt_seconds,
+            iters_per_sec,
+            final_objective,
+            best_acc: out.recorder.best_accuracy(),
+        });
+    }
+    let path = write_bench_problems_json(n, &rows)?;
+    println!("\nwritten: {path}");
+    Ok(())
+}
+
+fn write_bench_problems_json(n: usize, rows: &[ProblemRow]) -> gradfree_admm::Result<String> {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    out.push_str("{\n");
+    let _ = writeln!(out, "  \"schema\": 1,");
+    let _ = writeln!(out, "  \"samples\": {n},");
+    out.push_str("  \"problems\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let dims: Vec<String> = r.dims.iter().map(|d| d.to_string()).collect();
+        let _ = write!(
+            out,
+            "    {{\"loss\": \"{}\", \"dims\": [{}], \"iters\": {}, \
+             \"opt_seconds\": {:.6e}, \"iters_per_sec\": {:.3}, \
+             \"final_objective\": {:.6e}, \"best_acc\": {:.4}}}",
+            r.loss,
+            dims.join(", "),
+            r.iters,
+            r.opt_seconds,
+            r.iters_per_sec,
+            r.final_objective,
+            r.best_acc
+        );
+        out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    let dir = std::path::Path::new("bench_out");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("BENCH_PROBLEMS.json");
+    std::fs::write(&path, out)?;
+    Ok(path.display().to_string())
 }

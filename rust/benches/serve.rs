@@ -132,8 +132,14 @@ fn main() -> gradfree_admm::Result<()> {
             threads: opts.conns,
             max_batch: mb,
             max_wait_us: wait,
+            problem: None,
         };
-        let server = Server::start(&cfg, ws.clone(), Activation::Relu)?;
+        let server = Server::start(
+            &cfg,
+            ws.clone(),
+            Activation::Relu,
+            gradfree_admm::problem::Problem::BinaryHinge,
+        )?;
         let report = run_load(server.addr(), &inputs, opts)?;
         server.shutdown();
         anyhow::ensure!(

@@ -1,6 +1,7 @@
 //! Nonlinear conjugate gradients (Polak–Ribière+ with Armijo backtracking),
 //! full batch — the paper's CG baseline (cf. Møller 1993; Towsey et al.
-//! 1995).
+//! 1995).  Loss-agnostic: the objective differentiates whatever `Problem`
+//! its `Mlp` carries (objectives take expanded label panels).
 
 use crate::data::Dataset;
 use crate::nn::Mlp;
@@ -49,6 +50,7 @@ pub fn train_cg(
     target_acc: Option<f64>,
     label: &str,
 ) -> Result<BaselineOutcome> {
+    mlp.problem.validate_labels(&test.y, *mlp.dims.last().unwrap())?;
     let mut rng = Rng::stream(seed, 88);
     let mut ws = mlp.init_weights(&mut rng);
     let mut harness = EvalHarness::new(mlp, test, label);
@@ -134,6 +136,25 @@ mod tests {
         assert!(
             out.recorder.best_accuracy() > 0.95,
             "acc={}",
+            out.recorder.best_accuracy()
+        );
+    }
+
+    #[test]
+    fn cg_learns_multiclass_blobs() {
+        use crate::data::multi_blobs;
+        use crate::problem::Problem;
+        let d = multi_blobs(5, 3, 900, 3.0, 24);
+        let (train, test) = d.split_test(200);
+        let mlp =
+            Mlp::with_problem(vec![5, 8, 3], Activation::Relu, Problem::MulticlassHinge)
+                .unwrap();
+        let y_exp = mlp.problem.expand_labels(&train.y, 3);
+        let mut obj = LocalObjective { mlp: &mlp, x: &train.x, y: &y_exp };
+        let out = train_cg(&mlp, &mut obj, &test, 80, 6, None, "cg_multi_test").unwrap();
+        assert!(
+            out.recorder.best_accuracy() > 0.88,
+            "multihinge acc={}",
             out.recorder.best_accuracy()
         );
     }

@@ -1,6 +1,8 @@
 //! L-BFGS (two-loop recursion, Armijo backtracking), full batch — the
 //! paper's strongest baseline on SVHN and the eventual-best classifier on
-//! HIGGS (footnote 1).
+//! HIGGS (footnote 1).  Loss-agnostic: the objective differentiates
+//! whatever `Problem` its `Mlp` carries (objectives take expanded label
+//! panels).
 
 use std::collections::VecDeque;
 
@@ -54,6 +56,7 @@ pub fn train_lbfgs(
     target_acc: Option<f64>,
     label: &str,
 ) -> Result<BaselineOutcome> {
+    mlp.problem.validate_labels(&test.y, *mlp.dims.last().unwrap())?;
     let mut rng = Rng::stream(seed, 99);
     let mut ws = mlp.init_weights(&mut rng);
     let mut harness = EvalHarness::new(mlp, test, label);
@@ -154,6 +157,23 @@ mod tests {
         assert!(
             out.recorder.best_accuracy() > 0.95,
             "acc={}",
+            out.recorder.best_accuracy()
+        );
+    }
+
+    #[test]
+    fn lbfgs_fits_least_squares_regression() {
+        use crate::data::synth_regression;
+        use crate::problem::Problem;
+        let d = synth_regression(5, 900, 0.1, 34);
+        let (train, test) = d.split_test(200);
+        let mlp =
+            Mlp::with_problem(vec![5, 16, 1], Activation::Relu, Problem::LeastSquares).unwrap();
+        let mut obj = LocalObjective { mlp: &mlp, x: &train.x, y: &train.y };
+        let out = train_lbfgs(&mlp, &mut obj, &test, 80, 10, 7, None, "lbfgs_l2_test").unwrap();
+        assert!(
+            out.recorder.best_accuracy() > 0.8,
+            "l2 tolerance-band acc={}",
             out.recorder.best_accuracy()
         );
     }

@@ -2,10 +2,15 @@
 //! and L-BFGS, plus the hyper-parameter grid-search harness the paper ran.
 //!
 //! The paper executed these via the Torch `optim` package on a Tesla K40;
-//! here they run on the same hinge-MLP substrate as everything else —
-//! either a thread-local objective or the data-parallel worker pool
-//! (full-batch methods split gradient computation across ranks exactly like
-//! the batch methods the paper cites: Ngiam et al. 2011).
+//! here they run on the same MLP substrate as everything else — either a
+//! thread-local objective or the data-parallel worker pool (full-batch
+//! methods split gradient computation across ranks exactly like the batch
+//! methods the paper cites: Ngiam et al. 2011).  The loss is whatever
+//! `Problem` the `Mlp` carries: the optimizers only see `loss_grad`, so
+//! hinge, least-squares and multiclass runs share every line of optimizer
+//! code.  Objectives take **expanded** `(d_L × n)` label panels
+//! ([`crate::problem::Problem::expand_labels`]); the [`EvalHarness`]
+//! expands its test labels itself.
 
 mod cg;
 mod lbfgs;
@@ -22,15 +27,17 @@ use crate::data::Dataset;
 use crate::linalg::Matrix;
 use crate::metrics::{CurvePoint, Recorder, Stopwatch};
 use crate::nn::Mlp;
+use crate::problem::Problem;
 use crate::Result;
 
-/// Full-batch loss/gradient oracle (Σ hinge over the whole training set).
+/// Full-batch loss/gradient oracle (Σ loss over the whole training set).
 pub trait Objective {
     fn loss_grad(&mut self, ws: &[Matrix]) -> Result<(f64, Vec<Matrix>)>;
     fn samples(&self) -> usize;
 }
 
-/// Single-threaded objective over a dataset.
+/// Single-threaded objective over a dataset (`y` expanded to `d_L × n`;
+/// raw `1 × n` rows work unchanged for the paper's `d_L = 1` nets).
 pub struct LocalObjective<'a> {
     pub mlp: &'a Mlp,
     pub x: &'a Matrix,
@@ -68,6 +75,9 @@ impl Objective for PoolObjective<'_> {
 pub struct EvalHarness<'a> {
     pub mlp: &'a Mlp,
     pub test: &'a Dataset,
+    /// Test labels expanded to the network's output shape by the `Mlp`'s
+    /// problem (one-hot for multiclass, replication otherwise).
+    test_y: Matrix,
     pub recorder: Recorder,
     pub sw_opt: f64,
     pub target_acc: Option<f64>,
@@ -76,9 +86,11 @@ pub struct EvalHarness<'a> {
 
 impl<'a> EvalHarness<'a> {
     pub fn new(mlp: &'a Mlp, test: &'a Dataset, label: impl Into<String>) -> Self {
+        let test_y = mlp.problem.expand_labels(&test.y, *mlp.dims.last().unwrap());
         EvalHarness {
             mlp,
             test,
+            test_y,
             recorder: Recorder::new(label),
             sw_opt: 0.0,
             target_acc: None,
@@ -89,7 +101,7 @@ impl<'a> EvalHarness<'a> {
     /// Record a point (outside the optimization clock). Returns `true` when
     /// the target accuracy has been met and the caller should stop.
     pub fn record(&mut self, iter: usize, ws: &[Matrix], train_loss: f64) -> bool {
-        let acc = self.mlp.accuracy(ws, &self.test.x, &self.test.y);
+        let acc = self.mlp.accuracy(ws, &self.test.x, &self.test_y);
         self.recorder.push(CurvePoint {
             iter,
             wall_s: self.sw_opt,
@@ -151,9 +163,9 @@ pub fn grid_search<P: Clone>(
     Ok(best.unwrap())
 }
 
-/// Build the standard (mlp, expanded test) pair used by all baselines.
-pub fn baseline_mlp(dims: &[usize], act: Activation) -> Result<Mlp> {
-    Mlp::new(dims.to_vec(), act)
+/// Build the standard baseline network for a problem kind.
+pub fn baseline_mlp(dims: &[usize], act: Activation, problem: Problem) -> Result<Mlp> {
+    Mlp::with_problem(dims.to_vec(), act, problem)
 }
 
 #[cfg(test)]

@@ -40,6 +40,9 @@ pub fn train_sgd(
     label: &str,
 ) -> Result<BaselineOutcome> {
     anyhow::ensure!(opts.batch >= 1, "batch must be >= 1");
+    let d_l = *mlp.dims.last().unwrap();
+    mlp.problem.validate_labels(&train.y, d_l)?;
+    mlp.problem.validate_labels(&test.y, d_l)?;
     let mut rng = Rng::stream(opts.seed, 77);
     let mut ws = mlp.init_weights(&mut rng);
     let mut velocity: Vec<Matrix> =
@@ -48,6 +51,10 @@ pub fn train_sgd(
     let n = train.samples();
     let batch = opts.batch.min(n);
     let steps_per_epoch = n.div_ceil(batch);
+    // Expand labels once to the network's supervision shape (one-hot for
+    // multiclass, replication otherwise); minibatches gather columns from
+    // the expanded panel.
+    let y_exp = mlp.problem.expand_labels(&train.y, d_l);
     let mut harness = EvalHarness::new(mlp, test, label);
     harness.target_acc = target_acc;
     let mut last_loss = f64::NAN;
@@ -63,7 +70,7 @@ pub fn train_sgd(
     'outer: for _epoch in 0..opts.epochs {
         for _ in 0..steps_per_epoch {
             let idx = rng.sample_indices(n, batch);
-            gather_columns_into(train, &idx, &mut bx, &mut by);
+            gather_columns_into(&train.x, &y_exp, &idx, &mut bx, &mut by);
             harness.timed(|| {
                 let loss = mlp.loss_grad_into(&ws, &bx, &by, &mut work, &mut grads);
                 last_loss = loss / batch as f64;
@@ -89,16 +96,24 @@ pub fn train_sgd(
     })
 }
 
-/// Copy the selected columns into caller-owned minibatch buffers.
-fn gather_columns_into(d: &Dataset, idx: &[usize], x: &mut Matrix, y: &mut Matrix) {
-    let f = d.features();
-    x.resize(f, idx.len());
-    y.resize(1, idx.len());
+/// Copy the selected columns of an (x, expanded-y) pair into caller-owned
+/// minibatch buffers.
+fn gather_columns_into(
+    x: &Matrix,
+    y: &Matrix,
+    idx: &[usize],
+    bx: &mut Matrix,
+    by: &mut Matrix,
+) {
+    bx.resize(x.rows(), idx.len());
+    by.resize(y.rows(), idx.len());
     for (j, &c) in idx.iter().enumerate() {
-        for r in 0..f {
-            *x.at_mut(r, j) = d.x.at(r, c);
+        for r in 0..x.rows() {
+            *bx.at_mut(r, j) = x.at(r, c);
         }
-        *y.at_mut(0, j) = d.y.at(0, c);
+        for r in 0..y.rows() {
+            *by.at_mut(r, j) = y.at(r, c);
+        }
     }
 }
 
@@ -107,7 +122,7 @@ fn gather_columns_into(d: &Dataset, idx: &[usize], x: &mut Matrix, y: &mut Matri
 fn gather_columns(d: &Dataset, idx: &[usize]) -> (Matrix, Matrix) {
     let mut x = Matrix::default();
     let mut y = Matrix::default();
-    gather_columns_into(d, idx, &mut x, &mut y);
+    gather_columns_into(&d.x, &d.y, idx, &mut x, &mut y);
     (x, y)
 }
 
@@ -162,5 +177,55 @@ mod tests {
         assert_eq!(x.at(1, 0), d.x.at(1, 7));
         assert_eq!(x.at(2, 1), d.x.at(2, 2));
         assert_eq!(y.at(0, 0), d.y.at(0, 7));
+    }
+
+    #[test]
+    fn sgd_fits_least_squares_regression() {
+        use crate::data::synth_regression;
+        use crate::problem::Problem;
+        let d = synth_regression(6, 1200, 0.1, 13);
+        let (train, test) = d.split_test(300);
+        let mlp =
+            Mlp::with_problem(vec![6, 16, 1], Activation::Relu, Problem::LeastSquares).unwrap();
+        let out = train_sgd(
+            &mlp,
+            &train,
+            &test,
+            SgdOpts { lr: 2e-2, momentum: 0.9, batch: 32, epochs: 30, eval_every: 50, seed: 4 },
+            None,
+            "sgd_l2_test",
+        )
+        .unwrap();
+        // tolerance-band accuracy (|z - y| <= 0.5) on the noisy sinusoid
+        assert!(
+            out.recorder.best_accuracy() > 0.8,
+            "l2 acc={}",
+            out.recorder.best_accuracy()
+        );
+    }
+
+    #[test]
+    fn sgd_learns_multiclass_blobs() {
+        use crate::data::multi_blobs;
+        use crate::problem::Problem;
+        let d = multi_blobs(6, 3, 1200, 3.0, 14);
+        let (train, test) = d.split_test(300);
+        let mlp =
+            Mlp::with_problem(vec![6, 10, 3], Activation::Relu, Problem::MulticlassHinge)
+                .unwrap();
+        let out = train_sgd(
+            &mlp,
+            &train,
+            &test,
+            SgdOpts { lr: 3e-2, momentum: 0.9, batch: 32, epochs: 20, eval_every: 50, seed: 5 },
+            None,
+            "sgd_multi_test",
+        )
+        .unwrap();
+        assert!(
+            out.recorder.best_accuracy() > 0.9,
+            "multihinge acc={}",
+            out.recorder.best_accuracy()
+        );
     }
 }

@@ -11,6 +11,7 @@ pub mod json;
 pub use json::Json;
 
 use crate::cli::Args;
+use crate::problem::Problem;
 use crate::Result;
 
 /// Activation function h_l (paper §3.1 piecewise-linear choices).
@@ -143,6 +144,9 @@ pub struct TrainConfig {
     /// Layer dimensions `[d0, d1, …, dL]` (d0 = input features).
     pub dims: Vec<usize>,
     pub act: Activation,
+    /// Loss / output-layer kind (`--loss hinge|l2|multihinge`): owns the
+    /// output z-update, label expansion, decoding and metrics.
+    pub problem: Problem,
     /// Quadratic penalty on `z_l = W_l a_{l-1}` (paper β, default 1).
     pub beta: f32,
     /// Quadratic penalty on `a_l = h(z_l)` (paper γ, default 10).
@@ -179,6 +183,7 @@ impl Default for TrainConfig {
             name: "quickstart".into(),
             dims: vec![16, 12, 1],
             act: Activation::Relu,
+            problem: Problem::BinaryHinge,
             beta: 1.0,
             gamma: 10.0,
             warmup_iters: 10,
@@ -205,6 +210,12 @@ impl TrainConfig {
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(self.dims.len() >= 2, "need at least one layer");
         anyhow::ensure!(self.dims.iter().all(|&d| d > 0), "zero-width layer");
+        self.problem.validate_dims(*self.dims.last().unwrap())?;
+        anyhow::ensure!(
+            self.backend != Backend::Pjrt || self.problem == Problem::BinaryHinge,
+            "the PJRT artifacts bake the binary hinge; --loss {} requires --backend native",
+            self.problem.name()
+        );
         anyhow::ensure!(self.beta > 0.0 && self.gamma > 0.0, "penalties must be positive");
         anyhow::ensure!(self.workers >= 1, "need at least one worker");
         anyhow::ensure!(self.threads >= 1, "need at least one intra-rank thread");
@@ -223,6 +234,7 @@ impl TrainConfig {
                 "name" => c.name = val.as_str()?.to_string(),
                 "dims" => c.dims = val.as_usize_vec()?,
                 "act" => c.act = Activation::parse(val.as_str()?)?,
+                "loss" => c.problem = Problem::parse(val.as_str()?)?,
                 "beta" => c.beta = val.as_f64()? as f32,
                 "gamma" => c.gamma = val.as_f64()? as f32,
                 "warmup_iters" => c.warmup_iters = val.as_usize()?,
@@ -264,6 +276,9 @@ impl TrainConfig {
         }
         if let Some(v) = args.get("act") {
             self.act = Activation::parse(v)?;
+        }
+        if let Some(v) = args.get("loss") {
+            self.problem = Problem::parse(v)?;
         }
         if let Some(v) = args.get("beta") {
             self.beta = v.parse()?;
@@ -362,6 +377,10 @@ pub struct ServeConfig {
     /// How long the batcher waits for the batch to fill once the first
     /// request of a batch has arrived (0 = dispatch immediately).
     pub max_wait_us: u64,
+    /// Decode override (`--loss`).  `None` (the default) trusts the
+    /// checkpoint: `GFADMM02` files record their problem kind, `GFADMM01`
+    /// files default to binary hinge.
+    pub problem: Option<Problem>,
 }
 
 impl Default for ServeConfig {
@@ -372,6 +391,7 @@ impl Default for ServeConfig {
             threads: 4,
             max_batch: 32,
             max_wait_us: 200,
+            problem: None,
         }
     }
 }
@@ -399,6 +419,7 @@ impl ServeConfig {
                 "threads" => c.threads = val.as_usize()?,
                 "max_batch" => c.max_batch = val.as_usize()?,
                 "max_wait_us" => c.max_wait_us = val.as_usize()? as u64,
+                "loss" => c.problem = Some(Problem::parse(val.as_str()?)?),
                 other => anyhow::bail!("unknown serve config key '{other}'"),
             }
         }
@@ -415,6 +436,9 @@ impl ServeConfig {
         self.threads = args.parsed_or("threads", self.threads)?;
         self.max_batch = args.parsed_or("max-batch", self.max_batch)?;
         self.max_wait_us = args.parsed_or("max-wait-us", self.max_wait_us)?;
+        if let Some(v) = args.get("loss") {
+            self.problem = Some(Problem::parse(v)?);
+        }
         self.validate()
     }
 
@@ -519,6 +543,44 @@ mod tests {
         let mut c = TrainConfig::default();
         c.momentum = 1.5;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn loss_key_and_flag_select_problem() {
+        let c = TrainConfig::from_json(
+            &Json::parse(r#"{"dims": [8, 4, 1], "loss": "l2"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.problem, Problem::LeastSquares);
+        let mut c = TrainConfig::default();
+        c.dims = vec![8, 4, 3];
+        let args = Args::parse_from(["--loss", "multihinge"].iter().map(|s| s.to_string()));
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.problem, Problem::MulticlassHinge);
+        // serve-side override
+        let mut s = ServeConfig::default();
+        assert_eq!(s.problem, None);
+        s.apply_args(&args).unwrap();
+        assert_eq!(s.problem, Some(Problem::MulticlassHinge));
+        let s = ServeConfig::from_json(&Json::parse(r#"{"loss": "hinge"}"#).unwrap()).unwrap();
+        assert_eq!(s.problem, Some(Problem::BinaryHinge));
+    }
+
+    #[test]
+    fn problem_dims_and_backend_validated() {
+        // multihinge needs >= 2 output units
+        let mut c = TrainConfig::default();
+        c.problem = Problem::MulticlassHinge; // dims end in 1
+        assert!(c.validate().is_err());
+        c.dims = vec![16, 12, 3];
+        c.validate().unwrap();
+        // non-hinge losses are native-only (artifacts bake the hinge)
+        let mut c = TrainConfig::default();
+        c.problem = Problem::LeastSquares;
+        c.backend = Backend::Pjrt;
+        assert!(c.validate().is_err());
+        c.backend = Backend::Native;
+        c.validate().unwrap();
     }
 
     #[test]

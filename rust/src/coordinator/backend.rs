@@ -14,13 +14,14 @@ use crate::config::{Activation, Backend, TrainConfig};
 use crate::coordinator::updates;
 use crate::linalg::{gemm_nn, par, Matrix};
 use crate::nn::Mlp;
+use crate::problem::Problem;
 use crate::runtime::RuntimeContext;
 use crate::Result;
 
 /// Send-able recipe for constructing a backend inside a worker thread.
 #[derive(Clone, Debug)]
 pub enum BackendKind {
-    Native { gamma: f32, beta: f32, act: Activation },
+    Native { gamma: f32, beta: f32, act: Activation, problem: Problem },
     Pjrt { artifacts_dir: String, config: String },
 }
 
@@ -31,7 +32,10 @@ impl BackendKind {
                 gamma: cfg.gamma,
                 beta: cfg.beta,
                 act: cfg.act,
+                problem: cfg.problem,
             },
+            // `TrainConfig::validate` already pins Pjrt to BinaryHinge
+            // (the artifacts bake the hinge output solve and eval).
             Backend::Pjrt => BackendKind::Pjrt {
                 artifacts_dir: cfg.artifacts_dir.clone(),
                 config: cfg.name.clone(),
@@ -41,11 +45,12 @@ impl BackendKind {
 
     pub fn build(&self) -> Result<WorkerBackendImpl> {
         Ok(match self {
-            BackendKind::Native { gamma, beta, act } => {
+            BackendKind::Native { gamma, beta, act, problem } => {
                 WorkerBackendImpl::Native(NativeBackend {
                     gamma: *gamma,
                     beta: *beta,
                     act: *act,
+                    problem: *problem,
                 })
             }
             BackendKind::Pjrt { artifacts_dir, config } => {
@@ -56,11 +61,13 @@ impl BackendKind {
 }
 
 /// Rust-native backend (also the only backend for the classical-ADMM
-/// ablation and for γ/β sweeps — artifacts bake those constants).
+/// ablation, for γ/β sweeps — artifacts bake those constants — and for
+/// every non-hinge `Problem`).
 pub struct NativeBackend {
     pub gamma: f32,
     pub beta: f32,
     pub act: Activation,
+    pub problem: Problem,
 }
 
 /// PJRT backend over the AOT artifacts.
@@ -222,7 +229,7 @@ impl WorkerBackendImpl {
         }
     }
 
-    /// Returns `(z_L, m = W_L a_{L-1})`.
+    /// Returns `(z_L, m = W_L a_{L-1})` — the problem-owned output solve.
     pub fn z_out(
         &mut self,
         w: &Matrix,
@@ -233,7 +240,7 @@ impl WorkerBackendImpl {
         match self {
             Self::Native(n) => {
                 let m = gemm_nn(w, a_prev);
-                Ok((updates::z_out(y, &m, lam, n.beta), m))
+                Ok((n.problem.z_out(y, &m, lam, n.beta), m))
             }
             Self::Pjrt(p) => p.z_out(w, a_prev, y, lam),
         }
@@ -256,7 +263,7 @@ impl WorkerBackendImpl {
         match self {
             Self::Native(n) => {
                 par::gemm_nn_into(w, a_prev, m, threads);
-                updates::z_out_into(y, m, lam, n.beta, out);
+                n.problem.z_out_into(y, m, lam, n.beta, out);
                 Ok(())
             }
             Self::Pjrt(p) => {
@@ -278,20 +285,31 @@ impl WorkerBackendImpl {
         }
     }
 
-    /// `(Σ hinge, Σ correct)` on a shard.
-    pub fn eval(&mut self, ws: &[Matrix], x: &Matrix, y: &Matrix, act: Activation) -> Result<(f64, f64)> {
+    /// `(Σ loss, Σ correct, total)` on a shard, under the problem's
+    /// metric.  The PJRT artifacts bake the binary-hinge per-entry metric,
+    /// so their total is `cols × rows` — identical to the native hinge arm.
+    pub fn eval(
+        &mut self,
+        ws: &[Matrix],
+        x: &Matrix,
+        y: &Matrix,
+        act: Activation,
+    ) -> Result<(f64, f64, usize)> {
         match self {
-            Self::Native(_) => {
-                let mlp = Mlp::new(dims_of(ws, x), act)?;
+            Self::Native(n) => {
+                let mlp = Mlp::with_problem(dims_of(ws, x), act, n.problem)?;
                 let loss = mlp.loss(ws, x, y);
-                let (c, _) = mlp.accuracy_counts(ws, x, y);
-                Ok((loss, c as f64))
+                let (c, total) = mlp.accuracy_counts(ws, x, y);
+                Ok((loss, c as f64, total))
             }
-            Self::Pjrt(p) => p.eval(ws, x, y),
+            Self::Pjrt(p) => {
+                let (loss, correct) = p.eval(ws, x, y)?;
+                Ok((loss, correct, x.cols() * y.rows()))
+            }
         }
     }
 
-    /// `(Σ hinge, per-layer grads)` on a shard (baseline substrate).
+    /// `(Σ loss, per-layer grads)` on a shard (baseline substrate).
     pub fn loss_grad(
         &mut self,
         ws: &[Matrix],
@@ -300,8 +318,8 @@ impl WorkerBackendImpl {
         act: Activation,
     ) -> Result<(f64, Vec<Matrix>)> {
         match self {
-            Self::Native(_) => {
-                let mlp = Mlp::new(dims_of(ws, x), act)?;
+            Self::Native(n) => {
+                let mlp = Mlp::with_problem(dims_of(ws, x), act, n.problem)?;
                 Ok(mlp.loss_grad(ws, x, y))
             }
             Self::Pjrt(p) => p.loss_grad(ws, x, y),

@@ -18,5 +18,5 @@ pub mod updates;
 mod worker;
 
 pub use backend::{BackendKind, NativeBackend, PjrtBackend, WorkerBackendImpl};
-pub use trainer::{expand_labels, AdmmTrainer, TrainOutcome, TrainStats};
+pub use trainer::{AdmmTrainer, TrainOutcome, TrainStats};
 pub use worker::{Cmd, Resp, WorkerPool};

@@ -33,6 +33,7 @@ use crate::config::Activation;
 use crate::coordinator::updates;
 use crate::linalg::{gemm_nn, gemm_nt, gemm_tn, solve_spd, syrk, weight_solve, Matrix};
 use crate::metrics::{CurvePoint, Recorder, Stopwatch};
+use crate::problem::Problem;
 use crate::rng::Rng;
 use crate::Result;
 
@@ -88,6 +89,10 @@ pub struct RnnConfig {
     pub input_dim: usize,
     pub hidden_dim: usize,
     pub act: Activation,
+    /// Output-layer loss (same `Problem` API as the feed-forward trainer;
+    /// the sequence tasks here are binary, but the z_out/decode plumbing
+    /// is shared, not forked).
+    pub problem: Problem,
     pub gamma: f32,
     pub beta: f32,
     pub iters: usize,
@@ -102,6 +107,7 @@ impl Default for RnnConfig {
             input_dim: 4,
             hidden_dim: 16,
             act: Activation::Relu,
+            problem: Problem::BinaryHinge,
             gamma: 1.0,
             beta: 1.0,
             iters: 30,
@@ -140,6 +146,10 @@ impl RnnAdmm {
             data.xs.iter().all(|x| x.rows() == cfg.input_dim),
             "input_dim mismatch"
         );
+        // The RNN head is a fixed 1-unit output layer: reject problems
+        // that need a wider head (multihinge) and bad label streams.
+        cfg.problem.validate_dims(1)?;
+        cfg.problem.validate_labels(&data.y, 1)?;
         let n = data.samples();
         let h = cfg.hidden_dim;
         let mut rng = Rng::stream(cfg.seed, 1717);
@@ -292,7 +302,7 @@ impl RnnAdmm {
         let aat_o = gemm_nt(&self.acts[t_steps - 1], &self.acts[t_steps - 1]);
         self.weights.wo = weight_solve(&zat_o, &aat_o, self.cfg.ridge)?;
         let m_out = gemm_nn(&self.weights.wo, &self.acts[t_steps - 1]);
-        self.z_out = updates::z_out(&self.y, &m_out, &self.lam, beta);
+        self.z_out = self.cfg.problem.z_out(&self.y, &m_out, &self.lam, beta);
         if it >= self.cfg.warmup_iters {
             updates::lambda_update(&mut self.lam, &self.z_out, &m_out, beta);
         }
@@ -317,13 +327,8 @@ impl RnnAdmm {
 
     pub fn accuracy(&self, data: &SeqDataset) -> f64 {
         let z = self.predict(&data.xs);
-        let mut correct = 0usize;
-        for c in 0..z.cols() {
-            if (z.at(0, c) >= 0.5) == (data.y.at(0, c) > 0.5) {
-                correct += 1;
-            }
-        }
-        correct as f64 / z.cols() as f64
+        let (correct, total) = self.cfg.problem.accuracy_counts(&z, &data.y);
+        correct as f64 / total.max(1) as f64
     }
 
     /// Train; records test accuracy per iteration.

@@ -7,8 +7,9 @@
 //!      pseudoinverse) and, for hidden layers, factors the shard-
 //!      independent `(β W_{l+1}ᵀ W_{l+1} + γI)⁻¹`;
 //!   3. workers run the embarrassingly parallel `a_l` / `z_l` updates.
-//! The output layer runs the hinge-prox `z_L` update and, past warm-up,
-//! the Bregman multiplier step (§4).
+//! The output layer runs the configured `Problem`'s prox/closed-form `z_L`
+//! update (hinge, least-squares or one-vs-all multiclass hinge — eq. 8)
+//! and, past warm-up, the Bregman multiplier step (§4).
 //!
 //! The trainer also produces the calibrated `ScalingProfile` (measured
 //! compute/leader seconds + exact collective byte counts) that figs 1a/2a
@@ -70,6 +71,9 @@ pub struct AdmmTrainer {
 
 impl AdmmTrainer {
     /// Shard `train` over the configured workers; `test` is leader-side.
+    /// Raw `(1 × n)` label rows are validated and expanded to the
+    /// network's `(d_L × n)` supervision panel by the configured
+    /// `Problem` (replication for scalar targets, one-hot for multiclass).
     pub fn new(cfg: TrainConfig, train: &Dataset, test: &Dataset) -> Result<AdmmTrainer> {
         cfg.validate()?;
         anyhow::ensure!(
@@ -90,15 +94,17 @@ impl AdmmTrainer {
             );
         }
         let d_l = *cfg.dims.last().unwrap();
-        let y_exp = expand_labels(&train.y, d_l);
+        cfg.problem.validate_labels(&train.y, d_l)?;
+        cfg.problem.validate_labels(&test.y, d_l)?;
+        let y_exp = cfg.problem.expand_labels(&train.y, d_l);
         let pool = WorkerPool::new(&cfg, &train.x, &y_exp)?;
         let weights: Vec<Matrix> = (0..cfg.layers())
             .map(|l| Matrix::zeros(cfg.dims[l + 1], cfg.dims[l]))
             .collect();
-        let eval_mlp = Mlp::new(cfg.dims.clone(), cfg.act)?;
+        let eval_mlp = Mlp::with_problem(cfg.dims.clone(), cfg.act, cfg.problem)?;
         Ok(AdmmTrainer {
             test_x: test.x.clone(),
-            test_y: expand_labels(&test.y, d_l),
+            test_y: cfg.problem.expand_labels(&test.y, d_l),
             pool,
             weights,
             prev_weights: None,
@@ -192,7 +198,8 @@ impl AdmmTrainer {
         out
     }
 
-    /// Leader-side test evaluation (native math; independent of backend).
+    /// Leader-side test evaluation (native math; independent of backend;
+    /// metric per the configured `Problem`).
     pub fn test_accuracy(&self) -> f64 {
         self.eval_mlp.accuracy(&self.weights, &self.test_x, &self.test_y)
     }
@@ -305,28 +312,9 @@ impl AdmmTrainer {
     }
 }
 
-/// Replicate a (1 × n) label row to (rows × n) — output layers with more
-/// than one unit supervise every unit with the same binary target (used by
-/// the tiny integration-test nets; the paper's nets have d_L = 1).
-pub fn expand_labels(y: &Matrix, rows: usize) -> Matrix {
-    assert_eq!(y.rows(), 1, "labels must be a row vector");
-    if rows == 1 {
-        return y.clone();
-    }
-    Matrix::from_fn(rows, y.cols(), |_, c| y.at(0, c))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn expand_labels_replicates() {
-        let y = Matrix::from_vec(1, 3, vec![1.0, 0.0, 1.0]);
-        let e = expand_labels(&y, 2);
-        assert_eq!(e.shape(), (2, 3));
-        assert_eq!(e.row(0), e.row(1));
-    }
 
     #[test]
     fn traffic_formulas() {

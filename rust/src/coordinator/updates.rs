@@ -1,11 +1,15 @@
-//! Closed-form minimization sub-steps (paper §3.1), rust-native.
+//! Closed-form minimization sub-steps (paper §3.1), rust-native — the
+//! loss-INDEPENDENT pieces: hidden z-updates, a-updates, the Bregman λ
+//! step, Gram pairs and feasibility telemetry.  The loss-specific output
+//! z-update (eq. 8) lives behind [`crate::problem::Problem::z_out_into`].
 //!
 //! This is the exact twin of the L1 Pallas kernels in
 //! `python/compile/kernels/` — same piecewise case analysis, same
 //! tie-breaking direction (`<=` keeps the "active" piece).  The integration
 //! test `integration_runtime.rs` asserts the two implementations agree on
-//! every op, which is what lets the native path serve as the oracle for
-//! the artifacts and the backend for γ/β sweeps.
+//! every op (the binary-hinge `Problem` arm for `z_out`), which is what
+//! lets the native path serve as the oracle for the artifacts and the
+//! backend for γ/β sweeps.
 
 use crate::config::Activation;
 use crate::linalg::{gemm_nn, par, Matrix};
@@ -109,66 +113,6 @@ pub fn z_hidden_into(
         .zip(m.as_slice())
     {
         *o = z_hidden_scalar(av, mv, gamma, beta, act);
-    }
-}
-
-/// Paper §6 separable hinge, entry-wise.
-#[inline(always)]
-pub fn hinge(z: f32, y: f32) -> f32 {
-    if y > 0.5 {
-        (1.0 - z).max(0.0)
-    } else {
-        z.max(0.0)
-    }
-}
-
-#[inline(always)]
-fn zo_obj(z: f32, y: f32, lam: f32, beta: f32, m: f32) -> f32 {
-    hinge(z, y) + lam * z + beta * (z - m) * (z - m)
-}
-
-/// Globally optimal scalar output-layer solve:
-/// `argmin ℓ(z,y) + λz + β(z−m)²` (convex — two clamped candidates).
-#[inline(always)]
-pub fn z_out_scalar(y: f32, m: f32, lam: f32, beta: f32) -> f32 {
-    if y > 0.5 {
-        let c_hi = (m - lam / (2.0 * beta)).max(1.0);
-        let c_lo = (m + (1.0 - lam) / (2.0 * beta)).min(1.0);
-        if zo_obj(c_hi, y, lam, beta, m) <= zo_obj(c_lo, y, lam, beta, m) {
-            c_hi
-        } else {
-            c_lo
-        }
-    } else {
-        let c_hi = (m - (1.0 + lam) / (2.0 * beta)).max(0.0);
-        let c_lo = (m - lam / (2.0 * beta)).min(0.0);
-        if zo_obj(c_hi, y, lam, beta, m) <= zo_obj(c_lo, y, lam, beta, m) {
-            c_hi
-        } else {
-            c_lo
-        }
-    }
-}
-
-/// Output-layer z_L update over a panel.
-pub fn z_out(y: &Matrix, m: &Matrix, lam: &Matrix, beta: f32) -> Matrix {
-    let mut out = Matrix::default();
-    z_out_into(y, m, lam, beta, &mut out);
-    out
-}
-
-/// `z_out` into a caller-owned buffer (zero allocation in steady state).
-pub fn z_out_into(y: &Matrix, m: &Matrix, lam: &Matrix, beta: f32, out: &mut Matrix) {
-    assert_eq!(y.shape(), m.shape());
-    assert_eq!(lam.shape(), m.shape());
-    out.resize(m.rows(), m.cols());
-    for (i, o) in out.as_mut_slice().iter_mut().enumerate() {
-        *o = z_out_scalar(
-            y.as_slice()[i],
-            m.as_slice()[i],
-            lam.as_slice()[i],
-            beta,
-        );
     }
 }
 
@@ -313,37 +257,6 @@ mod tests {
                 ))
             }
         });
-    }
-
-    #[test]
-    fn z_out_beats_grid_search() {
-        forall("z_out optimal", 60, |g| {
-            let beta = g.f32_in(0.1, 10.0);
-            let y = if g.bool() { 1.0 } else { 0.0 };
-            let m = g.f32_in(-4.0, 4.0);
-            let lam = g.f32_in(-2.0, 2.0);
-            let z = z_out_scalar(y, m, lam, beta);
-            let obj = |zv: f32| zo_obj(zv, y, lam, beta, m);
-            let mut best = f32::INFINITY;
-            let mut i = -1000;
-            while i <= 1000 {
-                best = best.min(obj(i as f32 * 0.01));
-                i += 1;
-            }
-            if obj(z) <= best + 1e-3 {
-                Ok(())
-            } else {
-                Err(format!("y={y} m={m} λ={lam} β={beta}: {} vs {best}", obj(z)))
-            }
-        });
-    }
-
-    #[test]
-    fn z_out_known_value() {
-        // y=1, m=0, λ=0, β=1 -> z = 0.5 (see python twin test).
-        assert!((z_out_scalar(1.0, 0.0, 0.0, 1.0) - 0.5).abs() < 1e-6);
-        // y=0, m=-2: hinge inactive, z stays at m.
-        assert!((z_out_scalar(0.0, -2.0, 0.0, 1.0) + 2.0).abs() < 1e-6);
     }
 
     #[test]

@@ -32,6 +32,7 @@ use crate::config::{Activation, MultiplierMode, TrainConfig};
 use crate::coordinator::backend::BackendKind;
 use crate::coordinator::updates;
 use crate::linalg::{gemm_nn, Matrix};
+use crate::problem::Problem;
 use crate::rng::Rng;
 use crate::Result;
 
@@ -51,11 +52,11 @@ pub enum Cmd {
     ZOut { w: Arc<Matrix>, update_lambda: bool },
     /// Classical-ADMM per-constraint dual updates (ablation mode).
     UpdateDuals { ws: Vec<Matrix> },
-    /// (Σ hinge, Σ correct, n) on this worker's training shard.
+    /// (Σ loss, Σ correct, n) on this worker's training shard.
     EvalTrain { ws: Vec<Matrix> },
     /// Quadratic feasibility residuals of this shard.
     Penalty { ws: Vec<Matrix> },
-    /// Baseline substrate: (Σ hinge, ∂W) on this shard.
+    /// Baseline substrate: (Σ loss, ∂W) on this shard.
     LossGrad { ws: Vec<Matrix> },
     Stop,
 }
@@ -84,6 +85,10 @@ struct WorkerState {
     gamma: f32,
     beta: f32,
     act: Activation,
+    /// Loss/output-layer kind (owns the classical-mode z_L solve; the
+    /// Bregman-path solve runs inside the backend, which carries its own
+    /// copy).
+    problem: Problem,
     /// Reusable per-worker scratch (pre-sized m / rhs buffers + intra-rank
     /// thread count for the dense kernels).
     scratch: updates::Workspace,
@@ -230,7 +235,7 @@ fn handle(
                 let mut m = gemm_nn(&w, st.a_prev(ll));
                 m.sub_assign(&st.u[ll - 1]);
                 let zero = Matrix::zeros(st.y.rows(), st.y.cols());
-                st.zs[ll - 1] = updates::z_out(&st.y, &m, &zero, st.beta);
+                st.zs[ll - 1] = st.problem.z_out(&st.y, &m, &zero, st.beta);
                 // classical mode never runs the Bregman λ step
             } else {
                 let WorkerState { x, y, acts, zs, lam, scratch, mode, .. } = st;
@@ -274,8 +279,8 @@ fn handle(
             Ok(Some(Resp::Done))
         }
         Cmd::EvalTrain { ws } => {
-            let (loss, correct) = backend.eval(&ws, &st.x, &st.y, st.act)?;
-            Ok(Some(Resp::EvalTrain { loss, correct, n: st.x.cols() * st.y.rows() }))
+            let (loss, correct, n) = backend.eval(&ws, &st.x, &st.y, st.act)?;
+            Ok(Some(Resp::EvalTrain { loss, correct, n }))
         }
         Cmd::Penalty { ws } => {
             let (eq_z, eq_a) =
@@ -309,7 +314,8 @@ pub struct WorkerPool {
 
 impl WorkerPool {
     /// Shard `x`/`y` over `cfg.workers` ranks and launch the threads.
-    /// `y` must already be expanded to (d_L × n).
+    /// `y` must already be expanded to (d_L × n) via
+    /// [`Problem::expand_labels`].
     pub fn new(cfg: &TrainConfig, x: &Matrix, y: &Matrix) -> Result<WorkerPool> {
         anyhow::ensure!(x.cols() == y.cols(), "x/y column mismatch");
         anyhow::ensure!(y.rows() == *cfg.dims.last().unwrap(), "y rows != d_L");
@@ -377,6 +383,7 @@ impl WorkerPool {
                 gamma: cfg.gamma,
                 beta: cfg.beta,
                 act: cfg.act,
+                problem: cfg.problem,
                 scratch: updates::Workspace::new(cfg.threads),
                 aat1_cache: None,
             };
@@ -485,7 +492,9 @@ impl WorkerPool {
         self.expect_done()
     }
 
-    /// (mean train hinge, train accuracy).
+    /// (mean train loss, train accuracy) under the configured `Problem`'s
+    /// metric (per-entry for hinge/least-squares, per-column for
+    /// multiclass).
     pub fn eval_train(&self, ws: &[Matrix]) -> Result<(f64, f64)> {
         self.send_all(|_| Cmd::EvalTrain { ws: ws.to_vec() })?;
         let mut loss = 0.0;

@@ -100,6 +100,101 @@ pub fn svhn_like(samples: usize, seed: u64) -> Dataset {
     Dataset::new(x, y)
 }
 
+/// Noisy planted-sinusoid regression task (first-class dataset for
+/// `--loss l2`): a fixed unit direction `u` defines the task, targets are
+///
+/// ```text
+/// y = sin(u·x) + 0.5 (u·x) + noise·N(0,1),   x ~ N(0, I)
+/// ```
+///
+/// — nonlinear enough that a linear model underfits (the sinusoid carries
+/// unit amplitude) while a small ReLU net fits it to the noise floor.
+/// Like the other generators the *task* is fixed and `seed` only varies
+/// the sample draw, so train/test sets from different seeds share one
+/// distribution.  With the default `noise = 0.1` the Bayes error is far
+/// inside the `Problem::LeastSquares` ±0.5 accuracy band.
+pub fn synth_regression(features: usize, samples: usize, noise: f32, seed: u64) -> Dataset {
+    // fixed unit direction (task identity), decoupled from `seed`
+    let mut dir_rng = Rng::stream(0x5E65, features as u64);
+    let mut dir = vec![0.0f32; features];
+    let mut norm = 0.0f64;
+    for d in dir.iter_mut() {
+        *d = dir_rng.normal() as f32;
+        norm += (*d as f64) * (*d as f64);
+    }
+    let norm = norm.sqrt() as f32;
+    for d in dir.iter_mut() {
+        *d /= norm;
+    }
+    let mut rng = Rng::stream(seed, 505);
+
+    let mut x = Matrix::zeros(features, samples);
+    let mut y = Matrix::zeros(1, samples);
+    for c in 0..samples {
+        let mut proj = 0.0f32;
+        for r in 0..features {
+            let v = rng.normal() as f32;
+            *x.at_mut(r, c) = v;
+            proj += dir[r] * v;
+        }
+        *y.at_mut(0, c) = proj.sin() + 0.5 * proj + noise * rng.normal() as f32;
+    }
+    Dataset::new(x, y)
+}
+
+/// K-class Gaussian blobs (first-class dataset for `--loss multihinge`):
+/// class `k` is centered at `sep · u_k` for fixed per-class directions
+/// `u_k`; labels are class indices `0 … classes-1`.  While `k <
+/// features` the directions are Gram–Schmidt orthonormalized, so any two
+/// class centers sit `sep·√2` apart — separability does not hinge on a
+/// lucky random draw.
+pub fn multi_blobs(
+    features: usize,
+    classes: usize,
+    samples: usize,
+    sep: f32,
+    seed: u64,
+) -> Dataset {
+    assert!(classes >= 2, "need at least two classes");
+    // fixed per-class unit directions (task identity), decoupled from seed
+    let mut dr = Rng::stream(0xB10B6, features as u64 * 1024 + classes as u64);
+    let mut dirs = vec![vec![0.0f32; features]; classes];
+    for k in 0..classes {
+        let (done, rest) = dirs.split_at_mut(k);
+        let dir = &mut rest[0];
+        for d in dir.iter_mut() {
+            *d = dr.normal() as f32;
+        }
+        // modified Gram–Schmidt against the earlier directions (possible
+        // only while k < features; beyond that, plain normalized draws)
+        if k < features {
+            for prev in done.iter() {
+                let dot: f32 = dir.iter().zip(prev).map(|(a, b)| a * b).sum();
+                for (d, p) in dir.iter_mut().zip(prev) {
+                    *d -= dot * p;
+                }
+            }
+        }
+        let norm = (dir.iter().map(|&d| (d as f64) * (d as f64)).sum::<f64>()).sqrt() as f32;
+        assert!(norm > 1e-3, "degenerate class direction");
+        for d in dir.iter_mut() {
+            *d /= norm;
+        }
+    }
+    let mut rng = Rng::stream(seed, 606);
+
+    let mut x = Matrix::zeros(features, samples);
+    let mut y = Matrix::zeros(1, samples);
+    for c in 0..samples {
+        let k = rng.below(classes);
+        *y.at_mut(0, c) = k as f32;
+        for r in 0..features {
+            *x.at_mut(r, c) = sep * dirs[k][r] + rng.normal() as f32;
+        }
+    }
+    Dataset::new(x, y)
+}
+
 /// HIGGS-like task (paper §7.2 substitute): 28 features, hard nonlinear
 /// decision function with an irreducible-noise ceiling.
 ///
@@ -199,6 +294,77 @@ mod tests {
         // band — well below the net ceiling (~75%).
         let probe = linear_probe_acc(&d);
         assert!((0.52..0.66).contains(&probe), "linear probe off-band: {probe}");
+    }
+
+    #[test]
+    fn synth_regression_targets_track_the_planted_signal() {
+        let d = synth_regression(6, 2000, 0.1, 9);
+        assert_eq!(d.features(), 6);
+        assert_eq!(d.samples(), 2000);
+        // targets live in the sinusoid+linear band (|sin| <= 1, |0.5 p|
+        // small for Gaussian p) — a gross range check catches unit bugs
+        let max = d.y.as_slice().iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        assert!(max < 4.0, "target range blew up: {max}");
+        // the best LINEAR predictor of y leaves the sinusoid behind: its
+        // residual must be well above the noise floor (nonlinearity check)
+        let zat = crate::linalg::gemm_nt(&d.y, &d.x);
+        let aat = crate::linalg::gemm_nt(&d.x, &d.x);
+        let w = crate::linalg::weight_solve(&zat, &aat, 1e-6).unwrap();
+        let mut sse = 0.0f64;
+        for c in 0..d.samples() {
+            let mut p = 0.0f32;
+            for r in 0..d.features() {
+                p += w.at(0, r) * d.x.at(r, c);
+            }
+            sse += ((p - d.y.at(0, c)) as f64).powi(2);
+        }
+        let mse = sse / d.samples() as f64;
+        assert!(mse > 0.05, "task is linearly solvable (mse={mse}) — no sinusoid?");
+    }
+
+    #[test]
+    fn multi_blobs_shapes_balance_and_separability() {
+        let d = multi_blobs(6, 3, 1500, 3.0, 10);
+        assert_eq!(d.features(), 6);
+        assert_eq!(d.samples(), 1500);
+        // labels are class indices, all classes populated roughly evenly
+        let mut counts = [0usize; 3];
+        for &v in d.y.as_slice() {
+            assert!(v == 0.0 || v == 1.0 || v == 2.0, "bad label {v}");
+            counts[v as usize] += 1;
+        }
+        for &c in &counts {
+            assert!(c > 350, "class imbalance: {counts:?}");
+        }
+        // nearest-centroid classification solves it (separability witness)
+        let mut centroids = vec![vec![0.0f64; 6]; 3];
+        for c in 0..d.samples() {
+            let k = d.y.at(0, c) as usize;
+            for r in 0..6 {
+                centroids[k][r] += d.x.at(r, c) as f64 / counts[k] as f64;
+            }
+        }
+        let mut correct = 0usize;
+        for c in 0..d.samples() {
+            let mut best = (f64::INFINITY, 0usize);
+            for (k, ctr) in centroids.iter().enumerate() {
+                let mut dist = 0.0f64;
+                for r in 0..6 {
+                    dist += (d.x.at(r, c) as f64 - ctr[r]).powi(2);
+                }
+                if dist < best.0 {
+                    best = (dist, k);
+                }
+            }
+            if best.1 == d.y.at(0, c) as usize {
+                correct += 1;
+            }
+        }
+        assert!(
+            correct as f64 / d.samples() as f64 > 0.9,
+            "centroid acc {correct}/{}",
+            d.samples()
+        );
     }
 
     #[test]

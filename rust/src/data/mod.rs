@@ -11,14 +11,19 @@
 mod generators;
 mod shard;
 
-pub use generators::{blobs, higgs_like, svhn_like, GeneratorSpec};
+pub use generators::{
+    blobs, higgs_like, multi_blobs, svhn_like, synth_regression, GeneratorSpec,
+};
 pub use shard::{shard_ranges, Shard};
 
 use crate::linalg::Matrix;
 use crate::Result;
 
 /// A supervised dataset: `x` is (features × samples), `y` is (1 × samples)
-/// with binary 0/1 labels (paper §6).
+/// holding per-sample targets — binary 0/1 labels (paper §6), class
+/// indices (`--loss multihinge`) or real regression targets (`--loss
+/// l2`); the active `Problem` validates and expands them
+/// (`Problem::validate_labels` / `Problem::expand_labels`).
 #[derive(Clone, Debug)]
 pub struct Dataset {
     pub x: Matrix,
@@ -97,7 +102,10 @@ impl Normalizer {
 }
 
 /// Load a dataset from CSV: one sample per LINE, features then a trailing
-/// 0/1 label (the conventional HIGGS layout, transposed into columns here).
+/// label/target (the conventional HIGGS layout, transposed into columns
+/// here).  Labels are only required to be finite — problem-specific rules
+/// (binary, class index, …) are checked by `Problem::validate_labels` at
+/// trainer/baseline construction, so one loader serves every loss.
 pub fn load_csv(path: &str, label_first: bool) -> Result<Dataset> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
@@ -136,8 +144,8 @@ pub fn load_csv(path: &str, label_first: bool) -> Result<Dataset> {
             (row[f], &row[..f])
         };
         anyhow::ensure!(
-            label == 0.0 || label == 1.0,
-            "{path}: sample {c} label {label} not binary"
+            label.is_finite(),
+            "{path}: sample {c} label {label} not finite"
         );
         *y.at_mut(0, c) = label;
         for (r, &v) in feats.iter().enumerate() {
@@ -205,13 +213,22 @@ mod tests {
     #[test]
     fn csv_rejects_bad_labels_and_ragged() {
         let dir = std::env::temp_dir();
+        // non-binary labels are fine at load time (class indices,
+        // regression targets) — the Problem validates them downstream
         let p1 = dir.join("gradfree_bad1.csv");
-        std::fs::write(&p1, "1.0,2.0,3\n").unwrap();
-        assert!(load_csv(p1.to_str().unwrap(), false).is_err());
+        std::fs::write(&p1, "1.0,2.0,3\n2.0,1.0,-0.75\n").unwrap();
+        let d = load_csv(p1.to_str().unwrap(), false).unwrap();
+        assert_eq!(d.y.at(0, 0), 3.0);
+        assert_eq!(d.y.at(0, 1), -0.75);
+        // ... but non-finite labels and ragged rows are still rejected
         let p2 = dir.join("gradfree_bad2.csv");
         std::fs::write(&p2, "1.0,2.0,1\n1.0,0\n").unwrap();
         assert!(load_csv(p2.to_str().unwrap(), false).is_err());
+        let p3 = dir.join("gradfree_bad3.csv");
+        std::fs::write(&p3, "1.0,2.0,nan\n").unwrap();
+        assert!(load_csv(p3.to_str().unwrap(), false).is_err());
         std::fs::remove_file(&p1).ok();
         std::fs::remove_file(&p2).ok();
+        std::fs::remove_file(&p3).ok();
     }
 }

@@ -20,6 +20,12 @@
 //! serves as an independent oracle, the baselines' substrate, and the
 //! backend for hyper-parameter sweeps (artifacts bake γ/β constants).
 //!
+//! Everything loss/task-specific — the output z-update prox, batch loss +
+//! subgradient, label expansion, prediction decoding and metrics — lives
+//! behind the [`problem::Problem`] API (`--loss hinge|l2|multihinge`), so
+//! the trainer, baselines, eval and server are one engine over binary
+//! classification, regression and multiclass workloads.
+//!
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
 //! the paper-vs-measured record of every figure.
 
@@ -33,6 +39,7 @@ pub mod data;
 pub mod linalg;
 pub mod metrics;
 pub mod nn;
+pub mod problem;
 pub mod prop;
 pub mod rng;
 pub mod runtime;

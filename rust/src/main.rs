@@ -20,6 +20,7 @@ use gradfree_admm::coordinator::AdmmTrainer;
 use gradfree_admm::data::{self, Dataset, Normalizer};
 use gradfree_admm::metrics::write_curves_csv;
 use gradfree_admm::nn::Mlp;
+use gradfree_admm::problem::Problem;
 use gradfree_admm::runtime::Manifest;
 use gradfree_admm::Result;
 
@@ -58,7 +59,9 @@ fn print_usage() {
          USAGE: gradfree <train|predict|serve|baseline|scale|inspect|gen-data> [flags]\n\n\
          COMMON FLAGS\n  \
          --preset test|quickstart|svhn|higgs   network + defaults\n  \
-         --dataset blobs|svhn|higgs|<csv path> data source (default: matches preset)\n  \
+         --loss hinge|l2|multihinge            problem kind (default hinge)\n  \
+         --dataset blobs|svhn|higgs|regress|multiblobs|<csv path>\n  \
+         \x20                (default matches preset/loss)\n  \
          --samples N --test-samples N --seed S\n  \
          --backend native|pjrt  --workers N  --threads N  --iters N  --warmup N\n  \
          --gamma G --beta B --momentum M --multiplier-mode bregman|none|classical\n  \
@@ -68,10 +71,12 @@ fn print_usage() {
          --quiet          suppress per-eval lines\n\n\
          baseline: --method sgd|cg|lbfgs --lr --batch --bmomentum --epochs --max-iters\n\
          scale:    --cores 1,2,4,8 --model-cores 64,1024,7200 --target-acc A\n\
-         gen-data: --dataset blobs|svhn|higgs --samples N --out file.csv\n\
+         gen-data: --dataset blobs|svhn|higgs|regress|multiblobs --samples N\n\
+         \x20          [--classes K] --out file.csv\n\
          predict:  --model ckpt.gfadmm [--dataset ...]\n\
          serve:    --model ckpt.gfadmm [--host H] [--port P] [--threads N]\n\
-         \x20          [--max-batch N] [--max-wait-us U] [--serve-config file.json]"
+         \x20          [--max-batch N] [--max-wait-us U] [--serve-config file.json]\n\
+         \x20          [--loss ...] (default: the checkpoint's problem kind)"
     );
 }
 
@@ -79,12 +84,25 @@ fn print_usage() {
 /// train-set statistics (HIGGS-like needs it; harmless elsewhere).
 fn load_data(args: &Args, cfg: &TrainConfig) -> Result<(Dataset, Dataset)> {
     let seed = cfg.seed;
-    let dataset = args.get_or("dataset", default_dataset(&cfg.name));
+    let dataset = args.get_or("dataset", default_dataset(&cfg.name, cfg.problem));
     let (mut train, mut test) = match dataset {
         "blobs" => {
             let n = args.parsed_or("samples", 4000usize)?;
             let nt = args.parsed_or("test-samples", n / 5)?;
             data::blobs(cfg.dims[0], n + nt, 2.5, seed).split_test(nt)
+        }
+        "regress" => {
+            // planted noisy sinusoid (the --loss l2 first-class task)
+            let n = args.parsed_or("samples", 4000usize)?;
+            let nt = args.parsed_or("test-samples", n / 5)?;
+            data::synth_regression(cfg.dims[0], n + nt, 0.1, seed).split_test(nt)
+        }
+        "multiblobs" => {
+            // K-class blobs, K = the network's output width
+            let n = args.parsed_or("samples", 4000usize)?;
+            let nt = args.parsed_or("test-samples", n / 5)?;
+            let k = (*cfg.dims.last().unwrap()).max(2);
+            data::multi_blobs(cfg.dims[0], k, n + nt, 2.5, seed).split_test(nt)
         }
         "svhn" => {
             // paper §7.1 sizes by default, scaled down by --samples
@@ -110,17 +128,23 @@ fn load_data(args: &Args, cfg: &TrainConfig) -> Result<(Dataset, Dataset)> {
         train.features(),
         cfg.dims[0]
     );
+    cfg.problem.validate_labels(&train.y, *cfg.dims.last().unwrap())?;
+    cfg.problem.validate_labels(&test.y, *cfg.dims.last().unwrap())?;
     let norm = Normalizer::fit(&train.x);
     norm.apply(&mut train.x);
     norm.apply(&mut test.x);
     Ok((train, test))
 }
 
-fn default_dataset(preset: &str) -> &'static str {
-    match preset {
-        "svhn" => "svhn",
-        "higgs" => "higgs",
-        _ => "blobs",
+fn default_dataset(preset: &str, problem: Problem) -> &'static str {
+    match problem {
+        Problem::LeastSquares => "regress",
+        Problem::MulticlassHinge => "multiblobs",
+        Problem::BinaryHinge => match preset {
+            "svhn" => "svhn",
+            "higgs" => "higgs",
+            _ => "blobs",
+        },
     }
 }
 
@@ -137,11 +161,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
     let (train, test) = load_data(args, &cfg)?;
     println!(
-        "ADMM train: config={} dims={:?} act={} backend={} workers={} γ={} β={} \
+        "ADMM train: config={} dims={:?} act={} loss={} backend={} workers={} γ={} β={} \
          mode={} train={}x{} test={}",
         cfg.name,
         cfg.dims,
         cfg.act.name(),
+        cfg.problem.name(),
         cfg.backend.name(),
         cfg.workers,
         cfg.gamma,
@@ -182,28 +207,33 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("curve written to {path}");
     }
     if let Some(path) = args.get("save") {
-        gradfree_admm::nn::save_model(path, &out.weights, trainer.config().act)?;
+        let cfg = trainer.config();
+        gradfree_admm::nn::save_model(path, &out.weights, cfg.act, cfg.problem)?;
         println!("model saved to {path}");
     }
     Ok(())
 }
 
-/// `gradfree predict --model m.bin --dataset <csv|blobs|svhn|higgs>`:
-/// load a checkpoint and report accuracy on a dataset.
+/// `gradfree predict --model m.bin --dataset <csv|blobs|svhn|higgs|…>`:
+/// load a checkpoint and report accuracy on a dataset under the
+/// checkpoint's problem metric.
 fn cmd_predict(args: &Args) -> Result<()> {
     let model_path = args.require("model")?;
-    let (ws, act) = gradfree_admm::nn::load_model(model_path)?;
+    let (ws, act, problem) = gradfree_admm::nn::load_model(model_path)?;
     let mut dims = vec![ws[0].cols()];
     for w in &ws {
         dims.push(w.rows());
     }
-    let cfg = TrainConfig { dims: dims.clone(), act, ..TrainConfig::default() };
+    let cfg = TrainConfig { dims: dims.clone(), act, problem, ..TrainConfig::default() };
     let (_, test) = load_data(args, &cfg)?;
-    let mlp = Mlp::new(dims, act)?;
-    let (correct, n) = mlp.accuracy_counts(&ws, &test.x, &test.y);
+    let d_l = *dims.last().unwrap();
+    let mlp = Mlp::with_problem(dims, act, problem)?;
+    let y = problem.expand_labels(&test.y, d_l);
+    let (correct, n) = mlp.accuracy_counts(&ws, &test.x, &y);
     println!(
-        "model {model_path}: accuracy {:.4} ({correct}/{n})",
-        correct as f64 / n as f64
+        "model {model_path} (loss={}): accuracy {:.4} ({correct}/{n})",
+        problem.name(),
+        correct as f64 / n.max(1) as f64
     );
     Ok(())
 }
@@ -213,7 +243,7 @@ fn cmd_predict(args: &Args) -> Result<()> {
 /// docs for the protocol and EXPERIMENTS.md §Serving for a quickstart).
 fn cmd_serve(args: &Args) -> Result<()> {
     let model_path = args.require("model")?;
-    let (ws, act) = gradfree_admm::nn::load_model(model_path)?;
+    let (ws, act, ckpt_problem) = gradfree_admm::nn::load_model(model_path)?;
     let mut cfg = match args.get("serve-config") {
         Some(path) => {
             let text = std::fs::read_to_string(path)
@@ -223,20 +253,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => ServeConfig::default(),
     };
     cfg.apply_args(args)?;
+    let problem = cfg.problem.unwrap_or(ckpt_problem);
     let dims: Vec<usize> = std::iter::once(ws[0].cols())
         .chain(ws.iter().map(|w| w.rows()))
         .collect();
-    let server = gradfree_admm::serve::Server::start(&cfg, ws, act)?;
+    let server = gradfree_admm::serve::Server::start(&cfg, ws, act, problem)?;
     println!(
-        "serving {model_path} (dims={dims:?} act={}) on {}  \
+        "serving {model_path} (dims={dims:?} act={} loss={}) on {}  \
          [threads={} max_batch={} max_wait_us={}]",
         act.name(),
+        problem.name(),
         server.addr(),
         cfg.threads,
         cfg.max_batch,
         cfg.max_wait_us
     );
-    println!(r#"protocol: {{"id":N,"x":[..]}} -> {{"argmax":K,"id":N,"y":[..]}} (one JSON object per line)"#);
+    println!(r#"protocol: {{"id":N,"x":[..]}} -> {{"argmax":K,"id":N,"y":[..]}} (one JSON object per line; non-hinge models add "pred")"#);
     server.wait();
     Ok(())
 }
@@ -245,14 +277,17 @@ fn cmd_baseline(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
     let (train, test) = load_data(args, &cfg)?;
     let method = args.get_or("method", "sgd");
-    let mlp = Mlp::new(cfg.dims.clone(), cfg.act)?;
+    let mlp = Mlp::with_problem(cfg.dims.clone(), cfg.act, cfg.problem)?;
+    // full-batch objectives take the expanded (d_L × n) supervision panel
+    let y_exp = cfg.problem.expand_labels(&train.y, *cfg.dims.last().unwrap());
     let target = match args.get("target-acc") {
         Some(t) => Some(t.parse()?),
         None => None,
     };
     println!(
-        "baseline {method}: dims={:?} train={}x{} test={}",
+        "baseline {method}: dims={:?} loss={} train={}x{} test={}",
         cfg.dims,
+        cfg.problem.name(),
         train.features(),
         train.samples(),
         test.samples()
@@ -274,7 +309,7 @@ fn cmd_baseline(args: &Args) -> Result<()> {
             &format!("sgd_{}", cfg.name),
         )?,
         "cg" => {
-            let mut obj = LocalObjective { mlp: &mlp, x: &train.x, y: &train.y };
+            let mut obj = LocalObjective { mlp: &mlp, x: &train.x, y: &y_exp };
             baselines::train_cg(
                 &mlp,
                 &mut obj,
@@ -286,7 +321,7 @@ fn cmd_baseline(args: &Args) -> Result<()> {
             )?
         }
         "lbfgs" => {
-            let mut obj = LocalObjective { mlp: &mlp, x: &train.x, y: &train.y };
+            let mut obj = LocalObjective { mlp: &mlp, x: &train.x, y: &y_exp };
             baselines::train_lbfgs(
                 &mlp,
                 &mut obj,
@@ -391,6 +426,11 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
         "blobs" => data::blobs(16, n, 2.5, seed),
         "svhn" => data::svhn_like(n, seed),
         "higgs" => data::higgs_like(n, seed),
+        "regress" => data::synth_regression(16, n, 0.1, seed),
+        "multiblobs" => {
+            let k = args.parsed_or("classes", 3usize)?;
+            data::multi_blobs(16, k, n, 2.5, seed)
+        }
         other => anyhow::bail!("unknown dataset '{other}'"),
     };
     let mut text = String::new();
@@ -399,7 +439,9 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
         for r in 0..d.features() {
             let _ = write!(text, "{},", d.x.at(r, c));
         }
-        let _ = writeln!(text, "{}", d.y.at(0, c) as u8);
+        // f32 Display prints integral labels as before ("1", not "1.0")
+        // and keeps full precision for regression targets
+        let _ = writeln!(text, "{}", d.y.at(0, c));
     }
     std::fs::write(out, text)?;
     println!("wrote {} samples x {} features to {out}", d.samples(), d.features());

@@ -1,22 +1,38 @@
 //! Model checkpointing: a small self-describing binary format for weight
-//! ensembles (magic + version + activation + per-layer shapes + f32 LE
-//! data), so trained models round-trip between `gradfree train --save`,
-//! `gradfree predict`, and library users.
+//! ensembles, so trained models round-trip between `gradfree train
+//! --save`, `gradfree predict`, `gradfree serve`, and library users.
+//!
+//! ## Format
+//!
+//! `GFADMM02` (current): magic + activation byte + **problem byte**
+//! ([`Problem::code`]) + layer count + per-layer shapes + f32 LE data.
+//! Recording the problem kind makes a checkpoint self-describing for
+//! serving/eval: the loader learns how to decode scores (threshold vs
+//! argmax vs identity) without out-of-band flags.
+//!
+//! `GFADMM01` (legacy, read-only): identical but with no problem byte.
+//! Such checkpoints predate the `Problem` API and were always binary
+//! hinge, so the reader defaults them to [`Problem::BinaryHinge`].
+//! Writers always emit `GFADMM02`.
 
 use crate::config::Activation;
 use crate::linalg::Matrix;
+use crate::problem::Problem;
 use crate::Result;
 
-const MAGIC: &[u8; 8] = b"GFADMM01";
+const MAGIC_V1: &[u8; 8] = b"GFADMM01";
+const MAGIC_V2: &[u8; 8] = b"GFADMM02";
 
-/// Serialize weights + activation into a byte buffer.
-pub fn serialize_model(ws: &[Matrix], act: Activation) -> Vec<u8> {
+/// Serialize weights + activation + problem into a byte buffer
+/// (`GFADMM02`).
+pub fn serialize_model(ws: &[Matrix], act: Activation, problem: Problem) -> Vec<u8> {
     let mut out = Vec::new();
-    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(MAGIC_V2);
     out.push(match act {
         Activation::Relu => 0,
         Activation::HardSigmoid => 1,
     });
+    out.push(problem.code());
     out.extend_from_slice(&(ws.len() as u32).to_le_bytes());
     for w in ws {
         out.extend_from_slice(&(w.rows() as u32).to_le_bytes());
@@ -29,15 +45,30 @@ pub fn serialize_model(ws: &[Matrix], act: Activation) -> Vec<u8> {
 }
 
 /// Inverse of [`serialize_model`]; validates magic, version and sizes.
-pub fn deserialize_model(bytes: &[u8]) -> Result<(Vec<Matrix>, Activation)> {
+/// Accepts both `GFADMM02` and legacy `GFADMM01` files (the latter default
+/// to [`Problem::BinaryHinge`]).
+pub fn deserialize_model(bytes: &[u8]) -> Result<(Vec<Matrix>, Activation, Problem)> {
     anyhow::ensure!(bytes.len() >= 13, "truncated model file");
-    anyhow::ensure!(&bytes[..8] == MAGIC, "bad magic (not a gradfree model)");
+    let (mut pos, has_problem_byte) = if &bytes[..8] == MAGIC_V2 {
+        (9usize, true)
+    } else if &bytes[..8] == MAGIC_V1 {
+        (9usize, false)
+    } else {
+        anyhow::bail!("bad magic (not a gradfree model)");
+    };
     let act = match bytes[8] {
         0 => Activation::Relu,
         1 => Activation::HardSigmoid,
         other => anyhow::bail!("unknown activation code {other}"),
     };
-    let mut pos = 9;
+    let problem = if has_problem_byte {
+        anyhow::ensure!(bytes.len() >= 14, "truncated model file");
+        let p = Problem::from_code(bytes[9])?;
+        pos = 10;
+        p
+    } else {
+        Problem::BinaryHinge
+    };
     let read_u32 = |b: &[u8], p: &mut usize| -> Result<u32> {
         anyhow::ensure!(b.len() >= *p + 4, "truncated model file");
         let v = u32::from_le_bytes(b[*p..*p + 4].try_into().unwrap());
@@ -67,17 +98,38 @@ pub fn deserialize_model(bytes: &[u8]) -> Result<(Vec<Matrix>, Activation)> {
         ws.push(Matrix::from_vec(rows, cols, data));
     }
     anyhow::ensure!(pos == bytes.len(), "trailing bytes in model file");
-    Ok((ws, act))
+    Ok((ws, act, problem))
 }
 
-pub fn save_model(path: &str, ws: &[Matrix], act: Activation) -> Result<()> {
-    std::fs::write(path, serialize_model(ws, act))?;
+pub fn save_model(path: &str, ws: &[Matrix], act: Activation, problem: Problem) -> Result<()> {
+    std::fs::write(path, serialize_model(ws, act, problem))?;
     Ok(())
 }
 
-pub fn load_model(path: &str) -> Result<(Vec<Matrix>, Activation)> {
+pub fn load_model(path: &str) -> Result<(Vec<Matrix>, Activation, Problem)> {
     let bytes = std::fs::read(path).map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
     deserialize_model(&bytes)
+}
+
+/// Hand-assemble legacy `GFADMM01` bytes (shared by the back-compat
+/// tests here and in `tests/problem_regression.rs` — no v1 writer ships).
+#[doc(hidden)]
+pub fn serialize_model_v1_for_tests(ws: &[Matrix], act: Activation) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC_V1);
+    out.push(match act {
+        Activation::Relu => 0,
+        Activation::HardSigmoid => 1,
+    });
+    out.extend_from_slice(&(ws.len() as u32).to_le_bytes());
+    for w in ws {
+        out.extend_from_slice(&(w.rows() as u32).to_le_bytes());
+        out.extend_from_slice(&(w.cols() as u32).to_le_bytes());
+        for v in w.as_slice() {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -86,18 +138,34 @@ mod tests {
     use crate::rng::Rng;
 
     #[test]
-    fn roundtrip_both_activations() {
+    fn roundtrip_activations_and_problems() {
         let mut rng = Rng::seed_from(1);
-        let ws = vec![Matrix::randn(3, 5, &mut rng), Matrix::randn(1, 3, &mut rng)];
+        let ws = vec![Matrix::randn(3, 5, &mut rng), Matrix::randn(2, 3, &mut rng)];
         for act in [Activation::Relu, Activation::HardSigmoid] {
-            let bytes = serialize_model(&ws, act);
-            let (ws2, act2) = deserialize_model(&bytes).unwrap();
-            assert_eq!(act2, act);
-            assert_eq!(ws.len(), ws2.len());
-            for (a, b) in ws.iter().zip(&ws2) {
-                assert_eq!(a.shape(), b.shape());
-                assert_eq!(a.as_slice(), b.as_slice());
+            for problem in Problem::ALL {
+                let bytes = serialize_model(&ws, act, problem);
+                let (ws2, act2, problem2) = deserialize_model(&bytes).unwrap();
+                assert_eq!(act2, act);
+                assert_eq!(problem2, problem);
+                assert_eq!(ws.len(), ws2.len());
+                for (a, b) in ws.iter().zip(&ws2) {
+                    assert_eq!(a.shape(), b.shape());
+                    assert_eq!(a.as_slice(), b.as_slice());
+                }
             }
+        }
+    }
+
+    #[test]
+    fn legacy_v1_checkpoints_default_to_binary_hinge() {
+        let mut rng = Rng::seed_from(2);
+        let ws = vec![Matrix::randn(4, 3, &mut rng), Matrix::randn(1, 4, &mut rng)];
+        let bytes = serialize_model_v1_for_tests(&ws, Activation::HardSigmoid);
+        let (ws2, act2, problem2) = deserialize_model(&bytes).unwrap();
+        assert_eq!(act2, Activation::HardSigmoid);
+        assert_eq!(problem2, Problem::BinaryHinge);
+        for (a, b) in ws.iter().zip(&ws2) {
+            assert_eq!(a.as_slice(), b.as_slice());
         }
     }
 
@@ -110,8 +178,9 @@ mod tests {
             5,
             vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0, 1.5e-40],
         );
-        let bytes = serialize_model(std::slice::from_ref(&w), Activation::Relu);
-        let (ws2, _) = deserialize_model(&bytes).unwrap();
+        let bytes =
+            serialize_model(std::slice::from_ref(&w), Activation::Relu, Problem::LeastSquares);
+        let (ws2, _, _) = deserialize_model(&bytes).unwrap();
         let got: Vec<u32> = ws2[0].as_slice().iter().map(|v| v.to_bits()).collect();
         let want: Vec<u32> = w.as_slice().iter().map(|v| v.to_bits()).collect();
         assert_eq!(got, want);
@@ -120,13 +189,16 @@ mod tests {
     #[test]
     fn rejects_corruption() {
         let ws = vec![Matrix::zeros(2, 2)];
-        let mut bytes = serialize_model(&ws, Activation::Relu);
+        let mut bytes = serialize_model(&ws, Activation::Relu, Problem::BinaryHinge);
         assert!(deserialize_model(&bytes[..10]).is_err()); // truncated
         bytes[0] = b'X';
         assert!(deserialize_model(&bytes).is_err()); // bad magic
-        let mut ok = serialize_model(&ws, Activation::Relu);
+        let mut ok = serialize_model(&ws, Activation::Relu, Problem::BinaryHinge);
         ok.push(0); // trailing garbage
         assert!(deserialize_model(&ok).is_err());
+        let mut bad_problem = serialize_model(&ws, Activation::Relu, Problem::BinaryHinge);
+        bad_problem[9] = 77; // unknown problem code
+        assert!(deserialize_model(&bad_problem).is_err());
     }
 
     #[test]
@@ -134,8 +206,9 @@ mod tests {
         // Header claiming a 2^31 x 2^31 layer: rows*cols*4 wraps to 0 on
         // 64-bit, which must not bypass the truncation check.
         let mut bytes = Vec::new();
-        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(MAGIC_V2);
         bytes.push(0); // relu
+        bytes.push(0); // hinge
         bytes.extend_from_slice(&1u32.to_le_bytes()); // one layer
         bytes.extend_from_slice(&(1u32 << 31).to_le_bytes()); // rows
         bytes.extend_from_slice(&(1u32 << 31).to_le_bytes()); // cols
@@ -144,9 +217,9 @@ mod tests {
 
         // Shape whose element count fits usize but whose byte count is
         // near usize::MAX: must hit the truncation error, not overflow
-        // `pos + need`.
+        // `pos + need`.  (Legacy v1 header exercises the v1 offset path.)
         let mut bytes = Vec::new();
-        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(MAGIC_V1);
         bytes.push(0);
         bytes.extend_from_slice(&1u32.to_le_bytes());
         bytes.extend_from_slice(&0x7FFF_FFFFu32.to_le_bytes()); // rows

@@ -1,13 +1,18 @@
-//! Rust-native MLP substrate: forward pass, hinge loss, backprop.
+//! Rust-native MLP substrate: forward pass, loss, backprop.
 //!
 //! Three roles (DESIGN.md §2): independent oracle for the PJRT artifacts,
 //! compute substrate for the SGD/CG/L-BFGS baselines (paper §7 ran these in
 //! Torch on GPU — closed to us), and evaluation fallback.  The network is
 //! the paper's eq. (1): `f(a0; W) = W_L h(… h(W_1 a_0))` with no activation
-//! after the last layer, binary labels and the §6 separable hinge.
+//! after the last layer.  Everything loss-specific — batch loss, the
+//! per-entry output subgradient seeding backprop, and the accuracy metric —
+//! dispatches through the [`Problem`] the net was built with
+//! ([`Mlp::with_problem`]; [`Mlp::new`] defaults to the paper's §6 binary
+//! hinge and is bit-identical to the pre-`Problem` substrate).
 
 use crate::config::Activation;
 use crate::linalg::{gemm_nn_into, gemm_nt_into, gemm_tn_into, Matrix};
+use crate::problem::Problem;
 use crate::Result;
 
 /// Reusable forward/backward scratch for `Mlp::loss_grad_into` — hidden
@@ -33,19 +38,28 @@ impl MlpWorkspace {
     }
 }
 
-/// Network shape + activation (weights travel separately so optimizers can
-/// own them).
+/// Network shape + activation + problem (weights travel separately so
+/// optimizers can own them).
 #[derive(Clone, Debug)]
 pub struct Mlp {
     pub dims: Vec<usize>,
     pub act: Activation,
+    /// Loss/decoding kind; see [`crate::problem`].
+    pub problem: Problem,
 }
 
 impl Mlp {
+    /// Binary-hinge net (the paper's §6 loss) — see [`Mlp::with_problem`]
+    /// for the general constructor.
     pub fn new(dims: Vec<usize>, act: Activation) -> Result<Self> {
+        Self::with_problem(dims, act, Problem::BinaryHinge)
+    }
+
+    pub fn with_problem(dims: Vec<usize>, act: Activation, problem: Problem) -> Result<Self> {
         anyhow::ensure!(dims.len() >= 2, "need at least one layer");
         anyhow::ensure!(dims.iter().all(|&d| d > 0), "zero-width layer");
-        Ok(Mlp { dims, act })
+        problem.validate_dims(*dims.last().unwrap())?;
+        Ok(Mlp { dims, act, problem })
     }
 
     pub fn layers(&self) -> usize {
@@ -122,13 +136,14 @@ impl Mlp {
         &work.z
     }
 
-    /// Summed hinge loss over all samples (paper §6 form).
+    /// Summed loss over all samples (`y` must already be expanded to
+    /// `(d_L × n)`; see [`Problem::expand_labels`]).
     pub fn loss(&self, ws: &[Matrix], x: &Matrix, y: &Matrix) -> f64 {
         let z = self.forward(ws, x);
-        hinge_loss_sum(&z, y)
+        self.problem.loss_sum(&z, y)
     }
 
-    /// (summed hinge loss, per-layer weight gradients) via backprop
+    /// (summed loss, per-layer weight gradients) via backprop
     /// (allocating wrapper around `loss_grad_into`).
     pub fn loss_grad(&self, ws: &[Matrix], x: &Matrix, y: &Matrix) -> (f64, Vec<Matrix>) {
         let mut work = MlpWorkspace::default();
@@ -138,10 +153,10 @@ impl Mlp {
     }
 
     /// Backprop into caller-owned gradient buffers through a reusable
-    /// workspace — the baselines' zero-allocation hot path.
-    ///
-    /// Subgradient convention at the hinge kink: 0 (matches what jax's
-    /// `max(1−z, 0)` VJP produces, keeping native == artifact numerics).
+    /// workspace — the baselines' zero-allocation hot path.  Only the
+    /// output delta `∂ℓ/∂z_L` is loss-specific ([`Problem::subgrad`]; the
+    /// hinge kink convention is 0, matching jax's `max(1−z, 0)` VJP and
+    /// keeping native == artifact numerics).
     pub fn loss_grad_into(
         &self,
         ws: &[Matrix],
@@ -173,7 +188,7 @@ impl Mlp {
             let a_prev: &Matrix = if layers == 1 { x } else { &work.acts[layers - 2] };
             gemm_nn_into(&ws[layers - 1], a_prev, &mut work.z);
         }
-        let loss = hinge_loss_sum(&work.z, y);
+        let loss = self.problem.loss_sum(&work.z, y);
 
         // dL/dz_L, entry-wise.
         work.delta.resize(work.z.rows(), work.z.cols());
@@ -183,17 +198,7 @@ impl Mlp {
             .iter_mut()
             .zip(work.z.as_slice().iter().zip(y.as_slice()))
         {
-            *d = if yv > 0.5 {
-                if zv < 1.0 {
-                    -1.0
-                } else {
-                    0.0
-                }
-            } else if zv > 0.0 {
-                1.0
-            } else {
-                0.0
-            };
+            *d = self.problem.subgrad(zv, yv);
         }
 
         for l in (0..layers).rev() {
@@ -238,40 +243,18 @@ impl Mlp {
         loss
     }
 
-    /// (correct count, sample count) at the paper's 0.5 threshold.
+    /// (correct count, total count) under the problem's metric — 0.5
+    /// threshold per entry for binary hinge, tolerance band for least
+    /// squares, per-column argmax for multiclass.  `y` must be expanded.
     pub fn accuracy_counts(&self, ws: &[Matrix], x: &Matrix, y: &Matrix) -> (usize, usize) {
         let z = self.forward(ws, x);
-        let mut correct = 0usize;
-        for r in 0..z.rows() {
-            for c in 0..z.cols() {
-                let pred = z.at(r, c) >= 0.5;
-                if pred == (y.at(r, c) > 0.5) {
-                    correct += 1;
-                }
-            }
-        }
-        (correct, z.rows() * z.cols())
+        self.problem.accuracy_counts(&z, y)
     }
 
     pub fn accuracy(&self, ws: &[Matrix], x: &Matrix, y: &Matrix) -> f64 {
         let (c, n) = self.accuracy_counts(ws, x, y);
-        c as f64 / n as f64
+        c as f64 / n.max(1) as f64
     }
-}
-
-/// Σ of the paper's separable hinge: `max(1−z,0)` for y=1, `max(z,0)` for
-/// y=0.
-pub fn hinge_loss_sum(z: &Matrix, y: &Matrix) -> f64 {
-    assert_eq!(z.shape(), y.shape());
-    let mut s = 0.0f64;
-    for (zv, yv) in z.as_slice().iter().zip(y.as_slice()) {
-        s += if *yv > 0.5 {
-            (1.0 - zv).max(0.0) as f64
-        } else {
-            zv.max(0.0) as f64
-        };
-    }
-    s
 }
 
 #[cfg(test)]
@@ -302,14 +285,15 @@ mod tests {
         let z = Matrix::from_vec(1, 4, vec![2.0, 0.4, -1.0, 0.3]);
         let y = Matrix::from_vec(1, 4, vec![1.0, 1.0, 0.0, 0.0]);
         // y=1,z=2 -> 0 ; y=1,z=0.4 -> 0.6 ; y=0,z=-1 -> 0 ; y=0,z=0.3 -> 0.3
-        assert!((hinge_loss_sum(&z, &y) - 0.9).abs() < 1e-6);
+        assert!((Problem::BinaryHinge.loss_sum(&z, &y) - 0.9).abs() < 1e-6);
     }
 
     #[test]
     fn gradients_match_finite_differences() {
         forall("nn grad == fd", 10, |g| {
             let act = *g.pick(&[Activation::Relu, Activation::HardSigmoid]);
-            let mlp = Mlp::new(vec![3, 5, 2], act).unwrap();
+            let problem = *g.pick(&[Problem::BinaryHinge, Problem::LeastSquares]);
+            let mlp = Mlp::with_problem(vec![3, 5, 2], act, problem).unwrap();
             let mut rng = Rng::seed_from(g.case as u64 + 100);
             let ws = mlp.init_weights(&mut rng);
             let x = Matrix::randn(3, 12, &mut rng);
@@ -408,7 +392,56 @@ mod tests {
         // z = x; preds at 0.5: [1, 0, 1, 0] vs [1, 0, 1, 1] -> 3 of 4
         assert_eq!(mlp.accuracy_counts(&ws, &x, &y), (3, 4));
     }
+
+    #[test]
+    fn multiclass_gradient_descent_reduces_loss_and_learns_argmax() {
+        // 3-class one-vs-all hinge on separable blobs: plain GD on the
+        // problem's subgradients must reduce the loss and the argmax
+        // decode must track targets.
+        let problem = Problem::MulticlassHinge;
+        let mlp = Mlp::with_problem(vec![4, 8, 3], Activation::Relu, problem).unwrap();
+        let mut rng = Rng::seed_from(23);
+        let mut ws = mlp.init_weights(&mut rng);
+        let d = crate::data::multi_blobs(4, 3, 60, 3.0, 23);
+        let y = problem.expand_labels(&d.y, 3);
+        let l0 = mlp.loss(&ws, &d.x, &y);
+        for _ in 0..300 {
+            let (_, grads) = mlp.loss_grad(&ws, &d.x, &y);
+            for (w, gm) in ws.iter_mut().zip(&grads) {
+                w.axpy(-0.005, gm);
+            }
+        }
+        let l1 = mlp.loss(&ws, &d.x, &y);
+        assert!(l1 < l0 * 0.5, "multiclass loss did not decrease: {l0} -> {l1}");
+        let (c, t) = mlp.accuracy_counts(&ws, &d.x, &y);
+        assert_eq!(t, 60); // per-column metric
+        assert!(c as f64 / t as f64 > 0.8, "argmax accuracy {c}/{t}");
+    }
+
+    #[test]
+    fn least_squares_gradient_descent_fits_targets() {
+        let problem = Problem::LeastSquares;
+        let mlp = Mlp::with_problem(vec![3, 8, 1], Activation::Relu, problem).unwrap();
+        let mut rng = Rng::seed_from(29);
+        let mut ws = mlp.init_weights(&mut rng);
+        let x = Matrix::randn(3, 40, &mut rng);
+        // smooth (linear) target of the inputs — exactly representable
+        let y = Matrix::from_fn(1, 40, |_, c| {
+            0.5 * x.at(0, c) - 0.25 * x.at(1, c) + 0.1
+        });
+        let l0 = mlp.loss(&ws, &x, &y) / 40.0;
+        for _ in 0..600 {
+            let (_, grads) = mlp.loss_grad(&ws, &x, &y);
+            for (w, gm) in ws.iter_mut().zip(&grads) {
+                w.axpy(-0.004, gm);
+            }
+        }
+        let mse = mlp.loss(&ws, &x, &y) / 40.0;
+        assert!(mse < l0 * 0.2 && mse < 0.05, "regression did not fit: {l0} -> {mse}");
+        let (c, t) = mlp.accuracy_counts(&ws, &x, &y);
+        assert!(c as f64 / t as f64 > 0.9, "tolerance-band accuracy {c}/{t}");
+    }
 }
 
 pub mod io;
-pub use io::{load_model, save_model};
+pub use io::{deserialize_model, load_model, save_model, serialize_model};

@@ -1,0 +1,103 @@
+//! The paper's §6 separable hinge — the one definition in the crate.
+//!
+//! Both [`Problem::BinaryHinge`](super::Problem::BinaryHinge) and
+//! [`Problem::MulticlassHinge`](super::Problem::MulticlassHinge) dispatch
+//! here: one-vs-all multiclass hinge is exactly the binary hinge applied
+//! per output row against one-hot targets, so the scalar pieces are shared
+//! and there is exactly one hinge implementation (previously the loss
+//! lived in `nn::hinge_loss_sum` and `coordinator::updates::hinge`
+//! independently).
+//!
+//! Every function here is a verbatim relocation of the seed code — the
+//! `--loss hinge` path stays bit-identical to the pre-`Problem` trainer
+//! (pinned by `tests/problem_regression.rs`).
+
+/// Entry-wise hinge: `max(1−z, 0)` for y=1, `max(z, 0)` for y=0.
+#[inline(always)]
+pub fn loss(z: f32, y: f32) -> f32 {
+    if y > 0.5 {
+        (1.0 - z).max(0.0)
+    } else {
+        z.max(0.0)
+    }
+}
+
+/// Entry-wise subgradient of [`loss`] in `z`.
+///
+/// Convention at the kink: 0 (matches what jax's `max(1−z, 0)` VJP
+/// produces, keeping native == artifact numerics for the baselines).
+#[inline(always)]
+pub fn subgrad(z: f32, y: f32) -> f32 {
+    if y > 0.5 {
+        if z < 1.0 {
+            -1.0
+        } else {
+            0.0
+        }
+    } else if z > 0.0 {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Output-layer objective `ℓ(z,y) + λz + β(z−m)²` at one entry.
+#[inline(always)]
+fn zo_obj(z: f32, y: f32, lam: f32, beta: f32, m: f32) -> f32 {
+    loss(z, y) + lam * z + beta * (z - m) * (z - m)
+}
+
+/// Globally optimal scalar output-layer solve (paper §3, eq. 8):
+/// `argmin ℓ(z,y) + λz + β(z−m)²` (convex — two clamped candidates).
+#[inline(always)]
+pub fn z_out_scalar(y: f32, m: f32, lam: f32, beta: f32) -> f32 {
+    if y > 0.5 {
+        let c_hi = (m - lam / (2.0 * beta)).max(1.0);
+        let c_lo = (m + (1.0 - lam) / (2.0 * beta)).min(1.0);
+        if zo_obj(c_hi, y, lam, beta, m) <= zo_obj(c_lo, y, lam, beta, m) {
+            c_hi
+        } else {
+            c_lo
+        }
+    } else {
+        let c_hi = (m - (1.0 + lam) / (2.0 * beta)).max(0.0);
+        let c_lo = (m - lam / (2.0 * beta)).min(0.0);
+        if zo_obj(c_hi, y, lam, beta, m) <= zo_obj(c_lo, y, lam, beta, m) {
+            c_hi
+        } else {
+            c_lo
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn z_out_known_value() {
+        // y=1, m=0, λ=0, β=1 -> z = 0.5 (see python twin test).
+        assert!((z_out_scalar(1.0, 0.0, 0.0, 1.0) - 0.5).abs() < 1e-6);
+        // y=0, m=-2: hinge inactive, z stays at m.
+        assert!((z_out_scalar(0.0, -2.0, 0.0, 1.0) + 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn loss_known_values() {
+        // y=1,z=2 -> 0 ; y=1,z=0.4 -> 0.6 ; y=0,z=-1 -> 0 ; y=0,z=0.3 -> 0.3
+        assert_eq!(loss(2.0, 1.0), 0.0);
+        assert!((loss(0.4, 1.0) - 0.6).abs() < 1e-6);
+        assert_eq!(loss(-1.0, 0.0), 0.0);
+        assert!((loss(0.3, 0.0) - 0.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn subgrad_signs_and_kinks() {
+        assert_eq!(subgrad(0.2, 1.0), -1.0);
+        assert_eq!(subgrad(1.0, 1.0), 0.0); // kink convention: 0
+        assert_eq!(subgrad(1.5, 1.0), 0.0);
+        assert_eq!(subgrad(0.5, 0.0), 1.0);
+        assert_eq!(subgrad(0.0, 0.0), 0.0); // kink convention: 0
+        assert_eq!(subgrad(-0.5, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,64 @@
+//! Least-squares regression loss: `ℓ(z, y) = (z − y)²`.
+//!
+//! The output z-update is the one place the ADMM trainer touches the loss
+//! (paper §3, eq. 8) and for squared error it is exact and division-cheap:
+//!
+//! ```text
+//! argmin_z (z − y)² + λz + β(z − m)²
+//!   ⇒ 2(z − y) + λ + 2β(z − m) = 0
+//!   ⇒ z* = (y + βm − λ/2) / (1 + β)
+//! ```
+//!
+//! — the same closed-form family AA-DLADMM (Ebrahimi et al. 2024) and the
+//! feed-forward ADMM analysis (Alavi Foumani 2020) swap into the identical
+//! ADMM skeleton.
+
+/// Regression "accuracy" band: a prediction counts as correct when it is
+/// within ±`TOL` of the target.  Keeps the trainer's accuracy telemetry,
+/// `--target-acc` stopping and the grid-search harness meaningful for
+/// regression runs (the synthetic regression task's noise floor is well
+/// inside this band).
+pub const TOL: f32 = 0.5;
+
+/// Entry-wise squared error.
+#[inline(always)]
+pub fn loss(z: f32, y: f32) -> f32 {
+    let d = z - y;
+    d * d
+}
+
+/// Entry-wise gradient of [`loss`] in `z`.
+#[inline(always)]
+pub fn subgrad(z: f32, y: f32) -> f32 {
+    2.0 * (z - y)
+}
+
+/// Exact scalar output-layer solve: `argmin (z−y)² + λz + β(z−m)²`.
+#[inline(always)]
+pub fn z_out_scalar(y: f32, m: f32, lam: f32, beta: f32) -> f32 {
+    (y + beta * m - 0.5 * lam) / (1.0 + beta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn z_out_stationarity() {
+        // The closed form must zero the derivative of the objective.
+        for &(y, m, lam, beta) in
+            &[(0.7f32, -1.2f32, 0.3f32, 1.0f32), (-2.0, 0.5, -0.8, 4.0), (1.0, 1.0, 0.0, 0.25)]
+        {
+            let z = z_out_scalar(y, m, lam, beta);
+            let d = 2.0 * (z - y) + lam + 2.0 * beta * (z - m);
+            assert!(d.abs() < 1e-5, "y={y} m={m} λ={lam} β={beta}: d={d}");
+        }
+    }
+
+    #[test]
+    fn loss_and_grad_match() {
+        assert_eq!(loss(3.0, 1.0), 4.0);
+        assert_eq!(subgrad(3.0, 1.0), 4.0);
+        assert_eq!(subgrad(1.0, 1.0), 0.0);
+    }
+}

@@ -23,6 +23,7 @@ use std::time::{Duration, Instant};
 use crate::config::Activation;
 use crate::linalg::Matrix;
 use crate::nn::{Mlp, MlpWorkspace};
+use crate::problem::Problem;
 use crate::Result;
 
 /// Index of the maximum score (ties break low — deterministic).
@@ -48,16 +49,23 @@ pub struct BatchEngine {
 
 impl BatchEngine {
     /// Build from a checkpoint-shaped weight ensemble (dims are derived
-    /// from the weight shapes, as `gradfree predict` does).
-    pub fn new(ws: Vec<Matrix>, act: Activation) -> Result<Self> {
+    /// from the weight shapes, as `gradfree predict` does).  The
+    /// `problem` — recorded in `GFADMM02` checkpoints — selects the
+    /// decoded `pred` each reply carries.
+    pub fn new(ws: Vec<Matrix>, act: Activation, problem: Problem) -> Result<Self> {
         anyhow::ensure!(!ws.is_empty(), "empty weight ensemble");
         let mut dims = vec![ws[0].cols()];
         for w in &ws {
             dims.push(w.rows());
         }
-        let mlp = Mlp::new(dims, act)?;
+        let mlp = Mlp::with_problem(dims, act, problem)?;
         mlp.check_weights(&ws)?;
         Ok(BatchEngine { mlp, ws, work: MlpWorkspace::default(), x: Matrix::default() })
+    }
+
+    /// The problem kind the engine decodes with.
+    pub fn problem(&self) -> Problem {
+        self.mlp.problem
     }
 
     /// Model input dimension (request `x` length).
@@ -116,9 +124,11 @@ pub struct BatchJob {
     pub reply: Sender<BatchReply>,
 }
 
-/// The batcher's answer to one job.
+/// The batcher's answer to one job.  `pred` is the problem-decoded
+/// prediction destined for the wire (`None` for binary hinge, whose
+/// responses keep the legacy field set).
 pub enum BatchReply {
-    Ok { id: u64, y: Vec<f32>, argmax: usize },
+    Ok { id: u64, y: Vec<f32>, argmax: usize, pred: Option<f32> },
     Err { id: u64, msg: String },
 }
 
@@ -223,9 +233,10 @@ fn batch_loop(
             if job.x.len() == features {
                 engine.col_into(j, &mut ybuf);
                 let am = argmax(&ybuf);
+                let pred = engine.problem().wire_pred(&ybuf);
                 let _ = job
                     .reply
-                    .send(BatchReply::Ok { id: job.id, y: ybuf.clone(), argmax: am });
+                    .send(BatchReply::Ok { id: job.id, y: ybuf.clone(), argmax: am, pred });
                 j += 1;
             } else {
                 let msg = format!(
@@ -248,7 +259,12 @@ mod tests {
         let mut rng = Rng::seed_from(11);
         let ws = mlp.init_weights(&mut rng);
         let x = Matrix::randn(5, 12, &mut rng);
-        (BatchEngine::new(ws.clone(), Activation::Relu).unwrap(), mlp, ws, x)
+        (
+            BatchEngine::new(ws.clone(), Activation::Relu, Problem::BinaryHinge).unwrap(),
+            mlp,
+            ws,
+            x,
+        )
     }
 
     fn col(x: &Matrix, c: usize) -> Vec<f32> {
@@ -289,7 +305,22 @@ mod tests {
 
     #[test]
     fn engine_rejects_bad_weights() {
-        assert!(BatchEngine::new(vec![], Activation::Relu).is_err());
+        assert!(BatchEngine::new(vec![], Activation::Relu, Problem::BinaryHinge).is_err());
+    }
+
+    #[test]
+    fn engine_decodes_per_problem() {
+        let mlp = Mlp::new(vec![3, 4, 2], Activation::Relu).unwrap();
+        let mut rng = Rng::seed_from(13);
+        let ws = mlp.init_weights(&mut rng);
+        let x: Vec<f32> = vec![0.3, -0.8, 1.1];
+        let mut y = Vec::new();
+        for p in Problem::ALL {
+            let mut eng = BatchEngine::new(ws.clone(), Activation::Relu, p).unwrap();
+            assert_eq!(eng.problem(), p);
+            eng.predict_into(&x, &mut y);
+            assert_eq!(eng.problem().wire_pred(&y), p.wire_pred(&y));
+        }
     }
 
     #[test]
@@ -307,11 +338,12 @@ mod tests {
         tx.send(BatchJob { id: 99, x: vec![1.0; 3], reply: rtx.clone() }).unwrap();
         for c in 0..x.cols() {
             match rrx.recv().unwrap() {
-                BatchReply::Ok { id, y, argmax: am } => {
+                BatchReply::Ok { id, y, argmax: am, pred } => {
                     assert_eq!(id, c as u64);
                     let want_col: Vec<f32> = (0..want.rows()).map(|r| want.at(r, c)).collect();
                     assert_eq!(y, want_col);
                     assert_eq!(am, argmax(&want_col));
+                    assert_eq!(pred, None); // binary hinge keeps the legacy wire
                 }
                 BatchReply::Err { .. } => panic!("unexpected error for job {c}"),
             }
@@ -341,5 +373,36 @@ mod tests {
             }
             BatchReply::Err { msg, .. } => panic!("{msg}"),
         }
+    }
+
+    #[test]
+    fn batcher_carries_problem_pred_through_replies() {
+        // A multiclass engine's replies must carry the argmax decode.
+        let mlp = Mlp::with_problem(vec![4, 5, 3], Activation::Relu, Problem::MulticlassHinge)
+            .unwrap();
+        let mut rng = Rng::seed_from(15);
+        let ws = mlp.init_weights(&mut rng);
+        let x = Matrix::randn(4, 6, &mut rng);
+        let want = mlp.forward(&ws, &x);
+        let eng = BatchEngine::new(ws, Activation::Relu, Problem::MulticlassHinge).unwrap();
+        let batcher = Batcher::start(eng, 4, Duration::from_millis(5));
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        let tx = batcher.submitter();
+        for c in 0..x.cols() {
+            tx.send(BatchJob { id: c as u64, x: col(&x, c), reply: rtx.clone() }).unwrap();
+        }
+        for c in 0..x.cols() {
+            match rrx.recv().unwrap() {
+                BatchReply::Ok { id, y, pred, .. } => {
+                    assert_eq!(id, c as u64);
+                    let want_col: Vec<f32> = (0..3).map(|r| want.at(r, c)).collect();
+                    assert_eq!(y, want_col);
+                    assert_eq!(pred, Some(argmax(&want_col) as f32));
+                }
+                BatchReply::Err { msg, .. } => panic!("{msg}"),
+            }
+        }
+        drop(tx);
+        drop(batcher);
     }
 }

@@ -46,15 +46,20 @@
 //! ```text
 //! → {"id": 7, "x": [0.1, -2.5, …]}           x.len() == model input dim
 //! ← {"argmax": 0, "id": 7, "y": [1.25]}      y = raw output scores z_L
+//! ← {"argmax": 1, "id": 7, "pred": 1, "y": [-0.2, 1.4]}   non-hinge models
 //! ← {"error": "…", "id": 7}                  malformed request / bad shape
 //! ```
 //!
 //! `id` is an opaque non-negative integer echoed back so pipelining clients
-//! can match responses; `argmax` is the row index of the max score (the
-//! predicted class for one-hot heads; for the paper's 1-output binary nets
-//! compare `y[0]` against the 0.5 threshold instead).  Checkpoints use the
-//! self-describing `GFADMM01` binary format documented in `nn/io.rs` and
-//! EXPERIMENTS.md §Serving.
+//! can match responses; `argmax` is the row index of the max score.
+//! `pred` is the server-side problem decode (`Problem::wire_pred` — the
+//! regression value for `l2` checkpoints, the predicted class for
+//! `multihinge`); binary-hinge responses omit it, keeping their wire
+//! format byte-identical to the pre-`Problem` protocol (clients compare
+//! `y[0]` against the 0.5 threshold, i.e. `Problem::decode`).  Checkpoints
+//! use the self-describing `GFADMM02` binary format (problem-kind-aware;
+//! legacy `GFADMM01` files load as binary hinge) documented in `nn/io.rs`
+//! and EXPERIMENTS.md §Serving.
 //!
 //! # Quickstart
 //!

@@ -26,12 +26,21 @@ pub struct Request {
     pub x: Vec<f32>,
 }
 
-/// A parsed predict response: `{"argmax": K, "id": N, "y": [..]}`.
+/// A parsed predict response:
+/// `{"argmax": K, "id": N, "pred": P, "y": [..]}`.
+///
+/// `pred` is the server-side decoded prediction
+/// (`Problem::wire_pred`): the regression value for `l2` models, the
+/// predicted class for `multihinge`.  Binary-hinge responses omit it —
+/// their wire format predates the `Problem` API and stays byte-identical
+/// (clients decode `y[0]` against the 0.5 threshold via
+/// `Problem::decode`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Response {
     pub id: u64,
     pub y: Vec<f32>,
     pub argmax: usize,
+    pub pred: Option<f32>,
 }
 
 fn id_of(v: &Json) -> Result<u64> {
@@ -67,11 +76,16 @@ pub fn request_line(id: u64, x: &[f32]) -> String {
     Json::Obj(m).to_string_compact()
 }
 
-/// Serialize one success response line (no trailing newline).
-pub fn response_line(id: u64, y: &[f32], argmax: usize) -> String {
+/// Serialize one success response line (no trailing newline).  `pred` is
+/// the problem-decoded prediction; `None` (every binary-hinge response)
+/// emits the legacy field set unchanged.
+pub fn response_line(id: u64, y: &[f32], argmax: usize, pred: Option<f32>) -> String {
     let mut m = BTreeMap::new();
     m.insert("argmax".to_string(), Json::Num(argmax as f64));
     m.insert("id".to_string(), Json::Num(id as f64));
+    if let Some(p) = pred {
+        m.insert("pred".to_string(), Json::Num(p as f64));
+    }
     m.insert(
         "y".to_string(),
         Json::Arr(y.iter().map(|&v| Json::Num(v as f64)).collect()),
@@ -110,7 +124,12 @@ pub fn parse_response(line: &str) -> Result<Response> {
         .collect::<Result<Vec<f32>>>()?;
     let argmax = v.field("argmax")?.as_usize()?;
     anyhow::ensure!(argmax < y.len(), "argmax {argmax} out of range for {} scores", y.len());
-    Ok(Response { id, y, argmax })
+    let pred = match v.get("pred") {
+        None => None,
+        Some(Json::Null) => Some(f32::NAN), // non-finite pred, like y
+        Some(p) => Some(p.as_f64()? as f32),
+    };
+    Ok(Response { id, y, argmax, pred })
 }
 
 #[cfg(test)]
@@ -127,10 +146,43 @@ mod tests {
 
     #[test]
     fn response_roundtrip() {
-        let line = response_line(7, &[0.125, 2.5], 1);
+        // pred: None — the binary-hinge wire format, byte-identical to the
+        // pre-`Problem` protocol (pinned again in problem_regression.rs).
+        let line = response_line(7, &[0.125, 2.5], 1, None);
         assert_eq!(line, r#"{"argmax":1,"id":7,"y":[0.125,2.5]}"#);
         let r = parse_response(&line).unwrap();
-        assert_eq!(r, Response { id: 7, y: vec![0.125, 2.5], argmax: 1 });
+        assert_eq!(r, Response { id: 7, y: vec![0.125, 2.5], argmax: 1, pred: None });
+    }
+
+    #[test]
+    fn response_pred_roundtrips_for_every_problem_kind() {
+        use crate::problem::Problem;
+        let scores = [0.75f32, -0.25, 1.5];
+        for p in Problem::ALL {
+            let pred = p.wire_pred(&scores);
+            let line = response_line(3, &scores, 2, pred);
+            let r = parse_response(&line).unwrap();
+            // the wire pred survives bit-exactly...
+            match (pred, r.pred) {
+                (None, None) => assert_eq!(p, Problem::BinaryHinge),
+                (Some(a), Some(b)) => assert_eq!(a.to_bits(), b.to_bits()),
+                other => panic!("{}: pred mismatch {other:?}", p.name()),
+            }
+            // ...and the client can re-derive the decode from the scores
+            assert_eq!(
+                p.decode(&r.y).to_bits(),
+                p.decode(&scores).to_bits(),
+                "{}: decode drifted across the wire",
+                p.name()
+            );
+        }
+        // explicit wire shapes
+        assert_eq!(
+            response_line(3, &[1.5], 0, Some(1.5)),
+            r#"{"argmax":0,"id":3,"pred":1.5,"y":[1.5]}"#
+        );
+        let r = parse_response(r#"{"argmax":0,"id":3,"pred":null,"y":[1]}"#).unwrap();
+        assert!(r.pred.unwrap().is_nan());
     }
 
     #[test]
@@ -172,7 +224,7 @@ mod tests {
     fn non_finite_scores_survive_as_nan() {
         // A model with non-finite scores must still produce a response the
         // bundled client can read (nulls come back as NaN).
-        let line = response_line(1, &[f32::INFINITY, 0.5, f32::NAN], 1);
+        let line = response_line(1, &[f32::INFINITY, 0.5, f32::NAN], 1, None);
         assert_eq!(line, r#"{"argmax":1,"id":1,"y":[null,0.5,null]}"#);
         let r = parse_response(&line).unwrap();
         assert!(r.y[0].is_nan() && r.y[2].is_nan());

@@ -33,6 +33,7 @@ use super::batcher::{BatchEngine, BatchJob, BatchReply, Batcher};
 use super::protocol;
 use crate::config::{Activation, ServeConfig};
 use crate::linalg::Matrix;
+use crate::problem::Problem;
 use crate::Result;
 
 /// A running inference server; shuts down gracefully on `shutdown` / Drop.
@@ -45,11 +46,18 @@ pub struct Server {
 
 impl Server {
     /// Bind and start serving a weight ensemble (e.g. from
-    /// `nn::load_model`).  Returns once the listener is live; with
-    /// `cfg.port == 0` the bound ephemeral port is in `addr()`.
-    pub fn start(cfg: &ServeConfig, ws: Vec<Matrix>, act: Activation) -> Result<Server> {
+    /// `nn::load_model`, whose `GFADMM02` checkpoints carry the
+    /// `problem`; `ServeConfig::problem` can override it).  Returns once
+    /// the listener is live; with `cfg.port == 0` the bound ephemeral
+    /// port is in `addr()`.
+    pub fn start(
+        cfg: &ServeConfig,
+        ws: Vec<Matrix>,
+        act: Activation,
+        problem: Problem,
+    ) -> Result<Server> {
         cfg.validate()?;
-        let engine = BatchEngine::new(ws, act)?;
+        let engine = BatchEngine::new(ws, act, cfg.problem.unwrap_or(problem))?;
         let batcher =
             Batcher::start(engine, cfg.max_batch, Duration::from_micros(cfg.max_wait_us));
         let listener = TcpListener::bind(cfg.addr())
@@ -221,8 +229,9 @@ fn handle_conn(
                     writer.write_all(b"\n")?;
                 }
                 Pending::Submitted => match rrx.recv() {
-                    Ok(BatchReply::Ok { id, y, argmax }) => {
-                        writer.write_all(protocol::response_line(id, &y, argmax).as_bytes())?;
+                    Ok(BatchReply::Ok { id, y, argmax, pred }) => {
+                        writer
+                            .write_all(protocol::response_line(id, &y, argmax, pred).as_bytes())?;
                         writer.write_all(b"\n")?;
                     }
                     Ok(BatchReply::Err { id, msg }) => {

@@ -63,6 +63,7 @@ use gradfree_admm::config::Activation;
 use gradfree_admm::coordinator::updates::{self, Workspace};
 use gradfree_admm::linalg::{a_update_inverse, par, Matrix};
 use gradfree_admm::nn::{Mlp, MlpWorkspace};
+use gradfree_admm::problem::Problem;
 use gradfree_admm::rng::Rng;
 
 /// The worker-side state of one rank for a [7, 6, 5, 1] net: shard data,
@@ -83,6 +84,7 @@ struct WorkerSim {
     gamma: f32,
     beta: f32,
     act: Activation,
+    problem: Problem,
 }
 
 impl WorkerSim {
@@ -111,6 +113,7 @@ impl WorkerSim {
             gamma,
             beta,
             act: Activation::Relu,
+            problem: Problem::BinaryHinge,
         }
     }
 
@@ -160,7 +163,8 @@ impl WorkerSim {
             } else {
                 let a_prev = &self.acts[1];
                 par::gemm_nn_into(&self.ws[2], a_prev, &mut self.scratch.m, t);
-                updates::z_out_into(&self.y, &self.scratch.m, &self.lam, self.beta, &mut self.zs[2]);
+                self.problem
+                    .z_out_into(&self.y, &self.scratch.m, &self.lam, self.beta, &mut self.zs[2]);
                 updates::lambda_update(&mut self.lam, &self.zs[2], &self.scratch.m, self.beta);
             }
         }
@@ -207,7 +211,8 @@ fn steady_state_hot_loops_allocate_nothing() {
     // gather → forward → scatter compute cycle.
     let max_batch = 16usize;
     let mut engine =
-        gradfree_admm::serve::BatchEngine::new(ws.clone(), Activation::Relu).unwrap();
+        gradfree_admm::serve::BatchEngine::new(ws.clone(), Activation::Relu, Problem::BinaryHinge)
+            .unwrap();
     // Pre-extract request feature vectors (the batcher receives them as
     // owned Vecs from the protocol layer).
     let reqs: Vec<Vec<f32>> = (0..max_batch)

@@ -8,8 +8,9 @@ use gradfree_admm::baselines::{
 };
 use gradfree_admm::config::{Activation, TrainConfig};
 use gradfree_admm::coordinator::{AdmmTrainer, WorkerPool};
-use gradfree_admm::data::{blobs, higgs_like, Dataset, Normalizer};
+use gradfree_admm::data::{blobs, higgs_like, synth_regression, Dataset, Normalizer};
 use gradfree_admm::nn::Mlp;
+use gradfree_admm::problem::Problem;
 use gradfree_admm::rng::Rng;
 
 fn normalized(mut train: Dataset, mut test: Dataset) -> (Dataset, Dataset) {
@@ -50,6 +51,35 @@ fn pool_objective_equals_local() {
     let cfg = TrainConfig {
         dims: vec![5, 4, 1],
         workers: 3,
+        ..TrainConfig::default()
+    };
+    let pool = WorkerPool::new(&cfg, &train.x, &train.y).unwrap();
+    let mut pobj = PoolObjective { pool: &pool, n: train.samples() };
+    let (loss_pool, grads_pool) = pobj.loss_grad(&ws).unwrap();
+
+    let mut lobj = LocalObjective { mlp: &mlp, x: &train.x, y: &train.y };
+    let (loss_local, grads_local) = lobj.loss_grad(&ws).unwrap();
+
+    assert!((loss_pool - loss_local).abs() < 1e-3 * (1.0 + loss_local.abs()));
+    for (gp, gl) in grads_pool.iter().zip(&grads_local) {
+        assert!(gp.allclose(gl, 1e-3, 1e-3), "grad diff {}", gp.max_abs_diff(gl));
+    }
+}
+
+#[test]
+fn pool_objective_equals_local_for_least_squares() {
+    // The data-parallel worker pool must differentiate the SAME problem
+    // the local objective does — the `Problem` threads through the
+    // backend recipe, not just the local Mlp.
+    let (train, _) = normalized(synth_regression(5, 400, 0.1, 81), synth_regression(5, 100, 0.1, 82));
+    let mlp = Mlp::with_problem(vec![5, 4, 1], Activation::Relu, Problem::LeastSquares).unwrap();
+    let mut rng = Rng::seed_from(19);
+    let ws = mlp.init_weights(&mut rng);
+
+    let cfg = TrainConfig {
+        dims: vec![5, 4, 1],
+        workers: 3,
+        problem: Problem::LeastSquares,
         ..TrainConfig::default()
     };
     let pool = WorkerPool::new(&cfg, &train.x, &train.y).unwrap();

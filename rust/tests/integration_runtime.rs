@@ -12,6 +12,7 @@ use gradfree_admm::coordinator::{AdmmTrainer, PjrtBackend};
 use gradfree_admm::data::{blobs, Normalizer};
 use gradfree_admm::linalg::{a_update_inverse, gemm_nn, Matrix};
 use gradfree_admm::nn::Mlp;
+use gradfree_admm::problem::Problem;
 use gradfree_admm::rng::Rng;
 use gradfree_admm::runtime::Manifest;
 
@@ -125,7 +126,9 @@ fn z_out_and_lambda_match_native() {
 
     let (z_p, m_p) = b.z_out(&w, &a_prev, &y, &lam).unwrap();
     let m_n = gemm_nn(&w, &a_prev);
-    let z_n = updates::z_out(&y, &m_n, &lam, BETA);
+    // the artifacts bake the binary hinge — the native oracle is the
+    // BinaryHinge arm of the Problem API
+    let z_n = Problem::BinaryHinge.z_out(&y, &m_n, &lam, BETA);
     assert!(m_p.allclose(&m_n, 1e-4, 1e-4));
     assert!(z_p.allclose(&z_n, 1e-4, 1e-4), "z diff {}", z_p.max_abs_diff(&z_n));
 

@@ -1,13 +1,15 @@
 //! End-to-end serve test: ADMM-train a tiny model, round-trip it through a
-//! `GFADMM01` checkpoint, serve it on an ephemeral port, and verify that
+//! `GFADMM02` checkpoint, serve it on an ephemeral port, and verify that
 //! concurrent network predictions — singleton and pipelined-batch — are
-//! bit-identical to the library forward pass.
+//! bit-identical to the library forward pass; plus train → checkpoint →
+//! serve → decode round trips for every problem kind.
 
 use gradfree_admm::config::{Activation, Backend, MultiplierMode, ServeConfig, TrainConfig};
 use gradfree_admm::coordinator::AdmmTrainer;
-use gradfree_admm::data::{blobs, Normalizer};
+use gradfree_admm::data::{blobs, multi_blobs, synth_regression, Normalizer};
 use gradfree_admm::linalg::Matrix;
 use gradfree_admm::nn::{load_model, save_model, Mlp};
+use gradfree_admm::problem::Problem;
 use gradfree_admm::serve::{argmax, Client, Server};
 
 /// Loopback TCP is a hard prerequisite; in a sandbox that forbids
@@ -33,6 +35,7 @@ fn trained_model() -> (Vec<Matrix>, Activation, Matrix) {
         name: "serve-itest".into(),
         dims: vec![6, 5, 1],
         act: Activation::Relu,
+        problem: Problem::BinaryHinge,
         beta: 1.0,
         gamma: 1.0,
         warmup_iters: 2,
@@ -59,7 +62,14 @@ fn col(x: &Matrix, c: usize) -> Vec<f32> {
 }
 
 fn serve_cfg(max_batch: usize, max_wait_us: u64, threads: usize) -> ServeConfig {
-    ServeConfig { host: "127.0.0.1".into(), port: 0, threads, max_batch, max_wait_us }
+    ServeConfig {
+        host: "127.0.0.1".into(),
+        port: 0,
+        threads,
+        max_batch,
+        max_wait_us,
+        problem: None,
+    }
 }
 
 #[test]
@@ -71,15 +81,16 @@ fn served_predictions_match_library_forward_bitwise() {
     // Checkpoint round trip on the way in (the `gradfree serve` path).
     let path = std::env::temp_dir().join(format!("gfadmm_serve_itest_{}.gfadmm", std::process::id()));
     let path = path.to_str().unwrap().to_string();
-    save_model(&path, &ws, act).unwrap();
-    let (ws2, act2) = load_model(&path).unwrap();
+    save_model(&path, &ws, act, Problem::BinaryHinge).unwrap();
+    let (ws2, act2, problem2) = load_model(&path).unwrap();
     let _ = std::fs::remove_file(&path);
     assert_eq!(act2, act);
+    assert_eq!(problem2, Problem::BinaryHinge);
 
     let mlp = Mlp::new(vec![6, 5, 1], act).unwrap();
     let want = mlp.forward(&ws2, &x);
 
-    let server = Server::start(&serve_cfg(8, 300, 4), ws2, act2).unwrap();
+    let server = Server::start(&serve_cfg(8, 300, 4), ws2, act2, problem2).unwrap();
     let addr = server.addr();
 
     // Concurrent clients: 3 singleton-request threads over disjoint column
@@ -125,7 +136,7 @@ fn server_handles_malformed_and_shape_errors_then_recovers() {
     let (ws, act, x) = trained_model();
     let mlp = Mlp::new(vec![6, 5, 1], act).unwrap();
     let want = mlp.forward(&ws, &x);
-    let server = Server::start(&serve_cfg(4, 100, 2), ws, act).unwrap();
+    let server = Server::start(&serve_cfg(4, 100, 2), ws, act, Problem::BinaryHinge).unwrap();
 
     // Malformed JSON over a raw socket → error response, and the very same
     // connection keeps speaking the protocol afterwards.
@@ -165,7 +176,9 @@ fn multi_output_argmax_over_network() {
     let ws = mlp.init_weights(&mut rng);
     let x = Matrix::randn(4, 20, &mut rng);
     let want = mlp.forward(&ws, &x);
-    let server = Server::start(&serve_cfg(8, 100, 2), ws, Activation::HardSigmoid).unwrap();
+    let server =
+        Server::start(&serve_cfg(8, 100, 2), ws, Activation::HardSigmoid, Problem::BinaryHinge)
+            .unwrap();
     let mut client = Client::connect(server.addr()).unwrap();
     for c in 0..x.cols() {
         let resp = client.predict(&col(&x, c)).unwrap();
@@ -174,9 +187,110 @@ fn multi_output_argmax_over_network() {
             assert_eq!(a.to_bits(), b.to_bits(), "column {c}");
         }
         assert_eq!(resp.argmax, argmax(&want_col), "column {c}");
+        assert_eq!(resp.pred, None, "hinge responses carry no pred field");
     }
     drop(client);
     server.shutdown();
+}
+
+/// Acceptance e2e for the `Problem` redesign: `--loss l2` and `--loss
+/// multihinge` both run train → GFADMM02 checkpoint → serve, the
+/// checkpoint round-trips the problem kind, and network responses carry a
+/// `pred` that matches the problem's library-side decode bit-for-bit.
+#[test]
+fn l2_and_multihinge_train_checkpoint_serve_roundtrip() {
+    if !loopback_available() {
+        return;
+    }
+    struct Case {
+        problem: Problem,
+        dims: Vec<usize>,
+        train: gradfree_admm::data::Dataset,
+        test: gradfree_admm::data::Dataset,
+        min_acc: f64,
+    }
+    let (l2_train, l2_test) = synth_regression(6, 2300, 0.1, 61).split_test(300);
+    let (mc_train, mc_test) = multi_blobs(6, 3, 2300, 3.0, 62).split_test(300);
+    let cases = [
+        Case {
+            problem: Problem::LeastSquares,
+            dims: vec![6, 16, 1],
+            train: l2_train,
+            test: l2_test,
+            // a constant-zero predictor scores ~0.3 on the ±0.5 band;
+            // clearing 0.6 requires actually fitting the sinusoid
+            min_acc: 0.6,
+        },
+        Case {
+            problem: Problem::MulticlassHinge,
+            dims: vec![6, 10, 3],
+            train: mc_train,
+            test: mc_test,
+            // chance is ~0.33 on 3 balanced classes
+            min_acc: 0.8,
+        },
+    ];
+    for case in cases {
+        let (mut train, mut test) = (case.train, case.test);
+        let norm = Normalizer::fit(&train.x);
+        norm.apply(&mut train.x);
+        norm.apply(&mut test.x);
+        let cfg = TrainConfig {
+            name: format!("serve-{}-itest", case.problem.name()),
+            dims: case.dims.clone(),
+            problem: case.problem,
+            gamma: 1.0,
+            warmup_iters: 4,
+            iters: 40,
+            workers: 2,
+            eval_every: 5,
+            seed: 9,
+            backend: Backend::Native,
+            ..TrainConfig::default()
+        };
+        let mut trainer = AdmmTrainer::new(cfg, &train, &test).unwrap();
+        let out = trainer.train().unwrap();
+        assert!(
+            out.recorder.best_accuracy() > case.min_acc,
+            "{}: ADMM did not converge: acc={}",
+            case.problem.name(),
+            out.recorder.best_accuracy()
+        );
+
+        // checkpoint round trip keeps the problem kind
+        let path = std::env::temp_dir().join(format!(
+            "gfadmm_{}_{}.gfadmm",
+            case.problem.name(),
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        save_model(&path, &out.weights, Activation::Relu, case.problem).unwrap();
+        let (ws2, act2, problem2) = load_model(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(problem2, case.problem);
+
+        // serve it; responses must decode exactly as the library does
+        let mlp = Mlp::with_problem(case.dims.clone(), act2, problem2).unwrap();
+        let want = mlp.forward(&ws2, &test.x);
+        let server = Server::start(&serve_cfg(8, 200, 2), ws2, act2, problem2).unwrap();
+        let mut client = Client::connect(server.addr()).unwrap();
+        for c in 0..16 {
+            let resp = client.predict(&col(&test.x, c)).unwrap();
+            let want_col: Vec<f32> = (0..want.rows()).map(|r| want.at(r, c)).collect();
+            for (a, b) in resp.y.iter().zip(&want_col) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{} column {c}", case.problem.name());
+            }
+            let pred = resp.pred.expect("non-hinge responses carry pred");
+            assert_eq!(
+                pred.to_bits(),
+                case.problem.decode(&want_col).to_bits(),
+                "{} column {c}: wire pred != library decode",
+                case.problem.name()
+            );
+        }
+        drop(client);
+        server.shutdown();
+    }
 }
 
 #[test]
@@ -187,7 +301,8 @@ fn graceful_shutdown_closes_the_port() {
     let mut rng = gradfree_admm::rng::Rng::seed_from(5);
     let mlp = Mlp::new(vec![3, 2], Activation::Relu).unwrap();
     let ws = mlp.init_weights(&mut rng);
-    let server = Server::start(&serve_cfg(2, 50, 2), ws, Activation::Relu).unwrap();
+    let server =
+        Server::start(&serve_cfg(2, 50, 2), ws, Activation::Relu, Problem::BinaryHinge).unwrap();
     let addr = server.addr();
     // Live: a client can connect and round-trip.
     let mut client = Client::connect(addr).unwrap();

@@ -1,0 +1,277 @@
+//! `--loss hinge` bit-identity regression pin for the `Problem` redesign.
+//!
+//! Before the `Problem` API, the binary hinge was hard-coded across
+//! `coordinator::updates` (output z-update), `nn` (loss, backprop seed,
+//! accuracy), the trainer (label replication) and the serve protocol.
+//! This suite keeps VERBATIM copies of those seed implementations and
+//! asserts the `Problem::BinaryHinge` arms reproduce them **bit for bit**
+//! over randomized inputs, plus an end-to-end ADMM run proving the
+//! refactor left the training trajectory untouched.  Any numeric drift in
+//! the hinge path — reordered arithmetic, changed tie-breaks, a different
+//! accumulation width — fails here.
+//!
+//! The `GFADMM01` → `GFADMM02` checkpoint bump is pinned too: a
+//! hand-assembled legacy v1 file must still load (defaulting to binary
+//! hinge) and byte-layout drift in v2 is caught by a golden header.
+
+use gradfree_admm::config::{Activation, TrainConfig};
+use gradfree_admm::coordinator::AdmmTrainer;
+use gradfree_admm::data::{blobs, Normalizer};
+use gradfree_admm::linalg::Matrix;
+use gradfree_admm::nn::io::serialize_model_v1_for_tests;
+use gradfree_admm::nn::{deserialize_model, Mlp};
+use gradfree_admm::problem::Problem;
+use gradfree_admm::prop::forall;
+use gradfree_admm::serve::response_line;
+
+// ---- verbatim seed implementations (DO NOT "fix" these) ---------------
+
+/// Seed `coordinator::updates::hinge`.
+fn legacy_hinge(z: f32, y: f32) -> f32 {
+    if y > 0.5 {
+        (1.0 - z).max(0.0)
+    } else {
+        z.max(0.0)
+    }
+}
+
+/// Seed `coordinator::updates::zo_obj`.
+fn legacy_zo_obj(z: f32, y: f32, lam: f32, beta: f32, m: f32) -> f32 {
+    legacy_hinge(z, y) + lam * z + beta * (z - m) * (z - m)
+}
+
+/// Seed `coordinator::updates::z_out_scalar`.
+fn legacy_z_out_scalar(y: f32, m: f32, lam: f32, beta: f32) -> f32 {
+    if y > 0.5 {
+        let c_hi = (m - lam / (2.0 * beta)).max(1.0);
+        let c_lo = (m + (1.0 - lam) / (2.0 * beta)).min(1.0);
+        if legacy_zo_obj(c_hi, y, lam, beta, m) <= legacy_zo_obj(c_lo, y, lam, beta, m) {
+            c_hi
+        } else {
+            c_lo
+        }
+    } else {
+        let c_hi = (m - (1.0 + lam) / (2.0 * beta)).max(0.0);
+        let c_lo = (m - lam / (2.0 * beta)).min(0.0);
+        if legacy_zo_obj(c_hi, y, lam, beta, m) <= legacy_zo_obj(c_lo, y, lam, beta, m) {
+            c_hi
+        } else {
+            c_lo
+        }
+    }
+}
+
+/// Seed `nn::hinge_loss_sum`.
+fn legacy_hinge_loss_sum(z: &Matrix, y: &Matrix) -> f64 {
+    assert_eq!(z.shape(), y.shape());
+    let mut s = 0.0f64;
+    for (zv, yv) in z.as_slice().iter().zip(y.as_slice()) {
+        s += if *yv > 0.5 {
+            (1.0 - zv).max(0.0) as f64
+        } else {
+            zv.max(0.0) as f64
+        };
+    }
+    s
+}
+
+/// Seed backprop output delta from `nn::Mlp::loss_grad_into`.
+fn legacy_delta(zv: f32, yv: f32) -> f32 {
+    if yv > 0.5 {
+        if zv < 1.0 {
+            -1.0
+        } else {
+            0.0
+        }
+    } else if zv > 0.0 {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Seed `nn::Mlp::accuracy_counts` body.
+fn legacy_accuracy_counts(z: &Matrix, y: &Matrix) -> (usize, usize) {
+    let mut correct = 0usize;
+    for r in 0..z.rows() {
+        for c in 0..z.cols() {
+            let pred = z.at(r, c) >= 0.5;
+            if pred == (y.at(r, c) > 0.5) {
+                correct += 1;
+            }
+        }
+    }
+    (correct, z.rows() * z.cols())
+}
+
+/// Seed `coordinator::trainer::expand_labels`.
+fn legacy_expand_labels(y: &Matrix, rows: usize) -> Matrix {
+    assert_eq!(y.rows(), 1, "labels must be a row vector");
+    if rows == 1 {
+        return y.clone();
+    }
+    Matrix::from_fn(rows, y.cols(), |_, c| y.at(0, c))
+}
+
+// ---- scalar/panel bit-identity ----------------------------------------
+
+#[test]
+fn hinge_z_out_bitwise_matches_seed() {
+    let p = Problem::BinaryHinge;
+    forall("hinge z_out bit-identical", 400, |g| {
+        let beta = g.f32_in(0.05, 12.0);
+        let y = if g.bool() { 1.0 } else { 0.0 };
+        let m = g.f32_in(-6.0, 6.0);
+        let lam = g.f32_in(-3.0, 3.0);
+        let got = p.z_out_scalar(y, m, lam, beta);
+        let want = legacy_z_out_scalar(y, m, lam, beta);
+        if got.to_bits() == want.to_bits() {
+            Ok(())
+        } else {
+            Err(format!("y={y} m={m} λ={lam} β={beta}: {got} vs {want}"))
+        }
+    });
+}
+
+#[test]
+fn hinge_panel_ops_bitwise_match_seed() {
+    forall("hinge panel ops bit-identical", 30, |g| {
+        let rows = g.usize_in(1, 4);
+        let cols = g.usize_in(1, 24);
+        let z = g.matrix(rows, cols, 2.0);
+        let m = g.matrix(rows, cols, 2.0);
+        let lam = g.matrix(rows, cols, 1.0);
+        let y = Matrix::from_fn(rows, cols, |_, c| (c % 2) as f32);
+        let beta = g.f32_in(0.1, 8.0);
+        let p = Problem::BinaryHinge;
+
+        // z_out panel
+        let got = p.z_out(&y, &m, &lam, beta);
+        for i in 0..got.len() {
+            let want = legacy_z_out_scalar(
+                y.as_slice()[i],
+                m.as_slice()[i],
+                lam.as_slice()[i],
+                beta,
+            );
+            if got.as_slice()[i].to_bits() != want.to_bits() {
+                return Err(format!("z_out entry {i} drifted"));
+            }
+        }
+        // loss sum (f64 accumulation order included)
+        let got_loss = p.loss_sum(&z, &y);
+        let want_loss = legacy_hinge_loss_sum(&z, &y);
+        if got_loss.to_bits() != want_loss.to_bits() {
+            return Err(format!("loss_sum drifted: {got_loss} vs {want_loss}"));
+        }
+        // backprop seed
+        for i in 0..z.len() {
+            let (zv, yv) = (z.as_slice()[i], y.as_slice()[i]);
+            if p.subgrad(zv, yv).to_bits() != legacy_delta(zv, yv).to_bits() {
+                return Err(format!("subgrad drifted at z={zv} y={yv}"));
+            }
+        }
+        // accuracy metric
+        if p.accuracy_counts(&z, &y) != legacy_accuracy_counts(&z, &y) {
+            return Err("accuracy_counts drifted".into());
+        }
+        // label expansion
+        let raw = Matrix::from_fn(1, cols, |_, c| (c % 2) as f32);
+        let got_e = p.expand_labels(&raw, rows);
+        let want_e = legacy_expand_labels(&raw, rows);
+        if got_e.as_slice() != want_e.as_slice() || got_e.shape() != want_e.shape() {
+            return Err("expand_labels drifted".into());
+        }
+        Ok(())
+    });
+}
+
+// ---- end-to-end: the ADMM trajectory itself ---------------------------
+
+/// The default config IS `--loss hinge`: training through the `Problem`
+/// path must produce exactly the state the legacy formulas predict —
+/// verified end-to-end by recomputing eval from the returned weights with
+/// the verbatim legacy eval and comparing to the recorded curve.
+#[test]
+fn hinge_training_end_to_end_matches_legacy_eval() {
+    let (mut train, mut test) = blobs(6, 1200, 2.5, 77).split_test(200);
+    let norm = Normalizer::fit(&train.x);
+    norm.apply(&mut train.x);
+    norm.apply(&mut test.x);
+    let cfg = TrainConfig {
+        dims: vec![6, 5, 1],
+        gamma: 1.0,
+        iters: 12,
+        warmup_iters: 3,
+        workers: 2,
+        seed: 21,
+        eval_every: 1,
+        ..TrainConfig::default()
+    };
+    assert_eq!(cfg.problem, Problem::BinaryHinge, "default loss must stay hinge");
+    let mut trainer = AdmmTrainer::new(cfg, &train, &test).unwrap();
+    let out = trainer.train().unwrap();
+
+    // Recompute the final test accuracy with the seed formulas only.
+    let mlp = Mlp::new(vec![6, 5, 1], Activation::Relu).unwrap();
+    let z = mlp.forward(&out.weights, &test.x);
+    let (correct, total) = legacy_accuracy_counts(&z, &legacy_expand_labels(&test.y, 1));
+    let legacy_acc = correct as f64 / total as f64;
+    let recorded = out.recorder.points.last().unwrap().test_acc;
+    assert_eq!(
+        recorded.to_bits(),
+        legacy_acc.to_bits(),
+        "recorded accuracy {recorded} != legacy recomputation {legacy_acc}"
+    );
+    // And the recorded train loss is the legacy mean hinge of the final
+    // weights over the training set (eval runs after the sweep).
+    let y_train = legacy_expand_labels(&train.y, 1);
+    let z_train = mlp.forward(&out.weights, &train.x);
+    let legacy_mean = legacy_hinge_loss_sum(&z_train, &y_train) / y_train.len() as f64;
+    let recorded_loss = out.recorder.points.last().unwrap().train_loss;
+    assert!(
+        (recorded_loss - legacy_mean).abs() < 1e-9 * (1.0 + legacy_mean.abs()),
+        "train loss drifted: {recorded_loss} vs {legacy_mean}"
+    );
+}
+
+// ---- wire + checkpoint back-compat ------------------------------------
+
+#[test]
+fn hinge_serve_wire_format_is_byte_stable() {
+    // The exact pre-`Problem` response line (no `pred` field).
+    let line = response_line(7, &[0.125, 2.5], 1, Problem::BinaryHinge.wire_pred(&[0.125, 2.5]));
+    assert_eq!(line, r#"{"argmax":1,"id":7,"y":[0.125,2.5]}"#);
+}
+
+#[test]
+fn gfadmm01_checkpoints_still_load() {
+    let mut rng = gradfree_admm::rng::Rng::seed_from(31);
+    let ws = vec![Matrix::randn(5, 6, &mut rng), Matrix::randn(1, 5, &mut rng)];
+    let v1 = serialize_model_v1_for_tests(&ws, Activation::Relu);
+    // golden v1 header: magic + act byte + layer count
+    assert_eq!(&v1[..8], b"GFADMM01");
+    assert_eq!(v1[8], 0);
+    assert_eq!(&v1[9..13], &2u32.to_le_bytes());
+    let (ws2, act2, problem2) = deserialize_model(&v1).unwrap();
+    assert_eq!(act2, Activation::Relu);
+    assert_eq!(problem2, Problem::BinaryHinge, "v1 files default to binary hinge");
+    for (a, b) in ws.iter().zip(&ws2) {
+        let ba: Vec<u32> = a.as_slice().iter().map(|v| v.to_bits()).collect();
+        let bb: Vec<u32> = b.as_slice().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ba, bb);
+    }
+}
+
+#[test]
+fn gfadmm02_header_layout_is_pinned() {
+    let ws = vec![Matrix::from_vec(1, 2, vec![1.5, -2.0])];
+    let bytes =
+        gradfree_admm::nn::serialize_model(&ws, Activation::HardSigmoid, Problem::LeastSquares);
+    assert_eq!(&bytes[..8], b"GFADMM02");
+    assert_eq!(bytes[8], 1); // hardsig
+    assert_eq!(bytes[9], 1); // l2
+    assert_eq!(&bytes[10..14], &1u32.to_le_bytes()); // one layer
+    assert_eq!(&bytes[14..18], &1u32.to_le_bytes()); // rows
+    assert_eq!(&bytes[18..22], &2u32.to_le_bytes()); // cols
+}
