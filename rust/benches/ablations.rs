@@ -137,7 +137,10 @@ struct ProblemRow {
     opt_seconds: f64,
     iters_per_sec: f64,
     final_objective: f64,
-    best_acc: f64,
+    /// Name of the headline metric (`accuracy` | `mse`) …
+    metric: &'static str,
+    /// … and its best recorded value under that metric's direction.
+    best_metric: f64,
 }
 
 /// One small ADMM run per `Problem` on its first-class synthetic task,
@@ -149,7 +152,10 @@ fn problems_sweep(args: &Args) -> gradfree_admm::Result<()> {
     let n: usize = args.parsed_or("problem-samples", 4_000)?;
     let n_test = n / 5;
     println!("\nF. problem kinds (n={n})\n");
-    println!("{:12} {:>9} {:>12} {:>14} {:>9}", "loss", "iters/s", "opt_s", "final_obj", "best");
+    println!(
+        "{:12} {:>9} {:>12} {:>14} {:>9}",
+        "loss", "iters/s", "opt_s", "final_obj", "best_metric"
+    );
 
     let mut rows: Vec<ProblemRow> = Vec::new();
     for problem in Problem::ALL {
@@ -196,12 +202,13 @@ fn problems_sweep(args: &Args) -> gradfree_admm::Result<()> {
             .unwrap_or(f64::NAN);
         let iters_per_sec = out.stats.iters_run as f64 / out.stats.opt_seconds.max(1e-12);
         println!(
-            "{:12} {:>9.2} {:>12.4} {:>14.6} {:>9.4}",
+            "{:12} {:>9.2} {:>12.4} {:>14.6} {:>9.4} ({})",
             problem.name(),
             iters_per_sec,
             out.stats.opt_seconds,
             final_objective,
-            out.recorder.best_accuracy()
+            out.recorder.best_metric(),
+            out.recorder.metric_name
         );
         rows.push(ProblemRow {
             loss: problem.name(),
@@ -210,7 +217,8 @@ fn problems_sweep(args: &Args) -> gradfree_admm::Result<()> {
             opt_seconds: out.stats.opt_seconds,
             iters_per_sec,
             final_objective,
-            best_acc: out.recorder.best_accuracy(),
+            metric: out.recorder.metric_name,
+            best_metric: out.recorder.best_metric(),
         });
     }
     let path = write_bench_problems_json(n, &rows)?;
@@ -222,7 +230,9 @@ fn write_bench_problems_json(n: usize, rows: &[ProblemRow]) -> gradfree_admm::Re
     use std::fmt::Write as _;
     let mut out = String::new();
     out.push_str("{\n");
-    let _ = writeln!(out, "  \"schema\": 1,");
+    // schema 2: the hard-coded "best_acc" field became a named metric
+    // ("metric" + "best_metric") so regression rows report MSE honestly.
+    let _ = writeln!(out, "  \"schema\": 2,");
     let _ = writeln!(out, "  \"samples\": {n},");
     out.push_str("  \"problems\": [\n");
     for (i, r) in rows.iter().enumerate() {
@@ -231,14 +241,15 @@ fn write_bench_problems_json(n: usize, rows: &[ProblemRow]) -> gradfree_admm::Re
             out,
             "    {{\"loss\": \"{}\", \"dims\": [{}], \"iters\": {}, \
              \"opt_seconds\": {:.6e}, \"iters_per_sec\": {:.3}, \
-             \"final_objective\": {:.6e}, \"best_acc\": {:.4}}}",
+             \"final_objective\": {:.6e}, \"metric\": \"{}\", \"best_metric\": {:.4}}}",
             r.loss,
             dims.join(", "),
             r.iters,
             r.opt_seconds,
             r.iters_per_sec,
             r.final_objective,
-            r.best_acc
+            r.metric,
+            r.best_metric
         );
         out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
     }

@@ -115,7 +115,7 @@ fn main() -> gradfree_admm::Result<()> {
             rows.push(line.to_string());
         }
     }
-    let path = write_csv("fig2b.csv", "label,iter,wall_s,train_loss,test_acc,penalty", &rows)?;
+    let path = write_csv("fig2b.csv", "label,iter,wall_s,train_loss,accuracy,penalty", &rows)?;
     println!("written: {path}");
     Ok(())
 }

@@ -16,7 +16,7 @@
 
 use gradfree_admm::bench::{time_fn, write_csv};
 use gradfree_admm::cli::Args;
-use gradfree_admm::cluster::CommWorld;
+use gradfree_admm::cluster::Collectives;
 use gradfree_admm::config::Activation;
 use gradfree_admm::coordinator::updates;
 use gradfree_admm::linalg::{
@@ -293,16 +293,18 @@ fn main() -> gradfree_admm::Result<()> {
             let _ = mlp.loss_grad_into(&ws, &a0, &y, &mut work, &mut grads);
         },
     );
-    // collective (4 ranks, gram-pair sized buffer)
+    // collective (4 ranks, gram-pair sized buffer, recycled local slots).
+    // The world lives OUTSIDE the timer so the measured path is the
+    // steady state (warmed reduction slots), not world construction;
+    // time_fn's warmup round sizes the slots.
     {
-        let world = CommWorld::new(4);
+        let mut worlds = Collectives::local_world(4);
         let r = time_fn("allreduce 4 ranks, 648x648 f32", 1, 5, || {
             std::thread::scope(|s| {
-                for rank in 0..4 {
-                    let w = world.clone();
+                for w in worlds.iter_mut() {
                     s.spawn(move || {
                         let mut m = Matrix::zeros(648, 648);
-                        w.allreduce_sum(rank, &mut m);
+                        w.allreduce_sum(&mut m).unwrap();
                     });
                 }
             });

@@ -3,9 +3,10 @@
 //!
 //! The paper executed these via the Torch `optim` package on a Tesla K40;
 //! here they run on the same MLP substrate as everything else — either a
-//! thread-local objective or the data-parallel worker pool (full-batch
-//! methods split gradient computation across ranks exactly like the batch
-//! methods the paper cites: Ngiam et al. 2011).  The loss is whatever
+//! thread-local objective or the data-parallel sharded oracle
+//! ([`crate::coordinator::ShardedObjective`]; full-batch methods split
+//! gradient computation across ranks exactly like the batch methods the
+//! paper cites: Ngiam et al. 2011).  The loss is whatever
 //! `Problem` the `Mlp` carries: the optimizers only see `loss_grad`, so
 //! hinge, least-squares and multiclass runs share every line of optimizer
 //! code.  Objectives take **expanded** `(d_L × n)` label panels
@@ -22,7 +23,7 @@ pub use lbfgs::train_lbfgs;
 pub use sgd::{train_sgd, SgdOpts};
 
 use crate::config::Activation;
-use crate::coordinator::WorkerPool;
+use crate::coordinator::ShardedObjective;
 use crate::data::Dataset;
 use crate::linalg::Matrix;
 use crate::metrics::{CurvePoint, Recorder, Stopwatch};
@@ -54,20 +55,17 @@ impl Objective for LocalObjective<'_> {
     }
 }
 
-/// Data-parallel objective over the ADMM worker pool (reuses the same
-/// sharded ranks — and, on the PJRT backend, the `loss_grad` artifact).
-pub struct PoolObjective<'a> {
-    pub pool: &'a WorkerPool,
-    pub n: usize,
-}
-
-impl Objective for PoolObjective<'_> {
+/// The data-parallel SPMD oracle plugs straight into the optimizer loop
+/// (rank-order fold, bit-identical to the single-threaded objective up
+/// to the shard summation order — and, on the PJRT backend, it runs the
+/// `loss_grad` artifact per rank).
+impl Objective for ShardedObjective {
     fn loss_grad(&mut self, ws: &[Matrix]) -> Result<(f64, Vec<Matrix>)> {
-        self.pool.loss_grad(ws)
+        ShardedObjective::loss_grad(self, ws)
     }
 
     fn samples(&self) -> usize {
-        self.n
+        ShardedObjective::samples(self)
     }
 }
 
@@ -91,7 +89,8 @@ impl<'a> EvalHarness<'a> {
             mlp,
             test,
             test_y,
-            recorder: Recorder::new(label),
+            recorder: Recorder::new(label)
+                .with_metric(mlp.problem.metric_name(), mlp.problem.metric_higher_is_better()),
             sw_opt: 0.0,
             target_acc: None,
             reached: None,
@@ -99,18 +98,19 @@ impl<'a> EvalHarness<'a> {
     }
 
     /// Record a point (outside the optimization clock). Returns `true` when
-    /// the target accuracy has been met and the caller should stop.
+    /// the target metric has been met (direction per the problem: accuracy
+    /// up, MSE down) and the caller should stop.
     pub fn record(&mut self, iter: usize, ws: &[Matrix], train_loss: f64) -> bool {
-        let acc = self.mlp.accuracy(ws, &self.test.x, &self.test_y);
+        let metric = self.mlp.metric(ws, &self.test.x, &self.test_y);
         self.recorder.push(CurvePoint {
             iter,
             wall_s: self.sw_opt,
             train_loss,
-            test_acc: acc,
+            test_acc: metric,
             penalty: f64::NAN,
         });
         if let Some(t) = self.target_acc {
-            if acc >= t {
+            if self.recorder.meets_target(metric, t) {
                 if self.reached.is_none() {
                     self.reached = Some((iter, self.sw_opt));
                 }
@@ -138,7 +138,8 @@ pub struct BaselineOutcome {
 
 /// Grid-search driver: runs `train` for every parameter combination and
 /// returns the outcome with the best (earliest time-to-target, else best
-/// final accuracy) — the paper's "thorough hyperparameter grid search".
+/// final metric under the run's metric direction) — the paper's
+/// "thorough hyperparameter grid search".
 pub fn grid_search<P: Clone>(
     params: &[P],
     mut train: impl FnMut(&P) -> Result<BaselineOutcome>,
@@ -153,7 +154,14 @@ pub fn grid_search<P: Clone>(
                 (Some((_, t_new)), Some((_, t_old))) => t_new < t_old,
                 (Some(_), None) => true,
                 (None, Some(_)) => false,
-                (None, None) => out.recorder.best_accuracy() > b.recorder.best_accuracy(),
+                (None, None) => {
+                    let (new_m, old_m) = (out.recorder.best_metric(), b.recorder.best_metric());
+                    if out.recorder.higher_is_better {
+                        new_m > old_m
+                    } else {
+                        new_m < old_m
+                    }
+                }
             },
         };
         if better {

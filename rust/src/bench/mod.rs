@@ -3,6 +3,8 @@
 //! helpers every figure bench uses.  Benches are `harness = false` binaries
 //! under `rust/benches/`; outputs land in `bench_out/`.
 
+pub mod scaling;
+
 use std::time::Instant;
 
 use crate::metrics::{summarize, Summary};

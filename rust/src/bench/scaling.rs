@@ -1,0 +1,253 @@
+//! Strong-scaling measurement over the SPMD `Collectives` transports →
+//! `bench_out/BENCH_SCALING.json`.
+//!
+//! For each world size the run measures iters/sec and the `CommStats`
+//! bytes that actually crossed the transport, and **asserts** the
+//! measured per-iteration matrix traffic equals the closed-form
+//! `TrainStats` formulas (`allreduce_bytes_per_iter` /
+//! `broadcast_bytes_per_iter`) — the measured counters are the source of
+//! truth the formulas and the α–β cost model are checked against.  A
+//! loopback TCP point runs the same config as genuinely socket-separated
+//! ranks and must produce byte-identical weights to the equal-size local
+//! world.
+//!
+//! `benches/scaling.rs` runs this at bench scale; a small tier-1 smoke
+//! (`tests/transport_equivalence.rs`) runs it at test scale so the JSON
+//! artifact always exists after `cargo test`.
+
+use std::fmt::Write as _;
+use std::net::TcpListener;
+
+use crate::cluster::{Collectives, TcpComm};
+use crate::config::{TrainConfig, Transport};
+use crate::coordinator::{spmd, AdmmTrainer, TrainOutcome};
+use crate::data::{blobs, Normalizer};
+use crate::linalg::Matrix;
+use crate::Result;
+
+/// What to measure.
+#[derive(Clone, Debug)]
+pub struct ScalingSpec {
+    pub samples: usize,
+    pub test_samples: usize,
+    pub dims: Vec<usize>,
+    pub iters: usize,
+    /// Thread-backed world sizes to sweep.
+    pub local_worlds: Vec<usize>,
+    /// Optional loopback TCP world size (skipped when loopback is
+    /// unavailable); its weights are checked bit-identical against the
+    /// equal-size local world when that size is also swept.
+    pub tcp_world: Option<usize>,
+    pub seed: u64,
+}
+
+impl Default for ScalingSpec {
+    fn default() -> Self {
+        ScalingSpec {
+            samples: 4_000,
+            test_samples: 800,
+            dims: vec![16, 12, 1],
+            iters: 20,
+            local_worlds: vec![1, 2, 4, 8],
+            tcp_world: Some(2),
+            seed: 7,
+        }
+    }
+}
+
+/// One measured point.
+#[derive(Clone, Debug)]
+pub struct ScalingRow {
+    pub transport: &'static str,
+    pub world: usize,
+    pub opt_seconds: f64,
+    pub iters_per_sec: f64,
+    pub allreduce_bytes_measured: u64,
+    pub broadcast_bytes_measured: u64,
+    pub scalar_bytes_measured: u64,
+    pub allreduce_bytes_formula: u64,
+    pub broadcast_bytes_formula: u64,
+}
+
+fn base_cfg(spec: &ScalingSpec) -> TrainConfig {
+    TrainConfig {
+        name: "scaling".into(),
+        dims: spec.dims.clone(),
+        gamma: 1.0,
+        iters: spec.iters,
+        warmup_iters: (spec.iters / 4).max(1),
+        eval_every: spec.iters.max(1),
+        seed: spec.seed,
+        ..TrainConfig::default()
+    }
+}
+
+fn row_from_outcome(
+    transport: &'static str,
+    world: usize,
+    out: &TrainOutcome,
+    iters: usize,
+) -> Result<ScalingRow> {
+    let row = ScalingRow {
+        transport,
+        world,
+        opt_seconds: out.stats.opt_seconds,
+        iters_per_sec: out.stats.iters_run as f64 / out.stats.opt_seconds.max(1e-12),
+        allreduce_bytes_measured: out.stats.allreduce_bytes_measured,
+        broadcast_bytes_measured: out.stats.broadcast_bytes_measured,
+        scalar_bytes_measured: out.stats.scalar_bytes_measured,
+        allreduce_bytes_formula: (iters * out.stats.allreduce_bytes_per_iter) as u64,
+        broadcast_bytes_formula: (iters * out.stats.broadcast_bytes_per_iter) as u64,
+    };
+    anyhow::ensure!(
+        row.allreduce_bytes_measured == row.allreduce_bytes_formula,
+        "{transport} world {world}: measured allreduce bytes {} != formula {}",
+        row.allreduce_bytes_measured,
+        row.allreduce_bytes_formula
+    );
+    anyhow::ensure!(
+        row.broadcast_bytes_measured == row.broadcast_bytes_formula,
+        "{transport} world {world}: measured broadcast bytes {} != formula {}",
+        row.broadcast_bytes_measured,
+        row.broadcast_bytes_formula
+    );
+    Ok(row)
+}
+
+/// Run the sweep and write `bench_out/BENCH_SCALING.json`.  Returns the
+/// rows and the output path.
+pub fn run_scaling(spec: &ScalingSpec) -> Result<(Vec<ScalingRow>, String)> {
+    let d = blobs(spec.dims[0], spec.samples + spec.test_samples, 2.5, spec.seed);
+    let (mut train, mut test) = d.split_test(spec.test_samples);
+    let norm = Normalizer::fit(&train.x);
+    norm.apply(&mut train.x);
+    norm.apply(&mut test.x);
+
+    let mut rows = Vec::new();
+    let mut weights_by_world: Vec<(usize, Vec<Matrix>)> = Vec::new();
+    for &w in &spec.local_worlds {
+        let mut cfg = base_cfg(spec);
+        cfg.workers = w;
+        let mut trainer = AdmmTrainer::new(cfg, &train, &test)?;
+        let out = trainer.train()?;
+        rows.push(row_from_outcome("local", w, &out, spec.iters)?);
+        weights_by_world.push((w, out.weights));
+    }
+
+    if let Some(tw) = spec.tcp_world {
+        match loopback_listener() {
+            Some(listener) => {
+                let out = run_tcp_loopback(spec, &train, &test, tw, listener)?;
+                rows.push(row_from_outcome("tcp", tw, &out, spec.iters)?);
+                if let Some((_, local_ws)) = weights_by_world.iter().find(|(w, _)| *w == tw) {
+                    for (a, b) in local_ws.iter().zip(&out.weights) {
+                        anyhow::ensure!(
+                            a.as_slice() == b.as_slice(),
+                            "tcp world {tw} weights diverged from the equal-size local world"
+                        );
+                    }
+                }
+            }
+            None => eprintln!("loopback unavailable; skipping the tcp scaling point"),
+        }
+    }
+
+    let path = write_json(spec, &rows)?;
+    Ok((rows, path))
+}
+
+fn loopback_listener() -> Option<TcpListener> {
+    TcpListener::bind("127.0.0.1:0").ok()
+}
+
+/// Train a TCP world of `world` in-process ranks over loopback sockets
+/// (the transport is real; only the process boundary is simulated — the
+/// subprocess e2e lives in `tests/transport_equivalence.rs`).
+fn run_tcp_loopback(
+    spec: &ScalingSpec,
+    train: &crate::data::Dataset,
+    test: &crate::data::Dataset,
+    world: usize,
+    listener: TcpListener,
+) -> Result<TrainOutcome> {
+    let addr = listener.local_addr()?.to_string();
+    let mut cfg = base_cfg(spec);
+    cfg.transport = Transport::Tcp;
+    cfg.world_size = world;
+    cfg.peers = vec![addr.clone()];
+    let fp = cfg.spmd_fingerprint();
+    let opts = spmd::SpmdOpts::default();
+    let cfg = &cfg;
+    let (addr, opts) = (&addr, &opts);
+    let results: Vec<Result<TrainOutcome>> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        handles.push(s.spawn(move || {
+            let mut comm = Collectives::Tcp(TcpComm::hub(listener, world, fp)?);
+            let res = spmd::train_rank(cfg, &mut comm, train, test, opts);
+            if res.is_err() {
+                comm.abort();
+            }
+            res
+        }));
+        for rank in 1..world {
+            handles.push(s.spawn(move || {
+                let mut comm = Collectives::Tcp(TcpComm::leaf(addr, rank, world, fp)?);
+                let res = spmd::train_rank(cfg, &mut comm, train, test, opts);
+                if res.is_err() {
+                    comm.abort();
+                }
+                res
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(r) => r,
+                Err(_) => Err(anyhow::anyhow!("tcp rank thread panicked")),
+            })
+            .collect()
+    });
+    let mut it = results.into_iter();
+    let rank0 = it.next().expect("world >= 1")?;
+    for r in it {
+        r?;
+    }
+    Ok(rank0)
+}
+
+fn write_json(spec: &ScalingSpec, rows: &[ScalingRow]) -> Result<String> {
+    let mut out = String::new();
+    out.push_str("{\n  \"schema\": 1,\n");
+    let dims: Vec<String> = spec.dims.iter().map(|d| d.to_string()).collect();
+    let _ = writeln!(out, "  \"samples\": {},", spec.samples);
+    let _ = writeln!(out, "  \"dims\": [{}],", dims.join(", "));
+    let _ = writeln!(out, "  \"iters\": {},", spec.iters);
+    let _ = writeln!(out, "  \"traffic_matches_formula\": true,");
+    out.push_str("  \"points\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"transport\": \"{}\", \"world\": {}, \"opt_seconds\": {:.6e}, \
+             \"iters_per_sec\": {:.3}, \
+             \"allreduce_bytes_measured\": {}, \"allreduce_bytes_formula\": {}, \
+             \"broadcast_bytes_measured\": {}, \"broadcast_bytes_formula\": {}, \
+             \"scalar_bytes_measured\": {}}}",
+            r.transport,
+            r.world,
+            r.opt_seconds,
+            r.iters_per_sec,
+            r.allreduce_bytes_measured,
+            r.allreduce_bytes_formula,
+            r.broadcast_bytes_measured,
+            r.broadcast_bytes_formula,
+            r.scalar_bytes_measured
+        );
+        out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    let dir = std::path::Path::new("bench_out");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("BENCH_SCALING.json");
+    std::fs::write(&path, out)?;
+    Ok(path.display().to_string())
+}

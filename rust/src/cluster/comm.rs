@@ -1,145 +1,379 @@
-//! Thread-backed collectives with deterministic reduction order.
+//! The `Collectives` transport — the communication substrate of the
+//! rank-symmetric SPMD training core.
 //!
-//! Every rank deposits its contribution into a per-rank slot, all ranks
-//! meet at a barrier, then every rank folds the slots **in rank order** —
-//! floating-point summation order is therefore independent of thread
-//! scheduling AND of how the trainer overlaps phases, which makes training
-//! runs bit-reproducible for a fixed worker count.  Traffic is counted so
-//! the cost model can price it.
+//! Every rank runs the whole of Algorithm 1 and meets its peers only
+//! through this API (paper §5: the Gram allreduce is the *only* inter-rank
+//! communication of the method; weight/inverse broadcasts and the scalar
+//! eval/penalty reductions are the bookkeeping around it).  Two transports
+//! sit behind one enum, following the codebase's enum-over-trait-object
+//! idiom (cf. `coordinator::backend::BackendKind`):
+//!
+//! * [`LocalComm`] — thread-backed ranks inside one process.  Each rank
+//!   deposits into a **pre-sized recycled per-rank slot** and folds the
+//!   slots in place **in rank order**, so steady-state collectives perform
+//!   zero heap allocation (pinned by `tests/alloc_regression.rs`) and
+//!   results are bit-reproducible for a fixed world size regardless of
+//!   thread scheduling.
+//! * [`TcpComm`](super::TcpComm) — genuinely separate processes over
+//!   length-prefixed frames on `std::net` (see `cluster/tcp.rs`).  The hub
+//!   folds contributions in the same rank order, so TCP results are
+//!   **bit-identical** to `Local` at any world size (pinned by
+//!   `tests/transport_equivalence.rs`).
+//!
+//! Traffic is counted per logical collective (once per call, by rank 0 /
+//! the hub) in [`CommStats`]; those measured bytes are the source of truth
+//! the `TrainStats` per-iteration formulas and the α–β cost model are
+//! checked against (`benches/scaling.rs`).
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Barrier, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 use crate::linalg::Matrix;
+use crate::Result;
 
-/// Cumulative traffic counters (bytes that would cross the network).
+/// Cumulative traffic counters (bytes that would cross / did cross the
+/// network), counted once per logical collective.  Matrix collectives
+/// count `len × 4` bytes; scalar reductions count `len × 8` and are kept
+/// in their own bucket so the per-iteration Gram/weight formulas can be
+/// checked against `allreduce_bytes`/`broadcast_bytes` exactly.
 #[derive(Debug, Default)]
 pub struct CommStats {
     pub allreduce_bytes: AtomicU64,
     pub broadcast_bytes: AtomicU64,
+    pub scalar_bytes: AtomicU64,
     pub allreduce_calls: AtomicU64,
     pub broadcast_calls: AtomicU64,
+    pub scalar_calls: AtomicU64,
 }
 
 impl CommStats {
     pub fn total_bytes(&self) -> u64 {
         self.allreduce_bytes.load(Ordering::Relaxed)
             + self.broadcast_bytes.load(Ordering::Relaxed)
+            + self.scalar_bytes.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn count_allreduce(&self, floats: usize) {
+        self.allreduce_bytes.fetch_add((floats * 4) as u64, Ordering::Relaxed);
+        self.allreduce_calls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn count_broadcast(&self, floats: usize) {
+        self.broadcast_bytes.fetch_add((floats * 4) as u64, Ordering::Relaxed);
+        self.broadcast_calls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn count_scalars(&self, doubles: usize) {
+        self.scalar_bytes.fetch_add((doubles * 8) as u64, Ordering::Relaxed);
+        self.scalar_calls.fetch_add(1, Ordering::Relaxed);
     }
 }
 
-struct Inner {
-    barrier: Barrier,
-    slots: Mutex<Vec<Option<Matrix>>>,
-    stats: CommStats,
+/// The pluggable transport every rank synchronizes through.  All
+/// collectives are synchronous and must be entered by every rank in the
+/// same program order, like their MPI namesakes.
+pub enum Collectives {
+    Local(LocalComm),
+    Tcp(super::TcpComm),
 }
 
-/// A communicator over `n_ranks` participant threads (clone one handle per
-/// rank).  All collectives are synchronous and must be entered by every
-/// rank, like their MPI namesakes.
-#[derive(Clone)]
-pub struct CommWorld {
-    n_ranks: usize,
-    inner: Arc<Inner>,
-}
+impl Collectives {
+    /// One in-process world of `n` thread-backed ranks: handle `i` is
+    /// rank `i`.  This is what `--transport local` / `--workers N` runs.
+    pub fn local_world(n: usize) -> Vec<Collectives> {
+        LocalComm::world(n).into_iter().map(Collectives::Local).collect()
+    }
 
-impl CommWorld {
-    pub fn new(n_ranks: usize) -> Self {
-        assert!(n_ranks > 0);
-        CommWorld {
-            n_ranks,
-            inner: Arc::new(Inner {
-                barrier: Barrier::new(n_ranks),
-                slots: Mutex::new(vec![None; n_ranks]),
-                stats: CommStats::default(),
-            }),
+    pub fn rank(&self) -> usize {
+        match self {
+            Collectives::Local(c) => c.rank,
+            Collectives::Tcp(c) => c.rank(),
         }
     }
 
-    pub fn n_ranks(&self) -> usize {
-        self.n_ranks
+    pub fn world_size(&self) -> usize {
+        match self {
+            Collectives::Local(c) => c.world,
+            Collectives::Tcp(c) => c.world_size(),
+        }
     }
 
     pub fn stats(&self) -> &CommStats {
-        &self.inner.stats
+        match self {
+            Collectives::Local(c) => &c.shared.stats,
+            Collectives::Tcp(c) => c.stats(),
+        }
     }
 
-    pub fn barrier(&self) {
-        self.inner.barrier.wait();
+    pub fn transport_name(&self) -> &'static str {
+        match self {
+            Collectives::Local(_) => "local",
+            Collectives::Tcp(_) => "tcp",
+        }
     }
 
-    /// Sum `m` across all ranks; on return every rank holds the total.
-    /// Reduction is performed in rank order on every rank (deterministic).
-    pub fn allreduce_sum(&self, rank: usize, m: &mut Matrix) {
-        assert!(rank < self.n_ranks);
-        if self.n_ranks == 1 {
-            self.count_allreduce(m);
-            return;
+    pub fn barrier(&mut self) -> Result<()> {
+        match self {
+            Collectives::Local(c) => c.barrier(),
+            Collectives::Tcp(c) => c.barrier(),
         }
-        {
-            let mut slots = self.inner.slots.lock().unwrap();
-            slots[rank] = Some(m.clone());
+    }
+
+    /// Sum `m` across all ranks; on return every rank holds the total,
+    /// folded **in rank order** (deterministic, transport-independent).
+    pub fn allreduce_sum(&mut self, m: &mut Matrix) -> Result<()> {
+        match self {
+            Collectives::Local(c) => c.allreduce_sum(m),
+            Collectives::Tcp(c) => c.allreduce_sum(m),
         }
-        self.inner.barrier.wait();
-        {
-            let slots = self.inner.slots.lock().unwrap();
-            let mut acc = slots[0]
-                .as_ref()
-                .expect("rank 0 slot missing in allreduce")
-                .clone();
-            for s in slots.iter().skip(1) {
-                acc.add_assign(s.as_ref().expect("slot missing in allreduce"));
+    }
+
+    /// Broadcast `m` from `root` to every rank (non-root contents are
+    /// replaced, resizing as needed).
+    pub fn broadcast(&mut self, root: usize, m: &mut Matrix) -> Result<()> {
+        match self {
+            Collectives::Local(c) => c.broadcast(root, m),
+            Collectives::Tcp(c) => c.broadcast(root, m),
+        }
+    }
+
+    /// Element-wise f64 sum of `vals` across ranks, folded in rank order —
+    /// the eval / penalty / loss-grad reductions.
+    pub fn allreduce_scalars(&mut self, vals: &mut [f64]) -> Result<()> {
+        match self {
+            Collectives::Local(c) => c.allreduce_scalars(vals),
+            Collectives::Tcp(c) => c.allreduce_scalars(vals),
+        }
+    }
+
+    /// Broadcast a small f64 panel from `root` (stop flags, test metric).
+    pub fn broadcast_scalars(&mut self, root: usize, vals: &mut [f64]) -> Result<()> {
+        match self {
+            Collectives::Local(c) => c.broadcast_scalars(root, vals),
+            Collectives::Tcp(c) => c.broadcast_scalars(root, vals),
+        }
+    }
+
+    /// Poison the world: every rank currently blocked (or about to block)
+    /// in a collective errors out instead of deadlocking.  Called by the
+    /// trainer when a rank fails mid-run.
+    pub fn abort(&mut self) {
+        match self {
+            Collectives::Local(c) => c.abort(),
+            Collectives::Tcp(c) => c.abort(),
+        }
+    }
+}
+
+/// Abortable generation barrier + per-rank deposit slots shared by every
+/// handle of one local world.
+struct LocalShared {
+    world: usize,
+    gate: Mutex<Gate>,
+    cv: Condvar,
+    /// Per-rank matrix deposit slots, pre-sized after the first collective
+    /// of each shape (steady state: `copy_from` reuses capacity).
+    slots: Vec<Mutex<Matrix>>,
+    /// Per-rank scalar deposit slots.
+    scalar_slots: Vec<Mutex<Vec<f64>>>,
+    abort: AtomicBool,
+    stats: CommStats,
+}
+
+struct Gate {
+    arrived: usize,
+    generation: u64,
+}
+
+/// Thread-backed transport: one handle per rank (see
+/// [`Collectives::local_world`]).
+pub struct LocalComm {
+    rank: usize,
+    world: usize,
+    shared: Arc<LocalShared>,
+}
+
+impl LocalComm {
+    pub fn world(n: usize) -> Vec<LocalComm> {
+        assert!(n > 0, "need at least one rank");
+        let shared = Arc::new(LocalShared {
+            world: n,
+            gate: Mutex::new(Gate { arrived: 0, generation: 0 }),
+            cv: Condvar::new(),
+            slots: (0..n).map(|_| Mutex::new(Matrix::default())).collect(),
+            scalar_slots: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
+            abort: AtomicBool::new(false),
+            stats: CommStats::default(),
+        });
+        (0..n)
+            .map(|rank| LocalComm { rank, world: n, shared: shared.clone() })
+            .collect()
+    }
+
+    pub fn abort(&self) {
+        self.shared.abort.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+    }
+
+    fn check_abort(&self) -> Result<()> {
+        anyhow::ensure!(
+            !self.shared.abort.load(Ordering::SeqCst),
+            "local world aborted (a peer rank failed)"
+        );
+        Ok(())
+    }
+
+    /// Generation barrier.  Unlike `std::sync::Barrier` it can be poisoned
+    /// by [`LocalComm::abort`], so a failed rank never deadlocks its
+    /// peers; waiters poll the abort flag every 50 ms.
+    pub fn barrier(&self) -> Result<()> {
+        if self.world == 1 {
+            return self.check_abort();
+        }
+        self.check_abort()?;
+        let mut g = self.shared.gate.lock().unwrap();
+        g.arrived += 1;
+        if g.arrived == self.world {
+            g.arrived = 0;
+            g.generation = g.generation.wrapping_add(1);
+            self.shared.cv.notify_all();
+            return Ok(());
+        }
+        let gen = g.generation;
+        loop {
+            let (g2, _timeout) = self
+                .shared
+                .cv
+                .wait_timeout(g, Duration::from_millis(50))
+                .unwrap();
+            g = g2;
+            if g.generation != gen {
+                return Ok(());
             }
-            *m = acc;
+            if self.shared.abort.load(Ordering::SeqCst) {
+                // Un-register so an aborted barrier can't satisfy a later
+                // one with a stale count.
+                g.arrived = g.arrived.saturating_sub(1);
+                drop(g);
+                anyhow::bail!("local world aborted (a peer rank failed)");
+            }
         }
-        self.inner.barrier.wait();
-        if rank == 0 {
-            let mut slots = self.inner.slots.lock().unwrap();
-            slots.iter_mut().for_each(|s| *s = None);
-            self.count_allreduce(m);
-        }
-        self.inner.barrier.wait();
     }
 
-    /// Broadcast `m` from `root` to every rank.
-    pub fn broadcast(&self, rank: usize, root: usize, m: &mut Matrix) {
-        assert!(rank < self.n_ranks && root < self.n_ranks);
-        if self.n_ranks == 1 {
-            self.count_broadcast(m);
-            return;
+    /// Deposit-into-slot / barrier / fold-in-rank-order / barrier.  The
+    /// fold runs on every rank over the same slot sequence, so all ranks
+    /// produce bit-identical sums; slots are recycled, so the steady state
+    /// allocates nothing.
+    pub fn allreduce_sum(&self, m: &mut Matrix) -> Result<()> {
+        if self.world == 1 {
+            self.shared.stats.count_allreduce(m.len());
+            return self.check_abort();
         }
-        if rank == root {
-            let mut slots = self.inner.slots.lock().unwrap();
-            slots[root] = Some(m.clone());
+        self.shared.slots[self.rank].lock().unwrap().copy_from(m);
+        self.barrier()?;
+        {
+            m.copy_from(&self.shared.slots[0].lock().unwrap());
+            for slot in self.shared.slots.iter().skip(1) {
+                m.add_assign(&slot.lock().unwrap());
+            }
         }
-        self.inner.barrier.wait();
-        if rank != root {
-            let slots = self.inner.slots.lock().unwrap();
-            *m = slots[root].as_ref().expect("root slot missing in broadcast").clone();
+        if self.rank == 0 {
+            self.shared.stats.count_allreduce(m.len());
         }
-        self.inner.barrier.wait();
-        if rank == root {
-            let mut slots = self.inner.slots.lock().unwrap();
-            slots[root] = None;
-            self.count_broadcast(m);
-        }
-        self.inner.barrier.wait();
+        // Nobody may re-deposit until every rank has finished folding.
+        self.barrier()
     }
 
-    fn count_allreduce(&self, m: &Matrix) {
-        self.inner
-            .stats
-            .allreduce_bytes
-            .fetch_add((m.len() * 4) as u64, Ordering::Relaxed);
-        self.inner.stats.allreduce_calls.fetch_add(1, Ordering::Relaxed);
+    pub fn broadcast(&self, root: usize, m: &mut Matrix) -> Result<()> {
+        assert!(root < self.world, "broadcast root {root} out of range");
+        if self.world == 1 {
+            self.shared.stats.count_broadcast(m.len());
+            return self.check_abort();
+        }
+        if self.rank == root {
+            self.shared.slots[root].lock().unwrap().copy_from(m);
+        }
+        self.barrier()?;
+        if self.rank != root {
+            m.copy_from(&self.shared.slots[root].lock().unwrap());
+        } else {
+            self.shared.stats.count_broadcast(m.len());
+        }
+        self.barrier()
     }
 
-    fn count_broadcast(&self, m: &Matrix) {
-        self.inner
-            .stats
-            .broadcast_bytes
-            .fetch_add((m.len() * 4) as u64, Ordering::Relaxed);
-        self.inner.stats.broadcast_calls.fetch_add(1, Ordering::Relaxed);
+    pub fn allreduce_scalars(&self, vals: &mut [f64]) -> Result<()> {
+        if self.world == 1 {
+            self.shared.stats.count_scalars(vals.len());
+            return self.check_abort();
+        }
+        {
+            let mut slot = self.shared.scalar_slots[self.rank].lock().unwrap();
+            slot.clear();
+            slot.extend_from_slice(vals);
+        }
+        self.barrier()?;
+        {
+            vals.fill(0.0);
+            for (r, slot_mutex) in self.shared.scalar_slots.iter().enumerate() {
+                let slot = slot_mutex.lock().unwrap();
+                anyhow::ensure!(
+                    slot.len() == vals.len(),
+                    "scalar allreduce length mismatch: rank {r} sent {}, expected {}",
+                    slot.len(),
+                    vals.len()
+                );
+                for (v, s) in vals.iter_mut().zip(slot.iter()) {
+                    *v += *s;
+                }
+            }
+        }
+        if self.rank == 0 {
+            self.shared.stats.count_scalars(vals.len());
+        }
+        self.barrier()
+    }
+
+    pub fn broadcast_scalars(&self, root: usize, vals: &mut [f64]) -> Result<()> {
+        assert!(root < self.world, "broadcast root {root} out of range");
+        if self.world == 1 {
+            self.shared.stats.count_scalars(vals.len());
+            return self.check_abort();
+        }
+        if self.rank == root {
+            let mut slot = self.shared.scalar_slots[root].lock().unwrap();
+            slot.clear();
+            slot.extend_from_slice(vals);
+        }
+        self.barrier()?;
+        if self.rank != root {
+            let slot = self.shared.scalar_slots[root].lock().unwrap();
+            anyhow::ensure!(
+                slot.len() == vals.len(),
+                "scalar broadcast length mismatch: root sent {}, expected {}",
+                slot.len(),
+                vals.len()
+            );
+            vals.copy_from_slice(&slot);
+        } else {
+            self.shared.stats.count_scalars(vals.len());
+        }
+        self.barrier()
+    }
+}
+
+/// Dropping a handle poisons the world.  This is the panic guard: an
+/// unwinding rank drops its handle before reaching any explicit abort
+/// call, and without this its peers would sit in the barrier's poll loop
+/// forever.  Safe for normal completion too — a rank can only finish its
+/// last collective after every peer has entered that collective's final
+/// barrier, and barrier exits check the generation *before* the abort
+/// flag, so under the SPMD contract (identical collective sequences on
+/// every rank) a post-run drop never poisons a live collective.
+impl Drop for LocalComm {
+    fn drop(&mut self) {
+        self.abort();
     }
 }
 
@@ -151,13 +385,12 @@ mod tests {
 
     fn run_ranks<F>(n: usize, f: F)
     where
-        F: Fn(usize, CommWorld) + Send + Sync + Copy,
+        F: Fn(usize, &mut Collectives) + Send + Sync + Copy,
     {
-        let world = CommWorld::new(n);
+        let worlds = Collectives::local_world(n);
         std::thread::scope(|s| {
-            for rank in 0..n {
-                let w = world.clone();
-                s.spawn(move || f(rank, w));
+            for (rank, mut w) in worlds.into_iter().enumerate() {
+                s.spawn(move || f(rank, &mut w));
             }
         });
     }
@@ -168,23 +401,25 @@ mod tests {
             let ranks = g.usize_in(1, 8);
             let r = g.usize_in(1, 6);
             let c = g.usize_in(1, 6);
-            let inputs: Vec<Matrix> =
-                (0..ranks).map(|i| {
+            let inputs: Vec<Matrix> = (0..ranks)
+                .map(|i| {
                     let mut rng = Rng::stream(g.case as u64, i as u64);
                     Matrix::randn(r, c, &mut rng)
-                }).collect();
+                })
+                .collect();
             let mut want = Matrix::zeros(r, c);
             for m in &inputs {
                 want.add_assign(m);
             }
-            let world = CommWorld::new(ranks);
+            let worlds = Collectives::local_world(ranks);
             let results: Vec<Matrix> = std::thread::scope(|s| {
-                let handles: Vec<_> = (0..ranks)
-                    .map(|rank| {
-                        let w = world.clone();
+                let handles: Vec<_> = worlds
+                    .into_iter()
+                    .enumerate()
+                    .map(|(rank, mut w)| {
                         let mut m = inputs[rank].clone();
                         s.spawn(move || {
-                            w.allreduce_sum(rank, &mut m);
+                            w.allreduce_sum(&mut m).unwrap();
                             m
                         })
                     })
@@ -208,9 +443,25 @@ mod tests {
     fn broadcast_distributes_root_value() {
         run_ranks(6, |rank, world| {
             let mut m = Matrix::from_fn(2, 2, |r, c| (rank * 100 + r * 2 + c) as f32);
-            world.broadcast(rank, 3, &mut m);
+            world.broadcast(3, &mut m).unwrap();
             let want = Matrix::from_fn(2, 2, |r, c| (300 + r * 2 + c) as f32);
             assert_eq!(m.as_slice(), want.as_slice(), "rank {rank}");
+        });
+    }
+
+    #[test]
+    fn broadcast_resizes_non_root_buffers() {
+        run_ranks(3, |rank, world| {
+            // Non-root ranks start with an empty buffer — the receive path
+            // must size it (this is how W/minv broadcasts warm up).
+            let mut m = if rank == 1 {
+                Matrix::from_fn(3, 2, |r, c| (10 + r * 2 + c) as f32)
+            } else {
+                Matrix::default()
+            };
+            world.broadcast(1, &mut m).unwrap();
+            assert_eq!(m.shape(), (3, 2), "rank {rank}");
+            assert_eq!(m.at(2, 1), 15.0, "rank {rank}");
         });
     }
 
@@ -219,7 +470,7 @@ mod tests {
         run_ranks(4, |rank, world| {
             for round in 0..5 {
                 let mut m = Matrix::from_vec(1, 1, vec![(rank + round) as f32]);
-                world.allreduce_sum(rank, &mut m);
+                world.allreduce_sum(&mut m).unwrap();
                 let want: f32 = (0..4).map(|r| (r + round) as f32).sum();
                 assert_eq!(m.at(0, 0), want, "round {round} rank {rank}");
             }
@@ -227,13 +478,54 @@ mod tests {
     }
 
     #[test]
-    fn traffic_counted() {
-        let world = CommWorld::new(1);
+    fn scalar_collectives_sum_and_distribute() {
+        run_ranks(5, |rank, world| {
+            let mut vals = [rank as f64, 1.0, (rank * rank) as f64];
+            world.allreduce_scalars(&mut vals).unwrap();
+            assert_eq!(vals, [10.0, 5.0, 30.0], "rank {rank}");
+            let mut flag = [if rank == 0 { 7.5 } else { 0.0 }];
+            world.broadcast_scalars(0, &mut flag).unwrap();
+            assert_eq!(flag, [7.5], "rank {rank}");
+        });
+    }
+
+    #[test]
+    fn traffic_counted_per_bucket() {
+        let mut worlds = Collectives::local_world(1);
+        let world = &mut worlds[0];
         let mut m = Matrix::zeros(4, 4);
-        world.allreduce_sum(0, &mut m);
-        world.broadcast(0, 0, &mut m);
+        world.allreduce_sum(&mut m).unwrap();
+        world.broadcast(0, &mut m).unwrap();
+        world.allreduce_scalars(&mut [0.0, 0.0]).unwrap();
         assert_eq!(world.stats().allreduce_bytes.load(Ordering::Relaxed), 64);
         assert_eq!(world.stats().broadcast_bytes.load(Ordering::Relaxed), 64);
-        assert_eq!(world.stats().total_bytes(), 128);
+        assert_eq!(world.stats().scalar_bytes.load(Ordering::Relaxed), 16);
+        assert_eq!(world.stats().total_bytes(), 144);
+    }
+
+    #[test]
+    fn abort_unblocks_waiting_ranks() {
+        let worlds = Collectives::local_world(3);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = worlds
+                .into_iter()
+                .enumerate()
+                .map(|(rank, mut w)| {
+                    s.spawn(move || {
+                        if rank == 2 {
+                            // simulate a failed rank: never enters, aborts
+                            std::thread::sleep(Duration::from_millis(50));
+                            w.abort();
+                            return true;
+                        }
+                        let mut m = Matrix::zeros(2, 2);
+                        w.allreduce_sum(&mut m).is_err()
+                    })
+                })
+                .collect();
+            for h in handles {
+                assert!(h.join().unwrap(), "rank neither aborted nor errored");
+            }
+        });
     }
 }

@@ -5,7 +5,11 @@
 //! `b` bytes between two ranks costs `α + β·b`; tree collectives pay
 //! `⌈log₂ N⌉` rounds, and an allreduce is a reduce + broadcast (the
 //! transpose-reduction W update in the paper is literally "reduce Gram
-//! pairs to the leader, broadcast W back").
+//! pairs to rank 0, broadcast W back" — exactly what the SPMD core's
+//! `Collectives` schedule issues).  The byte counts this model is fed are
+//! not estimates: `CommStats` measures them per collective, and
+//! `benches/scaling.rs` asserts the measured per-iteration traffic equals
+//! the `TrainStats` closed-form formulas before they are priced here.
 
 /// Hockney model parameters.
 #[derive(Clone, Copy, Debug)]

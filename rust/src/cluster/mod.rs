@@ -1,18 +1,25 @@
-//! Simulated MPI cluster: thread-backed collectives, an α–β communication
-//! cost model, and the strong-scaling extrapolation used by figs 1a/2a.
+//! The cluster layer: the pluggable `Collectives` transport the SPMD
+//! training core synchronizes through, an α–β communication cost model,
+//! and the strong-scaling extrapolation used by figs 1a/2a.
 //!
-//! The paper ran on a Cray XC30 with MPI over up to 7,200 cores.  Here a
-//! "rank" is an OS thread; the collectives exercise the *same sharded code
-//! path and reduce semantics* (deterministic rank-ordered summation, so
-//! results are bit-identical for any worker count), while the cost model
-//! (`cost.rs`) prices what each collective *would* cost on an
-//! Aries-class interconnect, letting `sim.rs` extrapolate measured runs to
-//! thousands of cores.  DESIGN.md §4 documents this substitution.
+//! The paper ran MPI on a Cray XC30 at up to 7,200 cores.  Here every
+//! rank runs the whole of Algorithm 1 (rank-symmetric SPMD — no leader
+//! dispatch) and meets its peers only at collectives: the Gram allreduce,
+//! the W/minv broadcasts from rank 0, and scalar eval/penalty reductions.
+//! Two transports sit behind one API: `Local` (thread-backed ranks with
+//! recycled zero-allocation reduction slots) and `Tcp` (separate
+//! processes over length-prefixed `std::net` frames).  Both fold in rank
+//! order, so results are bit-identical across transports and independent
+//! of scheduling; `CommStats` counts the measured bytes the per-iteration
+//! traffic formulas and the cost model (`cost.rs`) are checked against,
+//! and `sim.rs` extrapolates measured runs to core counts we cannot host.
 
 mod comm;
 mod cost;
 mod sim;
+mod tcp;
 
-pub use comm::{CommStats, CommWorld};
+pub use comm::{Collectives, CommStats, LocalComm};
 pub use cost::CostModel;
 pub use sim::{ScalingPoint, ScalingProfile};
+pub use tcp::TcpComm;

@@ -6,10 +6,12 @@
 //!        + T_leader + Σ_l allreduce(N, gram_bytes_l) + Σ_l broadcast(N, w_bytes_l)
 //!
 //! Compute is embarrassingly parallel in the sample columns (paper §5), so
-//! per-iteration compute time is `compute_col_s · cols / N`; the leader's
+//! per-iteration compute time is `compute_col_s · cols / N`; rank 0's
 //! small dense solves and the log-N collectives are the serial terms.  The
-//! profile is *calibrated from measured runs* (compute_col_s, iters) and
-//! the cost model prices communication at core counts we cannot host.
+//! profile is *calibrated from measured runs* (compute_col_s, iters), its
+//! byte counts are cross-checked against `CommStats` measurements
+//! (`benches/scaling.rs`), and the cost model prices communication at
+//! core counts we cannot host.
 
 use super::CostModel;
 

@@ -1,0 +1,727 @@
+//! TCP multi-process transport for [`Collectives`](super::Collectives) —
+//! genuinely separate OS processes synchronizing over `std::net`, in the
+//! serve subsystem's dependency-free style.
+//!
+//! ## Topology and determinism
+//!
+//! A star: rank 0 is the hub (it also performs the weight solves, so the
+//! Gram reduction lands where it is consumed).  Leaves `1..N` hold one
+//! connection to the hub.  Every collective folds contributions **in rank
+//! order on the hub** — the same order `LocalComm` folds its slots — so a
+//! TCP world of any size produces **bit-identical** results to a local
+//! world of the same size (pinned by `tests/transport_equivalence.rs`).
+//!
+//! ## Frame format (`GFC1`)
+//!
+//! Every message is one length-prefixed frame:
+//!
+//! ```text
+//! [len: u32 LE] [op: u8] [payload: len-1 bytes]
+//!   op 0x01 HELLO    payload = magic "GFC1" + rank u32 + world u32 + fingerprint u64
+//!   op 0x02 MAT      payload = rows u32 + cols u32 + rows*cols f32 LE
+//!   op 0x03 SCALARS  payload = count u32 + count f64 LE
+//!   op 0x04 BARRIER  payload = empty
+//! ```
+//!
+//! All collectives are program-ordered identically on every rank (SPMD),
+//! so frames need no tags: an unexpected opcode is a protocol error, and
+//! the HELLO fingerprint (a hash of the schedule-relevant `TrainConfig`
+//! fields) rejects worlds whose ranks were launched with divergent
+//! configs before any training traffic flows.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use super::comm::CommStats;
+use crate::linalg::Matrix;
+use crate::Result;
+
+const MAGIC: &[u8; 4] = b"GFC1";
+const OP_HELLO: u8 = 0x01;
+const OP_MAT: u8 = 0x02;
+const OP_SCALARS: u8 = 0x03;
+const OP_BARRIER: u8 = 0x04;
+
+/// Refuse frames past this size (a corrupted length prefix would
+/// otherwise ask for gigabytes).
+const MAX_FRAME: usize = 1 << 30;
+
+/// Per-stream read/write timeout: generous enough for a slow rank's
+/// compute phase, finite so a dead peer fails the run instead of hanging
+/// it.
+const IO_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// How long leaves retry dialing the hub (ranks may launch in any order).
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// How long the hub waits for a freshly-accepted connection's hello — a
+/// silent stray connection must not eat the join deadline.
+const HELLO_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// TCP transport state for one rank.
+pub struct TcpComm {
+    rank: usize,
+    world: usize,
+    /// Hub: streams to ranks `1..world`, indexed `rank - 1`.
+    /// Leaf: exactly one stream, to the hub.
+    links: Vec<TcpStream>,
+    stats: CommStats,
+    /// Reusable frame assembly / receive buffer.
+    buf: Vec<u8>,
+    /// Persistent decode scratch (hub-side fold operand; leaf-side scalar
+    /// results) so steady-state collectives don't reallocate per call.
+    scratch_mat: Matrix,
+    scratch_scalars: Vec<f64>,
+}
+
+impl TcpComm {
+    fn solo(rank: usize, world: usize) -> TcpComm {
+        TcpComm {
+            rank,
+            world,
+            links: Vec::new(),
+            stats: CommStats::default(),
+            buf: Vec::new(),
+            scratch_mat: Matrix::default(),
+            scratch_scalars: Vec::new(),
+        }
+    }
+
+    /// Join a TCP world from a peer list (`peers[0]` is the hub address;
+    /// rank 0 binds it, every other rank dials it).  `fingerprint` must be
+    /// identical across ranks — it hashes the schedule-relevant config so
+    /// mismatched launches fail fast instead of deadlocking mid-protocol.
+    pub fn connect(
+        rank: usize,
+        world: usize,
+        peers: &[String],
+        fingerprint: u64,
+    ) -> Result<TcpComm> {
+        anyhow::ensure!(world >= 1, "world size must be >= 1");
+        anyhow::ensure!(rank < world, "rank {rank} out of range for world {world}");
+        if world == 1 {
+            // A one-rank world never binds or dials anything (mirrors
+            // TrainConfig::validate, which only requires peers past 1).
+            return Ok(TcpComm::solo(rank, world));
+        }
+        anyhow::ensure!(
+            !peers.is_empty(),
+            "tcp transport needs --peers (peers[0] is the rank-0 hub address)"
+        );
+        if rank == 0 {
+            let listener = TcpListener::bind(peers[0].as_str())
+                .map_err(|e| anyhow::anyhow!("rank 0: binding hub address {}: {e}", peers[0]))?;
+            Self::hub(listener, world, fingerprint)
+        } else {
+            Self::leaf(&peers[0], rank, world, fingerprint)
+        }
+    }
+
+    /// Rank 0: accept `world - 1` leaf connections on an already-bound
+    /// listener (exposed separately so tests/benches can bind port 0 and
+    /// learn the ephemeral address first).
+    pub fn hub(listener: TcpListener, world: usize, fingerprint: u64) -> Result<TcpComm> {
+        anyhow::ensure!(world >= 2, "hub needs a world of >= 2 ranks");
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| anyhow::anyhow!("hub listener nonblocking: {e}"))?;
+        let deadline = Instant::now() + CONNECT_TIMEOUT;
+        let mut links: Vec<Option<TcpStream>> = (1..world).map(|_| None).collect();
+        let mut pending = world - 1;
+        let mut buf = Vec::new();
+        while pending > 0 {
+            match listener.accept() {
+                Ok((stream, addr)) => {
+                    // A connection that can't produce a well-formed hello
+                    // quickly (port scanner, health probe, stray client)
+                    // is dropped and the accept loop continues — only a
+                    // *valid* hello with mismatched parameters is fatal.
+                    let mut stream = match prepare_accepted(stream) {
+                        Ok(s) => s,
+                        Err(e) => {
+                            eprintln!("hub: ignoring connection from {addr}: {e:#}");
+                            continue;
+                        }
+                    };
+                    let hello = read_frame(&mut stream, &mut buf)
+                        .and_then(|op| parse_hello(op, &buf));
+                    let (peer_rank, peer_world, peer_fp) = match hello {
+                        Ok(h) => h,
+                        Err(e) => {
+                            eprintln!("hub: ignoring connection from {addr}: {e:#}");
+                            continue;
+                        }
+                    };
+                    anyhow::ensure!(
+                        peer_world == world,
+                        "rank {peer_rank} joined with world size {peer_world}, hub has {world}"
+                    );
+                    anyhow::ensure!(
+                        peer_fp == fingerprint,
+                        "rank {peer_rank} joined with config fingerprint {peer_fp:#x}, \
+                         hub has {fingerprint:#x} — ranks must be launched with identical \
+                         configs and datasets"
+                    );
+                    anyhow::ensure!(
+                        peer_rank >= 1 && peer_rank < world,
+                        "hello from out-of-range rank {peer_rank}"
+                    );
+                    anyhow::ensure!(
+                        links[peer_rank - 1].is_none(),
+                        "rank {peer_rank} connected twice"
+                    );
+                    stream
+                        .set_read_timeout(Some(IO_TIMEOUT))
+                        .map_err(|e| anyhow::anyhow!("hub stream timeout: {e}"))?;
+                    links[peer_rank - 1] = Some(stream);
+                    pending -= 1;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    anyhow::ensure!(
+                        Instant::now() < deadline,
+                        "hub: timed out waiting for {pending} rank(s) to join"
+                    );
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) => anyhow::bail!("hub: accept failed: {e}"),
+            }
+        }
+        let links = links.into_iter().map(|s| s.expect("all ranks joined")).collect();
+        Ok(TcpComm {
+            rank: 0,
+            world,
+            links,
+            stats: CommStats::default(),
+            buf,
+            scratch_mat: Matrix::default(),
+            scratch_scalars: Vec::new(),
+        })
+    }
+
+    /// Rank `rank >= 1`: dial the hub (with retries — launch order is
+    /// arbitrary) and introduce ourselves.
+    pub fn leaf(hub_addr: &str, rank: usize, world: usize, fingerprint: u64) -> Result<TcpComm> {
+        anyhow::ensure!(rank >= 1 && rank < world, "leaf rank {rank} out of range");
+        let deadline = Instant::now() + CONNECT_TIMEOUT;
+        let stream = loop {
+            match TcpStream::connect(hub_addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    anyhow::ensure!(
+                        Instant::now() < deadline,
+                        "rank {rank}: connecting to hub {hub_addr}: {e}"
+                    );
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+            }
+        };
+        prepare_stream(&stream)?;
+        let mut comm = TcpComm::solo(rank, world);
+        comm.links = vec![stream];
+        let mut hello = Vec::with_capacity(20);
+        hello.extend_from_slice(MAGIC);
+        hello.extend_from_slice(&(rank as u32).to_le_bytes());
+        hello.extend_from_slice(&(world as u32).to_le_bytes());
+        hello.extend_from_slice(&fingerprint.to_le_bytes());
+        let mut buf = std::mem::take(&mut comm.buf);
+        write_frame(&mut comm.links[0], OP_HELLO, &hello, &mut buf)
+            .map_err(|e| anyhow::anyhow!("rank {rank}: sending hello: {e}"))?;
+        comm.buf = buf;
+        Ok(comm)
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.world
+    }
+
+    pub fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+
+    /// Tear the world down: peers blocked on this rank's frames error out
+    /// instead of hanging.
+    pub fn abort(&mut self) {
+        for link in &self.links {
+            let _ = link.shutdown(Shutdown::Both);
+        }
+    }
+
+    pub fn barrier(&mut self) -> Result<()> {
+        if self.world == 1 {
+            return Ok(());
+        }
+        let mut buf = std::mem::take(&mut self.buf);
+        let res = self.barrier_inner(&mut buf);
+        self.buf = buf;
+        res
+    }
+
+    fn barrier_inner(&mut self, buf: &mut Vec<u8>) -> Result<()> {
+        let rank = self.rank;
+        if rank == 0 {
+            for link in &mut self.links {
+                let op = read_frame(link, buf).map_err(|e| rank_err(rank, "barrier recv", e))?;
+                expect_op(op, OP_BARRIER)?;
+            }
+            for link in &mut self.links {
+                write_frame(link, OP_BARRIER, &[], buf)
+                    .map_err(|e| rank_err(rank, "barrier send", e))?;
+            }
+        } else {
+            write_frame(&mut self.links[0], OP_BARRIER, &[], buf)
+                .map_err(|e| rank_err(rank, "barrier send", e))?;
+            let op = read_frame(&mut self.links[0], buf)
+                .map_err(|e| rank_err(rank, "barrier recv", e))?;
+            expect_op(op, OP_BARRIER)?;
+        }
+        Ok(())
+    }
+
+    /// Reduce-to-hub in rank order, broadcast the total back — the same
+    /// fold sequence as `LocalComm`, hence bit-identical results.
+    pub fn allreduce_sum(&mut self, m: &mut Matrix) -> Result<()> {
+        if self.world == 1 {
+            self.stats.count_allreduce(m.len());
+            return Ok(());
+        }
+        let mut buf = std::mem::take(&mut self.buf);
+        let res = self.allreduce_inner(m, &mut buf);
+        self.buf = buf;
+        res
+    }
+
+    fn allreduce_inner(&mut self, m: &mut Matrix, buf: &mut Vec<u8>) -> Result<()> {
+        let rank = self.rank;
+        if rank == 0 {
+            // fold: own contribution (rank 0) first, then ranks 1..N in order
+            let TcpComm { links, stats, scratch_mat, .. } = self;
+            for (i, link) in links.iter_mut().enumerate() {
+                let op = read_frame(link, buf).map_err(|e| rank_err(rank, "allreduce recv", e))?;
+                expect_op(op, OP_MAT)?;
+                decode_mat(buf, scratch_mat)?;
+                anyhow::ensure!(
+                    scratch_mat.shape() == m.shape(),
+                    "allreduce shape mismatch: rank {} sent {:?}, hub has {:?}",
+                    i + 1,
+                    scratch_mat.shape(),
+                    m.shape()
+                );
+                m.add_assign(scratch_mat);
+            }
+            for link in links.iter_mut() {
+                write_mat_frame(link, m, buf).map_err(|e| rank_err(rank, "allreduce send", e))?;
+            }
+            stats.count_allreduce(m.len());
+        } else {
+            write_mat_frame(&mut self.links[0], m, buf)
+                .map_err(|e| rank_err(rank, "allreduce send", e))?;
+            let op = read_frame(&mut self.links[0], buf)
+                .map_err(|e| rank_err(rank, "allreduce recv", e))?;
+            expect_op(op, OP_MAT)?;
+            decode_mat(buf, m)?;
+        }
+        Ok(())
+    }
+
+    pub fn broadcast(&mut self, root: usize, m: &mut Matrix) -> Result<()> {
+        anyhow::ensure!(root < self.world, "broadcast root {root} out of range");
+        if self.world == 1 {
+            self.stats.count_broadcast(m.len());
+            return Ok(());
+        }
+        let mut buf = std::mem::take(&mut self.buf);
+        let res = self.broadcast_inner(root, m, &mut buf);
+        self.buf = buf;
+        res
+    }
+
+    fn broadcast_inner(&mut self, root: usize, m: &mut Matrix, buf: &mut Vec<u8>) -> Result<()> {
+        let rank = self.rank;
+        if rank == 0 {
+            if root != 0 {
+                let op = read_frame(&mut self.links[root - 1], buf)
+                    .map_err(|e| rank_err(rank, "broadcast recv", e))?;
+                expect_op(op, OP_MAT)?;
+                decode_mat(buf, m)?;
+            }
+            for (i, link) in self.links.iter_mut().enumerate() {
+                if i + 1 == root {
+                    continue;
+                }
+                write_mat_frame(link, m, buf).map_err(|e| rank_err(rank, "broadcast send", e))?;
+            }
+            self.stats.count_broadcast(m.len());
+        } else if rank == root {
+            write_mat_frame(&mut self.links[0], m, buf)
+                .map_err(|e| rank_err(rank, "broadcast send", e))?;
+        } else {
+            let op = read_frame(&mut self.links[0], buf)
+                .map_err(|e| rank_err(rank, "broadcast recv", e))?;
+            expect_op(op, OP_MAT)?;
+            decode_mat(buf, m)?;
+        }
+        Ok(())
+    }
+
+    pub fn allreduce_scalars(&mut self, vals: &mut [f64]) -> Result<()> {
+        if self.world == 1 {
+            self.stats.count_scalars(vals.len());
+            return Ok(());
+        }
+        let mut buf = std::mem::take(&mut self.buf);
+        let res = self.allreduce_scalars_inner(vals, &mut buf);
+        self.buf = buf;
+        res
+    }
+
+    fn allreduce_scalars_inner(&mut self, vals: &mut [f64], buf: &mut Vec<u8>) -> Result<()> {
+        let rank = self.rank;
+        let TcpComm { links, stats, scratch_scalars: recv, .. } = self;
+        if rank == 0 {
+            for (i, link) in links.iter_mut().enumerate() {
+                let op =
+                    read_frame(link, buf).map_err(|e| rank_err(rank, "scalar allreduce recv", e))?;
+                expect_op(op, OP_SCALARS)?;
+                decode_scalars(buf, recv)?;
+                anyhow::ensure!(
+                    recv.len() == vals.len(),
+                    "scalar allreduce length mismatch: rank {} sent {}, hub has {}",
+                    i + 1,
+                    recv.len(),
+                    vals.len()
+                );
+                for (v, s) in vals.iter_mut().zip(recv.iter()) {
+                    *v += *s;
+                }
+            }
+            for link in links.iter_mut() {
+                write_scalars_frame(link, vals, buf)
+                    .map_err(|e| rank_err(rank, "scalar allreduce send", e))?;
+            }
+            stats.count_scalars(vals.len());
+        } else {
+            write_scalars_frame(&mut links[0], vals, buf)
+                .map_err(|e| rank_err(rank, "scalar allreduce send", e))?;
+            let op = read_frame(&mut links[0], buf)
+                .map_err(|e| rank_err(rank, "scalar allreduce recv", e))?;
+            expect_op(op, OP_SCALARS)?;
+            decode_scalars(buf, recv)?;
+            anyhow::ensure!(recv.len() == vals.len(), "scalar allreduce result length mismatch");
+            vals.copy_from_slice(recv.as_slice());
+        }
+        Ok(())
+    }
+
+    pub fn broadcast_scalars(&mut self, root: usize, vals: &mut [f64]) -> Result<()> {
+        anyhow::ensure!(root < self.world, "broadcast root {root} out of range");
+        if self.world == 1 {
+            self.stats.count_scalars(vals.len());
+            return Ok(());
+        }
+        let mut buf = std::mem::take(&mut self.buf);
+        let res = self.broadcast_scalars_inner(root, vals, &mut buf);
+        self.buf = buf;
+        res
+    }
+
+    fn broadcast_scalars_inner(
+        &mut self,
+        root: usize,
+        vals: &mut [f64],
+        buf: &mut Vec<u8>,
+    ) -> Result<()> {
+        let rank = self.rank;
+        let TcpComm { links, stats, scratch_scalars: recv, .. } = self;
+        if rank == 0 {
+            if root != 0 {
+                let op = read_frame(&mut links[root - 1], buf)
+                    .map_err(|e| rank_err(rank, "scalar broadcast recv", e))?;
+                expect_op(op, OP_SCALARS)?;
+                decode_scalars(buf, recv)?;
+                anyhow::ensure!(recv.len() == vals.len(), "scalar broadcast length mismatch");
+                vals.copy_from_slice(recv.as_slice());
+            }
+            for (i, link) in links.iter_mut().enumerate() {
+                if i + 1 == root {
+                    continue;
+                }
+                write_scalars_frame(link, vals, buf)
+                    .map_err(|e| rank_err(rank, "scalar broadcast send", e))?;
+            }
+            stats.count_scalars(vals.len());
+        } else if rank == root {
+            write_scalars_frame(&mut links[0], vals, buf)
+                .map_err(|e| rank_err(rank, "scalar broadcast send", e))?;
+        } else {
+            let op = read_frame(&mut links[0], buf)
+                .map_err(|e| rank_err(rank, "scalar broadcast recv", e))?;
+            expect_op(op, OP_SCALARS)?;
+            decode_scalars(buf, recv)?;
+            anyhow::ensure!(recv.len() == vals.len(), "scalar broadcast length mismatch");
+            vals.copy_from_slice(recv.as_slice());
+        }
+        Ok(())
+    }
+}
+
+fn rank_err(rank: usize, what: &str, e: impl std::fmt::Display) -> anyhow::Error {
+    let role = if rank == 0 { "hub" } else { "leaf" };
+    anyhow::anyhow!("rank {rank} ({role}): {what}: {e}")
+}
+
+fn prepare_stream(stream: &TcpStream) -> Result<()> {
+    stream
+        .set_nodelay(true)
+        .map_err(|e| anyhow::anyhow!("set_nodelay: {e}"))?;
+    stream
+        .set_read_timeout(Some(IO_TIMEOUT))
+        .map_err(|e| anyhow::anyhow!("set_read_timeout: {e}"))?;
+    stream
+        .set_write_timeout(Some(IO_TIMEOUT))
+        .map_err(|e| anyhow::anyhow!("set_write_timeout: {e}"))?;
+    Ok(())
+}
+
+/// Prepare a hub-accepted stream for the hello exchange: blocking mode
+/// (accepted sockets do not inherit the listener's nonblocking flag on
+/// every platform, so set it explicitly) with the short hello read
+/// timeout; the full `IO_TIMEOUT` is applied only after a valid hello.
+fn prepare_accepted(stream: TcpStream) -> Result<TcpStream> {
+    stream
+        .set_nonblocking(false)
+        .map_err(|e| anyhow::anyhow!("set_nonblocking: {e}"))?;
+    prepare_stream(&stream)?;
+    stream
+        .set_read_timeout(Some(HELLO_TIMEOUT))
+        .map_err(|e| anyhow::anyhow!("set_read_timeout: {e}"))?;
+    Ok(stream)
+}
+
+fn expect_op(got: u8, want: u8) -> Result<()> {
+    anyhow::ensure!(
+        got == want,
+        "protocol desync: expected opcode {want:#04x}, got {got:#04x} \
+         (ranks must issue collectives in the same program order)"
+    );
+    Ok(())
+}
+
+fn parse_hello(op: u8, payload: &[u8]) -> Result<(usize, usize, u64)> {
+    expect_op(op, OP_HELLO)?;
+    anyhow::ensure!(payload.len() == 20, "malformed hello ({} bytes)", payload.len());
+    anyhow::ensure!(&payload[..4] == MAGIC, "bad hello magic (not a gradfree rank)");
+    let rank = u32::from_le_bytes(payload[4..8].try_into().unwrap()) as usize;
+    let world = u32::from_le_bytes(payload[8..12].try_into().unwrap()) as usize;
+    let fp = u64::from_le_bytes(payload[12..20].try_into().unwrap());
+    Ok((rank, world, fp))
+}
+
+/// Assemble `[len][op][payload]` in `buf` and write it in one syscall.
+fn write_frame(
+    stream: &mut TcpStream,
+    op: u8,
+    payload: &[u8],
+    buf: &mut Vec<u8>,
+) -> std::io::Result<()> {
+    let len = 1 + payload.len();
+    buf.clear();
+    buf.extend_from_slice(&(len as u32).to_le_bytes());
+    buf.push(op);
+    buf.extend_from_slice(payload);
+    stream.write_all(buf)
+}
+
+/// Read one frame; leaves the payload (without the opcode) in `buf` and
+/// returns the opcode.  The 5-byte `[len][op]` header is read separately
+/// so the payload lands at `buf[0]` with no post-hoc memmove.
+fn read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<u8> {
+    let mut header = [0u8; 5];
+    stream.read_exact(&mut header)?;
+    let len = u32::from_le_bytes(header[0..4].try_into().unwrap()) as usize;
+    anyhow::ensure!(len >= 1 && len <= MAX_FRAME, "implausible frame length {len}");
+    let op = header[4];
+    buf.clear();
+    buf.resize(len - 1, 0);
+    stream.read_exact(buf)?;
+    Ok(op)
+}
+
+fn write_mat_frame(stream: &mut TcpStream, m: &Matrix, buf: &mut Vec<u8>) -> std::io::Result<()> {
+    let len = 1 + 8 + m.len() * 4;
+    buf.clear();
+    buf.extend_from_slice(&(len as u32).to_le_bytes());
+    buf.push(OP_MAT);
+    buf.extend_from_slice(&(m.rows() as u32).to_le_bytes());
+    buf.extend_from_slice(&(m.cols() as u32).to_le_bytes());
+    for v in m.as_slice() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    stream.write_all(buf)
+}
+
+fn decode_mat(payload: &[u8], m: &mut Matrix) -> Result<()> {
+    anyhow::ensure!(payload.len() >= 8, "truncated matrix frame");
+    let rows = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+    let cols = u32::from_le_bytes(payload[4..8].try_into().unwrap()) as usize;
+    let need = rows
+        .checked_mul(cols)
+        .and_then(|e| e.checked_mul(4))
+        .ok_or_else(|| anyhow::anyhow!("implausible matrix shape {rows}x{cols}"))?;
+    anyhow::ensure!(payload.len() - 8 == need, "matrix frame size mismatch");
+    m.resize(rows, cols);
+    for (dst, src) in m.as_mut_slice().iter_mut().zip(payload[8..].chunks_exact(4)) {
+        *dst = f32::from_le_bytes(src.try_into().unwrap());
+    }
+    Ok(())
+}
+
+fn write_scalars_frame(
+    stream: &mut TcpStream,
+    vals: &[f64],
+    buf: &mut Vec<u8>,
+) -> std::io::Result<()> {
+    let len = 1 + 4 + vals.len() * 8;
+    buf.clear();
+    buf.extend_from_slice(&(len as u32).to_le_bytes());
+    buf.push(OP_SCALARS);
+    buf.extend_from_slice(&(vals.len() as u32).to_le_bytes());
+    for v in vals {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    stream.write_all(buf)
+}
+
+fn decode_scalars(payload: &[u8], out: &mut Vec<f64>) -> Result<()> {
+    anyhow::ensure!(payload.len() >= 4, "truncated scalar frame");
+    let count = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+    anyhow::ensure!(payload.len() - 4 == count * 8, "scalar frame size mismatch");
+    out.clear();
+    out.extend(payload[4..].chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Collectives;
+
+    fn loopback_available() -> bool {
+        TcpListener::bind("127.0.0.1:0").is_ok()
+    }
+
+    /// Run `f(rank, comm)` on `n` in-process TCP ranks over loopback.
+    fn run_tcp_ranks<T: Send>(
+        n: usize,
+        f: impl Fn(usize, &mut Collectives) -> T + Send + Sync,
+    ) -> Vec<T> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let fp = 0xDEAD_BEEF_u64;
+        std::thread::scope(|s| {
+            let f = &f;
+            let addr = &addr;
+            let mut handles = Vec::new();
+            handles.push(s.spawn(move || {
+                let mut comm = Collectives::Tcp(TcpComm::hub(listener, n, fp).unwrap());
+                f(0, &mut comm)
+            }));
+            for rank in 1..n {
+                handles.push(s.spawn(move || {
+                    let mut comm =
+                        Collectives::Tcp(TcpComm::leaf(addr, rank, n, fp).unwrap());
+                    f(rank, &mut comm)
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn tcp_allreduce_and_broadcast_roundtrip() {
+        if !loopback_available() {
+            return;
+        }
+        let results = run_tcp_ranks(3, |rank, comm| {
+            let mut m = Matrix::from_fn(2, 3, |r, c| (rank * 10 + r * 3 + c) as f32);
+            comm.allreduce_sum(&mut m).unwrap();
+            let sum_at_00: f32 = (0..3).map(|k| (k * 10) as f32).sum();
+            assert_eq!(m.at(0, 0), sum_at_00, "rank {rank}");
+            // broadcast from a non-hub root exercises the relay path
+            let mut b = if rank == 2 {
+                Matrix::from_fn(1, 2, |_, c| 40.0 + c as f32)
+            } else {
+                Matrix::default()
+            };
+            comm.broadcast(2, &mut b).unwrap();
+            assert_eq!(b.as_slice(), &[40.0, 41.0], "rank {rank}");
+            comm.barrier().unwrap();
+            let mut vals = [rank as f64, 1.0];
+            comm.allreduce_scalars(&mut vals).unwrap();
+            assert_eq!(vals, [3.0, 3.0], "rank {rank}");
+            let mut flag = [if rank == 0 { 2.5 } else { 0.0 }];
+            comm.broadcast_scalars(0, &mut flag).unwrap();
+            assert_eq!(flag, [2.5], "rank {rank}");
+            m.as_slice().to_vec()
+        });
+        // all ranks hold bit-identical allreduce results
+        for r in &results[1..] {
+            assert_eq!(r, &results[0]);
+        }
+    }
+
+    #[test]
+    fn mismatched_fingerprint_is_rejected() {
+        if !loopback_available() {
+            return;
+        }
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::scope(|s| {
+            let hub = s.spawn(move || TcpComm::hub(listener, 2, 1));
+            let leaf = s.spawn(move || TcpComm::leaf(&addr, 1, 2, 2));
+            let hub_err = hub.join().unwrap();
+            assert!(hub_err.is_err(), "hub accepted a mismatched fingerprint");
+            let msg = format!("{:#}", hub_err.err().unwrap());
+            assert!(msg.contains("fingerprint"), "{msg}");
+            // The leaf may or may not observe the teardown as an error —
+            // its hello write can complete before the hub closes.
+            let _ = leaf.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn frame_codecs_roundtrip() {
+        let m = Matrix::from_fn(3, 2, |r, c| (r * 2 + c) as f32 - 2.5);
+        let mut buf = Vec::new();
+        // encode via the frame writer against an in-memory check: reuse
+        // the payload layout directly
+        buf.extend_from_slice(&(m.rows() as u32).to_le_bytes());
+        buf.extend_from_slice(&(m.cols() as u32).to_le_bytes());
+        for v in m.as_slice() {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        let mut out = Matrix::default();
+        decode_mat(&buf, &mut out).unwrap();
+        assert_eq!(out.shape(), m.shape());
+        assert_eq!(out.as_slice(), m.as_slice());
+
+        let vals = [1.5f64, -2.25, 0.0];
+        let mut sbuf = Vec::new();
+        sbuf.extend_from_slice(&(vals.len() as u32).to_le_bytes());
+        for v in &vals {
+            sbuf.extend_from_slice(&v.to_le_bytes());
+        }
+        let mut sout = Vec::new();
+        decode_scalars(&sbuf, &mut sout).unwrap();
+        assert_eq!(sout, vals);
+
+        // corrupted frames are rejected
+        assert!(decode_mat(&buf[..7], &mut out).is_err());
+        assert!(decode_scalars(&sbuf[..3], &mut sout).is_err());
+    }
+}

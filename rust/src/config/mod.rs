@@ -12,6 +12,7 @@ pub use json::Json;
 
 use crate::cli::Args;
 use crate::problem::Problem;
+use crate::rng::Fnv;
 use crate::Result;
 
 /// Activation function h_l (paper §3.1 piecewise-linear choices).
@@ -109,6 +110,35 @@ impl InitScheme {
     }
 }
 
+/// Transport behind the SPMD `cluster::Collectives` API.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transport {
+    /// Thread-backed ranks inside one process (`--workers N` is sugar for
+    /// a local world of N ranks).
+    Local,
+    /// One OS process per rank, length-prefixed frames over `std::net`
+    /// (`--rank R --world-size N --peers host:port,…`).  Bit-identical to
+    /// `Local` at any world size.
+    Tcp,
+}
+
+impl Transport {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "local" => Ok(Transport::Local),
+            "tcp" => Ok(Transport::Tcp),
+            _ => anyhow::bail!("unknown transport '{s}' (local|tcp)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Transport::Local => "local",
+            Transport::Tcp => "tcp",
+        }
+    }
+}
+
 /// Numeric backend for the per-worker updates.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
@@ -155,8 +185,18 @@ pub struct TrainConfig {
     pub warmup_iters: usize,
     /// Total ADMM iterations.
     pub iters: usize,
-    /// Simulated MPI ranks (worker threads).
+    /// SPMD ranks for the `Local` transport (thread-backed).
     pub workers: usize,
+    /// Collectives transport (`Local` threads or `Tcp` processes).
+    pub transport: Transport,
+    /// This process's rank (`Tcp` transport; `Local` spawns all ranks).
+    pub rank: usize,
+    /// Total ranks of a `Tcp` world.
+    pub world_size: usize,
+    /// Rank-indexed `host:port` list for the `Tcp` transport.  Only
+    /// `peers[0]` — the rank-0 hub every collective routes through — is
+    /// ever dialed, so a single-entry list is accepted as shorthand.
+    pub peers: Vec<String>,
     /// Intra-rank threads for the dense kernels (`linalg::par`).  Default 1:
     /// ranks are themselves threads, so nesting only pays off when cores
     /// outnumber workers.  Parallel kernels are bit-identical to serial at
@@ -189,6 +229,10 @@ impl Default for TrainConfig {
             warmup_iters: 10,
             iters: 60,
             workers: 4,
+            transport: Transport::Local,
+            rank: 0,
+            world_size: 0,
+            peers: Vec::new(),
             threads: 1,
             multiplier_mode: MultiplierMode::Bregman,
             backend: Backend::Native,
@@ -207,6 +251,42 @@ impl TrainConfig {
         self.dims.len() - 1
     }
 
+    /// Total SPMD ranks this config trains over: the thread count for
+    /// `Local`, the process count for `Tcp`.  Shards, traffic formulas and
+    /// run labels all key off this.
+    pub fn world(&self) -> usize {
+        match self.transport {
+            Transport::Local => self.workers,
+            Transport::Tcp => self.world_size,
+        }
+    }
+
+    /// FNV-1a hash of every field that shapes the SPMD collective
+    /// schedule.  TCP ranks exchange it at connect time so a world whose
+    /// processes were launched with divergent configs fails fast instead
+    /// of desyncing mid-protocol.
+    pub fn spmd_fingerprint(&self) -> u64 {
+        let mut h = Fnv::new();
+        for &d in &self.dims {
+            h.write_u64(d as u64);
+        }
+        h.write_u64(self.act.name().len() as u64);
+        h.write_bytes(self.act.name().as_bytes());
+        h.write_u64(self.problem.code() as u64);
+        h.write_u64(self.beta.to_bits() as u64);
+        h.write_u64(self.gamma.to_bits() as u64);
+        h.write_u64(self.warmup_iters as u64);
+        h.write_u64(self.iters as u64);
+        h.write_u64(self.eval_every as u64);
+        h.write_u64(self.seed);
+        h.write_bytes(self.multiplier_mode.name().as_bytes());
+        h.write_bytes(self.init.name().as_bytes());
+        h.write_u64(self.ridge.to_bits());
+        h.write_u64(self.momentum.to_bits() as u64);
+        h.write_u64(self.world() as u64);
+        h.finish()
+    }
+
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(self.dims.len() >= 2, "need at least one layer");
         anyhow::ensure!(self.dims.iter().all(|&d| d > 0), "zero-width layer");
@@ -218,6 +298,26 @@ impl TrainConfig {
         );
         anyhow::ensure!(self.beta > 0.0 && self.gamma > 0.0, "penalties must be positive");
         anyhow::ensure!(self.workers >= 1, "need at least one worker");
+        if self.transport == Transport::Tcp {
+            anyhow::ensure!(self.world_size >= 1, "tcp transport needs --world-size >= 1");
+            anyhow::ensure!(
+                self.rank < self.world_size,
+                "--rank {} out of range for --world-size {}",
+                self.rank,
+                self.world_size
+            );
+            if self.world_size > 1 {
+                anyhow::ensure!(
+                    !self.peers.is_empty(),
+                    "tcp transport needs --peers (peers[0] is the rank-0 hub address)"
+                );
+                anyhow::ensure!(
+                    self.peers.len() == 1 || self.peers.len() == self.world_size,
+                    "--peers must list 1 (hub only) or world-size addresses, got {}",
+                    self.peers.len()
+                );
+            }
+        }
         anyhow::ensure!(self.threads >= 1, "need at least one intra-rank thread");
         anyhow::ensure!(self.iters >= 1, "need at least one iteration");
         anyhow::ensure!(self.eval_every >= 1, "eval_every must be >= 1");
@@ -240,6 +340,16 @@ impl TrainConfig {
                 "warmup_iters" => c.warmup_iters = val.as_usize()?,
                 "iters" => c.iters = val.as_usize()?,
                 "workers" => c.workers = val.as_usize()?,
+                "transport" => c.transport = Transport::parse(val.as_str()?)?,
+                "rank" => c.rank = val.as_usize()?,
+                "world_size" => c.world_size = val.as_usize()?,
+                "peers" => {
+                    c.peers = val
+                        .as_arr()?
+                        .iter()
+                        .map(|p| p.as_str().map(str::to_string))
+                        .collect::<Result<_>>()?
+                }
                 "threads" => c.threads = val.as_usize()?,
                 "multiplier_mode" => c.multiplier_mode = MultiplierMode::parse(val.as_str()?)?,
                 "backend" => c.backend = Backend::parse(val.as_str()?)?,
@@ -294,6 +404,18 @@ impl TrainConfig {
         }
         if let Some(v) = args.get("workers") {
             self.workers = v.parse()?;
+        }
+        if let Some(v) = args.get("transport") {
+            self.transport = Transport::parse(v)?;
+        }
+        if let Some(v) = args.get("rank") {
+            self.rank = v.parse()?;
+        }
+        if let Some(v) = args.get("world-size") {
+            self.world_size = v.parse()?;
+        }
+        if let Some(v) = args.get("peers") {
+            self.peers = v.split(',').map(|p| p.trim().to_string()).collect();
         }
         if let Some(v) = args.get("threads") {
             self.threads = v.parse()?;
@@ -581,6 +703,70 @@ mod tests {
         assert!(c.validate().is_err());
         c.backend = Backend::Native;
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn transport_config_parses_and_validates() {
+        // JSON form
+        let c = TrainConfig::from_json(
+            &Json::parse(
+                r#"{"transport": "tcp", "rank": 1, "world_size": 2,
+                    "peers": ["10.0.0.1:7000", "10.0.0.2:7000"]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.transport, Transport::Tcp);
+        assert_eq!((c.rank, c.world_size), (1, 2));
+        assert_eq!(c.world(), 2);
+        assert_eq!(c.peers, vec!["10.0.0.1:7000", "10.0.0.2:7000"]);
+
+        // CLI form; a hub-only peer list is accepted
+        let mut c = TrainConfig::default();
+        let args = Args::parse_from(
+            ["--transport", "tcp", "--rank", "0", "--world-size", "3", "--peers", "h:1"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.transport, Transport::Tcp);
+        assert_eq!(c.world(), 3);
+        assert_eq!(c.peers, vec!["h:1"]);
+
+        // local stays the default and worlds off `workers`
+        let c = TrainConfig::default();
+        assert_eq!(c.transport, Transport::Local);
+        assert_eq!(c.world(), c.workers);
+
+        // invalid: rank out of range, missing peers, bad peer count
+        let mut c = TrainConfig::default();
+        c.transport = Transport::Tcp;
+        c.world_size = 2;
+        c.rank = 2;
+        assert!(c.validate().is_err());
+        c.rank = 1;
+        assert!(c.validate().is_err()); // no peers
+        c.peers = vec!["a:1".into(), "b:2".into(), "c:3".into()];
+        assert!(c.validate().is_err()); // 3 peers for world 2
+        c.peers = vec!["a:1".into(), "b:2".into()];
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn spmd_fingerprint_tracks_schedule_fields() {
+        let a = TrainConfig::default();
+        let mut b = TrainConfig::default();
+        assert_eq!(a.spmd_fingerprint(), b.spmd_fingerprint());
+        b.name = "renamed".into(); // label-only field: no schedule impact
+        assert_eq!(a.spmd_fingerprint(), b.spmd_fingerprint());
+        b.iters += 1;
+        assert_ne!(a.spmd_fingerprint(), b.spmd_fingerprint());
+        let mut c = TrainConfig::default();
+        c.seed = 1;
+        assert_ne!(a.spmd_fingerprint(), c.spmd_fingerprint());
+        let mut d = TrainConfig::default();
+        d.workers += 1; // world size shapes the shards
+        assert_ne!(a.spmd_fingerprint(), d.spmd_fingerprint());
     }
 
     #[test]

@@ -1,22 +1,27 @@
 //! The ADMM coordinator — the paper's system contribution (Algorithm 1 +
-//! the §5 data-parallel schedule), as a leader/worker architecture:
+//! the §5 data-parallel schedule), as a rank-symmetric SPMD architecture:
 //!
 //! * `updates` — the closed-form minimization sub-steps, rust-native
 //!   (twin of the L1 Pallas kernels; also the classical-ADMM ablation math);
-//! * `backend` — per-worker numeric backend: `Native` (pure rust) or
+//! * `backend` — per-rank numeric backend: `Native` (pure rust) or
 //!   `Pjrt` (the AOT JAX/Pallas artifacts via the runtime);
-//! * `worker` — persistent worker threads (simulated MPI ranks) owning
-//!   activation/output/multiplier shards and a thread-affine backend;
-//! * `trainer` — the leader: drives Algorithm 1, performs the
-//!   transpose-reduction weight update, tracks convergence and traffic,
+//! * `spmd` — the SPMD rank loop: every rank owns its column shard, runs
+//!   all of Algorithm 1, and meets its peers only through the
+//!   `cluster::Collectives` transport (Gram allreduce, rank-0 W/minv
+//!   broadcast, scalar eval reductions); plus the sharded loss-grad
+//!   oracle the gradient baselines fan out over;
+//! * `trainer` — the public driver: forms a `Local` (threads) or `Tcp`
+//!   (processes) world, runs every rank, tracks convergence and traffic,
 //!   and calibrates the scaling profile used by figs 1a/2a.
 
 mod backend;
 pub mod recurrent;
+pub mod spmd;
 mod trainer;
 pub mod updates;
-mod worker;
 
 pub use backend::{BackendKind, NativeBackend, PjrtBackend, WorkerBackendImpl};
-pub use trainer::{AdmmTrainer, TrainOutcome, TrainStats};
-pub use worker::{Cmd, Resp, WorkerPool};
+pub use spmd::{train_rank, ShardedObjective, SpmdOpts};
+pub use trainer::{
+    allreduce_bytes_per_iter, broadcast_bytes_per_iter, AdmmTrainer, TrainOutcome, TrainStats,
+};

@@ -1,0 +1,687 @@
+//! The rank-symmetric SPMD training core — every rank runs all of
+//! Algorithm 1 (paper §5) and synchronizes only through
+//! [`Collectives`](crate::cluster::Collectives).
+//!
+//! Per iteration, for each layer `l = 1…L`, every rank:
+//!
+//! 1. computes its local Gram pair `(z aᵀ, a aᵀ)` into recycled buffers
+//!    and **allreduces** it (transpose reduction — the only inter-rank
+//!    communication of the algorithm);
+//! 2. rank 0 solves `W_l = (Z Aᵀ)(A Aᵀ + εI)⁻¹` (ridge-guarded
+//!    pseudoinverse), applies heavy-ball momentum, factors the
+//!    shard-independent `(β W_{l+1}ᵀ W_{l+1} + γI)⁻¹` for hidden layers,
+//!    and **broadcasts** both — exactly the traffic the
+//!    `TrainStats`/`CostModel` formulas price;
+//! 3. runs the embarrassingly parallel `a_l` / `z_l` updates on its
+//!    column shard (the output layer runs the configured `Problem`'s
+//!    closed-form `z_L` prox and, past warm-up, the Bregman λ step).
+//!
+//! Weights are replicated: every rank applies the same broadcast bytes,
+//! so rank-local copies stay bit-identical without further traffic.
+//! Evaluation and feasibility telemetry are rank-order scalar
+//! allreduces; rank 0 owns the test-set metric and broadcasts a
+//! stop/metric control word each eval so early stopping is uniform
+//! across ranks.  The whole schedule folds in rank order on every
+//! transport, which makes an N-rank run bit-reproducible — and
+//! bit-identical to the seed leader-driven `WorkerPool` it replaced
+//! (pinned by `tests/spmd_regression.rs`) and across `Local`/`Tcp`
+//! (pinned by `tests/transport_equivalence.rs`).
+//!
+//! In steady state the rank-side hot path allocates nothing: shard
+//! updates write in place through the `_into` kernels, Gram pairs and
+//! broadcast payloads land in pre-sized recycled buffers, and the
+//! `Local` transport's reduction slots are recycled too
+//! (`tests/alloc_regression.rs`).
+
+use std::sync::atomic::Ordering;
+
+use crate::cluster::Collectives;
+use crate::config::{InitScheme, MultiplierMode, TrainConfig};
+use crate::coordinator::backend::{BackendKind, WorkerBackendImpl};
+use crate::coordinator::trainer::{
+    allreduce_bytes_per_iter, broadcast_bytes_per_iter, TrainOutcome, TrainStats,
+};
+use crate::coordinator::updates;
+use crate::data::Dataset;
+use crate::linalg::{
+    a_update_inverse, gemm_nn, gemm_tn, weight_solve_into, Matrix, WeightSolveScratch,
+};
+use crate::metrics::{CurvePoint, Recorder, Stopwatch};
+use crate::nn::Mlp;
+use crate::rng::Rng;
+use crate::Result;
+
+/// Per-run options that shape the collective schedule (they are hashed
+/// into the TCP fingerprint — every rank must be launched with the same
+/// values or the world refuses to form).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpmdOpts {
+    /// Stop as soon as the test metric crosses this (direction per
+    /// [`crate::problem::Problem::metric_higher_is_better`]).
+    pub target_metric: Option<f64>,
+    /// Record feasibility penalties each eval (costs one extra scalar
+    /// allreduce).
+    pub track_penalty: bool,
+    /// Per-eval progress lines on rank 0.
+    pub verbose: bool,
+}
+
+impl SpmdOpts {
+    /// Mixed into [`TrainConfig::spmd_fingerprint`] so divergent launch
+    /// flags fail the TCP handshake instead of desyncing the schedule.
+    pub fn fingerprint(&self) -> u64 {
+        let t = self.target_metric.map(|t| t.to_bits()).unwrap_or(u64::MAX ^ 0x5bd1);
+        t.rotate_left(9) ^ ((self.track_penalty as u64) << 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    }
+}
+
+/// One rank's entire state: its column shard of the auxiliary variables,
+/// its replica of the weights, recycled collective buffers, and (rank 0
+/// only) the solve scratch and momentum history.
+struct RankState {
+    rank: usize,
+    x: Matrix,         // (d0, n_local) input shard
+    y: Matrix,         // (dL, n_local) expanded label shard
+    acts: Vec<Matrix>, // a_1 … a_{L-1}
+    zs: Vec<Matrix>,   // z_1 … z_L
+    lam: Matrix,       // Bregman multiplier on z_L
+    /// Classical-mode duals: u_l for z_l = W_l a_{l-1}, v_l for a_l = h(z_l).
+    u: Vec<Matrix>,
+    v: Vec<Matrix>,
+    /// Replicated weights (every rank applies the same broadcasts).
+    weights: Vec<Matrix>,
+    /// Reusable per-rank scratch (pre-sized m / rhs buffers + intra-rank
+    /// thread count for the dense kernels).
+    scratch: updates::Workspace,
+    /// Recycled Gram-pair reduction buffers.
+    zat: Matrix,
+    aat: Matrix,
+    /// Recycled broadcast landing buffers (W_l, then minv for hidden).
+    w_bcast: Matrix,
+    minv_buf: Matrix,
+    /// Cached `a_0 a_0ᵀ` — the layer-1 input Gram never changes across
+    /// iterations, so the dominant Gram product is computed once per run.
+    aat1_cache: Option<Matrix>,
+    /// Rank-0 momentum history (heavy-ball on the weight sequence).
+    prev_weights: Option<Vec<Matrix>>,
+    /// Rank-0 reusable ridge-solve intermediates.
+    solve_scratch: WeightSolveScratch,
+}
+
+impl RankState {
+    fn a_prev(&self, l: usize) -> &Matrix {
+        if l == 1 {
+            &self.x
+        } else {
+            &self.acts[l - 2]
+        }
+    }
+
+    fn layers(&self) -> usize {
+        self.zs.len()
+    }
+}
+
+/// Build rank `rank`'s shard state exactly as the seed `WorkerPool` did:
+/// same shard ranges, same per-rank RNG streams, same init schemes.
+/// `y_exp` is this rank's **already expanded shard** of the supervision
+/// panel (label expansion is column-independent, so expanding the slice
+/// is bit-identical to slicing the expansion — each rank pays O(shard),
+/// not O(dataset)).
+fn init_rank_state(
+    cfg: &TrainConfig,
+    shard: crate::data::Shard,
+    y_exp: Matrix,
+    x: &Matrix,
+) -> RankState {
+    let rank = shard.rank;
+    let n = shard.len();
+    let layers = cfg.layers();
+    let mut rng = Rng::stream(cfg.seed, 1000 + rank as u64);
+    let x_shard = x.col_range(shard.c0, shard.c1);
+    let (acts, zs) = match cfg.init {
+        // Paper §6: i.i.d. unit Gaussians.
+        InitScheme::Gaussian => (
+            (1..layers)
+                .map(|l| Matrix::randn(cfg.dims[l], n, &mut rng))
+                .collect::<Vec<_>>(),
+            (1..=layers)
+                .map(|l| Matrix::randn(cfg.dims[l], n, &mut rng))
+                .collect::<Vec<_>>(),
+        ),
+        // Forward-consistent init: propagate the shard through shared
+        // random weights (same stream on every rank so the implied global
+        // network is consistent).
+        InitScheme::Forward => {
+            let mut wrng = Rng::stream(cfg.seed, 500);
+            let mlp = Mlp::new(cfg.dims.clone(), cfg.act).expect("validated dims");
+            let ws = mlp.init_weights(&mut wrng);
+            let mut acts = Vec::with_capacity(layers - 1);
+            let mut zs = Vec::with_capacity(layers);
+            let mut a = x_shard.clone();
+            for (l, w) in ws.iter().enumerate() {
+                let z = gemm_nn(w, &a);
+                zs.push(z.clone());
+                if l + 1 < layers {
+                    let mut h = z;
+                    for v in h.as_mut_slice() {
+                        *v = cfg.act.apply(*v);
+                    }
+                    acts.push(h.clone());
+                    a = h;
+                }
+            }
+            (acts, zs)
+        }
+    };
+    RankState {
+        rank,
+        x: x_shard,
+        y: y_exp,
+        acts,
+        zs,
+        lam: Matrix::zeros(*cfg.dims.last().unwrap(), n),
+        u: (1..=layers).map(|l| Matrix::zeros(cfg.dims[l], n)).collect(),
+        v: (1..layers).map(|l| Matrix::zeros(cfg.dims[l], n)).collect(),
+        weights: (0..layers)
+            .map(|l| Matrix::zeros(cfg.dims[l + 1], cfg.dims[l]))
+            .collect(),
+        scratch: updates::Workspace::new(cfg.threads),
+        zat: Matrix::default(),
+        aat: Matrix::default(),
+        w_bcast: Matrix::default(),
+        minv_buf: Matrix::default(),
+        aat1_cache: None,
+        prev_weights: None,
+        solve_scratch: WeightSolveScratch::default(),
+    }
+}
+
+/// Run the full SPMD training loop as rank `comm.rank()` of
+/// `comm.world_size()` ranks.  `train`/`test` are the *full* datasets —
+/// every rank derives its own column shard (in TCP mode each process
+/// regenerates the same data from the shared seed).  The returned
+/// outcome carries the replicated final weights on every rank; the
+/// convergence curve is populated on rank 0 only.
+pub fn train_rank(
+    cfg: &TrainConfig,
+    comm: &mut Collectives,
+    train: &Dataset,
+    test: &Dataset,
+    opts: &SpmdOpts,
+) -> Result<TrainOutcome> {
+    cfg.validate()?;
+    let world = comm.world_size();
+    let rank = comm.rank();
+    anyhow::ensure!(
+        world == cfg.world(),
+        "communicator world size {world} does not match config world {}",
+        cfg.world()
+    );
+    anyhow::ensure!(
+        train.features() == cfg.dims[0],
+        "dataset has {} features, config dims[0] = {}",
+        train.features(),
+        cfg.dims[0]
+    );
+    let d_l = *cfg.dims.last().unwrap();
+    // Validate/expand only this rank's label shard (expansion is
+    // column-independent, so this is bit-identical to slicing a full
+    // expansion) — O(shard) per rank instead of O(dataset) × world.
+    // AdmmTrainer::new has already validated the full panels once.
+    let shard = crate::data::shard_ranges(train.x.cols(), world)[rank];
+    let y_raw_shard = train.y.col_range(shard.c0, shard.c1);
+    cfg.problem.validate_labels(&y_raw_shard, d_l)?;
+    let y_exp_shard = cfg.problem.expand_labels(&y_raw_shard, d_l);
+
+    let mut st = init_rank_state(cfg, shard, y_exp_shard, &train.x);
+    let mut backend = BackendKind::from_config(cfg).build()?;
+
+    // Rank 0 owns the test metric and the convergence curve.
+    let eval = if rank == 0 {
+        cfg.problem.validate_labels(&test.y, d_l)?;
+        Some((
+            Mlp::with_problem(cfg.dims.clone(), cfg.act, cfg.problem)?,
+            cfg.problem.expand_labels(&test.y, d_l),
+        ))
+    } else {
+        None
+    };
+    let mut recorder = Recorder::new(format!(
+        "admm_{}_{}w_{}",
+        cfg.name,
+        world,
+        cfg.backend.name()
+    ))
+    .with_metric(cfg.problem.metric_name(), cfg.problem.metric_higher_is_better());
+
+    let mut stats = TrainStats {
+        allreduce_bytes_per_iter: allreduce_bytes_per_iter(&cfg.dims),
+        broadcast_bytes_per_iter: broadcast_bytes_per_iter(&cfg.dims),
+        ..TrainStats::default()
+    };
+    let mut reached: Option<(usize, f64)> = None;
+    let mut opt_s = 0.0f64;
+
+    for it in 0..cfg.iters {
+        let sw = Stopwatch::start();
+        let leader_s = iteration(cfg, &mut st, &mut backend, comm, it)?;
+        let iter_s = sw.elapsed_s();
+        opt_s += iter_s;
+        stats.leader_seconds += leader_s;
+        stats.worker_seconds += iter_s - leader_s;
+        stats.iters_run = it + 1;
+
+        if it % cfg.eval_every == 0 || it + 1 == cfg.iters {
+            // Σ over ranks of (loss, correct, n) — rank-order fold, so the
+            // totals are bit-identical to the seed leader's summation.
+            let (loss, correct, n) = backend.eval(&st.weights, &st.x, &st.y, cfg.act)?;
+            let mut vals = [loss, correct, n as f64];
+            comm.allreduce_scalars(&mut vals)?;
+            let penalty = if opts.track_penalty {
+                let (eq_z, eq_a) = updates::penalties(
+                    &st.weights,
+                    &st.x,
+                    &st.acts,
+                    &st.zs,
+                    cfg.gamma,
+                    cfg.beta,
+                    cfg.act,
+                );
+                let mut pv = [eq_z, eq_a];
+                comm.allreduce_scalars(&mut pv)?;
+                pv[0] + pv[1]
+            } else {
+                f64::NAN
+            };
+            // ctrl word: [stop flag, test metric] from rank 0, so early
+            // stopping is uniform across ranks.
+            let mut ctrl = [0.0f64, f64::NAN];
+            if let Some((mlp, test_y)) = &eval {
+                let metric = mlp.metric(&st.weights, &test.x, test_y);
+                let train_loss = vals[0] / (vals[2].max(1.0));
+                recorder.push(CurvePoint {
+                    iter: it,
+                    wall_s: opt_s,
+                    train_loss,
+                    test_acc: metric,
+                    penalty,
+                });
+                if opts.verbose {
+                    eprintln!(
+                        "[admm {}] iter {it:4}  t={opt_s:8.3}s  loss={train_loss:.4}  \
+                         {}={metric:.4}{}",
+                        cfg.name,
+                        recorder.metric_name,
+                        if penalty.is_nan() {
+                            String::new()
+                        } else {
+                            format!("  penalty={penalty:.3e}")
+                        }
+                    );
+                }
+                if let Some(t) = opts.target_metric {
+                    if recorder.meets_target(metric, t) && reached.is_none() {
+                        reached = Some((it, opt_s));
+                        ctrl[0] = 1.0;
+                    }
+                }
+                ctrl[1] = metric;
+            }
+            comm.broadcast_scalars(0, &mut ctrl)?;
+            if ctrl[0] != 0.0 {
+                break;
+            }
+        }
+    }
+    stats.opt_seconds = opt_s;
+    // Measured traffic (counted once per collective, on rank 0 / the
+    // hub) — the source of truth the closed-form per-iteration formulas
+    // are checked against in `benches/scaling.rs`.
+    let cs = comm.stats();
+    stats.allreduce_bytes_measured = cs.allreduce_bytes.load(Ordering::Relaxed);
+    stats.broadcast_bytes_measured = cs.broadcast_bytes.load(Ordering::Relaxed);
+    stats.scalar_bytes_measured = cs.scalar_bytes.load(Ordering::Relaxed);
+
+    Ok(TrainOutcome {
+        weights: st.weights,
+        recorder,
+        stats,
+        reached_target_at: reached,
+    })
+}
+
+/// One full Algorithm-1 sweep on this rank. Returns rank-0 solve seconds.
+fn iteration(
+    cfg: &TrainConfig,
+    st: &mut RankState,
+    backend: &mut WorkerBackendImpl,
+    comm: &mut Collectives,
+    it: usize,
+) -> Result<f64> {
+    let layers = st.layers();
+    let past_warmup = it >= cfg.warmup_iters;
+    let mut leader_s = 0.0;
+
+    for l in 1..=layers {
+        // (1) local Gram pair + transpose-reduction allreduce
+        gram_phase(cfg, st, backend, l)?;
+        comm.allreduce_sum(&mut st.zat)?;
+        comm.allreduce_sum(&mut st.aat)?;
+
+        // (2) rank 0 solves W_l (+ the a-update inverse for hidden layers)
+        if st.rank == 0 {
+            let sw = Stopwatch::start();
+            let mut w_solved = Matrix::default();
+            weight_solve_into(&st.zat, &st.aat, cfg.ridge, &mut st.solve_scratch, &mut w_solved)?;
+            let w_new = apply_momentum(st, l - 1, w_solved, cfg.momentum);
+            st.w_bcast = w_new;
+            if l < layers {
+                // uses the OLD W_{l+1} (updated later this sweep) — exactly
+                // Algorithm 1's in-place sequencing.
+                st.minv_buf = a_update_inverse(&st.weights[l], cfg.beta, cfg.gamma)?;
+            }
+            leader_s += sw.elapsed_s();
+        }
+        comm.broadcast(0, &mut st.w_bcast)?;
+        if l < layers {
+            comm.broadcast(0, &mut st.minv_buf)?;
+        }
+
+        // (3) embarrassingly parallel shard updates (same in-place
+        // sequencing as the seed worker loop: the a-update reads the OLD
+        // W_{l+1} replica, then W_l flips to the broadcast solve, then the
+        // z-update reads the NEW W_l)
+        if l < layers {
+            a_update_phase(cfg, st, backend, l)?;
+            st.weights[l - 1].copy_from(&st.w_bcast);
+            z_hidden_phase(cfg, st, backend, l)?;
+        } else {
+            st.weights[l - 1].copy_from(&st.w_bcast);
+            let update_lambda = past_warmup && cfg.multiplier_mode == MultiplierMode::Bregman;
+            z_out_phase(cfg, st, backend, update_lambda)?;
+        }
+    }
+
+    if past_warmup && cfg.multiplier_mode == MultiplierMode::Classical {
+        update_duals(cfg, st)?;
+    }
+    Ok(leader_s)
+}
+
+/// Heavy-ball momentum on the weight sequence (paper §8.1 extension):
+/// `W ← W_new + μ (W_new − W_prev)` — rank-0 state, verbatim the seed
+/// trainer's arithmetic.
+fn apply_momentum(st: &mut RankState, idx: usize, w_new: Matrix, momentum: f32) -> Matrix {
+    if momentum == 0.0 {
+        return w_new;
+    }
+    let out = match &st.prev_weights {
+        Some(prev) if prev[idx].shape() == w_new.shape() && !prev[idx].is_empty() => {
+            let mut out = w_new.clone();
+            let mut delta = w_new.clone();
+            delta.sub_assign(&prev[idx]);
+            out.axpy(momentum, &delta);
+            out
+        }
+        _ => w_new.clone(),
+    };
+    if st.prev_weights.is_none() {
+        st.prev_weights = Some(
+            st.weights
+                .iter()
+                .map(|w| Matrix::zeros(w.rows(), w.cols()))
+                .collect(),
+        );
+    }
+    st.prev_weights.as_mut().unwrap()[idx] = w_new;
+    out
+}
+
+/// Local Gram pair of layer `l` into the recycled `zat`/`aat` buffers.
+/// Classical mode shifts z by its dual first; layer 1 reuses the cached
+/// input Gram.
+fn gram_phase(
+    cfg: &TrainConfig,
+    st: &mut RankState,
+    backend: &mut WorkerBackendImpl,
+    l: usize,
+) -> Result<()> {
+    let RankState { x, acts, zs, u, zat, aat, scratch, aat1_cache, .. } = st;
+    let threads = scratch.threads;
+    let a_prev: &Matrix = if l == 1 { x } else { &acts[l - 2] };
+    if cfg.multiplier_mode == MultiplierMode::Classical {
+        // scaled-dual least squares: fit (z + u) against a_prev
+        let mut z_eff = zs[l - 1].clone();
+        z_eff.add_assign(&u[l - 1]);
+        backend.gram_into(l, &z_eff, a_prev, threads, zat, aat)?;
+        return Ok(());
+    }
+    // Layer 1: a_prev = a_0 = the (constant) data — reuse its Gram.
+    if l == 1 {
+        if let Some(cache) = aat1_cache {
+            backend.zat_only_into(l, &zs[0], a_prev, threads, zat)?;
+            aat.copy_from(cache);
+        } else {
+            backend.gram_into(l, &zs[0], a_prev, threads, zat, aat)?;
+            *aat1_cache = Some(aat.clone());
+        }
+    } else {
+        backend.gram_into(l, &zs[l - 1], a_prev, threads, zat, aat)?;
+    }
+    Ok(())
+}
+
+/// a_l ← minv (β W_{l+1}ᵀ z_{l+1} + γ h(z_l)); `weights[l]` is the OLD
+/// (pre-update) W_{l+1} replica, `minv_buf` the broadcast inverse.
+fn a_update_phase(
+    cfg: &TrainConfig,
+    st: &mut RankState,
+    backend: &mut WorkerBackendImpl,
+    l: usize,
+) -> Result<()> {
+    if cfg.multiplier_mode == MultiplierMode::Classical {
+        // native-only math with dual shifts (see backend.rs docs)
+        anyhow::ensure!(
+            backend.is_native(),
+            "classical ADMM ablation requires --backend native"
+        );
+        let mut z_next_eff = st.zs[l].clone();
+        z_next_eff.add_assign(&st.u[l]);
+        // rhs h-term: γ (h(z_l) − v_l)
+        let mut rhs = gemm_tn(&st.weights[l], &z_next_eff);
+        rhs.scale(cfg.beta);
+        for i in 0..rhs.len() {
+            let h = cfg.act.apply(st.zs[l - 1].as_slice()[i]);
+            rhs.as_mut_slice()[i] += cfg.gamma * (h - st.v[l - 1].as_slice()[i]);
+        }
+        st.acts[l - 1] = gemm_nn(&st.minv_buf, &rhs);
+    } else {
+        // In-place: read z_{l+1}, z_l; write a_l through the scratch.
+        let RankState { acts, zs, scratch, weights, minv_buf, .. } = st;
+        let threads = scratch.threads;
+        backend.a_update_into(
+            l,
+            minv_buf,
+            &weights[l],
+            &zs[l],
+            &zs[l - 1],
+            threads,
+            &mut scratch.rhs,
+            &mut acts[l - 1],
+        )?;
+    }
+    Ok(())
+}
+
+/// z_l ← entry-wise global solve with the freshly updated `weights[l-1]`.
+fn z_hidden_phase(
+    cfg: &TrainConfig,
+    st: &mut RankState,
+    backend: &mut WorkerBackendImpl,
+    l: usize,
+) -> Result<()> {
+    if cfg.multiplier_mode == MultiplierMode::Classical {
+        // min γ‖(a+v) − h(z)‖² + β‖z − (W a_prev − u)‖²
+        let mut a_eff = st.acts[l - 1].clone();
+        a_eff.add_assign(&st.v[l - 1]);
+        let mut m = gemm_nn(&st.weights[l - 1], st.a_prev(l));
+        m.sub_assign(&st.u[l - 1]);
+        st.zs[l - 1] = updates::z_hidden(&a_eff, &m, cfg.gamma, cfg.beta, cfg.act);
+    } else {
+        let RankState { x, acts, zs, scratch, weights, .. } = st;
+        let threads = scratch.threads;
+        let a_prev: &Matrix = if l == 1 { &*x } else { &acts[l - 2] };
+        backend.z_hidden_into(
+            l,
+            &weights[l - 1],
+            a_prev,
+            &acts[l - 1],
+            threads,
+            &mut scratch.m,
+            &mut zs[l - 1],
+        )?;
+    }
+    Ok(())
+}
+
+/// z_L update (+ Bregman λ step when `update_lambda`).
+fn z_out_phase(
+    cfg: &TrainConfig,
+    st: &mut RankState,
+    backend: &mut WorkerBackendImpl,
+    update_lambda: bool,
+) -> Result<()> {
+    let ll = st.layers();
+    if cfg.multiplier_mode == MultiplierMode::Classical {
+        let mut m = gemm_nn(&st.weights[ll - 1], st.a_prev(ll));
+        m.sub_assign(&st.u[ll - 1]);
+        let zero = Matrix::zeros(st.y.rows(), st.y.cols());
+        st.zs[ll - 1] = cfg.problem.z_out(&st.y, &m, &zero, cfg.beta);
+        // classical mode never runs the Bregman λ step
+    } else {
+        let RankState { x, y, acts, zs, lam, scratch, weights, .. } = st;
+        let threads = scratch.threads;
+        let a_prev: &Matrix = if ll == 1 { &*x } else { &acts[ll - 2] };
+        backend.z_out_into(
+            &weights[ll - 1],
+            a_prev,
+            &*y,
+            &*lam,
+            threads,
+            &mut scratch.m,
+            &mut zs[ll - 1],
+        )?;
+        if update_lambda && cfg.multiplier_mode == MultiplierMode::Bregman {
+            backend.lambda_update(lam, &zs[ll - 1], &scratch.m)?;
+        }
+    }
+    Ok(())
+}
+
+/// Classical-ADMM per-constraint dual updates (ablation mode).
+fn update_duals(cfg: &TrainConfig, st: &mut RankState) -> Result<()> {
+    anyhow::ensure!(
+        cfg.multiplier_mode == MultiplierMode::Classical,
+        "UpdateDuals only valid in classical mode"
+    );
+    for l in 1..=st.layers() {
+        // u_l += z_l − W_l a_{l-1}
+        let m = gemm_nn(&st.weights[l - 1], st.a_prev(l));
+        for i in 0..st.u[l - 1].len() {
+            st.u[l - 1].as_mut_slice()[i] += st.zs[l - 1].as_slice()[i] - m.as_slice()[i];
+        }
+        // v_l += a_l − h(z_l)  (hidden layers)
+        if l < st.layers() {
+            for i in 0..st.v[l - 1].len() {
+                let h = cfg.act.apply(st.zs[l - 1].as_slice()[i]);
+                st.v[l - 1].as_mut_slice()[i] += st.acts[l - 1].as_slice()[i] - h;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Data-parallel `(Σ loss, Σ grads)` oracle for the gradient baselines —
+/// the SPMD replacement for the old worker pool's `LossGrad` phase.  The
+/// full dataset is sharded over `cfg.workers` column ranges; each call
+/// fans the weight replica out to scoped rank threads and folds the
+/// results **in rank order** (bit-identical to the seed pool's fold).
+///
+/// Backends are constructed per call inside each rank thread — PJRT
+/// contexts are thread-affine, so they cannot be cached across the
+/// scoped threads a call spawns.  The native backend (the only one the
+/// in-repo baselines drive through this substrate) is a four-field
+/// struct, free to build; PJRT callers pay an artifact reload per
+/// `loss_grad` call, which a persistent rank pool would avoid (ROADMAP
+/// follow-up — it would reintroduce exactly the command-channel
+/// machinery the SPMD redesign removed, so it waits for a real user).
+pub struct ShardedObjective {
+    shards: Vec<(Matrix, Matrix)>,
+    backend_kind: BackendKind,
+    act: crate::config::Activation,
+    n: usize,
+}
+
+impl ShardedObjective {
+    /// Shard `x`/`y` over `cfg.workers` ranks.  `y` must already be the
+    /// expanded `(d_L × n)` supervision panel.
+    pub fn new(cfg: &TrainConfig, x: &Matrix, y: &Matrix) -> Result<ShardedObjective> {
+        anyhow::ensure!(x.cols() == y.cols(), "x/y column mismatch");
+        anyhow::ensure!(y.rows() == *cfg.dims.last().unwrap(), "y rows != d_L");
+        let shards = crate::data::shard_ranges(x.cols(), cfg.workers)
+            .iter()
+            .map(|s| (x.col_range(s.c0, s.c1), y.col_range(s.c0, s.c1)))
+            .collect();
+        Ok(ShardedObjective {
+            shards,
+            backend_kind: BackendKind::from_config(cfg),
+            act: cfg.act,
+            n: x.cols(),
+        })
+    }
+
+    pub fn samples(&self) -> usize {
+        self.n
+    }
+
+    /// Σ over ranks of (loss, per-layer grads), folded in rank order.
+    pub fn loss_grad(&self, ws: &[Matrix]) -> Result<(f64, Vec<Matrix>)> {
+        let results: Vec<Result<(f64, Vec<Matrix>)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .shards
+                .iter()
+                .map(|(x, y)| {
+                    let kind = self.backend_kind.clone();
+                    let act = self.act;
+                    scope.spawn(move || -> Result<(f64, Vec<Matrix>)> {
+                        let mut backend = kind.build()?;
+                        backend.loss_grad(ws, x, y, act)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| match h.join() {
+                    Ok(r) => r,
+                    Err(_) => Err(anyhow::anyhow!("loss-grad rank panicked")),
+                })
+                .collect()
+        });
+        let mut total = 0.0f64;
+        let mut grads: Option<Vec<Matrix>> = None;
+        for res in results {
+            let (loss, g) = res?;
+            total += loss;
+            match &mut grads {
+                None => grads = Some(g),
+                Some(acc) => {
+                    for (a, b) in acc.iter_mut().zip(&g) {
+                        a.add_assign(b);
+                    }
+                }
+            }
+        }
+        Ok((total, grads.expect("at least one rank")))
+    }
+}

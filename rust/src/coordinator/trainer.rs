@@ -1,26 +1,32 @@
-//! The leader: Algorithm 1 over the worker pool.
+//! `AdmmTrainer` — the public entry point over the rank-symmetric SPMD
+//! core (`spmd.rs`).
 //!
-//! Per iteration, for each layer `l = 1…L`:
-//!   1. workers reduce their local Gram pairs (transpose reduction, §5) —
-//!      the ONLY inter-rank communication of the algorithm;
-//!   2. the leader solves `W_l = (Z Aᵀ)(A Aᵀ + εI)⁻¹` (ridge-guarded
-//!      pseudoinverse) and, for hidden layers, factors the shard-
-//!      independent `(β W_{l+1}ᵀ W_{l+1} + γI)⁻¹`;
-//!   3. workers run the embarrassingly parallel `a_l` / `z_l` updates.
-//! The output layer runs the configured `Problem`'s prox/closed-form `z_L`
-//! update (hinge, least-squares or one-vs-all multiclass hinge — eq. 8)
-//! and, past warm-up, the Bregman multiplier step (§4).
+//! The trainer owns the datasets and config; `train()` forms a world on
+//! the configured [`Transport`] and runs [`spmd::train_rank`] on every
+//! rank:
+//!
+//! * `Local` — spawns `cfg.workers` scoped threads over
+//!   [`Collectives::local_world`] (so the single-process `--workers N`
+//!   UX is literally sugar for an N-rank local world) and returns rank
+//!   0's outcome;
+//! * `Tcp` — this process *is* one rank (`cfg.rank` of
+//!   `cfg.world_size`); it joins the world over the peer list and runs
+//!   its shard, returning its own outcome (the convergence curve is
+//!   populated on rank 0 only — gate any checkpoint/CSV writing on it).
 //!
 //! The trainer also produces the calibrated `ScalingProfile` (measured
-//! compute/leader seconds + exact collective byte counts) that figs 1a/2a
-//! extrapolate with the α–β cost model.
+//! compute/rank-0 seconds + exact collective byte counts) that figs
+//! 1a/2a extrapolate with the α–β cost model; `TrainStats` carries both
+//! the closed-form per-iteration traffic formulas and the `CommStats`
+//! bytes actually measured on the wire, which `benches/scaling.rs`
+//! asserts agree.
 
-use crate::cluster::{CostModel, ScalingProfile};
-use crate::config::{Backend, MultiplierMode, TrainConfig};
-use crate::coordinator::worker::WorkerPool;
+use crate::cluster::{Collectives, CostModel, ScalingProfile, TcpComm};
+use crate::config::{Backend, MultiplierMode, TrainConfig, Transport};
+use crate::coordinator::spmd::{self, SpmdOpts};
 use crate::data::Dataset;
-use crate::linalg::{a_update_inverse, weight_solve_into, Matrix, WeightSolveScratch};
-use crate::metrics::{CurvePoint, Recorder, Stopwatch};
+use crate::linalg::Matrix;
+use crate::metrics::Recorder;
 use crate::nn::Mlp;
 use crate::Result;
 
@@ -29,15 +35,26 @@ use crate::Result;
 pub struct TrainStats {
     /// Pure optimization seconds (paper §7 convention: excludes eval/IO).
     pub opt_seconds: f64,
-    /// Leader-side dense solve seconds.
+    /// Rank-0 dense solve seconds (the serial term of the schedule).
     pub leader_seconds: f64,
-    /// Worker-phase wall seconds (max over ranks, as observed by leader).
+    /// Shard-phase wall seconds (iteration wall minus rank-0 solves;
+    /// includes collective wait, like the seed leader's view did).
     pub worker_seconds: f64,
     pub iters_run: usize,
-    /// Bytes a real cluster would allreduce per iteration (Gram pairs).
+    /// Closed-form bytes a cluster allreduces per iteration (Gram pairs).
     pub allreduce_bytes_per_iter: usize,
-    /// Bytes broadcast per iteration (W_l, minv matrices).
+    /// Closed-form bytes broadcast per iteration (W_l, minv matrices).
     pub broadcast_bytes_per_iter: usize,
+    /// Measured allreduce bytes over the whole run (`CommStats`, counted
+    /// once per collective on rank 0 / the hub) — the source of truth the
+    /// formulas are checked against.
+    pub allreduce_bytes_measured: u64,
+    /// Measured broadcast bytes over the whole run.
+    pub broadcast_bytes_measured: u64,
+    /// Measured scalar-reduction bytes (eval/penalty/control words; kept
+    /// out of the matrix-traffic buckets so the per-iteration formulas
+    /// stay exact).
+    pub scalar_bytes_measured: u64,
 }
 
 /// Result of `AdmmTrainer::train`.
@@ -49,20 +66,16 @@ pub struct TrainOutcome {
     pub reached_target_at: Option<(usize, f64)>,
 }
 
-/// Leader/driver for ADMM training (the paper's system contribution).
+/// Driver for SPMD ADMM training (the paper's system contribution).
 pub struct AdmmTrainer {
     cfg: TrainConfig,
-    pool: WorkerPool,
+    train: Dataset,
+    test: Dataset,
     weights: Vec<Matrix>,
-    prev_weights: Option<Vec<Matrix>>,
-    /// Reusable leader-side intermediates for the per-layer ridge solve
-    /// (the output W itself is freshly owned — it moves into `weights` and
-    /// the broadcast).
-    solve_scratch: WeightSolveScratch,
-    test_x: Matrix,
-    test_y: Matrix,
+    test_y_exp: Matrix,
     eval_mlp: Mlp,
-    /// Stop as soon as test accuracy reaches this (time-to-accuracy runs).
+    /// Stop as soon as the test metric crosses this (time-to-accuracy
+    /// runs; direction per the problem's metric — accuracy up, MSE down).
     pub target_acc: Option<f64>,
     /// Record feasibility penalties each eval (costs one extra phase).
     pub track_penalty: bool,
@@ -70,10 +83,13 @@ pub struct AdmmTrainer {
 }
 
 impl AdmmTrainer {
-    /// Shard `train` over the configured workers; `test` is leader-side.
-    /// Raw `(1 × n)` label rows are validated and expanded to the
-    /// network's `(d_L × n)` supervision panel by the configured
-    /// `Problem` (replication for scalar targets, one-hot for multiclass).
+    /// Validate config against the datasets; the world (threads or TCP
+    /// peers) forms lazily inside [`AdmmTrainer::train`].  Raw `(1 × n)`
+    /// label rows are validated and expanded by the configured `Problem`.
+    ///
+    /// The trainer keeps owned copies of both datasets (rank worlds form
+    /// per `train()` call and each rank slices its own shard) — callers
+    /// that are memory-bound can drop their originals after construction.
     pub fn new(cfg: TrainConfig, train: &Dataset, test: &Dataset) -> Result<AdmmTrainer> {
         cfg.validate()?;
         anyhow::ensure!(
@@ -83,7 +99,7 @@ impl AdmmTrainer {
             cfg.dims[0]
         );
         if cfg.backend == Backend::Pjrt {
-            // Fail fast on artifact drift before threads spin up.
+            // Fail fast on artifact drift before any world forms.
             let manifest = crate::runtime::Manifest::load(&cfg.artifacts_dir)?;
             manifest.validate_train_config(&cfg)?;
         }
@@ -96,19 +112,15 @@ impl AdmmTrainer {
         let d_l = *cfg.dims.last().unwrap();
         cfg.problem.validate_labels(&train.y, d_l)?;
         cfg.problem.validate_labels(&test.y, d_l)?;
-        let y_exp = cfg.problem.expand_labels(&train.y, d_l);
-        let pool = WorkerPool::new(&cfg, &train.x, &y_exp)?;
         let weights: Vec<Matrix> = (0..cfg.layers())
             .map(|l| Matrix::zeros(cfg.dims[l + 1], cfg.dims[l]))
             .collect();
         let eval_mlp = Mlp::with_problem(cfg.dims.clone(), cfg.act, cfg.problem)?;
         Ok(AdmmTrainer {
-            test_x: test.x.clone(),
-            test_y: cfg.problem.expand_labels(&test.y, d_l),
-            pool,
+            train: train.clone(),
+            test: test.clone(),
             weights,
-            prev_weights: None,
-            solve_scratch: WeightSolveScratch::default(),
+            test_y_exp: cfg.problem.expand_labels(&test.y, d_l),
             eval_mlp,
             target_acc: None,
             track_penalty: false,
@@ -125,167 +137,100 @@ impl AdmmTrainer {
         &self.weights
     }
 
-    /// One full Algorithm-1 sweep. Returns leader-solve seconds.
-    fn iteration(&mut self, it: usize) -> Result<f64> {
-        let layers = self.cfg.layers();
-        let past_warmup = it >= self.cfg.warmup_iters;
-        let mut leader_s = 0.0;
-
-        for l in 1..=layers {
-            // (1) transpose-reduction Gram reduce (into pool-owned buffers)
-            let (zat, aat) = self.pool.gram_reduce(l)?;
-
-            // (2) leader solves
-            let sw = Stopwatch::start();
-            let mut w_solved = Matrix::default();
-            weight_solve_into(zat, aat, self.cfg.ridge, &mut self.solve_scratch, &mut w_solved)?;
-            let w_new = self.apply_momentum(l - 1, w_solved);
-            let minv = if l < layers {
-                // uses the OLD W_{l+1} (updated later this sweep) — exactly
-                // Algorithm 1's in-place sequencing.
-                Some(a_update_inverse(&self.weights[l], self.cfg.beta, self.cfg.gamma)?)
-            } else {
-                None
-            };
-            leader_s += sw.elapsed_s();
-
-            // (3) worker phases (operands move into a shared Arc broadcast)
-            if l < layers {
-                let w_next_old = self.weights[l].clone();
-                self.pool
-                    .a_update(l, minv.expect("hidden layers factor minv"), w_next_old)?;
-                self.weights[l - 1] = w_new;
-                self.pool.z_hidden(l, self.weights[l - 1].clone())?;
-            } else {
-                self.weights[l - 1] = w_new;
-                let update_lambda =
-                    past_warmup && self.cfg.multiplier_mode == MultiplierMode::Bregman;
-                self.pool.z_out(self.weights[l - 1].clone(), update_lambda)?;
-            }
-        }
-
-        if past_warmup && self.cfg.multiplier_mode == MultiplierMode::Classical {
-            self.pool.update_duals(&self.weights)?;
-        }
-        Ok(leader_s)
+    /// Test metric of the current weights under the configured `Problem`
+    /// (accuracy for the hinge kinds, MSE for least squares).
+    pub fn test_metric(&self) -> f64 {
+        self.eval_mlp.metric(&self.weights, &self.test.x, &self.test_y_exp)
     }
 
-    fn apply_momentum(&mut self, idx: usize, w_new: Matrix) -> Matrix {
-        if self.cfg.momentum == 0.0 {
-            return w_new;
-        }
-        // Heavy-ball on the weight sequence (paper §8.1 extension):
-        // W ← W_new + μ (W_new − W_prev).
-        let out = match &self.prev_weights {
-            Some(prev) if prev[idx].shape() == w_new.shape() && !prev[idx].is_empty() => {
-                let mut out = w_new.clone();
-                let mut delta = w_new.clone();
-                delta.sub_assign(&prev[idx]);
-                out.axpy(self.cfg.momentum, &delta);
-                out
-            }
-            _ => w_new.clone(),
-        };
-        if self.prev_weights.is_none() {
-            self.prev_weights = Some(
-                self.weights
-                    .iter()
-                    .map(|w| Matrix::zeros(w.rows(), w.cols()))
-                    .collect(),
-            );
-        }
-        self.prev_weights.as_mut().unwrap()[idx] = w_new;
-        out
-    }
-
-    /// Leader-side test evaluation (native math; independent of backend;
-    /// metric per the configured `Problem`).
-    pub fn test_accuracy(&self) -> f64 {
-        self.eval_mlp.accuracy(&self.weights, &self.test_x, &self.test_y)
-    }
-
-    /// Full training loop; records a convergence curve.
+    /// Full training loop: form the configured world, run every rank,
+    /// return this process's outcome (rank 0 carries the curve).
     pub fn train(&mut self) -> Result<TrainOutcome> {
-        let mut recorder = Recorder::new(format!(
-            "admm_{}_{}w_{}",
-            self.cfg.name,
-            self.cfg.workers,
-            self.cfg.backend.name()
-        ));
-        let mut stats = TrainStats {
-            allreduce_bytes_per_iter: self.allreduce_bytes_per_iter(),
-            broadcast_bytes_per_iter: self.broadcast_bytes_per_iter(),
-            ..TrainStats::default()
+        let opts = SpmdOpts {
+            target_metric: self.target_acc,
+            track_penalty: self.track_penalty,
+            verbose: self.verbose,
         };
-        let mut reached: Option<(usize, f64)> = None;
-        let mut opt_s = 0.0f64;
-
-        for it in 0..self.cfg.iters {
-            let sw = Stopwatch::start();
-            let leader_s = self.iteration(it)?;
-            let iter_s = sw.elapsed_s();
-            opt_s += iter_s;
-            stats.leader_seconds += leader_s;
-            stats.worker_seconds += iter_s - leader_s;
-            stats.iters_run = it + 1;
-
-            if it % self.cfg.eval_every == 0 || it + 1 == self.cfg.iters {
-                let acc = self.test_accuracy();
-                let (train_loss, _train_acc) = self.pool.eval_train(&self.weights)?;
-                let penalty = if self.track_penalty {
-                    let (eq_z, eq_a) = self.pool.penalties(&self.weights)?;
-                    eq_z + eq_a
-                } else {
-                    f64::NAN
-                };
-                recorder.push(CurvePoint {
-                    iter: it,
-                    wall_s: opt_s,
-                    train_loss,
-                    test_acc: acc,
-                    penalty,
+        let outcome = match self.cfg.transport {
+            Transport::Local => {
+                let cfg = &self.cfg;
+                let (train, test) = (&self.train, &self.test);
+                let opts_ref = &opts;
+                let mut results: Vec<Result<TrainOutcome>> = std::thread::scope(|s| {
+                    let handles: Vec<_> = Collectives::local_world(cfg.workers)
+                        .into_iter()
+                        .map(|mut comm| {
+                            s.spawn(move || {
+                                let res = spmd::train_rank(cfg, &mut comm, train, test, opts_ref);
+                                if res.is_err() {
+                                    // Poison the world so peers blocked in a
+                                    // collective error out instead of hanging.
+                                    comm.abort();
+                                }
+                                res
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| match h.join() {
+                            Ok(r) => r,
+                            Err(_) => Err(anyhow::anyhow!("rank thread panicked")),
+                        })
+                        .collect()
                 });
-                if self.verbose {
-                    eprintln!(
-                        "[admm {}] iter {it:4}  t={opt_s:8.3}s  loss={train_loss:.4}  \
-                         acc={acc:.4}{}",
-                        self.cfg.name,
-                        if penalty.is_nan() {
-                            String::new()
-                        } else {
-                            format!("  penalty={penalty:.3e}")
+                // Surface the root failure: peer ranks report derivative
+                // "world aborted" errors once a rank has failed.
+                if results.iter().any(|r| r.is_err()) {
+                    let mut first_err = None;
+                    for (rank, r) in results.into_iter().enumerate() {
+                        if let Err(e) = r {
+                            let msg = format!("{e:#}");
+                            if !msg.contains("aborted") {
+                                return Err(e.context(format!("rank {rank} failed")));
+                            }
+                            first_err.get_or_insert((rank, e));
                         }
-                    );
-                }
-                if let Some(t) = self.target_acc {
-                    if acc >= t && reached.is_none() {
-                        reached = Some((it, opt_s));
-                        break;
                     }
+                    let (rank, e) = first_err.expect("checked any err");
+                    return Err(e.context(format!("rank {rank} failed")));
                 }
+                results.remove(0).expect("rank 0 outcome")
             }
-        }
-        stats.opt_seconds = opt_s;
-        Ok(TrainOutcome {
-            weights: self.weights.clone(),
-            recorder,
-            stats,
-            reached_target_at: reached,
-        })
+            Transport::Tcp => {
+                // The handshake digest covers the schedule (config +
+                // run options) AND the data: identical dims keep every
+                // Gram shape-compatible, so divergent datasets would
+                // otherwise train silently wrong.
+                let fp = self.cfg.spmd_fingerprint()
+                    ^ opts.fingerprint()
+                    ^ self.train.fingerprint().rotate_left(1)
+                    ^ self.test.fingerprint().rotate_left(33);
+                let mut comm = Collectives::Tcp(TcpComm::connect(
+                    self.cfg.rank,
+                    self.cfg.world_size,
+                    &self.cfg.peers,
+                    fp,
+                )?);
+                let res = spmd::train_rank(&self.cfg, &mut comm, &self.train, &self.test, &opts);
+                if res.is_err() {
+                    comm.abort();
+                }
+                res?
+            }
+        };
+        self.weights = outcome.weights.clone();
+        Ok(outcome)
     }
 
     /// Exact per-iteration allreduce traffic: Σ_l |z aᵀ| + |a aᵀ| floats.
     pub fn allreduce_bytes_per_iter(&self) -> usize {
-        let d = &self.cfg.dims;
-        (1..d.len()).map(|l| 4 * (d[l] * d[l - 1] + d[l - 1] * d[l - 1])).sum()
+        allreduce_bytes_per_iter(&self.cfg.dims)
     }
 
     /// Per-iteration broadcast traffic: W_l everywhere + minv per hidden.
     pub fn broadcast_bytes_per_iter(&self) -> usize {
-        let d = &self.cfg.dims;
-        let w: usize = (1..d.len()).map(|l| 4 * d[l] * d[l - 1]).sum();
-        let minv: usize = (1..d.len() - 1).map(|l| 4 * d[l] * d[l]).sum();
-        w + minv
+        broadcast_bytes_per_iter(&self.cfg.dims)
     }
 
     /// Calibrated scaling profile from a finished run (figs 1a/2a input).
@@ -297,9 +242,10 @@ impl AdmmTrainer {
         cost: CostModel,
     ) -> ScalingProfile {
         let per_iter_worker = stats.worker_seconds / stats.iters_run.max(1) as f64;
-        // `workers` ranks each processed cols/workers columns concurrently:
-        // one core would take workers× the observed phase wall per column.
-        let compute_col_s = per_iter_worker * self.cfg.workers as f64 / cols_total as f64;
+        let world = self.cfg.world();
+        // `world` ranks each processed cols/world columns concurrently:
+        // one core would take world× the observed phase wall per column.
+        let compute_col_s = per_iter_worker * world as f64 / cols_total as f64;
         ScalingProfile {
             cols_total,
             compute_col_s,
@@ -310,6 +256,23 @@ impl AdmmTrainer {
             cost,
         }
     }
+}
+
+/// Closed-form per-iteration allreduce bytes for a layer-dims vector:
+/// Σ_l 4·(d_l·d_{l-1} + d_{l-1}²) — the Gram pairs of §5's transpose
+/// reduction.
+pub fn allreduce_bytes_per_iter(dims: &[usize]) -> usize {
+    (1..dims.len())
+        .map(|l| 4 * (dims[l] * dims[l - 1] + dims[l - 1] * dims[l - 1]))
+        .sum()
+}
+
+/// Closed-form per-iteration broadcast bytes: every W_l plus the
+/// `(β WᵀW + γI)⁻¹` of each hidden layer.
+pub fn broadcast_bytes_per_iter(dims: &[usize]) -> usize {
+    let w: usize = (1..dims.len()).map(|l| 4 * dims[l] * dims[l - 1]).sum();
+    let minv: usize = (1..dims.len() - 1).map(|l| 4 * dims[l] * dims[l]).sum();
+    w + minv
 }
 
 #[cfg(test)]
@@ -329,5 +292,35 @@ mod tests {
         assert_eq!(t.allreduce_bytes_per_iter(), 4 * 43);
         // broadcast: W (3*4 + 2*3 = 18) + minv (3*3) = 27 floats
         assert_eq!(t.broadcast_bytes_per_iter(), 4 * 27);
+    }
+
+    #[test]
+    fn measured_traffic_matches_formulas() {
+        // The CommStats bytes a Local run measures must equal the
+        // closed-form per-iteration formulas times the iteration count —
+        // scalar eval/control traffic lives in its own bucket.
+        let d = crate::data::blobs(6, 300, 2.5, 3);
+        let (train, test) = d.split_test(60);
+        let cfg = TrainConfig {
+            dims: vec![6, 5, 1],
+            gamma: 1.0,
+            iters: 7,
+            warmup_iters: 2,
+            workers: 3,
+            eval_every: 2,
+            ..TrainConfig::default()
+        };
+        let mut t = AdmmTrainer::new(cfg, &train, &test).unwrap();
+        let out = t.train().unwrap();
+        assert_eq!(out.stats.iters_run, 7);
+        assert_eq!(
+            out.stats.allreduce_bytes_measured,
+            (7 * out.stats.allreduce_bytes_per_iter) as u64
+        );
+        assert_eq!(
+            out.stats.broadcast_bytes_measured,
+            (7 * out.stats.broadcast_bytes_per_iter) as u64
+        );
+        assert!(out.stats.scalar_bytes_measured > 0);
     }
 }

@@ -14,13 +14,13 @@
 use crate::config::Activation;
 use crate::linalg::{gemm_nn, par, Matrix};
 
-/// Per-worker scratch for the Algorithm-1 hot loop: pre-sized buffers for
+/// Per-rank scratch for the Algorithm-1 hot loop: pre-sized buffers for
 /// the linear guess `m = W a` and the a-update RHS, plus the intra-rank
 /// thread count for the dense kernels.  (The Gram-pair buffers are NOT
-/// here — they are leader-owned and recycled through the command channels;
-/// see `WorkerPool::gram_bufs`.)  After the first iteration warms every
-/// buffer to its steady shape, a full ADMM sweep performs zero heap
-/// allocation in the worker update phases (asserted by the
+/// here — each SPMD rank recycles its own `zat`/`aat` reduction buffers;
+/// see `coordinator::spmd::RankState`.)  After the first iteration warms
+/// every buffer to its steady shape, a full ADMM sweep performs zero heap
+/// allocation in the rank update phases (asserted by the
 /// `alloc_regression` integration test).
 pub struct Workspace {
     /// Linear guess `m = W a_prev` (also holds `m = W_L a_{L-1}` for the

@@ -64,6 +64,25 @@ impl Dataset {
     pub fn subset(&self, c0: usize, c1: usize) -> Dataset {
         Dataset::new(self.x.col_range(c0, c1), self.y.col_range(c0, c1))
     }
+
+    /// FNV-1a digest of shape + every `x`/`y` bit.  SPMD TCP ranks mix
+    /// this into their handshake fingerprint so processes launched with
+    /// divergent datasets (different `--samples`, files, normalization)
+    /// are rejected at connect time instead of silently contributing
+    /// Grams from inconsistent shards (all Gram shapes are dims-derived,
+    /// so no shape check would ever catch it).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::rng::Fnv::new();
+        h.write_u64(self.x.rows() as u64);
+        h.write_u64(self.x.cols() as u64);
+        for v in self.x.as_slice() {
+            h.write_u64(v.to_bits() as u64);
+        }
+        for v in self.y.as_slice() {
+            h.write_u64(v.to_bits() as u64);
+        }
+        h.finish()
+    }
 }
 
 /// Per-feature affine normalizer (fit on train, applied to train+test —
@@ -230,5 +249,19 @@ mod tests {
         std::fs::remove_file(&p1).ok();
         std::fs::remove_file(&p2).ok();
         std::fs::remove_file(&p3).ok();
+    }
+
+    #[test]
+    fn dataset_fingerprint_tracks_contents() {
+        let a = blobs(4, 50, 2.5, 1);
+        let b = blobs(4, 50, 2.5, 1);
+        assert_eq!(a.fingerprint(), b.fingerprint(), "same draw, same digest");
+        let c = blobs(4, 50, 2.5, 2); // different seed
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        let d = blobs(4, 60, 2.5, 1); // different sample count
+        assert_ne!(a.fingerprint(), d.fingerprint());
+        let mut e = blobs(4, 50, 2.5, 1);
+        *e.x.at_mut(2, 7) += 1.0; // single-value perturbation
+        assert_ne!(a.fingerprint(), e.fingerprint());
     }
 }

@@ -4,10 +4,12 @@
 //! Scalable ADMM Approach”** (Taylor, Burmeister, Xu, Singh, Patel,
 //! Goldstein — ICML 2016) as a three-layer rust + JAX + Pallas stack:
 //!
-//! * **L3 (this crate)** — the rust coordinator: Algorithm 1's leader/worker
-//!   schedule, the transpose-reduction parallel weight update, the simulated
-//!   MPI cluster and its communication cost model, the gradient baselines
-//!   (SGD / CG / L-BFGS), datasets, config, CLI, metrics and benches.
+//! * **L3 (this crate)** — the rust coordinator: Algorithm 1 as a
+//!   rank-symmetric SPMD loop over a pluggable `Collectives` transport
+//!   (in-process threads or TCP multi-process, bit-identical), the
+//!   transpose-reduction parallel weight update, the communication cost
+//!   model, the gradient baselines (SGD / CG / L-BFGS), datasets, config,
+//!   CLI, metrics and benches.
 //! * **L2 (`python/compile/model.py`)** — the per-worker update graphs in
 //!   jax, AOT-lowered once to HLO text artifacts.
 //! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the compute

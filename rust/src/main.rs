@@ -15,7 +15,7 @@
 use gradfree_admm::baselines::{self, LocalObjective, SgdOpts};
 use gradfree_admm::cli::Args;
 use gradfree_admm::cluster::CostModel;
-use gradfree_admm::config::{ServeConfig, TrainConfig};
+use gradfree_admm::config::{ServeConfig, TrainConfig, Transport};
 use gradfree_admm::coordinator::AdmmTrainer;
 use gradfree_admm::data::{self, Dataset, Normalizer};
 use gradfree_admm::metrics::write_curves_csv;
@@ -65,8 +65,12 @@ fn print_usage() {
          --samples N --test-samples N --seed S\n  \
          --backend native|pjrt  --workers N  --threads N  --iters N  --warmup N\n  \
          --gamma G --beta B --momentum M --multiplier-mode bregman|none|classical\n  \
-         --target-acc A   stop at test accuracy A\n  \
-         --out curve.csv  write the convergence curve\n  \
+         --transport local|tcp                 collectives transport (default local)\n  \
+         --rank R --world-size N --peers host:port,…   this process's rank in a\n  \
+         \x20                tcp world (peers[0] is the rank-0 hub; every rank\n  \
+         \x20                must be launched with the same config/seed)\n  \
+         --target-acc A   stop at test metric A (accuracy up / mse down)\n  \
+         --out curve.csv  write the convergence curve (rank 0 only)\n  \
          --penalty        track feasibility penalties\n  \
          --quiet          suppress per-eval lines\n\n\
          baseline: --method sgd|cg|lbfgs --lr --batch --bmomentum --epochs --max-iters\n\
@@ -160,15 +164,24 @@ fn config_from_args(args: &Args) -> Result<TrainConfig> {
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
     let (train, test) = load_data(args, &cfg)?;
+    // In a TCP world every process runs this same command with its own
+    // --rank; only rank 0 records the curve and owns the output files.
+    let is_rank0 = cfg.transport == Transport::Local || cfg.rank == 0;
     println!(
-        "ADMM train: config={} dims={:?} act={} loss={} backend={} workers={} γ={} β={} \
-         mode={} train={}x{} test={}",
+        "ADMM train: config={} dims={:?} act={} loss={} backend={} transport={}{} world={} \
+         γ={} β={} mode={} train={}x{} test={}",
         cfg.name,
         cfg.dims,
         cfg.act.name(),
         cfg.problem.name(),
         cfg.backend.name(),
-        cfg.workers,
+        cfg.transport.name(),
+        if cfg.transport == Transport::Tcp {
+            format!(" rank={}", cfg.rank)
+        } else {
+            String::new()
+        },
+        cfg.world(),
         cfg.gamma,
         cfg.beta,
         cfg.multiplier_mode.name(),
@@ -183,13 +196,25 @@ fn cmd_train(args: &Args) -> Result<()> {
         trainer.target_acc = Some(t.parse()?);
     }
     let out = trainer.train()?;
+    if !is_rank0 {
+        // Non-zero ranks hold the same replicated weights but no curve;
+        // checkpoint/CSV writing is rank 0's job.
+        println!(
+            "rank {} done: iters={} opt_time={:.3}s (curve and outputs are written by rank 0)",
+            trainer.config().rank,
+            out.stats.iters_run,
+            out.stats.opt_seconds
+        );
+        return Ok(());
+    }
+    let metric = out.recorder.metric_name;
     let last = out.recorder.points.last().cloned();
     println!(
-        "done: iters={} opt_time={:.3}s final_acc={:.4} best_acc={:.4}",
+        "done: iters={} opt_time={:.3}s final_{metric}={:.4} best_{metric}={:.4}",
         out.stats.iters_run,
         out.stats.opt_seconds,
         last.map(|p| p.test_acc).unwrap_or(f64::NAN),
-        out.recorder.best_accuracy()
+        out.recorder.best_metric()
     );
     let gaps = out.recorder.eval_gap_summary();
     if gaps.n > 0 {
@@ -200,7 +225,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         );
     }
     if let Some((it, t)) = out.reached_target_at {
-        println!("target accuracy reached at iter {it} after {t:.3}s");
+        println!("target {metric} reached at iter {it} after {t:.3}s");
     }
     if let Some(path) = args.get("out") {
         write_curves_csv(path, &[&out.recorder])?;
@@ -259,10 +284,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .collect();
     let server = gradfree_admm::serve::Server::start(&cfg, ws, act, problem)?;
     println!(
-        "serving {model_path} (dims={dims:?} act={} loss={}) on {}  \
+        "serving {model_path} (dims={dims:?} act={} loss={} metric={}) on {}  \
          [threads={} max_batch={} max_wait_us={}]",
         act.name(),
         problem.name(),
+        problem.metric_name(),
         server.addr(),
         cfg.threads,
         cfg.max_batch,
@@ -335,13 +361,14 @@ fn cmd_baseline(args: &Args) -> Result<()> {
         }
         other => anyhow::bail!("unknown method '{other}' (sgd|cg|lbfgs)"),
     };
+    let metric = out.recorder.metric_name;
     println!(
-        "done: best_acc={:.4} final_acc={:.4}",
-        out.recorder.best_accuracy(),
-        out.recorder.final_accuracy()
+        "done: best_{metric}={:.4} final_{metric}={:.4}",
+        out.recorder.best_metric(),
+        out.recorder.final_metric()
     );
     if let Some((it, t)) = out.reached_target_at {
-        println!("target accuracy reached at step {it} after {t:.3}s");
+        println!("target {metric} reached at step {it} after {t:.3}s");
     }
     if let Some(path) = args.get("out") {
         write_curves_csv(path, &[&out.recorder])?;

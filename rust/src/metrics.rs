@@ -40,36 +40,97 @@ pub struct CurvePoint {
 }
 
 /// Convergence-curve recorder for one training run.
-#[derive(Clone, Debug, Default)]
+///
+/// The test-metric column is named by the run's `Problem`
+/// (`metric_name`/`higher_is_better` — accuracy for the hinge kinds, MSE
+/// for least squares), so curve CSVs and summaries are regression-aware
+/// instead of hard-coding "accuracy".  The `accuracy`-named helpers keep
+/// their seed semantics and are only meaningful for accuracy-metric runs
+/// (every figure bench); direction-aware code should use
+/// [`Recorder::best_metric`] / [`Recorder::meets_target`].
+#[derive(Clone, Debug)]
 pub struct Recorder {
     pub label: String,
+    /// CSV column name of the test metric (default "accuracy").
+    pub metric_name: &'static str,
+    /// Whether larger metric values are better (false for MSE).
+    pub higher_is_better: bool,
     pub points: Vec<CurvePoint>,
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Recorder::new("")
+    }
 }
 
 impl Recorder {
     pub fn new(label: impl Into<String>) -> Self {
-        Recorder { label: label.into(), points: Vec::new() }
+        Recorder {
+            label: label.into(),
+            metric_name: "accuracy",
+            higher_is_better: true,
+            points: Vec::new(),
+        }
+    }
+
+    /// Name the test-metric column (builder style):
+    /// `Recorder::new(label).with_metric(problem.metric_name(), …)`.
+    pub fn with_metric(mut self, name: &'static str, higher_is_better: bool) -> Self {
+        self.metric_name = name;
+        self.higher_is_better = higher_is_better;
+        self
     }
 
     pub fn push(&mut self, p: CurvePoint) {
         self.points.push(p);
     }
 
-    /// First wall-clock time at which test accuracy reached `threshold`
-    /// (the paper's time-to-accuracy metric), if ever.
+    /// Whether `value` satisfies `target` under this recorder's metric
+    /// direction (≥ for accuracy-like, ≤ for error-like).
+    pub fn meets_target(&self, value: f64, target: f64) -> bool {
+        if self.higher_is_better {
+            value >= target
+        } else {
+            value <= target
+        }
+    }
+
+    /// First wall-clock time at which the test metric met `threshold`
+    /// under the metric's direction (the paper's time-to-accuracy
+    /// metric), if ever.
     pub fn time_to_accuracy(&self, threshold: f64) -> Option<f64> {
         self.points
             .iter()
-            .find(|p| p.test_acc >= threshold)
+            .find(|p| self.meets_target(p.test_acc, threshold))
             .map(|p| p.wall_s)
     }
 
+    /// Best recorded test metric under the metric's direction (max for
+    /// accuracy-like, min for error-like; NaN-free inputs assumed).
+    pub fn best_metric(&self) -> f64 {
+        if self.higher_is_better {
+            self.points.iter().fold(0.0, |m, p| m.max(p.test_acc))
+        } else {
+            self.points
+                .iter()
+                .fold(f64::INFINITY, |m, p| m.min(p.test_acc))
+        }
+    }
+
+    /// Seed helper: max recorded value.  Identical to
+    /// [`Recorder::best_metric`] on accuracy-metric runs.
     pub fn best_accuracy(&self) -> f64 {
         self.points.iter().fold(0.0, |m, p| m.max(p.test_acc))
     }
 
     pub fn final_accuracy(&self) -> f64 {
         self.points.last().map(|p| p.test_acc).unwrap_or(0.0)
+    }
+
+    /// Last recorded test metric (direction-agnostic).
+    pub fn final_metric(&self) -> f64 {
+        self.points.last().map(|p| p.test_acc).unwrap_or(f64::NAN)
     }
 
     /// Distribution of the wall-clock gaps between consecutive recorded
@@ -84,11 +145,18 @@ impl Recorder {
         latency_summary(&gaps)
     }
 
-    /// CSV rows: `label,iter,wall_s,train_loss,test_acc,penalty`.
+    /// Header for this run's CSV schema: the metric column carries the
+    /// problem's metric name (`accuracy`, `mse`, …).
+    pub fn csv_header(&self) -> String {
+        format!("label,iter,wall_s,train_loss,{},penalty", self.metric_name)
+    }
+
+    /// CSV rows: `label,iter,wall_s,train_loss,<metric>,penalty`.
     pub fn to_csv(&self, include_header: bool) -> String {
         let mut out = String::new();
         if include_header {
-            out.push_str("label,iter,wall_s,train_loss,test_acc,penalty\n");
+            out.push_str(&self.csv_header());
+            out.push('\n');
         }
         for p in &self.points {
             let _ = writeln!(
@@ -101,9 +169,15 @@ impl Recorder {
     }
 }
 
-/// Write several curves into one CSV file (creating parent dirs).
+/// Write several curves into one CSV file (creating parent dirs).  The
+/// metric column is named by the first curve's problem metric (curves
+/// written together share a run's metric).
 pub fn write_curves_csv(path: &str, curves: &[&Recorder]) -> crate::Result<()> {
-    let mut out = String::from("label,iter,wall_s,train_loss,test_acc,penalty\n");
+    let mut out = curves
+        .first()
+        .map(|c| c.csv_header())
+        .unwrap_or_else(|| Recorder::new("").csv_header());
+    out.push('\n');
     for c in curves {
         out.push_str(&c.to_csv(false));
     }
@@ -216,8 +290,34 @@ mod tests {
         r.push(pt(0, 0.5, 0.9));
         let csv = r.to_csv(true);
         let mut lines = csv.lines();
-        assert_eq!(lines.next().unwrap(), "label,iter,wall_s,train_loss,test_acc,penalty");
+        assert_eq!(lines.next().unwrap(), "label,iter,wall_s,train_loss,accuracy,penalty");
         assert!(lines.next().unwrap().starts_with("admm,0,0.5"));
+        // regression-aware: an error-metric run names its column
+        let r2 = Recorder::new("l2").with_metric("mse", false);
+        assert_eq!(r2.csv_header(), "label,iter,wall_s,train_loss,mse,penalty");
+    }
+
+    #[test]
+    fn metric_direction_awareness() {
+        let mut up = Recorder::new("acc");
+        up.push(pt(0, 1.0, 0.4));
+        up.push(pt(1, 2.0, 0.9));
+        up.push(pt(2, 3.0, 0.7));
+        assert_eq!(up.best_metric(), 0.9);
+        assert!(up.meets_target(0.9, 0.85));
+        assert!(!up.meets_target(0.8, 0.85));
+        assert_eq!(up.time_to_accuracy(0.85), Some(2.0));
+
+        let mut down = Recorder::new("mse").with_metric("mse", false);
+        down.push(pt(0, 1.0, 0.8));
+        down.push(pt(1, 2.0, 0.2));
+        down.push(pt(2, 3.0, 0.5));
+        assert_eq!(down.best_metric(), 0.2);
+        assert!(down.meets_target(0.2, 0.3));
+        assert!(!down.meets_target(0.5, 0.3));
+        // time-to-threshold flips direction with the metric
+        assert_eq!(down.time_to_accuracy(0.3), Some(2.0));
+        assert_eq!(down.final_metric(), 0.5);
     }
 
     #[test]

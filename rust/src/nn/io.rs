@@ -14,6 +14,15 @@
 //! Such checkpoints predate the `Problem` API and were always binary
 //! hinge, so the reader defaults them to [`Problem::BinaryHinge`].
 //! Writers always emit `GFADMM02`.
+//!
+//! ## SPMD discipline
+//!
+//! Distributed (`--transport tcp`) training replicates the final weights
+//! on every rank, byte for byte — but checkpoint writing is **gated to
+//! rank 0** (see `cmd_train`): one world, one writer.  A rank-0 TCP
+//! checkpoint is byte-identical to the checkpoint of an equal-size
+//! `Local` run (pinned by `tests/transport_equivalence.rs`), so this
+//! format needs no distributed-awareness of its own.
 
 use crate::config::Activation;
 use crate::linalg::Matrix;

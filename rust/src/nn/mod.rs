@@ -255,6 +255,17 @@ impl Mlp {
         let (c, n) = self.accuracy_counts(ws, x, y);
         c as f64 / n.max(1) as f64
     }
+
+    /// The problem's headline test metric ([`Problem::metric_name`]):
+    /// accuracy for the hinge kinds — bit-identical to [`Mlp::accuracy`] —
+    /// and mean squared error per entry for least squares.  `y` must be
+    /// expanded.
+    pub fn metric(&self, ws: &[Matrix], x: &Matrix, y: &Matrix) -> f64 {
+        match self.problem {
+            Problem::LeastSquares => self.loss(ws, x, y) / y.len().max(1) as f64,
+            _ => self.accuracy(ws, x, y),
+        }
+    }
 }
 
 #[cfg(test)]

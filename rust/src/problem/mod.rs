@@ -84,6 +84,27 @@ impl Problem {
         }
     }
 
+    /// Name of this problem's headline evaluation metric — what the
+    /// `Recorder` curve column, serve banner and `BENCH_PROBLEMS.json`
+    /// report: per-entry/per-column accuracy for the hinge kinds, mean
+    /// squared error for regression.
+    pub fn metric_name(&self) -> &'static str {
+        match self {
+            Problem::BinaryHinge | Problem::MulticlassHinge => "accuracy",
+            Problem::LeastSquares => "mse",
+        }
+    }
+
+    /// Direction of [`Problem::metric_name`]: accuracy improves upward,
+    /// MSE downward (`--target-acc` and best-metric bookkeeping flip
+    /// accordingly).
+    pub fn metric_higher_is_better(&self) -> bool {
+        match self {
+            Problem::BinaryHinge | Problem::MulticlassHinge => true,
+            Problem::LeastSquares => false,
+        }
+    }
+
     /// Sanity-check the output-layer width for this problem.
     pub fn validate_dims(&self, d_l: usize) -> Result<()> {
         anyhow::ensure!(d_l >= 1, "zero-width output layer");
@@ -479,5 +500,15 @@ mod tests {
         assert!(Problem::MulticlassHinge.validate_dims(1).is_err());
         Problem::MulticlassHinge.validate_dims(3).unwrap();
         Problem::BinaryHinge.validate_dims(1).unwrap();
+    }
+
+    #[test]
+    fn metric_names_and_directions() {
+        assert_eq!(Problem::BinaryHinge.metric_name(), "accuracy");
+        assert_eq!(Problem::MulticlassHinge.metric_name(), "accuracy");
+        assert_eq!(Problem::LeastSquares.metric_name(), "mse");
+        assert!(Problem::BinaryHinge.metric_higher_is_better());
+        assert!(Problem::MulticlassHinge.metric_higher_is_better());
+        assert!(!Problem::LeastSquares.metric_higher_is_better());
     }
 }

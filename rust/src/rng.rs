@@ -7,6 +7,40 @@
 //! per-worker streams from (seed, stream-id), mirroring how each MPI rank
 //! would seed locally.
 
+/// Minimal FNV-1a hasher — the repo's deterministic, dependency-free,
+/// platform-stable digest (config fingerprints, dataset digests for the
+/// SPMD TCP handshake).  Lives here next to the PRNG because both are
+/// the "stable bits from structured inputs" substrate; NOT a
+/// cryptographic hash.
+pub struct Fnv(u64);
+
+impl Fnv {
+    pub fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write_bytes(&v.to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// PCG-XSH-RR 64/32 (O'Neill 2014), with a cached Box–Muller spare.
 #[derive(Clone, Debug)]
 pub struct Rng {

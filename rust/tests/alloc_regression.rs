@@ -1,17 +1,17 @@
 //! Zero-allocation regression: one full steady-state ADMM iteration's
-//! worth of worker update phases — Gram pair (with the layer-1 input-Gram
+//! worth of rank update phases — Gram pair (with the layer-1 input-Gram
 //! cache), a-updates, z-updates, the output solve and the λ step — must
 //! perform **zero heap allocations** once the `Workspace`/state buffers
-//! have warmed up, and so must the baselines' `loss_grad_into` substrate
-//! and the serve batcher's gather → forward → scatter cycle
-//! (`serve::BatchEngine`), at any batch width up to the warmed maximum.
+//! have warmed up; so must the baselines' `loss_grad_into` substrate,
+//! the serve batcher's gather → forward → scatter cycle
+//! (`serve::BatchEngine`) at any batch width up to the warmed maximum,
+//! and the `Local` transport's steady-state **allreduce** (per-rank
+//! recycled reduction slots — the fix for the seed `CommWorld`'s three
+//! clones-per-call behind one mutex).
 //!
 //! The shim is a counting `#[global_allocator]` wrapping `System`; the
 //! whole check lives in a single `#[test]` so no sibling test can allocate
-//! while the counter is armed.  The channel/leader machinery is excluded
-//! on purpose: mpsc nodes and `Arc` broadcasts are the *simulated network*
-//! (bytes, priced by the cost model), not the compute hot path this test
-//! pins down.
+//! while the counter is armed.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -246,5 +246,43 @@ fn steady_state_hot_loops_allocate_nothing() {
     assert_eq!(
         serve_allocs, 0,
         "steady-state serve batch forward must not allocate ({serve_allocs} allocations)"
+    );
+
+    // ---- Local transport: steady-state allreduce ---------------------
+    // Warm the per-rank reduction slots with two rounds, then arm the
+    // counter (rank 0, inside barrier brackets so every rank sits in a
+    // collective while the flag flips) and run three more rounds: the
+    // deposit → fold → return cycle must not allocate.
+    let worlds = gradfree_admm::cluster::Collectives::local_world(4);
+    std::thread::scope(|s| {
+        for (rank, mut comm) in worlds.into_iter().enumerate() {
+            s.spawn(move || {
+                let mut m = Matrix::from_fn(6, 6, |r, c| (rank + r * 6 + c) as f32);
+                for _ in 0..2 {
+                    comm.allreduce_sum(&mut m).unwrap(); // warm slots
+                }
+                comm.barrier().unwrap();
+                if rank == 0 {
+                    ALLOCS.store(0, Ordering::SeqCst);
+                    ARMED.store(true, Ordering::SeqCst);
+                }
+                comm.barrier().unwrap();
+                for _ in 0..3 {
+                    comm.allreduce_sum(&mut m).unwrap();
+                }
+                comm.barrier().unwrap();
+                if rank == 0 {
+                    ARMED.store(false, Ordering::SeqCst);
+                }
+                // hold every rank until the counter is disarmed so thread
+                // teardown stays outside the armed window
+                comm.barrier().unwrap();
+            });
+        }
+    });
+    let allreduce_allocs = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        allreduce_allocs, 0,
+        "steady-state Local allreduce must not allocate ({allreduce_allocs} allocations)"
     );
 }

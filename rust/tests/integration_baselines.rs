@@ -1,13 +1,12 @@
 //! Baseline integration: SGD/CG/L-BFGS must all learn the synthetic tasks,
-//! the pool objective must equal the local one, and the grid-search harness
-//! must drive real training.
+//! the sharded SPMD objective must equal the local one, and the
+//! grid-search harness must drive real training.
 
 use gradfree_admm::baselines::{
-    grid_search, train_cg, train_lbfgs, train_sgd, LocalObjective, Objective, PoolObjective,
-    SgdOpts,
+    grid_search, train_cg, train_lbfgs, train_sgd, LocalObjective, Objective, SgdOpts,
 };
 use gradfree_admm::config::{Activation, TrainConfig};
-use gradfree_admm::coordinator::{AdmmTrainer, WorkerPool};
+use gradfree_admm::coordinator::{AdmmTrainer, ShardedObjective};
 use gradfree_admm::data::{blobs, higgs_like, synth_regression, Dataset, Normalizer};
 use gradfree_admm::nn::Mlp;
 use gradfree_admm::problem::Problem;
@@ -42,7 +41,7 @@ fn all_three_baselines_learn_blobs() {
 }
 
 #[test]
-fn pool_objective_equals_local() {
+fn sharded_objective_equals_local() {
     let (train, _) = normalized(blobs(5, 400, 2.0, 43), blobs(5, 100, 2.0, 44));
     let mlp = Mlp::new(vec![5, 4, 1], Activation::Relu).unwrap();
     let mut rng = Rng::seed_from(9);
@@ -53,9 +52,9 @@ fn pool_objective_equals_local() {
         workers: 3,
         ..TrainConfig::default()
     };
-    let pool = WorkerPool::new(&cfg, &train.x, &train.y).unwrap();
-    let mut pobj = PoolObjective { pool: &pool, n: train.samples() };
-    let (loss_pool, grads_pool) = pobj.loss_grad(&ws).unwrap();
+    let mut pobj = ShardedObjective::new(&cfg, &train.x, &train.y).unwrap();
+    assert_eq!(Objective::samples(&pobj), train.samples());
+    let (loss_pool, grads_pool) = Objective::loss_grad(&mut pobj, &ws).unwrap();
 
     let mut lobj = LocalObjective { mlp: &mlp, x: &train.x, y: &train.y };
     let (loss_local, grads_local) = lobj.loss_grad(&ws).unwrap();
@@ -67,10 +66,10 @@ fn pool_objective_equals_local() {
 }
 
 #[test]
-fn pool_objective_equals_local_for_least_squares() {
-    // The data-parallel worker pool must differentiate the SAME problem
-    // the local objective does — the `Problem` threads through the
-    // backend recipe, not just the local Mlp.
+fn sharded_objective_equals_local_for_least_squares() {
+    // The data-parallel sharded oracle must differentiate the SAME
+    // problem the local objective does — the `Problem` threads through
+    // the backend recipe, not just the local Mlp.
     let (train, _) = normalized(synth_regression(5, 400, 0.1, 81), synth_regression(5, 100, 0.1, 82));
     let mlp = Mlp::with_problem(vec![5, 4, 1], Activation::Relu, Problem::LeastSquares).unwrap();
     let mut rng = Rng::seed_from(19);
@@ -82,9 +81,8 @@ fn pool_objective_equals_local_for_least_squares() {
         problem: Problem::LeastSquares,
         ..TrainConfig::default()
     };
-    let pool = WorkerPool::new(&cfg, &train.x, &train.y).unwrap();
-    let mut pobj = PoolObjective { pool: &pool, n: train.samples() };
-    let (loss_pool, grads_pool) = pobj.loss_grad(&ws).unwrap();
+    let mut pobj = ShardedObjective::new(&cfg, &train.x, &train.y).unwrap();
+    let (loss_pool, grads_pool) = Objective::loss_grad(&mut pobj, &ws).unwrap();
 
     let mut lobj = LocalObjective { mlp: &mlp, x: &train.x, y: &train.y };
     let (loss_local, grads_local) = lobj.loss_grad(&ws).unwrap();

@@ -2,7 +2,7 @@
 //! scaling-profile calibration from real training runs, and the
 //! determinism guarantees the coordinator relies on.
 
-use gradfree_admm::cluster::{CommWorld, CostModel};
+use gradfree_admm::cluster::{Collectives, CostModel};
 use gradfree_admm::config::TrainConfig;
 use gradfree_admm::coordinator::AdmmTrainer;
 use gradfree_admm::data::{blobs, Dataset, Normalizer};
@@ -18,29 +18,39 @@ fn normalized(mut train: Dataset, mut test: Dataset) -> (Dataset, Dataset) {
 
 #[test]
 fn collectives_survive_many_rounds_under_contention() {
-    let world = CommWorld::new(7);
-    std::thread::scope(|s| {
-        for rank in 0..7 {
-            let w = world.clone();
-            s.spawn(move || {
-                let mut rng = Rng::stream(1, rank as u64);
-                for round in 0..50 {
-                    let mut m = Matrix::randn(3, 3, &mut rng);
-                    let local = m.clone();
-                    w.allreduce_sum(rank, &mut m);
-                    // own contribution must be inside the sum
-                    let mut others = m.clone();
-                    others.sub_assign(&local);
-                    assert!(others.as_slice().iter().all(|v| v.is_finite()), "round {round}");
-                    w.barrier();
-                }
-            });
-        }
+    let worlds = Collectives::local_world(7);
+    let counts: Vec<u64> = std::thread::scope(|s| {
+        let handles: Vec<_> = worlds
+            .into_iter()
+            .enumerate()
+            .map(|(rank, mut w)| {
+                s.spawn(move || {
+                    let mut rng = Rng::stream(1, rank as u64);
+                    for round in 0..50 {
+                        let mut m = Matrix::randn(3, 3, &mut rng);
+                        let local = m.clone();
+                        w.allreduce_sum(&mut m).unwrap();
+                        // own contribution must be inside the sum
+                        let mut others = m.clone();
+                        others.sub_assign(&local);
+                        assert!(
+                            others.as_slice().iter().all(|v| v.is_finite()),
+                            "round {round}"
+                        );
+                        w.barrier().unwrap();
+                    }
+                    w.stats()
+                        .allreduce_calls
+                        .load(std::sync::atomic::Ordering::Relaxed)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
     });
-    assert_eq!(
-        world.stats().allreduce_calls.load(std::sync::atomic::Ordering::Relaxed),
-        50
-    );
+    // one count per logical collective, shared across every handle
+    for c in counts {
+        assert_eq!(c, 50);
+    }
 }
 
 #[test]

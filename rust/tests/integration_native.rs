@@ -36,6 +36,7 @@ fn base_cfg() -> TrainConfig {
         eval_every: 2,
         seed: 7,
         artifacts_dir: "artifacts".into(),
+        ..TrainConfig::default()
     }
 }
 
@@ -139,12 +140,17 @@ fn admm_fits_least_squares_regression() {
     cfg.iters = 40;
     let mut trainer = AdmmTrainer::new(cfg, &train, &test).unwrap();
     let out = trainer.train().unwrap();
-    // tolerance-band accuracy: a constant-zero predictor sits ~0.3
-    assert!(
-        out.recorder.best_accuracy() > 0.6,
-        "l2 acc={}",
-        out.recorder.best_accuracy()
-    );
+    // The recorded metric for `--loss l2` is test MSE (lower is better);
+    // beating half the label variance requires actually fitting the
+    // sinusoid (a mean predictor scores ~the full variance).
+    assert_eq!(out.recorder.metric_name, "mse");
+    assert!(!out.recorder.higher_is_better);
+    let mean = test.y.as_slice().iter().map(|v| *v as f64).sum::<f64>()
+        / test.y.len().max(1) as f64;
+    let var = test.y.as_slice().iter().map(|v| (*v as f64 - mean).powi(2)).sum::<f64>()
+        / test.y.len().max(1) as f64;
+    let best = out.recorder.best_metric();
+    assert!(best < 0.5 * var, "l2 mse={best} vs label variance {var}");
     let last = out.recorder.points.last().unwrap();
     assert!(last.train_loss.is_finite() && last.train_loss >= 0.0);
 }

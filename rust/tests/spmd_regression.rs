@@ -1,0 +1,491 @@
+//! Bit-identity pin for the SPMD redesign: an N-rank run through the new
+//! rank-symmetric `Collectives` core must reproduce the seed
+//! leader-driven `WorkerPool` schedule **byte for byte** — weights and
+//! convergence curve alike.
+//!
+//! The oracle below is a direct serial transcription of the seed
+//! architecture (worker.rs `handle()` + trainer.rs `iteration()` as of
+//! PR 3): per-rank shard states initialized from the same RNG streams,
+//! Gram pairs folded in rank order, the leader ridge solve + momentum +
+//! minv factorization, and the per-rank a/z/λ update phases in the same
+//! in-place sequencing.  Because the seed pool's arithmetic was
+//! thread-schedule-independent by construction (deterministic rank-order
+//! reduction), a serial sweep over ranks reproduces it exactly — which
+//! is what lets this test pin the refactor without golden files.
+//!
+//! Any numeric drift in the SPMD path — a reordered fold, a changed
+//! broadcast, momentum state living on the wrong rank — fails here.
+
+use gradfree_admm::config::{InitScheme, MultiplierMode, TrainConfig};
+use gradfree_admm::coordinator::{updates, AdmmTrainer};
+use gradfree_admm::data::{blobs, multi_blobs, synth_regression, Dataset, Normalizer};
+use gradfree_admm::linalg::{a_update_inverse, gemm_nn, gemm_nt, gemm_tn, weight_solve, Matrix};
+use gradfree_admm::nn::Mlp;
+use gradfree_admm::problem::Problem;
+use gradfree_admm::rng::Rng;
+
+fn normalized(mut train: Dataset, mut test: Dataset) -> (Dataset, Dataset) {
+    let norm = Normalizer::fit(&train.x);
+    norm.apply(&mut train.x);
+    norm.apply(&mut test.x);
+    (train, test)
+}
+
+/// One rank's shard state, exactly as the seed `WorkerState`.
+struct OracleRank {
+    x: Matrix,
+    y: Matrix,
+    acts: Vec<Matrix>,
+    zs: Vec<Matrix>,
+    lam: Matrix,
+    u: Vec<Matrix>,
+    v: Vec<Matrix>,
+    aat1_cache: Option<Matrix>,
+}
+
+impl OracleRank {
+    fn a_prev(&self, l: usize) -> &Matrix {
+        if l == 1 {
+            &self.x
+        } else {
+            &self.acts[l - 2]
+        }
+    }
+}
+
+/// A recorded eval point (wall-clock excluded — it is not deterministic).
+#[derive(Debug)]
+struct OraclePoint {
+    iter: usize,
+    train_loss: f64,
+    metric: f64,
+    penalty: f64,
+}
+
+/// Serial transcription of the seed leader-driven training loop.
+fn oracle_train(
+    cfg: &TrainConfig,
+    train: &Dataset,
+    test: &Dataset,
+    track_penalty: bool,
+) -> gradfree_admm::Result<(Vec<Matrix>, Vec<OraclePoint>)> {
+    let layers = cfg.layers();
+    let d_l = *cfg.dims.last().unwrap();
+    let y_exp = cfg.problem.expand_labels(&train.y, d_l);
+    let shards = gradfree_admm::data::shard_ranges(train.x.cols(), cfg.workers);
+
+    // Seed WorkerPool::new: per-rank states from Rng::stream(seed, 1000+rank).
+    let mut ranks: Vec<OracleRank> = shards
+        .iter()
+        .map(|shard| {
+            let n = shard.len();
+            let mut rng = Rng::stream(cfg.seed, 1000 + shard.rank as u64);
+            let x_shard = train.x.col_range(shard.c0, shard.c1);
+            let (acts, zs) = match cfg.init {
+                InitScheme::Gaussian => (
+                    (1..layers)
+                        .map(|l| Matrix::randn(cfg.dims[l], n, &mut rng))
+                        .collect::<Vec<_>>(),
+                    (1..=layers)
+                        .map(|l| Matrix::randn(cfg.dims[l], n, &mut rng))
+                        .collect::<Vec<_>>(),
+                ),
+                InitScheme::Forward => {
+                    let mut wrng = Rng::stream(cfg.seed, 500);
+                    let mlp = Mlp::new(cfg.dims.clone(), cfg.act).unwrap();
+                    let ws = mlp.init_weights(&mut wrng);
+                    let mut acts = Vec::new();
+                    let mut zs = Vec::new();
+                    let mut a = x_shard.clone();
+                    for (l, w) in ws.iter().enumerate() {
+                        let z = gemm_nn(w, &a);
+                        zs.push(z.clone());
+                        if l + 1 < layers {
+                            let mut h = z;
+                            for v in h.as_mut_slice() {
+                                *v = cfg.act.apply(*v);
+                            }
+                            acts.push(h.clone());
+                            a = h;
+                        }
+                    }
+                    (acts, zs)
+                }
+            };
+            OracleRank {
+                x: x_shard,
+                y: y_exp.col_range(shard.c0, shard.c1),
+                acts,
+                zs,
+                lam: Matrix::zeros(d_l, n),
+                u: (1..=layers).map(|l| Matrix::zeros(cfg.dims[l], n)).collect(),
+                v: (1..layers).map(|l| Matrix::zeros(cfg.dims[l], n)).collect(),
+                aat1_cache: None,
+            }
+        })
+        .collect();
+
+    let mut weights: Vec<Matrix> = (0..layers)
+        .map(|l| Matrix::zeros(cfg.dims[l + 1], cfg.dims[l]))
+        .collect();
+    let mut prev_weights: Option<Vec<Matrix>> = None;
+    let eval_mlp = Mlp::with_problem(cfg.dims.clone(), cfg.act, cfg.problem)?;
+    let test_y = cfg.problem.expand_labels(&test.y, d_l);
+    let mut curve = Vec::new();
+
+    for it in 0..cfg.iters {
+        let past_warmup = it >= cfg.warmup_iters;
+        for l in 1..=layers {
+            // --- Gram phase + rank-order reduction (seed gram_reduce) ---
+            let mut zat_acc = Matrix::default();
+            let mut aat_acc = Matrix::default();
+            for (r, rk) in ranks.iter_mut().enumerate() {
+                let mut zat = Matrix::default();
+                let mut aat = Matrix::default();
+                if cfg.multiplier_mode == MultiplierMode::Classical {
+                    let mut z_eff = rk.zs[l - 1].clone();
+                    z_eff.add_assign(&rk.u[l - 1]);
+                    let a_prev = if l == 1 { &rk.x } else { &rk.acts[l - 2] };
+                    updates::gram_into(&z_eff, a_prev, 1, &mut zat, &mut aat);
+                } else if l == 1 {
+                    if let Some(cache) = &rk.aat1_cache {
+                        zat = gemm_nt(&rk.zs[0], &rk.x);
+                        aat.copy_from(cache);
+                    } else {
+                        updates::gram_into(&rk.zs[0], &rk.x, 1, &mut zat, &mut aat);
+                        rk.aat1_cache = Some(aat.clone());
+                    }
+                } else {
+                    let a_prev = &rk.acts[l - 2];
+                    updates::gram_into(&rk.zs[l - 1], a_prev, 1, &mut zat, &mut aat);
+                }
+                if r == 0 {
+                    zat_acc.copy_from(&zat);
+                    aat_acc.copy_from(&aat);
+                } else {
+                    zat_acc.add_assign(&zat);
+                    aat_acc.add_assign(&aat);
+                }
+            }
+
+            // --- leader solve + momentum + minv (seed trainer) ---
+            let w_solved = weight_solve(&zat_acc, &aat_acc, cfg.ridge)?;
+            let w_new = {
+                if cfg.momentum == 0.0 {
+                    w_solved
+                } else {
+                    let out = match &prev_weights {
+                        Some(prev)
+                            if prev[l - 1].shape() == w_solved.shape()
+                                && !prev[l - 1].is_empty() =>
+                        {
+                            let mut out = w_solved.clone();
+                            let mut delta = w_solved.clone();
+                            delta.sub_assign(&prev[l - 1]);
+                            out.axpy(cfg.momentum, &delta);
+                            out
+                        }
+                        _ => w_solved.clone(),
+                    };
+                    if prev_weights.is_none() {
+                        prev_weights = Some(
+                            weights
+                                .iter()
+                                .map(|w| Matrix::zeros(w.rows(), w.cols()))
+                                .collect(),
+                        );
+                    }
+                    prev_weights.as_mut().unwrap()[l - 1] = w_solved;
+                    out
+                }
+            };
+            let minv = if l < layers {
+                Some(a_update_inverse(&weights[l], cfg.beta, cfg.gamma)?)
+            } else {
+                None
+            };
+
+            // --- per-rank update phases (seed worker handle) ---
+            if l < layers {
+                let minv = minv.unwrap();
+                let w_next_old = weights[l].clone();
+                for rk in ranks.iter_mut() {
+                    if cfg.multiplier_mode == MultiplierMode::Classical {
+                        let mut z_next_eff = rk.zs[l].clone();
+                        z_next_eff.add_assign(&rk.u[l]);
+                        let mut rhs = gemm_tn(&w_next_old, &z_next_eff);
+                        rhs.scale(cfg.beta);
+                        for i in 0..rhs.len() {
+                            let h = cfg.act.apply(rk.zs[l - 1].as_slice()[i]);
+                            rhs.as_mut_slice()[i] +=
+                                cfg.gamma * (h - rk.v[l - 1].as_slice()[i]);
+                        }
+                        rk.acts[l - 1] = gemm_nn(&minv, &rhs);
+                    } else {
+                        rk.acts[l - 1] = updates::a_update(
+                            &minv,
+                            &w_next_old,
+                            &rk.zs[l],
+                            &rk.zs[l - 1],
+                            cfg.beta,
+                            cfg.gamma,
+                            cfg.act,
+                        );
+                    }
+                }
+                weights[l - 1] = w_new;
+                for rk in ranks.iter_mut() {
+                    if cfg.multiplier_mode == MultiplierMode::Classical {
+                        let mut a_eff = rk.acts[l - 1].clone();
+                        a_eff.add_assign(&rk.v[l - 1]);
+                        let mut m = gemm_nn(&weights[l - 1], rk.a_prev(l));
+                        m.sub_assign(&rk.u[l - 1]);
+                        rk.zs[l - 1] =
+                            updates::z_hidden(&a_eff, &m, cfg.gamma, cfg.beta, cfg.act);
+                    } else {
+                        let m = gemm_nn(&weights[l - 1], rk.a_prev(l));
+                        rk.zs[l - 1] =
+                            updates::z_hidden(&rk.acts[l - 1], &m, cfg.gamma, cfg.beta, cfg.act);
+                    }
+                }
+            } else {
+                weights[l - 1] = w_new;
+                let update_lambda =
+                    past_warmup && cfg.multiplier_mode == MultiplierMode::Bregman;
+                for rk in ranks.iter_mut() {
+                    if cfg.multiplier_mode == MultiplierMode::Classical {
+                        let mut m = gemm_nn(&weights[l - 1], rk.a_prev(l));
+                        m.sub_assign(&rk.u[l - 1]);
+                        let zero = Matrix::zeros(rk.y.rows(), rk.y.cols());
+                        rk.zs[l - 1] = cfg.problem.z_out(&rk.y, &m, &zero, cfg.beta);
+                    } else {
+                        let m = gemm_nn(&weights[l - 1], rk.a_prev(l));
+                        rk.zs[l - 1] = cfg.problem.z_out(&rk.y, &m, &rk.lam, cfg.beta);
+                        if update_lambda {
+                            updates::lambda_update(&mut rk.lam, &rk.zs[l - 1], &m, cfg.beta);
+                        }
+                    }
+                }
+            }
+        }
+
+        if past_warmup && cfg.multiplier_mode == MultiplierMode::Classical {
+            for rk in ranks.iter_mut() {
+                for l in 1..=layers {
+                    let m = gemm_nn(&weights[l - 1], rk.a_prev(l));
+                    for i in 0..rk.u[l - 1].len() {
+                        rk.u[l - 1].as_mut_slice()[i] +=
+                            rk.zs[l - 1].as_slice()[i] - m.as_slice()[i];
+                    }
+                    if l < layers {
+                        for i in 0..rk.v[l - 1].len() {
+                            let h = cfg.act.apply(rk.zs[l - 1].as_slice()[i]);
+                            rk.v[l - 1].as_mut_slice()[i] +=
+                                rk.acts[l - 1].as_slice()[i] - h;
+                        }
+                    }
+                }
+            }
+        }
+
+        if it % cfg.eval_every == 0 || it + 1 == cfg.iters {
+            // seed leader: Σ over ranks in rank order, starting from 0.0
+            let mut loss = 0.0f64;
+            let mut correct = 0.0f64;
+            let mut n = 0.0f64;
+            for rk in &ranks {
+                let mlp = Mlp::with_problem(cfg.dims.clone(), cfg.act, cfg.problem)?;
+                loss += mlp.loss(&weights, &rk.x, &rk.y);
+                let (c, total) = mlp.accuracy_counts(&weights, &rk.x, &rk.y);
+                correct += c as f64;
+                n += total as f64;
+            }
+            let penalty = if track_penalty {
+                let mut eq_z = 0.0f64;
+                let mut eq_a = 0.0f64;
+                for rk in &ranks {
+                    let (z, a) = updates::penalties(
+                        &weights, &rk.x, &rk.acts, &rk.zs, cfg.gamma, cfg.beta, cfg.act,
+                    );
+                    eq_z += z;
+                    eq_a += a;
+                }
+                eq_z + eq_a
+            } else {
+                f64::NAN
+            };
+            let _ = correct;
+            curve.push(OraclePoint {
+                iter: it,
+                train_loss: loss / n.max(1.0),
+                metric: eval_mlp.metric(&weights, &test.x, &test_y),
+                penalty,
+            });
+        }
+    }
+    Ok((weights, curve))
+}
+
+/// Run the real SPMD trainer and the oracle; compare bit-for-bit.
+fn assert_bit_identical(cfg: TrainConfig, train: &Dataset, test: &Dataset, track_penalty: bool) {
+    let (oracle_ws, oracle_curve) =
+        oracle_train(&cfg, train, test, track_penalty).expect("oracle run failed");
+    let mut trainer = AdmmTrainer::new(cfg.clone(), train, test).expect("trainer");
+    trainer.track_penalty = track_penalty;
+    let out = trainer.train().expect("spmd train failed");
+
+    assert_eq!(out.weights.len(), oracle_ws.len(), "layer count");
+    for (l, (a, b)) in out.weights.iter().zip(&oracle_ws).enumerate() {
+        assert_eq!(a.shape(), b.shape(), "layer {l} shape");
+        let got: Vec<u32> = a.as_slice().iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = b.as_slice().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(
+            got, want,
+            "layer {l} weights not bit-identical to the seed schedule ({}w {})",
+            cfg.workers,
+            cfg.problem.name()
+        );
+    }
+    assert_eq!(out.recorder.points.len(), oracle_curve.len(), "curve length");
+    for (p, q) in out.recorder.points.iter().zip(&oracle_curve) {
+        assert_eq!(p.iter, q.iter, "eval cadence");
+        assert_eq!(
+            p.train_loss.to_bits(),
+            q.train_loss.to_bits(),
+            "train loss at iter {}",
+            p.iter
+        );
+        assert_eq!(
+            p.test_acc.to_bits(),
+            q.metric.to_bits(),
+            "test metric at iter {}",
+            p.iter
+        );
+        assert!(
+            p.penalty.to_bits() == q.penalty.to_bits()
+                || (p.penalty.is_nan() && q.penalty.is_nan()),
+            "penalty at iter {}",
+            p.iter
+        );
+    }
+}
+
+#[test]
+fn hinge_four_ranks_matches_seed_schedule() {
+    let (train, test) = normalized(blobs(6, 900, 2.5, 61), blobs(6, 200, 2.5, 62));
+    let cfg = TrainConfig {
+        dims: vec![6, 5, 1],
+        gamma: 1.0,
+        iters: 8,
+        warmup_iters: 3,
+        workers: 4,
+        seed: 9,
+        ..TrainConfig::default()
+    };
+    assert_bit_identical(cfg, &train, &test, false);
+}
+
+#[test]
+fn deep_net_with_penalty_tracking_matches() {
+    // Two hidden layers exercise the minv broadcast + aat1 cache together
+    // with the penalty scalar reduction.
+    let (train, test) = normalized(blobs(7, 600, 2.5, 63), blobs(7, 150, 2.5, 64));
+    let cfg = TrainConfig {
+        dims: vec![7, 6, 4, 1],
+        gamma: 1.0,
+        iters: 6,
+        warmup_iters: 2,
+        workers: 3,
+        eval_every: 2,
+        seed: 11,
+        ..TrainConfig::default()
+    };
+    assert_bit_identical(cfg, &train, &test, true);
+}
+
+#[test]
+fn least_squares_two_ranks_matches() {
+    let (train, test) =
+        normalized(synth_regression(6, 700, 0.1, 71), synth_regression(6, 150, 0.1, 72));
+    let cfg = TrainConfig {
+        dims: vec![6, 8, 1],
+        problem: Problem::LeastSquares,
+        gamma: 1.0,
+        iters: 6,
+        warmup_iters: 2,
+        workers: 2,
+        seed: 13,
+        ..TrainConfig::default()
+    };
+    assert_bit_identical(cfg, &train, &test, false);
+}
+
+#[test]
+fn multihinge_three_ranks_matches() {
+    let (train, test) =
+        normalized(multi_blobs(6, 3, 700, 2.5, 73), multi_blobs(6, 3, 150, 2.5, 74));
+    let cfg = TrainConfig {
+        dims: vec![6, 8, 3],
+        problem: Problem::MulticlassHinge,
+        gamma: 1.0,
+        iters: 6,
+        warmup_iters: 2,
+        workers: 3,
+        seed: 15,
+        ..TrainConfig::default()
+    };
+    assert_bit_identical(cfg, &train, &test, false);
+}
+
+#[test]
+fn momentum_and_forward_init_match() {
+    // Momentum state lives on rank 0 only; forward init shares the
+    // weight RNG stream across ranks — both must survive the redesign.
+    let (train, test) = normalized(blobs(5, 500, 2.5, 81), blobs(5, 120, 2.5, 82));
+    let cfg = TrainConfig {
+        dims: vec![5, 4, 1],
+        gamma: 1.0,
+        iters: 7,
+        warmup_iters: 2,
+        workers: 2,
+        momentum: 0.5,
+        init: InitScheme::Forward,
+        seed: 17,
+        ..TrainConfig::default()
+    };
+    assert_bit_identical(cfg, &train, &test, false);
+}
+
+#[test]
+fn classical_mode_matches() {
+    // The classical-ADMM ablation path (dual-shifted Gram, per-constraint
+    // dual updates) through the SPMD schedule.  Kept short — the paper's
+    // point is that this mode is unstable over long runs.
+    let (train, test) = normalized(blobs(5, 400, 2.5, 83), blobs(5, 100, 2.5, 84));
+    let cfg = TrainConfig {
+        dims: vec![5, 4, 1],
+        iters: 4,
+        warmup_iters: 2,
+        workers: 2,
+        multiplier_mode: MultiplierMode::Classical,
+        seed: 19,
+        ..TrainConfig::default()
+    };
+    assert_bit_identical(cfg, &train, &test, false);
+}
+
+#[test]
+fn empty_shards_match() {
+    // More ranks than samples: some ranks own zero columns end-to-end.
+    let (train, test) = normalized(blobs(4, 6, 2.5, 85), blobs(4, 40, 2.5, 86));
+    let cfg = TrainConfig {
+        dims: vec![4, 3, 1],
+        gamma: 1.0,
+        iters: 4,
+        warmup_iters: 1,
+        workers: 8,
+        seed: 21,
+        ..TrainConfig::default()
+    };
+    assert_bit_identical(cfg, &train, &test, false);
+}

@@ -1,0 +1,318 @@
+//! Transport equivalence: the `Tcp` transport must be **bit-identical**
+//! to `Local` — collective by collective (property test over random
+//! shapes and world sizes), end-to-end in-process (full training run),
+//! and end-to-end across real OS processes (spawned `gradfree`
+//! subprocesses whose rank-0 checkpoint must equal a local run's, byte
+//! for byte).  Also hosts the tier-1 scaling smoke that keeps
+//! `bench_out/BENCH_SCALING.json` fresh: measured `CommStats` traffic
+//! must equal the closed-form per-iteration formulas at every world
+//! size.
+//!
+//! Every network test skips gracefully when loopback is unavailable.
+
+use std::net::TcpListener;
+
+use gradfree_admm::bench::scaling::{run_scaling, ScalingSpec};
+use gradfree_admm::cluster::{Collectives, TcpComm};
+use gradfree_admm::config::{TrainConfig, Transport};
+use gradfree_admm::coordinator::{spmd, AdmmTrainer, TrainOutcome};
+use gradfree_admm::data::{blobs, Dataset, Normalizer};
+use gradfree_admm::linalg::Matrix;
+use gradfree_admm::prop::forall;
+use gradfree_admm::rng::Rng;
+
+fn loopback_available() -> bool {
+    TcpListener::bind("127.0.0.1:0").is_ok()
+}
+
+fn normalized(mut train: Dataset, mut test: Dataset) -> (Dataset, Dataset) {
+    let norm = Normalizer::fit(&train.x);
+    norm.apply(&mut train.x);
+    norm.apply(&mut test.x);
+    (train, test)
+}
+
+/// Run `f(rank, comm)` on an in-process loopback TCP world of `n` ranks.
+fn run_tcp_world<T: Send>(
+    n: usize,
+    fp: u64,
+    f: impl Fn(usize, &mut Collectives) -> T + Send + Sync,
+) -> Vec<T> {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::scope(|s| {
+        let f = &f;
+        let addr = &addr;
+        let mut handles = Vec::new();
+        handles.push(s.spawn(move || {
+            let mut comm = Collectives::Tcp(TcpComm::hub(listener, n, fp).unwrap());
+            f(0, &mut comm)
+        }));
+        for rank in 1..n {
+            handles.push(s.spawn(move || {
+                let mut comm = Collectives::Tcp(TcpComm::leaf(addr, rank, n, fp).unwrap());
+                f(rank, &mut comm)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+#[test]
+fn tcp_collectives_bit_identical_to_local() {
+    if !loopback_available() {
+        return;
+    }
+    forall("tcp collectives == local collectives", 6, |g| {
+        let ranks = g.usize_in(2, 4);
+        let r = g.usize_in(1, 7);
+        let c = g.usize_in(1, 7);
+        let root = g.usize_in(0, ranks - 1);
+        let inputs: Vec<Matrix> = (0..ranks)
+            .map(|i| {
+                let mut rng = Rng::stream(900 + g.case as u64, i as u64);
+                Matrix::randn(r, c, &mut rng)
+            })
+            .collect();
+        let scalar_inputs: Vec<Vec<f64>> = (0..ranks)
+            .map(|i| vec![i as f64 + 0.25, (i * i) as f64 - 0.5])
+            .collect();
+
+        // Local reference
+        let local: Vec<(Vec<u32>, Vec<u32>, Vec<u64>)> = {
+            let worlds = Collectives::local_world(ranks);
+            std::thread::scope(|s| {
+                let handles: Vec<_> = worlds
+                    .into_iter()
+                    .enumerate()
+                    .map(|(rank, mut w)| {
+                        let mut m = inputs[rank].clone();
+                        let mut b = if rank == root {
+                            inputs[(rank + 1) % ranks].clone()
+                        } else {
+                            Matrix::default()
+                        };
+                        let mut sv = scalar_inputs[rank].clone();
+                        s.spawn(move || {
+                            w.allreduce_sum(&mut m).unwrap();
+                            w.broadcast(root, &mut b).unwrap();
+                            w.allreduce_scalars(&mut sv).unwrap();
+                            (
+                                m.as_slice().iter().map(|v| v.to_bits()).collect(),
+                                b.as_slice().iter().map(|v| v.to_bits()).collect(),
+                                sv.iter().map(|v| v.to_bits()).collect(),
+                            )
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            })
+        };
+
+        // TCP world running the identical schedule
+        let inputs_ref = &inputs;
+        let scalars_ref = &scalar_inputs;
+        let tcp: Vec<(Vec<u32>, Vec<u32>, Vec<u64>)> =
+            run_tcp_world(ranks, 42, move |rank, comm| {
+                let mut m = inputs_ref[rank].clone();
+                let mut b = if rank == root {
+                    inputs_ref[(rank + 1) % ranks].clone()
+                } else {
+                    Matrix::default()
+                };
+                let mut sv = scalars_ref[rank].clone();
+                comm.allreduce_sum(&mut m).unwrap();
+                comm.broadcast(root, &mut b).unwrap();
+                comm.allreduce_scalars(&mut sv).unwrap();
+                (
+                    m.as_slice().iter().map(|v| v.to_bits()).collect(),
+                    b.as_slice().iter().map(|v| v.to_bits()).collect(),
+                    sv.iter().map(|v| v.to_bits()).collect(),
+                )
+            });
+
+        for rank in 0..ranks {
+            if local[rank] != tcp[rank] {
+                return Err(format!("rank {rank} diverged between transports"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tcp_training_bit_identical_to_local_in_process() {
+    if !loopback_available() {
+        return;
+    }
+    let (train, test) = normalized(blobs(5, 450, 2.5, 31), blobs(5, 120, 2.5, 32));
+    let mk_cfg = || TrainConfig {
+        dims: vec![5, 4, 1],
+        gamma: 1.0,
+        iters: 6,
+        warmup_iters: 2,
+        workers: 3,
+        eval_every: 2,
+        seed: 33,
+        ..TrainConfig::default()
+    };
+    let mut local_trainer = AdmmTrainer::new(mk_cfg(), &train, &test).unwrap();
+    local_trainer.track_penalty = true;
+    let local = local_trainer.train().unwrap();
+
+    let mut cfg = mk_cfg();
+    cfg.transport = Transport::Tcp;
+    cfg.world_size = 3;
+    cfg.peers = vec!["unused-by-in-process-harness:0".into()];
+    let opts = spmd::SpmdOpts { target_metric: None, track_penalty: true, verbose: false };
+    let fp = cfg.spmd_fingerprint();
+    let cfg_ref = &cfg;
+    let (train_ref, test_ref, opts_ref) = (&train, &test, &opts);
+    let outcomes: Vec<gradfree_admm::Result<TrainOutcome>> =
+        run_tcp_world(3, fp, move |_rank, comm| {
+            spmd::train_rank(cfg_ref, comm, train_ref, test_ref, opts_ref)
+        });
+    let mut tcp_rank0 = None;
+    for (rank, o) in outcomes.into_iter().enumerate() {
+        let o = o.unwrap_or_else(|e| panic!("tcp rank {rank} failed: {e:#}"));
+        // every rank ends with the same replicated weights
+        for (a, b) in o.weights.iter().zip(&local.weights) {
+            assert_eq!(a.as_slice(), b.as_slice(), "rank {rank} weights diverged");
+        }
+        if rank == 0 {
+            tcp_rank0 = Some(o);
+        }
+    }
+    let tcp = tcp_rank0.unwrap();
+    assert_eq!(tcp.recorder.points.len(), local.recorder.points.len());
+    for (p, q) in tcp.recorder.points.iter().zip(&local.recorder.points) {
+        assert_eq!(p.iter, q.iter);
+        assert_eq!(p.train_loss.to_bits(), q.train_loss.to_bits());
+        assert_eq!(p.test_acc.to_bits(), q.test_acc.to_bits());
+        assert!(
+            p.penalty.to_bits() == q.penalty.to_bits()
+                || (p.penalty.is_nan() && q.penalty.is_nan())
+        );
+    }
+    // identical collective schedule → identical measured traffic
+    assert_eq!(
+        tcp.stats.allreduce_bytes_measured,
+        local.stats.allreduce_bytes_measured
+    );
+    assert_eq!(
+        tcp.stats.broadcast_bytes_measured,
+        local.stats.broadcast_bytes_measured
+    );
+}
+
+/// Spawn a real `gradfree train` subprocess (one SPMD rank).
+fn spawn_rank(args: &[String]) -> std::process::Child {
+    std::process::Command::new(env!("CARGO_BIN_EXE_gradfree"))
+        .args(args)
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawning gradfree rank")
+}
+
+#[test]
+fn two_process_tcp_checkpoint_matches_local_run() {
+    if !loopback_available() {
+        return;
+    }
+    // Reserve a loopback port for the hub (freed immediately; the hub
+    // child re-binds it).
+    let port = {
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        probe.local_addr().unwrap().port()
+    };
+    let hub_addr = format!("127.0.0.1:{port}");
+    let tmp = std::env::temp_dir();
+    let pid = std::process::id();
+    let ckpt_tcp = tmp.join(format!("gfadmm_spmd_tcp_{pid}.gfadmm"));
+    let ckpt_local = tmp.join(format!("gfadmm_spmd_local_{pid}.gfadmm"));
+
+    let common = |extra: &[&str]| -> Vec<String> {
+        let mut v: Vec<String> = [
+            "train", "--dims", "6x5x1", "--dataset", "blobs", "--samples", "400",
+            "--test-samples", "100", "--iters", "5", "--warmup", "2", "--gamma", "1",
+            "--seed", "5", "--quiet",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        v.extend(extra.iter().map(|s| s.to_string()));
+        v
+    };
+
+    // Two genuinely separate OS processes, synchronizing over TCP.
+    let rank0 = spawn_rank(&common(&[
+        "--transport", "tcp", "--world-size", "2", "--rank", "0",
+        "--peers", &hub_addr, "--save", ckpt_tcp.to_str().unwrap(),
+    ]));
+    let rank1 = spawn_rank(&common(&[
+        "--transport", "tcp", "--world-size", "2", "--rank", "1",
+        "--peers", &hub_addr,
+    ]));
+    let out0 = rank0.wait_with_output().expect("rank 0 wait");
+    let out1 = rank1.wait_with_output().expect("rank 1 wait");
+    assert!(
+        out0.status.success(),
+        "rank 0 failed: {}",
+        String::from_utf8_lossy(&out0.stderr)
+    );
+    assert!(
+        out1.status.success(),
+        "rank 1 failed: {}",
+        String::from_utf8_lossy(&out1.stderr)
+    );
+
+    // Reference: the same config as a 2-rank local (thread) run.
+    let local = spawn_rank(&common(&[
+        "--transport", "local", "--workers", "2", "--save", ckpt_local.to_str().unwrap(),
+    ]));
+    let out_local = local.wait_with_output().expect("local wait");
+    assert!(
+        out_local.status.success(),
+        "local run failed: {}",
+        String::from_utf8_lossy(&out_local.stderr)
+    );
+
+    let tcp_bytes = std::fs::read(&ckpt_tcp).expect("tcp checkpoint written by rank 0");
+    let local_bytes = std::fs::read(&ckpt_local).expect("local checkpoint");
+    let _ = std::fs::remove_file(&ckpt_tcp);
+    let _ = std::fs::remove_file(&ckpt_local);
+    assert!(
+        tcp_bytes == local_bytes,
+        "2-process TCP checkpoint is not byte-identical to the 2-rank local checkpoint \
+         ({} vs {} bytes)",
+        tcp_bytes.len(),
+        local_bytes.len()
+    );
+}
+
+#[test]
+fn scaling_smoke_emits_bench_json_with_formula_agreement() {
+    // Tier-1 guardian of bench_out/BENCH_SCALING.json: a small sweep over
+    // world sizes 1/2/4/8 (+ a tcp loopback point) whose measured traffic
+    // must equal the closed-form formulas — run_scaling() hard-errors on
+    // any disagreement.
+    let spec = ScalingSpec {
+        samples: 240,
+        test_samples: 60,
+        dims: vec![6, 5, 1],
+        iters: 4,
+        local_worlds: vec![1, 2, 4, 8],
+        tcp_world: if loopback_available() { Some(2) } else { None },
+        seed: 7,
+    };
+    let (rows, path) = run_scaling(&spec).expect("scaling sweep failed");
+    assert!(rows.len() >= 4, "expected >= 4 world sizes, got {}", rows.len());
+    for r in &rows {
+        assert_eq!(r.allreduce_bytes_measured, r.allreduce_bytes_formula);
+        assert_eq!(r.broadcast_bytes_measured, r.broadcast_bytes_formula);
+    }
+    let text = std::fs::read_to_string(&path).expect("BENCH_SCALING.json readable");
+    assert!(text.contains("\"traffic_matches_formula\": true"), "{path}: {text}");
+    assert!(text.contains("\"world\": 8"));
+}
