@@ -1,11 +1,14 @@
 //! Strong scaling over the SPMD `Collectives` transports (paper §7's
 //! scaling story, measured rather than simulated): iters/sec and measured
-//! `CommStats` traffic for local worlds of 1/2/4/8 ranks plus a loopback
-//! TCP point, with a hard assertion that measured per-iteration bytes
-//! equal the closed-form `TrainStats` formulas and that TCP weights are
-//! bit-identical to the equal-size local world.
+//! `CommStats` traffic for local worlds of 1/2/4/8 ranks under both
+//! schedules (bulk-synchronous vs software-pipelined), plus loopback TCP
+//! star and ring points, with hard assertions that measured per-iteration
+//! bytes equal the closed-form `TrainStats` formulas (star hub bytes,
+//! ring `2·(N−1)/N` chunk arithmetic) and that every configuration's
+//! weights are bit-identical.
 //!
-//! Output: bench_out/BENCH_SCALING.json and a console table.
+//! Output: bench_out/BENCH_SCALING.json (schema 2, incl. per-point wait
+//! telemetry) and a console table with the bulk→pipelined overlap win.
 //!
 //!   cargo bench --bench scaling [-- --samples N --iters I]
 
@@ -25,7 +28,7 @@ fn main() -> gradfree_admm::Result<()> {
     banner(
         "scaling",
         &format!(
-            "SPMD strong scaling, worlds {:?} + tcp loopback (n={})",
+            "SPMD strong scaling, worlds {:?} × {{bulk, pipelined}} + tcp star/ring (n={})",
             spec.local_worlds, spec.samples
         ),
         "§5 data-parallel schedule, §7 scaling measurements",
@@ -33,22 +36,51 @@ fn main() -> gradfree_admm::Result<()> {
 
     let (rows, path) = run_scaling(&spec)?;
     println!(
-        "\n{:>9} {:>6} {:>10} {:>9}  {:>14} {:>14} {:>12}",
-        "transport", "world", "opt_s", "iters/s", "allreduce_B", "broadcast_B", "scalar_B"
+        "\n{:>9} {:>6} {:>10} {:>5} {:>10} {:>9}  {:>13} {:>12} {:>11}",
+        "transport", "world", "schedule", "algo", "opt_s", "iters/s", "allreduce_B", "broadcast_B",
+        "wait_tot_s"
     );
     for r in &rows {
         println!(
-            "{:>9} {:>6} {:>10.3} {:>9.2}  {:>14} {:>14} {:>12}",
+            "{:>9} {:>6} {:>10} {:>5} {:>10.3} {:>9.2}  {:>13} {:>12} {:>11.3}",
             r.transport,
             r.world,
+            r.schedule,
+            r.allreduce,
             r.opt_seconds,
             r.iters_per_sec,
             r.allreduce_bytes_measured,
             r.broadcast_bytes_measured,
-            r.scalar_bytes_measured
+            r.wait_world_s.iter().sum::<f64>()
         );
     }
-    println!("\nmeasured matrix traffic == formula traffic on every point ✓");
+
+    // The overlap win the pipelined schedule exists for: at the widest
+    // local world, iters/sec must strictly improve over bulk-synchronous.
+    let widest = *spec.local_worlds.iter().max().expect("non-empty sweep");
+    let find = |schedule: &str| {
+        rows.iter()
+            .find(|r| r.transport == "local" && r.world == widest && r.schedule == schedule)
+            .unwrap_or_else(|| panic!("missing local world-{widest} {schedule} row"))
+    };
+    let bulk = find("bulk");
+    let piped = find("pipelined");
+    let speedup = piped.iters_per_sec / bulk.iters_per_sec;
+    println!(
+        "\noverlap at local world {widest}: bulk {:.2} iters/s → pipelined {:.2} iters/s \
+         ({speedup:.3}× — blocked {:.3}s → {:.3}s)",
+        bulk.iters_per_sec,
+        piped.iters_per_sec,
+        bulk.wait_world_s.iter().sum::<f64>(),
+        piped.wait_world_s.iter().sum::<f64>()
+    );
+    anyhow::ensure!(
+        speedup > 1.0,
+        "pipelined schedule did not beat bulk at world {widest} ({speedup:.3}×) — \
+         overlap regression"
+    );
+    println!("measured matrix traffic == formula traffic on every point ✓");
+    println!("weights bit-identical across schedules, algorithms and transports ✓");
     println!("written: {path}");
     Ok(())
 }

@@ -1,15 +1,20 @@
 //! Strong-scaling measurement over the SPMD `Collectives` transports →
-//! `bench_out/BENCH_SCALING.json`.
+//! `bench_out/BENCH_SCALING.json` (schema 2).
 //!
-//! For each world size the run measures iters/sec and the `CommStats`
-//! bytes that actually crossed the transport, and **asserts** the
-//! measured per-iteration matrix traffic equals the closed-form
-//! `TrainStats` formulas (`allreduce_bytes_per_iter` /
-//! `broadcast_bytes_per_iter`) — the measured counters are the source of
-//! truth the formulas and the α–β cost model are checked against.  A
-//! loopback TCP point runs the same config as genuinely socket-separated
-//! ranks and must produce byte-identical weights to the equal-size local
-//! world.
+//! For each local world size the sweep measures iters/sec under **both
+//! schedules** (bulk-synchronous vs software-pipelined) so the
+//! communication-hiding win is an A/B column, plus loopback TCP points
+//! for the star and (world permitting) the ring allreduce.  Every point
+//! records the `CommStats` bytes that actually crossed the transport and
+//! **asserts** the measured per-iteration matrix traffic equals the
+//! closed-form `TrainStats` formulas (`allreduce_bytes_per_iter_for` /
+//! `broadcast_bytes_per_iter`) — star points against the hub formula,
+//! ring points against the exact `2·(N−1)/N` chunk arithmetic — and that
+//! every configuration's weights are **bit-identical** (schedules and
+//! allreduce algorithms may only change timing and traffic shape, never
+//! arithmetic).  Per-point straggler telemetry (world-summed wait seconds
+//! per collective kind + the fixed-bucket wait histogram) lands in the
+//! JSON so the overlap's effect on blocking is quantified, not guessed.
 //!
 //! `benches/scaling.rs` runs this at bench scale; a small tier-1 smoke
 //! (`tests/transport_equivalence.rs`) runs it at test scale so the JSON
@@ -18,8 +23,8 @@
 use std::fmt::Write as _;
 use std::net::TcpListener;
 
-use crate::cluster::{Collectives, TcpComm};
-use crate::config::{TrainConfig, Transport};
+use crate::cluster::{Collectives, TcpComm, WAIT_BUCKET_EDGES_US};
+use crate::config::{AllreduceAlgo, Schedule, TrainConfig, Transport};
 use crate::coordinator::{spmd, AdmmTrainer, TrainOutcome};
 use crate::data::{blobs, Normalizer};
 use crate::linalg::Matrix;
@@ -32,12 +37,15 @@ pub struct ScalingSpec {
     pub test_samples: usize,
     pub dims: Vec<usize>,
     pub iters: usize,
-    /// Thread-backed world sizes to sweep.
+    /// Thread-backed world sizes to sweep (each runs bulk + pipelined).
     pub local_worlds: Vec<usize>,
     /// Optional loopback TCP world size (skipped when loopback is
-    /// unavailable); its weights are checked bit-identical against the
-    /// equal-size local world when that size is also swept.
+    /// unavailable); runs a star point and, when `tcp_ring` is set, a
+    /// ring-mesh point.  Weights are checked bit-identical against the
+    /// local worlds.
     pub tcp_world: Option<usize>,
+    /// Also run the loopback TCP world with the ring allreduce.
+    pub tcp_ring: bool,
     pub seed: u64,
 }
 
@@ -50,6 +58,7 @@ impl Default for ScalingSpec {
             iters: 20,
             local_worlds: vec![1, 2, 4, 8],
             tcp_world: Some(2),
+            tcp_ring: true,
             seed: 7,
         }
     }
@@ -60,6 +69,8 @@ impl Default for ScalingSpec {
 pub struct ScalingRow {
     pub transport: &'static str,
     pub world: usize,
+    pub schedule: &'static str,
+    pub allreduce: &'static str,
     pub opt_seconds: f64,
     pub iters_per_sec: f64,
     pub allreduce_bytes_measured: u64,
@@ -67,6 +78,10 @@ pub struct ScalingRow {
     pub scalar_bytes_measured: u64,
     pub allreduce_bytes_formula: u64,
     pub broadcast_bytes_formula: u64,
+    /// World-summed blocked seconds [allreduce, broadcast, scalar,
+    /// barrier] — the straggler telemetry.
+    pub wait_world_s: [f64; 4],
+    pub wait_hist: Vec<u64>,
 }
 
 fn base_cfg(spec: &ScalingSpec) -> TrainConfig {
@@ -84,13 +99,16 @@ fn base_cfg(spec: &ScalingSpec) -> TrainConfig {
 
 fn row_from_outcome(
     transport: &'static str,
-    world: usize,
+    cfg: &TrainConfig,
     out: &TrainOutcome,
     iters: usize,
 ) -> Result<ScalingRow> {
+    let world = cfg.world();
     let row = ScalingRow {
         transport,
         world,
+        schedule: cfg.schedule.name(),
+        allreduce: cfg.allreduce.name(),
         opt_seconds: out.stats.opt_seconds,
         iters_per_sec: out.stats.iters_run as f64 / out.stats.opt_seconds.max(1e-12),
         allreduce_bytes_measured: out.stats.allreduce_bytes_measured,
@@ -98,16 +116,22 @@ fn row_from_outcome(
         scalar_bytes_measured: out.stats.scalar_bytes_measured,
         allreduce_bytes_formula: (iters * out.stats.allreduce_bytes_per_iter) as u64,
         broadcast_bytes_formula: (iters * out.stats.broadcast_bytes_per_iter) as u64,
+        wait_world_s: out.stats.wait_world_s,
+        wait_hist: out.stats.wait_hist_world.to_vec(),
     };
     anyhow::ensure!(
         row.allreduce_bytes_measured == row.allreduce_bytes_formula,
-        "{transport} world {world}: measured allreduce bytes {} != formula {}",
+        "{transport} world {world} ({}, {}): measured allreduce bytes {} != formula {}",
+        row.schedule,
+        row.allreduce,
         row.allreduce_bytes_measured,
         row.allreduce_bytes_formula
     );
     anyhow::ensure!(
         row.broadcast_bytes_measured == row.broadcast_bytes_formula,
-        "{transport} world {world}: measured broadcast bytes {} != formula {}",
+        "{transport} world {world} ({}, {}): measured broadcast bytes {} != formula {}",
+        row.schedule,
+        row.allreduce,
         row.broadcast_bytes_measured,
         row.broadcast_bytes_formula
     );
@@ -124,31 +148,61 @@ pub fn run_scaling(spec: &ScalingSpec) -> Result<(Vec<ScalingRow>, String)> {
     norm.apply(&mut test.x);
 
     let mut rows = Vec::new();
+    // Reference weights per world size (every schedule/algorithm/transport
+    // at the same world must match them bit-for-bit).
     let mut weights_by_world: Vec<(usize, Vec<Matrix>)> = Vec::new();
+    let mut check_weights = |world: usize, ws: &[Matrix], label: &str| -> Result<()> {
+        match weights_by_world.iter().find(|(w, _)| *w == world) {
+            Some((_, reference)) => {
+                for (a, b) in reference.iter().zip(ws) {
+                    // bit comparison, not f32 ==: -0.0 vs +0.0 is real
+                    // drift and NaN == NaN is not a divergence
+                    let same = a.as_slice().len() == b.as_slice().len()
+                        && a.as_slice()
+                            .iter()
+                            .zip(b.as_slice())
+                            .all(|(x, y)| x.to_bits() == y.to_bits());
+                    anyhow::ensure!(
+                        same,
+                        "{label} (world {world}) weights diverged from the reference run"
+                    );
+                }
+            }
+            None => weights_by_world.push((world, ws.to_vec())),
+        }
+        Ok(())
+    };
+
     for &w in &spec.local_worlds {
-        let mut cfg = base_cfg(spec);
-        cfg.workers = w;
-        let mut trainer = AdmmTrainer::new(cfg, &train, &test)?;
-        let out = trainer.train()?;
-        rows.push(row_from_outcome("local", w, &out, spec.iters)?);
-        weights_by_world.push((w, out.weights));
+        for schedule in [Schedule::Bulk, Schedule::Pipelined] {
+            let mut cfg = base_cfg(spec);
+            cfg.workers = w;
+            cfg.schedule = schedule;
+            let mut trainer = AdmmTrainer::new(cfg.clone(), &train, &test)?;
+            let out = trainer.train()?;
+            rows.push(row_from_outcome("local", &cfg, &out, spec.iters)?);
+            check_weights(w, &out.weights, &format!("local {}", schedule.name()))?;
+        }
     }
 
     if let Some(tw) = spec.tcp_world {
-        match loopback_listener() {
-            Some(listener) => {
-                let out = run_tcp_loopback(spec, &train, &test, tw, listener)?;
-                rows.push(row_from_outcome("tcp", tw, &out, spec.iters)?);
-                if let Some((_, local_ws)) = weights_by_world.iter().find(|(w, _)| *w == tw) {
-                    for (a, b) in local_ws.iter().zip(&out.weights) {
-                        anyhow::ensure!(
-                            a.as_slice() == b.as_slice(),
-                            "tcp world {tw} weights diverged from the equal-size local world"
-                        );
-                    }
-                }
+        let algos: Vec<AllreduceAlgo> = if spec.tcp_ring {
+            vec![AllreduceAlgo::Star, AllreduceAlgo::Ring]
+        } else {
+            vec![AllreduceAlgo::Star]
+        };
+        for algo in algos {
+            if !loopback_available() {
+                eprintln!("loopback unavailable; skipping the tcp scaling points");
+                break;
             }
-            None => eprintln!("loopback unavailable; skipping the tcp scaling point"),
+            let mut cfg = base_cfg(spec);
+            cfg.transport = Transport::Tcp;
+            cfg.world_size = tw;
+            cfg.allreduce = algo;
+            let out = run_tcp_loopback(&cfg, &train, &test)?;
+            rows.push(row_from_outcome("tcp", &cfg, &out, spec.iters)?);
+            check_weights(tw, &out.weights, &format!("tcp {}", algo.name()))?;
         }
     }
 
@@ -156,49 +210,60 @@ pub fn run_scaling(spec: &ScalingSpec) -> Result<(Vec<ScalingRow>, String)> {
     Ok((rows, path))
 }
 
-fn loopback_listener() -> Option<TcpListener> {
-    TcpListener::bind("127.0.0.1:0").ok()
+fn loopback_available() -> bool {
+    TcpListener::bind("127.0.0.1:0").is_ok()
 }
 
-/// Train a TCP world of `world` in-process ranks over loopback sockets
-/// (the transport is real; only the process boundary is simulated — the
-/// subprocess e2e lives in `tests/transport_equivalence.rs`).
+/// Train a TCP world of `cfg.world_size` in-process ranks over loopback
+/// sockets (the transport is real; only the process boundary is simulated
+/// — the subprocess e2e lives in `tests/transport_equivalence.rs`).
+/// Star worlds form a hub on an ephemeral port; ring worlds form a full
+/// mesh on `world` ephemeral ports.
 fn run_tcp_loopback(
-    spec: &ScalingSpec,
+    cfg: &TrainConfig,
     train: &crate::data::Dataset,
     test: &crate::data::Dataset,
-    world: usize,
-    listener: TcpListener,
 ) -> Result<TrainOutcome> {
-    let addr = listener.local_addr()?.to_string();
-    let mut cfg = base_cfg(spec);
-    cfg.transport = Transport::Tcp;
-    cfg.world_size = world;
-    cfg.peers = vec![addr.clone()];
+    let world = cfg.world_size;
+    let listeners: Vec<TcpListener> = (0..world)
+        .map(|_| TcpListener::bind("127.0.0.1:0"))
+        .collect::<std::io::Result<_>>()?;
+    let addrs: Vec<String> = listeners
+        .iter()
+        .map(|l| l.local_addr().map(|a| a.to_string()))
+        .collect::<std::io::Result<_>>()?;
+    let mut cfg = cfg.clone();
+    cfg.peers = addrs.clone();
     let fp = cfg.spmd_fingerprint();
     let opts = spmd::SpmdOpts::default();
+    let algo = cfg.allreduce;
     let cfg = &cfg;
-    let (addr, opts) = (&addr, &opts);
+    let (addrs, opts) = (&addrs, &opts);
     let results: Vec<Result<TrainOutcome>> = std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        handles.push(s.spawn(move || {
-            let mut comm = Collectives::Tcp(TcpComm::hub(listener, world, fp)?);
-            let res = spmd::train_rank(cfg, &mut comm, train, test, opts);
-            if res.is_err() {
-                comm.abort();
-            }
-            res
-        }));
-        for rank in 1..world {
-            handles.push(s.spawn(move || {
-                let mut comm = Collectives::Tcp(TcpComm::leaf(addr, rank, world, fp)?);
-                let res = spmd::train_rank(cfg, &mut comm, train, test, opts);
-                if res.is_err() {
-                    comm.abort();
-                }
-                res
-            }));
-        }
+        let handles: Vec<_> = listeners
+            .into_iter()
+            .enumerate()
+            .map(|(rank, listener)| {
+                s.spawn(move || {
+                    let comm = match algo {
+                        AllreduceAlgo::Star => {
+                            if rank == 0 {
+                                TcpComm::hub(listener, world, fp)?
+                            } else {
+                                TcpComm::leaf(&addrs[0], rank, world, fp)?
+                            }
+                        }
+                        AllreduceAlgo::Ring => TcpComm::mesh(listener, rank, world, addrs, fp)?,
+                    };
+                    let mut comm = Collectives::Tcp(comm);
+                    let res = spmd::train_rank(cfg, &mut comm, train, test, opts);
+                    if res.is_err() {
+                        comm.abort();
+                    }
+                    res
+                })
+            })
+            .collect();
         handles
             .into_iter()
             .map(|h| match h.join() {
@@ -217,30 +282,43 @@ fn run_tcp_loopback(
 
 fn write_json(spec: &ScalingSpec, rows: &[ScalingRow]) -> Result<String> {
     let mut out = String::new();
-    out.push_str("{\n  \"schema\": 1,\n");
+    out.push_str("{\n  \"schema\": 2,\n");
     let dims: Vec<String> = spec.dims.iter().map(|d| d.to_string()).collect();
     let _ = writeln!(out, "  \"samples\": {},", spec.samples);
     let _ = writeln!(out, "  \"dims\": [{}],", dims.join(", "));
     let _ = writeln!(out, "  \"iters\": {},", spec.iters);
     let _ = writeln!(out, "  \"traffic_matches_formula\": true,");
+    let edges: Vec<String> = WAIT_BUCKET_EDGES_US.iter().map(|e| e.to_string()).collect();
+    let _ = writeln!(out, "  \"wait_hist_edges_us\": [{}],", edges.join(", "));
     out.push_str("  \"points\": [\n");
     for (i, r) in rows.iter().enumerate() {
+        let hist: Vec<String> = r.wait_hist.iter().map(|h| h.to_string()).collect();
         let _ = write!(
             out,
-            "    {{\"transport\": \"{}\", \"world\": {}, \"opt_seconds\": {:.6e}, \
-             \"iters_per_sec\": {:.3}, \
+            "    {{\"transport\": \"{}\", \"world\": {}, \"schedule\": \"{}\", \
+             \"allreduce\": \"{}\", \"opt_seconds\": {:.6e}, \"iters_per_sec\": {:.3}, \
              \"allreduce_bytes_measured\": {}, \"allreduce_bytes_formula\": {}, \
              \"broadcast_bytes_measured\": {}, \"broadcast_bytes_formula\": {}, \
-             \"scalar_bytes_measured\": {}}}",
+             \"scalar_bytes_measured\": {}, \
+             \"wait_allreduce_s\": {:.6e}, \"wait_broadcast_s\": {:.6e}, \
+             \"wait_scalar_s\": {:.6e}, \"wait_barrier_s\": {:.6e}, \
+             \"wait_hist\": [{}]}}",
             r.transport,
             r.world,
+            r.schedule,
+            r.allreduce,
             r.opt_seconds,
             r.iters_per_sec,
             r.allreduce_bytes_measured,
             r.allreduce_bytes_formula,
             r.broadcast_bytes_measured,
             r.broadcast_bytes_formula,
-            r.scalar_bytes_measured
+            r.scalar_bytes_measured,
+            r.wait_world_s[0],
+            r.wait_world_s[1],
+            r.wait_world_s[2],
+            r.wait_world_s[3],
+            hist.join(", ")
         );
         out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
     }

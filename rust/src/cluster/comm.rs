@@ -8,35 +8,72 @@
 //! sit behind one enum, following the codebase's enum-over-trait-object
 //! idiom (cf. `coordinator::backend::BackendKind`):
 //!
-//! * [`LocalComm`] — thread-backed ranks inside one process.  Each rank
-//!   deposits into a **pre-sized recycled per-rank slot** and folds the
-//!   slots in place **in rank order**, so steady-state collectives perform
-//!   zero heap allocation (pinned by `tests/alloc_regression.rs`) and
-//!   results are bit-reproducible for a fixed world size regardless of
-//!   thread scheduling.
+//! * [`LocalComm`] — thread-backed ranks inside one process.  Matrix
+//!   collectives run over a **sequence-numbered op ledger** with recycled
+//!   deposit buffers: a rank deposits at issue time, folds the deposits
+//!   **in rank order** at wait time, and the last folder recycles the
+//!   buffers — so steady-state collectives perform zero heap allocation
+//!   (pinned by `tests/alloc_regression.rs`) and results are
+//!   bit-reproducible for a fixed world size regardless of scheduling.
 //! * [`TcpComm`](super::TcpComm) — genuinely separate processes over
-//!   length-prefixed frames on `std::net` (see `cluster/tcp.rs`).  The hub
-//!   folds contributions in the same rank order, so TCP results are
-//!   **bit-identical** to `Local` at any world size (pinned by
+//!   length-prefixed frames on `std::net` (see `cluster/tcp.rs`).  Every
+//!   algorithm folds contributions in the same rank order `LocalComm`
+//!   folds its deposits, so a TCP world of any size produces
+//!   **bit-identical** results to `Local` (pinned by
 //!   `tests/transport_equivalence.rs`).
+//!
+//! ## Nonblocking collectives
+//!
+//! [`Collectives::iallreduce_sum`] / [`Collectives::ibroadcast`] return a
+//! [`PendingOp`] handle; [`PendingOp::wait`] blocks until the result is in
+//! the (moved-in, moved-back-out) buffer.  MPI-like contract:
+//!
+//! * every rank must issue the same collectives in the same program order;
+//! * pending ops must be waited **in issue order** (enforced);
+//! * blocking collectives (matrix, scalar, barrier) must not be entered
+//!   while nonblocking ops are in flight (enforced for all of them).
+//!
+//! Progress semantics are transport-specific but results are identical:
+//! `Local` deposits at issue (peers never wait on this rank's compute
+//! between its issue and wait — the straggler-absorption win), the TCP
+//! star sends leaf contributions and — stream order permitting — root
+//! fan-outs at issue (see `cluster/tcp.rs` for the send-ordering
+//! discipline), and the TCP ring runs at wait.  The fold a wait performs
+//! is always the rank-order fold, so overlap never changes a single bit.
+//!
+//! ## Allreduce algorithms
+//!
+//! [`AllreduceAlgo::Star`] reduces onto rank 0 and broadcasts back (hub
+//! traffic grows linearly with world size); [`AllreduceAlgo::Ring`] is a
+//! rank-ordered reduce-scatter + ring allgather bounding per-rank traffic
+//! at `2·(N−1)/N · bytes` (see [`ring_allreduce_floats`] for the exact
+//! chunk arithmetic and `cluster/tcp.rs` for the wire schedule).  Both
+//! fold in rank order — same bits, different traffic shape.
 //!
 //! Traffic is counted per logical collective (once per call, by rank 0 /
 //! the hub) in [`CommStats`]; those measured bytes are the source of truth
 //! the `TrainStats` per-iteration formulas and the α–β cost model are
-//! checked against (`benches/scaling.rs`).
+//! checked against (`benches/scaling.rs`).  [`WaitStats`] additionally
+//! tracks, per rank, the time spent blocked in each collective kind plus a
+//! fixed-bucket latency histogram — the straggler telemetry that
+//! quantifies how much blocking the pipelined schedule removes.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use crate::config::AllreduceAlgo;
 use crate::linalg::Matrix;
 use crate::Result;
 
 /// Cumulative traffic counters (bytes that would cross / did cross the
 /// network), counted once per logical collective.  Matrix collectives
-/// count `len × 4` bytes; scalar reductions count `len × 8` and are kept
-/// in their own bucket so the per-iteration Gram/weight formulas can be
-/// checked against `allreduce_bytes`/`broadcast_bytes` exactly.
+/// count `len × 4` bytes under the configured allreduce algorithm's
+/// traffic shape (star: the full buffer; ring: rank 0's bounded share —
+/// see [`ring_allreduce_floats`]); scalar reductions count `len × 8` and
+/// are kept in their own bucket so the per-iteration Gram/weight formulas
+/// can be checked against `allreduce_bytes`/`broadcast_bytes` exactly.
 #[derive(Debug, Default)]
 pub struct CommStats {
     pub allreduce_bytes: AtomicU64,
@@ -70,9 +107,150 @@ impl CommStats {
     }
 }
 
+/// Number of buckets in the per-rank wait-time histogram.
+pub const WAIT_BUCKETS: usize = 8;
+
+/// Upper edges (exclusive, microseconds) of the first `WAIT_BUCKETS - 1`
+/// histogram buckets; the last bucket is the overflow.
+pub const WAIT_BUCKET_EDGES_US: [u64; WAIT_BUCKETS - 1] =
+    [50, 200, 1_000, 5_000, 20_000, 100_000, 500_000];
+
+/// Which collective a wait-time sample belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WaitKind {
+    Allreduce,
+    Broadcast,
+    Scalar,
+    Barrier,
+}
+
+/// Per-rank straggler telemetry: how long this rank sat blocked in each
+/// collective kind, plus a fixed-bucket histogram over individual blocked
+/// intervals.  Blocking collectives record their whole call; nonblocking
+/// ops record only the `wait()` — so under the pipelined schedule these
+/// numbers measure exactly the blocking the overlap failed to hide.
+#[derive(Clone, Debug, Default)]
+pub struct WaitStats {
+    pub allreduce_s: f64,
+    pub broadcast_s: f64,
+    pub scalar_s: f64,
+    pub barrier_s: f64,
+    pub hist: [u64; WAIT_BUCKETS],
+}
+
+impl WaitStats {
+    pub fn total_s(&self) -> f64 {
+        self.allreduce_s + self.broadcast_s + self.scalar_s + self.barrier_s
+    }
+
+    fn record(&mut self, kind: WaitKind, d: Duration) {
+        let s = d.as_secs_f64();
+        match kind {
+            WaitKind::Allreduce => self.allreduce_s += s,
+            WaitKind::Broadcast => self.broadcast_s += s,
+            WaitKind::Scalar => self.scalar_s += s,
+            WaitKind::Barrier => self.barrier_s += s,
+        }
+        let us = d.as_micros() as u64;
+        let mut bucket = WAIT_BUCKETS - 1;
+        for (i, edge) in WAIT_BUCKET_EDGES_US.iter().enumerate() {
+            if us < *edge {
+                bucket = i;
+                break;
+            }
+        }
+        self.hist[bucket] += 1;
+    }
+}
+
+/// Half-open float range of ring chunk `c` in a `len`-float buffer over
+/// `world` ranks: `len/world` floats each, plus one extra for the first
+/// `len mod world` chunks.  Both the wire layout (`cluster/tcp.rs`'s
+/// reduce-scatter/allgather) and the traffic formula below are defined
+/// in terms of this single partition, so they cannot drift apart.
+pub(crate) fn ring_chunk_range(c: usize, len: usize, world: usize) -> (usize, usize) {
+    let base = len / world;
+    let rem = len % world;
+    let start = c * base + c.min(rem);
+    (start, start + base + usize::from(c < rem))
+}
+
+/// Floats rank 0 puts on the wire for one ring allreduce of a `len`-float
+/// buffer: reduce-scatter sends every chunk but its own, the ring
+/// allgather sends every reduced chunk but its successor's — in total
+/// `2·len − |chunk 0| − |chunk 1|`, the `2·(N−1)/N` bound with exact
+/// non-divisible chunk arithmetic ([`ring_chunk_range`]).  A one-rank
+/// world keeps the logical full-buffer convention the star uses
+/// (formulas stay comparable).
+pub fn ring_allreduce_floats(world: usize, len: usize) -> usize {
+    if world <= 1 {
+        return len;
+    }
+    let chunk = |c: usize| {
+        let (s, e) = ring_chunk_range(c, len, world);
+        e - s
+    };
+    2 * len - chunk(0) - chunk(1)
+}
+
+/// What a [`PendingOp`] is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum PendingKind {
+    Allreduce,
+    Broadcast { root: usize },
+}
+
+/// Count one logical matrix collective into `stats` under `algo`'s
+/// traffic shape — star: the full buffer once; ring: rank 0's bounded
+/// `2·(N−1)/N` share.  Shared by both transports (called on rank 0 / the
+/// hub only) so the measured==formula discipline can't drift per
+/// transport.
+pub(crate) fn count_matrix_collective(
+    stats: &CommStats,
+    algo: AllreduceAlgo,
+    world: usize,
+    kind: PendingKind,
+    floats: usize,
+) {
+    match kind {
+        PendingKind::Allreduce => match algo {
+            AllreduceAlgo::Star => stats.count_allreduce(floats),
+            AllreduceAlgo::Ring => stats.count_allreduce(ring_allreduce_floats(world, floats)),
+        },
+        PendingKind::Broadcast { .. } => stats.count_broadcast(floats),
+    }
+}
+
+impl PendingKind {
+    fn wait_kind(self) -> WaitKind {
+        match self {
+            PendingKind::Allreduce => WaitKind::Allreduce,
+            PendingKind::Broadcast { .. } => WaitKind::Broadcast,
+        }
+    }
+}
+
+/// Handle to an in-flight nonblocking collective.  Owns the buffer
+/// (moved in at issue, moved back out by [`PendingOp::wait`]); ops must
+/// be waited in issue order on the communicator that issued them.
+pub struct PendingOp {
+    pub(crate) seq: u64,
+    pub(crate) kind: PendingKind,
+    pub(crate) buf: Matrix,
+}
+
+impl PendingOp {
+    /// Block until the collective completes and return the result buffer
+    /// (allreduce: the rank-order sum; broadcast: the root's panel).
+    pub fn wait(self, comm: &mut Collectives) -> Result<Matrix> {
+        comm.wait(self)
+    }
+}
+
 /// The pluggable transport every rank synchronizes through.  All
-/// collectives are synchronous and must be entered by every rank in the
-/// same program order, like their MPI namesakes.
+/// collectives must be entered by every rank in the same program order,
+/// like their MPI namesakes; matrix collectives come in blocking and
+/// nonblocking (`i`-prefixed) forms.
 pub enum Collectives {
     Local(LocalComm),
     Tcp(super::TcpComm),
@@ -106,6 +284,14 @@ impl Collectives {
         }
     }
 
+    /// This rank's blocked-time telemetry (see [`WaitStats`]).
+    pub fn wait_stats(&self) -> &WaitStats {
+        match self {
+            Collectives::Local(c) => &c.wait,
+            Collectives::Tcp(c) => c.wait_stats(),
+        }
+    }
+
     pub fn transport_name(&self) -> &'static str {
         match self {
             Collectives::Local(_) => "local",
@@ -113,46 +299,149 @@ impl Collectives {
         }
     }
 
-    pub fn barrier(&mut self) -> Result<()> {
+    /// Select the allreduce algorithm (must match on every rank; the TCP
+    /// transport additionally fixes it at connect time — the ring needs
+    /// mesh links).
+    pub fn set_allreduce_algo(&mut self, algo: AllreduceAlgo) {
         match self {
-            Collectives::Local(c) => c.barrier(),
-            Collectives::Tcp(c) => c.barrier(),
+            Collectives::Local(c) => c.algo = algo,
+            Collectives::Tcp(c) => c.set_allreduce_algo(algo),
         }
     }
 
-    /// Sum `m` across all ranks; on return every rank holds the total,
-    /// folded **in rank order** (deterministic, transport-independent).
-    pub fn allreduce_sum(&mut self, m: &mut Matrix) -> Result<()> {
+    pub fn allreduce_algo(&self) -> AllreduceAlgo {
         match self {
-            Collectives::Local(c) => c.allreduce_sum(m),
-            Collectives::Tcp(c) => c.allreduce_sum(m),
+            Collectives::Local(c) => c.algo,
+            Collectives::Tcp(c) => c.allreduce_algo(),
         }
+    }
+
+    /// Number of nonblocking ops issued but not yet waited.
+    pub fn pending_ops(&self) -> usize {
+        match self {
+            Collectives::Local(c) => (c.issue_seq - c.done_seq) as usize,
+            Collectives::Tcp(c) => c.pending_ops(),
+        }
+    }
+
+    pub fn barrier(&mut self) -> Result<()> {
+        anyhow::ensure!(
+            self.pending_ops() == 0,
+            "barrier with nonblocking ops in flight"
+        );
+        let t0 = Instant::now();
+        let r = match self {
+            Collectives::Local(c) => c.barrier(),
+            Collectives::Tcp(c) => c.barrier(),
+        };
+        self.record_wait(WaitKind::Barrier, t0);
+        r
+    }
+
+    /// Sum `m` across all ranks; on return every rank holds the total,
+    /// folded **in rank order** (deterministic, transport- and
+    /// algorithm-independent).
+    pub fn allreduce_sum(&mut self, m: &mut Matrix) -> Result<()> {
+        anyhow::ensure!(
+            self.pending_ops() == 0,
+            "blocking allreduce with nonblocking ops in flight"
+        );
+        let t0 = Instant::now();
+        let op = self.issue(PendingKind::Allreduce, std::mem::take(m))?;
+        *m = self.complete(op)?;
+        self.record_wait(WaitKind::Allreduce, t0);
+        Ok(())
     }
 
     /// Broadcast `m` from `root` to every rank (non-root contents are
     /// replaced, resizing as needed).
     pub fn broadcast(&mut self, root: usize, m: &mut Matrix) -> Result<()> {
+        anyhow::ensure!(root < self.world_size(), "broadcast root {root} out of range");
+        anyhow::ensure!(
+            self.pending_ops() == 0,
+            "blocking broadcast with nonblocking ops in flight"
+        );
+        let t0 = Instant::now();
+        let op = self.issue(PendingKind::Broadcast { root }, std::mem::take(m))?;
+        *m = self.complete(op)?;
+        self.record_wait(WaitKind::Broadcast, t0);
+        Ok(())
+    }
+
+    /// Nonblocking allreduce: takes the buffer, returns a [`PendingOp`];
+    /// `wait()` yields the rank-order sum in the same (recycled) buffer.
+    pub fn iallreduce_sum(&mut self, m: Matrix) -> Result<PendingOp> {
+        self.issue(PendingKind::Allreduce, m)
+    }
+
+    /// Nonblocking broadcast from `root` (root passes its panel, other
+    /// ranks pass a landing buffer to recycle).
+    pub fn ibroadcast(&mut self, root: usize, m: Matrix) -> Result<PendingOp> {
+        anyhow::ensure!(root < self.world_size(), "broadcast root {root} out of range");
+        self.issue(PendingKind::Broadcast { root }, m)
+    }
+
+    /// Complete a pending op (also available as [`PendingOp::wait`]).
+    /// Ops must complete in issue order.
+    pub fn wait(&mut self, op: PendingOp) -> Result<Matrix> {
+        let kind = op.kind.wait_kind();
+        let t0 = Instant::now();
+        let r = self.complete(op)?;
+        self.record_wait(kind, t0);
+        Ok(r)
+    }
+
+    fn issue(&mut self, kind: PendingKind, buf: Matrix) -> Result<PendingOp> {
         match self {
-            Collectives::Local(c) => c.broadcast(root, m),
-            Collectives::Tcp(c) => c.broadcast(root, m),
+            Collectives::Local(c) => c.issue(kind, buf),
+            Collectives::Tcp(c) => c.issue(kind, buf),
+        }
+    }
+
+    fn complete(&mut self, op: PendingOp) -> Result<Matrix> {
+        match self {
+            Collectives::Local(c) => c.complete(op),
+            Collectives::Tcp(c) => c.complete(op),
+        }
+    }
+
+    fn record_wait(&mut self, kind: WaitKind, t0: Instant) {
+        let d = t0.elapsed();
+        match self {
+            Collectives::Local(c) => c.wait.record(kind, d),
+            Collectives::Tcp(c) => c.wait_stats_mut().record(kind, d),
         }
     }
 
     /// Element-wise f64 sum of `vals` across ranks, folded in rank order —
     /// the eval / penalty / loss-grad reductions.
     pub fn allreduce_scalars(&mut self, vals: &mut [f64]) -> Result<()> {
-        match self {
+        anyhow::ensure!(
+            self.pending_ops() == 0,
+            "scalar allreduce with nonblocking ops in flight"
+        );
+        let t0 = Instant::now();
+        let r = match self {
             Collectives::Local(c) => c.allreduce_scalars(vals),
             Collectives::Tcp(c) => c.allreduce_scalars(vals),
-        }
+        };
+        self.record_wait(WaitKind::Scalar, t0);
+        r
     }
 
     /// Broadcast a small f64 panel from `root` (stop flags, test metric).
     pub fn broadcast_scalars(&mut self, root: usize, vals: &mut [f64]) -> Result<()> {
-        match self {
+        anyhow::ensure!(
+            self.pending_ops() == 0,
+            "scalar broadcast with nonblocking ops in flight"
+        );
+        let t0 = Instant::now();
+        let r = match self {
             Collectives::Local(c) => c.broadcast_scalars(root, vals),
             Collectives::Tcp(c) => c.broadcast_scalars(root, vals),
-        }
+        };
+        self.record_wait(WaitKind::Scalar, t0);
+        r
     }
 
     /// Poison the world: every rank currently blocked (or about to block)
@@ -166,17 +455,185 @@ impl Collectives {
     }
 }
 
-/// Abortable generation barrier + per-rank deposit slots shared by every
-/// handle of one local world.
+/// One in-flight op on the [`NbLedger`]: the per-rank deposit slots plus
+/// arrival/fold refcounts.  Shells and deposit buffers are recycled, so
+/// the steady state allocates nothing.
+struct NbOp {
+    kind: PendingKind,
+    deposits: Vec<Option<Matrix>>,
+    deposited: usize,
+    folded: usize,
+}
+
+impl NbOp {
+    fn empty() -> NbOp {
+        NbOp {
+            kind: PendingKind::Allreduce,
+            deposits: Vec::new(),
+            deposited: 0,
+            folded: 0,
+        }
+    }
+
+    fn reset(&mut self, kind: PendingKind, world: usize) {
+        self.kind = kind;
+        self.deposits.clear();
+        self.deposits.resize_with(world, || None);
+        self.deposited = 0;
+        self.folded = 0;
+    }
+}
+
+/// Sequence-numbered op ledger shared by all handles of one local world.
+/// Because every rank issues the same collectives in the same order, the
+/// rank-local sequence numbers agree globally — the first issuer of a
+/// sequence number creates the entry and fixes its kind; a peer issuing a
+/// *different* kind at the same number is a schedule desync and errors
+/// (mirroring the TCP transport's opcode check).
+///
+/// Known tradeoff: each rank's fold runs under the single ledger mutex,
+/// so concurrent folds of one op serialize (the ops `VecDeque` may move
+/// entries on push/pop, so fold reads cannot safely escape the lock
+/// without per-op stable storage — a ROADMAP follow-up).  The folds are
+/// memory-bound memcpy/add over buffers that all ranks read anyway, and
+/// the pipelined schedule staggers when ranks reach them, so the
+/// serialization has not shown up in the scaling bench; revisit with
+/// `Arc`-per-op storage if Local worlds grow past a socket.
+struct NbLedger {
+    /// Sequence number of `ops[0]`.
+    base: u64,
+    ops: VecDeque<NbOp>,
+    free_bufs: Vec<Matrix>,
+    free_ops: Vec<NbOp>,
+}
+
+impl NbLedger {
+    fn new() -> NbLedger {
+        NbLedger {
+            base: 0,
+            ops: VecDeque::new(),
+            free_bufs: Vec::new(),
+            free_ops: Vec::new(),
+        }
+    }
+
+    /// Find or create the entry for `seq`, verifying kind agreement.
+    fn ensure_entry(&mut self, seq: u64, kind: PendingKind, world: usize) -> Result<usize> {
+        anyhow::ensure!(seq >= self.base, "nonblocking op {seq} already completed");
+        let idx = (seq - self.base) as usize;
+        // Entries are created in sequence order (every rank issues its
+        // ops in order and entries outlive their stragglers), so a new
+        // entry can only be the next one.
+        anyhow::ensure!(
+            idx <= self.ops.len(),
+            "nonblocking op sequence gap (issued {seq}, ledger ends at {})",
+            self.base + self.ops.len() as u64
+        );
+        if idx == self.ops.len() {
+            let mut op = self.free_ops.pop().unwrap_or_else(NbOp::empty);
+            op.reset(kind, world);
+            self.ops.push_back(op);
+        }
+        let op = &self.ops[idx];
+        anyhow::ensure!(
+            op.kind == kind,
+            "nonblocking collective desync at op {seq}: this rank issued {kind:?}, \
+             a peer issued {:?} (ranks must issue collectives in the same program order)",
+            op.kind
+        );
+        Ok(idx)
+    }
+
+    fn deposit(&mut self, idx: usize, rank: usize, m: &Matrix) {
+        // The pool mixes deposit shapes (Gram pairs, weight panels, …),
+        // so pick the *smallest sufficient* buffer rather than an
+        // arbitrary one: a large buffer never gets wasted on a small
+        // deposit while a bigger deposit reallocates, and the pool
+        // deterministically converges to zero steady-state allocations
+        // regardless of recycle order (capacities only grow).
+        let need = m.len();
+        let mut slot = match self
+            .free_bufs
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.capacity() >= need)
+            .min_by_key(|(_, b)| b.capacity())
+            .map(|(i, _)| i)
+        {
+            Some(i) => self.free_bufs.swap_remove(i),
+            None => self.free_bufs.pop().unwrap_or_default(),
+        };
+        slot.copy_from(m);
+        let op = &mut self.ops[idx];
+        debug_assert!(op.deposits[rank].is_none(), "rank {rank} deposited twice");
+        op.deposits[rank] = Some(slot);
+        op.deposited += 1;
+    }
+
+    fn ready(&self, seq: u64, kind: PendingKind, world: usize) -> bool {
+        let idx = (seq - self.base) as usize;
+        let op = &self.ops[idx];
+        match kind {
+            PendingKind::Allreduce => op.deposited == world,
+            PendingKind::Broadcast { root } => op.deposits[root].is_some(),
+        }
+    }
+
+    /// Fold the ready op into `buf` (rank-order — bit-identical to the
+    /// serial sum) and recycle its buffers once every rank has folded.
+    fn fold_into(
+        &mut self,
+        seq: u64,
+        kind: PendingKind,
+        rank: usize,
+        world: usize,
+        buf: &mut Matrix,
+    ) {
+        let idx = (seq - self.base) as usize;
+        let op = &mut self.ops[idx];
+        match kind {
+            PendingKind::Allreduce => {
+                buf.copy_from(op.deposits[0].as_ref().expect("rank 0 deposited"));
+                for d in op.deposits.iter().skip(1) {
+                    buf.add_assign(d.as_ref().expect("rank deposited"));
+                }
+            }
+            PendingKind::Broadcast { root } => {
+                if rank != root {
+                    buf.copy_from(op.deposits[root].as_ref().expect("root deposited"));
+                }
+            }
+        }
+        op.folded += 1;
+        if op.folded == world {
+            for d in op.deposits.iter_mut() {
+                if let Some(m) = d.take() {
+                    self.free_bufs.push(m);
+                }
+            }
+            // Completion is in sequence order, so only front entries can
+            // be fully folded.
+            while self.ops.front().is_some_and(|o| o.folded == world) {
+                let shell = self.ops.pop_front().expect("checked front");
+                self.base += 1;
+                self.free_ops.push(shell);
+            }
+        }
+    }
+}
+
+/// Abortable generation barrier, per-rank scalar deposit slots, and the
+/// nonblocking matrix-op ledger shared by every handle of one local world.
 struct LocalShared {
     world: usize,
     gate: Mutex<Gate>,
     cv: Condvar,
-    /// Per-rank matrix deposit slots, pre-sized after the first collective
-    /// of each shape (steady state: `copy_from` reuses capacity).
-    slots: Vec<Mutex<Matrix>>,
     /// Per-rank scalar deposit slots.
     scalar_slots: Vec<Mutex<Vec<f64>>>,
+    /// Matrix collectives (blocking and nonblocking alike) run over this
+    /// ledger.
+    nb: Mutex<NbLedger>,
+    nb_cv: Condvar,
     abort: AtomicBool,
     stats: CommStats,
 }
@@ -191,6 +648,10 @@ struct Gate {
 pub struct LocalComm {
     rank: usize,
     world: usize,
+    algo: AllreduceAlgo,
+    issue_seq: u64,
+    done_seq: u64,
+    wait: WaitStats,
     shared: Arc<LocalShared>,
 }
 
@@ -201,19 +662,29 @@ impl LocalComm {
             world: n,
             gate: Mutex::new(Gate { arrived: 0, generation: 0 }),
             cv: Condvar::new(),
-            slots: (0..n).map(|_| Mutex::new(Matrix::default())).collect(),
             scalar_slots: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
+            nb: Mutex::new(NbLedger::new()),
+            nb_cv: Condvar::new(),
             abort: AtomicBool::new(false),
             stats: CommStats::default(),
         });
         (0..n)
-            .map(|rank| LocalComm { rank, world: n, shared: shared.clone() })
+            .map(|rank| LocalComm {
+                rank,
+                world: n,
+                algo: AllreduceAlgo::Star,
+                issue_seq: 0,
+                done_seq: 0,
+                wait: WaitStats::default(),
+                shared: shared.clone(),
+            })
             .collect()
     }
 
     pub fn abort(&self) {
         self.shared.abort.store(true, Ordering::SeqCst);
         self.shared.cv.notify_all();
+        self.shared.nb_cv.notify_all();
     }
 
     fn check_abort(&self) -> Result<()> {
@@ -222,6 +693,79 @@ impl LocalComm {
             "local world aborted (a peer rank failed)"
         );
         Ok(())
+    }
+
+    /// Count one logical collective on rank 0 under the configured
+    /// traffic shape.
+    fn count(&self, kind: PendingKind, floats: usize) {
+        count_matrix_collective(&self.shared.stats, self.algo, self.world, kind, floats);
+    }
+
+    /// Issue one matrix collective: register it on the ledger (deposit
+    /// our contribution immediately — peers never block on this rank's
+    /// compute between issue and wait) and hand back the buffer inside a
+    /// [`PendingOp`].
+    fn issue(&mut self, kind: PendingKind, buf: Matrix) -> Result<PendingOp> {
+        self.check_abort()?;
+        let seq = self.issue_seq;
+        self.issue_seq += 1;
+        if self.world > 1 {
+            let depositor = match kind {
+                PendingKind::Allreduce => true,
+                PendingKind::Broadcast { root } => root == self.rank,
+            };
+            {
+                let mut nb = self.shared.nb.lock().unwrap();
+                let idx = nb.ensure_entry(seq, kind, self.world)?;
+                if depositor {
+                    nb.deposit(idx, self.rank, &buf);
+                }
+            }
+            self.shared.nb_cv.notify_all();
+        }
+        Ok(PendingOp { seq, kind, buf })
+    }
+
+    /// Wait for all contributions, fold in rank order, recycle.
+    fn complete(&mut self, op: PendingOp) -> Result<Matrix> {
+        let PendingOp { seq, kind, mut buf } = op;
+        anyhow::ensure!(
+            seq == self.done_seq,
+            "nonblocking ops must be waited in issue order (waiting op {seq}, \
+             expected {})",
+            self.done_seq
+        );
+        self.done_seq += 1;
+        if self.world == 1 {
+            self.check_abort()?;
+            self.count(kind, buf.len());
+            return Ok(buf);
+        }
+        {
+            let mut nb = self.shared.nb.lock().unwrap();
+            loop {
+                // Readiness before abort: a completable op completes even
+                // while a post-run drop is poisoning the world (same
+                // ordering argument as the barrier's generation check).
+                if nb.ready(seq, kind, self.world) {
+                    break;
+                }
+                if self.shared.abort.load(Ordering::SeqCst) {
+                    anyhow::bail!("local world aborted (a peer rank failed)");
+                }
+                let (nb2, _timeout) = self
+                    .shared
+                    .nb_cv
+                    .wait_timeout(nb, Duration::from_millis(50))
+                    .unwrap();
+                nb = nb2;
+            }
+            nb.fold_into(seq, kind, self.rank, self.world, &mut buf);
+        }
+        if self.rank == 0 {
+            self.count(kind, buf.len());
+        }
+        Ok(buf)
     }
 
     /// Generation barrier.  Unlike `std::sync::Barrier` it can be poisoned
@@ -259,48 +803,6 @@ impl LocalComm {
                 anyhow::bail!("local world aborted (a peer rank failed)");
             }
         }
-    }
-
-    /// Deposit-into-slot / barrier / fold-in-rank-order / barrier.  The
-    /// fold runs on every rank over the same slot sequence, so all ranks
-    /// produce bit-identical sums; slots are recycled, so the steady state
-    /// allocates nothing.
-    pub fn allreduce_sum(&self, m: &mut Matrix) -> Result<()> {
-        if self.world == 1 {
-            self.shared.stats.count_allreduce(m.len());
-            return self.check_abort();
-        }
-        self.shared.slots[self.rank].lock().unwrap().copy_from(m);
-        self.barrier()?;
-        {
-            m.copy_from(&self.shared.slots[0].lock().unwrap());
-            for slot in self.shared.slots.iter().skip(1) {
-                m.add_assign(&slot.lock().unwrap());
-            }
-        }
-        if self.rank == 0 {
-            self.shared.stats.count_allreduce(m.len());
-        }
-        // Nobody may re-deposit until every rank has finished folding.
-        self.barrier()
-    }
-
-    pub fn broadcast(&self, root: usize, m: &mut Matrix) -> Result<()> {
-        assert!(root < self.world, "broadcast root {root} out of range");
-        if self.world == 1 {
-            self.shared.stats.count_broadcast(m.len());
-            return self.check_abort();
-        }
-        if self.rank == root {
-            self.shared.slots[root].lock().unwrap().copy_from(m);
-        }
-        self.barrier()?;
-        if self.rank != root {
-            m.copy_from(&self.shared.slots[root].lock().unwrap());
-        } else {
-            self.shared.stats.count_broadcast(m.len());
-        }
-        self.barrier()
     }
 
     pub fn allreduce_scalars(&self, vals: &mut [f64]) -> Result<()> {
@@ -365,11 +867,11 @@ impl LocalComm {
 
 /// Dropping a handle poisons the world.  This is the panic guard: an
 /// unwinding rank drops its handle before reaching any explicit abort
-/// call, and without this its peers would sit in the barrier's poll loop
-/// forever.  Safe for normal completion too — a rank can only finish its
-/// last collective after every peer has entered that collective's final
-/// barrier, and barrier exits check the generation *before* the abort
-/// flag, so under the SPMD contract (identical collective sequences on
+/// call, and without this its peers would sit in a poll loop forever.
+/// Safe for normal completion too — ledger waits check readiness *before*
+/// the abort flag (an op whose deposits are all in completes even while
+/// the world is being poisoned), and barrier exits check the generation
+/// first, so under the SPMD contract (identical collective sequences on
 /// every rank) a post-run drop never poisons a live collective.
 impl Drop for LocalComm {
     fn drop(&mut self) {
@@ -440,6 +942,116 @@ mod tests {
     }
 
     #[test]
+    fn nonblocking_pipeline_matches_blocking() {
+        // Two allreduces + a broadcast in flight at once, waited in issue
+        // order with compute (here: building the next op) in between —
+        // results must be bit-identical to the blocking path.
+        forall("iallreduce/ibroadcast == blocking", 10, |g| {
+            let ranks = g.usize_in(2, 6);
+            let r = g.usize_in(1, 5);
+            let c = g.usize_in(1, 5);
+            let root = g.usize_in(0, ranks - 1);
+            let inputs: Vec<(Matrix, Matrix)> = (0..ranks)
+                .map(|i| {
+                    let mut rng = Rng::stream(3_000 + g.case as u64, i as u64);
+                    (Matrix::randn(r, c, &mut rng), Matrix::randn(r, c, &mut rng))
+                })
+                .collect();
+            let mut want_a = Matrix::zeros(r, c);
+            let mut want_b = Matrix::zeros(r, c);
+            for (a, b) in &inputs {
+                want_a.add_assign(a);
+                want_b.add_assign(b);
+            }
+            let want_bcast = inputs[root].0.clone();
+            let inputs = &inputs;
+            let worlds = Collectives::local_world(ranks);
+            let results: Vec<(Matrix, Matrix, Matrix)> = std::thread::scope(|s| {
+                let handles: Vec<_> = worlds
+                    .into_iter()
+                    .enumerate()
+                    .map(|(rank, mut w)| {
+                        s.spawn(move || {
+                            let pa = w.iallreduce_sum(inputs[rank].0.clone()).unwrap();
+                            let pb = w.iallreduce_sum(inputs[rank].1.clone()).unwrap();
+                            let bc_buf = if rank == root {
+                                inputs[root].0.clone()
+                            } else {
+                                Matrix::default()
+                            };
+                            let pc = w.ibroadcast(root, bc_buf).unwrap();
+                            let a = pa.wait(&mut w).unwrap();
+                            let b = pb.wait(&mut w).unwrap();
+                            let bc = pc.wait(&mut w).unwrap();
+                            (a, b, bc)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for (i, (a, b, bc)) in results.iter().enumerate() {
+                if a.as_slice() != want_a.as_slice() || b.as_slice() != want_b.as_slice() {
+                    return Err(format!("rank {i}: nonblocking allreduce diverged"));
+                }
+                if bc.as_slice() != want_bcast.as_slice() {
+                    return Err(format!("rank {i}: nonblocking broadcast diverged"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn out_of_order_wait_rejected() {
+        let mut worlds = Collectives::local_world(1);
+        let w = &mut worlds[0];
+        let a = w.iallreduce_sum(Matrix::zeros(1, 1)).unwrap();
+        let b = w.iallreduce_sum(Matrix::zeros(1, 1)).unwrap();
+        let err = b.wait(w).unwrap_err();
+        assert!(format!("{err:#}").contains("issue order"), "{err:#}");
+        drop(a);
+    }
+
+    #[test]
+    fn blocking_collective_with_pending_op_rejected() {
+        let mut worlds = Collectives::local_world(1);
+        let w = &mut worlds[0];
+        let p = w.iallreduce_sum(Matrix::zeros(1, 1)).unwrap();
+        assert_eq!(w.pending_ops(), 1);
+        let err = w.allreduce_sum(&mut Matrix::zeros(1, 1)).unwrap_err();
+        assert!(format!("{err:#}").contains("in flight"), "{err:#}");
+        drop(p);
+    }
+
+    #[test]
+    fn mismatched_op_kinds_detected() {
+        // Rank 0 issues an allreduce while rank 1 issues a broadcast at
+        // the same sequence number — one of them must error (whichever
+        // reaches the ledger second), and the world unwinds cleanly.
+        let worlds = Collectives::local_world(2);
+        let errs: Vec<bool> = std::thread::scope(|s| {
+            let handles: Vec<_> = worlds
+                .into_iter()
+                .enumerate()
+                .map(|(rank, mut w)| {
+                    s.spawn(move || {
+                        let res = if rank == 0 {
+                            w.iallreduce_sum(Matrix::zeros(2, 2))
+                                .and_then(|p| p.wait(&mut w))
+                        } else {
+                            w.ibroadcast(1, Matrix::zeros(2, 2))
+                                .and_then(|p| p.wait(&mut w))
+                        };
+                        res.is_err()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert!(errs.iter().any(|&e| e), "no rank detected the desync");
+    }
+
+    #[test]
     fn broadcast_distributes_root_value() {
         run_ranks(6, |rank, world| {
             let mut m = Matrix::from_fn(2, 2, |r, c| (rank * 100 + r * 2 + c) as f32);
@@ -501,6 +1113,70 @@ mod tests {
         assert_eq!(world.stats().broadcast_bytes.load(Ordering::Relaxed), 64);
         assert_eq!(world.stats().scalar_bytes.load(Ordering::Relaxed), 16);
         assert_eq!(world.stats().total_bytes(), 144);
+        // every collective recorded a wait sample
+        assert_eq!(world.wait_stats().hist.iter().sum::<u64>(), 3);
+    }
+
+    #[test]
+    fn ring_traffic_formula_and_accounting() {
+        // Exact chunk arithmetic: 10 floats over 4 ranks → chunks 3,3,2,2;
+        // rank 0 sends 2·10 − 3 − 3 = 14 floats.
+        assert_eq!(ring_allreduce_floats(4, 10), 14);
+        // divisible case hits 2·(N−1)/N exactly
+        assert_eq!(ring_allreduce_floats(8, 64), 2 * 64 * 7 / 8);
+        // degenerate worlds keep the logical full-buffer convention
+        assert_eq!(ring_allreduce_floats(1, 10), 10);
+        // world 2: chunks 5,5 → sends 10
+        assert_eq!(ring_allreduce_floats(2, 10), 10);
+        // more ranks than floats: zero-sized tail chunks
+        assert_eq!(ring_allreduce_floats(8, 3), 2 * 3 - 1 - 1);
+
+        // a Local world in ring mode folds identically but counts the
+        // bounded per-rank traffic
+        let worlds = Collectives::local_world(4);
+        let sums: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let handles: Vec<_> = worlds
+                .into_iter()
+                .enumerate()
+                .map(|(rank, mut w)| {
+                    s.spawn(move || {
+                        w.set_allreduce_algo(AllreduceAlgo::Ring);
+                        let mut m = Matrix::from_fn(2, 5, |r, c| (rank + r * 5 + c) as f32);
+                        w.allreduce_sum(&mut m).unwrap();
+                        let bytes = if rank == 0 {
+                            w.stats().allreduce_bytes.load(Ordering::Relaxed)
+                        } else {
+                            0
+                        };
+                        (m.as_slice().to_vec(), bytes)
+                    })
+                })
+                .collect();
+            let results: Vec<(Vec<f32>, u64)> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+            assert_eq!(results[0].1, 4 * ring_allreduce_floats(4, 10) as u64);
+            results.into_iter().map(|(v, _)| v).collect()
+        });
+        for s in &sums[1..] {
+            assert_eq!(s, &sums[0]);
+        }
+        let want: Vec<f32> = (0..10).map(|i| 4.0 * i as f32 + 6.0).collect();
+        assert_eq!(sums[0], want);
+    }
+
+    #[test]
+    fn wait_histogram_buckets_samples() {
+        let mut ws = WaitStats::default();
+        ws.record(WaitKind::Allreduce, Duration::from_micros(10));
+        ws.record(WaitKind::Broadcast, Duration::from_micros(400));
+        ws.record(WaitKind::Scalar, Duration::from_millis(40));
+        ws.record(WaitKind::Barrier, Duration::from_secs(2));
+        assert_eq!(ws.hist[0], 1); // < 50 µs
+        assert_eq!(ws.hist[2], 1); // 200 µs – 1 ms
+        assert_eq!(ws.hist[5], 1); // 20 – 100 ms
+        assert_eq!(ws.hist[WAIT_BUCKETS - 1], 1); // overflow
+        assert!(ws.total_s() > 2.0);
+        assert!(ws.allreduce_s > 0.0 && ws.barrier_s > 1.9);
     }
 
     #[test]

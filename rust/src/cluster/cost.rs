@@ -56,6 +56,21 @@ impl CostModel {
     pub fn allreduce(&self, n_ranks: usize, bytes: usize) -> f64 {
         self.reduce(n_ranks, bytes) + self.broadcast(n_ranks, bytes)
     }
+
+    /// Ring allreduce (reduce-scatter + allgather): `2·(N−1)` rounds of
+    /// one `bytes/N` chunk each, so per-rank bandwidth is bounded at
+    /// `2·(N−1)/N · bytes` regardless of world size — the bandwidth-
+    /// optimal schedule the `--allreduce ring` transport implements
+    /// (`cluster::ring_allreduce_floats` carries the exact non-divisible
+    /// chunk arithmetic; this prices the idealized pipeline).
+    pub fn ring_allreduce(&self, n_ranks: usize, bytes: usize) -> f64 {
+        if n_ranks <= 1 {
+            return 0.0;
+        }
+        let chunk = (bytes as f64 / n_ranks as f64).ceil();
+        2.0 * (n_ranks as f64 - 1.0)
+            * (self.alpha_s + self.beta_s_per_byte * chunk)
+    }
 }
 
 #[cfg(test)]
@@ -95,6 +110,26 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn ring_beats_star_hub_at_scale() {
+        let m = CostModel::default();
+        // Large buffers, many ranks: the ring's bounded per-rank
+        // bandwidth must beat the tree/star allreduce, and its bandwidth
+        // term must flatten (≈ 2·bytes/bw) as N grows.
+        let bytes = 64 << 20;
+        assert!(m.ring_allreduce(64, bytes) < m.allreduce(64, bytes));
+        let t8 = m.ring_allreduce(8, bytes);
+        let t64 = m.ring_allreduce(64, bytes);
+        let asymptote = 2.0 * bytes as f64 * m.beta_s_per_byte;
+        assert!((t8 - asymptote * 7.0 / 8.0).abs() / t8 < 0.05, "{t8} vs {asymptote}");
+        assert!(t64 < asymptote * 1.05);
+        // single rank is free, like the other collectives
+        assert_eq!(m.ring_allreduce(1, bytes), 0.0);
+        // tiny messages are latency-bound: 2(N−1) rounds
+        let t_small = m.ring_allreduce(16, 4);
+        assert!(t_small >= 30.0 * m.alpha_s && t_small < 31.0 * m.alpha_s);
     }
 
     #[test]

@@ -19,7 +19,10 @@ mod cost;
 mod sim;
 mod tcp;
 
-pub use comm::{Collectives, CommStats, LocalComm};
+pub use comm::{
+    ring_allreduce_floats, Collectives, CommStats, LocalComm, PendingOp, WaitStats,
+    WAIT_BUCKETS, WAIT_BUCKET_EDGES_US,
+};
 pub use cost::CostModel;
 pub use sim::{ScalingPoint, ScalingProfile};
 pub use tcp::TcpComm;

@@ -2,14 +2,40 @@
 //! genuinely separate OS processes synchronizing over `std::net`, in the
 //! serve subsystem's dependency-free style.
 //!
-//! ## Topology and determinism
+//! ## Topologies and determinism
 //!
-//! A star: rank 0 is the hub (it also performs the weight solves, so the
-//! Gram reduction lands where it is consumed).  Leaves `1..N` hold one
-//! connection to the hub.  Every collective folds contributions **in rank
-//! order on the hub** — the same order `LocalComm` folds its slots — so a
-//! TCP world of any size produces **bit-identical** results to a local
-//! world of the same size (pinned by `tests/transport_equivalence.rs`).
+//! * **Star** (`--allreduce star`, the default): rank 0 is the hub (it
+//!   also performs the weight solves, so the Gram reduction lands where
+//!   it is consumed).  Leaves `1..N` hold one connection to the hub,
+//!   which folds contributions **in rank order** — hub traffic grows as
+//!   `2·(N−1)·bytes` per allreduce.
+//! * **Ring** (`--allreduce ring`): a full peer mesh (every rank holds a
+//!   connection to every other; `--peers` lists all addresses, rank `i`
+//!   binds `peers[i]`).  An allreduce is a rank-ordered reduce-scatter
+//!   (each rank sends chunk `c` of its buffer straight to chunk owner
+//!   `c`, who folds the deposits in rank order) followed by a ring
+//!   allgather (reduced chunks circulate `c → c+1 → …`), bounding
+//!   per-rank traffic at `2·(N−1)/N·bytes` independent of world size.
+//!   Barriers, broadcasts and scalar reductions still route through rank
+//!   0 over the mesh's hub links.
+//!
+//! Every algorithm performs the exact rank-order fold `LocalComm` uses,
+//! so any TCP world is **bit-identical** to a local world of the same
+//! size (pinned by `tests/transport_equivalence.rs`) — the ring changes
+//! who moves which bytes, never the arithmetic order.
+//!
+//! ## Nonblocking ops
+//!
+//! The transport has no progress thread; nonblocking collectives make
+//! progress at `issue` only where a send needs no received data — a
+//! leaf's star contribution always, and the root's broadcast fan-out
+//! whenever no older pending op still has wait-time sends (the kernel
+//! moves those bytes while the rank computes).  Hub folds, result reads
+//! and the whole ring run at `wait`.  Ops complete strictly in issue
+//! order (enforced), and every rank's per-link **send** order equals its
+//! issue order (fan-outs that would jump an older op's result frames are
+//! deferred to their own wait) — together these keep the untagged frame
+//! streams aligned with the SPMD program order on every link.
 //!
 //! ## Frame format (`GFC1`)
 //!
@@ -21,19 +47,22 @@
 //!   op 0x02 MAT      payload = rows u32 + cols u32 + rows*cols f32 LE
 //!   op 0x03 SCALARS  payload = count u32 + count f64 LE
 //!   op 0x04 BARRIER  payload = empty
+//!   op 0x05 CHUNK    payload = count u32 + count f32 LE   (ring segments)
 //! ```
 //!
 //! All collectives are program-ordered identically on every rank (SPMD),
 //! so frames need no tags: an unexpected opcode is a protocol error, and
 //! the HELLO fingerprint (a hash of the schedule-relevant `TrainConfig`
-//! fields) rejects worlds whose ranks were launched with divergent
-//! configs before any training traffic flows.
+//! fields — including the allreduce algorithm and schedule) rejects
+//! worlds whose ranks were launched with divergent configs before any
+//! training traffic flows.
 
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
-use super::comm::CommStats;
+use super::comm::{count_matrix_collective, CommStats, PendingKind, PendingOp, WaitStats};
+use crate::config::AllreduceAlgo;
 use crate::linalg::Matrix;
 use crate::Result;
 
@@ -42,6 +71,7 @@ const OP_HELLO: u8 = 0x01;
 const OP_MAT: u8 = 0x02;
 const OP_SCALARS: u8 = 0x03;
 const OP_BARRIER: u8 = 0x04;
+const OP_CHUNK: u8 = 0x05;
 
 /// Refuse frames past this size (a corrupted length prefix would
 /// otherwise ask for gigabytes).
@@ -63,16 +93,34 @@ const HELLO_TIMEOUT: Duration = Duration::from_secs(5);
 pub struct TcpComm {
     rank: usize,
     world: usize,
-    /// Hub: streams to ranks `1..world`, indexed `rank - 1`.
-    /// Leaf: exactly one stream, to the hub.
-    links: Vec<TcpStream>,
+    algo: AllreduceAlgo,
+    /// `links[p]` is the stream to peer `p`: `None` for self, and for
+    /// peers a star topology never connects (leaves hold only
+    /// `links[0]`; the ring mesh holds all of them).
+    links: Vec<Option<TcpStream>>,
     stats: CommStats,
+    wait: WaitStats,
     /// Reusable frame assembly / receive buffer.
     buf: Vec<u8>,
     /// Persistent decode scratch (hub-side fold operand; leaf-side scalar
     /// results) so steady-state collectives don't reallocate per call.
     scratch_mat: Matrix,
     scratch_scalars: Vec<f64>,
+    /// Ring reduce-scatter landing slots, one per peer rank, recycled
+    /// across calls (`slots[rank]` holds this rank's own contribution so
+    /// the fold can run over slots in pure rank order).
+    ring_slots: Vec<Vec<f32>>,
+    /// Nonblocking-op sequence counters (ops complete in issue order).
+    issue_seq: u64,
+    done_seq: u64,
+    /// Per in-flight op: (sends at wait, root send was deferred).  Frames
+    /// carry no tags, so this rank's per-link send order must equal its
+    /// peers' wait order (= issue order): an op may only send at issue
+    /// while no older pending op still has wait-time sends — otherwise
+    /// its frames would jump the stream and a peer would decode the
+    /// wrong MAT payload.  `pending_sends` counts the blockers.
+    pending_meta: std::collections::VecDeque<(bool, bool)>,
+    pending_sends: usize,
 }
 
 impl TcpComm {
@@ -80,155 +128,246 @@ impl TcpComm {
         TcpComm {
             rank,
             world,
-            links: Vec::new(),
+            algo: AllreduceAlgo::Star,
+            links: (0..world.max(1)).map(|_| None).collect(),
             stats: CommStats::default(),
+            wait: WaitStats::default(),
             buf: Vec::new(),
             scratch_mat: Matrix::default(),
             scratch_scalars: Vec::new(),
+            ring_slots: Vec::new(),
+            issue_seq: 0,
+            done_seq: 0,
+            pending_meta: std::collections::VecDeque::new(),
+            pending_sends: 0,
         }
     }
 
-    /// Join a TCP world from a peer list (`peers[0]` is the hub address;
-    /// rank 0 binds it, every other rank dials it).  `fingerprint` must be
-    /// identical across ranks — it hashes the schedule-relevant config so
-    /// mismatched launches fail fast instead of deadlocking mid-protocol.
+    /// Join a TCP world from a peer list.  For the star algorithm
+    /// `peers[0]` is the hub address (rank 0 binds it, every other rank
+    /// dials it); for the ring, `peers` must list every rank's address
+    /// (rank `i` binds `peers[i]` and the world forms a full mesh).
+    /// `fingerprint` must be identical across ranks — it hashes the
+    /// schedule-relevant config so mismatched launches fail fast instead
+    /// of deadlocking mid-protocol.
     pub fn connect(
         rank: usize,
         world: usize,
         peers: &[String],
         fingerprint: u64,
+        algo: AllreduceAlgo,
     ) -> Result<TcpComm> {
         anyhow::ensure!(world >= 1, "world size must be >= 1");
         anyhow::ensure!(rank < world, "rank {rank} out of range for world {world}");
         if world == 1 {
             // A one-rank world never binds or dials anything (mirrors
             // TrainConfig::validate, which only requires peers past 1).
-            return Ok(TcpComm::solo(rank, world));
+            let mut comm = TcpComm::solo(rank, world);
+            comm.algo = algo;
+            return Ok(comm);
         }
         anyhow::ensure!(
             !peers.is_empty(),
             "tcp transport needs --peers (peers[0] is the rank-0 hub address)"
         );
-        if rank == 0 {
-            let listener = TcpListener::bind(peers[0].as_str())
-                .map_err(|e| anyhow::anyhow!("rank 0: binding hub address {}: {e}", peers[0]))?;
-            Self::hub(listener, world, fingerprint)
-        } else {
-            Self::leaf(&peers[0], rank, world, fingerprint)
-        }
+        let mut comm = match algo {
+            AllreduceAlgo::Star => {
+                if rank == 0 {
+                    let listener = TcpListener::bind(peers[0].as_str()).map_err(|e| {
+                        anyhow::anyhow!("rank 0: binding hub address {}: {e}", peers[0])
+                    })?;
+                    Self::hub(listener, world, fingerprint)?
+                } else {
+                    Self::leaf(&peers[0], rank, world, fingerprint)?
+                }
+            }
+            AllreduceAlgo::Ring => {
+                anyhow::ensure!(
+                    peers.len() == world,
+                    "--allreduce ring needs --peers to list all {world} rank addresses \
+                     (got {})",
+                    peers.len()
+                );
+                let listener = TcpListener::bind(peers[rank].as_str()).map_err(|e| {
+                    anyhow::anyhow!("rank {rank}: binding mesh address {}: {e}", peers[rank])
+                })?;
+                Self::mesh(listener, rank, world, peers, fingerprint)?
+            }
+        };
+        comm.algo = algo;
+        Ok(comm)
     }
 
-    /// Rank 0: accept `world - 1` leaf connections on an already-bound
-    /// listener (exposed separately so tests/benches can bind port 0 and
-    /// learn the ephemeral address first).
+    /// Rank 0 of a star: accept `world - 1` leaf connections on an
+    /// already-bound listener (exposed separately so tests/benches can
+    /// bind port 0 and learn the ephemeral address first).
     pub fn hub(listener: TcpListener, world: usize, fingerprint: u64) -> Result<TcpComm> {
         anyhow::ensure!(world >= 2, "hub needs a world of >= 2 ranks");
-        listener
-            .set_nonblocking(true)
-            .map_err(|e| anyhow::anyhow!("hub listener nonblocking: {e}"))?;
-        let deadline = Instant::now() + CONNECT_TIMEOUT;
-        let mut links: Vec<Option<TcpStream>> = (1..world).map(|_| None).collect();
-        let mut pending = world - 1;
-        let mut buf = Vec::new();
-        while pending > 0 {
-            match listener.accept() {
-                Ok((stream, addr)) => {
-                    // A connection that can't produce a well-formed hello
-                    // quickly (port scanner, health probe, stray client)
-                    // is dropped and the accept loop continues — only a
-                    // *valid* hello with mismatched parameters is fatal.
-                    let mut stream = match prepare_accepted(stream) {
-                        Ok(s) => s,
-                        Err(e) => {
-                            eprintln!("hub: ignoring connection from {addr}: {e:#}");
-                            continue;
-                        }
-                    };
-                    let hello = read_frame(&mut stream, &mut buf)
-                        .and_then(|op| parse_hello(op, &buf));
-                    let (peer_rank, peer_world, peer_fp) = match hello {
-                        Ok(h) => h,
-                        Err(e) => {
-                            eprintln!("hub: ignoring connection from {addr}: {e:#}");
-                            continue;
-                        }
-                    };
-                    anyhow::ensure!(
-                        peer_world == world,
-                        "rank {peer_rank} joined with world size {peer_world}, hub has {world}"
-                    );
-                    anyhow::ensure!(
-                        peer_fp == fingerprint,
-                        "rank {peer_rank} joined with config fingerprint {peer_fp:#x}, \
-                         hub has {fingerprint:#x} — ranks must be launched with identical \
-                         configs and datasets"
-                    );
-                    anyhow::ensure!(
-                        peer_rank >= 1 && peer_rank < world,
-                        "hello from out-of-range rank {peer_rank}"
-                    );
-                    anyhow::ensure!(
-                        links[peer_rank - 1].is_none(),
-                        "rank {peer_rank} connected twice"
-                    );
-                    stream
-                        .set_read_timeout(Some(IO_TIMEOUT))
-                        .map_err(|e| anyhow::anyhow!("hub stream timeout: {e}"))?;
-                    links[peer_rank - 1] = Some(stream);
-                    pending -= 1;
-                }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    anyhow::ensure!(
-                        Instant::now() < deadline,
-                        "hub: timed out waiting for {pending} rank(s) to join"
-                    );
-                    std::thread::sleep(Duration::from_millis(20));
-                }
-                Err(e) => anyhow::bail!("hub: accept failed: {e}"),
-            }
-        }
-        let links = links.into_iter().map(|s| s.expect("all ranks joined")).collect();
-        Ok(TcpComm {
-            rank: 0,
-            world,
-            links,
-            stats: CommStats::default(),
-            buf,
-            scratch_mat: Matrix::default(),
-            scratch_scalars: Vec::new(),
-        })
+        let mut comm = TcpComm::solo(0, world);
+        comm.accept_peers(&listener, world, fingerprint, 1)?;
+        Ok(comm)
     }
 
-    /// Rank `rank >= 1`: dial the hub (with retries — launch order is
-    /// arbitrary) and introduce ourselves.
+    /// Rank `rank >= 1` of a star: dial the hub (with retries — launch
+    /// order is arbitrary) and introduce ourselves.
     pub fn leaf(hub_addr: &str, rank: usize, world: usize, fingerprint: u64) -> Result<TcpComm> {
         anyhow::ensure!(rank >= 1 && rank < world, "leaf rank {rank} out of range");
+        let mut comm = TcpComm::solo(rank, world);
+        comm.dial_peer(hub_addr, 0, fingerprint)?;
+        Ok(comm)
+    }
+
+    /// One rank of a ring mesh: dial every lower rank (whose listeners
+    /// are bound before anyone dials — `connect` binds before dialing,
+    /// and dials retry), then accept from every higher rank.  The
+    /// listener must already be bound to `peers[rank]` so higher ranks'
+    /// dials land in its backlog while we dial downwards.
+    pub fn mesh(
+        listener: TcpListener,
+        rank: usize,
+        world: usize,
+        peers: &[String],
+        fingerprint: u64,
+    ) -> Result<TcpComm> {
+        anyhow::ensure!(world >= 2, "mesh needs a world of >= 2 ranks");
+        anyhow::ensure!(rank < world, "rank {rank} out of range for world {world}");
+        anyhow::ensure!(
+            peers.len() == world,
+            "mesh needs all {world} peer addresses (got {})",
+            peers.len()
+        );
+        let mut comm = TcpComm::solo(rank, world);
+        comm.algo = AllreduceAlgo::Ring;
+        for p in 0..rank {
+            comm.dial_peer(&peers[p], p, fingerprint)?;
+        }
+        comm.accept_peers(&listener, world, fingerprint, rank + 1)?;
+        Ok(comm)
+    }
+
+    /// Dial one peer with retries and send our hello.
+    fn dial_peer(&mut self, addr: &str, peer_rank: usize, fingerprint: u64) -> Result<()> {
+        let rank = self.rank;
         let deadline = Instant::now() + CONNECT_TIMEOUT;
         let stream = loop {
-            match TcpStream::connect(hub_addr) {
+            match TcpStream::connect(addr) {
                 Ok(s) => break s,
                 Err(e) => {
                     anyhow::ensure!(
                         Instant::now() < deadline,
-                        "rank {rank}: connecting to hub {hub_addr}: {e}"
+                        "rank {rank}: connecting to rank {peer_rank} at {addr}: {e}"
                     );
                     std::thread::sleep(Duration::from_millis(100));
                 }
             }
         };
         prepare_stream(&stream)?;
-        let mut comm = TcpComm::solo(rank, world);
-        comm.links = vec![stream];
+        self.links[peer_rank] = Some(stream);
         let mut hello = Vec::with_capacity(20);
         hello.extend_from_slice(MAGIC);
-        hello.extend_from_slice(&(rank as u32).to_le_bytes());
-        hello.extend_from_slice(&(world as u32).to_le_bytes());
+        hello.extend_from_slice(&(self.rank as u32).to_le_bytes());
+        hello.extend_from_slice(&(self.world as u32).to_le_bytes());
         hello.extend_from_slice(&fingerprint.to_le_bytes());
-        let mut buf = std::mem::take(&mut comm.buf);
-        write_frame(&mut comm.links[0], OP_HELLO, &hello, &mut buf)
-            .map_err(|e| anyhow::anyhow!("rank {rank}: sending hello: {e}"))?;
-        comm.buf = buf;
-        Ok(comm)
+        let mut buf = std::mem::take(&mut self.buf);
+        let res = write_frame(
+            self.links[peer_rank].as_mut().expect("just connected"),
+            OP_HELLO,
+            &hello,
+            &mut buf,
+        )
+        .map_err(|e| anyhow::anyhow!("rank {rank}: sending hello to rank {peer_rank}: {e}"));
+        self.buf = buf;
+        res
+    }
+
+    /// Accept connections from every rank in `lowest_peer..world`,
+    /// validating their hellos (stray connections are dropped, mismatched
+    /// parameters are fatal).
+    fn accept_peers(
+        &mut self,
+        listener: &TcpListener,
+        world: usize,
+        fingerprint: u64,
+        lowest_peer: usize,
+    ) -> Result<()> {
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| anyhow::anyhow!("listener nonblocking: {e}"))?;
+        let deadline = Instant::now() + CONNECT_TIMEOUT;
+        let mut pending = world - lowest_peer;
+        let mut buf = std::mem::take(&mut self.buf);
+        let res = (|| -> Result<()> {
+            while pending > 0 {
+                match listener.accept() {
+                    Ok((stream, addr)) => {
+                        // A connection that can't produce a well-formed
+                        // hello quickly (port scanner, health probe, stray
+                        // client) is dropped and the accept loop continues
+                        // — only a *valid* hello with mismatched
+                        // parameters is fatal.
+                        let mut stream = match prepare_accepted(stream) {
+                            Ok(s) => s,
+                            Err(e) => {
+                                eprintln!(
+                                    "rank {}: ignoring connection from {addr}: {e:#}",
+                                    self.rank
+                                );
+                                continue;
+                            }
+                        };
+                        let hello = read_frame(&mut stream, &mut buf)
+                            .and_then(|op| parse_hello(op, &buf));
+                        let (peer_rank, peer_world, peer_fp) = match hello {
+                            Ok(h) => h,
+                            Err(e) => {
+                                eprintln!(
+                                    "rank {}: ignoring connection from {addr}: {e:#}",
+                                    self.rank
+                                );
+                                continue;
+                            }
+                        };
+                        anyhow::ensure!(
+                            peer_world == world,
+                            "rank {peer_rank} joined with world size {peer_world}, \
+                             this rank has {world}"
+                        );
+                        anyhow::ensure!(
+                            peer_fp == fingerprint,
+                            "rank {peer_rank} joined with config fingerprint {peer_fp:#x}, \
+                             this rank has {fingerprint:#x} — ranks must be launched with \
+                             identical configs and datasets"
+                        );
+                        anyhow::ensure!(
+                            peer_rank >= lowest_peer && peer_rank < world,
+                            "hello from unexpected rank {peer_rank} \
+                             (this rank accepts {lowest_peer}..{world})"
+                        );
+                        anyhow::ensure!(
+                            self.links[peer_rank].is_none(),
+                            "rank {peer_rank} connected twice"
+                        );
+                        stream
+                            .set_read_timeout(Some(IO_TIMEOUT))
+                            .map_err(|e| anyhow::anyhow!("accepted stream timeout: {e}"))?;
+                        self.links[peer_rank] = Some(stream);
+                        pending -= 1;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        anyhow::ensure!(
+                            Instant::now() < deadline,
+                            "rank {}: timed out waiting for {pending} rank(s) to join",
+                            self.rank
+                        );
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    Err(e) => anyhow::bail!("rank {}: accept failed: {e}", self.rank),
+                }
+            }
+            Ok(())
+        })();
+        self.buf = buf;
+        res
     }
 
     pub fn rank(&self) -> usize {
@@ -243,12 +382,338 @@ impl TcpComm {
         &self.stats
     }
 
+    pub fn wait_stats(&self) -> &WaitStats {
+        &self.wait
+    }
+
+    pub(crate) fn wait_stats_mut(&mut self) -> &mut WaitStats {
+        &mut self.wait
+    }
+
+    pub fn set_allreduce_algo(&mut self, algo: AllreduceAlgo) {
+        self.algo = algo;
+    }
+
+    pub fn allreduce_algo(&self) -> AllreduceAlgo {
+        self.algo
+    }
+
+    pub fn pending_ops(&self) -> usize {
+        (self.issue_seq - self.done_seq) as usize
+    }
+
     /// Tear the world down: peers blocked on this rank's frames error out
     /// instead of hanging.
     pub fn abort(&mut self) {
-        for link in &self.links {
+        for link in self.links.iter().flatten() {
             let _ = link.shutdown(Shutdown::Both);
         }
+    }
+
+    /// Count one logical collective on rank 0 under the configured
+    /// traffic shape (star: the full buffer; ring: rank 0's bounded
+    /// share).
+    fn count(&self, kind: PendingKind, floats: usize) {
+        count_matrix_collective(&self.stats, self.algo, self.world, kind, floats);
+    }
+
+    /// Issue a nonblocking op.  Whatever needs no received data goes on
+    /// the wire now — a star leaf's contribution always (leaves never
+    /// send at wait under the star, so their stream order is issue
+    /// order), and the root's broadcast fan-out **only while no older
+    /// pending op still has wait-time sends** (otherwise the fan-out
+    /// frames would jump ahead of the older op's result frames on the
+    /// shared links and a peer would decode the wrong payload; such a
+    /// fan-out is deferred to this op's own wait, restoring issue-order
+    /// streams).  Hub folds and the ring exchange always run at wait.
+    pub(crate) fn issue(&mut self, kind: PendingKind, buf: Matrix) -> Result<PendingOp> {
+        let seq = self.issue_seq;
+        self.issue_seq += 1;
+        if self.world == 1 {
+            return Ok(PendingOp { seq, kind, buf });
+        }
+        let rank = self.rank;
+        let mut deferred_send = false;
+        let mut sends_at_wait = match kind {
+            PendingKind::Allreduce => match self.algo {
+                // the hub sends the fold results at wait
+                AllreduceAlgo::Star => rank == 0,
+                // every rank exchanges chunks at wait
+                AllreduceAlgo::Ring => true,
+            },
+            // the hub relays a leaf root's panel at wait
+            PendingKind::Broadcast { root } => rank == 0 && root != 0,
+        };
+        let mut fbuf = std::mem::take(&mut self.buf);
+        let res = (|| -> Result<()> {
+            match kind {
+                PendingKind::Allreduce => {
+                    if self.algo == AllreduceAlgo::Star && rank != 0 {
+                        write_mat_frame(self.link(0)?, &buf, &mut fbuf)
+                            .map_err(|e| rank_err(rank, "allreduce send", e))?;
+                    }
+                }
+                PendingKind::Broadcast { root } => {
+                    if rank == root {
+                        if self.pending_sends == 0 {
+                            self.broadcast_root_send(root, &buf, &mut fbuf)?;
+                        } else {
+                            deferred_send = true;
+                            sends_at_wait = true;
+                        }
+                    }
+                }
+            }
+            Ok(())
+        })();
+        self.buf = fbuf;
+        res?;
+        if sends_at_wait {
+            self.pending_sends += 1;
+        }
+        self.pending_meta.push_back((sends_at_wait, deferred_send));
+        Ok(PendingOp { seq, kind, buf })
+    }
+
+    /// The root's outbound frames for a broadcast: rank 0 fans out to
+    /// every leaf; a leaf root sends one panel to the hub for relay.
+    fn broadcast_root_send(&mut self, root: usize, m: &Matrix, fbuf: &mut Vec<u8>) -> Result<()> {
+        let rank = self.rank;
+        debug_assert_eq!(rank, root);
+        if rank == 0 {
+            for p in 1..self.world {
+                write_mat_frame(self.link(p)?, m, fbuf)
+                    .map_err(|e| rank_err(rank, "broadcast send", e))?;
+            }
+        } else {
+            write_mat_frame(self.link(0)?, m, fbuf)
+                .map_err(|e| rank_err(rank, "broadcast send", e))?;
+        }
+        Ok(())
+    }
+
+    /// Complete a pending op (strictly in issue order — the untagged
+    /// frame streams rely on it).
+    pub(crate) fn complete(&mut self, op: PendingOp) -> Result<Matrix> {
+        let PendingOp { seq, kind, mut buf } = op;
+        anyhow::ensure!(
+            seq == self.done_seq,
+            "nonblocking ops must be waited in issue order (waiting op {seq}, \
+             expected {})",
+            self.done_seq
+        );
+        self.done_seq += 1;
+        if self.world == 1 {
+            self.count(kind, buf.len());
+            return Ok(buf);
+        }
+        let (sends_at_wait, deferred_send) =
+            self.pending_meta.pop_front().expect("op issued on this comm");
+        let mut fbuf = std::mem::take(&mut self.buf);
+        let res = (|| -> Result<()> {
+            match kind {
+                PendingKind::Allreduce => match self.algo {
+                    AllreduceAlgo::Star => self.allreduce_star_finish(&mut buf, &mut fbuf),
+                    AllreduceAlgo::Ring => self.allreduce_ring(&mut buf, &mut fbuf),
+                },
+                PendingKind::Broadcast { root } => {
+                    if deferred_send {
+                        self.broadcast_root_send(root, &buf, &mut fbuf)?;
+                    }
+                    self.broadcast_finish(root, &mut buf, &mut fbuf)
+                }
+            }
+        })();
+        self.buf = fbuf;
+        if sends_at_wait {
+            self.pending_sends -= 1;
+        }
+        res?;
+        Ok(buf)
+    }
+
+    fn link(&mut self, p: usize) -> Result<&mut TcpStream> {
+        let rank = self.rank;
+        self.links[p]
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("rank {rank}: no link to rank {p} (topology mismatch)"))
+    }
+
+    /// Hub-side fold + result fan-out / leaf-side result read for the
+    /// star allreduce (leaf contributions went out at issue).
+    fn allreduce_star_finish(&mut self, m: &mut Matrix, fbuf: &mut Vec<u8>) -> Result<()> {
+        let rank = self.rank;
+        if rank == 0 {
+            // fold: own contribution (rank 0) first, then ranks 1..N in order
+            let world = self.world;
+            let TcpComm { links, stats, scratch_mat, .. } = self;
+            for (p, slot) in links.iter_mut().enumerate().take(world).skip(1) {
+                let link = slot
+                    .as_mut()
+                    .ok_or_else(|| anyhow::anyhow!("rank 0: no link to rank {p}"))?;
+                let op = read_frame(link, fbuf).map_err(|e| rank_err(rank, "allreduce recv", e))?;
+                expect_op(op, OP_MAT)?;
+                decode_mat(fbuf, scratch_mat)?;
+                anyhow::ensure!(
+                    scratch_mat.shape() == m.shape(),
+                    "allreduce shape mismatch: rank {p} sent {:?}, hub has {:?}",
+                    scratch_mat.shape(),
+                    m.shape()
+                );
+                m.add_assign(scratch_mat);
+            }
+            for slot in links.iter_mut().take(world).skip(1) {
+                let link = slot.as_mut().expect("folded above");
+                write_mat_frame(link, m, fbuf).map_err(|e| rank_err(rank, "allreduce send", e))?;
+            }
+            stats.count_allreduce(m.len());
+        } else {
+            let op = read_frame(self.link(0)?, fbuf)
+                .map_err(|e| rank_err(rank, "allreduce recv", e))?;
+            expect_op(op, OP_MAT)?;
+            decode_mat(fbuf, m)?;
+        }
+        Ok(())
+    }
+
+    /// Rank-ordered ring allreduce over the mesh: reduce-scatter by
+    /// direct chunk exchange (staggered pairwise rounds; the cycle
+    /// minimum receives first so blocking sockets cannot hold-and-wait),
+    /// rank-order fold at each chunk owner, then a ring allgather.
+    fn allreduce_ring(&mut self, m: &mut Matrix, fbuf: &mut Vec<u8>) -> Result<()> {
+        let rank = self.rank;
+        let world = self.world;
+        for p in 0..world {
+            anyhow::ensure!(
+                p == rank || self.links[p].is_some(),
+                "rank {rank}: ring allreduce needs a full peer mesh (missing link to \
+                 rank {p}) — connect with --allreduce ring"
+            );
+        }
+        let len = m.len();
+        // The single source of truth for the chunk partition — shared
+        // with the traffic formula so wire layout and accounting agree
+        // by construction.
+        let chunk_range = |c: usize| super::comm::ring_chunk_range(c, len, world);
+        if self.ring_slots.len() < world {
+            self.ring_slots.resize_with(world, Vec::new);
+        }
+        // Own contribution into slot[rank] so the fold below runs over
+        // slots in pure rank order.
+        {
+            let (s, e) = chunk_range(rank);
+            let slot = &mut self.ring_slots[rank];
+            slot.clear();
+            slot.extend_from_slice(&m.as_slice()[s..e]);
+        }
+        // --- reduce-scatter: staggered pairwise chunk exchange ---
+        let (own_s, own_e) = chunk_range(rank);
+        let own_len = own_e - own_s;
+        for step in 1..world {
+            let to = (rank + step) % world;
+            let from = (rank + world - step) % world;
+            let (s, e) = chunk_range(to);
+            if cycle_min(rank, step, world) == rank {
+                self.ring_recv_slot(from, own_len, fbuf)?;
+                self.ring_send_chunk(to, &m.as_slice()[s..e], fbuf)?;
+            } else {
+                self.ring_send_chunk(to, &m.as_slice()[s..e], fbuf)?;
+                self.ring_recv_slot(from, own_len, fbuf)?;
+            }
+        }
+        // Rank-order fold of our chunk — bit-identical to the star fold.
+        {
+            let out = &mut m.as_mut_slice()[own_s..own_e];
+            out.copy_from_slice(&self.ring_slots[0]);
+            for slot in self.ring_slots.iter().take(world).skip(1) {
+                for (o, v) in out.iter_mut().zip(slot.iter()) {
+                    *o += *v;
+                }
+            }
+        }
+        // --- ring allgather: reduced chunks circulate c → c+1 → … ---
+        let right = (rank + 1) % world;
+        let left = (rank + world - 1) % world;
+        for round in 0..world - 1 {
+            let send_c = (rank + world - round) % world;
+            let recv_c = (rank + world - round - 1) % world;
+            let (ss, se) = chunk_range(send_c);
+            let (rs, re) = chunk_range(recv_c);
+            if rank == 0 {
+                // rank 0 is the ring cycle's minimum: receive first
+                self.ring_recv_into(left, m, rs, re, fbuf)?;
+                self.ring_send_chunk(right, &m.as_slice()[ss..se], fbuf)?;
+            } else {
+                self.ring_send_chunk(right, &m.as_slice()[ss..se], fbuf)?;
+                self.ring_recv_into(left, m, rs, re, fbuf)?;
+            }
+        }
+        if rank == 0 {
+            self.count(PendingKind::Allreduce, len);
+        }
+        Ok(())
+    }
+
+    fn ring_send_chunk(&mut self, to: usize, vals: &[f32], fbuf: &mut Vec<u8>) -> Result<()> {
+        let rank = self.rank;
+        write_chunk_frame(self.link(to)?, vals, fbuf)
+            .map_err(|e| rank_err(rank, "ring send", e))
+    }
+
+    /// Receive one chunk frame from `from` into `ring_slots[from]`.
+    fn ring_recv_slot(&mut self, from: usize, want: usize, fbuf: &mut Vec<u8>) -> Result<()> {
+        let rank = self.rank;
+        let TcpComm { links, ring_slots, .. } = self;
+        let link = links[from]
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("rank {rank}: no link to rank {from}"))?;
+        let op = read_frame(link, fbuf).map_err(|e| rank_err(rank, "ring recv", e))?;
+        expect_op(op, OP_CHUNK)?;
+        decode_chunk(fbuf, want, &mut ring_slots[from])
+    }
+
+    /// Receive one chunk frame from `from` straight into `m[s..e]`.
+    fn ring_recv_into(
+        &mut self,
+        from: usize,
+        m: &mut Matrix,
+        s: usize,
+        e: usize,
+        fbuf: &mut Vec<u8>,
+    ) -> Result<()> {
+        let rank = self.rank;
+        let op = read_frame(self.link(from)?, fbuf).map_err(|e| rank_err(rank, "ring recv", e))?;
+        expect_op(op, OP_CHUNK)?;
+        decode_chunk_into(fbuf, &mut m.as_mut_slice()[s..e])
+    }
+
+    /// Hub relay + leaf read for broadcasts.  The root's sends went out
+    /// at issue (for root 0 that IS the whole fan-out — nothing is resent
+    /// here), so the hub only reads + relays when the root is a leaf.
+    fn broadcast_finish(&mut self, root: usize, m: &mut Matrix, fbuf: &mut Vec<u8>) -> Result<()> {
+        let rank = self.rank;
+        if rank == 0 {
+            if root != 0 {
+                let op = read_frame(self.link(root)?, fbuf)
+                    .map_err(|e| rank_err(rank, "broadcast recv", e))?;
+                expect_op(op, OP_MAT)?;
+                decode_mat(fbuf, m)?;
+                for p in 1..self.world {
+                    if p == root {
+                        continue;
+                    }
+                    write_mat_frame(self.link(p)?, m, fbuf)
+                        .map_err(|e| rank_err(rank, "broadcast send", e))?;
+                }
+            }
+            self.count(PendingKind::Broadcast { root }, m.len());
+        } else if rank != root {
+            let op = read_frame(self.link(0)?, fbuf)
+                .map_err(|e| rank_err(rank, "broadcast recv", e))?;
+            expect_op(op, OP_MAT)?;
+            decode_mat(fbuf, m)?;
+        }
+        Ok(())
     }
 
     pub fn barrier(&mut self) -> Result<()> {
@@ -264,106 +729,21 @@ impl TcpComm {
     fn barrier_inner(&mut self, buf: &mut Vec<u8>) -> Result<()> {
         let rank = self.rank;
         if rank == 0 {
-            for link in &mut self.links {
-                let op = read_frame(link, buf).map_err(|e| rank_err(rank, "barrier recv", e))?;
+            for p in 1..self.world {
+                let op = read_frame(self.link(p)?, buf)
+                    .map_err(|e| rank_err(rank, "barrier recv", e))?;
                 expect_op(op, OP_BARRIER)?;
             }
-            for link in &mut self.links {
-                write_frame(link, OP_BARRIER, &[], buf)
+            for p in 1..self.world {
+                write_frame(self.link(p)?, OP_BARRIER, &[], buf)
                     .map_err(|e| rank_err(rank, "barrier send", e))?;
             }
         } else {
-            write_frame(&mut self.links[0], OP_BARRIER, &[], buf)
+            write_frame(self.link(0)?, OP_BARRIER, &[], buf)
                 .map_err(|e| rank_err(rank, "barrier send", e))?;
-            let op = read_frame(&mut self.links[0], buf)
+            let op = read_frame(self.link(0)?, buf)
                 .map_err(|e| rank_err(rank, "barrier recv", e))?;
             expect_op(op, OP_BARRIER)?;
-        }
-        Ok(())
-    }
-
-    /// Reduce-to-hub in rank order, broadcast the total back — the same
-    /// fold sequence as `LocalComm`, hence bit-identical results.
-    pub fn allreduce_sum(&mut self, m: &mut Matrix) -> Result<()> {
-        if self.world == 1 {
-            self.stats.count_allreduce(m.len());
-            return Ok(());
-        }
-        let mut buf = std::mem::take(&mut self.buf);
-        let res = self.allreduce_inner(m, &mut buf);
-        self.buf = buf;
-        res
-    }
-
-    fn allreduce_inner(&mut self, m: &mut Matrix, buf: &mut Vec<u8>) -> Result<()> {
-        let rank = self.rank;
-        if rank == 0 {
-            // fold: own contribution (rank 0) first, then ranks 1..N in order
-            let TcpComm { links, stats, scratch_mat, .. } = self;
-            for (i, link) in links.iter_mut().enumerate() {
-                let op = read_frame(link, buf).map_err(|e| rank_err(rank, "allreduce recv", e))?;
-                expect_op(op, OP_MAT)?;
-                decode_mat(buf, scratch_mat)?;
-                anyhow::ensure!(
-                    scratch_mat.shape() == m.shape(),
-                    "allreduce shape mismatch: rank {} sent {:?}, hub has {:?}",
-                    i + 1,
-                    scratch_mat.shape(),
-                    m.shape()
-                );
-                m.add_assign(scratch_mat);
-            }
-            for link in links.iter_mut() {
-                write_mat_frame(link, m, buf).map_err(|e| rank_err(rank, "allreduce send", e))?;
-            }
-            stats.count_allreduce(m.len());
-        } else {
-            write_mat_frame(&mut self.links[0], m, buf)
-                .map_err(|e| rank_err(rank, "allreduce send", e))?;
-            let op = read_frame(&mut self.links[0], buf)
-                .map_err(|e| rank_err(rank, "allreduce recv", e))?;
-            expect_op(op, OP_MAT)?;
-            decode_mat(buf, m)?;
-        }
-        Ok(())
-    }
-
-    pub fn broadcast(&mut self, root: usize, m: &mut Matrix) -> Result<()> {
-        anyhow::ensure!(root < self.world, "broadcast root {root} out of range");
-        if self.world == 1 {
-            self.stats.count_broadcast(m.len());
-            return Ok(());
-        }
-        let mut buf = std::mem::take(&mut self.buf);
-        let res = self.broadcast_inner(root, m, &mut buf);
-        self.buf = buf;
-        res
-    }
-
-    fn broadcast_inner(&mut self, root: usize, m: &mut Matrix, buf: &mut Vec<u8>) -> Result<()> {
-        let rank = self.rank;
-        if rank == 0 {
-            if root != 0 {
-                let op = read_frame(&mut self.links[root - 1], buf)
-                    .map_err(|e| rank_err(rank, "broadcast recv", e))?;
-                expect_op(op, OP_MAT)?;
-                decode_mat(buf, m)?;
-            }
-            for (i, link) in self.links.iter_mut().enumerate() {
-                if i + 1 == root {
-                    continue;
-                }
-                write_mat_frame(link, m, buf).map_err(|e| rank_err(rank, "broadcast send", e))?;
-            }
-            self.stats.count_broadcast(m.len());
-        } else if rank == root {
-            write_mat_frame(&mut self.links[0], m, buf)
-                .map_err(|e| rank_err(rank, "broadcast send", e))?;
-        } else {
-            let op = read_frame(&mut self.links[0], buf)
-                .map_err(|e| rank_err(rank, "broadcast recv", e))?;
-            expect_op(op, OP_MAT)?;
-            decode_mat(buf, m)?;
         }
         Ok(())
     }
@@ -381,17 +761,20 @@ impl TcpComm {
 
     fn allreduce_scalars_inner(&mut self, vals: &mut [f64], buf: &mut Vec<u8>) -> Result<()> {
         let rank = self.rank;
+        let world = self.world;
         let TcpComm { links, stats, scratch_scalars: recv, .. } = self;
         if rank == 0 {
-            for (i, link) in links.iter_mut().enumerate() {
-                let op =
-                    read_frame(link, buf).map_err(|e| rank_err(rank, "scalar allreduce recv", e))?;
+            for (p, slot) in links.iter_mut().enumerate().take(world).skip(1) {
+                let link = slot
+                    .as_mut()
+                    .ok_or_else(|| anyhow::anyhow!("rank 0: no link to rank {p}"))?;
+                let op = read_frame(link, buf)
+                    .map_err(|e| rank_err(rank, "scalar allreduce recv", e))?;
                 expect_op(op, OP_SCALARS)?;
                 decode_scalars(buf, recv)?;
                 anyhow::ensure!(
                     recv.len() == vals.len(),
-                    "scalar allreduce length mismatch: rank {} sent {}, hub has {}",
-                    i + 1,
+                    "scalar allreduce length mismatch: rank {p} sent {}, hub has {}",
                     recv.len(),
                     vals.len()
                 );
@@ -399,16 +782,20 @@ impl TcpComm {
                     *v += *s;
                 }
             }
-            for link in links.iter_mut() {
+            for slot in links.iter_mut().take(world).skip(1) {
+                let link = slot.as_mut().expect("folded above");
                 write_scalars_frame(link, vals, buf)
                     .map_err(|e| rank_err(rank, "scalar allreduce send", e))?;
             }
             stats.count_scalars(vals.len());
         } else {
-            write_scalars_frame(&mut links[0], vals, buf)
+            let link = links[0]
+                .as_mut()
+                .ok_or_else(|| anyhow::anyhow!("rank {rank}: no link to rank 0"))?;
+            write_scalars_frame(link, vals, buf)
                 .map_err(|e| rank_err(rank, "scalar allreduce send", e))?;
-            let op = read_frame(&mut links[0], buf)
-                .map_err(|e| rank_err(rank, "scalar allreduce recv", e))?;
+            let op =
+                read_frame(link, buf).map_err(|e| rank_err(rank, "scalar allreduce recv", e))?;
             expect_op(op, OP_SCALARS)?;
             decode_scalars(buf, recv)?;
             anyhow::ensure!(recv.len() == vals.len(), "scalar allreduce result length mismatch");
@@ -436,36 +823,67 @@ impl TcpComm {
         buf: &mut Vec<u8>,
     ) -> Result<()> {
         let rank = self.rank;
+        let world = self.world;
         let TcpComm { links, stats, scratch_scalars: recv, .. } = self;
         if rank == 0 {
             if root != 0 {
-                let op = read_frame(&mut links[root - 1], buf)
+                let link = links[root]
+                    .as_mut()
+                    .ok_or_else(|| anyhow::anyhow!("rank 0: no link to rank {root}"))?;
+                let op = read_frame(link, buf)
                     .map_err(|e| rank_err(rank, "scalar broadcast recv", e))?;
                 expect_op(op, OP_SCALARS)?;
                 decode_scalars(buf, recv)?;
                 anyhow::ensure!(recv.len() == vals.len(), "scalar broadcast length mismatch");
                 vals.copy_from_slice(recv.as_slice());
             }
-            for (i, link) in links.iter_mut().enumerate() {
-                if i + 1 == root {
+            for (p, slot) in links.iter_mut().enumerate().take(world).skip(1) {
+                if p == root {
                     continue;
                 }
+                let link = slot
+                    .as_mut()
+                    .ok_or_else(|| anyhow::anyhow!("rank 0: no link to rank {p}"))?;
                 write_scalars_frame(link, vals, buf)
                     .map_err(|e| rank_err(rank, "scalar broadcast send", e))?;
             }
             stats.count_scalars(vals.len());
         } else if rank == root {
-            write_scalars_frame(&mut links[0], vals, buf)
+            let link = links[0]
+                .as_mut()
+                .ok_or_else(|| anyhow::anyhow!("rank {rank}: no link to rank 0"))?;
+            write_scalars_frame(link, vals, buf)
                 .map_err(|e| rank_err(rank, "scalar broadcast send", e))?;
         } else {
-            let op = read_frame(&mut links[0], buf)
-                .map_err(|e| rank_err(rank, "scalar broadcast recv", e))?;
+            let link = links[0]
+                .as_mut()
+                .ok_or_else(|| anyhow::anyhow!("rank {rank}: no link to rank 0"))?;
+            let op =
+                read_frame(link, buf).map_err(|e| rank_err(rank, "scalar broadcast recv", e))?;
             expect_op(op, OP_SCALARS)?;
             decode_scalars(buf, recv)?;
             anyhow::ensure!(recv.len() == vals.len(), "scalar broadcast length mismatch");
             vals.copy_from_slice(recv.as_slice());
         }
         Ok(())
+    }
+}
+
+/// Smallest rank of the additive cycle `{r, r+step, r+2·step, …} mod
+/// world`.  The cycle is the residue class of `r` modulo
+/// `gcd(step, world)`, so its minimum is simply `r mod gcd` — closed
+/// form, no walk.  The cycle minimum receives before sending during the
+/// ring reduce-scatter, breaking the hold-and-wait a pure send-first
+/// schedule would form when chunks exceed the kernel socket buffers.
+fn cycle_min(rank: usize, step: usize, world: usize) -> usize {
+    rank % gcd(step, world)
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
     }
 }
 
@@ -487,7 +905,7 @@ fn prepare_stream(stream: &TcpStream) -> Result<()> {
     Ok(())
 }
 
-/// Prepare a hub-accepted stream for the hello exchange: blocking mode
+/// Prepare an accepted stream for the hello exchange: blocking mode
 /// (accepted sockets do not inherit the listener's nonblocking flag on
 /// every platform, so set it explicitly) with the short hello read
 /// timeout; the full `IO_TIMEOUT` is applied only after a valid hello.
@@ -605,16 +1023,56 @@ fn decode_scalars(payload: &[u8], out: &mut Vec<f64>) -> Result<()> {
     Ok(())
 }
 
+fn write_chunk_frame(
+    stream: &mut TcpStream,
+    vals: &[f32],
+    buf: &mut Vec<u8>,
+) -> std::io::Result<()> {
+    let len = 1 + 4 + vals.len() * 4;
+    buf.clear();
+    buf.extend_from_slice(&(len as u32).to_le_bytes());
+    buf.push(OP_CHUNK);
+    buf.extend_from_slice(&(vals.len() as u32).to_le_bytes());
+    for v in vals {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    stream.write_all(buf)
+}
+
+/// Decode a chunk frame of exactly `want` floats into the recycled `out`.
+fn decode_chunk(payload: &[u8], want: usize, out: &mut Vec<f32>) -> Result<()> {
+    anyhow::ensure!(payload.len() >= 4, "truncated chunk frame");
+    let count = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+    anyhow::ensure!(count == want, "chunk size mismatch: got {count}, expected {want}");
+    anyhow::ensure!(payload.len() - 4 == count * 4, "chunk frame size mismatch");
+    out.clear();
+    out.extend(payload[4..].chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())));
+    Ok(())
+}
+
+/// Decode a chunk frame straight into a buffer slice (ring allgather).
+fn decode_chunk_into(payload: &[u8], out: &mut [f32]) -> Result<()> {
+    anyhow::ensure!(payload.len() >= 4, "truncated chunk frame");
+    let count = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+    anyhow::ensure!(count == out.len(), "chunk size mismatch: got {count}, expected {}", out.len());
+    anyhow::ensure!(payload.len() - 4 == count * 4, "chunk frame size mismatch");
+    for (dst, src) in out.iter_mut().zip(payload[4..].chunks_exact(4)) {
+        *dst = f32::from_le_bytes(src.try_into().unwrap());
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::Collectives;
+    use crate::cluster::{ring_allreduce_floats, Collectives};
 
     fn loopback_available() -> bool {
         TcpListener::bind("127.0.0.1:0").is_ok()
     }
 
-    /// Run `f(rank, comm)` on `n` in-process TCP ranks over loopback.
+    /// Run `f(rank, comm)` on `n` in-process TCP ranks over a loopback
+    /// star (hub on rank 0).
     fn run_tcp_ranks<T: Send>(
         n: usize,
         f: impl Fn(usize, &mut Collectives) -> T + Send + Sync,
@@ -637,6 +1095,35 @@ mod tests {
                     f(rank, &mut comm)
                 }));
             }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    /// Run `f(rank, comm)` on `n` in-process TCP ranks over a loopback
+    /// full mesh (ring allreduce topology).
+    fn run_tcp_mesh<T: Send>(
+        n: usize,
+        fp: u64,
+        f: impl Fn(usize, &mut Collectives) -> T + Send + Sync,
+    ) -> Vec<T> {
+        let listeners: Vec<TcpListener> =
+            (0..n).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+        let addrs: Vec<String> =
+            listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
+        std::thread::scope(|s| {
+            let f = &f;
+            let addrs = &addrs;
+            let handles: Vec<_> = listeners
+                .into_iter()
+                .enumerate()
+                .map(|(rank, listener)| {
+                    s.spawn(move || {
+                        let comm = TcpComm::mesh(listener, rank, n, addrs, fp).unwrap();
+                        let mut comm = Collectives::Tcp(comm);
+                        f(rank, &mut comm)
+                    })
+                })
+                .collect();
             handles.into_iter().map(|h| h.join().unwrap()).collect()
         })
     }
@@ -671,6 +1158,86 @@ mod tests {
         // all ranks hold bit-identical allreduce results
         for r in &results[1..] {
             assert_eq!(r, &results[0]);
+        }
+    }
+
+    #[test]
+    fn tcp_nonblocking_ops_overlap_and_match() {
+        if !loopback_available() {
+            return;
+        }
+        // Two allreduces + a broadcast in flight, waited in issue order.
+        let results = run_tcp_ranks(3, |rank, comm| {
+            let a = Matrix::from_fn(2, 2, |r, c| (rank * 7 + r * 2 + c) as f32);
+            let b = Matrix::from_fn(3, 1, |r, _| (rank * 3 + r) as f32);
+            let pa = comm.iallreduce_sum(a).unwrap();
+            let pb = comm.iallreduce_sum(b).unwrap();
+            let w = if rank == 0 {
+                Matrix::from_fn(1, 3, |_, c| 9.0 + c as f32)
+            } else {
+                Matrix::default()
+            };
+            let pw = comm.ibroadcast(0, w).unwrap();
+            assert_eq!(comm.pending_ops(), 3, "rank {rank}");
+            let a = pa.wait(comm).unwrap();
+            let b = pb.wait(comm).unwrap();
+            let w = pw.wait(comm).unwrap();
+            assert_eq!(comm.pending_ops(), 0, "rank {rank}");
+            (a.as_slice().to_vec(), b.as_slice().to_vec(), w.as_slice().to_vec())
+        });
+        let want_a: Vec<f32> = (0..4).map(|i| 21.0 + 3.0 * i as f32).collect();
+        let want_b: Vec<f32> = (0..3).map(|i| 9.0 + 3.0 * i as f32).collect();
+        let want_w: Vec<f32> = vec![9.0, 10.0, 11.0];
+        for (rank, (a, b, w)) in results.iter().enumerate() {
+            assert_eq!(a, &want_a, "rank {rank} allreduce A");
+            assert_eq!(b, &want_b, "rank {rank} allreduce B");
+            assert_eq!(w, &want_w, "rank {rank} broadcast");
+        }
+    }
+
+    #[test]
+    fn ring_allreduce_matches_serial_fold() {
+        if !loopback_available() {
+            return;
+        }
+        // Worlds and deliberately non-divisible buffer shapes; the ring
+        // must be bit-identical to the serial rank-order fold.
+        for &(world, rows, cols) in &[(2usize, 3usize, 3usize), (3, 2, 5), (4, 1, 7)] {
+            let inputs: Vec<Matrix> = (0..world)
+                .map(|i| {
+                    let mut rng = crate::rng::Rng::stream(77, i as u64);
+                    Matrix::randn(rows, cols, &mut rng)
+                })
+                .collect();
+            let mut want = inputs[0].clone();
+            for m in &inputs[1..] {
+                want.add_assign(m);
+            }
+            let inputs_ref = &inputs;
+            let results = run_tcp_mesh(world, 0xFEED, move |rank, comm| {
+                assert_eq!(comm.allreduce_algo(), AllreduceAlgo::Ring);
+                let mut m = inputs_ref[rank].clone();
+                comm.allreduce_sum(&mut m).unwrap();
+                let bytes = if rank == 0 {
+                    comm.stats()
+                        .allreduce_bytes
+                        .load(std::sync::atomic::Ordering::Relaxed)
+                } else {
+                    0
+                };
+                (m.as_slice().to_vec(), bytes)
+            });
+            let want_bits: Vec<u32> = want.as_slice().iter().map(|v| v.to_bits()).collect();
+            for (rank, (res, _)) in results.iter().enumerate() {
+                let got_bits: Vec<u32> = res.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(got_bits, want_bits, "world {world} rank {rank}");
+            }
+            // measured traffic equals the exact ring formula
+            assert_eq!(
+                results[0].1,
+                4 * ring_allreduce_floats(world, rows * cols) as u64,
+                "world {world} ring traffic"
+            );
         }
     }
 
@@ -720,8 +1287,37 @@ mod tests {
         decode_scalars(&sbuf, &mut sout).unwrap();
         assert_eq!(sout, vals);
 
+        // chunk frames: exact-size contract both into a Vec and a slice
+        let chunk = [0.5f32, -1.5, 2.25];
+        let mut cbuf = Vec::new();
+        cbuf.extend_from_slice(&(chunk.len() as u32).to_le_bytes());
+        for v in &chunk {
+            cbuf.extend_from_slice(&v.to_le_bytes());
+        }
+        let mut cout = Vec::new();
+        decode_chunk(&cbuf, 3, &mut cout).unwrap();
+        assert_eq!(cout, chunk);
+        let mut cslice = [0.0f32; 3];
+        decode_chunk_into(&cbuf, &mut cslice).unwrap();
+        assert_eq!(cslice, chunk);
+        assert!(decode_chunk(&cbuf, 2, &mut cout).is_err());
+        assert!(decode_chunk_into(&cbuf, &mut cslice[..2]).is_err());
+
         // corrupted frames are rejected
         assert!(decode_mat(&buf[..7], &mut out).is_err());
         assert!(decode_scalars(&sbuf[..3], &mut sout).is_err());
+    }
+
+    #[test]
+    fn cycle_min_identifies_receive_first_rank() {
+        // step 1 over any world: one cycle, min 0
+        for r in 0..5 {
+            assert_eq!(cycle_min(r, 1, 5), 0);
+        }
+        // world 4, step 2: cycles {0,2} and {1,3}
+        assert_eq!(cycle_min(0, 2, 4), 0);
+        assert_eq!(cycle_min(2, 2, 4), 0);
+        assert_eq!(cycle_min(1, 2, 4), 1);
+        assert_eq!(cycle_min(3, 2, 4), 1);
     }
 }

@@ -139,6 +139,68 @@ impl Transport {
     }
 }
 
+/// Allreduce algorithm behind `Collectives::allreduce_sum` /
+/// `iallreduce_sum`.  Both produce **bit-identical** sums (every algorithm
+/// folds contributions in rank order); they differ only in traffic shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllreduceAlgo {
+    /// Reduce to rank 0, broadcast back (the hub pattern the seed shipped).
+    /// Hub traffic grows linearly with world size.
+    Star,
+    /// Rank-ordered reduce-scatter + ring allgather: per-rank traffic is
+    /// bounded at `2·(N−1)/N · bytes` regardless of world size.  The TCP
+    /// transport forms a full peer mesh for the chunk exchange (`--peers`
+    /// must list every rank's address); `Local` folds identically and
+    /// models the ring's traffic in its byte counters.
+    Ring,
+}
+
+impl AllreduceAlgo {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "star" => Ok(AllreduceAlgo::Star),
+            "ring" => Ok(AllreduceAlgo::Ring),
+            _ => anyhow::bail!("unknown allreduce algorithm '{s}' (star|ring)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AllreduceAlgo::Star => "star",
+            AllreduceAlgo::Ring => "ring",
+        }
+    }
+}
+
+/// Per-iteration collective schedule of the SPMD core.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// Bulk-synchronous: layer `l`'s Gram allreduce blocks before its
+    /// solve (the seed schedule; kept selectable for A/B benching).
+    Bulk,
+    /// Software-pipelined: Gram allreduces and W/minv broadcasts are
+    /// issued nonblocking and overlapped with the independent update
+    /// phases (see `coordinator/spmd.rs`).  Bit-identical to `Bulk`.
+    Pipelined,
+}
+
+impl Schedule {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "bulk" => Ok(Schedule::Bulk),
+            "pipelined" => Ok(Schedule::Pipelined),
+            _ => anyhow::bail!("unknown schedule '{s}' (bulk|pipelined)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Schedule::Bulk => "bulk",
+            Schedule::Pipelined => "pipelined",
+        }
+    }
+}
+
 /// Numeric backend for the per-worker updates.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
@@ -197,6 +259,15 @@ pub struct TrainConfig {
     /// `peers[0]` — the rank-0 hub every collective routes through — is
     /// ever dialed, so a single-entry list is accepted as shorthand.
     pub peers: Vec<String>,
+    /// Allreduce algorithm (`--allreduce star|ring`).  Bit-identical
+    /// results; `ring` bounds per-rank traffic, `star` funnels through
+    /// rank 0.  With `--transport tcp --allreduce ring`, `--peers` must
+    /// list every rank's address (the chunk exchange is peer-to-peer).
+    pub allreduce: AllreduceAlgo,
+    /// Collective schedule (`--schedule bulk|pipelined`).  `pipelined`
+    /// (default) overlaps Gram allreduces and weight broadcasts with the
+    /// independent update phases; `bulk` is the blocking seed schedule.
+    pub schedule: Schedule,
     /// Intra-rank threads for the dense kernels (`linalg::par`).  Default 1:
     /// ranks are themselves threads, so nesting only pays off when cores
     /// outnumber workers.  Parallel kernels are bit-identical to serial at
@@ -233,6 +304,8 @@ impl Default for TrainConfig {
             rank: 0,
             world_size: 0,
             peers: Vec::new(),
+            allreduce: AllreduceAlgo::Star,
+            schedule: Schedule::Pipelined,
             threads: 1,
             multiplier_mode: MultiplierMode::Bregman,
             backend: Backend::Native,
@@ -284,6 +357,11 @@ impl TrainConfig {
         h.write_u64(self.ridge.to_bits());
         h.write_u64(self.momentum.to_bits() as u64);
         h.write_u64(self.world() as u64);
+        // The allreduce algorithm and schedule shape the wire protocol
+        // (ring chunk frames, nonblocking issue order), so divergent
+        // launches must fail the handshake.
+        h.write_bytes(self.allreduce.name().as_bytes());
+        h.write_bytes(self.schedule.name().as_bytes());
         h.finish()
     }
 
@@ -314,6 +392,14 @@ impl TrainConfig {
                 anyhow::ensure!(
                     self.peers.len() == 1 || self.peers.len() == self.world_size,
                     "--peers must list 1 (hub only) or world-size addresses, got {}",
+                    self.peers.len()
+                );
+                anyhow::ensure!(
+                    self.allreduce != AllreduceAlgo::Ring
+                        || self.peers.len() == self.world_size,
+                    "--allreduce ring over tcp forms a peer mesh: --peers must list all \
+                     {} rank addresses (got {})",
+                    self.world_size,
                     self.peers.len()
                 );
             }
@@ -350,6 +436,8 @@ impl TrainConfig {
                         .map(|p| p.as_str().map(str::to_string))
                         .collect::<Result<_>>()?
                 }
+                "allreduce" => c.allreduce = AllreduceAlgo::parse(val.as_str()?)?,
+                "schedule" => c.schedule = Schedule::parse(val.as_str()?)?,
                 "threads" => c.threads = val.as_usize()?,
                 "multiplier_mode" => c.multiplier_mode = MultiplierMode::parse(val.as_str()?)?,
                 "backend" => c.backend = Backend::parse(val.as_str()?)?,
@@ -416,6 +504,12 @@ impl TrainConfig {
         }
         if let Some(v) = args.get("peers") {
             self.peers = v.split(',').map(|p| p.trim().to_string()).collect();
+        }
+        if let Some(v) = args.get("allreduce") {
+            self.allreduce = AllreduceAlgo::parse(v)?;
+        }
+        if let Some(v) = args.get("schedule") {
+            self.schedule = Schedule::parse(v)?;
         }
         if let Some(v) = args.get("threads") {
             self.threads = v.parse()?;
@@ -750,6 +844,55 @@ mod tests {
         assert!(c.validate().is_err()); // 3 peers for world 2
         c.peers = vec!["a:1".into(), "b:2".into()];
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn allreduce_and_schedule_knobs() {
+        // defaults
+        let c = TrainConfig::default();
+        assert_eq!(c.allreduce, AllreduceAlgo::Star);
+        assert_eq!(c.schedule, Schedule::Pipelined);
+
+        // JSON + CLI forms
+        let c = TrainConfig::from_json(
+            &Json::parse(r#"{"allreduce": "ring", "schedule": "bulk"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.allreduce, AllreduceAlgo::Ring);
+        assert_eq!(c.schedule, Schedule::Bulk);
+        let mut c = TrainConfig::default();
+        let args = Args::parse_from(
+            ["--allreduce", "ring", "--schedule", "pipelined"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.allreduce, AllreduceAlgo::Ring);
+        assert_eq!(c.schedule, Schedule::Pipelined);
+        assert!(AllreduceAlgo::parse("tree").is_err());
+        assert!(Schedule::parse("eager").is_err());
+
+        // a tcp ring world needs the full peer list (the chunk exchange is
+        // peer-to-peer), while star accepts the hub-only shorthand
+        let mut c = TrainConfig::default();
+        c.transport = Transport::Tcp;
+        c.world_size = 3;
+        c.rank = 1;
+        c.peers = vec!["h:1".into()];
+        c.validate().unwrap();
+        c.allreduce = AllreduceAlgo::Ring;
+        assert!(c.validate().is_err());
+        c.peers = vec!["a:1".into(), "b:2".into(), "c:3".into()];
+        c.validate().unwrap();
+
+        // both knobs shape the wire protocol → both move the fingerprint
+        let base = TrainConfig::default();
+        let mut r = TrainConfig::default();
+        r.allreduce = AllreduceAlgo::Ring;
+        assert_ne!(base.spmd_fingerprint(), r.spmd_fingerprint());
+        let mut s = TrainConfig::default();
+        s.schedule = Schedule::Bulk;
+        assert_ne!(base.spmd_fingerprint(), s.spmd_fingerprint());
     }
 
     #[test]

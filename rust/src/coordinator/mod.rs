@@ -23,5 +23,6 @@ pub mod updates;
 pub use backend::{BackendKind, NativeBackend, PjrtBackend, WorkerBackendImpl};
 pub use spmd::{train_rank, ShardedObjective, SpmdOpts};
 pub use trainer::{
-    allreduce_bytes_per_iter, broadcast_bytes_per_iter, AdmmTrainer, TrainOutcome, TrainStats,
+    allreduce_bytes_per_iter, allreduce_bytes_per_iter_for, broadcast_bytes_per_iter, AdmmTrainer,
+    TrainOutcome, TrainStats,
 };

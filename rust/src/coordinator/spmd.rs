@@ -27,19 +27,42 @@
 //! (pinned by `tests/spmd_regression.rs`) and across `Local`/`Tcp`
 //! (pinned by `tests/transport_equivalence.rs`).
 //!
+//! ## Schedules
+//!
+//! Two collective schedules compute bit-identical values (pinned against
+//! each other and the serial oracle by `tests/spmd_regression.rs`):
+//!
+//! * **bulk** — the seed bulk-synchronous sweep: layer `l`'s Gram
+//!   allreduce blocks before its solve, the W/minv broadcasts block
+//!   before the shard updates.
+//! * **pipelined** (default) — a software-pipelined sweep over the
+//!   nonblocking collective API.  The data dependencies of Algorithm 1
+//!   leave three overlap windows, all exploited here:
+//!   1. the a-update inverse depends only on the *old* `W_{l+1}`, so
+//!      rank 0 computes and broadcasts `minv` *before* solving `W_l` —
+//!      every other rank's a-update overlaps the solve and the `W_l`
+//!      broadcast still in flight;
+//!   2. layer `l+1`'s local Gram reads `z_{l+1}` and the freshly updated
+//!      `a_l` but not `W_l`, so it runs (and its allreduce is issued)
+//!      before this layer's `W_l` wait;
+//!   3. layer `l`'s z-update touches neither Gram buffer, so it overlaps
+//!      layer `l+1`'s in-flight reduction — the classic
+//!      communication-hiding win the paper leaned on MPI for.
+//!
 //! In steady state the rank-side hot path allocates nothing: shard
 //! updates write in place through the `_into` kernels, Gram pairs and
-//! broadcast payloads land in pre-sized recycled buffers, and the
-//! `Local` transport's reduction slots are recycled too
+//! broadcast payloads land in pre-sized recycled buffers (the pipelined
+//! schedule moves them into `PendingOp`s and back instead of copying),
+//! and the `Local` transport's ledger slots are recycled too
 //! (`tests/alloc_regression.rs`).
 
 use std::sync::atomic::Ordering;
 
-use crate::cluster::Collectives;
-use crate::config::{InitScheme, MultiplierMode, TrainConfig};
+use crate::cluster::{Collectives, WAIT_BUCKETS};
+use crate::config::{InitScheme, MultiplierMode, Schedule, TrainConfig};
 use crate::coordinator::backend::{BackendKind, WorkerBackendImpl};
 use crate::coordinator::trainer::{
-    allreduce_bytes_per_iter, broadcast_bytes_per_iter, TrainOutcome, TrainStats,
+    allreduce_bytes_per_iter_for, broadcast_bytes_per_iter, TrainOutcome, TrainStats,
 };
 use crate::coordinator::updates;
 use crate::data::Dataset;
@@ -236,6 +259,10 @@ pub fn train_rank(
 
     let mut st = init_rank_state(cfg, shard, y_exp_shard, &train.x);
     let mut backend = BackendKind::from_config(cfg).build()?;
+    // The algorithm shapes the traffic counters (and, over TCP, must
+    // match the topology `connect` formed — the fingerprint guarantees
+    // every rank agrees).
+    comm.set_allreduce_algo(cfg.allreduce);
 
     // Rank 0 owns the test metric and the convergence curve.
     let eval = if rank == 0 {
@@ -256,7 +283,7 @@ pub fn train_rank(
     .with_metric(cfg.problem.metric_name(), cfg.problem.metric_higher_is_better());
 
     let mut stats = TrainStats {
-        allreduce_bytes_per_iter: allreduce_bytes_per_iter(&cfg.dims),
+        allreduce_bytes_per_iter: allreduce_bytes_per_iter_for(&cfg.dims, world, cfg.allreduce),
         broadcast_bytes_per_iter: broadcast_bytes_per_iter(&cfg.dims),
         ..TrainStats::default()
     };
@@ -335,6 +362,21 @@ pub fn train_rank(
         }
     }
     stats.opt_seconds = opt_s;
+    // Straggler telemetry: this rank's blocked time per collective kind
+    // plus the world totals (one extra scalar allreduce — counted in the
+    // scalar bucket, so the matrix-traffic formulas stay exact).
+    let ws = comm.wait_stats().clone();
+    stats.wait_rank_s = [ws.allreduce_s, ws.broadcast_s, ws.scalar_s, ws.barrier_s];
+    let mut panel = [0.0f64; 4 + WAIT_BUCKETS];
+    panel[..4].copy_from_slice(&stats.wait_rank_s);
+    for (slot, h) in panel[4..].iter_mut().zip(ws.hist.iter()) {
+        *slot = *h as f64;
+    }
+    comm.allreduce_scalars(&mut panel)?;
+    stats.wait_world_s = [panel[0], panel[1], panel[2], panel[3]];
+    for (dst, src) in stats.wait_hist_world.iter_mut().zip(&panel[4..]) {
+        *dst = *src as u64;
+    }
     // Measured traffic (counted once per collective, on rank 0 / the
     // hub) — the source of truth the closed-form per-iteration formulas
     // are checked against in `benches/scaling.rs`.
@@ -351,8 +393,23 @@ pub fn train_rank(
     })
 }
 
-/// One full Algorithm-1 sweep on this rank. Returns rank-0 solve seconds.
+/// One full Algorithm-1 sweep on this rank, on the configured schedule.
+/// Returns rank-0 solve seconds.
 fn iteration(
+    cfg: &TrainConfig,
+    st: &mut RankState,
+    backend: &mut WorkerBackendImpl,
+    comm: &mut Collectives,
+    it: usize,
+) -> Result<f64> {
+    match cfg.schedule {
+        Schedule::Bulk => iteration_bulk(cfg, st, backend, comm, it),
+        Schedule::Pipelined => iteration_pipelined(cfg, st, backend, comm, it),
+    }
+}
+
+/// The seed bulk-synchronous sweep: every collective blocks in place.
+fn iteration_bulk(
     cfg: &TrainConfig,
     st: &mut RankState,
     backend: &mut WorkerBackendImpl,
@@ -397,6 +454,87 @@ fn iteration(
             st.weights[l - 1].copy_from(&st.w_bcast);
             z_hidden_phase(cfg, st, backend, l)?;
         } else {
+            st.weights[l - 1].copy_from(&st.w_bcast);
+            let update_lambda = past_warmup && cfg.multiplier_mode == MultiplierMode::Bregman;
+            z_out_phase(cfg, st, backend, update_lambda)?;
+        }
+    }
+
+    if past_warmup && cfg.multiplier_mode == MultiplierMode::Classical {
+        update_duals(cfg, st)?;
+    }
+    Ok(leader_s)
+}
+
+/// The software-pipelined sweep (see the module docs for the dependency
+/// analysis).  Arithmetic is verbatim `iteration_bulk` — only *when*
+/// collectives block changes, so weights and curve stay bit-identical at
+/// every world size on both transports (`tests/spmd_regression.rs`,
+/// `tests/transport_equivalence.rs`).  The Gram pair and the `W`/`minv`
+/// landing buffers move into the `PendingOp`s at issue and move back at
+/// wait, so the steady state still allocates nothing on the rank side.
+fn iteration_pipelined(
+    cfg: &TrainConfig,
+    st: &mut RankState,
+    backend: &mut WorkerBackendImpl,
+    comm: &mut Collectives,
+    it: usize,
+) -> Result<f64> {
+    let layers = st.layers();
+    let past_warmup = it >= cfg.warmup_iters;
+    let mut leader_s = 0.0;
+
+    // Prologue: layer 1's local Gram goes into flight before the loop.
+    gram_phase(cfg, st, backend, 1)?;
+    let mut pend_zat = Some(comm.iallreduce_sum(std::mem::take(&mut st.zat))?);
+    let mut pend_aat = Some(comm.iallreduce_sum(std::mem::take(&mut st.aat))?);
+
+    for l in 1..=layers {
+        st.zat = pend_zat.take().expect("gram reduction in flight").wait(comm)?;
+        st.aat = pend_aat.take().expect("gram reduction in flight").wait(comm)?;
+
+        // (1) minv first: it depends only on the OLD W_{l+1}, so its
+        // broadcast overlaps the W_l solve below.
+        let pend_minv = if l < layers {
+            if st.rank == 0 {
+                let sw = Stopwatch::start();
+                st.minv_buf = a_update_inverse(&st.weights[l], cfg.beta, cfg.gamma)?;
+                leader_s += sw.elapsed_s();
+            }
+            Some(comm.ibroadcast(0, std::mem::take(&mut st.minv_buf))?)
+        } else {
+            None
+        };
+
+        // (2) rank 0 solves W_l (ridge-guarded pseudoinverse + momentum)
+        // while the leaves already hold (or are receiving) minv.
+        if st.rank == 0 {
+            let sw = Stopwatch::start();
+            let mut w_solved = Matrix::default();
+            weight_solve_into(&st.zat, &st.aat, cfg.ridge, &mut st.solve_scratch, &mut w_solved)?;
+            let w_new = apply_momentum(st, l - 1, w_solved, cfg.momentum);
+            st.w_bcast = w_new;
+            leader_s += sw.elapsed_s();
+        }
+        let pend_w = comm.ibroadcast(0, std::mem::take(&mut st.w_bcast))?;
+
+        if l < layers {
+            // (3) a-update needs minv and the OLD W_{l+1} replica — it
+            // overlaps the W_l broadcast still in flight.
+            st.minv_buf = pend_minv.expect("hidden layer has minv").wait(comm)?;
+            a_update_phase(cfg, st, backend, l)?;
+            // (4) layer l+1's Gram reads z_{l+1} and the a_l just
+            // written, not W_l: issue its reduction before waiting on W.
+            gram_phase(cfg, st, backend, l + 1)?;
+            pend_zat = Some(comm.iallreduce_sum(std::mem::take(&mut st.zat))?);
+            pend_aat = Some(comm.iallreduce_sum(std::mem::take(&mut st.aat))?);
+            // (5) flip W_l to the broadcast solve, then the z-update
+            // overlaps layer l+1's in-flight reduction.
+            st.w_bcast = pend_w.wait(comm)?;
+            st.weights[l - 1].copy_from(&st.w_bcast);
+            z_hidden_phase(cfg, st, backend, l)?;
+        } else {
+            st.w_bcast = pend_w.wait(comm)?;
             st.weights[l - 1].copy_from(&st.w_bcast);
             let update_lambda = past_warmup && cfg.multiplier_mode == MultiplierMode::Bregman;
             z_out_phase(cfg, st, backend, update_lambda)?;

@@ -21,8 +21,10 @@
 //! bytes actually measured on the wire, which `benches/scaling.rs`
 //! asserts agree.
 
-use crate::cluster::{Collectives, CostModel, ScalingProfile, TcpComm};
-use crate::config::{Backend, MultiplierMode, TrainConfig, Transport};
+use crate::cluster::{
+    ring_allreduce_floats, Collectives, CostModel, ScalingProfile, TcpComm, WAIT_BUCKETS,
+};
+use crate::config::{AllreduceAlgo, Backend, MultiplierMode, TrainConfig, Transport};
 use crate::coordinator::spmd::{self, SpmdOpts};
 use crate::data::Dataset;
 use crate::linalg::Matrix;
@@ -55,6 +57,25 @@ pub struct TrainStats {
     /// out of the matrix-traffic buckets so the per-iteration formulas
     /// stay exact).
     pub scalar_bytes_measured: u64,
+    /// This rank's blocked seconds per collective kind, indexed
+    /// `[allreduce, broadcast, scalar, barrier]`.  Blocking collectives
+    /// count their whole call; nonblocking ops count only the `wait()` —
+    /// under the pipelined schedule this is exactly the communication the
+    /// overlap failed to hide.
+    pub wait_rank_s: [f64; 4],
+    /// The same four buckets summed over every rank (one end-of-run
+    /// scalar allreduce) — the straggler view.
+    pub wait_world_s: [f64; 4],
+    /// World-summed histogram of individual blocked intervals; bucket
+    /// edges per [`crate::cluster::WAIT_BUCKET_EDGES_US`].
+    pub wait_hist_world: [u64; WAIT_BUCKETS],
+}
+
+impl TrainStats {
+    /// Total blocked seconds across all ranks and collective kinds.
+    pub fn wait_world_total_s(&self) -> f64 {
+        self.wait_world_s.iter().sum()
+    }
 }
 
 /// Result of `AdmmTrainer::train`.
@@ -211,6 +232,7 @@ impl AdmmTrainer {
                     self.cfg.world_size,
                     &self.cfg.peers,
                     fp,
+                    self.cfg.allreduce,
                 )?);
                 let res = spmd::train_rank(&self.cfg, &mut comm, &self.train, &self.test, &opts);
                 if res.is_err() {
@@ -223,9 +245,11 @@ impl AdmmTrainer {
         Ok(outcome)
     }
 
-    /// Exact per-iteration allreduce traffic: Σ_l |z aᵀ| + |a aᵀ| floats.
+    /// Exact per-iteration allreduce traffic under the configured
+    /// algorithm and world size (star: Σ_l |z aᵀ| + |a aᵀ| floats; ring:
+    /// rank 0's bounded `2·(N−1)/N` share of each).
     pub fn allreduce_bytes_per_iter(&self) -> usize {
-        allreduce_bytes_per_iter(&self.cfg.dims)
+        allreduce_bytes_per_iter_for(&self.cfg.dims, self.cfg.world(), self.cfg.allreduce)
     }
 
     /// Per-iteration broadcast traffic: W_l everywhere + minv per hidden.
@@ -250,20 +274,45 @@ impl AdmmTrainer {
             cols_total,
             compute_col_s,
             leader_s: stats.leader_seconds / stats.iters_run.max(1) as f64,
-            allreduce_bytes: stats.allreduce_bytes_per_iter,
+            // Always the *logical* Gram bytes — `TrainStats` carries the
+            // configured algorithm's rank-0 wire share (e.g. the ring's
+            // 2·(N−1)/N of the calibration world), which must not leak
+            // into the extrapolation; the profile re-prices the logical
+            // buffer per `allreduce` at every extrapolated core count.
+            allreduce_bytes: allreduce_bytes_per_iter(&self.cfg.dims),
             broadcast_bytes: stats.broadcast_bytes_per_iter,
             iters_to_threshold,
+            allreduce: self.cfg.allreduce,
             cost,
         }
     }
 }
 
-/// Closed-form per-iteration allreduce bytes for a layer-dims vector:
-/// Σ_l 4·(d_l·d_{l-1} + d_{l-1}²) — the Gram pairs of §5's transpose
-/// reduction.
+/// Closed-form per-iteration allreduce bytes for a layer-dims vector
+/// under the star algorithm: Σ_l 4·(d_l·d_{l-1} + d_{l-1}²) — the Gram
+/// pairs of §5's transpose reduction, counted once per collective
+/// (world-independent).
 pub fn allreduce_bytes_per_iter(dims: &[usize]) -> usize {
+    allreduce_bytes_per_iter_for(dims, 1, AllreduceAlgo::Star)
+}
+
+/// Algorithm-aware per-iteration allreduce bytes: the star counts each
+/// Gram pair once; the ring counts rank 0's bounded share
+/// (`cluster::ring_allreduce_floats` — exact chunk arithmetic, so
+/// `benches/scaling.rs` can assert measured == formula byte-for-byte on
+/// either algorithm).
+pub fn allreduce_bytes_per_iter_for(dims: &[usize], world: usize, algo: AllreduceAlgo) -> usize {
     (1..dims.len())
-        .map(|l| 4 * (dims[l] * dims[l - 1] + dims[l - 1] * dims[l - 1]))
+        .map(|l| {
+            let zat = dims[l] * dims[l - 1];
+            let aat = dims[l - 1] * dims[l - 1];
+            match algo {
+                AllreduceAlgo::Star => 4 * (zat + aat),
+                AllreduceAlgo::Ring => {
+                    4 * (ring_allreduce_floats(world, zat) + ring_allreduce_floats(world, aat))
+                }
+            }
+        })
         .sum()
 }
 
@@ -322,5 +371,68 @@ mod tests {
             (7 * out.stats.broadcast_bytes_per_iter) as u64
         );
         assert!(out.stats.scalar_bytes_measured > 0);
+        // straggler telemetry populated: every collective recorded a wait
+        // sample, and world totals cover at least rank 0's own time
+        assert!(out.stats.wait_hist_world.iter().sum::<u64>() > 0);
+        assert!(out.stats.wait_world_total_s() >= out.stats.wait_rank_s.iter().sum::<f64>());
+    }
+
+    #[test]
+    fn ring_traffic_matches_ring_formula_and_bulk_matches_pipelined() {
+        let d = crate::data::blobs(5, 240, 2.5, 9);
+        let (train, test) = d.split_test(40);
+        let mk = |allreduce, schedule| TrainConfig {
+            dims: vec![5, 4, 1],
+            gamma: 1.0,
+            iters: 5,
+            warmup_iters: 2,
+            workers: 4,
+            eval_every: 2,
+            allreduce,
+            schedule,
+            ..TrainConfig::default()
+        };
+        // ring accounting: measured == ring formula (world-dependent).
+        // Conventions differ by design: the star counts each collective's
+        // logical buffer once (world-independent; the hub's wire traffic
+        // is 2·(N−1)× that), the ring counts rank 0's actual on-wire
+        // share — strictly under 2× the buffer at any world size, where
+        // the star hub pays 6× at world 4.
+        let cfg = mk(AllreduceAlgo::Ring, crate::config::Schedule::Pipelined);
+        let ring_formula = allreduce_bytes_per_iter_for(&cfg.dims, 4, AllreduceAlgo::Ring);
+        assert!(ring_formula < 2 * allreduce_bytes_per_iter(&cfg.dims));
+        assert!(ring_formula > allreduce_bytes_per_iter(&cfg.dims));
+        let mut t = AdmmTrainer::new(cfg, &train, &test).unwrap();
+        let ring_out = t.train().unwrap();
+        assert_eq!(ring_out.stats.allreduce_bytes_per_iter, ring_formula);
+        assert_eq!(ring_out.stats.allreduce_bytes_measured, (5 * ring_formula) as u64);
+
+        // the schedule changes when collectives block, never what crosses
+        // the wire — and never a bit of the weights
+        let mut bulk =
+            AdmmTrainer::new(mk(AllreduceAlgo::Star, crate::config::Schedule::Bulk), &train, &test)
+                .unwrap();
+        let bulk_out = bulk.train().unwrap();
+        let mut piped = AdmmTrainer::new(
+            mk(AllreduceAlgo::Star, crate::config::Schedule::Pipelined),
+            &train,
+            &test,
+        )
+        .unwrap();
+        let piped_out = piped.train().unwrap();
+        assert_eq!(
+            bulk_out.stats.allreduce_bytes_measured,
+            piped_out.stats.allreduce_bytes_measured
+        );
+        assert_eq!(
+            bulk_out.stats.broadcast_bytes_measured,
+            piped_out.stats.broadcast_bytes_measured
+        );
+        for (a, b) in bulk_out.weights.iter().zip(&piped_out.weights) {
+            assert_eq!(a.as_slice(), b.as_slice(), "schedules diverged");
+        }
+        for (a, b) in ring_out.weights.iter().zip(&piped_out.weights) {
+            assert_eq!(a.as_slice(), b.as_slice(), "allreduce algorithms diverged");
+        }
     }
 }

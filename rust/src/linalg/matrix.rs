@@ -104,6 +104,13 @@ impl Matrix {
         self.data.len()
     }
 
+    /// Heap capacity in elements — buffer-recycling pools (e.g. the
+    /// collective ledger's deposit slots) pick by this so steady-state
+    /// reuse never reallocates.
+    pub fn capacity(&self) -> usize {
+        self.data.capacity()
+    }
+
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }

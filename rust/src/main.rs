@@ -69,6 +69,10 @@ fn print_usage() {
          --rank R --world-size N --peers host:port,…   this process's rank in a\n  \
          \x20                tcp world (peers[0] is the rank-0 hub; every rank\n  \
          \x20                must be launched with the same config/seed)\n  \
+         --allreduce star|ring  Gram-reduction algorithm (default star; ring bounds\n  \
+         \x20                per-rank traffic but needs --peers to list every rank)\n  \
+         --schedule bulk|pipelined   collective schedule (default pipelined:\n  \
+         \x20                overlap Gram reductions/broadcasts with compute)\n  \
          --target-acc A   stop at test metric A (accuracy up / mse down)\n  \
          --out curve.csv  write the convergence curve (rank 0 only)\n  \
          --penalty        track feasibility penalties\n  \
@@ -169,7 +173,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let is_rank0 = cfg.transport == Transport::Local || cfg.rank == 0;
     println!(
         "ADMM train: config={} dims={:?} act={} loss={} backend={} transport={}{} world={} \
-         γ={} β={} mode={} train={}x{} test={}",
+         allreduce={} schedule={} γ={} β={} mode={} train={}x{} test={}",
         cfg.name,
         cfg.dims,
         cfg.act.name(),
@@ -182,6 +186,8 @@ fn cmd_train(args: &Args) -> Result<()> {
             String::new()
         },
         cfg.world(),
+        cfg.allreduce.name(),
+        cfg.schedule.name(),
         cfg.gamma,
         cfg.beta,
         cfg.multiplier_mode.name(),
@@ -216,6 +222,31 @@ fn cmd_train(args: &Args) -> Result<()> {
         last.map(|p| p.test_acc).unwrap_or(f64::NAN),
         out.recorder.best_metric()
     );
+    // Straggler telemetry: time the world spent blocked in collectives
+    // (schedule={pipelined} hides most of it behind compute — see
+    // EXPERIMENTS.md §Distributed) plus the per-sample wait histogram.
+    let w = &out.stats.wait_world_s;
+    println!(
+        "comm wait (Σ over {} rank(s)): allreduce {:.3}s  broadcast {:.3}s  \
+         scalars {:.3}s  barrier {:.3}s  total {:.3}s",
+        trainer.config().world(),
+        w[0],
+        w[1],
+        w[2],
+        w[3],
+        out.stats.wait_world_total_s()
+    );
+    use std::fmt::Write as _;
+    let mut hist = String::new();
+    let mut lo = 0u64;
+    for (i, count) in out.stats.wait_hist_world.iter().enumerate() {
+        let _ = match gradfree_admm::cluster::WAIT_BUCKET_EDGES_US.get(i) {
+            Some(hi) => write!(hist, " [{lo}-{hi}µs:{count}]"),
+            None => write!(hist, " [>{lo}µs:{count}]"),
+        };
+        lo = gradfree_admm::cluster::WAIT_BUCKET_EDGES_US.get(i).copied().unwrap_or(lo);
+    }
+    println!("wait histogram:{hist}");
     let gaps = out.recorder.eval_gap_summary();
     if gaps.n > 0 {
         // Same p50/p95/p99 schema bench-serve reports for request latency.

@@ -249,10 +249,10 @@ fn steady_state_hot_loops_allocate_nothing() {
     );
 
     // ---- Local transport: steady-state allreduce ---------------------
-    // Warm the per-rank reduction slots with two rounds, then arm the
-    // counter (rank 0, inside barrier brackets so every rank sits in a
-    // collective while the flag flips) and run three more rounds: the
-    // deposit → fold → return cycle must not allocate.
+    // Warm the ledger's recycled deposit buffers with two rounds, then
+    // arm the counter (rank 0, inside barrier brackets so every rank sits
+    // in a collective while the flag flips) and run three more rounds:
+    // the deposit → fold → recycle cycle must not allocate.
     let worlds = gradfree_admm::cluster::Collectives::local_world(4);
     std::thread::scope(|s| {
         for (rank, mut comm) in worlds.into_iter().enumerate() {
@@ -285,4 +285,114 @@ fn steady_state_hot_loops_allocate_nothing() {
         allreduce_allocs, 0,
         "steady-state Local allreduce must not allocate ({allreduce_allocs} allocations)"
     );
+
+    // ---- pipelined schedule's collective pattern ---------------------
+    // The double-buffered Gram pair in flight (iallreduce zat + aat, two
+    // different shapes) plus the minv/W broadcast pair — exactly the
+    // per-layer op sequence of coordinator/spmd.rs's pipelined sweep.
+    // Buffers move into the PendingOps and back; ledger deposits recycle.
+    let worlds = gradfree_admm::cluster::Collectives::local_world(3);
+    std::thread::scope(|s| {
+        for (rank, mut comm) in worlds.into_iter().enumerate() {
+            s.spawn(move || {
+                let mut zat = Matrix::from_fn(5, 7, |r, c| (rank + r * 7 + c) as f32);
+                let mut aat = Matrix::from_fn(7, 7, |r, c| (rank * 2 + r + c) as f32);
+                let mut minv = Matrix::from_fn(4, 4, |r, c| (r * 4 + c) as f32);
+                let round = |comm: &mut gradfree_admm::cluster::Collectives,
+                                 zat: &mut Matrix,
+                                 aat: &mut Matrix,
+                                 minv: &mut Matrix| {
+                    let pz = comm.iallreduce_sum(std::mem::take(zat)).unwrap();
+                    let pa = comm.iallreduce_sum(std::mem::take(aat)).unwrap();
+                    let pm = comm.ibroadcast(0, std::mem::take(minv)).unwrap();
+                    *zat = pz.wait(comm).unwrap();
+                    *aat = pa.wait(comm).unwrap();
+                    *minv = pm.wait(comm).unwrap();
+                };
+                // Three warm rounds: the first sizes the ledger's pooled
+                // deposit buffers, the next two prove the smallest-
+                // sufficient recycling has converged for every shape.
+                for _ in 0..3 {
+                    round(&mut comm, &mut zat, &mut aat, &mut minv); // warm
+                }
+                comm.barrier().unwrap();
+                if rank == 0 {
+                    ALLOCS.store(0, Ordering::SeqCst);
+                    ARMED.store(true, Ordering::SeqCst);
+                }
+                comm.barrier().unwrap();
+                for _ in 0..3 {
+                    round(&mut comm, &mut zat, &mut aat, &mut minv);
+                }
+                comm.barrier().unwrap();
+                if rank == 0 {
+                    ARMED.store(false, Ordering::SeqCst);
+                }
+                comm.barrier().unwrap();
+            });
+        }
+    });
+    let pipelined_allocs = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        pipelined_allocs, 0,
+        "steady-state pipelined collective pattern must not allocate \
+         ({pipelined_allocs} allocations)"
+    );
+
+    // ---- TCP transport: steady-state star and ring allreduce ---------
+    // Same discipline over real loopback sockets: frame buffers, decode
+    // scratch and the ring's reduce-scatter slots are all recycled, so
+    // steady-state iterations are zero-alloc on the wire transport too.
+    if std::net::TcpListener::bind("127.0.0.1:0").is_ok() {
+        for ring in [false, true] {
+            let n = 3;
+            let listeners: Vec<std::net::TcpListener> = (0..n)
+                .map(|_| std::net::TcpListener::bind("127.0.0.1:0").unwrap())
+                .collect();
+            let addrs: Vec<String> =
+                listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
+            std::thread::scope(|s| {
+                let addrs = &addrs;
+                for (rank, listener) in listeners.into_iter().enumerate() {
+                    s.spawn(move || {
+                        let comm = if ring {
+                            gradfree_admm::cluster::TcpComm::mesh(listener, rank, n, addrs, 99)
+                                .unwrap()
+                        } else if rank == 0 {
+                            gradfree_admm::cluster::TcpComm::hub(listener, n, 99).unwrap()
+                        } else {
+                            gradfree_admm::cluster::TcpComm::leaf(&addrs[0], rank, n, 99)
+                                .unwrap()
+                        };
+                        let mut comm = gradfree_admm::cluster::Collectives::Tcp(comm);
+                        // non-divisible length exercises the uneven chunks
+                        let mut m = Matrix::from_fn(5, 2, |r, c| (rank + r * 2 + c) as f32);
+                        for _ in 0..2 {
+                            comm.allreduce_sum(&mut m).unwrap(); // warm buffers
+                        }
+                        comm.barrier().unwrap();
+                        if rank == 0 {
+                            ALLOCS.store(0, Ordering::SeqCst);
+                            ARMED.store(true, Ordering::SeqCst);
+                        }
+                        comm.barrier().unwrap();
+                        for _ in 0..3 {
+                            comm.allreduce_sum(&mut m).unwrap();
+                        }
+                        comm.barrier().unwrap();
+                        if rank == 0 {
+                            ARMED.store(false, Ordering::SeqCst);
+                        }
+                        comm.barrier().unwrap();
+                    });
+                }
+            });
+            let tcp_allocs = ALLOCS.load(Ordering::SeqCst);
+            assert_eq!(
+                tcp_allocs, 0,
+                "steady-state TCP {} allreduce must not allocate ({tcp_allocs} allocations)",
+                if ring { "ring" } else { "star" }
+            );
+        }
+    }
 }

@@ -16,7 +16,7 @@
 //! Any numeric drift in the SPMD path — a reordered fold, a changed
 //! broadcast, momentum state living on the wrong rank — fails here.
 
-use gradfree_admm::config::{InitScheme, MultiplierMode, TrainConfig};
+use gradfree_admm::config::{InitScheme, MultiplierMode, Schedule, TrainConfig};
 use gradfree_admm::coordinator::{updates, AdmmTrainer};
 use gradfree_admm::data::{blobs, multi_blobs, synth_regression, Dataset, Normalizer};
 use gradfree_admm::linalg::{a_update_inverse, gemm_nn, gemm_nt, gemm_tn, weight_solve, Matrix};
@@ -326,47 +326,60 @@ fn oracle_train(
     Ok((weights, curve))
 }
 
-/// Run the real SPMD trainer and the oracle; compare bit-for-bit.
+/// Run the real SPMD trainer — on **both** collective schedules (the
+/// bulk-synchronous seed sweep and the software-pipelined overlap) — and
+/// the oracle; compare bit-for-bit.  The pipelined schedule only moves
+/// *when* collectives block, so any arithmetic divergence (a reordered
+/// fold, an update reading a too-new buffer) fails here.
 fn assert_bit_identical(cfg: TrainConfig, train: &Dataset, test: &Dataset, track_penalty: bool) {
     let (oracle_ws, oracle_curve) =
         oracle_train(&cfg, train, test, track_penalty).expect("oracle run failed");
-    let mut trainer = AdmmTrainer::new(cfg.clone(), train, test).expect("trainer");
-    trainer.track_penalty = track_penalty;
-    let out = trainer.train().expect("spmd train failed");
+    for schedule in [Schedule::Bulk, Schedule::Pipelined] {
+        let mut cfg = cfg.clone();
+        cfg.schedule = schedule;
+        let mut trainer = AdmmTrainer::new(cfg.clone(), train, test).expect("trainer");
+        trainer.track_penalty = track_penalty;
+        let out = trainer.train().expect("spmd train failed");
 
-    assert_eq!(out.weights.len(), oracle_ws.len(), "layer count");
-    for (l, (a, b)) in out.weights.iter().zip(&oracle_ws).enumerate() {
-        assert_eq!(a.shape(), b.shape(), "layer {l} shape");
-        let got: Vec<u32> = a.as_slice().iter().map(|v| v.to_bits()).collect();
-        let want: Vec<u32> = b.as_slice().iter().map(|v| v.to_bits()).collect();
-        assert_eq!(
-            got, want,
-            "layer {l} weights not bit-identical to the seed schedule ({}w {})",
-            cfg.workers,
-            cfg.problem.name()
-        );
-    }
-    assert_eq!(out.recorder.points.len(), oracle_curve.len(), "curve length");
-    for (p, q) in out.recorder.points.iter().zip(&oracle_curve) {
-        assert_eq!(p.iter, q.iter, "eval cadence");
-        assert_eq!(
-            p.train_loss.to_bits(),
-            q.train_loss.to_bits(),
-            "train loss at iter {}",
-            p.iter
-        );
-        assert_eq!(
-            p.test_acc.to_bits(),
-            q.metric.to_bits(),
-            "test metric at iter {}",
-            p.iter
-        );
-        assert!(
-            p.penalty.to_bits() == q.penalty.to_bits()
-                || (p.penalty.is_nan() && q.penalty.is_nan()),
-            "penalty at iter {}",
-            p.iter
-        );
+        assert_eq!(out.weights.len(), oracle_ws.len(), "layer count");
+        for (l, (a, b)) in out.weights.iter().zip(&oracle_ws).enumerate() {
+            assert_eq!(a.shape(), b.shape(), "layer {l} shape");
+            let got: Vec<u32> = a.as_slice().iter().map(|v| v.to_bits()).collect();
+            let want: Vec<u32> = b.as_slice().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(
+                got,
+                want,
+                "layer {l} weights not bit-identical to the seed schedule ({}w {} {})",
+                cfg.workers,
+                cfg.problem.name(),
+                schedule.name()
+            );
+        }
+        assert_eq!(out.recorder.points.len(), oracle_curve.len(), "curve length");
+        for (p, q) in out.recorder.points.iter().zip(&oracle_curve) {
+            assert_eq!(p.iter, q.iter, "eval cadence");
+            assert_eq!(
+                p.train_loss.to_bits(),
+                q.train_loss.to_bits(),
+                "train loss at iter {} ({})",
+                p.iter,
+                schedule.name()
+            );
+            assert_eq!(
+                p.test_acc.to_bits(),
+                q.metric.to_bits(),
+                "test metric at iter {} ({})",
+                p.iter,
+                schedule.name()
+            );
+            assert!(
+                p.penalty.to_bits() == q.penalty.to_bits()
+                    || (p.penalty.is_nan() && q.penalty.is_nan()),
+                "penalty at iter {} ({})",
+                p.iter,
+                schedule.name()
+            );
+        }
     }
 }
 

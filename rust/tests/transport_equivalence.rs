@@ -13,8 +13,8 @@
 use std::net::TcpListener;
 
 use gradfree_admm::bench::scaling::{run_scaling, ScalingSpec};
-use gradfree_admm::cluster::{Collectives, TcpComm};
-use gradfree_admm::config::{TrainConfig, Transport};
+use gradfree_admm::cluster::{ring_allreduce_floats, Collectives, TcpComm};
+use gradfree_admm::config::{AllreduceAlgo, TrainConfig, Transport};
 use gradfree_admm::coordinator::{spmd, AdmmTrainer, TrainOutcome};
 use gradfree_admm::data::{blobs, Dataset, Normalizer};
 use gradfree_admm::linalg::Matrix;
@@ -56,6 +56,175 @@ fn run_tcp_world<T: Send>(
         }
         handles.into_iter().map(|h| h.join().unwrap()).collect()
     })
+}
+
+/// Run `f(rank, comm)` on an in-process loopback TCP **mesh** (the ring
+/// allreduce topology) of `n` ranks.
+fn run_tcp_mesh<T: Send>(
+    n: usize,
+    fp: u64,
+    f: impl Fn(usize, &mut Collectives) -> T + Send + Sync,
+) -> Vec<T> {
+    let listeners: Vec<TcpListener> =
+        (0..n).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+    let addrs: Vec<String> =
+        listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
+    std::thread::scope(|s| {
+        let f = &f;
+        let addrs = &addrs;
+        let handles: Vec<_> = listeners
+            .into_iter()
+            .enumerate()
+            .map(|(rank, listener)| {
+                s.spawn(move || {
+                    let comm = TcpComm::mesh(listener, rank, n, addrs, fp).unwrap();
+                    f(rank, &mut Collectives::Tcp(comm))
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+#[test]
+fn ring_equals_star_equals_serial_fold() {
+    if !loopback_available() {
+        return;
+    }
+    // The satellite pin: ring == star == serial rank-order fold,
+    // bit-for-bit, across world sizes 1/2/3/8 and buffer lengths that do
+    // NOT divide evenly into world-many chunks.
+    for &(world, rows, cols) in
+        &[(1usize, 3usize, 3usize), (2, 3, 3), (3, 2, 5), (8, 1, 11), (8, 3, 1)]
+    {
+        let inputs: Vec<Matrix> = (0..world)
+            .map(|i| {
+                let mut rng = Rng::stream(4_100 + world as u64, i as u64);
+                Matrix::randn(rows, cols, &mut rng)
+            })
+            .collect();
+        // serial rank-order fold — the canonical bits
+        let mut want = inputs[0].clone();
+        for m in &inputs[1..] {
+            want.add_assign(m);
+        }
+        let want_bits: Vec<u32> = want.as_slice().iter().map(|v| v.to_bits()).collect();
+        let inputs = &inputs;
+
+        // local worlds under both algorithms (ring only changes traffic
+        // accounting locally — the fold is shared)
+        for algo in [AllreduceAlgo::Star, AllreduceAlgo::Ring] {
+            let worlds = Collectives::local_world(world);
+            let results: Vec<Vec<u32>> = std::thread::scope(|s| {
+                let handles: Vec<_> = worlds
+                    .into_iter()
+                    .enumerate()
+                    .map(|(rank, mut w)| {
+                        s.spawn(move || {
+                            w.set_allreduce_algo(algo);
+                            let mut m = inputs[rank].clone();
+                            w.allreduce_sum(&mut m).unwrap();
+                            m.as_slice().iter().map(|v| v.to_bits()).collect()
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for (rank, got) in results.iter().enumerate() {
+                assert_eq!(
+                    got, &want_bits,
+                    "local {:?} world {world} rank {rank} diverged from the serial fold",
+                    algo
+                );
+            }
+        }
+
+        // tcp star (hub) and tcp ring (mesh) — the real wire algorithms
+        if world >= 2 {
+            let star: Vec<Vec<u32>> = run_tcp_world(world, 4_200 + world as u64, |rank, comm| {
+                let mut m = inputs[rank].clone();
+                comm.allreduce_sum(&mut m).unwrap();
+                m.as_slice().iter().map(|v| v.to_bits()).collect()
+            });
+            let ring: Vec<(Vec<u32>, u64)> =
+                run_tcp_mesh(world, 4_300 + world as u64, |rank, comm| {
+                    let mut m = inputs[rank].clone();
+                    comm.allreduce_sum(&mut m).unwrap();
+                    let bytes = if rank == 0 {
+                        comm.stats()
+                            .allreduce_bytes
+                            .load(std::sync::atomic::Ordering::Relaxed)
+                    } else {
+                        0
+                    };
+                    (m.as_slice().iter().map(|v| v.to_bits()).collect(), bytes)
+                });
+            for rank in 0..world {
+                assert_eq!(star[rank], want_bits, "tcp star world {world} rank {rank}");
+                assert_eq!(ring[rank].0, want_bits, "tcp ring world {world} rank {rank}");
+            }
+            // ring traffic is the bounded 2·(N−1)/N share, exactly
+            assert_eq!(
+                ring[0].1,
+                4 * ring_allreduce_floats(world, rows * cols) as u64,
+                "tcp ring world {world} traffic"
+            );
+        }
+    }
+}
+
+#[test]
+fn tcp_ring_training_bit_identical_to_local() {
+    if !loopback_available() {
+        return;
+    }
+    // Full training over the ring mesh: weights must match a local run
+    // bit-for-bit (the ring changes traffic shape, never arithmetic) and
+    // the measured allreduce bytes must equal the ring formula.
+    let (train, test) = normalized(blobs(5, 360, 2.5, 41), blobs(5, 90, 2.5, 42));
+    let mk_cfg = || TrainConfig {
+        dims: vec![5, 4, 1],
+        gamma: 1.0,
+        iters: 5,
+        warmup_iters: 2,
+        workers: 3,
+        eval_every: 2,
+        seed: 43,
+        ..TrainConfig::default()
+    };
+    let mut local_trainer = AdmmTrainer::new(mk_cfg(), &train, &test).unwrap();
+    let local = local_trainer.train().unwrap();
+
+    let mut cfg = mk_cfg();
+    cfg.transport = Transport::Tcp;
+    cfg.world_size = 3;
+    cfg.allreduce = AllreduceAlgo::Ring;
+    cfg.peers = vec!["a:0".into(), "b:0".into(), "c:0".into()]; // validation only
+    let opts = spmd::SpmdOpts::default();
+    let fp = cfg.spmd_fingerprint();
+    let cfg_ref = &cfg;
+    let (train_ref, test_ref, opts_ref) = (&train, &test, &opts);
+    let outcomes: Vec<gradfree_admm::Result<TrainOutcome>> =
+        run_tcp_mesh(3, fp, move |_rank, comm| {
+            spmd::train_rank(cfg_ref, comm, train_ref, test_ref, opts_ref)
+        });
+    let per_iter =
+        gradfree_admm::coordinator::allreduce_bytes_per_iter_for(&cfg.dims, 3, AllreduceAlgo::Ring);
+    for (rank, o) in outcomes.into_iter().enumerate() {
+        let o = o.unwrap_or_else(|e| panic!("tcp ring rank {rank} failed: {e:#}"));
+        for (a, b) in o.weights.iter().zip(&local.weights) {
+            let got: Vec<u32> = a.as_slice().iter().map(|v| v.to_bits()).collect();
+            let want: Vec<u32> = b.as_slice().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(got, want, "rank {rank} weights diverged");
+        }
+        if rank == 0 {
+            assert_eq!(o.stats.allreduce_bytes_measured, (5 * per_iter) as u64);
+            assert_eq!(
+                o.stats.broadcast_bytes_measured,
+                local.stats.broadcast_bytes_measured
+            );
+        }
+    }
 }
 
 #[test]
@@ -292,11 +461,92 @@ fn two_process_tcp_checkpoint_matches_local_run() {
 }
 
 #[test]
+fn two_process_tcp_ring_checkpoint_matches_local_run() {
+    if !loopback_available() {
+        return;
+    }
+    // The ring arm of the subprocess e2e: two genuinely separate OS
+    // processes forming a 2-rank mesh with --allreduce ring; rank 0's
+    // checkpoint must be byte-identical to a 2-rank local run's.
+    // Both probes are held simultaneously so the two reserved ports are
+    // guaranteed distinct (freed just before the children rebind them).
+    let (port0, port1) = {
+        let probe0 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let probe1 = TcpListener::bind("127.0.0.1:0").unwrap();
+        (probe0.local_addr().unwrap().port(), probe1.local_addr().unwrap().port())
+    };
+    let peers = format!("127.0.0.1:{port0},127.0.0.1:{port1}");
+    let tmp = std::env::temp_dir();
+    let pid = std::process::id();
+    let ckpt_ring = tmp.join(format!("gfadmm_spmd_ring_{pid}.gfadmm"));
+    let ckpt_local = tmp.join(format!("gfadmm_spmd_ring_local_{pid}.gfadmm"));
+
+    let common = |extra: &[&str]| -> Vec<String> {
+        let mut v: Vec<String> = [
+            "train", "--dims", "6x5x1", "--dataset", "blobs", "--samples", "360",
+            "--test-samples", "90", "--iters", "4", "--warmup", "2", "--gamma", "1",
+            "--seed", "6", "--quiet",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        v.extend(extra.iter().map(|s| s.to_string()));
+        v
+    };
+
+    let rank0 = spawn_rank(&common(&[
+        "--transport", "tcp", "--allreduce", "ring", "--world-size", "2", "--rank", "0",
+        "--peers", &peers, "--save", ckpt_ring.to_str().unwrap(),
+    ]));
+    let rank1 = spawn_rank(&common(&[
+        "--transport", "tcp", "--allreduce", "ring", "--world-size", "2", "--rank", "1",
+        "--peers", &peers,
+    ]));
+    let out0 = rank0.wait_with_output().expect("rank 0 wait");
+    let out1 = rank1.wait_with_output().expect("rank 1 wait");
+    assert!(
+        out0.status.success(),
+        "ring rank 0 failed: {}",
+        String::from_utf8_lossy(&out0.stderr)
+    );
+    assert!(
+        out1.status.success(),
+        "ring rank 1 failed: {}",
+        String::from_utf8_lossy(&out1.stderr)
+    );
+
+    // Reference: same config, 2-rank local world (star accounting — the
+    // checkpoint carries weights only, and the ring never changes bits).
+    let local = spawn_rank(&common(&[
+        "--transport", "local", "--workers", "2", "--save", ckpt_local.to_str().unwrap(),
+    ]));
+    let out_local = local.wait_with_output().expect("local wait");
+    assert!(
+        out_local.status.success(),
+        "local run failed: {}",
+        String::from_utf8_lossy(&out_local.stderr)
+    );
+
+    let ring_bytes = std::fs::read(&ckpt_ring).expect("ring checkpoint written by rank 0");
+    let local_bytes = std::fs::read(&ckpt_local).expect("local checkpoint");
+    let _ = std::fs::remove_file(&ckpt_ring);
+    let _ = std::fs::remove_file(&ckpt_local);
+    assert!(
+        ring_bytes == local_bytes,
+        "2-process ring checkpoint is not byte-identical to the 2-rank local checkpoint \
+         ({} vs {} bytes)",
+        ring_bytes.len(),
+        local_bytes.len()
+    );
+}
+
+#[test]
 fn scaling_smoke_emits_bench_json_with_formula_agreement() {
     // Tier-1 guardian of bench_out/BENCH_SCALING.json: a small sweep over
-    // world sizes 1/2/4/8 (+ a tcp loopback point) whose measured traffic
-    // must equal the closed-form formulas — run_scaling() hard-errors on
-    // any disagreement.
+    // world sizes 1/2/4/8 × {bulk, pipelined} (+ tcp star/ring loopback
+    // points) whose measured traffic must equal the closed-form formulas
+    // — run_scaling() hard-errors on any disagreement and on any weight
+    // divergence between configurations.
     let spec = ScalingSpec {
         samples: 240,
         test_samples: 60,
@@ -304,15 +554,30 @@ fn scaling_smoke_emits_bench_json_with_formula_agreement() {
         iters: 4,
         local_worlds: vec![1, 2, 4, 8],
         tcp_world: if loopback_available() { Some(2) } else { None },
+        tcp_ring: true,
         seed: 7,
     };
     let (rows, path) = run_scaling(&spec).expect("scaling sweep failed");
-    assert!(rows.len() >= 4, "expected >= 4 world sizes, got {}", rows.len());
+    assert!(rows.len() >= 8, "expected >= 8 points, got {}", rows.len());
     for r in &rows {
         assert_eq!(r.allreduce_bytes_measured, r.allreduce_bytes_formula);
         assert_eq!(r.broadcast_bytes_measured, r.broadcast_bytes_formula);
+        assert_eq!(r.wait_hist.len(), gradfree_admm::cluster::WAIT_BUCKETS);
+    }
+    assert!(rows.iter().any(|r| r.schedule == "bulk"));
+    assert!(rows.iter().any(|r| r.schedule == "pipelined"));
+    if loopback_available() {
+        assert!(
+            rows.iter().any(|r| r.transport == "tcp" && r.allreduce == "ring"),
+            "ring loopback point missing"
+        );
     }
     let text = std::fs::read_to_string(&path).expect("BENCH_SCALING.json readable");
+    // schema 2: wait-histogram fields are part of the contract CI checks
+    assert!(text.contains("\"schema\": 2"), "{path}: {text}");
     assert!(text.contains("\"traffic_matches_formula\": true"), "{path}: {text}");
+    assert!(text.contains("\"wait_hist_edges_us\""), "{path}: {text}");
+    assert!(text.contains("\"wait_hist\""), "{path}: {text}");
     assert!(text.contains("\"world\": 8"));
+    assert!(text.contains("\"schedule\": \"pipelined\""));
 }
