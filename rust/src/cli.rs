@@ -138,6 +138,16 @@ mod tests {
     }
 
     #[test]
+    fn equals_inside_value_survives() {
+        // Only the FIRST '=' splits key from value, so fault-plan specs
+        // pass through intact in both spellings.
+        let a = parse(&["train", "--fault=rank=1,iter=7,kind=crash"]);
+        assert_eq!(a.get("fault"), Some("rank=1,iter=7,kind=crash"));
+        let b = parse(&["train", "--fault", "rank=1,iter=7,kind=drop-conn"]);
+        assert_eq!(b.get("fault"), Some("rank=1,iter=7,kind=drop-conn"));
+    }
+
+    #[test]
     fn negative_number_values() {
         // "-3" does not start with "--", so it is consumed as a value.
         let a = parse(&["--shift", "-3"]);

@@ -67,6 +67,47 @@ use crate::config::AllreduceAlgo;
 use crate::linalg::Matrix;
 use crate::Result;
 
+/// Deadline applied to every blocking point when the caller does not pick
+/// one (`--comm-timeout` overrides it; see
+/// [`Collectives::local_world_with_timeout`] and the TCP constructors).
+pub(crate) const DEFAULT_COMM_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// Typed cause of a transport failure.  Every error a collective returns
+/// carries one of these at the root of its `anyhow` chain, so callers can
+/// `err.downcast_ref::<CommError>()` to distinguish a dead peer from a
+/// deadline from a protocol desync — and the `Display` text is stable for
+/// log grepping (`comm error: <kind>`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommError {
+    /// A peer rank died, aborted the world, or closed its connection.
+    PeerGone,
+    /// A blocking point exceeded the configured deadline (`--comm-timeout`).
+    Timeout,
+    /// Ranks issued different collectives at the same schedule position.
+    Desync,
+    /// Any other I/O failure.
+    Io,
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            CommError::PeerGone => "comm error: peer-gone",
+            CommError::Timeout => "comm error: timeout",
+            CommError::Desync => "comm error: desync",
+            CommError::Io => "comm error: io",
+        })
+    }
+}
+
+impl std::error::Error for CommError {}
+
+/// Build an `anyhow` error whose root cause is `kind` and whose outer
+/// context is `msg` (so `{:#}` prints `msg: comm error: <kind>`).
+pub(crate) fn comm_err(kind: CommError, msg: String) -> anyhow::Error {
+    anyhow::Error::new(kind).context(msg)
+}
+
 /// Cumulative traffic counters (bytes that would cross / did cross the
 /// network), counted once per logical collective.  Matrix collectives
 /// count `len × 4` bytes under the configured allreduce algorithm's
@@ -259,8 +300,21 @@ pub enum Collectives {
 impl Collectives {
     /// One in-process world of `n` thread-backed ranks: handle `i` is
     /// rank `i`.  This is what `--transport local` / `--workers N` runs.
+    /// Blocking points carry the default deadline
+    /// ([`DEFAULT_COMM_TIMEOUT`]); use
+    /// [`Collectives::local_world_with_timeout`] to pick one.
     pub fn local_world(n: usize) -> Vec<Collectives> {
-        LocalComm::world(n).into_iter().map(Collectives::Local).collect()
+        Self::local_world_with_timeout(n, DEFAULT_COMM_TIMEOUT)
+    }
+
+    /// [`Collectives::local_world`] with an explicit deadline on every
+    /// blocking point: a rank blocked longer than `timeout` in a
+    /// collective errors with [`CommError::Timeout`] instead of hanging.
+    pub fn local_world_with_timeout(n: usize, timeout: Duration) -> Vec<Collectives> {
+        LocalComm::world_with_timeout(n, timeout)
+            .into_iter()
+            .map(Collectives::Local)
+            .collect()
     }
 
     pub fn rank(&self) -> usize {
@@ -651,12 +705,19 @@ pub struct LocalComm {
     algo: AllreduceAlgo,
     issue_seq: u64,
     done_seq: u64,
+    /// Deadline on every blocking point (condvar waits poll at 50 ms; a
+    /// wait past this errors with [`CommError::Timeout`]).
+    timeout: Duration,
     wait: WaitStats,
     shared: Arc<LocalShared>,
 }
 
 impl LocalComm {
     pub fn world(n: usize) -> Vec<LocalComm> {
+        Self::world_with_timeout(n, DEFAULT_COMM_TIMEOUT)
+    }
+
+    pub fn world_with_timeout(n: usize, timeout: Duration) -> Vec<LocalComm> {
         assert!(n > 0, "need at least one rank");
         let shared = Arc::new(LocalShared {
             world: n,
@@ -675,6 +736,7 @@ impl LocalComm {
                 algo: AllreduceAlgo::Star,
                 issue_seq: 0,
                 done_seq: 0,
+                timeout,
                 wait: WaitStats::default(),
                 shared: shared.clone(),
             })
@@ -688,11 +750,28 @@ impl LocalComm {
     }
 
     fn check_abort(&self) -> Result<()> {
-        anyhow::ensure!(
-            !self.shared.abort.load(Ordering::SeqCst),
-            "local world aborted (a peer rank failed)"
-        );
+        if self.shared.abort.load(Ordering::SeqCst) {
+            return Err(self.abort_err());
+        }
         Ok(())
+    }
+
+    fn abort_err(&self) -> anyhow::Error {
+        comm_err(
+            CommError::PeerGone,
+            "local world aborted (a peer rank failed)".to_string(),
+        )
+    }
+
+    fn timeout_err(&self, what: &str) -> anyhow::Error {
+        comm_err(
+            CommError::Timeout,
+            format!(
+                "rank {}: {what} blocked past the {:.1}s deadline (--comm-timeout)",
+                self.rank,
+                self.timeout.as_secs_f64()
+            ),
+        )
     }
 
     /// Count one logical collective on rank 0 under the configured
@@ -742,6 +821,7 @@ impl LocalComm {
             return Ok(buf);
         }
         {
+            let deadline = Instant::now() + self.timeout;
             let mut nb = self.shared.nb.lock().unwrap();
             loop {
                 // Readiness before abort: a completable op completes even
@@ -751,7 +831,10 @@ impl LocalComm {
                     break;
                 }
                 if self.shared.abort.load(Ordering::SeqCst) {
-                    anyhow::bail!("local world aborted (a peer rank failed)");
+                    return Err(self.abort_err());
+                }
+                if Instant::now() >= deadline {
+                    return Err(self.timeout_err("collective wait"));
                 }
                 let (nb2, _timeout) = self
                     .shared
@@ -785,6 +868,7 @@ impl LocalComm {
             return Ok(());
         }
         let gen = g.generation;
+        let deadline = Instant::now() + self.timeout;
         loop {
             let (g2, _timeout) = self
                 .shared
@@ -800,7 +884,12 @@ impl LocalComm {
                 // one with a stale count.
                 g.arrived = g.arrived.saturating_sub(1);
                 drop(g);
-                anyhow::bail!("local world aborted (a peer rank failed)");
+                return Err(self.abort_err());
+            }
+            if Instant::now() >= deadline {
+                g.arrived = g.arrived.saturating_sub(1);
+                drop(g);
+                return Err(self.timeout_err("barrier"));
             }
         }
     }
@@ -1195,7 +1284,10 @@ mod tests {
                             return true;
                         }
                         let mut m = Matrix::zeros(2, 2);
-                        w.allreduce_sum(&mut m).is_err()
+                        let err = w.allreduce_sum(&mut m).unwrap_err();
+                        // the abort surfaces as a typed PeerGone
+                        err.downcast_ref::<CommError>() == Some(&CommError::PeerGone)
+                            && format!("{err:#}").contains("aborted")
                     })
                 })
                 .collect();
@@ -1203,5 +1295,23 @@ mod tests {
                 assert!(h.join().unwrap(), "rank neither aborted nor errored");
             }
         });
+    }
+
+    #[test]
+    fn local_deadline_fires_instead_of_hanging() {
+        // Rank 1 never shows up: rank 0's collective and barrier must both
+        // error with a typed Timeout within the configured deadline rather
+        // than blocking forever.
+        let mut worlds = Collectives::local_world_with_timeout(2, Duration::from_millis(120));
+        let mut w0 = worlds.remove(0);
+        let _w1 = worlds.remove(0); // held alive, never participates
+        let t0 = Instant::now();
+        let mut m = Matrix::zeros(2, 2);
+        let err = w0.allreduce_sum(&mut m).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(30), "deadline did not bound the wait");
+        assert_eq!(err.downcast_ref::<CommError>(), Some(&CommError::Timeout), "{err:#}");
+        assert!(format!("{err:#}").contains("comm-timeout"), "{err:#}");
+        let err = w0.barrier().unwrap_err();
+        assert_eq!(err.downcast_ref::<CommError>(), Some(&CommError::Timeout), "{err:#}");
     }
 }

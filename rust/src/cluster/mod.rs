@@ -20,7 +20,7 @@ mod sim;
 mod tcp;
 
 pub use comm::{
-    ring_allreduce_floats, Collectives, CommStats, LocalComm, PendingOp, WaitStats,
+    ring_allreduce_floats, Collectives, CommError, CommStats, LocalComm, PendingOp, WaitStats,
     WAIT_BUCKETS, WAIT_BUCKET_EDGES_US,
 };
 pub use cost::CostModel;

@@ -100,6 +100,22 @@ impl ScalingProfile {
         t1 / (tn * cores as f64)
     }
 
+    /// Expected re-work seconds after a mid-run failure at `cores` ranks
+    /// when snapshots land every `checkpoint_every` iterations: in the
+    /// worst case the world replays a full checkpoint interval.  With
+    /// `checkpoint_every == 0` (checkpointing off) the whole run to
+    /// threshold is lost.  Used to budget `--checkpoint-every` against
+    /// the snapshot-write cost at scale (EXPERIMENTS.md §Fault
+    /// tolerance).
+    pub fn recovery_cost_s(&self, cores: usize, checkpoint_every: usize) -> f64 {
+        let iters = if checkpoint_every == 0 {
+            self.iters_to_threshold
+        } else {
+            checkpoint_every.min(self.iters_to_threshold)
+        };
+        iters as f64 * self.iteration_time(cores)
+    }
+
     /// Core count beyond which communication dominates compute (the knee
     /// of the strong-scaling curve).
     pub fn comm_crossover(&self, max_cores: usize) -> Option<usize> {
@@ -185,6 +201,21 @@ mod tests {
         let pt = p.time_to_threshold(128);
         let sum = pt.compute_s + pt.comm_s + pt.leader_s;
         assert!((sum - pt.seconds_to_threshold).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recovery_cost_scales_with_checkpoint_interval() {
+        let p = profile();
+        let per_iter = p.iteration_time(64);
+        // worst case replays exactly one checkpoint interval
+        assert!((p.recovery_cost_s(64, 10) - 10.0 * per_iter).abs() < 1e-12);
+        // denser snapshots replay less
+        assert!(p.recovery_cost_s(64, 5) < p.recovery_cost_s(64, 20));
+        // no checkpoints -> the whole run to threshold is lost, and an
+        // interval past the horizon can never lose more than that
+        let whole = p.iters_to_threshold as f64 * per_iter;
+        assert!((p.recovery_cost_s(64, 0) - whole).abs() < 1e-12);
+        assert!((p.recovery_cost_s(64, 10_000) - whole).abs() < 1e-12);
     }
 
     #[test]

@@ -48,6 +48,7 @@
 //!   op 0x03 SCALARS  payload = count u32 + count f64 LE
 //!   op 0x04 BARRIER  payload = empty
 //!   op 0x05 CHUNK    payload = count u32 + count f32 LE   (ring segments)
+//!   op 0x06 ABORT    payload = empty   (world teardown announcement)
 //! ```
 //!
 //! All collectives are program-ordered identically on every rank (SPMD),
@@ -56,12 +57,31 @@
 //! fields — including the allreduce algorithm and schedule) rejects
 //! worlds whose ranks were launched with divergent configs before any
 //! training traffic flows.
+//!
+//! Ring CHUNK payloads are capped at [`MAX_CHUNK_FLOATS`] floats per
+//! frame: a logical chunk bigger than the cap is split into consecutive
+//! sub-frames the receiver reassembles, so one oversized chunk can never
+//! exceed the kernel socket buffers and wedge the recv-first ordering.
+//!
+//! ## Failure semantics
+//!
+//! Every blocking point carries a deadline (default
+//! `DEFAULT_COMM_TIMEOUT`, `--comm-timeout` overrides): socket reads and
+//! writes time out, connection dialing retries with deterministic
+//! exponential backoff up to the deadline, and every failure is returned
+//! as a typed [`CommError`] (PeerGone / Timeout / Desync / Io) in the
+//! error chain.  [`TcpComm::abort`] broadcasts an ABORT frame before
+//! closing its links, so surviving ranks fail fast with `PeerGone`
+//! instead of each waiting out its own read deadline.
 
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
-use super::comm::{count_matrix_collective, CommStats, PendingKind, PendingOp, WaitStats};
+use super::comm::{
+    comm_err, count_matrix_collective, CommError, CommStats, PendingKind, PendingOp, WaitStats,
+    DEFAULT_COMM_TIMEOUT,
+};
 use crate::config::AllreduceAlgo;
 use crate::linalg::Matrix;
 use crate::Result;
@@ -72,22 +92,28 @@ const OP_MAT: u8 = 0x02;
 const OP_SCALARS: u8 = 0x03;
 const OP_BARRIER: u8 = 0x04;
 const OP_CHUNK: u8 = 0x05;
+const OP_ABORT: u8 = 0x06;
 
 /// Refuse frames past this size (a corrupted length prefix would
 /// otherwise ask for gigabytes).
 const MAX_FRAME: usize = 1 << 30;
 
-/// Per-stream read/write timeout: generous enough for a slow rank's
-/// compute phase, finite so a dead peer fails the run instead of hanging
-/// it.
-const IO_TIMEOUT: Duration = Duration::from_secs(300);
-
-/// How long leaves retry dialing the hub (ranks may launch in any order).
-const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
+/// Cap on the floats carried by one CHUNK frame (256 KiB of payload).
+/// Ring chunks above it travel as consecutive sub-frames: both sides
+/// derive the same split from the chunk length alone, and a bounded
+/// frame can always drain into the kernel socket buffers, so the ring's
+/// recv-first ordering cannot wedge on one giant write.
+const MAX_CHUNK_FLOATS: usize = 1 << 16;
 
 /// How long the hub waits for a freshly-accepted connection's hello — a
 /// silent stray connection must not eat the join deadline.
 const HELLO_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// First retry delay when dialing a peer; doubles per attempt (capped at
+/// [`DIAL_BACKOFF_CAP`]) — deterministic, no jitter, bounded by the
+/// connect deadline.
+const DIAL_BACKOFF_START: Duration = Duration::from_millis(10);
+const DIAL_BACKOFF_CAP: Duration = Duration::from_millis(500);
 
 /// TCP transport state for one rank.
 pub struct TcpComm {
@@ -121,6 +147,9 @@ pub struct TcpComm {
     /// wrong MAT payload.  `pending_sends` counts the blockers.
     pending_meta: std::collections::VecDeque<(bool, bool)>,
     pending_sends: usize,
+    /// Deadline applied to every blocking point: socket reads/writes,
+    /// connection dialing, and the accept loop (`--comm-timeout`).
+    timeout: Duration,
 }
 
 impl TcpComm {
@@ -140,6 +169,7 @@ impl TcpComm {
             done_seq: 0,
             pending_meta: std::collections::VecDeque::new(),
             pending_sends: 0,
+            timeout: DEFAULT_COMM_TIMEOUT,
         }
     }
 
@@ -157,6 +187,19 @@ impl TcpComm {
         fingerprint: u64,
         algo: AllreduceAlgo,
     ) -> Result<TcpComm> {
+        Self::connect_with_timeout(rank, world, peers, fingerprint, algo, DEFAULT_COMM_TIMEOUT)
+    }
+
+    /// [`TcpComm::connect`] with an explicit deadline on every blocking
+    /// point (socket reads/writes, dial retries, the accept loop).
+    pub fn connect_with_timeout(
+        rank: usize,
+        world: usize,
+        peers: &[String],
+        fingerprint: u64,
+        algo: AllreduceAlgo,
+        timeout: Duration,
+    ) -> Result<TcpComm> {
         anyhow::ensure!(world >= 1, "world size must be >= 1");
         anyhow::ensure!(rank < world, "rank {rank} out of range for world {world}");
         if world == 1 {
@@ -164,6 +207,7 @@ impl TcpComm {
             // TrainConfig::validate, which only requires peers past 1).
             let mut comm = TcpComm::solo(rank, world);
             comm.algo = algo;
+            comm.timeout = timeout;
             return Ok(comm);
         }
         anyhow::ensure!(
@@ -176,9 +220,9 @@ impl TcpComm {
                     let listener = TcpListener::bind(peers[0].as_str()).map_err(|e| {
                         anyhow::anyhow!("rank 0: binding hub address {}: {e}", peers[0])
                     })?;
-                    Self::hub(listener, world, fingerprint)?
+                    Self::hub_with_timeout(listener, world, fingerprint, timeout)?
                 } else {
-                    Self::leaf(&peers[0], rank, world, fingerprint)?
+                    Self::leaf_with_timeout(&peers[0], rank, world, fingerprint, timeout)?
                 }
             }
             AllreduceAlgo::Ring => {
@@ -191,7 +235,7 @@ impl TcpComm {
                 let listener = TcpListener::bind(peers[rank].as_str()).map_err(|e| {
                     anyhow::anyhow!("rank {rank}: binding mesh address {}: {e}", peers[rank])
                 })?;
-                Self::mesh(listener, rank, world, peers, fingerprint)?
+                Self::mesh_with_timeout(listener, rank, world, peers, fingerprint, timeout)?
             }
         };
         comm.algo = algo;
@@ -202,8 +246,18 @@ impl TcpComm {
     /// already-bound listener (exposed separately so tests/benches can
     /// bind port 0 and learn the ephemeral address first).
     pub fn hub(listener: TcpListener, world: usize, fingerprint: u64) -> Result<TcpComm> {
+        Self::hub_with_timeout(listener, world, fingerprint, DEFAULT_COMM_TIMEOUT)
+    }
+
+    pub fn hub_with_timeout(
+        listener: TcpListener,
+        world: usize,
+        fingerprint: u64,
+        timeout: Duration,
+    ) -> Result<TcpComm> {
         anyhow::ensure!(world >= 2, "hub needs a world of >= 2 ranks");
         let mut comm = TcpComm::solo(0, world);
+        comm.timeout = timeout;
         comm.accept_peers(&listener, world, fingerprint, 1)?;
         Ok(comm)
     }
@@ -211,8 +265,19 @@ impl TcpComm {
     /// Rank `rank >= 1` of a star: dial the hub (with retries — launch
     /// order is arbitrary) and introduce ourselves.
     pub fn leaf(hub_addr: &str, rank: usize, world: usize, fingerprint: u64) -> Result<TcpComm> {
+        Self::leaf_with_timeout(hub_addr, rank, world, fingerprint, DEFAULT_COMM_TIMEOUT)
+    }
+
+    pub fn leaf_with_timeout(
+        hub_addr: &str,
+        rank: usize,
+        world: usize,
+        fingerprint: u64,
+        timeout: Duration,
+    ) -> Result<TcpComm> {
         anyhow::ensure!(rank >= 1 && rank < world, "leaf rank {rank} out of range");
         let mut comm = TcpComm::solo(rank, world);
+        comm.timeout = timeout;
         comm.dial_peer(hub_addr, 0, fingerprint)?;
         Ok(comm)
     }
@@ -229,6 +294,17 @@ impl TcpComm {
         peers: &[String],
         fingerprint: u64,
     ) -> Result<TcpComm> {
+        Self::mesh_with_timeout(listener, rank, world, peers, fingerprint, DEFAULT_COMM_TIMEOUT)
+    }
+
+    pub fn mesh_with_timeout(
+        listener: TcpListener,
+        rank: usize,
+        world: usize,
+        peers: &[String],
+        fingerprint: u64,
+        timeout: Duration,
+    ) -> Result<TcpComm> {
         anyhow::ensure!(world >= 2, "mesh needs a world of >= 2 ranks");
         anyhow::ensure!(rank < world, "rank {rank} out of range for world {world}");
         anyhow::ensure!(
@@ -238,6 +314,7 @@ impl TcpComm {
         );
         let mut comm = TcpComm::solo(rank, world);
         comm.algo = AllreduceAlgo::Ring;
+        comm.timeout = timeout;
         for p in 0..rank {
             comm.dial_peer(&peers[p], p, fingerprint)?;
         }
@@ -245,23 +322,32 @@ impl TcpComm {
         Ok(comm)
     }
 
-    /// Dial one peer with retries and send our hello.
+    /// Dial one peer and send our hello.  Connection refusals are
+    /// retried with deterministic exponential backoff (launch order is
+    /// arbitrary) until the comm deadline expires.
     fn dial_peer(&mut self, addr: &str, peer_rank: usize, fingerprint: u64) -> Result<()> {
         let rank = self.rank;
-        let deadline = Instant::now() + CONNECT_TIMEOUT;
+        let deadline = Instant::now() + self.timeout;
+        let mut backoff = DIAL_BACKOFF_START;
         let stream = loop {
             match TcpStream::connect(addr) {
                 Ok(s) => break s,
                 Err(e) => {
-                    anyhow::ensure!(
-                        Instant::now() < deadline,
-                        "rank {rank}: connecting to rank {peer_rank} at {addr}: {e}"
-                    );
-                    std::thread::sleep(Duration::from_millis(100));
+                    if Instant::now() >= deadline {
+                        return Err(comm_err(
+                            CommError::Timeout,
+                            format!(
+                                "rank {rank}: connecting to rank {peer_rank} at {addr} \
+                                 (retried past the comm deadline): {e}"
+                            ),
+                        ));
+                    }
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(DIAL_BACKOFF_CAP);
                 }
             }
         };
-        prepare_stream(&stream)?;
+        prepare_stream(&stream, self.timeout)?;
         self.links[peer_rank] = Some(stream);
         let mut hello = Vec::with_capacity(20);
         hello.extend_from_slice(MAGIC);
@@ -275,7 +361,9 @@ impl TcpComm {
             &hello,
             &mut buf,
         )
-        .map_err(|e| anyhow::anyhow!("rank {rank}: sending hello to rank {peer_rank}: {e}"));
+        .map_err(|e| {
+            io_err(e).context(format!("rank {rank}: sending hello to rank {peer_rank}"))
+        });
         self.buf = buf;
         res
     }
@@ -293,7 +381,7 @@ impl TcpComm {
         listener
             .set_nonblocking(true)
             .map_err(|e| anyhow::anyhow!("listener nonblocking: {e}"))?;
-        let deadline = Instant::now() + CONNECT_TIMEOUT;
+        let deadline = Instant::now() + self.timeout;
         let mut pending = world - lowest_peer;
         let mut buf = std::mem::take(&mut self.buf);
         let res = (|| -> Result<()> {
@@ -305,7 +393,7 @@ impl TcpComm {
                         // client) is dropped and the accept loop continues
                         // — only a *valid* hello with mismatched
                         // parameters is fatal.
-                        let mut stream = match prepare_accepted(stream) {
+                        let mut stream = match prepare_accepted(stream, self.timeout) {
                             Ok(s) => s,
                             Err(e) => {
                                 eprintln!(
@@ -348,17 +436,21 @@ impl TcpComm {
                             "rank {peer_rank} connected twice"
                         );
                         stream
-                            .set_read_timeout(Some(IO_TIMEOUT))
+                            .set_read_timeout(Some(self.timeout))
                             .map_err(|e| anyhow::anyhow!("accepted stream timeout: {e}"))?;
                         self.links[peer_rank] = Some(stream);
                         pending -= 1;
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        anyhow::ensure!(
-                            Instant::now() < deadline,
-                            "rank {}: timed out waiting for {pending} rank(s) to join",
-                            self.rank
-                        );
+                        if Instant::now() >= deadline {
+                            return Err(comm_err(
+                                CommError::Timeout,
+                                format!(
+                                    "rank {}: timed out waiting for {pending} rank(s) to join",
+                                    self.rank
+                                ),
+                            ));
+                        }
                         std::thread::sleep(Duration::from_millis(20));
                     }
                     Err(e) => anyhow::bail!("rank {}: accept failed: {e}", self.rank),
@@ -402,10 +494,29 @@ impl TcpComm {
         (self.issue_seq - self.done_seq) as usize
     }
 
-    /// Tear the world down: peers blocked on this rank's frames error out
+    /// Tear the world down: an ABORT frame is broadcast on every link
+    /// (best effort, short write deadline) so peers blocked on this
+    /// rank's frames fail fast with a typed `PeerGone`, then the links
+    /// are closed so even a peer that misses the frame errors out on EOF
     /// instead of hanging.
     pub fn abort(&mut self) {
-        for link in self.links.iter().flatten() {
+        let mut fbuf = std::mem::take(&mut self.buf);
+        for link in self.links.iter_mut().flatten() {
+            // A peer may be gone already; the shutdown below is the
+            // backstop, so write errors are ignored.
+            let _ = link.set_write_timeout(Some(Duration::from_secs(2)));
+            let _ = write_frame(link, OP_ABORT, &[], &mut fbuf);
+            let _ = link.shutdown(Shutdown::Both);
+        }
+        self.buf = fbuf;
+    }
+
+    /// Close every link *without* the ABORT courtesy frame — peers see a
+    /// raw EOF/reset mid-protocol, exactly what a crashed or partitioned
+    /// process looks like on the wire.  Fault-injection only
+    /// (`--fault kind=drop-conn`).
+    pub fn drop_links(&mut self) {
+        for link in self.links.iter_mut().flatten() {
             let _ = link.shutdown(Shutdown::Both);
         }
     }
@@ -450,7 +561,7 @@ impl TcpComm {
                 PendingKind::Allreduce => {
                     if self.algo == AllreduceAlgo::Star && rank != 0 {
                         write_mat_frame(self.link(0)?, &buf, &mut fbuf)
-                            .map_err(|e| rank_err(rank, "allreduce send", e))?;
+                            .map_err(|e| rank_io_err(rank, "allreduce send", e))?;
                     }
                 }
                 PendingKind::Broadcast { root } => {
@@ -483,11 +594,11 @@ impl TcpComm {
         if rank == 0 {
             for p in 1..self.world {
                 write_mat_frame(self.link(p)?, m, fbuf)
-                    .map_err(|e| rank_err(rank, "broadcast send", e))?;
+                    .map_err(|e| rank_io_err(rank, "broadcast send", e))?;
             }
         } else {
             write_mat_frame(self.link(0)?, m, fbuf)
-                .map_err(|e| rank_err(rank, "broadcast send", e))?;
+                .map_err(|e| rank_io_err(rank, "broadcast send", e))?;
         }
         Ok(())
     }
@@ -564,7 +675,7 @@ impl TcpComm {
             }
             for slot in links.iter_mut().take(world).skip(1) {
                 let link = slot.as_mut().expect("folded above");
-                write_mat_frame(link, m, fbuf).map_err(|e| rank_err(rank, "allreduce send", e))?;
+                write_mat_frame(link, m, fbuf).map_err(|e| rank_io_err(rank, "allreduce send", e))?;
             }
             stats.count_allreduce(m.len());
         } else {
@@ -657,22 +768,30 @@ impl TcpComm {
     fn ring_send_chunk(&mut self, to: usize, vals: &[f32], fbuf: &mut Vec<u8>) -> Result<()> {
         let rank = self.rank;
         write_chunk_frame(self.link(to)?, vals, fbuf)
-            .map_err(|e| rank_err(rank, "ring send", e))
+            .map_err(|e| rank_io_err(rank, "ring send", e))
     }
 
-    /// Receive one chunk frame from `from` into `ring_slots[from]`.
+    /// Receive one logical chunk of `want` floats from `from` into
+    /// `ring_slots[from]`, reassembling the capped sub-frames the sender
+    /// emitted (zero frames for an empty chunk).
     fn ring_recv_slot(&mut self, from: usize, want: usize, fbuf: &mut Vec<u8>) -> Result<()> {
         let rank = self.rank;
         let TcpComm { links, ring_slots, .. } = self;
         let link = links[from]
             .as_mut()
             .ok_or_else(|| anyhow::anyhow!("rank {rank}: no link to rank {from}"))?;
-        let op = read_frame(link, fbuf).map_err(|e| rank_err(rank, "ring recv", e))?;
-        expect_op(op, OP_CHUNK)?;
-        decode_chunk(fbuf, want, &mut ring_slots[from])
+        let slot = &mut ring_slots[from];
+        slot.clear();
+        while slot.len() < want {
+            let op = read_frame(link, fbuf).map_err(|e| rank_err(rank, "ring recv", e))?;
+            expect_op(op, OP_CHUNK)?;
+            decode_chunk_append(fbuf, want - slot.len(), slot)?;
+        }
+        Ok(())
     }
 
-    /// Receive one chunk frame from `from` straight into `m[s..e]`.
+    /// Receive one logical chunk from `from` straight into `m[s..e]`,
+    /// reassembling capped sub-frames.
     fn ring_recv_into(
         &mut self,
         from: usize,
@@ -682,9 +801,14 @@ impl TcpComm {
         fbuf: &mut Vec<u8>,
     ) -> Result<()> {
         let rank = self.rank;
-        let op = read_frame(self.link(from)?, fbuf).map_err(|e| rank_err(rank, "ring recv", e))?;
-        expect_op(op, OP_CHUNK)?;
-        decode_chunk_into(fbuf, &mut m.as_mut_slice()[s..e])
+        let mut off = s;
+        while off < e {
+            let op = read_frame(self.link(from)?, fbuf)
+                .map_err(|err| rank_err(rank, "ring recv", err))?;
+            expect_op(op, OP_CHUNK)?;
+            off += decode_chunk_fill(fbuf, &mut m.as_mut_slice()[off..e])?;
+        }
+        Ok(())
     }
 
     /// Hub relay + leaf read for broadcasts.  The root's sends went out
@@ -703,7 +827,7 @@ impl TcpComm {
                         continue;
                     }
                     write_mat_frame(self.link(p)?, m, fbuf)
-                        .map_err(|e| rank_err(rank, "broadcast send", e))?;
+                        .map_err(|e| rank_io_err(rank, "broadcast send", e))?;
                 }
             }
             self.count(PendingKind::Broadcast { root }, m.len());
@@ -736,11 +860,11 @@ impl TcpComm {
             }
             for p in 1..self.world {
                 write_frame(self.link(p)?, OP_BARRIER, &[], buf)
-                    .map_err(|e| rank_err(rank, "barrier send", e))?;
+                    .map_err(|e| rank_io_err(rank, "barrier send", e))?;
             }
         } else {
             write_frame(self.link(0)?, OP_BARRIER, &[], buf)
-                .map_err(|e| rank_err(rank, "barrier send", e))?;
+                .map_err(|e| rank_io_err(rank, "barrier send", e))?;
             let op = read_frame(self.link(0)?, buf)
                 .map_err(|e| rank_err(rank, "barrier recv", e))?;
             expect_op(op, OP_BARRIER)?;
@@ -785,7 +909,7 @@ impl TcpComm {
             for slot in links.iter_mut().take(world).skip(1) {
                 let link = slot.as_mut().expect("folded above");
                 write_scalars_frame(link, vals, buf)
-                    .map_err(|e| rank_err(rank, "scalar allreduce send", e))?;
+                    .map_err(|e| rank_io_err(rank, "scalar allreduce send", e))?;
             }
             stats.count_scalars(vals.len());
         } else {
@@ -793,7 +917,7 @@ impl TcpComm {
                 .as_mut()
                 .ok_or_else(|| anyhow::anyhow!("rank {rank}: no link to rank 0"))?;
             write_scalars_frame(link, vals, buf)
-                .map_err(|e| rank_err(rank, "scalar allreduce send", e))?;
+                .map_err(|e| rank_io_err(rank, "scalar allreduce send", e))?;
             let op =
                 read_frame(link, buf).map_err(|e| rank_err(rank, "scalar allreduce recv", e))?;
             expect_op(op, OP_SCALARS)?;
@@ -845,7 +969,7 @@ impl TcpComm {
                     .as_mut()
                     .ok_or_else(|| anyhow::anyhow!("rank 0: no link to rank {p}"))?;
                 write_scalars_frame(link, vals, buf)
-                    .map_err(|e| rank_err(rank, "scalar broadcast send", e))?;
+                    .map_err(|e| rank_io_err(rank, "scalar broadcast send", e))?;
             }
             stats.count_scalars(vals.len());
         } else if rank == root {
@@ -853,7 +977,7 @@ impl TcpComm {
                 .as_mut()
                 .ok_or_else(|| anyhow::anyhow!("rank {rank}: no link to rank 0"))?;
             write_scalars_frame(link, vals, buf)
-                .map_err(|e| rank_err(rank, "scalar broadcast send", e))?;
+                .map_err(|e| rank_io_err(rank, "scalar broadcast send", e))?;
         } else {
             let link = links[0]
                 .as_mut()
@@ -887,20 +1011,44 @@ fn gcd(a: usize, b: usize) -> usize {
     }
 }
 
-fn rank_err(rank: usize, what: &str, e: impl std::fmt::Display) -> anyhow::Error {
+/// Wrap a transport error with this rank's identity, preserving the
+/// typed [`CommError`] at the root of the chain for `downcast_ref`.
+fn rank_err(rank: usize, what: &str, e: anyhow::Error) -> anyhow::Error {
     let role = if rank == 0 { "hub" } else { "leaf" };
-    anyhow::anyhow!("rank {rank} ({role}): {what}: {e}")
+    e.context(format!("rank {rank} ({role}): {what}"))
 }
 
-fn prepare_stream(stream: &TcpStream) -> Result<()> {
+/// Classify a socket error into the typed comm taxonomy: read/write
+/// deadlines fire as `Timeout`, a closed or reset connection is
+/// `PeerGone`, anything else is `Io`.
+fn classify_io(e: &std::io::Error) -> CommError {
+    use std::io::ErrorKind as K;
+    match e.kind() {
+        K::WouldBlock | K::TimedOut => CommError::Timeout,
+        K::UnexpectedEof | K::ConnectionReset | K::ConnectionAborted | K::BrokenPipe => {
+            CommError::PeerGone
+        }
+        _ => CommError::Io,
+    }
+}
+
+fn io_err(e: std::io::Error) -> anyhow::Error {
+    comm_err(classify_io(&e), e.to_string())
+}
+
+fn rank_io_err(rank: usize, what: &str, e: std::io::Error) -> anyhow::Error {
+    rank_err(rank, what, io_err(e))
+}
+
+fn prepare_stream(stream: &TcpStream, timeout: Duration) -> Result<()> {
     stream
         .set_nodelay(true)
         .map_err(|e| anyhow::anyhow!("set_nodelay: {e}"))?;
     stream
-        .set_read_timeout(Some(IO_TIMEOUT))
+        .set_read_timeout(Some(timeout))
         .map_err(|e| anyhow::anyhow!("set_read_timeout: {e}"))?;
     stream
-        .set_write_timeout(Some(IO_TIMEOUT))
+        .set_write_timeout(Some(timeout))
         .map_err(|e| anyhow::anyhow!("set_write_timeout: {e}"))?;
     Ok(())
 }
@@ -908,24 +1056,28 @@ fn prepare_stream(stream: &TcpStream) -> Result<()> {
 /// Prepare an accepted stream for the hello exchange: blocking mode
 /// (accepted sockets do not inherit the listener's nonblocking flag on
 /// every platform, so set it explicitly) with the short hello read
-/// timeout; the full `IO_TIMEOUT` is applied only after a valid hello.
-fn prepare_accepted(stream: TcpStream) -> Result<TcpStream> {
+/// timeout; the full comm timeout is applied only after a valid hello.
+fn prepare_accepted(stream: TcpStream, timeout: Duration) -> Result<TcpStream> {
     stream
         .set_nonblocking(false)
         .map_err(|e| anyhow::anyhow!("set_nonblocking: {e}"))?;
-    prepare_stream(&stream)?;
+    prepare_stream(&stream, timeout)?;
     stream
-        .set_read_timeout(Some(HELLO_TIMEOUT))
+        .set_read_timeout(Some(HELLO_TIMEOUT.min(timeout)))
         .map_err(|e| anyhow::anyhow!("set_read_timeout: {e}"))?;
     Ok(stream)
 }
 
 fn expect_op(got: u8, want: u8) -> Result<()> {
-    anyhow::ensure!(
-        got == want,
-        "protocol desync: expected opcode {want:#04x}, got {got:#04x} \
-         (ranks must issue collectives in the same program order)"
-    );
+    if got != want {
+        return Err(comm_err(
+            CommError::Desync,
+            format!(
+                "protocol desync: expected opcode {want:#04x}, got {got:#04x} \
+                 (ranks must issue collectives in the same program order)"
+            ),
+        ));
+    }
     Ok(())
 }
 
@@ -956,16 +1108,25 @@ fn write_frame(
 
 /// Read one frame; leaves the payload (without the opcode) in `buf` and
 /// returns the opcode.  The 5-byte `[len][op]` header is read separately
-/// so the payload lands at `buf[0]` with no post-hoc memmove.
+/// so the payload lands at `buf[0]` with no post-hoc memmove.  Socket
+/// errors come back typed ([`classify_io`]); an ABORT frame is turned
+/// into a `PeerGone` error right here, so every receive path fails fast
+/// when a peer announces teardown.
 fn read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<u8> {
     let mut header = [0u8; 5];
-    stream.read_exact(&mut header)?;
+    stream.read_exact(&mut header).map_err(io_err)?;
     let len = u32::from_le_bytes(header[0..4].try_into().unwrap()) as usize;
     anyhow::ensure!(len >= 1 && len <= MAX_FRAME, "implausible frame length {len}");
     let op = header[4];
     buf.clear();
     buf.resize(len - 1, 0);
-    stream.read_exact(buf)?;
+    stream.read_exact(buf).map_err(io_err)?;
+    if op == OP_ABORT {
+        return Err(comm_err(
+            CommError::PeerGone,
+            "peer rank aborted the world (abort frame received)".to_string(),
+        ));
+    }
     Ok(op)
 }
 
@@ -1023,43 +1184,60 @@ fn decode_scalars(payload: &[u8], out: &mut Vec<f64>) -> Result<()> {
     Ok(())
 }
 
+/// Write one logical chunk as `ceil(len / MAX_CHUNK_FLOATS)` CHUNK
+/// frames, each carrying its own count header.  The receiver derives the
+/// identical split from the chunk length alone, so no extra framing is
+/// needed; an empty chunk (more ranks than floats) writes no frames at
+/// all, matching the receiver's zero-iteration read loop.
 fn write_chunk_frame(
     stream: &mut TcpStream,
     vals: &[f32],
     buf: &mut Vec<u8>,
 ) -> std::io::Result<()> {
-    let len = 1 + 4 + vals.len() * 4;
-    buf.clear();
-    buf.extend_from_slice(&(len as u32).to_le_bytes());
-    buf.push(OP_CHUNK);
-    buf.extend_from_slice(&(vals.len() as u32).to_le_bytes());
-    for v in vals {
-        buf.extend_from_slice(&v.to_le_bytes());
+    for part in vals.chunks(MAX_CHUNK_FLOATS) {
+        let len = 1 + 4 + part.len() * 4;
+        buf.clear();
+        buf.extend_from_slice(&(len as u32).to_le_bytes());
+        buf.push(OP_CHUNK);
+        buf.extend_from_slice(&(part.len() as u32).to_le_bytes());
+        for v in part {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        stream.write_all(buf)?;
     }
-    stream.write_all(buf)
-}
-
-/// Decode a chunk frame of exactly `want` floats into the recycled `out`.
-fn decode_chunk(payload: &[u8], want: usize, out: &mut Vec<f32>) -> Result<()> {
-    anyhow::ensure!(payload.len() >= 4, "truncated chunk frame");
-    let count = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
-    anyhow::ensure!(count == want, "chunk size mismatch: got {count}, expected {want}");
-    anyhow::ensure!(payload.len() - 4 == count * 4, "chunk frame size mismatch");
-    out.clear();
-    out.extend(payload[4..].chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())));
     Ok(())
 }
 
-/// Decode a chunk frame straight into a buffer slice (ring allgather).
-fn decode_chunk_into(payload: &[u8], out: &mut [f32]) -> Result<()> {
+/// Decode one chunk sub-frame of at most `max` floats, appending to the
+/// recycled `out`; returns the float count (always > 0 — a zero-float
+/// sub-frame would stall the receiver's progress loop).
+fn decode_chunk_append(payload: &[u8], max: usize, out: &mut Vec<f32>) -> Result<usize> {
     anyhow::ensure!(payload.len() >= 4, "truncated chunk frame");
     let count = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
-    anyhow::ensure!(count == out.len(), "chunk size mismatch: got {count}, expected {}", out.len());
+    anyhow::ensure!(
+        count >= 1 && count <= max,
+        "chunk size mismatch: got {count}, expected 1..={max}"
+    );
     anyhow::ensure!(payload.len() - 4 == count * 4, "chunk frame size mismatch");
-    for (dst, src) in out.iter_mut().zip(payload[4..].chunks_exact(4)) {
+    out.extend(payload[4..].chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())));
+    Ok(count)
+}
+
+/// Decode one chunk sub-frame straight into the front of a buffer slice
+/// (ring allgather); returns the float count (always > 0).
+fn decode_chunk_fill(payload: &[u8], out: &mut [f32]) -> Result<usize> {
+    anyhow::ensure!(payload.len() >= 4, "truncated chunk frame");
+    let count = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+    anyhow::ensure!(
+        count >= 1 && count <= out.len(),
+        "chunk size mismatch: got {count}, expected 1..={}",
+        out.len()
+    );
+    anyhow::ensure!(payload.len() - 4 == count * 4, "chunk frame size mismatch");
+    for (dst, src) in out[..count].iter_mut().zip(payload[4..].chunks_exact(4)) {
         *dst = f32::from_le_bytes(src.try_into().unwrap());
     }
-    Ok(())
+    Ok(count)
 }
 
 #[cfg(test)]
@@ -1287,7 +1465,7 @@ mod tests {
         decode_scalars(&sbuf, &mut sout).unwrap();
         assert_eq!(sout, vals);
 
-        // chunk frames: exact-size contract both into a Vec and a slice
+        // chunk sub-frames append into the remaining window
         let chunk = [0.5f32, -1.5, 2.25];
         let mut cbuf = Vec::new();
         cbuf.extend_from_slice(&(chunk.len() as u32).to_le_bytes());
@@ -1295,17 +1473,141 @@ mod tests {
             cbuf.extend_from_slice(&v.to_le_bytes());
         }
         let mut cout = Vec::new();
-        decode_chunk(&cbuf, 3, &mut cout).unwrap();
+        assert_eq!(decode_chunk_append(&cbuf, 3, &mut cout).unwrap(), 3);
         assert_eq!(cout, chunk);
+        // a second sub-frame of the same logical chunk accumulates
+        assert_eq!(decode_chunk_append(&cbuf, 5, &mut cout).unwrap(), 3);
+        assert_eq!(cout.len(), 6);
         let mut cslice = [0.0f32; 3];
-        decode_chunk_into(&cbuf, &mut cslice).unwrap();
+        assert_eq!(decode_chunk_fill(&cbuf, &mut cslice).unwrap(), 3);
         assert_eq!(cslice, chunk);
-        assert!(decode_chunk(&cbuf, 2, &mut cout).is_err());
-        assert!(decode_chunk_into(&cbuf, &mut cslice[..2]).is_err());
+        // a sub-frame larger than the remaining window is rejected
+        cout.clear();
+        assert!(decode_chunk_append(&cbuf, 2, &mut cout).is_err());
+        assert!(decode_chunk_fill(&cbuf, &mut cslice[..2]).is_err());
 
         // corrupted frames are rejected
         assert!(decode_mat(&buf[..7], &mut out).is_err());
         assert!(decode_scalars(&sbuf[..3], &mut sout).is_err());
+    }
+
+    #[test]
+    fn ring_chunks_above_cap_are_split_and_reassembled() {
+        if !loopback_available() {
+            return;
+        }
+        // Per-rank chunks of len/2 floats exceed MAX_CHUNK_FLOATS, so
+        // every exchange travels as multiple sub-frames.
+        let world = 2;
+        let len = 2 * MAX_CHUNK_FLOATS + 5;
+        let inputs: Vec<Matrix> = (0..world)
+            .map(|i| Matrix::from_fn(1, len, |_, c| ((c % 97) as f32) * 0.5 + i as f32))
+            .collect();
+        let mut want = inputs[0].clone();
+        want.add_assign(&inputs[1]);
+        let inputs_ref = &inputs;
+        let results = run_tcp_mesh(world, 0xCAFE, move |rank, comm| {
+            let mut m = inputs_ref[rank].clone();
+            comm.allreduce_sum(&mut m).unwrap();
+            m
+        });
+        for (rank, res) in results.iter().enumerate() {
+            assert!(res.as_slice() == want.as_slice(), "rank {rank} diverged");
+        }
+    }
+
+    #[test]
+    fn tcp_deadline_fires_instead_of_hanging() {
+        if !loopback_available() {
+            return;
+        }
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::scope(|s| {
+            let hub = s.spawn(move || {
+                let comm =
+                    TcpComm::hub_with_timeout(listener, 2, 9, Duration::from_millis(300)).unwrap();
+                let mut comm = Collectives::Tcp(comm);
+                let t0 = Instant::now();
+                let mut m = Matrix::zeros(2, 2);
+                let err = comm.allreduce_sum(&mut m).unwrap_err();
+                (err, t0.elapsed())
+            });
+            // The leaf joins but never participates in the collective.
+            let leaf = s.spawn(move || {
+                let comm = TcpComm::leaf(&addr, 1, 2, 9).unwrap();
+                std::thread::sleep(Duration::from_millis(1500));
+                drop(comm);
+            });
+            let (err, elapsed) = hub.join().unwrap();
+            leaf.join().unwrap();
+            assert!(elapsed < Duration::from_secs(10), "deadline did not bound the wait");
+            assert_eq!(err.downcast_ref::<CommError>(), Some(&CommError::Timeout), "{err:#}");
+        });
+    }
+
+    #[test]
+    fn abort_frame_fails_peers_fast_with_peer_gone() {
+        if !loopback_available() {
+            return;
+        }
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::scope(|s| {
+            // The deadline is generous: the fast failure must come from
+            // the abort frame, not from a timeout.
+            let hub = s.spawn(move || {
+                let comm =
+                    TcpComm::hub_with_timeout(listener, 2, 9, Duration::from_secs(30)).unwrap();
+                let mut comm = Collectives::Tcp(comm);
+                let t0 = Instant::now();
+                let mut m = Matrix::zeros(2, 2);
+                let err = comm.allreduce_sum(&mut m).unwrap_err();
+                (err, t0.elapsed())
+            });
+            let leaf = s.spawn(move || {
+                let mut comm = TcpComm::leaf(&addr, 1, 2, 9).unwrap();
+                comm.abort();
+            });
+            let (err, elapsed) = hub.join().unwrap();
+            leaf.join().unwrap();
+            assert!(elapsed < Duration::from_secs(10), "abort did not fail the peer fast");
+            assert_eq!(err.downcast_ref::<CommError>(), Some(&CommError::PeerGone), "{err:#}");
+            assert!(format!("{err:#}").contains("abort"), "{err:#}");
+        });
+    }
+
+    #[test]
+    fn dead_peer_read_is_typed_peer_gone() {
+        if !loopback_available() {
+            return;
+        }
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::scope(|s| {
+            let hub = s.spawn(move || {
+                let comm =
+                    TcpComm::hub_with_timeout(listener, 2, 9, Duration::from_secs(30)).unwrap();
+                let mut comm = Collectives::Tcp(comm);
+                let mut m = Matrix::zeros(2, 2);
+                comm.allreduce_sum(&mut m).unwrap_err()
+            });
+            // The leaf vanishes without an abort frame (hard crash): the
+            // hub sees EOF on the next read.
+            let leaf = s.spawn(move || {
+                let comm = TcpComm::leaf(&addr, 1, 2, 9).unwrap();
+                drop(comm);
+            });
+            let err = hub.join().unwrap();
+            leaf.join().unwrap();
+            assert_eq!(err.downcast_ref::<CommError>(), Some(&CommError::PeerGone), "{err:#}");
+        });
+    }
+
+    #[test]
+    fn desync_errors_are_typed() {
+        let err = expect_op(OP_MAT, OP_BARRIER).unwrap_err();
+        assert_eq!(err.downcast_ref::<CommError>(), Some(&CommError::Desync), "{err:#}");
     }
 
     #[test]

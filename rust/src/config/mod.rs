@@ -201,6 +201,79 @@ impl Schedule {
     }
 }
 
+/// What a deterministically injected fault does when it triggers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Hard process death: a TCP rank exits without any teardown (peers
+    /// see EOF / reset); a local rank fails its thread (the world aborts).
+    Crash,
+    /// Sleep past the comm deadline so peers' timeouts fire.
+    Stall,
+    /// Drop every link without an abort frame — exercises the
+    /// EOF-detection path rather than the abort broadcast.
+    DropConn,
+}
+
+impl FaultKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "crash" => Ok(Self::Crash),
+            "stall" => Ok(Self::Stall),
+            "drop-conn" => Ok(Self::DropConn),
+            _ => anyhow::bail!("unknown fault kind '{s}' (crash|stall|drop-conn)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Crash => "crash",
+            Self::Stall => "stall",
+            Self::DropConn => "drop-conn",
+        }
+    }
+}
+
+/// Deterministic fault injection (`--fault "rank=1,iter=7,kind=crash"`):
+/// the named rank triggers the fault at the top of the named iteration,
+/// before any of that iteration's collectives.  Deterministic by
+/// construction, so supervisor tests can pin exact recovery behavior.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub rank: usize,
+    pub iter: usize,
+    pub kind: FaultKind,
+}
+
+impl FaultPlan {
+    /// Parse the `rank=R,iter=I,kind=crash|stall|drop-conn` grammar
+    /// (clauses in any order; all three required).
+    pub fn parse(s: &str) -> Result<Self> {
+        let (mut rank, mut iter, mut kind) = (None, None, None);
+        for part in s.split(',') {
+            let part = part.trim();
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("bad fault clause '{part}' (want key=value)"))?;
+            match k.trim() {
+                "rank" => rank = Some(v.trim().parse::<usize>()?),
+                "iter" => iter = Some(v.trim().parse::<usize>()?),
+                "kind" => kind = Some(FaultKind::parse(v.trim())?),
+                other => anyhow::bail!("unknown fault key '{other}' (rank|iter|kind)"),
+            }
+        }
+        Ok(FaultPlan {
+            rank: rank.ok_or_else(|| anyhow::anyhow!("--fault needs a rank= clause"))?,
+            iter: iter.ok_or_else(|| anyhow::anyhow!("--fault needs an iter= clause"))?,
+            kind: kind.ok_or_else(|| anyhow::anyhow!("--fault needs a kind= clause"))?,
+        })
+    }
+
+    /// The CLI/JSON spelling this plan parses back from.
+    pub fn spec(&self) -> String {
+        format!("rank={},iter={},kind={}", self.rank, self.iter, self.kind.name())
+    }
+}
+
 /// Numeric backend for the per-worker updates.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
@@ -286,6 +359,24 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Artifacts directory (PJRT backend).
     pub artifacts_dir: String,
+    /// Deadline in seconds on every collective blocking point
+    /// (`--comm-timeout`): a dead or wedged peer fails the run with a
+    /// typed `CommError` instead of hanging it.  Not part of the wire
+    /// fingerprint — ranks may run different deadlines.
+    pub comm_timeout: f64,
+    /// Write a GFTS01 training-state snapshot every N iterations
+    /// (`--checkpoint-every`, 0 = off).  Requires `checkpoint_path`.
+    pub checkpoint_every: usize,
+    /// Base path for training-state snapshots (`--checkpoint`); rank
+    /// `r > 0` writes `<path>.rank<r>`.
+    pub checkpoint_path: String,
+    /// Resume from a GFTS01 snapshot base path (`--resume`): restores
+    /// rank-local state and continues at the recorded iteration,
+    /// bit-identical to the uninterrupted run.
+    pub resume: String,
+    /// Deterministic fault injection for robustness testing (`--fault
+    /// "rank=1,iter=7,kind=crash"`, default none).
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for TrainConfig {
@@ -315,6 +406,11 @@ impl Default for TrainConfig {
             eval_every: 1,
             seed: 0,
             artifacts_dir: "artifacts".into(),
+            comm_timeout: 300.0,
+            checkpoint_every: 0,
+            checkpoint_path: String::new(),
+            resume: String::new(),
+            fault: None,
         }
     }
 }
@@ -408,6 +504,24 @@ impl TrainConfig {
         anyhow::ensure!(self.iters >= 1, "need at least one iteration");
         anyhow::ensure!(self.eval_every >= 1, "eval_every must be >= 1");
         anyhow::ensure!((0.0..1.0).contains(&self.momentum), "momentum in [0,1)");
+        anyhow::ensure!(
+            self.comm_timeout > 0.0 && self.comm_timeout.is_finite(),
+            "--comm-timeout must be a positive number of seconds"
+        );
+        if self.checkpoint_every > 0 {
+            anyhow::ensure!(
+                !self.checkpoint_path.is_empty(),
+                "--checkpoint-every needs --checkpoint <path>"
+            );
+        }
+        if let Some(f) = &self.fault {
+            anyhow::ensure!(
+                f.rank < self.world(),
+                "--fault rank {} out of range for world size {}",
+                f.rank,
+                self.world()
+            );
+        }
         Ok(())
     }
 
@@ -447,6 +561,11 @@ impl TrainConfig {
                 "eval_every" => c.eval_every = val.as_usize()?,
                 "seed" => c.seed = val.as_f64()? as u64,
                 "artifacts_dir" => c.artifacts_dir = val.as_str()?.to_string(),
+                "comm_timeout" => c.comm_timeout = val.as_f64()?,
+                "checkpoint_every" => c.checkpoint_every = val.as_usize()?,
+                "checkpoint_path" => c.checkpoint_path = val.as_str()?.to_string(),
+                "resume" => c.resume = val.as_str()?.to_string(),
+                "fault" => c.fault = Some(FaultPlan::parse(val.as_str()?)?),
                 other => anyhow::bail!("unknown config key '{other}'"),
             }
         }
@@ -537,6 +656,21 @@ impl TrainConfig {
         }
         if let Some(v) = args.get("artifacts") {
             self.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = args.get("comm-timeout") {
+            self.comm_timeout = v.parse()?;
+        }
+        if let Some(v) = args.get("checkpoint-every") {
+            self.checkpoint_every = v.parse()?;
+        }
+        if let Some(v) = args.get("checkpoint") {
+            self.checkpoint_path = v.to_string();
+        }
+        if let Some(v) = args.get("resume") {
+            self.resume = v.to_string();
+        }
+        if let Some(v) = args.get("fault") {
+            self.fault = Some(FaultPlan::parse(v)?);
         }
         self.validate()
     }
@@ -910,6 +1044,77 @@ mod tests {
         let mut d = TrainConfig::default();
         d.workers += 1; // world size shapes the shards
         assert_ne!(a.spmd_fingerprint(), d.spmd_fingerprint());
+    }
+
+    #[test]
+    fn fault_plan_grammar() {
+        let f = FaultPlan::parse("rank=1,iter=7,kind=crash").unwrap();
+        assert_eq!(f, FaultPlan { rank: 1, iter: 7, kind: FaultKind::Crash });
+        assert_eq!(f.spec(), "rank=1,iter=7,kind=crash");
+        // clauses may come in any order, with whitespace
+        let f = FaultPlan::parse("kind=drop-conn, rank=0, iter=2").unwrap();
+        assert_eq!(f, FaultPlan { rank: 0, iter: 2, kind: FaultKind::DropConn });
+        assert_eq!(FaultPlan::parse("rank=1,iter=7,kind=stall").unwrap().kind, FaultKind::Stall);
+        assert!(FaultPlan::parse("rank=1,iter=7").is_err()); // missing kind
+        assert!(FaultPlan::parse("rank=1,iter=7,kind=melt").is_err());
+        assert!(FaultPlan::parse("rank=1,iter=7,when=now,kind=crash").is_err());
+        assert!(FaultPlan::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn fault_tolerance_knobs_parse_and_validate() {
+        let mut c = TrainConfig::default();
+        let args = Args::parse_from(
+            [
+                "--comm-timeout",
+                "5.5",
+                "--checkpoint",
+                "ck.bin",
+                "--checkpoint-every",
+                "3",
+                "--resume",
+                "ck.bin",
+                "--fault",
+                "rank=1,iter=4,kind=stall",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.comm_timeout, 5.5);
+        assert_eq!(c.checkpoint_every, 3);
+        assert_eq!(c.checkpoint_path, "ck.bin");
+        assert_eq!(c.resume, "ck.bin");
+        assert_eq!(c.fault, Some(FaultPlan { rank: 1, iter: 4, kind: FaultKind::Stall }));
+        // None of these knobs shape the wire protocol: a resumed or
+        // checkpointing relaunch must join (or reproduce) the same
+        // logical world, so the fingerprint must not move.
+        assert_eq!(c.spmd_fingerprint(), TrainConfig::default().spmd_fingerprint());
+
+        // JSON spellings
+        let c = TrainConfig::from_json(
+            &Json::parse(
+                r#"{"comm_timeout": 2.0, "checkpoint_every": 5,
+                    "checkpoint_path": "a.ck", "fault": "rank=0,iter=1,kind=crash"}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.comm_timeout, 2.0);
+        assert_eq!(c.checkpoint_every, 5);
+        assert_eq!(c.fault.unwrap().kind, FaultKind::Crash);
+
+        // invalid: checkpointing without a path, non-positive deadline,
+        // fault rank outside the world
+        let mut bad = TrainConfig::default();
+        bad.checkpoint_every = 2;
+        assert!(bad.validate().is_err());
+        let mut bad = TrainConfig::default();
+        bad.comm_timeout = 0.0;
+        assert!(bad.validate().is_err());
+        let mut bad = TrainConfig::default();
+        bad.fault = Some(FaultPlan { rank: 9, iter: 0, kind: FaultKind::Crash });
+        assert!(bad.validate().is_err());
     }
 
     #[test]

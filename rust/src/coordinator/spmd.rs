@@ -55,11 +55,25 @@
 //! schedule moves them into `PendingOp`s and back instead of copying),
 //! and the `Local` transport's ledger slots are recycled too
 //! (`tests/alloc_regression.rs`).
+//!
+//! ## Fault tolerance
+//!
+//! With `--checkpoint-every N --checkpoint path` every rank writes an
+//! atomic `GFTS01` snapshot of its full training state (weight replica,
+//! shard `z`/`a`/λ/duals, momentum history, iteration count, and the
+//! config fingerprint) at the end of every Nth iteration; `--resume
+//! path` restores it and continues **bit-identically** to the
+//! uninterrupted run on every transport × schedule × allreduce
+//! combination (pinned by `tests/fault_tolerance.rs`).  `--fault
+//! rank=R,iter=I,kind=crash|stall|drop-conn` injects a deterministic
+//! failure at the top of iteration `I` on rank `R`, before any of that
+//! iteration's collectives — the supervisor-restart story rides on the
+//! typed deadline errors the transports raise when a peer vanishes.
 
 use std::sync::atomic::Ordering;
 
 use crate::cluster::{Collectives, WAIT_BUCKETS};
-use crate::config::{InitScheme, MultiplierMode, Schedule, TrainConfig};
+use crate::config::{FaultKind, InitScheme, MultiplierMode, Schedule, TrainConfig};
 use crate::coordinator::backend::{BackendKind, WorkerBackendImpl};
 use crate::coordinator::trainer::{
     allreduce_bytes_per_iter_for, broadcast_bytes_per_iter, TrainOutcome, TrainStats,
@@ -70,7 +84,7 @@ use crate::linalg::{
     a_update_inverse, gemm_nn, gemm_tn, weight_solve_into, Matrix, WeightSolveScratch,
 };
 use crate::metrics::{CurvePoint, Recorder, Stopwatch};
-use crate::nn::Mlp;
+use crate::nn::{load_snapshot, save_snapshot, Mlp, TrainSnapshot};
 use crate::rng::Rng;
 use crate::Result;
 
@@ -290,7 +304,33 @@ pub fn train_rank(
     let mut reached: Option<(usize, f64)> = None;
     let mut opt_s = 0.0f64;
 
-    for it in 0..cfg.iters {
+    // Resume: restore this rank's state from its GFTS01 snapshot and
+    // continue from the recorded iteration.  Everything not in the
+    // snapshot (`aat1_cache`, recycled buffers) is recomputed
+    // deterministically, so the continuation is bit-identical to the
+    // uninterrupted run.
+    let mut start_iter = 0usize;
+    if !cfg.resume.is_empty() {
+        let path = rank_path(&cfg.resume, rank);
+        let snap = load_snapshot(&path)?;
+        start_iter = snap.iter as usize;
+        anyhow::ensure!(
+            start_iter <= cfg.iters,
+            "snapshot {path} is at iteration {start_iter}, past --iters {}",
+            cfg.iters
+        );
+        restore_rank_state(cfg, &mut st, snap, &path)?;
+    }
+
+    for it in start_iter..cfg.iters {
+        // Deterministic fault injection fires before any of this
+        // iteration's collectives, so peers block on a vanished rank and
+        // must fail through their deadlines.
+        if let Some(f) = &cfg.fault {
+            if f.rank == rank && f.iter == it {
+                inject_fault(cfg, comm, rank, it, f.kind)?;
+            }
+        }
         let sw = Stopwatch::start();
         let leader_s = iteration(cfg, &mut st, &mut backend, comm, it)?;
         let iter_s = sw.elapsed_s();
@@ -298,6 +338,13 @@ pub fn train_rank(
         stats.leader_seconds += leader_s;
         stats.worker_seconds += iter_s - leader_s;
         stats.iters_run = it + 1;
+
+        // End-of-iteration snapshot (atomic tmp+rename per rank).  Off
+        // the hot path unless requested, so the steady-state
+        // zero-allocation pin is unaffected.
+        if cfg.checkpoint_every > 0 && (it + 1) % cfg.checkpoint_every == 0 {
+            write_checkpoint(cfg, &st, rank, world, it + 1)?;
+        }
 
         if it % cfg.eval_every == 0 || it + 1 == cfg.iters {
             // Σ over ranks of (loss, correct, n) — rank-order fold, so the
@@ -391,6 +438,138 @@ pub fn train_rank(
         stats,
         reached_target_at: reached,
     })
+}
+
+/// Per-rank snapshot path: rank 0 owns the base path, every other rank
+/// appends a `.rank{r}` suffix — so one `--checkpoint ck` / `--resume
+/// ck` value names the whole world's snapshot family.
+pub fn rank_path(base: &str, rank: usize) -> String {
+    if rank == 0 {
+        base.to_string()
+    } else {
+        format!("{base}.rank{rank}")
+    }
+}
+
+/// Validate a loaded [`TrainSnapshot`] against this run's configuration
+/// and swap its sections into the rank state.  Every check runs before
+/// any state moves, so a mismatched snapshot leaves `st` untouched.
+fn restore_rank_state(
+    cfg: &TrainConfig,
+    st: &mut RankState,
+    snap: TrainSnapshot,
+    path: &str,
+) -> Result<()> {
+    let fp = cfg.spmd_fingerprint();
+    anyhow::ensure!(
+        snap.fingerprint == fp,
+        "snapshot {path} was written by a different run configuration \
+         (fingerprint {:#018x}, this run {fp:#018x})",
+        snap.fingerprint
+    );
+    anyhow::ensure!(
+        snap.rank as usize == st.rank && snap.world as usize == cfg.world(),
+        "snapshot {path} is for rank {}/{} but this process is rank {}/{}",
+        snap.rank,
+        snap.world,
+        st.rank,
+        cfg.world()
+    );
+    check_section(&snap.weights, &st.weights, "weights", path)?;
+    check_section(&snap.acts, &st.acts, "activation", path)?;
+    check_section(&snap.zs, &st.zs, "z", path)?;
+    anyhow::ensure!(
+        snap.lam.len() == 1 && snap.lam[0].shape() == st.lam.shape(),
+        "snapshot {path}: lambda section does not match this run's shapes"
+    );
+    check_section(&snap.u, &st.u, "u-dual", path)?;
+    check_section(&snap.v, &st.v, "v-dual", path)?;
+    if let Some(prev) = &snap.prev_weights {
+        check_section(prev, &st.weights, "momentum-history", path)?;
+    }
+    st.weights = snap.weights;
+    st.acts = snap.acts;
+    st.zs = snap.zs;
+    st.lam = snap.lam.into_iter().next().expect("length checked above");
+    st.u = snap.u;
+    st.v = snap.v;
+    st.prev_weights = snap.prev_weights;
+    Ok(())
+}
+
+fn check_section(got: &[Matrix], want: &[Matrix], what: &str, path: &str) -> Result<()> {
+    anyhow::ensure!(
+        got.len() == want.len() && got.iter().zip(want).all(|(g, w)| g.shape() == w.shape()),
+        "snapshot {path}: {what} section does not match this run's shapes"
+    );
+    Ok(())
+}
+
+/// Write this rank's GFTS01 snapshot of the state *after* `iters_done`
+/// iterations (atomic tmp+rename via [`save_snapshot`]).  The recycled
+/// collective buffers and the layer-1 input-Gram cache are deliberately
+/// not captured: both are recomputed deterministically on resume.
+fn write_checkpoint(
+    cfg: &TrainConfig,
+    st: &RankState,
+    rank: usize,
+    world: usize,
+    iters_done: usize,
+) -> Result<()> {
+    let snap = TrainSnapshot {
+        fingerprint: cfg.spmd_fingerprint(),
+        iter: iters_done as u64,
+        rank: rank as u32,
+        world: world as u32,
+        weights: st.weights.clone(),
+        acts: st.acts.clone(),
+        zs: st.zs.clone(),
+        lam: vec![st.lam.clone()],
+        u: st.u.clone(),
+        v: st.v.clone(),
+        prev_weights: st.prev_weights.clone(),
+    };
+    save_snapshot(&rank_path(&cfg.checkpoint_path, rank), &snap)
+}
+
+/// Fire a deterministic fault (`--fault rank=R,iter=I,kind=K`):
+///
+/// * `crash` — over TCP the process exits hard with status 101, no
+///   abort frame and no unwinding, which is what a SIGKILL'd rank looks
+///   like on the wire; an in-process rank cannot exit(2) without taking
+///   the whole world's process down, so it errors out through the
+///   abort-broadcast path instead.
+/// * `stall` — sleep past the comm deadline, then continue; the *peers'*
+///   deadlines fire first and this rank finds a torn-down world.
+/// * `drop-conn` — close the TCP links mid-protocol without the ABORT
+///   courtesy frame (peers see a raw EOF → typed `PeerGone`), then
+///   error out locally.
+fn inject_fault(
+    cfg: &TrainConfig,
+    comm: &mut Collectives,
+    rank: usize,
+    it: usize,
+    kind: FaultKind,
+) -> Result<()> {
+    match kind {
+        FaultKind::Crash => {
+            if matches!(comm, Collectives::Tcp(_)) {
+                eprintln!("fault injection: rank {rank} crash at iter {it}");
+                std::process::exit(101);
+            }
+            anyhow::bail!("fault injection: rank {rank} crash at iter {it}")
+        }
+        FaultKind::Stall => {
+            std::thread::sleep(std::time::Duration::from_secs_f64(cfg.comm_timeout + 0.5));
+            Ok(())
+        }
+        FaultKind::DropConn => {
+            if let Collectives::Tcp(tc) = comm {
+                tc.drop_links();
+            }
+            anyhow::bail!("fault injection: rank {rank} dropped its connections at iter {it}")
+        }
+    }
 }
 
 /// One full Algorithm-1 sweep on this rank, on the configured schedule.
@@ -821,5 +1000,17 @@ impl ShardedObjective {
             }
         }
         Ok((total, grads.expect("at least one rank")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::rank_path;
+
+    #[test]
+    fn rank_path_suffixes_nonzero_ranks() {
+        assert_eq!(rank_path("ck", 0), "ck");
+        assert_eq!(rank_path("ck", 1), "ck.rank1");
+        assert_eq!(rank_path("out/snap.bin", 3), "out/snap.bin.rank3");
     }
 }

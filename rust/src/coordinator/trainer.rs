@@ -177,8 +177,10 @@ impl AdmmTrainer {
                 let cfg = &self.cfg;
                 let (train, test) = (&self.train, &self.test);
                 let opts_ref = &opts;
+                let timeout = std::time::Duration::from_secs_f64(cfg.comm_timeout);
+                let world = Collectives::local_world_with_timeout(cfg.workers, timeout);
                 let mut results: Vec<Result<TrainOutcome>> = std::thread::scope(|s| {
-                    let handles: Vec<_> = Collectives::local_world(cfg.workers)
+                    let handles: Vec<_> = world
                         .into_iter()
                         .map(|mut comm| {
                             s.spawn(move || {
@@ -227,12 +229,13 @@ impl AdmmTrainer {
                     ^ opts.fingerprint()
                     ^ self.train.fingerprint().rotate_left(1)
                     ^ self.test.fingerprint().rotate_left(33);
-                let mut comm = Collectives::Tcp(TcpComm::connect(
+                let mut comm = Collectives::Tcp(TcpComm::connect_with_timeout(
                     self.cfg.rank,
                     self.cfg.world_size,
                     &self.cfg.peers,
                     fp,
                     self.cfg.allreduce,
+                    std::time::Duration::from_secs_f64(self.cfg.comm_timeout),
                 )?);
                 let res = spmd::train_rank(&self.cfg, &mut comm, &self.train, &self.test, &opts);
                 if res.is_err() {

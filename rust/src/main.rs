@@ -76,7 +76,15 @@ fn print_usage() {
          --target-acc A   stop at test metric A (accuracy up / mse down)\n  \
          --out curve.csv  write the convergence curve (rank 0 only)\n  \
          --penalty        track feasibility penalties\n  \
-         --quiet          suppress per-eval lines\n\n\
+         --quiet          suppress per-eval lines\n  \
+         --comm-timeout S        deadline (seconds) on every collective blocking\n  \
+         \x20                point (default 300; a dead peer fails the world fast)\n  \
+         --checkpoint path --checkpoint-every N   write an atomic per-rank GFTS01\n  \
+         \x20                training snapshot every N iterations\n  \
+         --resume path    restore rank state from a snapshot family and continue\n  \
+         \x20                (bit-identical to the uninterrupted run)\n  \
+         --fault rank=R,iter=I,kind=crash|stall|drop-conn   deterministic fault\n  \
+         \x20                injection for robustness testing\n\n\
          baseline: --method sgd|cg|lbfgs --lr --batch --bmomentum --epochs --max-iters\n\
          scale:    --cores 1,2,4,8 --model-cores 64,1024,7200 --target-acc A\n\
          gen-data: --dataset blobs|svhn|higgs|regress|multiblobs --samples N\n\
@@ -201,7 +209,20 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(t) = args.get("target-acc") {
         trainer.target_acc = Some(t.parse()?);
     }
-    let out = trainer.train()?;
+    let out = match trainer.train() {
+        Ok(out) => out,
+        Err(e) => {
+            // One greppable line for supervisors (CI greps for it), with
+            // the typed comm-error kind when one is in the chain.
+            let kind = e
+                .chain()
+                .find_map(|c| c.downcast_ref::<gradfree_admm::cluster::CommError>())
+                .map(|k| format!(" [{k}]"))
+                .unwrap_or_default();
+            eprintln!("train aborted:{kind} {e:#}");
+            return Err(e);
+        }
+    };
     if !is_rank0 {
         // Non-zero ranks hold the same replicated weights but no curve;
         // checkpoint/CSV writing is rank 0's job.

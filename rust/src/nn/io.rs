@@ -15,6 +15,19 @@
 //! hinge, so the reader defaults them to [`Problem::BinaryHinge`].
 //! Writers always emit `GFADMM02`.
 //!
+//! `GFTS01` ([`TrainSnapshot`]): a **training-state** snapshot for
+//! checkpoint/resume — one file per rank holding the replicated weights,
+//! this rank's activation/output shards (a, z), the output-layer
+//! multiplier λ, the classical-mode duals u/v, the momentum state, the
+//! iteration counter, and the launch config's SPMD fingerprint.  Because
+//! the whole stack is deterministic, restoring a snapshot and continuing
+//! is **bit-identical** to the uninterrupted run (pinned by
+//! `tests/fault_tolerance.rs`).
+//!
+//! All writers go through [`write_atomic`] (write `<path>.tmp`, then
+//! rename): a crash mid-save leaves the previous file intact, never a
+//! truncated one.
+//!
 //! ## SPMD discipline
 //!
 //! Distributed (`--transport tcp`) training replicates the final weights
@@ -110,14 +123,164 @@ pub fn deserialize_model(bytes: &[u8]) -> Result<(Vec<Matrix>, Activation, Probl
     Ok((ws, act, problem))
 }
 
-pub fn save_model(path: &str, ws: &[Matrix], act: Activation, problem: Problem) -> Result<()> {
-    std::fs::write(path, serialize_model(ws, act, problem))?;
+/// Write `bytes` to `path` atomically: write `<path>.tmp` in the same
+/// directory, then rename over the target.  A crash mid-write leaves
+/// either the previous file or a stray `.tmp` — never a truncated
+/// target, so a served model or resume snapshot stays loadable.
+pub fn write_atomic(path: &str, bytes: &[u8]) -> Result<()> {
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, bytes).map_err(|e| anyhow::anyhow!("writing {tmp}: {e}"))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| anyhow::anyhow!("renaming {tmp} over {path}: {e}"))?;
     Ok(())
+}
+
+pub fn save_model(path: &str, ws: &[Matrix], act: Activation, problem: Problem) -> Result<()> {
+    write_atomic(path, &serialize_model(ws, act, problem))
 }
 
 pub fn load_model(path: &str) -> Result<(Vec<Matrix>, Activation, Problem)> {
     let bytes = std::fs::read(path).map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
     deserialize_model(&bytes)
+}
+
+const MAGIC_TS: &[u8; 6] = b"GFTS01";
+
+/// One rank's complete training state at an iteration boundary (the
+/// `GFTS01` format): everything `coordinator/spmd.rs` needs to continue
+/// a run bit-identically.  Scratch buffers and the iteration-invariant
+/// `aat1_cache` are deliberately absent — they are recomputed
+/// deterministically on resume.
+#[derive(Clone, Debug)]
+pub struct TrainSnapshot {
+    /// `TrainConfig::spmd_fingerprint()` of the launching config; resume
+    /// refuses a snapshot whose fingerprint differs from the relaunch.
+    pub fingerprint: u64,
+    /// Iterations fully completed (resume continues at this index).
+    pub iter: u64,
+    pub rank: u32,
+    pub world: u32,
+    /// Replicated weights `W_1..W_L`.
+    pub weights: Vec<Matrix>,
+    /// This rank's hidden-activation shards `a_1..a_{L-1}`.
+    pub acts: Vec<Matrix>,
+    /// This rank's pre-activation shards `z_1..z_L`.
+    pub zs: Vec<Matrix>,
+    /// Output-layer Bregman multiplier shard λ (one matrix; a uniform
+    /// section keeps the codec regular).
+    pub lam: Vec<Matrix>,
+    /// Classical-mode duals (empty under Bregman / no-multiplier modes).
+    pub u: Vec<Matrix>,
+    pub v: Vec<Matrix>,
+    /// Rank 0's heavy-ball momentum state; `None` until the first
+    /// momentum application (and always on ranks > 0).
+    pub prev_weights: Option<Vec<Matrix>>,
+}
+
+/// Serialize a training snapshot (`GFTS01`).
+pub fn serialize_snapshot(s: &TrainSnapshot) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC_TS);
+    out.extend_from_slice(&s.fingerprint.to_le_bytes());
+    out.extend_from_slice(&s.iter.to_le_bytes());
+    out.extend_from_slice(&s.rank.to_le_bytes());
+    out.extend_from_slice(&s.world.to_le_bytes());
+    out.push(s.prev_weights.is_some() as u8);
+    for sec in [&s.weights, &s.acts, &s.zs, &s.lam, &s.u, &s.v] {
+        write_section(&mut out, sec);
+    }
+    if let Some(prev) = &s.prev_weights {
+        write_section(&mut out, prev);
+    }
+    out
+}
+
+fn write_section(out: &mut Vec<u8>, ms: &[Matrix]) {
+    out.extend_from_slice(&(ms.len() as u32).to_le_bytes());
+    for m in ms {
+        out.extend_from_slice(&(m.rows() as u32).to_le_bytes());
+        out.extend_from_slice(&(m.cols() as u32).to_le_bytes());
+        for v in m.as_slice() {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Inverse of [`serialize_snapshot`]; every length, magic and shape is
+/// validated so a truncated or corrupt snapshot loads as a descriptive
+/// `Err`, never a panic.
+pub fn deserialize_snapshot(bytes: &[u8]) -> Result<TrainSnapshot> {
+    anyhow::ensure!(bytes.len() >= 31, "truncated training snapshot");
+    anyhow::ensure!(&bytes[..6] == MAGIC_TS, "bad magic (not a gradfree training snapshot)");
+    let mut pos = 6usize;
+    let fingerprint = snap_u64(bytes, &mut pos)?;
+    let iter = snap_u64(bytes, &mut pos)?;
+    let rank = snap_u32(bytes, &mut pos)?;
+    let world = snap_u32(bytes, &mut pos)?;
+    anyhow::ensure!(pos < bytes.len(), "truncated training snapshot");
+    let has_prev = match bytes[pos] {
+        0 => false,
+        1 => true,
+        other => anyhow::bail!("bad momentum-state flag {other}"),
+    };
+    pos += 1;
+    let weights = read_section(bytes, &mut pos)?;
+    let acts = read_section(bytes, &mut pos)?;
+    let zs = read_section(bytes, &mut pos)?;
+    let lam = read_section(bytes, &mut pos)?;
+    let u = read_section(bytes, &mut pos)?;
+    let v = read_section(bytes, &mut pos)?;
+    let prev_weights = if has_prev { Some(read_section(bytes, &mut pos)?) } else { None };
+    anyhow::ensure!(pos == bytes.len(), "trailing bytes in training snapshot");
+    Ok(TrainSnapshot { fingerprint, iter, rank, world, weights, acts, zs, lam, u, v, prev_weights })
+}
+
+fn snap_u32(bytes: &[u8], pos: &mut usize) -> Result<u32> {
+    anyhow::ensure!(bytes.len() >= *pos + 4, "truncated training snapshot");
+    let v = u32::from_le_bytes(bytes[*pos..*pos + 4].try_into().unwrap());
+    *pos += 4;
+    Ok(v)
+}
+
+fn snap_u64(bytes: &[u8], pos: &mut usize) -> Result<u64> {
+    anyhow::ensure!(bytes.len() >= *pos + 8, "truncated training snapshot");
+    let v = u64::from_le_bytes(bytes[*pos..*pos + 8].try_into().unwrap());
+    *pos += 8;
+    Ok(v)
+}
+
+fn read_section(bytes: &[u8], pos: &mut usize) -> Result<Vec<Matrix>> {
+    let count = snap_u32(bytes, pos)? as usize;
+    anyhow::ensure!(count < 1024, "implausible snapshot matrix count {count}");
+    let mut ms = Vec::with_capacity(count);
+    for _ in 0..count {
+        let rows = snap_u32(bytes, pos)? as usize;
+        let cols = snap_u32(bytes, pos)? as usize;
+        // Checked like the model loader: a crafted 2^31 x 2^31 header
+        // must not wrap the byte count past the truncation check.
+        let need = rows
+            .checked_mul(cols)
+            .and_then(|e| e.checked_mul(4))
+            .ok_or_else(|| anyhow::anyhow!("implausible snapshot matrix shape {rows}x{cols}"))?;
+        anyhow::ensure!(bytes.len() - *pos >= need, "truncated snapshot matrix data");
+        let data: Vec<f32> = bytes[*pos..*pos + need]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        *pos += need;
+        ms.push(Matrix::from_vec(rows, cols, data));
+    }
+    Ok(ms)
+}
+
+/// Atomically write a rank's training snapshot (`GFTS01`).
+pub fn save_snapshot(path: &str, s: &TrainSnapshot) -> Result<()> {
+    write_atomic(path, &serialize_snapshot(s))
+}
+
+pub fn load_snapshot(path: &str) -> Result<TrainSnapshot> {
+    let bytes = std::fs::read(path).map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    deserialize_snapshot(&bytes).map_err(|e| e.context(format!("loading snapshot {path}")))
 }
 
 /// Hand-assemble legacy `GFADMM01` bytes (shared by the back-compat
@@ -208,6 +371,101 @@ mod tests {
         let mut bad_problem = serialize_model(&ws, Activation::Relu, Problem::BinaryHinge);
         bad_problem[9] = 77; // unknown problem code
         assert!(deserialize_model(&bad_problem).is_err());
+    }
+
+    #[test]
+    fn snapshot_roundtrip_preserves_every_section_bit_for_bit() {
+        let mut rng = Rng::seed_from(3);
+        let snap = TrainSnapshot {
+            fingerprint: 0xABCD_EF01_2345_6789,
+            iter: 7,
+            rank: 1,
+            world: 4,
+            weights: vec![Matrix::randn(3, 5, &mut rng), Matrix::randn(1, 3, &mut rng)],
+            acts: vec![Matrix::randn(3, 4, &mut rng)],
+            zs: vec![Matrix::randn(3, 4, &mut rng), Matrix::randn(1, 4, &mut rng)],
+            lam: vec![Matrix::randn(1, 4, &mut rng)],
+            u: Vec::new(),
+            v: Vec::new(),
+            prev_weights: Some(vec![
+                Matrix::randn(3, 5, &mut rng),
+                Matrix::randn(1, 3, &mut rng),
+            ]),
+        };
+        let bytes = serialize_snapshot(&snap);
+        let got = deserialize_snapshot(&bytes).unwrap();
+        assert_eq!(got.fingerprint, snap.fingerprint);
+        assert_eq!((got.iter, got.rank, got.world), (7, 1, 4));
+        let pairs = [
+            (&snap.weights, &got.weights),
+            (&snap.acts, &got.acts),
+            (&snap.zs, &got.zs),
+            (&snap.lam, &got.lam),
+            (snap.prev_weights.as_ref().unwrap(), got.prev_weights.as_ref().unwrap()),
+        ];
+        for (want, have) in pairs {
+            assert_eq!(want.len(), have.len());
+            for (a, b) in want.iter().zip(have.iter()) {
+                assert_eq!(a.shape(), b.shape());
+                assert_eq!(a.as_slice(), b.as_slice());
+            }
+        }
+        assert!(got.u.is_empty() && got.v.is_empty());
+
+        // without momentum state the prev section is absent entirely
+        let mut no_prev = snap;
+        no_prev.prev_weights = None;
+        let got = deserialize_snapshot(&serialize_snapshot(&no_prev)).unwrap();
+        assert!(got.prev_weights.is_none());
+    }
+
+    #[test]
+    fn snapshot_rejects_corruption() {
+        let snap = TrainSnapshot {
+            fingerprint: 5,
+            iter: 2,
+            rank: 0,
+            world: 1,
+            weights: vec![Matrix::zeros(2, 2)],
+            acts: Vec::new(),
+            zs: vec![Matrix::zeros(1, 2)],
+            lam: vec![Matrix::zeros(1, 2)],
+            u: Vec::new(),
+            v: Vec::new(),
+            prev_weights: None,
+        };
+        let bytes = serialize_snapshot(&snap);
+        deserialize_snapshot(&bytes).unwrap();
+        // truncation anywhere fails descriptively, never panics
+        for cut in [0, 5, 20, 30, bytes.len() - 1] {
+            let err = deserialize_snapshot(&bytes[..cut]).unwrap_err().to_string();
+            assert!(
+                err.contains("truncated") || err.contains("magic"),
+                "cut {cut}: {err}"
+            );
+        }
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(deserialize_snapshot(&bad).unwrap_err().to_string().contains("magic"));
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(deserialize_snapshot(&trailing).is_err());
+        let mut badflag = bytes.clone();
+        badflag[30] = 7; // the momentum-state flag byte
+        assert!(deserialize_snapshot(&badflag).is_err());
+    }
+
+    #[test]
+    fn atomic_write_replaces_never_truncates() {
+        let path_buf =
+            std::env::temp_dir().join(format!("gf_atomic_test_{}.bin", std::process::id()));
+        let path = path_buf.to_str().unwrap().to_string();
+        write_atomic(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        write_atomic(&path, b"second-longer").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second-longer");
+        assert!(!std::path::Path::new(&format!("{path}.tmp")).exists());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -455,4 +455,7 @@ mod tests {
 }
 
 pub mod io;
-pub use io::{deserialize_model, load_model, save_model, serialize_model};
+pub use io::{
+    deserialize_model, deserialize_snapshot, load_model, load_snapshot, save_model,
+    save_snapshot, serialize_model, serialize_snapshot, write_atomic, TrainSnapshot,
+};

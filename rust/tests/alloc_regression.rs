@@ -252,8 +252,13 @@ fn steady_state_hot_loops_allocate_nothing() {
     // Warm the ledger's recycled deposit buffers with two rounds, then
     // arm the counter (rank 0, inside barrier brackets so every rank sits
     // in a collective while the flag flips) and run three more rounds:
-    // the deposit → fold → recycle cycle must not allocate.
-    let worlds = gradfree_admm::cluster::Collectives::local_world(4);
+    // the deposit → fold → recycle cycle must not allocate.  An explicit
+    // short deadline pins that the deadline checks on the condvar waits
+    // (Instant arithmetic only) stay allocation-free too.
+    let worlds = gradfree_admm::cluster::Collectives::local_world_with_timeout(
+        4,
+        std::time::Duration::from_secs(5),
+    );
     std::thread::scope(|s| {
         for (rank, mut comm) in worlds.into_iter().enumerate() {
             s.spawn(move || {
@@ -291,7 +296,10 @@ fn steady_state_hot_loops_allocate_nothing() {
     // different shapes) plus the minv/W broadcast pair — exactly the
     // per-layer op sequence of coordinator/spmd.rs's pipelined sweep.
     // Buffers move into the PendingOps and back; ledger deposits recycle.
-    let worlds = gradfree_admm::cluster::Collectives::local_world(3);
+    let worlds = gradfree_admm::cluster::Collectives::local_world_with_timeout(
+        3,
+        std::time::Duration::from_secs(5),
+    );
     std::thread::scope(|s| {
         for (rank, mut comm) in worlds.into_iter().enumerate() {
             s.spawn(move || {
