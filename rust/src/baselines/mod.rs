@@ -105,6 +105,7 @@ impl<'a> EvalHarness<'a> {
         self.recorder.push(CurvePoint {
             iter,
             wall_s: self.sw_opt,
+            iter_ms: 0.0,
             train_loss,
             test_acc: metric,
             penalty: f64::NAN,
@@ -189,6 +190,7 @@ mod tests {
                 r.push(CurvePoint {
                     iter: 0,
                     wall_s: 1.0,
+                    iter_ms: 0.0,
                     train_loss: 0.0,
                     test_acc: best_acc,
                     penalty: f64::NAN,
@@ -218,6 +220,7 @@ mod tests {
                     r.push(CurvePoint {
                         iter: 0,
                         wall_s: 1.0,
+                        iter_ms: 0.0,
                         train_loss: 0.0,
                         test_acc: if p == 20 { 0.9 } else { 0.5 },
                         penalty: f64::NAN,

@@ -65,6 +65,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::AllreduceAlgo;
 use crate::linalg::Matrix;
+use crate::trace::{Hist, Phase, Tracer};
 use crate::Result;
 
 /// Deadline applied to every blocking point when the caller does not pick
@@ -170,13 +171,28 @@ pub enum WaitKind {
 /// intervals.  Blocking collectives record their whole call; nonblocking
 /// ops record only the `wait()` — so under the pipelined schedule these
 /// numbers measure exactly the blocking the overlap failed to hide.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct WaitStats {
     pub allreduce_s: f64,
     pub broadcast_s: f64,
     pub scalar_s: f64,
     pub barrier_s: f64,
-    pub hist: [u64; WAIT_BUCKETS],
+    /// Blocked-interval latency histogram over [`WAIT_BUCKET_EDGES_US`]
+    /// (a [`trace::Hist`](crate::trace::Hist) — the shared bucketing that
+    /// also backs the `MetricsRegistry` aggregation).
+    pub hist: Hist,
+}
+
+impl Default for WaitStats {
+    fn default() -> Self {
+        WaitStats {
+            allreduce_s: 0.0,
+            broadcast_s: 0.0,
+            scalar_s: 0.0,
+            barrier_s: 0.0,
+            hist: Hist::new(&WAIT_BUCKET_EDGES_US),
+        }
+    }
 }
 
 impl WaitStats {
@@ -192,15 +208,17 @@ impl WaitStats {
             WaitKind::Scalar => self.scalar_s += s,
             WaitKind::Barrier => self.barrier_s += s,
         }
-        let us = d.as_micros() as u64;
-        let mut bucket = WAIT_BUCKETS - 1;
-        for (i, edge) in WAIT_BUCKET_EDGES_US.iter().enumerate() {
-            if us < *edge {
-                bucket = i;
-                break;
-            }
-        }
-        self.hist[bucket] += 1;
+        self.hist.record_us(d.as_micros() as u64);
+    }
+}
+
+/// Trace phase for a wait sample's collective kind.
+fn phase_for(kind: WaitKind) -> Phase {
+    match kind {
+        WaitKind::Allreduce => Phase::Allreduce,
+        WaitKind::Broadcast => Phase::Broadcast,
+        WaitKind::Scalar => Phase::Scalars,
+        WaitKind::Barrier => Phase::Barrier,
     }
 }
 
@@ -278,6 +296,9 @@ pub struct PendingOp {
     pub(crate) seq: u64,
     pub(crate) kind: PendingKind,
     pub(crate) buf: Matrix,
+    /// Issue timestamp: the start of the span a traced `wait()` records,
+    /// so nonblocking issue→wait windows show their full extent.
+    pub(crate) issued: Instant,
 }
 
 impl PendingOp {
@@ -389,6 +410,7 @@ impl Collectives {
             Collectives::Tcp(c) => c.barrier(),
         };
         self.record_wait(WaitKind::Barrier, t0);
+        self.tracer_mut().record_from(Phase::Barrier, t0, 0);
         r
     }
 
@@ -404,6 +426,8 @@ impl Collectives {
         let op = self.issue(PendingKind::Allreduce, std::mem::take(m))?;
         *m = self.complete(op)?;
         self.record_wait(WaitKind::Allreduce, t0);
+        let bytes = (m.len() * 4) as u64;
+        self.tracer_mut().record_from(Phase::Allreduce, t0, bytes);
         Ok(())
     }
 
@@ -419,6 +443,8 @@ impl Collectives {
         let op = self.issue(PendingKind::Broadcast { root }, std::mem::take(m))?;
         *m = self.complete(op)?;
         self.record_wait(WaitKind::Broadcast, t0);
+        let bytes = (m.len() * 4) as u64;
+        self.tracer_mut().record_from(Phase::Broadcast, t0, bytes);
         Ok(())
     }
 
@@ -439,9 +465,14 @@ impl Collectives {
     /// Ops must complete in issue order.
     pub fn wait(&mut self, op: PendingOp) -> Result<Matrix> {
         let kind = op.kind.wait_kind();
+        let issued = op.issued;
         let t0 = Instant::now();
         let r = self.complete(op)?;
         self.record_wait(kind, t0);
+        // The traced span covers the whole issue→wait window (not just
+        // the blocked tail), so overlap with compute is visible.
+        let bytes = (r.len() * 4) as u64;
+        self.tracer_mut().record_from(phase_for(kind), issued, bytes);
         Ok(r)
     }
 
@@ -480,6 +511,8 @@ impl Collectives {
             Collectives::Tcp(c) => c.allreduce_scalars(vals),
         };
         self.record_wait(WaitKind::Scalar, t0);
+        let bytes = (vals.len() * 8) as u64;
+        self.tracer_mut().record_from(Phase::Scalars, t0, bytes);
         r
     }
 
@@ -495,6 +528,8 @@ impl Collectives {
             Collectives::Tcp(c) => c.broadcast_scalars(root, vals),
         };
         self.record_wait(WaitKind::Scalar, t0);
+        let bytes = (vals.len() * 8) as u64;
+        self.tracer_mut().record_from(Phase::Scalars, t0, bytes);
         r
     }
 
@@ -506,6 +541,41 @@ impl Collectives {
             Collectives::Local(c) => c.abort(),
             Collectives::Tcp(c) => c.abort(),
         }
+    }
+
+    /// Arm span tracing with room for `capacity` events.  `Local` ranks
+    /// share the epoch their world was built with, and TCP ranks carry the
+    /// clock offset measured at the hello exchange — so per-rank timelines
+    /// align without any further coordination.
+    pub fn enable_trace(&mut self, capacity: usize) {
+        match self {
+            Collectives::Local(c) => c.enable_trace(capacity),
+            Collectives::Tcp(c) => c.enable_trace(capacity),
+        }
+    }
+
+    /// Tag subsequent spans with the train-loop iteration.
+    pub fn set_trace_iter(&mut self, iter: usize) {
+        self.tracer_mut().set_iter(iter);
+    }
+
+    pub fn tracer(&self) -> &Tracer {
+        match self {
+            Collectives::Local(c) => &c.tracer,
+            Collectives::Tcp(c) => c.tracer(),
+        }
+    }
+
+    pub fn tracer_mut(&mut self) -> &mut Tracer {
+        match self {
+            Collectives::Local(c) => &mut c.tracer,
+            Collectives::Tcp(c) => c.tracer_mut(),
+        }
+    }
+
+    /// Take the tracer out (for export), leaving a disabled one behind.
+    pub fn take_tracer(&mut self) -> Tracer {
+        std::mem::replace(self.tracer_mut(), Tracer::disabled())
     }
 }
 
@@ -709,6 +779,11 @@ pub struct LocalComm {
     /// wait past this errors with [`CommError::Timeout`]).
     timeout: Duration,
     wait: WaitStats,
+    /// Span recorder (disabled until [`LocalComm::enable_trace`]).
+    pub(crate) tracer: Tracer,
+    /// Shared tracer epoch: one `Instant` captured when the world was
+    /// built, so every rank's timeline starts from the same zero.
+    epoch: Instant,
     shared: Arc<LocalShared>,
 }
 
@@ -729,6 +804,7 @@ impl LocalComm {
             abort: AtomicBool::new(false),
             stats: CommStats::default(),
         });
+        let epoch = Instant::now();
         (0..n)
             .map(|rank| LocalComm {
                 rank,
@@ -738,9 +814,16 @@ impl LocalComm {
                 done_seq: 0,
                 timeout,
                 wait: WaitStats::default(),
+                tracer: Tracer::disabled(),
+                epoch,
                 shared: shared.clone(),
             })
             .collect()
+    }
+
+    /// Arm span tracing against the world-shared epoch.
+    pub fn enable_trace(&mut self, capacity: usize) {
+        self.tracer = Tracer::enabled_at(self.rank, capacity, self.epoch, 0);
     }
 
     pub fn abort(&self) {
@@ -802,12 +885,12 @@ impl LocalComm {
             }
             self.shared.nb_cv.notify_all();
         }
-        Ok(PendingOp { seq, kind, buf })
+        Ok(PendingOp { seq, kind, buf, issued: Instant::now() })
     }
 
     /// Wait for all contributions, fold in rank order, recycle.
     fn complete(&mut self, op: PendingOp) -> Result<Matrix> {
-        let PendingOp { seq, kind, mut buf } = op;
+        let PendingOp { seq, kind, mut buf, .. } = op;
         anyhow::ensure!(
             seq == self.done_seq,
             "nonblocking ops must be waited in issue order (waiting op {seq}, \

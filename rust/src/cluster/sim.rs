@@ -53,6 +53,22 @@ pub struct ScalingPoint {
     pub leader_s: f64,
 }
 
+impl ScalingPoint {
+    /// The point's cost decomposition as phase rows, renderable with
+    /// [`crate::trace::format_phase_table`] — the modeled counterpart of
+    /// the measured phase breakdown a traced run prints.
+    pub fn breakdown(&self) -> Vec<crate::trace::PhaseRow> {
+        [("compute", self.compute_s), ("comm", self.comm_s), ("leader", self.leader_s)]
+            .into_iter()
+            .map(|(name, total_s)| crate::trace::PhaseRow {
+                name: name.to_string(),
+                calls: 1,
+                total_s,
+            })
+            .collect()
+    }
+}
+
 impl ScalingProfile {
     /// Price one allreduce of the profile's logical bytes at `cores`
     /// ranks under the profiled algorithm.
@@ -201,6 +217,19 @@ mod tests {
         let pt = p.time_to_threshold(128);
         let sum = pt.compute_s + pt.comm_s + pt.leader_s;
         assert!((sum - pt.seconds_to_threshold).abs() < 1e-12);
+    }
+
+    #[test]
+    fn breakdown_rows_render_as_phase_table() {
+        let pt = profile().time_to_threshold(128);
+        let rows = pt.breakdown();
+        assert_eq!(rows.len(), 3);
+        assert!((rows.iter().map(|r| r.total_s).sum::<f64>() - pt.seconds_to_threshold).abs()
+            < 1e-12);
+        let table = crate::trace::format_phase_table(&rows);
+        for name in ["compute", "comm", "leader"] {
+            assert!(table.contains(name), "{table}");
+        }
     }
 
     #[test]

@@ -44,6 +44,7 @@
 //! ```text
 //! [len: u32 LE] [op: u8] [payload: len-1 bytes]
 //!   op 0x01 HELLO    payload = magic "GFC1" + rank u32 + world u32 + fingerprint u64
+//!                              + clock sample u64 (µs since sender's epoch)
 //!   op 0x02 MAT      payload = rows u32 + cols u32 + rows*cols f32 LE
 //!   op 0x03 SCALARS  payload = count u32 + count f64 LE
 //!   op 0x04 BARRIER  payload = empty
@@ -84,6 +85,7 @@ use super::comm::{
 };
 use crate::config::AllreduceAlgo;
 use crate::linalg::Matrix;
+use crate::trace::Tracer;
 use crate::Result;
 
 const MAGIC: &[u8; 4] = b"GFC1";
@@ -150,6 +152,13 @@ pub struct TcpComm {
     /// Deadline applied to every blocking point: socket reads/writes,
     /// connection dialing, and the accept loop (`--comm-timeout`).
     timeout: Duration,
+    /// Span recorder (disabled until [`TcpComm::enable_trace`]).
+    tracer: Tracer,
+    /// This process's trace epoch (timestamps are µs since here).
+    epoch: Instant,
+    /// µs to add to this rank's timestamps so they align with rank 0's
+    /// epoch, measured at the hello exchange (0 on rank 0).
+    clock_offset_us: i64,
 }
 
 impl TcpComm {
@@ -170,6 +179,9 @@ impl TcpComm {
             pending_meta: std::collections::VecDeque::new(),
             pending_sends: 0,
             timeout: DEFAULT_COMM_TIMEOUT,
+            tracer: Tracer::disabled(),
+            epoch: Instant::now(),
+            clock_offset_us: 0,
         }
     }
 
@@ -349,21 +361,37 @@ impl TcpComm {
         };
         prepare_stream(&stream, self.timeout)?;
         self.links[peer_rank] = Some(stream);
-        let mut hello = Vec::with_capacity(20);
-        hello.extend_from_slice(MAGIC);
-        hello.extend_from_slice(&(self.rank as u32).to_le_bytes());
-        hello.extend_from_slice(&(self.world as u32).to_le_bytes());
-        hello.extend_from_slice(&fingerprint.to_le_bytes());
         let mut buf = std::mem::take(&mut self.buf);
-        let res = write_frame(
-            self.links[peer_rank].as_mut().expect("just connected"),
-            OP_HELLO,
-            &hello,
-            &mut buf,
-        )
-        .map_err(|e| {
-            io_err(e).context(format!("rank {rank}: sending hello to rank {peer_rank}"))
-        });
+        let res = (|| -> Result<()> {
+            let t0_us = self.epoch.elapsed().as_micros() as u64;
+            let hello = encode_hello(self.rank, self.world, fingerprint, t0_us);
+            let stream = self.links[peer_rank].as_mut().expect("just connected");
+            write_frame(stream, OP_HELLO, &hello, &mut buf).map_err(|e| {
+                io_err(e).context(format!("rank {rank}: sending hello to rank {peer_rank}"))
+            })?;
+            // The acceptor answers with its own hello after validating
+            // ours — completing the handshake and carrying a clock
+            // sample for cross-rank trace alignment.
+            let (ack_rank, _, _, peer_now_us) = read_frame(stream, &mut buf)
+                .and_then(|op| parse_hello(op, &buf))
+                .map_err(|e| {
+                    e.context(format!(
+                        "rank {rank}: reading hello ack from rank {peer_rank}"
+                    ))
+                })?;
+            let t1_us = self.epoch.elapsed().as_micros() as u64;
+            anyhow::ensure!(
+                ack_rank == peer_rank,
+                "hello ack claims rank {ack_rank}, expected rank {peer_rank}"
+            );
+            if peer_rank == 0 {
+                // Midpoint estimate: rank 0 stamped its clock between
+                // our t0 and t1, so this aligns our epoch with rank 0's
+                // to within half the handshake RTT.
+                self.clock_offset_us = peer_now_us as i64 - ((t0_us + t1_us) / 2) as i64;
+            }
+            Ok(())
+        })();
         self.buf = buf;
         res
     }
@@ -405,7 +433,7 @@ impl TcpComm {
                         };
                         let hello = read_frame(&mut stream, &mut buf)
                             .and_then(|op| parse_hello(op, &buf));
-                        let (peer_rank, peer_world, peer_fp) = match hello {
+                        let (peer_rank, peer_world, peer_fp, _peer_now_us) = match hello {
                             Ok(h) => h,
                             Err(e) => {
                                 eprintln!(
@@ -438,6 +466,16 @@ impl TcpComm {
                         stream
                             .set_read_timeout(Some(self.timeout))
                             .map_err(|e| anyhow::anyhow!("accepted stream timeout: {e}"))?;
+                        // Ack with our own hello: the dialer blocks on it,
+                        // and its clock sample drives trace alignment.
+                        let now_us = self.epoch.elapsed().as_micros() as u64;
+                        let ack = encode_hello(self.rank, world, fingerprint, now_us);
+                        write_frame(&mut stream, OP_HELLO, &ack, &mut buf).map_err(|e| {
+                            io_err(e).context(format!(
+                                "rank {}: sending hello ack to rank {peer_rank}",
+                                self.rank
+                            ))
+                        })?;
                         self.links[peer_rank] = Some(stream);
                         pending -= 1;
                     }
@@ -480,6 +518,27 @@ impl TcpComm {
 
     pub(crate) fn wait_stats_mut(&mut self) -> &mut WaitStats {
         &mut self.wait
+    }
+
+    /// Arm span tracing.  The tracer inherits this process's epoch and
+    /// the clock offset to rank 0 measured at the hello exchange, so the
+    /// exported timeline aligns with rank 0's without any further
+    /// coordination.
+    pub fn enable_trace(&mut self, capacity: usize) {
+        self.tracer = Tracer::enabled_at(self.rank, capacity, self.epoch, self.clock_offset_us);
+    }
+
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    pub fn tracer_mut(&mut self) -> &mut Tracer {
+        &mut self.tracer
+    }
+
+    /// µs to add to this rank's timestamps to align with rank 0's epoch.
+    pub fn clock_offset_us(&self) -> i64 {
+        self.clock_offset_us
     }
 
     pub fn set_allreduce_algo(&mut self, algo: AllreduceAlgo) {
@@ -541,7 +600,7 @@ impl TcpComm {
         let seq = self.issue_seq;
         self.issue_seq += 1;
         if self.world == 1 {
-            return Ok(PendingOp { seq, kind, buf });
+            return Ok(PendingOp { seq, kind, buf, issued: Instant::now() });
         }
         let rank = self.rank;
         let mut deferred_send = false;
@@ -583,7 +642,7 @@ impl TcpComm {
             self.pending_sends += 1;
         }
         self.pending_meta.push_back((sends_at_wait, deferred_send));
-        Ok(PendingOp { seq, kind, buf })
+        Ok(PendingOp { seq, kind, buf, issued: Instant::now() })
     }
 
     /// The root's outbound frames for a broadcast: rank 0 fans out to
@@ -606,7 +665,7 @@ impl TcpComm {
     /// Complete a pending op (strictly in issue order — the untagged
     /// frame streams rely on it).
     pub(crate) fn complete(&mut self, op: PendingOp) -> Result<Matrix> {
-        let PendingOp { seq, kind, mut buf } = op;
+        let PendingOp { seq, kind, mut buf, .. } = op;
         anyhow::ensure!(
             seq == self.done_seq,
             "nonblocking ops must be waited in issue order (waiting op {seq}, \
@@ -1081,14 +1140,25 @@ fn expect_op(got: u8, want: u8) -> Result<()> {
     Ok(())
 }
 
-fn parse_hello(op: u8, payload: &[u8]) -> Result<(usize, usize, u64)> {
+fn encode_hello(rank: usize, world: usize, fingerprint: u64, now_us: u64) -> [u8; 28] {
+    let mut hello = [0u8; 28];
+    hello[..4].copy_from_slice(MAGIC);
+    hello[4..8].copy_from_slice(&(rank as u32).to_le_bytes());
+    hello[8..12].copy_from_slice(&(world as u32).to_le_bytes());
+    hello[12..20].copy_from_slice(&fingerprint.to_le_bytes());
+    hello[20..28].copy_from_slice(&now_us.to_le_bytes());
+    hello
+}
+
+fn parse_hello(op: u8, payload: &[u8]) -> Result<(usize, usize, u64, u64)> {
     expect_op(op, OP_HELLO)?;
-    anyhow::ensure!(payload.len() == 20, "malformed hello ({} bytes)", payload.len());
+    anyhow::ensure!(payload.len() == 28, "malformed hello ({} bytes)", payload.len());
     anyhow::ensure!(&payload[..4] == MAGIC, "bad hello magic (not a gradfree rank)");
     let rank = u32::from_le_bytes(payload[4..8].try_into().unwrap()) as usize;
     let world = u32::from_le_bytes(payload[8..12].try_into().unwrap()) as usize;
     let fp = u64::from_le_bytes(payload[12..20].try_into().unwrap());
-    Ok((rank, world, fp))
+    let now_us = u64::from_le_bytes(payload[20..28].try_into().unwrap());
+    Ok((rank, world, fp, now_us))
 }
 
 /// Assemble `[len][op][payload]` in `buf` and write it in one syscall.

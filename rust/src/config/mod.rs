@@ -377,6 +377,11 @@ pub struct TrainConfig {
     /// Deterministic fault injection for robustness testing (`--fault
     /// "rank=1,iter=7,kind=crash"`, default none).
     pub fault: Option<FaultPlan>,
+    /// Chrome-trace span timeline output (`--trace out.json`, empty =
+    /// off); rank `r > 0` writes `<path>.rank<r>`.  Observation-only and
+    /// per-process (not part of the wire fingerprint): any subset of a
+    /// world may trace without changing a bit of the training run.
+    pub trace_path: String,
 }
 
 impl Default for TrainConfig {
@@ -411,6 +416,7 @@ impl Default for TrainConfig {
             checkpoint_path: String::new(),
             resume: String::new(),
             fault: None,
+            trace_path: String::new(),
         }
     }
 }
@@ -566,6 +572,7 @@ impl TrainConfig {
                 "checkpoint_path" => c.checkpoint_path = val.as_str()?.to_string(),
                 "resume" => c.resume = val.as_str()?.to_string(),
                 "fault" => c.fault = Some(FaultPlan::parse(val.as_str()?)?),
+                "trace" => c.trace_path = val.as_str()?.to_string(),
                 other => anyhow::bail!("unknown config key '{other}'"),
             }
         }
@@ -672,6 +679,9 @@ impl TrainConfig {
         if let Some(v) = args.get("fault") {
             self.fault = Some(FaultPlan::parse(v)?);
         }
+        if let Some(v) = args.get("trace") {
+            self.trace_path = v.to_string();
+        }
         self.validate()
     }
 
@@ -731,6 +741,10 @@ pub struct ServeConfig {
     /// checkpoint: `GFADMM02` files record their problem kind, `GFADMM01`
     /// files default to binary hinge.
     pub problem: Option<Problem>,
+    /// Chrome-trace span timeline for the batcher thread (`--trace
+    /// out.json`, empty = off): queue/batch/forward/write spans, written
+    /// on shutdown.
+    pub trace_path: String,
 }
 
 impl Default for ServeConfig {
@@ -742,6 +756,7 @@ impl Default for ServeConfig {
             max_batch: 32,
             max_wait_us: 200,
             problem: None,
+            trace_path: String::new(),
         }
     }
 }
@@ -770,6 +785,7 @@ impl ServeConfig {
                 "max_batch" => c.max_batch = val.as_usize()?,
                 "max_wait_us" => c.max_wait_us = val.as_usize()? as u64,
                 "loss" => c.problem = Some(Problem::parse(val.as_str()?)?),
+                "trace" => c.trace_path = val.as_str()?.to_string(),
                 other => anyhow::bail!("unknown serve config key '{other}'"),
             }
         }
@@ -788,6 +804,9 @@ impl ServeConfig {
         self.max_wait_us = args.parsed_or("max-wait-us", self.max_wait_us)?;
         if let Some(v) = args.get("loss") {
             self.problem = Some(Problem::parse(v)?);
+        }
+        if let Some(v) = args.get("trace") {
+            self.trace_path = v.to_string();
         }
         self.validate()
     }
@@ -1076,6 +1095,8 @@ mod tests {
                 "ck.bin",
                 "--fault",
                 "rank=1,iter=4,kind=stall",
+                "--trace",
+                "tr.json",
             ]
             .iter()
             .map(|s| s.to_string()),
@@ -1086,9 +1107,10 @@ mod tests {
         assert_eq!(c.checkpoint_path, "ck.bin");
         assert_eq!(c.resume, "ck.bin");
         assert_eq!(c.fault, Some(FaultPlan { rank: 1, iter: 4, kind: FaultKind::Stall }));
-        // None of these knobs shape the wire protocol: a resumed or
-        // checkpointing relaunch must join (or reproduce) the same
-        // logical world, so the fingerprint must not move.
+        assert_eq!(c.trace_path, "tr.json");
+        // None of these knobs shape the wire protocol: a resumed,
+        // checkpointing or traced relaunch must join (or reproduce) the
+        // same logical world, so the fingerprint must not move.
         assert_eq!(c.spmd_fingerprint(), TrainConfig::default().spmd_fingerprint());
 
         // JSON spellings

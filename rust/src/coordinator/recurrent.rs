@@ -335,15 +335,19 @@ impl RnnAdmm {
     pub fn train(&mut self, test: &SeqDataset) -> Result<Recorder> {
         let mut rec = Recorder::new("rnn_admm");
         let sw = Stopwatch::start();
+        let mut prev_wall = 0.0;
         for it in 0..self.cfg.iters {
             self.iteration(it)?;
+            let wall_s = sw.elapsed_s();
             rec.push(CurvePoint {
                 iter: it,
-                wall_s: sw.elapsed_s(),
+                wall_s,
+                iter_ms: (wall_s - prev_wall) * 1e3,
                 train_loss: f64::NAN,
                 test_acc: self.accuracy(test),
                 penalty: f64::NAN,
             });
+            prev_wall = wall_s;
         }
         Ok(rec)
     }

@@ -72,7 +72,7 @@
 
 use std::sync::atomic::Ordering;
 
-use crate::cluster::{Collectives, WAIT_BUCKETS};
+use crate::cluster::Collectives;
 use crate::config::{FaultKind, InitScheme, MultiplierMode, Schedule, TrainConfig};
 use crate::coordinator::backend::{BackendKind, WorkerBackendImpl};
 use crate::coordinator::trainer::{
@@ -86,6 +86,7 @@ use crate::linalg::{
 use crate::metrics::{CurvePoint, Recorder, Stopwatch};
 use crate::nn::{load_snapshot, save_snapshot, Mlp, TrainSnapshot};
 use crate::rng::Rng;
+use crate::trace::{self, Phase};
 use crate::Result;
 
 /// Per-run options that shape the collective schedule (they are hashed
@@ -278,6 +279,15 @@ pub fn train_rank(
     // every rank agrees).
     comm.set_allreduce_algo(cfg.allreduce);
 
+    // Span tracing (`--trace out.json`): preallocate the whole run's
+    // event budget up front so steady-state recording never allocates;
+    // events past the cap bump a drop counter instead of growing.
+    if !cfg.trace_path.is_empty() {
+        let per_iter = cfg.layers() * 24 + 16;
+        let cap = ((cfg.iters + 2) * per_iter + 64).min(1 << 20);
+        comm.enable_trace(cap);
+    }
+
     // Rank 0 owns the test metric and the convergence curve.
     let eval = if rank == 0 {
         cfg.problem.validate_labels(&test.y, d_l)?;
@@ -331,9 +341,13 @@ pub fn train_rank(
                 inject_fault(cfg, comm, rank, it, f.kind)?;
             }
         }
+        comm.set_trace_iter(it);
+        let t_iter = comm.tracer().start();
         let sw = Stopwatch::start();
-        let leader_s = iteration(cfg, &mut st, &mut backend, comm, it)?;
+        let leader_s = iteration(cfg, &mut st, &mut backend, comm, it)
+            .map_err(|e| e.context(format!("rank {rank}: iteration {it} failed")))?;
         let iter_s = sw.elapsed_s();
+        comm.tracer_mut().record(Phase::Iter, t_iter, 0);
         opt_s += iter_s;
         stats.leader_seconds += leader_s;
         stats.worker_seconds += iter_s - leader_s;
@@ -343,10 +357,13 @@ pub fn train_rank(
         // the hot path unless requested, so the steady-state
         // zero-allocation pin is unaffected.
         if cfg.checkpoint_every > 0 && (it + 1) % cfg.checkpoint_every == 0 {
+            let t0 = comm.tracer().start();
             write_checkpoint(cfg, &st, rank, world, it + 1)?;
+            comm.tracer_mut().record(Phase::Checkpoint, t0, 0);
         }
 
         if it % cfg.eval_every == 0 || it + 1 == cfg.iters {
+            let t_eval = comm.tracer().start();
             // Σ over ranks of (loss, correct, n) — rank-order fold, so the
             // totals are bit-identical to the seed leader's summation.
             let (loss, correct, n) = backend.eval(&st.weights, &st.x, &st.y, cfg.act)?;
@@ -377,6 +394,7 @@ pub fn train_rank(
                 recorder.push(CurvePoint {
                     iter: it,
                     wall_s: opt_s,
+                    iter_ms: iter_s * 1e3,
                     train_loss,
                     test_acc: metric,
                     penalty,
@@ -403,27 +421,54 @@ pub fn train_rank(
                 ctrl[1] = metric;
             }
             comm.broadcast_scalars(0, &mut ctrl)?;
+            comm.tracer_mut().record(Phase::Eval, t_eval, 0);
             if ctrl[0] != 0.0 {
                 break;
             }
         }
     }
     stats.opt_seconds = opt_s;
-    // Straggler telemetry: this rank's blocked time per collective kind
-    // plus the world totals (one extra scalar allreduce — counted in the
-    // scalar bucket, so the matrix-traffic formulas stay exact).
+    // Straggler + phase telemetry: fold this rank's metrics panel into
+    // world totals with ONE extra scalar allreduce (counted in the
+    // scalar bucket, so the matrix-traffic formulas stay exact).  Every
+    // metric is registered unconditionally so the panel width matches
+    // across ranks even when only some of them passed `--trace` —
+    // tracing is per-process and deliberately outside the fingerprint.
     let ws = comm.wait_stats().clone();
     stats.wait_rank_s = [ws.allreduce_s, ws.broadcast_s, ws.scalar_s, ws.barrier_s];
-    let mut panel = [0.0f64; 4 + WAIT_BUCKETS];
-    panel[..4].copy_from_slice(&stats.wait_rank_s);
-    for (slot, h) in panel[4..].iter_mut().zip(ws.hist.iter()) {
-        *slot = *h as f64;
+    let mut reg = trace::MetricsRegistry::new();
+    reg.gauge("wait_allreduce_s", ws.allreduce_s);
+    reg.gauge("wait_broadcast_s", ws.broadcast_s);
+    reg.gauge("wait_scalar_s", ws.scalar_s);
+    reg.gauge("wait_barrier_s", ws.barrier_s);
+    reg.hist("wait_us", ws.hist.clone());
+    for p in Phase::ALL {
+        reg.counter(&format!("ph_{}_calls", p.name()), comm.tracer().calls(p));
+        reg.gauge(&format!("ph_{}_s", p.name()), comm.tracer().seconds(p));
     }
+    let mut panel = reg.panel();
     comm.allreduce_scalars(&mut panel)?;
+    reg.apply_panel(&panel)?;
     stats.wait_world_s = [panel[0], panel[1], panel[2], panel[3]];
-    for (dst, src) in stats.wait_hist_world.iter_mut().zip(&panel[4..]) {
-        *dst = *src as u64;
+    let wh = reg.hist_ref("wait_us").expect("registered above");
+    for (dst, src) in stats.wait_hist_world.iter_mut().zip(wh.iter()) {
+        *dst = *src;
     }
+    stats.phases_world = Phase::ALL
+        .iter()
+        .filter_map(|p| {
+            let calls = reg.counter_value(&format!("ph_{}_calls", p.name()))?;
+            if calls == 0 {
+                return None;
+            }
+            let total_s = reg.gauge_value(&format!("ph_{}_s", p.name()))?;
+            Some(trace::PhaseRow {
+                name: p.name().to_string(),
+                calls,
+                total_s,
+            })
+        })
+        .collect();
     // Measured traffic (counted once per collective, on rank 0 / the
     // hub) — the source of truth the closed-form per-iteration formulas
     // are checked against in `benches/scaling.rs`.
@@ -431,6 +476,13 @@ pub fn train_rank(
     stats.allreduce_bytes_measured = cs.allreduce_bytes.load(Ordering::Relaxed);
     stats.broadcast_bytes_measured = cs.broadcast_bytes.load(Ordering::Relaxed);
     stats.scalar_bytes_measured = cs.scalar_bytes.load(Ordering::Relaxed);
+
+    // Per-rank Chrome-trace export (rank 0 owns the base path, the rest
+    // get `.rank{r}` suffixes — same family rule as checkpoints).
+    if comm.tracer().is_enabled() {
+        let tracer = comm.take_tracer();
+        trace::write_chrome_trace(&rank_path(&cfg.trace_path, rank), &tracer)?;
+    }
 
     Ok(TrainOutcome {
         weights: st.weights,
@@ -601,12 +653,17 @@ fn iteration_bulk(
 
     for l in 1..=layers {
         // (1) local Gram pair + transpose-reduction allreduce
+        let t0 = comm.tracer().start();
         gram_phase(cfg, st, backend, l)?;
+        comm.tracer_mut().record(Phase::GramCompute, t0, l as u64);
+        let t0 = comm.tracer().start();
         comm.allreduce_sum(&mut st.zat)?;
         comm.allreduce_sum(&mut st.aat)?;
+        comm.tracer_mut().record(Phase::GramWait, t0, l as u64);
 
         // (2) rank 0 solves W_l (+ the a-update inverse for hidden layers)
         if st.rank == 0 {
+            let t0 = comm.tracer().start();
             let sw = Stopwatch::start();
             let mut w_solved = Matrix::default();
             weight_solve_into(&st.zat, &st.aat, cfg.ridge, &mut st.solve_scratch, &mut w_solved)?;
@@ -618,10 +675,15 @@ fn iteration_bulk(
                 st.minv_buf = a_update_inverse(&st.weights[l], cfg.beta, cfg.gamma)?;
             }
             leader_s += sw.elapsed_s();
+            comm.tracer_mut().record(Phase::Solve, t0, l as u64);
         }
+        let t0 = comm.tracer().start();
         comm.broadcast(0, &mut st.w_bcast)?;
+        comm.tracer_mut().record(Phase::BcastW, t0, l as u64);
         if l < layers {
+            let t0 = comm.tracer().start();
             comm.broadcast(0, &mut st.minv_buf)?;
+            comm.tracer_mut().record(Phase::BcastMinv, t0, l as u64);
         }
 
         // (3) embarrassingly parallel shard updates (same in-place
@@ -629,18 +691,26 @@ fn iteration_bulk(
         // W_{l+1} replica, then W_l flips to the broadcast solve, then the
         // z-update reads the NEW W_l)
         if l < layers {
+            let t0 = comm.tracer().start();
             a_update_phase(cfg, st, backend, l)?;
+            comm.tracer_mut().record(Phase::AUpdate, t0, l as u64);
             st.weights[l - 1].copy_from(&st.w_bcast);
+            let t0 = comm.tracer().start();
             z_hidden_phase(cfg, st, backend, l)?;
+            comm.tracer_mut().record(Phase::ZUpdate, t0, l as u64);
         } else {
             st.weights[l - 1].copy_from(&st.w_bcast);
             let update_lambda = past_warmup && cfg.multiplier_mode == MultiplierMode::Bregman;
+            let t0 = comm.tracer().start();
             z_out_phase(cfg, st, backend, update_lambda)?;
+            comm.tracer_mut().record(Phase::ZUpdate, t0, l as u64);
         }
     }
 
     if past_warmup && cfg.multiplier_mode == MultiplierMode::Classical {
+        let t0 = comm.tracer().start();
         update_duals(cfg, st)?;
+        comm.tracer_mut().record(Phase::Lambda, t0, 0);
     }
     Ok(leader_s)
 }
@@ -664,21 +734,29 @@ fn iteration_pipelined(
     let mut leader_s = 0.0;
 
     // Prologue: layer 1's local Gram goes into flight before the loop.
+    let t0 = comm.tracer().start();
     gram_phase(cfg, st, backend, 1)?;
+    comm.tracer_mut().record(Phase::GramCompute, t0, 1);
+    let t0 = comm.tracer().start();
     let mut pend_zat = Some(comm.iallreduce_sum(std::mem::take(&mut st.zat))?);
     let mut pend_aat = Some(comm.iallreduce_sum(std::mem::take(&mut st.aat))?);
+    comm.tracer_mut().record(Phase::GramIssue, t0, 1);
 
     for l in 1..=layers {
+        let t0 = comm.tracer().start();
         st.zat = pend_zat.take().expect("gram reduction in flight").wait(comm)?;
         st.aat = pend_aat.take().expect("gram reduction in flight").wait(comm)?;
+        comm.tracer_mut().record(Phase::GramWait, t0, l as u64);
 
         // (1) minv first: it depends only on the OLD W_{l+1}, so its
         // broadcast overlaps the W_l solve below.
         let pend_minv = if l < layers {
             if st.rank == 0 {
+                let t0 = comm.tracer().start();
                 let sw = Stopwatch::start();
                 st.minv_buf = a_update_inverse(&st.weights[l], cfg.beta, cfg.gamma)?;
                 leader_s += sw.elapsed_s();
+                comm.tracer_mut().record(Phase::Solve, t0, l as u64);
             }
             Some(comm.ibroadcast(0, std::mem::take(&mut st.minv_buf))?)
         } else {
@@ -688,40 +766,60 @@ fn iteration_pipelined(
         // (2) rank 0 solves W_l (ridge-guarded pseudoinverse + momentum)
         // while the leaves already hold (or are receiving) minv.
         if st.rank == 0 {
+            let t0 = comm.tracer().start();
             let sw = Stopwatch::start();
             let mut w_solved = Matrix::default();
             weight_solve_into(&st.zat, &st.aat, cfg.ridge, &mut st.solve_scratch, &mut w_solved)?;
             let w_new = apply_momentum(st, l - 1, w_solved, cfg.momentum);
             st.w_bcast = w_new;
             leader_s += sw.elapsed_s();
+            comm.tracer_mut().record(Phase::Solve, t0, l as u64);
         }
         let pend_w = comm.ibroadcast(0, std::mem::take(&mut st.w_bcast))?;
 
         if l < layers {
             // (3) a-update needs minv and the OLD W_{l+1} replica — it
             // overlaps the W_l broadcast still in flight.
+            let t0 = comm.tracer().start();
             st.minv_buf = pend_minv.expect("hidden layer has minv").wait(comm)?;
+            comm.tracer_mut().record(Phase::BcastMinv, t0, l as u64);
+            let t0 = comm.tracer().start();
             a_update_phase(cfg, st, backend, l)?;
+            comm.tracer_mut().record(Phase::AUpdate, t0, l as u64);
             // (4) layer l+1's Gram reads z_{l+1} and the a_l just
             // written, not W_l: issue its reduction before waiting on W.
+            let t0 = comm.tracer().start();
             gram_phase(cfg, st, backend, l + 1)?;
+            comm.tracer_mut().record(Phase::GramCompute, t0, (l + 1) as u64);
+            let t0 = comm.tracer().start();
             pend_zat = Some(comm.iallreduce_sum(std::mem::take(&mut st.zat))?);
             pend_aat = Some(comm.iallreduce_sum(std::mem::take(&mut st.aat))?);
+            comm.tracer_mut().record(Phase::GramIssue, t0, (l + 1) as u64);
             // (5) flip W_l to the broadcast solve, then the z-update
             // overlaps layer l+1's in-flight reduction.
+            let t0 = comm.tracer().start();
             st.w_bcast = pend_w.wait(comm)?;
+            comm.tracer_mut().record(Phase::BcastW, t0, l as u64);
             st.weights[l - 1].copy_from(&st.w_bcast);
+            let t0 = comm.tracer().start();
             z_hidden_phase(cfg, st, backend, l)?;
+            comm.tracer_mut().record(Phase::ZUpdate, t0, l as u64);
         } else {
+            let t0 = comm.tracer().start();
             st.w_bcast = pend_w.wait(comm)?;
+            comm.tracer_mut().record(Phase::BcastW, t0, l as u64);
             st.weights[l - 1].copy_from(&st.w_bcast);
             let update_lambda = past_warmup && cfg.multiplier_mode == MultiplierMode::Bregman;
+            let t0 = comm.tracer().start();
             z_out_phase(cfg, st, backend, update_lambda)?;
+            comm.tracer_mut().record(Phase::ZUpdate, t0, l as u64);
         }
     }
 
     if past_warmup && cfg.multiplier_mode == MultiplierMode::Classical {
+        let t0 = comm.tracer().start();
         update_duals(cfg, st)?;
+        comm.tracer_mut().record(Phase::Lambda, t0, 0);
     }
     Ok(leader_s)
 }

@@ -69,6 +69,11 @@ pub struct TrainStats {
     /// World-summed histogram of individual blocked intervals; bucket
     /// edges per [`crate::cluster::WAIT_BUCKET_EDGES_US`].
     pub wait_hist_world: [u64; WAIT_BUCKETS],
+    /// World-aggregated per-phase call counts and seconds (every phase
+    /// with at least one call anywhere, [`crate::trace::Phase`] order) —
+    /// rendered as rank 0's phase-breakdown table.  Populated by the
+    /// same end-of-run scalar allreduce as the wait telemetry.
+    pub phases_world: Vec<crate::trace::PhaseRow>,
 }
 
 impl TrainStats {

@@ -46,6 +46,7 @@ pub mod prop;
 pub mod rng;
 pub mod runtime;
 pub mod serve;
+pub mod trace;
 
 /// Crate-wide result type (anyhow-backed; all public fallible APIs use it).
 pub type Result<T> = anyhow::Result<T>;

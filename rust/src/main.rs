@@ -84,7 +84,10 @@ fn print_usage() {
          --resume path    restore rank state from a snapshot family and continue\n  \
          \x20                (bit-identical to the uninterrupted run)\n  \
          --fault rank=R,iter=I,kind=crash|stall|drop-conn   deterministic fault\n  \
-         \x20                injection for robustness testing\n\n\
+         \x20                injection for robustness testing\n  \
+         --trace out.json cumulative span timeline per rank (Chrome trace-event\n  \
+         \x20                JSON, open in ui.perfetto.dev; rank r>0 writes\n  \
+         \x20                out.json.rankR) plus a rank-0 phase-breakdown table\n\n\
          baseline: --method sgd|cg|lbfgs --lr --batch --bmomentum --epochs --max-iters\n\
          scale:    --cores 1,2,4,8 --model-cores 64,1024,7200 --target-acc A\n\
          gen-data: --dataset blobs|svhn|higgs|regress|multiblobs --samples N\n\
@@ -92,7 +95,8 @@ fn print_usage() {
          predict:  --model ckpt.gfadmm [--dataset ...]\n\
          serve:    --model ckpt.gfadmm [--host H] [--port P] [--threads N]\n\
          \x20          [--max-batch N] [--max-wait-us U] [--serve-config file.json]\n\
-         \x20          [--loss ...] (default: the checkpoint's problem kind)"
+         \x20          [--trace out.json] [--loss ...] (default: the checkpoint's\n\
+         \x20          problem kind)"
     );
 }
 
@@ -268,6 +272,23 @@ fn cmd_train(args: &Args) -> Result<()> {
         lo = gradfree_admm::cluster::WAIT_BUCKET_EDGES_US.get(i).copied().unwrap_or(lo);
     }
     println!("wait histogram:{hist}");
+    if !out.stats.phases_world.is_empty() {
+        // Only populated when at least one rank traced: per-phase call
+        // counts and seconds summed over the world.
+        println!(
+            "phase breakdown (Σ over {} rank(s)):\n{}",
+            trainer.config().world(),
+            gradfree_admm::trace::format_phase_table(&out.stats.phases_world)
+        );
+    }
+    if !trainer.config().trace_path.is_empty() {
+        println!(
+            "trace written to {} (Chrome trace-event JSON — open in ui.perfetto.dev; \
+             ranks r>0 write {}.rankR)",
+            trainer.config().trace_path,
+            trainer.config().trace_path
+        );
+    }
     let gaps = out.recorder.eval_gap_summary();
     if gaps.n > 0 {
         // Same p50/p95/p99 schema bench-serve reports for request latency.
@@ -347,6 +368,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.max_wait_us
     );
     println!(r#"protocol: {{"id":N,"x":[..]}} -> {{"argmax":K,"id":N,"y":[..]}} (one JSON object per line; non-hinge models add "pred")"#);
+    println!(r#"stats: {{"op":"stats"}} -> live counters as a Prometheus-style text block"#);
     server.wait();
     Ok(())
 }

@@ -32,6 +32,11 @@ pub struct CurvePoint {
     /// Seconds of *optimization* time (paper §7: excludes data loading and
     /// setup).
     pub wall_s: f64,
+    /// Wall-clock milliseconds of the iteration that produced this point
+    /// (the train loop's per-iteration span; 0 for baselines that don't
+    /// time individual iterations), so convergence plots can use time on
+    /// the x-axis.
+    pub iter_ms: f64,
     pub train_loss: f64,
     pub test_acc: f64,
     /// Σ over layers of the quadratic constraint penalties (feasibility
@@ -148,10 +153,13 @@ impl Recorder {
     /// Header for this run's CSV schema: the metric column carries the
     /// problem's metric name (`accuracy`, `mse`, …).
     pub fn csv_header(&self) -> String {
-        format!("label,iter,wall_s,train_loss,{},penalty", self.metric_name)
+        format!(
+            "label,iter,wall_s,iter_ms,train_loss,{},penalty",
+            self.metric_name
+        )
     }
 
-    /// CSV rows: `label,iter,wall_s,train_loss,<metric>,penalty`.
+    /// CSV rows: `label,iter,wall_s,iter_ms,train_loss,<metric>,penalty`.
     pub fn to_csv(&self, include_header: bool) -> String {
         let mut out = String::new();
         if include_header {
@@ -161,8 +169,8 @@ impl Recorder {
         for p in &self.points {
             let _ = writeln!(
                 out,
-                "{},{},{:.6},{:.6},{:.6},{:.6}",
-                self.label, p.iter, p.wall_s, p.train_loss, p.test_acc, p.penalty
+                "{},{},{:.6},{:.6},{:.6},{:.6},{:.6}",
+                self.label, p.iter, p.wall_s, p.iter_ms, p.train_loss, p.test_acc, p.penalty
             );
         }
         out
@@ -269,7 +277,7 @@ mod tests {
     use super::*;
 
     fn pt(iter: usize, wall_s: f64, acc: f64) -> CurvePoint {
-        CurvePoint { iter, wall_s, train_loss: 1.0, test_acc: acc, penalty: 0.0 }
+        CurvePoint { iter, wall_s, iter_ms: 0.0, train_loss: 1.0, test_acc: acc, penalty: 0.0 }
     }
 
     #[test]
@@ -290,11 +298,14 @@ mod tests {
         r.push(pt(0, 0.5, 0.9));
         let csv = r.to_csv(true);
         let mut lines = csv.lines();
-        assert_eq!(lines.next().unwrap(), "label,iter,wall_s,train_loss,accuracy,penalty");
+        assert_eq!(
+            lines.next().unwrap(),
+            "label,iter,wall_s,iter_ms,train_loss,accuracy,penalty"
+        );
         assert!(lines.next().unwrap().starts_with("admm,0,0.5"));
         // regression-aware: an error-metric run names its column
         let r2 = Recorder::new("l2").with_metric("mse", false);
-        assert_eq!(r2.csv_header(), "label,iter,wall_s,train_loss,mse,penalty");
+        assert_eq!(r2.csv_header(), "label,iter,wall_s,iter_ms,train_loss,mse,penalty");
     }
 
     #[test]

@@ -17,13 +17,16 @@
 //!   requests come back in submission order.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use super::stats::ServeStats;
 use crate::config::Activation;
 use crate::linalg::Matrix;
 use crate::nn::{Mlp, MlpWorkspace};
 use crate::problem::Problem;
+use crate::trace::{Phase, Tracer};
 use crate::Result;
 
 /// Index of the maximum score (ties break low — deterministic).
@@ -122,6 +125,8 @@ pub struct BatchJob {
     pub id: u64,
     pub x: Vec<f32>,
     pub reply: Sender<BatchReply>,
+    /// Admission time — start of the queue span and of the latency sample.
+    pub submitted: Instant,
 }
 
 /// The batcher's answer to one job.  `pred` is the problem-decoded
@@ -142,14 +147,27 @@ pub struct Batcher {
 }
 
 impl Batcher {
-    /// Spawn the batcher thread around an engine.
+    /// Spawn the batcher thread around an engine (private stats, no trace).
     pub fn start(engine: BatchEngine, max_batch: usize, max_wait: Duration) -> Batcher {
+        Self::start_with(engine, max_batch, max_wait, Arc::new(ServeStats::new()), String::new())
+    }
+
+    /// Spawn with shared [`ServeStats`] and an optional Chrome-trace
+    /// output path (empty = tracing off); the server passes both so the
+    /// `{"op":"stats"}` endpoint and `--trace` observe the batcher.
+    pub fn start_with(
+        engine: BatchEngine,
+        max_batch: usize,
+        max_wait: Duration,
+        stats: Arc<ServeStats>,
+        trace_path: String,
+    ) -> Batcher {
         assert!(max_batch >= 1, "max_batch must be >= 1");
         let (features, out_dim) = (engine.features(), engine.out_dim());
         let (tx, rx) = std::sync::mpsc::channel();
         let thread = std::thread::Builder::new()
             .name("serve-batcher".into())
-            .spawn(move || batch_loop(rx, engine, max_batch, max_wait))
+            .spawn(move || batch_loop(rx, engine, max_batch, max_wait, stats, trace_path))
             .expect("spawn batcher thread");
         Batcher { tx: Some(tx), thread: Some(thread), features, out_dim }
     }
@@ -186,14 +204,20 @@ fn batch_loop(
     mut engine: BatchEngine,
     max_batch: usize,
     max_wait: Duration,
+    stats: Arc<ServeStats>,
+    trace_path: String,
 ) {
     let features = engine.features();
     let mut staged: Vec<BatchJob> = Vec::with_capacity(max_batch);
     let mut ybuf: Vec<f32> = Vec::with_capacity(engine.out_dim());
+    // Span timeline for this thread (`serve --trace`): a preallocated
+    // event ring recorded allocation-free, written once on shutdown.
+    let mut tracer =
+        if trace_path.is_empty() { Tracer::disabled() } else { Tracer::enabled(0, 1 << 16) };
     loop {
         match rx.recv() {
             Ok(job) => staged.push(job),
-            Err(_) => return, // all submitters gone, queue drained
+            Err(_) => break, // all submitters gone, queue drained
         }
         let deadline = Instant::now() + max_wait;
         while staged.len() < max_batch {
@@ -208,8 +232,12 @@ fn batch_loop(
         }
 
         // Gather the well-formed jobs into columns.
+        let t0 = tracer.start();
         let mut cols = 0;
         for job in &staged {
+            // Queue span: admission (`submit_line`) → the batch forming.
+            tracer.record_from(Phase::Queue, job.submitted, 0);
+            stats.queue_dec();
             if job.x.len() == features {
                 cols += 1;
             }
@@ -222,14 +250,20 @@ fn batch_loop(
                 j += 1;
             }
         }
+        tracer.record(Phase::Batch, t0, cols as u64);
         if cols > 0 {
+            let t0 = tracer.start();
             engine.forward();
+            tracer.record(Phase::Forward, t0, cols as u64);
         }
+        stats.record_batch(cols as u64);
 
         // Scatter replies in arrival order (send failures mean the
         // connection went away — drop the reply on the floor).
+        let t0 = tracer.start();
         let mut j = 0;
         for job in staged.drain(..) {
+            stats.record_latency_us(job.submitted.elapsed().as_micros() as u64);
             if job.x.len() == features {
                 engine.col_into(j, &mut ybuf);
                 let am = argmax(&ybuf);
@@ -239,12 +273,19 @@ fn batch_loop(
                     .send(BatchReply::Ok { id: job.id, y: ybuf.clone(), argmax: am, pred });
                 j += 1;
             } else {
+                stats.record_error();
                 let msg = format!(
                     "feature-length mismatch: got {}, model wants {features}",
                     job.x.len()
                 );
                 let _ = job.reply.send(BatchReply::Err { id: job.id, msg });
             }
+        }
+        tracer.record(Phase::Write, t0, j as u64);
+    }
+    if tracer.is_enabled() {
+        if let Err(e) = crate::trace::write_chrome_trace(&trace_path, &tracer) {
+            eprintln!("serve: writing trace {trace_path}: {e:#}");
         }
     }
 }
@@ -332,10 +373,17 @@ mod tests {
         let (rtx, rrx) = std::sync::mpsc::channel();
         let tx = batcher.submitter();
         for c in 0..x.cols() {
-            tx.send(BatchJob { id: c as u64, x: col(&x, c), reply: rtx.clone() }).unwrap();
+            tx.send(BatchJob {
+                id: c as u64,
+                x: col(&x, c),
+                reply: rtx.clone(),
+                submitted: Instant::now(),
+            })
+            .unwrap();
         }
         // Mis-shaped job replies with an error, in order.
-        tx.send(BatchJob { id: 99, x: vec![1.0; 3], reply: rtx.clone() }).unwrap();
+        tx.send(BatchJob { id: 99, x: vec![1.0; 3], reply: rtx.clone(), submitted: Instant::now() })
+            .unwrap();
         for c in 0..x.cols() {
             match rrx.recv().unwrap() {
                 BatchReply::Ok { id, y, argmax: am, pred } => {
@@ -366,7 +414,7 @@ mod tests {
         let batcher = Batcher::start(eng, 1, Duration::ZERO);
         let (rtx, rrx) = std::sync::mpsc::channel();
         let tx = batcher.submitter();
-        tx.send(BatchJob { id: 0, x: col(&x, 0), reply: rtx }).unwrap();
+        tx.send(BatchJob { id: 0, x: col(&x, 0), reply: rtx, submitted: Instant::now() }).unwrap();
         match rrx.recv().unwrap() {
             BatchReply::Ok { y, .. } => {
                 assert_eq!(y[0].to_bits(), want.at(0, 0).to_bits());
@@ -389,7 +437,13 @@ mod tests {
         let (rtx, rrx) = std::sync::mpsc::channel();
         let tx = batcher.submitter();
         for c in 0..x.cols() {
-            tx.send(BatchJob { id: c as u64, x: col(&x, c), reply: rtx.clone() }).unwrap();
+            tx.send(BatchJob {
+                id: c as u64,
+                x: col(&x, c),
+                reply: rtx.clone(),
+                submitted: Instant::now(),
+            })
+            .unwrap();
         }
         for c in 0..x.cols() {
             match rrx.recv().unwrap() {

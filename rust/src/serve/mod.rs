@@ -50,6 +50,13 @@
 //! ← {"error": "…", "id": 7}                  malformed request / bad shape
 //! ```
 //!
+//! A line of `{"op":"stats"}` is a control request: it bypasses the
+//! batcher and answers with a Prometheus-style text block of live
+//! counters (requests, errors, batches, mean batch width, queue depth,
+//! request-latency p50/p95/p99 — see `stats.rs`).  With `--trace
+//! out.json` the batcher thread also records queue/batch/forward/write
+//! spans to a Chrome trace-event file written on shutdown.
+//!
 //! `id` is an opaque non-negative integer echoed back so pipelining clients
 //! can match responses; `argmax` is the row index of the max score.
 //! `pred` is the server-side problem decode (`Problem::wire_pred` — the
@@ -74,9 +81,11 @@ pub mod batcher;
 pub mod client;
 pub mod protocol;
 pub mod server;
+pub mod stats;
 
 pub use batcher::{argmax, BatchEngine, BatchJob, BatchReply, Batcher};
 pub use client::{run_load, Client, LoadOpts, LoadReport};
+pub use stats::ServeStats;
 pub use protocol::{
     error_line, parse_request, parse_response, request_line, response_line, Request, Response,
 };

@@ -27,10 +27,11 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::batcher::{BatchEngine, BatchJob, BatchReply, Batcher};
 use super::protocol;
+use super::stats::ServeStats;
 use crate::config::{Activation, ServeConfig};
 use crate::linalg::Matrix;
 use crate::problem::Problem;
@@ -42,6 +43,7 @@ pub struct Server {
     stop: Arc<AtomicBool>,
     acceptors: Vec<JoinHandle<()>>,
     batcher: Option<Batcher>,
+    stats: Arc<ServeStats>,
 }
 
 impl Server {
@@ -58,8 +60,14 @@ impl Server {
     ) -> Result<Server> {
         cfg.validate()?;
         let engine = BatchEngine::new(ws, act, cfg.problem.unwrap_or(problem))?;
-        let batcher =
-            Batcher::start(engine, cfg.max_batch, Duration::from_micros(cfg.max_wait_us));
+        let stats = Arc::new(ServeStats::new());
+        let batcher = Batcher::start_with(
+            engine,
+            cfg.max_batch,
+            Duration::from_micros(cfg.max_wait_us),
+            stats.clone(),
+            cfg.trace_path.clone(),
+        );
         let listener = TcpListener::bind(cfg.addr())
             .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr()))?;
         let addr = listener.local_addr()?;
@@ -73,15 +81,17 @@ impl Server {
             stop: Arc::new(AtomicBool::new(false)),
             acceptors: Vec::with_capacity(cfg.threads),
             batcher: Some(batcher),
+            stats,
         };
         for i in 0..cfg.threads {
             let l = listener.try_clone()?;
             let stop = server.stop.clone();
             let tx = server.batcher.as_ref().expect("batcher running").submitter();
+            let stats = server.stats.clone();
             server.acceptors.push(
                 std::thread::Builder::new()
                     .name(format!("serve-conn-{i}"))
-                    .spawn(move || accept_loop(l, stop, tx))
+                    .spawn(move || accept_loop(l, stop, tx, stats))
                     .map_err(|e| anyhow::anyhow!("spawning handler thread: {e}"))?,
             );
         }
@@ -98,6 +108,11 @@ impl Server {
 
     pub fn port(&self) -> u16 {
         self.addr.port()
+    }
+
+    /// The live counters behind the `{"op":"stats"}` endpoint.
+    pub fn stats(&self) -> Arc<ServeStats> {
+        self.stats.clone()
     }
 
     /// Graceful shutdown: stop accepting, finish in-flight connections,
@@ -138,14 +153,19 @@ impl Drop for Server {
     }
 }
 
-fn accept_loop(listener: TcpListener, stop: Arc<AtomicBool>, tx: Sender<BatchJob>) {
+fn accept_loop(
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    tx: Sender<BatchJob>,
+    stats: Arc<ServeStats>,
+) {
     loop {
         match listener.accept() {
             Ok((stream, _)) => {
                 if stop.load(Ordering::SeqCst) {
                     return; // wake-up connect (or a straggler) — exit
                 }
-                let _ = handle_conn(stream, &tx, &stop);
+                let _ = handle_conn(stream, &tx, &stop, &stats);
             }
             Err(_) => {
                 if stop.load(Ordering::SeqCst) {
@@ -163,16 +183,19 @@ fn accept_loop(listener: TcpListener, stop: Arc<AtomicBool>, tx: Sender<BatchJob
 }
 
 /// What a drained request line turned into, in arrival order: a job the
-/// batcher will answer, or an immediate parse-error response.
+/// batcher will answer, an immediate parse-error response, or a stats
+/// block rendered at write time.
 enum Pending {
     Submitted,
     Error(String),
+    Stats,
 }
 
 fn handle_conn(
     stream: TcpStream,
     tx: &Sender<BatchJob>,
     stop: &AtomicBool,
+    stats: &ServeStats,
 ) -> std::io::Result<()> {
     let _ = stream.set_nodelay(true);
     // A read timeout keeps an idle connection from pinning its handler
@@ -211,7 +234,7 @@ fn handle_conn(
             }
         }
         pending.clear();
-        submit_line(&line, tx, &rtx, &mut pending);
+        submit_line(&line, tx, &rtx, &mut pending, stats);
         // Drain any complete lines the client pipelined behind this one so
         // the whole burst can share a micro-batch.
         while reader.buffer().contains(&b'\n') {
@@ -219,7 +242,7 @@ fn handle_conn(
             if reader.read_line(&mut line)? == 0 {
                 break;
             }
-            submit_line(&line, tx, &rtx, &mut pending);
+            submit_line(&line, tx, &rtx, &mut pending, stats);
         }
         // Write responses in request order.
         for p in &pending {
@@ -227,6 +250,10 @@ fn handle_conn(
                 Pending::Error(msg) => {
                     writer.write_all(msg.as_bytes())?;
                     writer.write_all(b"\n")?;
+                }
+                Pending::Stats => {
+                    // Multi-line text block (already newline-terminated).
+                    writer.write_all(stats.render_prometheus().as_bytes())?;
                 }
                 Pending::Submitted => match rrx.recv() {
                     Ok(BatchReply::Ok { id, y, argmax, pred }) => {
@@ -255,22 +282,38 @@ fn submit_line(
     tx: &Sender<BatchJob>,
     rtx: &Sender<BatchReply>,
     pending: &mut Vec<Pending>,
+    stats: &ServeStats,
 ) {
     let trimmed = line.trim();
     if trimmed.is_empty() {
         return;
     }
+    // Control op: `{"op":"stats"}` answers with the live counter block
+    // without entering the batcher.  Detected before the request parser so
+    // protocol.rs (and the predict wire format) stays byte-identical.
+    if trimmed.contains("\"op\"") && trimmed.contains("\"stats\"") {
+        pending.push(Pending::Stats);
+        return;
+    }
     match protocol::parse_request(trimmed) {
         Ok(req) => {
-            let job = BatchJob { id: req.id, x: req.x, reply: rtx.clone() };
+            let job =
+                BatchJob { id: req.id, x: req.x, reply: rtx.clone(), submitted: Instant::now() };
             match tx.send(job) {
-                Ok(()) => pending.push(Pending::Submitted),
+                Ok(()) => {
+                    stats.record_request();
+                    stats.queue_inc();
+                    pending.push(Pending::Submitted);
+                }
                 Err(_) => pending.push(Pending::Error(protocol::error_line(
                     Some(req.id),
                     "server shutting down",
                 ))),
             }
         }
-        Err(e) => pending.push(Pending::Error(protocol::error_line(None, &format!("{e:#}")))),
+        Err(e) => {
+            stats.record_error();
+            pending.push(Pending::Error(protocol::error_line(None, &format!("{e:#}"))));
+        }
     }
 }

@@ -1,0 +1,212 @@
+//! Live serve-path counters behind the `{"op":"stats"}` endpoint.
+//!
+//! [`ServeStats`] is shared (`Arc`) between every connection handler and
+//! the batcher thread.  The recording side is lock-free atomics plus one
+//! short mutex hold for the latency ring — no allocation on the hot path
+//! (the ring is preallocated; pinned by `tests/alloc_regression.rs`).
+//! Rendering (the cold path) snapshots the ring, sorts a copy and prints
+//! a Prometheus-style text block.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::metrics::percentile;
+
+/// Request latency samples kept for the percentile lines: enough to make
+/// p99 meaningful, small enough to snapshot under a lock without care.
+const LATENCY_RING: usize = 4096;
+
+/// Shared live counters for one server instance.
+#[derive(Debug)]
+pub struct ServeStats {
+    /// Well-formed requests admitted to the batcher queue.
+    requests: AtomicU64,
+    /// Parse failures and shape mismatches (error replies sent).
+    errors: AtomicU64,
+    /// Forward passes dispatched (batches, including singletons).
+    batches: AtomicU64,
+    /// Total columns across all dispatched batches (avg width = /batches).
+    batch_cols: AtomicU64,
+    /// Jobs admitted but not yet answered.
+    queue_depth: AtomicU64,
+    /// Ring of recent request latencies in µs (submit → reply), oldest
+    /// overwritten in place once full.
+    latencies: Mutex<LatencyRing>,
+}
+
+#[derive(Debug)]
+struct LatencyRing {
+    samples: Vec<u64>,
+    next: usize,
+}
+
+impl Default for ServeStats {
+    fn default() -> Self {
+        ServeStats {
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_cols: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            latencies: Mutex::new(LatencyRing {
+                samples: Vec::with_capacity(LATENCY_RING),
+                next: 0,
+            }),
+        }
+    }
+}
+
+impl ServeStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn queue_inc(&self) {
+        self.queue_depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn queue_dec(&self) {
+        // Saturating: a stats call racing admission must never underflow.
+        let _ = self.queue_depth.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
+            Some(d.saturating_sub(1))
+        });
+    }
+
+    #[inline]
+    pub fn record_batch(&self, cols: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_cols.fetch_add(cols, Ordering::Relaxed);
+    }
+
+    /// Record one request's submit→reply latency.  Pushes below capacity
+    /// never reallocate; past capacity the oldest slot is overwritten.
+    #[inline]
+    pub fn record_latency_us(&self, us: u64) {
+        let mut ring = self.latencies.lock().expect("stats lock");
+        if ring.samples.len() < LATENCY_RING {
+            ring.samples.push(us);
+        } else {
+            let i = ring.next;
+            ring.samples[i] = us;
+        }
+        ring.next = (ring.next + 1) % LATENCY_RING;
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    pub fn queue_depth(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// Render the Prometheus-style text block the `{"op":"stats"}`
+    /// endpoint answers with (`# TYPE` lines plus plain samples; latency
+    /// quantiles follow the summary-metric labeling convention).
+    pub fn render_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let requests = self.requests.load(Ordering::Relaxed);
+        let errors = self.errors.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let cols = self.batch_cols.load(Ordering::Relaxed);
+        let depth = self.queue_depth.load(Ordering::Relaxed);
+        let mut lat: Vec<f64> = {
+            let ring = self.latencies.lock().expect("stats lock");
+            ring.samples.iter().map(|&us| us as f64).collect()
+        };
+        lat.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        let mut out = String::with_capacity(512);
+        let _ = writeln!(out, "# TYPE serve_requests_total counter");
+        let _ = writeln!(out, "serve_requests_total {requests}");
+        let _ = writeln!(out, "# TYPE serve_errors_total counter");
+        let _ = writeln!(out, "serve_errors_total {errors}");
+        let _ = writeln!(out, "# TYPE serve_batches_total counter");
+        let _ = writeln!(out, "serve_batches_total {batches}");
+        let _ = writeln!(out, "# TYPE serve_batch_width_avg gauge");
+        let avg = if batches > 0 { cols as f64 / batches as f64 } else { 0.0 };
+        let _ = writeln!(out, "serve_batch_width_avg {avg:.3}");
+        let _ = writeln!(out, "# TYPE serve_queue_depth gauge");
+        let _ = writeln!(out, "serve_queue_depth {depth}");
+        let _ = writeln!(out, "# TYPE serve_latency_us summary");
+        for (label, q) in [("0.5", 0.5), ("0.95", 0.95), ("0.99", 0.99)] {
+            let v = if lat.is_empty() { 0.0 } else { percentile(&lat, q) };
+            let _ = writeln!(out, "serve_latency_us{{quantile=\"{label}\"}} {v:.0}");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_render() {
+        let s = ServeStats::new();
+        for _ in 0..5 {
+            s.record_request();
+            s.queue_inc();
+        }
+        s.record_error();
+        s.queue_dec();
+        s.record_batch(4);
+        s.record_batch(2);
+        for us in [100, 200, 300, 400] {
+            s.record_latency_us(us);
+        }
+        assert_eq!(s.requests(), 5);
+        assert_eq!(s.errors(), 1);
+        assert_eq!(s.queue_depth(), 4);
+        let text = s.render_prometheus();
+        assert!(text.contains("serve_requests_total 5"), "{text}");
+        assert!(text.contains("serve_errors_total 1"), "{text}");
+        assert!(text.contains("serve_batches_total 2"), "{text}");
+        assert!(text.contains("serve_batch_width_avg 3.000"), "{text}");
+        assert!(text.contains("serve_queue_depth 4"), "{text}");
+        assert!(text.contains("serve_latency_us{quantile=\"0.5\"} 200"), "{text}");
+        assert!(text.contains("serve_latency_us{quantile=\"0.99\"} 400"), "{text}");
+    }
+
+    #[test]
+    fn queue_depth_saturates_at_zero() {
+        let s = ServeStats::new();
+        s.queue_dec();
+        assert_eq!(s.queue_depth(), 0);
+    }
+
+    #[test]
+    fn latency_ring_overwrites_in_place() {
+        let s = ServeStats::new();
+        for us in 0..(LATENCY_RING as u64 + 100) {
+            s.record_latency_us(us);
+        }
+        let ring = s.latencies.lock().unwrap();
+        assert_eq!(ring.samples.len(), LATENCY_RING);
+        assert_eq!(ring.samples.capacity(), LATENCY_RING);
+        // Slot 0 holds the wrapped sample, not the original 0.
+        assert_eq!(ring.samples[0], LATENCY_RING as u64);
+    }
+
+    #[test]
+    fn empty_stats_render_zero_quantiles() {
+        let text = ServeStats::new().render_prometheus();
+        assert!(text.contains("serve_latency_us{quantile=\"0.95\"} 0"), "{text}");
+        assert!(text.contains("serve_batch_width_avg 0.000"), "{text}");
+    }
+}

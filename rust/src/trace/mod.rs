@@ -1,0 +1,795 @@
+//! Dependency-free structured tracing + metrics.
+//!
+//! Three cooperating pieces, all std-only and allocation-free on the hot
+//! path:
+//!
+//! - [`Tracer`] — a preallocated per-rank ring of fixed-size [`SpanEvent`]s.
+//!   Recording a span is two `Instant` reads plus one 40-byte write into a
+//!   `Vec` that never grows past its initial capacity (events past capacity
+//!   bump a drop counter instead).  A disabled tracer records nothing and
+//!   costs a single branch, so tracing is strictly observation-only: traced
+//!   runs stay byte-identical to untraced runs (pinned by
+//!   `tests/trace_regression.rs`) and the armed hot loops stay zero-alloc
+//!   (pinned by `tests/alloc_regression.rs`).
+//! - [`write_chrome_trace`] — serializes a tracer into Chrome trace-event
+//!   JSON (an array of `"ph":"X"` complete events plus `"ph":"M"` metadata),
+//!   loadable directly in Perfetto / `chrome://tracing`.  Cross-rank
+//!   alignment comes from the tracer's `offset_us`, which TCP ranks derive
+//!   from a hello-time clock exchange with rank 0.
+//! - [`MetricsRegistry`] — named counters / gauges / [`Hist`]ograms that
+//!   flatten to one `Vec<f64>` panel and back, so a whole registry is
+//!   aggregated across ranks with a single end-of-run scalar allreduce (the
+//!   pattern `WaitStats` pioneered; `WaitStats` now stores a [`Hist`]).
+//!
+//! Phase timings fold into [`PhaseRow`]s rendered by
+//! [`format_phase_table`] on rank 0 at the end of `gradfree train`.
+
+use std::fmt::Write as _;
+use std::ops::Index;
+use std::time::Instant;
+
+use crate::Result;
+
+/// Number of distinct span phases (length of [`Phase::ALL`]).
+pub const PHASES: usize = 20;
+
+/// Span phase identifiers.  Declaration order is the `Phase::ALL` /
+/// panel order, and `phase as usize` indexes the tracer's per-phase
+/// accumulators — append new variants at the end.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Whole train-loop iteration (wall clock).
+    Iter,
+    /// Local Gram accumulation (zaᵀ/aaᵀ syrk + gemm).
+    GramCompute,
+    /// Nonblocking issue of the Gram allreduce pair.
+    GramIssue,
+    /// Wait for the Gram reductions to land.
+    GramWait,
+    /// Rank-0 ridge solve (W and a-update inverse).
+    Solve,
+    /// Broadcast of the solved weight panel.
+    BcastW,
+    /// Broadcast of the a-update inverse.
+    BcastMinv,
+    /// Activation (a) update.
+    AUpdate,
+    /// Output/hidden code (z) updates.
+    ZUpdate,
+    /// Dual (λ) update.
+    Lambda,
+    /// Checkpoint write.
+    Checkpoint,
+    /// Eval/metrics block.
+    Eval,
+    /// Collective: allreduce (blocking or issue→wait window).
+    Allreduce,
+    /// Collective: broadcast (blocking or issue→wait window).
+    Broadcast,
+    /// Collective: scalar allreduce/broadcast.
+    Scalars,
+    /// Collective: barrier.
+    Barrier,
+    /// Serve: request time in the batcher queue.
+    Queue,
+    /// Serve: batch assembly window.
+    Batch,
+    /// Serve: batched forward pass.
+    Forward,
+    /// Serve: reply serialization + socket write.
+    Write,
+}
+
+impl Phase {
+    /// Every phase, in declaration (= panel) order.
+    pub const ALL: [Phase; PHASES] = [
+        Phase::Iter,
+        Phase::GramCompute,
+        Phase::GramIssue,
+        Phase::GramWait,
+        Phase::Solve,
+        Phase::BcastW,
+        Phase::BcastMinv,
+        Phase::AUpdate,
+        Phase::ZUpdate,
+        Phase::Lambda,
+        Phase::Checkpoint,
+        Phase::Eval,
+        Phase::Allreduce,
+        Phase::Broadcast,
+        Phase::Scalars,
+        Phase::Barrier,
+        Phase::Queue,
+        Phase::Batch,
+        Phase::Forward,
+        Phase::Write,
+    ];
+
+    /// Stable snake_case name (span `name` in the trace JSON, and the
+    /// `ph_{name}_*` metric keys).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Iter => "iter",
+            Phase::GramCompute => "gram_compute",
+            Phase::GramIssue => "gram_issue",
+            Phase::GramWait => "gram_wait",
+            Phase::Solve => "solve",
+            Phase::BcastW => "bcast_w",
+            Phase::BcastMinv => "bcast_minv",
+            Phase::AUpdate => "a_update",
+            Phase::ZUpdate => "z_update",
+            Phase::Lambda => "lambda",
+            Phase::Checkpoint => "checkpoint",
+            Phase::Eval => "eval",
+            Phase::Allreduce => "allreduce",
+            Phase::Broadcast => "broadcast",
+            Phase::Scalars => "scalars",
+            Phase::Barrier => "barrier",
+            Phase::Queue => "queue",
+            Phase::Batch => "batch",
+            Phase::Forward => "forward",
+            Phase::Write => "write",
+        }
+    }
+
+    /// Trace-event category.
+    pub fn cat(self) -> &'static str {
+        match self {
+            Phase::Allreduce | Phase::Broadcast | Phase::Scalars | Phase::Barrier => "comm",
+            Phase::Queue | Phase::Batch | Phase::Forward | Phase::Write => "serve",
+            _ => "train",
+        }
+    }
+
+    /// Display track (`tid`) inside a rank's process row: collectives get
+    /// their own lane so issue→wait windows visibly overlap compute spans.
+    pub fn track(self) -> u32 {
+        match self {
+            Phase::Allreduce | Phase::Broadcast | Phase::Scalars | Phase::Barrier => 1,
+            _ => 0,
+        }
+    }
+}
+
+/// One recorded span.  Fixed-size so the ring buffer never allocates.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanEvent {
+    pub phase: Phase,
+    /// Train iteration (0 outside the train loop).
+    pub iter: u32,
+    /// Start, µs since the tracer epoch.
+    pub start_us: u64,
+    /// Duration in µs.
+    pub dur_us: u64,
+    /// Phase-specific detail (e.g. payload bytes for collectives).
+    pub detail: u64,
+}
+
+/// Preallocated per-rank span recorder.
+///
+/// `record` on an enabled tracer is two `Instant` reads, two per-phase
+/// accumulator bumps, and one push into a `Vec` that is never grown past
+/// its construction capacity — when full, events are counted in `dropped`
+/// instead.  On a disabled tracer, `start()` returns `None` and `record`
+/// is a no-op, so instrumentation sites cost one branch.
+#[derive(Debug)]
+pub struct Tracer {
+    enabled: bool,
+    rank: usize,
+    iter: u32,
+    epoch: Instant,
+    offset_us: i64,
+    events: Vec<SpanEvent>,
+    dropped: u64,
+    calls: [u64; PHASES],
+    secs: [f64; PHASES],
+}
+
+impl Tracer {
+    /// A tracer that records nothing.
+    pub fn disabled() -> Tracer {
+        Tracer {
+            enabled: false,
+            rank: 0,
+            iter: 0,
+            epoch: Instant::now(),
+            offset_us: 0,
+            events: Vec::new(),
+            dropped: 0,
+            calls: [0; PHASES],
+            secs: [0.0; PHASES],
+        }
+    }
+
+    /// An enabled tracer with room for `capacity` events, epoch = now.
+    pub fn enabled(rank: usize, capacity: usize) -> Tracer {
+        Self::enabled_at(rank, capacity, Instant::now(), 0)
+    }
+
+    /// An enabled tracer with an explicit epoch and cross-rank clock
+    /// offset (added to every timestamp at export time).
+    pub fn enabled_at(rank: usize, capacity: usize, epoch: Instant, offset_us: i64) -> Tracer {
+        Tracer {
+            enabled: true,
+            rank,
+            iter: 0,
+            epoch,
+            offset_us,
+            events: Vec::with_capacity(capacity),
+            dropped: 0,
+            calls: [0; PHASES],
+            secs: [0.0; PHASES],
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Tag subsequent spans with a train iteration.
+    pub fn set_iter(&mut self, iter: usize) {
+        self.iter = iter as u32;
+    }
+
+    /// Cross-rank clock offset applied at export (µs to add so this rank's
+    /// timeline aligns with rank 0's).
+    pub fn offset_us(&self) -> i64 {
+        self.offset_us
+    }
+
+    pub fn set_offset_us(&mut self, offset_us: i64) {
+        self.offset_us = offset_us;
+    }
+
+    /// Span start marker; `None` when disabled so callers skip the clock
+    /// read entirely.
+    #[inline]
+    pub fn start(&self) -> Option<Instant> {
+        if self.enabled {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Record a span opened by [`Tracer::start`].  No-op if `t0` is `None`.
+    #[inline]
+    pub fn record(&mut self, phase: Phase, t0: Option<Instant>, detail: u64) {
+        if let Some(t0) = t0 {
+            self.record_from(phase, t0, detail);
+        }
+    }
+
+    /// Record a span with an explicit start instant (for spans whose start
+    /// predates the call site, e.g. nonblocking issue→wait windows).
+    #[inline]
+    pub fn record_from(&mut self, phase: Phase, t0: Instant, detail: u64) {
+        if !self.enabled {
+            return;
+        }
+        let now = Instant::now();
+        // duration_since saturates to zero when t0 is after `now` or
+        // before the epoch, so clock math never panics.
+        let start_us = t0.duration_since(self.epoch).as_micros() as u64;
+        let dur = now.duration_since(t0);
+        let idx = phase as usize;
+        self.calls[idx] += 1;
+        self.secs[idx] += dur.as_secs_f64();
+        if self.events.len() < self.events.capacity() {
+            // push below capacity never reallocates: zero-alloc hot path.
+            self.events.push(SpanEvent {
+                phase,
+                iter: self.iter,
+                start_us,
+                dur_us: dur.as_micros() as u64,
+                detail,
+            });
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    pub fn events(&self) -> &[SpanEvent] {
+        &self.events
+    }
+
+    /// Spans discarded because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Number of recorded calls for a phase (including dropped spans).
+    pub fn calls(&self, phase: Phase) -> u64 {
+        self.calls[phase as usize]
+    }
+
+    /// Accumulated seconds for a phase (including dropped spans).
+    pub fn seconds(&self, phase: Phase) -> f64 {
+        self.secs[phase as usize]
+    }
+
+    /// Per-phase totals for phases that recorded at least one span.
+    pub fn phase_rows(&self) -> Vec<PhaseRow> {
+        Phase::ALL
+            .iter()
+            .filter(|p| self.calls[**p as usize] > 0)
+            .map(|p| PhaseRow {
+                name: p.name().to_string(),
+                calls: self.calls[*p as usize],
+                total_s: self.secs[*p as usize],
+            })
+            .collect()
+    }
+}
+
+/// Write a tracer's events as Chrome trace-event JSON (array form), one
+/// file per rank.  Loadable in Perfetto (ui.perfetto.dev) or
+/// `chrome://tracing`; ranks become processes, compute/collectives become
+/// per-rank tracks.  Timestamps get `offset_us` added so TCP ranks align
+/// with rank 0's clock.
+pub fn write_chrome_trace(path: &str, tracer: &Tracer) -> Result<()> {
+    let rank = tracer.rank();
+    let mut out = String::with_capacity(128 + tracer.events().len() * 96);
+    out.push('[');
+    // Metadata: name the process after the rank and the two tracks.
+    let _ = write!(
+        out,
+        "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{rank},\"tid\":0,\
+         \"args\":{{\"name\":\"rank {rank}\"}}}}"
+    );
+    let _ = write!(
+        out,
+        ",{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{rank},\"tid\":0,\
+         \"args\":{{\"name\":\"train\"}}}}"
+    );
+    let _ = write!(
+        out,
+        ",{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{rank},\"tid\":1,\
+         \"args\":{{\"name\":\"collectives\"}}}}"
+    );
+    for ev in tracer.events() {
+        let ts = ev.start_us as i64 + tracer.offset_us();
+        let _ = write!(
+            out,
+            ",{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+             \"pid\":{},\"tid\":{},\"args\":{{\"iter\":{},\"detail\":{}}}}}",
+            ev.phase.name(),
+            ev.phase.cat(),
+            ts,
+            ev.dur_us,
+            rank,
+            ev.phase.track(),
+            ev.iter,
+            ev.detail
+        );
+    }
+    if tracer.dropped() > 0 {
+        let _ = write!(
+            out,
+            ",{{\"name\":\"spans_dropped\",\"ph\":\"I\",\"ts\":0,\"pid\":{},\"tid\":0,\
+             \"s\":\"p\",\"args\":{{\"count\":{}}}}}",
+            rank,
+            tracer.dropped()
+        );
+    }
+    out.push(']');
+    std::fs::write(path, out).map_err(|e| anyhow::anyhow!("write trace {path}: {e}"))
+}
+
+/// Fixed-bucket latency histogram: `edges_us.len() + 1` counts, where
+/// bucket `i` holds samples `< edges_us[i]` (exclusive upper edges) and
+/// the last bucket is overflow.  Bucket semantics match the original
+/// hand-rolled `WaitStats` histogram, which now stores one of these.
+#[derive(Clone, Debug)]
+pub struct Hist {
+    edges_us: &'static [u64],
+    counts: Vec<u64>,
+}
+
+impl Hist {
+    pub fn new(edges_us: &'static [u64]) -> Hist {
+        Hist {
+            edges_us,
+            counts: vec![0; edges_us.len() + 1],
+        }
+    }
+
+    /// Record one sample (µs).  Zero-alloc.
+    #[inline]
+    pub fn record_us(&mut self, us: u64) {
+        let mut idx = self.edges_us.len();
+        for (i, edge) in self.edges_us.iter().enumerate() {
+            if us < *edge {
+                idx = i;
+                break;
+            }
+        }
+        self.counts[idx] += 1;
+    }
+
+    /// Number of buckets (`edges + 1`, the last being overflow).
+    pub fn buckets(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn edges_us(&self) -> &'static [u64] {
+        self.edges_us
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, u64> {
+        self.counts.iter()
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Overwrite counts from an f64 panel slice (post-allreduce).
+    pub fn set_counts(&mut self, from: &[f64]) {
+        for (dst, src) in self.counts.iter_mut().zip(from) {
+            *dst = *src as u64;
+        }
+    }
+
+    /// Nearest-rank percentile over the bucketed samples, reported as the
+    /// bucket's upper edge in µs (the overflow bucket reports the last
+    /// edge, i.e. a lower bound).  `q` in [0, 1].
+    pub fn percentile_us(&self, q: f64) -> u64 {
+        let n = self.total();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return if i < self.edges_us.len() {
+                    self.edges_us[i]
+                } else {
+                    *self.edges_us.last().unwrap_or(&0)
+                };
+            }
+        }
+        *self.edges_us.last().unwrap_or(&0)
+    }
+}
+
+impl Index<usize> for Hist {
+    type Output = u64;
+    fn index(&self, i: usize) -> &u64 {
+        &self.counts[i]
+    }
+}
+
+impl<'a> IntoIterator for &'a Hist {
+    type Item = &'a u64;
+    type IntoIter = std::slice::Iter<'a, u64>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.counts.iter()
+    }
+}
+
+/// A registry entry's value.
+#[derive(Clone, Debug)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(f64),
+    Hist(Hist),
+}
+
+/// Named counters / gauges / histograms that flatten into one `Vec<f64>`
+/// panel (insertion order, histograms contributing one slot per bucket)
+/// and back, so an entire registry aggregates across ranks with a single
+/// scalar allreduce.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    entries: Vec<(String, MetricValue)>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        Self::default()
+    }
+
+    pub fn counter(&mut self, name: &str, value: u64) {
+        self.entries
+            .push((name.to_string(), MetricValue::Counter(value)));
+    }
+
+    pub fn gauge(&mut self, name: &str, value: f64) {
+        self.entries
+            .push((name.to_string(), MetricValue::Gauge(value)));
+    }
+
+    pub fn hist(&mut self, name: &str, hist: Hist) {
+        self.entries.push((name.to_string(), MetricValue::Hist(hist)));
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Flatten every entry into an f64 panel (sum-reducible across ranks).
+    pub fn panel(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        for (_, v) in &self.entries {
+            match v {
+                MetricValue::Counter(c) => out.push(*c as f64),
+                MetricValue::Gauge(g) => out.push(*g),
+                MetricValue::Hist(h) => out.extend(h.counts().iter().map(|c| *c as f64)),
+            }
+        }
+        out
+    }
+
+    /// Overwrite every entry from a panel produced by [`Self::panel`]
+    /// (after allreduce).  Errors on length mismatch.
+    pub fn apply_panel(&mut self, panel: &[f64]) -> Result<()> {
+        let mut i = 0;
+        for (name, v) in &mut self.entries {
+            match v {
+                MetricValue::Counter(c) => {
+                    anyhow::ensure!(i < panel.len(), "panel too short at {name}");
+                    *c = panel[i] as u64;
+                    i += 1;
+                }
+                MetricValue::Gauge(g) => {
+                    anyhow::ensure!(i < panel.len(), "panel too short at {name}");
+                    *g = panel[i];
+                    i += 1;
+                }
+                MetricValue::Hist(h) => {
+                    let n = h.buckets();
+                    anyhow::ensure!(i + n <= panel.len(), "panel too short at {name}");
+                    h.set_counts(&panel[i..i + n]);
+                    i += n;
+                }
+            }
+        }
+        anyhow::ensure!(
+            i == panel.len(),
+            "panel length {} != registry width {i}",
+            panel.len()
+        );
+        Ok(())
+    }
+
+    pub fn counter_value(&self, name: &str) -> Option<u64> {
+        self.entries.iter().find_map(|(n, v)| match v {
+            MetricValue::Counter(c) if n == name => Some(*c),
+            _ => None,
+        })
+    }
+
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.entries.iter().find_map(|(n, v)| match v {
+            MetricValue::Gauge(g) if n == name => Some(*g),
+            _ => None,
+        })
+    }
+
+    pub fn hist_ref(&self, name: &str) -> Option<&Hist> {
+        self.entries.iter().find_map(|(n, v)| match v {
+            MetricValue::Hist(h) if n == name => Some(h),
+            _ => None,
+        })
+    }
+}
+
+/// One row of the rank-0 phase-breakdown table: world-summed calls and
+/// seconds for a phase.
+#[derive(Clone, Debug)]
+pub struct PhaseRow {
+    pub name: String,
+    pub calls: u64,
+    pub total_s: f64,
+}
+
+/// Render phase rows as an aligned text table.  `share` is each row's
+/// total relative to the largest row (phases nest and overlap, so shares
+/// do not sum to 100%).
+pub fn format_phase_table(rows: &[PhaseRow]) -> String {
+    let mut out = String::new();
+    let name_w = rows
+        .iter()
+        .map(|r| r.name.len())
+        .chain(std::iter::once("phase".len()))
+        .max()
+        .unwrap_or(5);
+    let max_total = rows.iter().map(|r| r.total_s).fold(0.0f64, f64::max);
+    let _ = writeln!(
+        out,
+        "  {:name_w$}  {:>8}  {:>10}  {:>9}  {:>6}",
+        "phase", "calls", "total_s", "mean_ms", "share"
+    );
+    for r in rows {
+        let mean_ms = if r.calls > 0 {
+            r.total_s * 1e3 / r.calls as f64
+        } else {
+            0.0
+        };
+        let share = if max_total > 0.0 {
+            r.total_s / max_total * 100.0
+        } else {
+            0.0
+        };
+        let _ = writeln!(
+            out,
+            "  {:name_w$}  {:>8}  {:>10.4}  {:>9.3}  {:>5.1}%",
+            r.name, r.calls, r.total_s, mean_ms, share
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_names_are_unique_and_cover_all() {
+        let mut names: Vec<&str> = Phase::ALL.iter().map(|p| p.name()).collect();
+        assert_eq!(names.len(), PHASES);
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), PHASES, "duplicate phase name");
+        for (i, p) in Phase::ALL.iter().enumerate() {
+            assert_eq!(*p as usize, i, "Phase::ALL order != declaration order");
+        }
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let mut t = Tracer::disabled();
+        assert!(t.start().is_none());
+        t.record(Phase::Iter, t.start(), 0);
+        t.record_from(Phase::Iter, Instant::now(), 0);
+        assert!(t.events().is_empty());
+        assert_eq!(t.calls(Phase::Iter), 0);
+    }
+
+    #[test]
+    fn tracer_records_and_drops_at_capacity() {
+        let mut t = Tracer::enabled(3, 2);
+        t.set_iter(7);
+        let t0 = t.start();
+        assert!(t0.is_some());
+        t.record(Phase::Solve, t0, 11);
+        t.record_from(Phase::GramWait, Instant::now(), 22);
+        t.record_from(Phase::Allreduce, Instant::now(), 33); // over capacity
+        assert_eq!(t.events().len(), 2);
+        assert_eq!(t.dropped(), 1);
+        // Accumulators still count the dropped span.
+        assert_eq!(t.calls(Phase::Allreduce), 1);
+        assert_eq!(t.events()[0].phase, Phase::Solve);
+        assert_eq!(t.events()[0].iter, 7);
+        assert_eq!(t.events()[0].detail, 11);
+        let rows = t.phase_rows();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].name, "gram_wait"); // Phase::ALL order
+        assert_eq!(rows[1].name, "solve");
+        assert_eq!(rows[2].name, "allreduce");
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_offset_applied() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("gf_trace_test_{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        let mut t = Tracer::enabled_at(1, 8, Instant::now(), 500);
+        t.record_from(Phase::Iter, Instant::now(), 0);
+        t.record_from(Phase::Allreduce, Instant::now(), 4096);
+        write_chrome_trace(&path, &t).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(text.starts_with('[') && text.ends_with(']'));
+        assert!(text.contains("\"name\":\"iter\""));
+        assert!(text.contains("\"name\":\"allreduce\""));
+        assert!(text.contains("\"cat\":\"comm\""));
+        assert!(text.contains("\"pid\":1"));
+        assert!(text.contains("\"detail\":4096"));
+        // Offset pushes every ts to >= 500.
+        let v = crate::config::Json::parse(&text).unwrap();
+        let arr = v.as_arr().unwrap();
+        let mut spans = 0;
+        for ev in arr {
+            if ev.get("ph").and_then(|p| p.as_str().ok()) == Some("X") {
+                spans += 1;
+                let ts = ev.get("ts").unwrap().as_f64().unwrap();
+                assert!(ts >= 500.0, "offset not applied: ts={ts}");
+            }
+        }
+        assert_eq!(spans, 2);
+    }
+
+    #[test]
+    fn hist_buckets_index_and_percentiles() {
+        static EDGES: [u64; 3] = [10, 100, 1000];
+        let mut h = Hist::new(&EDGES);
+        assert_eq!(h.buckets(), 4);
+        h.record_us(5); // bucket 0 (< 10)
+        h.record_us(10); // bucket 1 (edges exclusive, like WaitStats)
+        h.record_us(50); // bucket 1
+        h.record_us(5000); // overflow
+        assert_eq!(h[0], 1);
+        assert_eq!(h[1], 2);
+        assert_eq!(h[2], 0);
+        assert_eq!(h[3], 1);
+        assert_eq!(h.total(), 4);
+        assert_eq!(h.iter().sum::<u64>(), 4);
+        assert_eq!(h.percentile_us(0.25), 10);
+        assert_eq!(h.percentile_us(0.5), 100);
+        assert_eq!(h.percentile_us(0.75), 100);
+        // Overflow bucket reports the last edge as a lower bound.
+        assert_eq!(h.percentile_us(1.0), 1000);
+        assert_eq!(Hist::new(&EDGES).percentile_us(0.5), 0);
+    }
+
+    #[test]
+    fn registry_panel_roundtrip_simulates_allreduce() {
+        static EDGES: [u64; 2] = [10, 100];
+        let build = |reqs: u64, secs: f64, samples: &[u64]| {
+            let mut reg = MetricsRegistry::new();
+            reg.counter("reqs", reqs);
+            reg.gauge("secs", secs);
+            let mut h = Hist::new(&EDGES);
+            for s in samples {
+                h.record_us(*s);
+            }
+            reg.hist("lat", h);
+            reg
+        };
+        let a = build(3, 1.5, &[5, 50]);
+        let b = build(4, 2.5, &[500]);
+        // Panel widths match; sum elementwise like allreduce_scalars would.
+        let pa = a.panel();
+        let pb = b.panel();
+        assert_eq!(pa.len(), pb.len());
+        assert_eq!(pa.len(), 1 + 1 + 3);
+        let sum: Vec<f64> = pa.iter().zip(&pb).map(|(x, y)| x + y).collect();
+        let mut world = build(0, 0.0, &[]);
+        world.apply_panel(&sum).unwrap();
+        assert_eq!(world.counter_value("reqs"), Some(7));
+        assert!((world.gauge_value("secs").unwrap() - 4.0).abs() < 1e-12);
+        let h = world.hist_ref("lat").unwrap();
+        assert_eq!(h.counts(), &[1, 1, 1]);
+        // Length mismatch is an error, not silent corruption.
+        assert!(world.apply_panel(&sum[..2]).is_err());
+    }
+
+    #[test]
+    fn phase_table_renders_all_columns() {
+        let rows = vec![
+            PhaseRow {
+                name: "iter".into(),
+                calls: 10,
+                total_s: 2.0,
+            },
+            PhaseRow {
+                name: "gram_wait".into(),
+                calls: 20,
+                total_s: 0.5,
+            },
+        ];
+        let table = format_phase_table(&rows);
+        assert!(table.contains("phase"));
+        assert!(table.contains("calls"));
+        assert!(table.contains("iter"));
+        assert!(table.contains("gram_wait"));
+        assert!(table.contains("100.0%"));
+        assert!(table.contains("25.0%"));
+    }
+}

@@ -9,6 +9,13 @@
 //! recycled reduction slots — the fix for the seed `CommWorld`'s three
 //! clones-per-call behind one mutex).
 //!
+//! Every collective section below runs with an **enabled tracer**
+//! (`--trace` armed): recording a span is two `Instant` reads plus a push
+//! into a preallocated ring, so the traced hot path must stay zero-alloc
+//! — the tentpole's "observation-only" claim.  A dedicated section pins
+//! the same for `trace::Tracer` recording and the serve `ServeStats`
+//! counters/latency ring.
+//!
 //! The shim is a counting `#[global_allocator]` wrapping `System`; the
 //! whole check lives in a single `#[test]` so no sibling test can allocate
 //! while the counter is armed.
@@ -248,6 +255,41 @@ fn steady_state_hot_loops_allocate_nothing() {
         "steady-state serve batch forward must not allocate ({serve_allocs} allocations)"
     );
 
+    // ---- tracing + serve stats: recording is observation-only --------
+    // An enabled Tracer's record path (two Instant reads + one push into
+    // the preallocated event ring) and the ServeStats counters/latency
+    // ring must not allocate; rendering/export are cold paths and stay
+    // outside the armed window.
+    use gradfree_admm::trace::{Phase, Tracer};
+    let mut tracer = Tracer::enabled(0, 256);
+    let serve_stats = gradfree_admm::serve::ServeStats::new();
+    // Warm one full cycle (first mutex lock, lazy statics, …).
+    let t0 = tracer.start();
+    tracer.record(Phase::Queue, t0, 1);
+    serve_stats.record_request();
+    serve_stats.queue_inc();
+    serve_stats.record_batch(4);
+    serve_stats.record_latency_us(17);
+    serve_stats.queue_dec();
+    let ((), trace_allocs) = armed(|| {
+        for i in 0..8u64 {
+            let t0 = tracer.start();
+            serve_stats.record_request();
+            serve_stats.queue_inc();
+            tracer.record(Phase::Batch, t0, i);
+            tracer.record(Phase::Forward, t0, i);
+            serve_stats.record_batch(i);
+            serve_stats.record_latency_us(100 + i);
+            serve_stats.queue_dec();
+        }
+    });
+    assert_eq!(
+        trace_allocs, 0,
+        "tracer/stats recording must not allocate ({trace_allocs} allocations)"
+    );
+    assert!(tracer.events().len() >= 17 && tracer.dropped() == 0);
+    assert_eq!(serve_stats.requests(), 9);
+
     // ---- Local transport: steady-state allreduce ---------------------
     // Warm the ledger's recycled deposit buffers with two rounds, then
     // arm the counter (rank 0, inside barrier brackets so every rank sits
@@ -262,6 +304,10 @@ fn steady_state_hot_loops_allocate_nothing() {
     std::thread::scope(|s| {
         for (rank, mut comm) in worlds.into_iter().enumerate() {
             s.spawn(move || {
+                // Trace the steady-state rounds: recording comm spans must
+                // be observation-only (capacity preallocated here).
+                comm.enable_trace(256);
+                comm.set_trace_iter(0);
                 let mut m = Matrix::from_fn(6, 6, |r, c| (rank + r * 6 + c) as f32);
                 for _ in 0..2 {
                     comm.allreduce_sum(&mut m).unwrap(); // warm slots
@@ -303,6 +349,8 @@ fn steady_state_hot_loops_allocate_nothing() {
     std::thread::scope(|s| {
         for (rank, mut comm) in worlds.into_iter().enumerate() {
             s.spawn(move || {
+                comm.enable_trace(256);
+                comm.set_trace_iter(0);
                 let mut zat = Matrix::from_fn(5, 7, |r, c| (rank + r * 7 + c) as f32);
                 let mut aat = Matrix::from_fn(7, 7, |r, c| (rank * 2 + r + c) as f32);
                 let mut minv = Matrix::from_fn(4, 4, |r, c| (r * 4 + c) as f32);
@@ -373,6 +421,8 @@ fn steady_state_hot_loops_allocate_nothing() {
                                 .unwrap()
                         };
                         let mut comm = gradfree_admm::cluster::Collectives::Tcp(comm);
+                        comm.enable_trace(256);
+                        comm.set_trace_iter(0);
                         // non-divisible length exercises the uneven chunks
                         let mut m = Matrix::from_fn(5, 2, |r, c| (rank + r * 2 + c) as f32);
                         for _ in 0..2 {

@@ -1,0 +1,166 @@
+//! Tracing is observation-only: a run with `--trace` must produce
+//! **bit-identical** weights to the same run without it, on both
+//! transports and both schedules — the tentpole's core invariant
+//! (`trace_path` is deliberately excluded from `spmd_fingerprint`, so a
+//! traced rank can even join an untraced world).  The emitted per-rank
+//! Chrome trace-event files must be valid JSON (our own `config::Json`
+//! parser, the same grammar `python -m json.tool` accepts in CI) and
+//! carry the span names the timeline view keys on.
+
+use gradfree_admm::cluster::{Collectives, TcpComm};
+use gradfree_admm::config::{Json, Schedule, TrainConfig, Transport};
+use gradfree_admm::coordinator::{spmd, AdmmTrainer, TrainOutcome};
+use gradfree_admm::data::{blobs, Dataset, Normalizer};
+
+fn loopback_available() -> bool {
+    std::net::TcpListener::bind("127.0.0.1:0").is_ok()
+}
+
+fn normalized(mut train: Dataset, mut test: Dataset) -> (Dataset, Dataset) {
+    let norm = Normalizer::fit(&train.x);
+    norm.apply(&mut train.x);
+    norm.apply(&mut test.x);
+    (train, test)
+}
+
+fn mk_cfg(schedule: Schedule, workers: usize) -> TrainConfig {
+    TrainConfig {
+        dims: vec![5, 4, 1],
+        gamma: 1.0,
+        iters: 4,
+        warmup_iters: 2,
+        workers,
+        eval_every: 2,
+        seed: 43,
+        schedule,
+        ..TrainConfig::default()
+    }
+}
+
+/// Per-test unique temp path for a trace file (ranks > 0 append `.rankR`).
+fn tmp_trace(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("gfadmm_trace_{}_{tag}.json", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn weight_bits(out: &TrainOutcome) -> Vec<Vec<u32>> {
+    out.weights.iter().map(|w| w.as_slice().iter().map(|v| v.to_bits()).collect()).collect()
+}
+
+/// Parse one emitted trace file and assert it is a Chrome trace-event
+/// array containing every span name in `must_contain`.
+fn check_trace_file(path: &str, must_contain: &[&str]) {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("trace file {path} missing: {e}"));
+    let json = Json::parse(&text).unwrap_or_else(|e| panic!("trace {path} is not JSON: {e:#}"));
+    let events = json.as_arr().unwrap_or_else(|e| panic!("trace {path} not an array: {e:#}"));
+    assert!(events.len() > 3, "trace {path} has no span events beyond metadata");
+    for name in must_contain {
+        let found = events.iter().any(|ev| {
+            ev.get("name").and_then(|n| n.as_str().ok()).map(|s| s == *name).unwrap_or(false)
+        });
+        assert!(found, "trace {path} lacks a '{name}' span");
+    }
+    // Every complete span carries the Perfetto-required fields.
+    let span = events
+        .iter()
+        .find(|ev| ev.get("ph").and_then(|p| p.as_str().ok()).map(|s| s == "X").unwrap_or(false))
+        .unwrap_or_else(|| panic!("trace {path} has no complete ('X') spans"));
+    for field in ["ts", "dur", "pid", "tid"] {
+        assert!(span.get(field).is_some(), "trace {path} span lacks '{field}'");
+    }
+}
+
+#[test]
+fn local_traced_training_bit_identical_and_emits_per_rank_traces() {
+    let (train, test) = normalized(blobs(5, 240, 2.5, 7), blobs(5, 60, 2.5, 8));
+    for (schedule, tag) in [(Schedule::Bulk, "local_bulk"), (Schedule::Pipelined, "local_pipe")] {
+        let plain = AdmmTrainer::new(mk_cfg(schedule, 3), &train, &test)
+            .unwrap()
+            .train()
+            .unwrap();
+
+        let mut cfg = mk_cfg(schedule, 3);
+        cfg.trace_path = tmp_trace(tag);
+        // Tracing is not part of the schedule identity: a traced rank may
+        // join an untraced world.
+        assert_eq!(cfg.spmd_fingerprint(), mk_cfg(schedule, 3).spmd_fingerprint());
+        let traced = AdmmTrainer::new(cfg.clone(), &train, &test).unwrap().train().unwrap();
+
+        assert_eq!(
+            weight_bits(&traced),
+            weight_bits(&plain),
+            "{tag}: traced weights diverged from untraced"
+        );
+        assert!(!traced.stats.phases_world.is_empty(), "{tag}: no aggregated phase rows");
+        assert!(plain.stats.phases_world.is_empty(), "{tag}: untraced run grew phase rows");
+
+        // One file per rank: rank 0 at the given path, r > 0 at `.rankR`.
+        check_trace_file(&cfg.trace_path, &["iter", "gram_wait", "solve"]);
+        for rank in 1..3 {
+            check_trace_file(&format!("{}.rank{rank}", cfg.trace_path), &["iter", "gram_wait"]);
+        }
+        for rank in 0..3 {
+            let _ = std::fs::remove_file(spmd::rank_path(&cfg.trace_path, rank));
+        }
+    }
+}
+
+#[test]
+fn tcp_traced_training_bit_identical_to_untraced_local() {
+    if !loopback_available() {
+        return;
+    }
+    let (train, test) = normalized(blobs(5, 240, 2.5, 7), blobs(5, 60, 2.5, 8));
+    for (schedule, tag) in [(Schedule::Bulk, "tcp_bulk"), (Schedule::Pipelined, "tcp_pipe")] {
+        // Untraced local reference — the cross-transport equivalence tests
+        // already pin tcp == local, so traced-tcp == untraced-local pins
+        // both properties at once.
+        let plain = AdmmTrainer::new(mk_cfg(schedule, 2), &train, &test)
+            .unwrap()
+            .train()
+            .unwrap();
+
+        let mut cfg = mk_cfg(schedule, 2);
+        cfg.transport = Transport::Tcp;
+        cfg.world_size = 2;
+        cfg.peers = vec!["a:0".into(), "b:0".into()]; // validation only
+        cfg.trace_path = tmp_trace(tag);
+        let fp = cfg.spmd_fingerprint();
+        let opts = spmd::SpmdOpts::default();
+        let (cfg_ref, opts_ref) = (&cfg, &opts);
+        let (train_ref, test_ref) = (&train, &test);
+
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let outcomes: Vec<TrainOutcome> = std::thread::scope(|s| {
+            let addr = &addr;
+            let hub = s.spawn(move || {
+                let mut comm = Collectives::Tcp(TcpComm::hub(listener, 2, fp).unwrap());
+                spmd::train_rank(cfg_ref, &mut comm, train_ref, test_ref, opts_ref)
+            });
+            let leaf = s.spawn(move || {
+                let mut comm = Collectives::Tcp(TcpComm::leaf(addr, 1, 2, fp).unwrap());
+                spmd::train_rank(cfg_ref, &mut comm, train_ref, test_ref, opts_ref)
+            });
+            vec![hub.join().unwrap().unwrap(), leaf.join().unwrap().unwrap()]
+        });
+
+        for (rank, o) in outcomes.iter().enumerate() {
+            assert_eq!(
+                weight_bits(o),
+                weight_bits(&plain),
+                "{tag}: traced tcp rank {rank} weights diverged from untraced local"
+            );
+        }
+        // The leaf's trace carries rank 0's clock offset; both files must
+        // parse and carry the train-loop spans.
+        check_trace_file(&cfg.trace_path, &["iter", "gram_wait", "solve", "allreduce"]);
+        check_trace_file(&format!("{}.rank1", cfg.trace_path), &["iter", "gram_wait"]);
+        for rank in 0..2 {
+            let _ = std::fs::remove_file(spmd::rank_path(&cfg.trace_path, rank));
+        }
+    }
+}
