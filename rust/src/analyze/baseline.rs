@@ -1,0 +1,164 @@
+//! The ratchet baseline (`analyze.allow`): grandfathered unwaived
+//! finding counts per (lint, file).
+//!
+//! `compare` fails only on counts *above* the recorded allowance, so a
+//! burn-down never needs a baseline edit to keep CI green — regenerate
+//! with `--update-baseline` to lock the lower numbers in and make the
+//! improvement irreversible.  Entries for counts that have since dropped
+//! (or files that no longer exist) surface as informational
+//! improvements, never as errors.
+
+use crate::Result;
+use std::collections::BTreeMap;
+
+pub type Counts = BTreeMap<(String, String), usize>;
+
+#[derive(Debug, Default)]
+pub struct Baseline {
+    pub allow: Counts,
+}
+
+/// One (lint, file) whose count moved against or past its allowance.
+#[derive(Debug, Clone)]
+pub struct Drift {
+    pub lint: String,
+    pub file: String,
+    pub allowed: usize,
+    pub found: usize,
+}
+
+#[derive(Debug, Default)]
+pub struct Delta {
+    /// found > allowed — these fail the run.
+    pub regressions: Vec<Drift>,
+    /// found < allowed — informational; tighten with `--update-baseline`.
+    pub improvements: Vec<Drift>,
+}
+
+impl Baseline {
+    /// Parse the `<lint> <file> <count>` line format (`#` comments and
+    /// blank lines ignored).
+    pub fn parse(text: &str) -> Result<Baseline> {
+        let mut allow = Counts::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            match (it.next(), it.next(), it.next(), it.next()) {
+                (Some(lint), Some(file), Some(count), None) => {
+                    let n: usize = count.parse().map_err(|_| {
+                        anyhow::anyhow!("baseline line {}: bad count {count:?}", i + 1)
+                    })?;
+                    allow.insert((lint.to_string(), file.to_string()), n);
+                }
+                _ => anyhow::bail!(
+                    "baseline line {}: want `<lint> <file> <count>`, got {line:?}",
+                    i + 1
+                ),
+            }
+        }
+        Ok(Baseline { allow })
+    }
+
+    pub fn from_counts(counts: Counts) -> Baseline {
+        Baseline { allow: counts }
+    }
+
+    /// Serialize in the `parse` format, with the regeneration recipe up
+    /// top so the file explains itself.
+    pub fn render(&self) -> String {
+        let mut out = String::from(
+            "# gradfree analyze — ratchet baseline of grandfathered finding counts.\n\
+             # One `<lint> <file> <count>` entry per (lint, file); CI fails only when\n\
+             # a count increases.  Regenerate after a burn-down with:\n\
+             #   cargo run --bin gradfree -- analyze --update-baseline\n",
+        );
+        for ((lint, file), n) in &self.allow {
+            out.push_str(&format!("{lint} {file} {n}\n"));
+        }
+        out
+    }
+
+    /// Ratchet check: every current count against its allowance.
+    pub fn compare(&self, counts: &Counts) -> Delta {
+        let mut delta = Delta::default();
+        for ((lint, file), &found) in counts {
+            let allowed = self.allow.get(&(lint.clone(), file.clone())).copied().unwrap_or(0);
+            if found > allowed {
+                delta.regressions.push(Drift {
+                    lint: lint.clone(),
+                    file: file.clone(),
+                    allowed,
+                    found,
+                });
+            }
+        }
+        for ((lint, file), &allowed) in &self.allow {
+            let found = counts.get(&(lint.clone(), file.clone())).copied().unwrap_or(0);
+            if found < allowed {
+                delta.improvements.push(Drift {
+                    lint: lint.clone(),
+                    file: file.clone(),
+                    allowed,
+                    found,
+                });
+            }
+        }
+        delta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts(entries: &[(&str, &str, usize)]) -> Counts {
+        entries
+            .iter()
+            .map(|(l, f, n)| ((l.to_string(), f.to_string()), *n))
+            .collect()
+    }
+
+    #[test]
+    fn parse_render_round_trip() {
+        let b = Baseline::from_counts(counts(&[
+            ("no-unwrap-in-fallible", "cluster/comm.rs", 13),
+            ("determinism", "data/shard.rs", 2),
+        ]));
+        let text = b.render();
+        let b2 = Baseline::parse(&text).unwrap();
+        assert_eq!(b.allow, b2.allow);
+    }
+
+    #[test]
+    fn ratchet_semantics() {
+        let b = Baseline::from_counts(counts(&[("determinism", "a.rs", 2)]));
+        // at the allowance: clean
+        let d = b.compare(&counts(&[("determinism", "a.rs", 2)]));
+        assert!(d.regressions.is_empty() && d.improvements.is_empty());
+        // above: regression
+        let d = b.compare(&counts(&[("determinism", "a.rs", 3)]));
+        assert_eq!(d.regressions.len(), 1);
+        assert_eq!((d.regressions[0].allowed, d.regressions[0].found), (2, 3));
+        // below: improvement only
+        let d = b.compare(&counts(&[("determinism", "a.rs", 1)]));
+        assert!(d.regressions.is_empty());
+        assert_eq!(d.improvements.len(), 1);
+        // new (lint, file) with no allowance: regression from 0
+        let d = b.compare(&counts(&[("deny-alloc", "b.rs", 1)]));
+        assert_eq!(d.regressions.len(), 1);
+        assert_eq!(d.regressions[0].allowed, 0);
+        // stale entry, file now clean: improvement, not an error
+        let d = b.compare(&Counts::new());
+        assert_eq!(d.improvements.len(), 1);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(Baseline::parse("lint file notanumber").is_err());
+        assert!(Baseline::parse("too few").is_err());
+        assert!(Baseline::parse("# comment\n\nlint a.rs 4\n").unwrap().allow.len() == 1);
+    }
+}

@@ -1,0 +1,573 @@
+//! The lint engine: a brace/scope-aware single pass over lexer-cleaned
+//! lines.
+//!
+//! The scanner tracks, per character: brace depth, the current statement
+//! text (for guard/`fn`-header recognition), the innermost enclosing
+//! function, `#[cfg(test)]` regions (masked from every lint), whether any
+//! enclosing branch is `rank`-conditional, and which `MutexGuard`
+//! bindings are live.  Each lint is a set of token patterns evaluated
+//! against that state, so a match in a comment, string, or test module
+//! can never fire, and a match inside `if rank == 0 { … }` knows it is
+//! rank-conditional.
+
+use super::lexer::CleanLine;
+use super::Finding;
+
+/// The lint catalogue: (name, one-line description).
+pub const LINTS: &[(&str, &str)] = &[
+    (
+        "deny-alloc",
+        "hot-path-manifest functions must not contain allocating constructs",
+    ),
+    (
+        "collective-symmetry",
+        "no collective under a rank-conditional branch in spmd schedules; nonblocking issues must be waited in-function",
+    ),
+    (
+        "determinism",
+        "no HashMap/HashSet, wall-clock reads, or thread-id logic on the bit-identical path",
+    ),
+    (
+        "no-unwrap-in-fallible",
+        "no unwrap()/expect() in the typed-error modules (cluster, serve, nn/io, runtime)",
+    ),
+    (
+        "lock-across-collective",
+        "no MutexGuard binding live across a blocking collective or wait()",
+    ),
+];
+
+/// Modules under the typed-`CommError` discipline: every failure must
+/// surface as a contextual `Result`, never a panic.
+const FALLIBLE_SCOPE: &[&str] = &["cluster/", "serve/", "nn/io.rs", "runtime/"];
+
+/// Modules on the bit-identical path: the full determinism rules,
+/// including wall-clock reads (`Instant::now`-derived values feed folds
+/// only through the telemetry wrappers in `trace`, which stay outside
+/// the model fingerprint by construction).
+const DETERMINISM_SCOPE: &[&str] = &["linalg/", "coordinator/", "problem/", "data/", "rng.rs"];
+
+/// `cluster/` fold code: collection-iteration-order rules apply, but
+/// wall-clock reads are allowed — collective deadlines and wait
+/// telemetry are wall-clock by design and never feed the fold values.
+const DETERMINISM_ORDER_ONLY_SCOPE: &[&str] = &["cluster/"];
+
+/// Files whose functions must issue collectives rank-symmetrically.
+const SYMMETRY_SCOPE: &[&str] = &["coordinator/spmd.rs"];
+
+/// Files where a lock held across a blocking collective is a deadlock.
+const LOCK_SCOPE: &[&str] = &["cluster/", "serve/", "coordinator/"];
+
+/// The hot-path manifest: (file suffix, function names) pinned
+/// allocation-free in the steady state.  Complements the dynamic pin in
+/// `tests/alloc_regression.rs` — the test proves a few configurations;
+/// this list covers every path through these bodies.
+const HOT_MANIFEST: &[(&str, &[&str])] = &[
+    (
+        "linalg/gemm.rs",
+        &["gemm_nn_into", "gemm_nt_into", "gemm_tn_into", "syrk_into", "gemm"],
+    ),
+    (
+        "linalg/par.rs",
+        &["gemm_nn_into", "gemm_nt_into", "gemm_tn_into", "syrk_into"],
+    ),
+    (
+        "linalg/matrix.rs",
+        &["transpose_into", "copy_from", "add_assign", "resize"],
+    ),
+    ("linalg/chol.rs", &["solve_mat_into"]),
+    ("linalg/mod.rs", &["weight_solve_into"]),
+    (
+        "cluster/comm.rs",
+        &[
+            "allreduce_sum",
+            "broadcast",
+            "iallreduce_sum",
+            "ibroadcast",
+            "wait",
+            "issue",
+            "complete",
+            "barrier",
+            "allreduce_scalars",
+            "broadcast_scalars",
+            "ensure_entry",
+            "deposit",
+            "ready",
+            "fold_into",
+        ],
+    ),
+    ("trace/mod.rs", &["start", "record", "record_from", "record_us"]),
+    (
+        "serve/batcher.rs",
+        &["begin", "set_col", "forward", "col_into", "predict_into", "batch_loop"],
+    ),
+];
+
+/// A token pattern: literal text, an optional required follow set (empty
+/// = any), and whether the char before the match must be a non-identifier
+/// (for bare-word patterns like `HashMap`).
+struct Pat {
+    lit: &'static str,
+    next: &'static [u8],
+    word_start: bool,
+}
+
+const ALLOC_PATS: &[Pat] = &[
+    Pat { lit: "Vec::new(", next: &[], word_start: true },
+    Pat { lit: "vec![", next: &[], word_start: true },
+    Pat { lit: ".to_vec()", next: &[], word_start: false },
+    Pat { lit: ".collect", next: b"(:", word_start: false },
+    Pat { lit: "format!(", next: &[], word_start: true },
+    Pat { lit: "String::new(", next: &[], word_start: true },
+    Pat { lit: "Box::new(", next: &[], word_start: true },
+    Pat { lit: ".clone()", next: &[], word_start: false },
+];
+
+/// Collection-order hazards: apply in both determinism scopes.
+const ORDER_PATS: &[Pat] = &[
+    Pat { lit: "HashMap", next: &[], word_start: true },
+    Pat { lit: "HashSet", next: &[], word_start: true },
+];
+
+/// Wall-clock / thread-identity hazards: full determinism scope only.
+const CLOCK_PATS: &[Pat] = &[
+    Pat { lit: "Instant::now(", next: &[], word_start: true },
+    Pat { lit: "SystemTime::now(", next: &[], word_start: true },
+    Pat { lit: "thread::current(", next: &[], word_start: true },
+    Pat { lit: "ThreadId", next: &[], word_start: true },
+];
+
+const UNWRAP_PATS: &[Pat] = &[
+    Pat { lit: ".unwrap()", next: &[], word_start: false },
+    Pat { lit: ".expect(", next: &[], word_start: false },
+];
+
+/// Every `Collectives` call shape (matched with the leading `.` so plain
+/// identifiers never fire; `.broadcast(` cannot match `.broadcast_scalars(`
+/// because the follow char is part of the literal).
+const COLLECTIVE_CALLS: &[&str] = &[
+    ".allreduce_sum(",
+    ".iallreduce_sum(",
+    ".broadcast(",
+    ".ibroadcast(",
+    ".allreduce_scalars(",
+    ".broadcast_scalars(",
+    ".barrier(",
+    ".wait(",
+];
+
+const NONBLOCKING_ISSUES: &[&str] = &[".iallreduce_sum(", ".ibroadcast("];
+
+/// Calls that block until peers arrive (`.wait_timeout(` on a condvar is
+/// deliberately not in this set — it holds its guard by contract).
+const BLOCKING_CALLS: &[&str] = &[
+    ".allreduce_sum(",
+    ".broadcast(",
+    ".allreduce_scalars(",
+    ".broadcast_scalars(",
+    ".barrier(",
+    ".wait(",
+];
+
+fn is_ident(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+fn match_at(code: &str, i: usize, p: &Pat) -> bool {
+    let b = code.as_bytes();
+    let lit = p.lit.as_bytes();
+    if i + lit.len() > b.len() || &b[i..i + lit.len()] != lit {
+        return false;
+    }
+    if p.word_start && i > 0 && is_ident(b[i - 1]) {
+        return false;
+    }
+    if !p.next.is_empty() {
+        match b.get(i + lit.len()) {
+            Some(c) if p.next.contains(c) => {}
+            _ => return false,
+        }
+    }
+    true
+}
+
+/// Does `path` fall under scope pattern `pat`?  A trailing `/` means
+/// "any directory segment of this name"; otherwise an exact file match
+/// (by full path or suffix).
+fn path_matches(path: &str, pat: &str) -> bool {
+    match pat.strip_suffix('/') {
+        Some(dir) => path.split('/').any(|seg| seg == dir),
+        None => path == pat || path.ends_with(&format!("/{pat}")),
+    }
+}
+
+fn in_any(path: &str, pats: &[&str]) -> bool {
+    pats.iter().any(|p| path_matches(path, p))
+}
+
+fn contains_word(s: &str, word: &str) -> bool {
+    let b = s.as_bytes();
+    let w = word.as_bytes();
+    let mut i = 0;
+    while i + w.len() <= b.len() {
+        if &b[i..i + w.len()] == w
+            && (i == 0 || !is_ident(b[i - 1]))
+            && (i + w.len() == b.len() || !is_ident(b[i + w.len()]))
+        {
+            return true;
+        }
+        i += 1;
+    }
+    false
+}
+
+/// Extract the function name from a statement/guard text containing a
+/// `fn` item header (skips `fn(` pointer types).
+fn fn_name(guard: &str) -> Option<String> {
+    let b = guard.as_bytes();
+    let mut i = 0;
+    while i + 2 <= b.len() {
+        if &b[i..i + 2] == b"fn"
+            && (i == 0 || !is_ident(b[i - 1]))
+            && (i + 2 == b.len() || !is_ident(b[i + 2]))
+        {
+            let mut j = i + 2;
+            while j < b.len() && b[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            let s = j;
+            while j < b.len() && is_ident(b[j]) {
+                j += 1;
+            }
+            if j > s {
+                return Some(guard[s..j].to_string());
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// A conditional construct whose body may not run on every rank.
+fn is_branch_guard(guard: &str) -> bool {
+    contains_word(guard, "if") || contains_word(guard, "while") || contains_word(guard, "match")
+}
+
+/// Does this statement bind a `MutexGuard` that outlives the statement?
+/// Recognizes the direct forms `let g = x.lock()` / `.lock().unwrap()` /
+/// `.lock().expect("…")`; a `.lock()` temporary consumed inline (e.g.
+/// `x.lock().unwrap().len()`) dies at the semicolon and is not tracked.
+fn lock_binding(stmt: &str) -> Option<String> {
+    let t = stmt.trim_start();
+    let t = t.strip_prefix("let ")?;
+    let t = t.trim_start();
+    let t = t.strip_prefix("mut ").unwrap_or(t).trim_start();
+    let b = t.as_bytes();
+    let mut j = 0;
+    while j < b.len() && is_ident(b[j]) {
+        j += 1;
+    }
+    if j == 0 {
+        return None;
+    }
+    let name = &t[..j];
+    let k = stmt.rfind(".lock(")?;
+    let tail: String = stmt[k..].chars().filter(|c| !c.is_whitespace()).collect();
+    let held = tail == ".lock()"
+        || tail == ".lock()?"
+        || tail == ".lock().unwrap()"
+        || (tail.starts_with(".lock().expect(") && tail.ends_with(')'));
+    if held {
+        Some(name.to_string())
+    } else {
+        None
+    }
+}
+
+/// `drop(g)` / `std::mem::drop(g)` — name of the dropped binding.
+fn drop_target(stmt: &str) -> Option<String> {
+    let k = stmt.find("drop(")?;
+    if k > 0 && is_ident(stmt.as_bytes()[k - 1]) {
+        return None; // some identifier merely ending in `drop`
+    }
+    let inner = &stmt[k + 5..];
+    let close = inner.find(')')?;
+    let name = inner[..close].trim();
+    if !name.is_empty() && name.bytes().all(is_ident) {
+        Some(name.to_string())
+    } else {
+        None
+    }
+}
+
+#[derive(Clone, Copy)]
+struct Scope {
+    rank_cond: bool,
+    test: bool,
+    fn_idx: Option<usize>,
+    /// This scope is the body of the function `fn_idx` points at (as
+    /// opposed to inheriting it from the parent).
+    owns_fn: bool,
+}
+
+struct FnCtx {
+    name: String,
+    hot: bool,
+    issues: usize,
+    waits: usize,
+    first_issue_line: usize,
+    issue_waived: bool,
+}
+
+struct LiveLock {
+    name: String,
+    depth: usize,
+    line: usize,
+}
+
+/// Scan one cleaned file, appending findings.
+pub fn scan_file(path: &str, lines: &[CleanLine], out: &mut Vec<Finding>) {
+    let fallible = in_any(path, FALLIBLE_SCOPE);
+    let det_full = in_any(path, DETERMINISM_SCOPE);
+    let det_order = det_full || in_any(path, DETERMINISM_ORDER_ONLY_SCOPE);
+    let symmetry = in_any(path, SYMMETRY_SCOPE);
+    let lockscope = in_any(path, LOCK_SCOPE);
+    let hot_fns: &[&str] = HOT_MANIFEST
+        .iter()
+        .find(|(f, _)| path_matches(path, f))
+        .map(|(_, fns)| *fns)
+        .unwrap_or(&[]);
+    if !(fallible || det_order || symmetry || lockscope) && hot_fns.is_empty() {
+        return;
+    }
+
+    let mut scopes: Vec<Scope> = Vec::new();
+    let mut fns: Vec<FnCtx> = Vec::new();
+    let mut locks: Vec<LiveLock> = Vec::new();
+    let mut stmt = String::new();
+    let mut pending_waivers: Vec<String> = Vec::new();
+    let mut last_popped_rank = false;
+
+    for (li, line) in lines.iter().enumerate() {
+        let lineno = li + 1;
+        let code = line.code.as_str();
+        let mut active: Vec<String> = pending_waivers.clone();
+        active.extend(line.waivers.iter().cloned());
+        let waived = |lint: &str, active: &[String]| active.iter().any(|w| w == lint || w == "all");
+
+        let b = code.as_bytes();
+        let mut i = 0usize;
+        while i < b.len() {
+            let in_test = scopes.iter().any(|s| s.test);
+            match b[i] {
+                b'{' => {
+                    let guard = stmt.trim().to_string();
+                    let parent = scopes.last().copied().unwrap_or(Scope {
+                        rank_cond: false,
+                        test: false,
+                        fn_idx: None,
+                        owns_fn: false,
+                    });
+                    let mut sc = Scope {
+                        rank_cond: parent.rank_cond,
+                        test: parent.test,
+                        fn_idx: parent.fn_idx,
+                        owns_fn: false,
+                    };
+                    if guard.contains("cfg(test") {
+                        sc.test = true;
+                    }
+                    if let Some(name) = fn_name(&guard) {
+                        fns.push(FnCtx {
+                            hot: hot_fns.contains(&name.as_str()),
+                            name,
+                            issues: 0,
+                            waits: 0,
+                            first_issue_line: lineno,
+                            issue_waived: false,
+                        });
+                        sc.fn_idx = Some(fns.len() - 1);
+                        sc.owns_fn = true;
+                    }
+                    if is_branch_guard(&guard) && contains_word(&guard, "rank") {
+                        sc.rank_cond = true;
+                    } else if guard.starts_with("else") && last_popped_rank {
+                        sc.rank_cond = true;
+                    }
+                    scopes.push(sc);
+                    stmt.clear();
+                    i += 1;
+                }
+                b'}' => {
+                    if let Some(s) = scopes.pop() {
+                        last_popped_rank = s.rank_cond;
+                        if s.owns_fn {
+                            if let Some(fi) = s.fn_idx {
+                                let f = &fns[fi];
+                                if symmetry && !s.test && f.issues > 0 && f.waits == 0 {
+                                    out.push(Finding {
+                                        lint: "collective-symmetry",
+                                        file: path.to_string(),
+                                        line: f.first_issue_line,
+                                        message: format!(
+                                            "fn `{}` issues {} nonblocking collective(s) but never calls .wait() in the same function",
+                                            f.name, f.issues
+                                        ),
+                                        waived: f.issue_waived,
+                                    });
+                                }
+                            }
+                        }
+                    }
+                    locks.retain(|l| l.depth <= scopes.len());
+                    stmt.clear();
+                    i += 1;
+                }
+                b';' => {
+                    if lockscope && !in_test {
+                        if let Some(name) = lock_binding(&stmt) {
+                            locks.push(LiveLock { name, depth: scopes.len(), line: lineno });
+                        }
+                        if let Some(name) = drop_target(&stmt) {
+                            locks.retain(|l| l.name != name);
+                        }
+                    }
+                    stmt.clear();
+                    i += 1;
+                }
+                c => {
+                    if fallible && !in_test {
+                        for p in UNWRAP_PATS {
+                            if match_at(code, i, p) {
+                                out.push(Finding {
+                                    lint: "no-unwrap-in-fallible",
+                                    file: path.to_string(),
+                                    line: lineno,
+                                    message: format!(
+                                        "`{}` in a typed-error module — return a contextual Result instead",
+                                        p.lit
+                                    ),
+                                    waived: waived("no-unwrap-in-fallible", &active),
+                                });
+                            }
+                        }
+                    }
+                    if det_order && !in_test {
+                        let pats: &[&[Pat]] = if det_full {
+                            &[ORDER_PATS, CLOCK_PATS]
+                        } else {
+                            &[ORDER_PATS]
+                        };
+                        for group in pats {
+                            for p in *group {
+                                if match_at(code, i, p) {
+                                    out.push(Finding {
+                                        lint: "determinism",
+                                        file: path.to_string(),
+                                        line: lineno,
+                                        message: format!(
+                                            "`{}` on the bit-identical path — order/clock-dependent state",
+                                            p.lit
+                                        ),
+                                        waived: waived("determinism", &active),
+                                    });
+                                }
+                            }
+                        }
+                    }
+                    if !hot_fns.is_empty() && !in_test {
+                        let hot = scopes
+                            .last()
+                            .and_then(|s| s.fn_idx)
+                            .map(|fi| fns[fi].hot)
+                            .unwrap_or(false);
+                        if hot {
+                            for p in ALLOC_PATS {
+                                if match_at(code, i, p) {
+                                    let name = scopes
+                                        .last()
+                                        .and_then(|s| s.fn_idx)
+                                        .map(|fi| fns[fi].name.clone())
+                                        .unwrap_or_default();
+                                    out.push(Finding {
+                                        lint: "deny-alloc",
+                                        file: path.to_string(),
+                                        line: lineno,
+                                        message: format!(
+                                            "allocating construct `{}` in hot-path fn `{name}`",
+                                            p.lit
+                                        ),
+                                        waived: waived("deny-alloc", &active),
+                                    });
+                                }
+                            }
+                        }
+                    }
+                    if (symmetry || lockscope) && !in_test && c == b'.' {
+                        let tok = COLLECTIVE_CALLS
+                            .iter()
+                            .find(|t| code[i..].starts_with(**t))
+                            .copied();
+                        if let Some(tok) = tok {
+                            if symmetry {
+                                if scopes.iter().any(|s| s.rank_cond) {
+                                    out.push(Finding {
+                                        lint: "collective-symmetry",
+                                        file: path.to_string(),
+                                        line: lineno,
+                                        message: format!(
+                                            "collective `{tok}…)` under a rank-conditional branch — peers not taking this branch deadlock"
+                                        ),
+                                        waived: waived("collective-symmetry", &active),
+                                    });
+                                }
+                                if let Some(fi) = scopes.last().and_then(|s| s.fn_idx) {
+                                    if NONBLOCKING_ISSUES.contains(&tok) {
+                                        if fns[fi].issues == 0 {
+                                            fns[fi].first_issue_line = lineno;
+                                        }
+                                        fns[fi].issues += 1;
+                                        if waived("collective-symmetry", &active) {
+                                            fns[fi].issue_waived = true;
+                                        }
+                                    } else if tok == ".wait(" {
+                                        fns[fi].waits += 1;
+                                    }
+                                }
+                            }
+                            if lockscope && BLOCKING_CALLS.contains(&tok) {
+                                if let Some(l) = locks.first() {
+                                    out.push(Finding {
+                                        lint: "lock-across-collective",
+                                        file: path.to_string(),
+                                        line: lineno,
+                                        message: format!(
+                                            "blocking `{tok}…)` while MutexGuard `{}` (line {}) is live — a peer blocked on the same lock deadlocks the collective",
+                                            l.name, l.line
+                                        ),
+                                        waived: waived("lock-across-collective", &active),
+                                    });
+                                }
+                            }
+                        }
+                    }
+                    stmt.push(c as char);
+                    i += 1;
+                }
+            }
+        }
+
+        // Waivers on their own comment line extend to the end of the next
+        // statement; a trailing waiver also covers the statement's
+        // continuation lines.  A line ending in `;`, `{`, or `}` closes
+        // the covered statement.
+        let trimmed = code.trim_end();
+        if trimmed.is_empty() {
+            pending_waivers.extend(line.waivers.iter().cloned());
+        } else if trimmed.ends_with(';') || trimmed.ends_with('{') || trimmed.ends_with('}') {
+            pending_waivers.clear();
+        } else {
+            pending_waivers.extend(line.waivers.iter().cloned());
+        }
+    }
+}

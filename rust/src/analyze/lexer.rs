@@ -1,0 +1,243 @@
+//! Comment/string stripper for the static analyzer.
+//!
+//! Produces, per source line, the line's code with comments removed and
+//! string/char-literal *contents* blanked (the delimiting quotes are kept
+//! so expression shape survives), plus any `analyze: allow(...)` waivers
+//! found in that line's comments.  Handles nested block comments, raw
+//! strings (`r"…"`, `r#"…"#`, `br"…"`), byte strings, escapes (including
+//! the escaped-newline string continuation), and the char-literal vs.
+//! lifetime ambiguity.  Downstream lints only ever see code text, so a
+//! pattern named in a doc comment or a format string can never fire.
+
+/// One source line after stripping.
+#[derive(Debug, Clone)]
+pub struct CleanLine {
+    /// Code text with comments gone and literal contents blanked.
+    pub code: String,
+    /// Lint names waived on this line via `analyze: allow(a, b): reason`.
+    pub waivers: Vec<String>,
+}
+
+enum St {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+    CharLit,
+}
+
+pub fn clean_source(text: &str) -> Vec<CleanLine> {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut out: Vec<CleanLine> = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut st = St::Code;
+    let mut i = 0usize;
+
+    fn flush(code: &mut String, comment: &mut String, out: &mut Vec<CleanLine>) {
+        out.push(CleanLine {
+            code: std::mem::take(code),
+            waivers: parse_waivers(comment),
+        });
+        comment.clear();
+    }
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(st, St::LineComment) {
+                st = St::Code;
+            }
+            flush(&mut code, &mut comment, &mut out);
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+                    st = St::LineComment;
+                    i += 2;
+                } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    st = St::BlockComment(1);
+                    i += 2;
+                } else if c == 'r' || (c == 'b' && i + 1 < n && chars[i + 1] == 'r') {
+                    // raw string r"…" / r#"…"# / br"…" (any hash count)
+                    let mut j = i + if c == 'b' { 2 } else { 1 };
+                    let mut hashes = 0u32;
+                    while j < n && chars[j] == '#' {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if j < n && chars[j] == '"' {
+                        code.push('"');
+                        st = St::RawStr(hashes);
+                        i = j + 1;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == 'b' && i + 1 < n && chars[i + 1] == '"' {
+                    code.push('"');
+                    st = St::Str;
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    st = St::Str;
+                    i += 1;
+                } else if c == '\'' {
+                    if i + 1 < n && chars[i + 1] == '\\' {
+                        // escaped char literal '\n', '\'', '\u{..}'
+                        code.push(' ');
+                        st = St::CharLit;
+                        i += 2;
+                    } else if i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\'' {
+                        // plain char literal 'x'
+                        code.push(' ');
+                        i += 3;
+                    } else {
+                        // lifetime tick — keep it
+                        code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            St::BlockComment(d) => {
+                if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    st = St::BlockComment(d + 1);
+                    i += 2;
+                } else if c == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    st = if d == 1 { St::Code } else { St::BlockComment(d - 1) };
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' && i + 1 < n {
+                    if chars[i + 1] == '\n' {
+                        // escaped-newline continuation: keep line accounting
+                        flush(&mut code, &mut comment, &mut out);
+                    }
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                if c == '"' {
+                    let mut j = i + 1;
+                    let mut k = 0u32;
+                    while j < n && k < h && chars[j] == '#' {
+                        k += 1;
+                        j += 1;
+                    }
+                    if k == h {
+                        code.push('"');
+                        st = St::Code;
+                        i = j;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+            St::CharLit => {
+                if c == '\'' {
+                    st = St::Code;
+                }
+                i += 1;
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() || out.is_empty() {
+        flush(&mut code, &mut comment, &mut out);
+    }
+    out
+}
+
+/// Extract `analyze: allow(lint-a, lint-b)` directives from comment text.
+fn parse_waivers(comment: &str) -> Vec<String> {
+    const KEY: &str = "analyze: allow(";
+    let mut out = Vec::new();
+    let mut rest = comment;
+    while let Some(k) = rest.find(KEY) {
+        let after = &rest[k + KEY.len()..];
+        match after.find(')') {
+            Some(close) => {
+                for lint in after[..close].split(',') {
+                    let l = lint.trim();
+                    if !l.is_empty() {
+                        out.push(l.to_string());
+                    }
+                }
+                rest = &after[close + 1..];
+            }
+            None => break,
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_and_strings() {
+        let src = "let x = \"vec![]\"; // vec![ in comment\nlet y = 1; /* block\nstill */ let z = 2;\n";
+        let lines = clean_source(src);
+        assert_eq!(lines.len(), 3);
+        assert!(!lines[0].code.contains("vec!["));
+        assert!(lines[0].code.contains("let x"));
+        assert!(!lines[1].code.contains("block"));
+        assert!(lines[2].code.contains("let z"));
+    }
+
+    #[test]
+    fn raw_strings_and_chars() {
+        let src = "let a = r#\"..\"{}\"..\"#; let b = '{'; let c = '\\n'; let d: &'static str = \"\";\n";
+        let lines = clean_source(src);
+        assert!(!lines[0].code.contains('{'), "{}", lines[0].code);
+        assert!(lines[0].code.contains("&'static str"));
+    }
+
+    #[test]
+    fn escaped_newline_keeps_line_count() {
+        let src = "let s = \"a \\\n b\";\nlet t = 1;\n";
+        let lines = clean_source(src);
+        assert_eq!(lines.len(), 3);
+        assert!(lines[2].code.contains("let t"));
+    }
+
+    #[test]
+    fn waiver_parsing() {
+        let src = "x(); // analyze: allow(deny-alloc, determinism): reason\n// analyze: allow(no-unwrap-in-fallible)\n";
+        let lines = clean_source(src);
+        assert_eq!(lines[0].waivers, vec!["deny-alloc", "determinism"]);
+        assert_eq!(lines[1].waivers, vec!["no-unwrap-in-fallible"]);
+        assert!(lines[0].code.contains("x()"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* a /* b */ still comment */ code();\n";
+        let lines = clean_source(src);
+        assert!(lines[0].code.contains("code()"));
+        assert!(!lines[0].code.contains("still"));
+    }
+}

@@ -1,0 +1,266 @@
+//! `gradfree analyze` — dependency-free static checks for the crate's
+//! load-bearing invariants.
+//!
+//! The regression tests pin the invariants *dynamically*, on the handful
+//! of configurations they walk; this pass checks **all** paths on every
+//! CI run, before any rank ever connects.  Five lints (see
+//! [`engine::LINTS`]):
+//!
+//! * `deny-alloc` — functions in the hot-path manifest (`_into` kernels,
+//!   `Collectives` steady-state ops, `Tracer::record`, the serve batcher
+//!   cycle) must not contain allocating constructs.
+//! * `collective-symmetry` — in `coordinator/spmd.rs`, no collective
+//!   call under a `rank`-conditional branch (the canonical SPMD
+//!   deadlock), and every nonblocking issue must have a `.wait()` in the
+//!   same function.
+//! * `determinism` — no `HashMap`/`HashSet`, wall-clock reads, or
+//!   thread-id logic in the modules on the bit-identical path.
+//! * `no-unwrap-in-fallible` — no `unwrap()`/`expect(` in the
+//!   typed-error modules (`cluster/`, `serve/`, `nn/io`, `runtime/`).
+//! * `lock-across-collective` — no `MutexGuard` binding live across a
+//!   blocking collective or `wait()`.
+//!
+//! A site is suppressed with `// analyze: allow(<lint>): reason` —
+//! trailing on the offending line, or on its own line (covering through
+//! the end of the next statement).  Waived findings still appear in the
+//! JSON report with `"waived": true` but never count.
+//!
+//! Unwaived counts ratchet against `analyze.allow` ([`baseline`]): the
+//! checked-in file grandfathers old findings per (lint, file) and the
+//! run fails only when a count increases, so the tree only gets cleaner.
+//! The engine is hand-rolled over the crate's own sources in the same
+//! std-only spirit as `config::json` — no syn, no proc-macro machinery.
+
+pub mod baseline;
+pub mod engine;
+pub mod lexer;
+
+use crate::config::Json;
+use crate::Result;
+use anyhow::Context as _;
+use baseline::{Baseline, Counts, Delta};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One lint hit, pinned to a file and line.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub lint: &'static str,
+    /// Path relative to the scanned source root, `/`-separated.
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+    /// Suppressed by an `analyze: allow(...)` comment — kept in the JSON
+    /// report for audit, excluded from ratchet counts.
+    pub waived: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+}
+
+impl Report {
+    /// Unwaived finding counts per (lint, file) — the ratchet currency.
+    pub fn counts(&self) -> Counts {
+        let mut m = Counts::new();
+        for f in self.findings.iter().filter(|f| !f.waived) {
+            *m.entry((f.lint.to_string(), f.file.clone())).or_insert(0) += 1;
+        }
+        m
+    }
+
+    pub fn waived(&self) -> usize {
+        self.findings.iter().filter(|f| f.waived).count()
+    }
+
+    /// Machine-readable report (validates against `config::Json::parse`).
+    pub fn to_json(&self, src: &str, delta: &Delta) -> Json {
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                let mut o = BTreeMap::new();
+                o.insert("lint".to_string(), Json::Str(f.lint.to_string()));
+                o.insert("file".to_string(), Json::Str(f.file.clone()));
+                o.insert("line".to_string(), Json::Num(f.line as f64));
+                o.insert("message".to_string(), Json::Str(f.message.clone()));
+                o.insert("waived".to_string(), Json::Bool(f.waived));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut counts: BTreeMap<String, Json> = BTreeMap::new();
+        for ((lint, file), n) in self.counts() {
+            let entry = counts.entry(lint).or_insert_with(|| Json::Obj(BTreeMap::new()));
+            if let Json::Obj(files) = entry {
+                files.insert(file, Json::Num(n as f64));
+            }
+        }
+        let regressions = delta
+            .regressions
+            .iter()
+            .map(|r| {
+                let mut o = BTreeMap::new();
+                o.insert("lint".to_string(), Json::Str(r.lint.clone()));
+                o.insert("file".to_string(), Json::Str(r.file.clone()));
+                o.insert("allowed".to_string(), Json::Num(r.allowed as f64));
+                o.insert("found".to_string(), Json::Num(r.found as f64));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("schema".to_string(), Json::Num(1.0));
+        top.insert("src".to_string(), Json::Str(src.to_string()));
+        top.insert("findings".to_string(), Json::Arr(findings));
+        top.insert("counts".to_string(), Json::Obj(counts));
+        top.insert("regressions".to_string(), Json::Arr(regressions));
+        Json::Obj(top)
+    }
+}
+
+/// Analyze in-memory sources; `files` pairs a src-root-relative path
+/// with its text.  The selftest drives this directly with fixtures.
+pub fn analyze_texts(files: &[(String, String)]) -> Report {
+    let mut report = Report::default();
+    for (path, text) in files {
+        let lines = lexer::clean_source(text);
+        engine::scan_file(path, &lines, &mut report.findings);
+    }
+    report
+        .findings
+        .sort_by(|a, b| (&a.file, a.line, a.lint).cmp(&(&b.file, b.line, b.lint)));
+    report
+}
+
+/// Analyze every `.rs` file under `root` (sorted walk; per-lint scopes
+/// decide what each file is checked for).
+pub fn analyze_dir(root: &Path) -> Result<Report> {
+    let mut rels = Vec::new();
+    collect_rs(root, root, &mut rels)?;
+    rels.sort();
+    let mut texts = Vec::with_capacity(rels.len());
+    for rel in rels {
+        let text = std::fs::read_to_string(root.join(&rel))
+            .with_context(|| format!("reading {}", root.join(&rel).display()))?;
+        texts.push((rel, text));
+    }
+    Ok(analyze_texts(&texts))
+}
+
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    let entries =
+        std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))?;
+    for entry in entries {
+        let p = entry?.path();
+        if p.is_dir() {
+            collect_rs(root, &p, out)?;
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            let rel = p.strip_prefix(root).unwrap_or(&p);
+            out.push(rel.to_string_lossy().replace('\\', "/"));
+        }
+    }
+    Ok(())
+}
+
+/// CLI options for the `analyze` subcommand.
+#[derive(Debug, Default)]
+pub struct AnalyzeOpts {
+    pub src: Option<String>,
+    pub baseline: Option<String>,
+    pub json_out: Option<String>,
+    pub update_baseline: bool,
+    pub list_lints: bool,
+    pub verbose: bool,
+}
+
+fn first_existing(cands: &[&str]) -> Option<String> {
+    cands.iter().find(|c| Path::new(c).exists()).map(|c| c.to_string())
+}
+
+/// Entry point for `gradfree analyze`.  Errors (nonzero exit) when any
+/// (lint, file) count exceeds its baseline allowance.
+pub fn run(opts: &AnalyzeOpts) -> Result<()> {
+    if opts.list_lints {
+        for (name, desc) in engine::LINTS {
+            println!("{name:24} {desc}");
+        }
+        return Ok(());
+    }
+    let src = match &opts.src {
+        Some(s) => s.clone(),
+        None => first_existing(&["rust/src", "src"])
+            .context("no rust/src or src here — pass --src <dir>")?,
+    };
+    let report = analyze_dir(Path::new(&src))?;
+    let counts = report.counts();
+
+    let bpath = match &opts.baseline {
+        Some(b) => PathBuf::from(b),
+        // default: `analyze.allow` next to the src dir (rust/analyze.allow)
+        None => Path::new(&src)
+            .parent()
+            .unwrap_or_else(|| Path::new("."))
+            .join("analyze.allow"),
+    };
+    if opts.update_baseline {
+        let b = Baseline::from_counts(counts);
+        std::fs::write(&bpath, b.render())
+            .with_context(|| format!("writing {}", bpath.display()))?;
+        println!("analyze: wrote {} ({} entries)", bpath.display(), b.allow.len());
+        return Ok(());
+    }
+    let base = if bpath.exists() {
+        let text = std::fs::read_to_string(&bpath)
+            .with_context(|| format!("reading {}", bpath.display()))?;
+        Baseline::parse(&text).with_context(|| format!("parsing {}", bpath.display()))?
+    } else {
+        Baseline::default()
+    };
+    let delta = base.compare(&counts);
+
+    if let Some(out) = &opts.json_out {
+        let json = report.to_json(&src, &delta).to_string_pretty();
+        std::fs::write(out, json).with_context(|| format!("writing {out}"))?;
+    }
+
+    // Every unwaived finding in a regressing (lint, file) is new-or-moved
+    // code: print them all so the offending lines are one click away.
+    for f in report.findings.iter().filter(|f| !f.waived) {
+        let regressing = delta
+            .regressions
+            .iter()
+            .any(|r| r.lint == f.lint && r.file == f.file);
+        if regressing || opts.verbose {
+            println!("{src}/{}:{}: [{}] {}", f.file, f.line, f.lint, f.message);
+        }
+    }
+    for r in &delta.improvements {
+        println!(
+            "analyze: note: {} {} is at {} (< {} allowed) — run --update-baseline to ratchet down",
+            r.lint, r.file, r.found, r.allowed
+        );
+    }
+    let unwaived: usize = counts.values().sum();
+    println!(
+        "analyze: {} file-scoped findings ({} waived) across {} (lint, file) pairs; baseline {}",
+        unwaived,
+        report.waived(),
+        counts.len(),
+        bpath.display()
+    );
+    if !delta.regressions.is_empty() {
+        for r in &delta.regressions {
+            eprintln!(
+                "analyze: REGRESSION: {} {}: {} findings > {} allowed",
+                r.lint, r.file, r.found, r.allowed
+            );
+        }
+        anyhow::bail!(
+            "analyze: {} (lint, file) count(s) above baseline — fix the new sites, \
+             waive them with `// analyze: allow(<lint>): reason`, or (deliberately) \
+             re-baseline with --update-baseline",
+            delta.regressions.len()
+        );
+    }
+    Ok(())
+}

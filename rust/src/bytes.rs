@@ -1,0 +1,59 @@
+//! Fixed-width little-endian decode helpers shared by the binary I/O
+//! paths (`nn::io`'s GFADMM/GFTS readers, `cluster::tcp`'s GFC1 frames).
+//!
+//! Each reader decodes the leading N bytes of the given slice.  Callers
+//! bounds-check first — every call site sits behind an explicit length
+//! `ensure!` — so an out-of-range panic here is a caller logic bug, the
+//! same contract the former per-site `try_into().unwrap()` expressed,
+//! centralized so the fallible-module lint (`gradfree analyze`,
+//! no-unwrap-in-fallible) holds the call sites themselves to zero.
+
+#[inline]
+pub fn le_u32(b: &[u8]) -> u32 {
+    let mut a = [0u8; 4];
+    a.copy_from_slice(&b[..4]);
+    u32::from_le_bytes(a)
+}
+
+#[inline]
+pub fn le_u64(b: &[u8]) -> u64 {
+    let mut a = [0u8; 8];
+    a.copy_from_slice(&b[..8]);
+    u64::from_le_bytes(a)
+}
+
+#[inline]
+pub fn le_f32(b: &[u8]) -> f32 {
+    let mut a = [0u8; 4];
+    a.copy_from_slice(&b[..4]);
+    f32::from_le_bytes(a)
+}
+
+#[inline]
+pub fn le_f64(b: &[u8]) -> f64 {
+    let mut a = [0u8; 8];
+    a.copy_from_slice(&b[..8]);
+    f64::from_le_bytes(a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips() {
+        assert_eq!(le_u32(&0xDEAD_BEEFu32.to_le_bytes()), 0xDEAD_BEEF);
+        assert_eq!(le_u64(&0x0123_4567_89AB_CDEFu64.to_le_bytes()), 0x0123_4567_89AB_CDEF);
+        let f = -1.5f32;
+        assert_eq!(le_f32(&f.to_le_bytes()), f);
+        let d = std::f64::consts::PI;
+        assert_eq!(le_f64(&d.to_le_bytes()), d);
+    }
+
+    #[test]
+    fn reads_leading_bytes_of_longer_slice() {
+        let mut buf = 7u32.to_le_bytes().to_vec();
+        buf.extend_from_slice(&[0xFF; 8]);
+        assert_eq!(le_u32(&buf), 7);
+    }
+}

@@ -83,6 +83,7 @@ use super::comm::{
     comm_err, count_matrix_collective, CommError, CommStats, PendingKind, PendingOp, WaitStats,
     DEFAULT_COMM_TIMEOUT,
 };
+use crate::bytes::{le_f32, le_f64, le_u32, le_u64};
 use crate::config::AllreduceAlgo;
 use crate::linalg::Matrix;
 use crate::trace::Tracer;
@@ -365,7 +366,12 @@ impl TcpComm {
         let res = (|| -> Result<()> {
             let t0_us = self.epoch.elapsed().as_micros() as u64;
             let hello = encode_hello(self.rank, self.world, fingerprint, t0_us);
-            let stream = self.links[peer_rank].as_mut().expect("just connected");
+            let stream = self.links[peer_rank].as_mut().ok_or_else(|| {
+                comm_err(
+                    CommError::Io,
+                    format!("rank {rank}: link to rank {peer_rank} vanished after connect"),
+                )
+            })?;
             write_frame(stream, OP_HELLO, &hello, &mut buf).map_err(|e| {
                 io_err(e).context(format!("rank {rank}: sending hello to rank {peer_rank}"))
             })?;
@@ -677,8 +683,12 @@ impl TcpComm {
             self.count(kind, buf.len());
             return Ok(buf);
         }
-        let (sends_at_wait, deferred_send) =
-            self.pending_meta.pop_front().expect("op issued on this comm");
+        let (sends_at_wait, deferred_send) = self.pending_meta.pop_front().ok_or_else(|| {
+            comm_err(
+                CommError::Desync,
+                format!("rank {}: op {seq} has no issue record on this communicator", self.rank),
+            )
+        })?;
         let mut fbuf = std::mem::take(&mut self.buf);
         let res = (|| -> Result<()> {
             match kind {
@@ -733,7 +743,12 @@ impl TcpComm {
                 m.add_assign(scratch_mat);
             }
             for slot in links.iter_mut().take(world).skip(1) {
-                let link = slot.as_mut().expect("folded above");
+                let link = slot.as_mut().ok_or_else(|| {
+                    comm_err(
+                        CommError::Io,
+                        format!("rank {rank}: hub link missing during allreduce fan-out"),
+                    )
+                })?;
                 write_mat_frame(link, m, fbuf).map_err(|e| rank_io_err(rank, "allreduce send", e))?;
             }
             stats.count_allreduce(m.len());
@@ -966,7 +981,12 @@ impl TcpComm {
                 }
             }
             for slot in links.iter_mut().take(world).skip(1) {
-                let link = slot.as_mut().expect("folded above");
+                let link = slot.as_mut().ok_or_else(|| {
+                    comm_err(
+                        CommError::Io,
+                        format!("rank {rank}: hub link missing during scalar allreduce fan-out"),
+                    )
+                })?;
                 write_scalars_frame(link, vals, buf)
                     .map_err(|e| rank_io_err(rank, "scalar allreduce send", e))?;
             }
@@ -1154,10 +1174,10 @@ fn parse_hello(op: u8, payload: &[u8]) -> Result<(usize, usize, u64, u64)> {
     expect_op(op, OP_HELLO)?;
     anyhow::ensure!(payload.len() == 28, "malformed hello ({} bytes)", payload.len());
     anyhow::ensure!(&payload[..4] == MAGIC, "bad hello magic (not a gradfree rank)");
-    let rank = u32::from_le_bytes(payload[4..8].try_into().unwrap()) as usize;
-    let world = u32::from_le_bytes(payload[8..12].try_into().unwrap()) as usize;
-    let fp = u64::from_le_bytes(payload[12..20].try_into().unwrap());
-    let now_us = u64::from_le_bytes(payload[20..28].try_into().unwrap());
+    let rank = le_u32(&payload[4..]) as usize;
+    let world = le_u32(&payload[8..]) as usize;
+    let fp = le_u64(&payload[12..]);
+    let now_us = le_u64(&payload[20..]);
     Ok((rank, world, fp, now_us))
 }
 
@@ -1185,7 +1205,7 @@ fn write_frame(
 fn read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<u8> {
     let mut header = [0u8; 5];
     stream.read_exact(&mut header).map_err(io_err)?;
-    let len = u32::from_le_bytes(header[0..4].try_into().unwrap()) as usize;
+    let len = le_u32(&header) as usize;
     anyhow::ensure!(len >= 1 && len <= MAX_FRAME, "implausible frame length {len}");
     let op = header[4];
     buf.clear();
@@ -1215,8 +1235,8 @@ fn write_mat_frame(stream: &mut TcpStream, m: &Matrix, buf: &mut Vec<u8>) -> std
 
 fn decode_mat(payload: &[u8], m: &mut Matrix) -> Result<()> {
     anyhow::ensure!(payload.len() >= 8, "truncated matrix frame");
-    let rows = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
-    let cols = u32::from_le_bytes(payload[4..8].try_into().unwrap()) as usize;
+    let rows = le_u32(payload) as usize;
+    let cols = le_u32(&payload[4..]) as usize;
     let need = rows
         .checked_mul(cols)
         .and_then(|e| e.checked_mul(4))
@@ -1224,7 +1244,7 @@ fn decode_mat(payload: &[u8], m: &mut Matrix) -> Result<()> {
     anyhow::ensure!(payload.len() - 8 == need, "matrix frame size mismatch");
     m.resize(rows, cols);
     for (dst, src) in m.as_mut_slice().iter_mut().zip(payload[8..].chunks_exact(4)) {
-        *dst = f32::from_le_bytes(src.try_into().unwrap());
+        *dst = le_f32(src);
     }
     Ok(())
 }
@@ -1247,10 +1267,10 @@ fn write_scalars_frame(
 
 fn decode_scalars(payload: &[u8], out: &mut Vec<f64>) -> Result<()> {
     anyhow::ensure!(payload.len() >= 4, "truncated scalar frame");
-    let count = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+    let count = le_u32(payload) as usize;
     anyhow::ensure!(payload.len() - 4 == count * 8, "scalar frame size mismatch");
     out.clear();
-    out.extend(payload[4..].chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())));
+    out.extend(payload[4..].chunks_exact(8).map(le_f64));
     Ok(())
 }
 
@@ -1283,13 +1303,13 @@ fn write_chunk_frame(
 /// sub-frame would stall the receiver's progress loop).
 fn decode_chunk_append(payload: &[u8], max: usize, out: &mut Vec<f32>) -> Result<usize> {
     anyhow::ensure!(payload.len() >= 4, "truncated chunk frame");
-    let count = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+    let count = le_u32(payload) as usize;
     anyhow::ensure!(
         count >= 1 && count <= max,
         "chunk size mismatch: got {count}, expected 1..={max}"
     );
     anyhow::ensure!(payload.len() - 4 == count * 4, "chunk frame size mismatch");
-    out.extend(payload[4..].chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())));
+    out.extend(payload[4..].chunks_exact(4).map(le_f32));
     Ok(count)
 }
 
@@ -1297,7 +1317,7 @@ fn decode_chunk_append(payload: &[u8], max: usize, out: &mut Vec<f32>) -> Result
 /// (ring allgather); returns the float count (always > 0).
 fn decode_chunk_fill(payload: &[u8], out: &mut [f32]) -> Result<usize> {
     anyhow::ensure!(payload.len() >= 4, "truncated chunk frame");
-    let count = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+    let count = le_u32(payload) as usize;
     anyhow::ensure!(
         count >= 1 && count <= out.len(),
         "chunk size mismatch: got {count}, expected 1..={}",
@@ -1305,7 +1325,7 @@ fn decode_chunk_fill(payload: &[u8], out: &mut [f32]) -> Result<usize> {
     );
     anyhow::ensure!(payload.len() - 4 == count * 4, "chunk frame size mismatch");
     for (dst, src) in out[..count].iter_mut().zip(payload[4..].chunks_exact(4)) {
-        *dst = f32::from_le_bytes(src.try_into().unwrap());
+        *dst = le_f32(src);
     }
     Ok(count)
 }

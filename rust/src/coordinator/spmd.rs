@@ -362,6 +362,11 @@ pub fn train_rank(
             comm.tracer_mut().record(Phase::Checkpoint, t0, 0);
         }
 
+        // Collective-symmetry discipline (checked by `gradfree analyze`):
+        // every allreduce/broadcast below sits outside any rank-conditional
+        // branch.  Rank-0-only work (test-set eval, curve recording) stays
+        // between the collectives, never around them — a collective under
+        // `if rank == …` deadlocks the other ranks at the next barrier.
         if it % cfg.eval_every == 0 || it + 1 == cfg.iters {
             let t_eval = comm.tracer().start();
             // Σ over ranks of (loss, correct, n) — rank-order fold, so the

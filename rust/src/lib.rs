@@ -31,8 +31,10 @@
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
 //! the paper-vs-measured record of every figure.
 
+pub mod analyze;
 pub mod baselines;
 pub mod bench;
+pub mod bytes;
 pub mod cli;
 pub mod cluster;
 pub mod config;

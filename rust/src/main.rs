@@ -8,6 +8,7 @@
 //!   scale      measured strong-scaling sweep + cost-model extrapolation
 //!   inspect    dump the artifact manifest the runtime would load
 //!   gen-data   write a synthetic dataset to CSV
+//!   analyze    static invariant lints over the crate sources (ratcheted)
 //!
 //! Run `gradfree <cmd> --help-cmd` for per-command flags.  Examples live in
 //! `examples/` and the figure benches in `rust/benches/`.
@@ -45,6 +46,7 @@ fn run(args: &Args) -> Result<()> {
         Some("scale") => cmd_scale(args),
         Some("inspect") => cmd_inspect(args),
         Some("gen-data") => cmd_gen_data(args),
+        Some("analyze") => cmd_analyze(args),
         _ => {
             print_usage();
             Ok(())
@@ -56,7 +58,7 @@ fn print_usage() {
     println!(
         "gradfree — Training Neural Networks Without Gradients (ICML 2016) \
          reproduction\n\n\
-         USAGE: gradfree <train|predict|serve|baseline|scale|inspect|gen-data> [flags]\n\n\
+         USAGE: gradfree <train|predict|serve|baseline|scale|inspect|gen-data|analyze> [flags]\n\n\
          COMMON FLAGS\n  \
          --preset test|quickstart|svhn|higgs   network + defaults\n  \
          --loss hinge|l2|multihinge            problem kind (default hinge)\n  \
@@ -96,7 +98,15 @@ fn print_usage() {
          serve:    --model ckpt.gfadmm [--host H] [--port P] [--threads N]\n\
          \x20          [--max-batch N] [--max-wait-us U] [--serve-config file.json]\n\
          \x20          [--trace out.json] [--loss ...] (default: the checkpoint's\n\
-         \x20          problem kind)"
+         \x20          problem kind)\n\
+         analyze:  [--src rust/src] [--baseline analyze.allow] [--json report.json]\n\
+         \x20          [--update-baseline] [--list-lints] [--verbose]  static lints\n\
+         \x20          (deny-alloc, collective-symmetry, determinism,\n\
+         \x20          no-unwrap-in-fallible, lock-across-collective); exits nonzero\n\
+         \x20          when any (lint, file) finding count exceeds the ratchet\n\
+         \x20          baseline.  Waive a site with\n\
+         \x20          `// analyze: allow(<lint>): reason`.  See EXPERIMENTS.md\n\
+         \x20          §Static analysis."
     );
 }
 
@@ -547,6 +557,18 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
     std::fs::write(out, text)?;
     println!("wrote {} samples x {} features to {out}", d.samples(), d.features());
     Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let opts = gradfree_admm::analyze::AnalyzeOpts {
+        src: args.get("src").map(str::to_string),
+        baseline: args.get("baseline").map(str::to_string),
+        json_out: args.get("json").map(str::to_string),
+        update_baseline: args.has("update-baseline"),
+        list_lints: args.has("list-lints"),
+        verbose: args.has("verbose"),
+    };
+    gradfree_admm::analyze::run(&opts)
 }
 
 fn parse_list(s: &str) -> Result<Vec<usize>> {

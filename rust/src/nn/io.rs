@@ -37,6 +37,7 @@
 //! `Local` run (pinned by `tests/transport_equivalence.rs`), so this
 //! format needs no distributed-awareness of its own.
 
+use crate::bytes::{le_f32, le_u32, le_u64};
 use crate::config::Activation;
 use crate::linalg::Matrix;
 use crate::problem::Problem;
@@ -93,7 +94,7 @@ pub fn deserialize_model(bytes: &[u8]) -> Result<(Vec<Matrix>, Activation, Probl
     };
     let read_u32 = |b: &[u8], p: &mut usize| -> Result<u32> {
         anyhow::ensure!(b.len() >= *p + 4, "truncated model file");
-        let v = u32::from_le_bytes(b[*p..*p + 4].try_into().unwrap());
+        let v = le_u32(&b[*p..]);
         *p += 4;
         Ok(v)
     };
@@ -112,10 +113,7 @@ pub fn deserialize_model(bytes: &[u8]) -> Result<(Vec<Matrix>, Activation, Probl
         // `bytes.len() - pos` cannot underflow (read_u32 bounds pos), and
         // unlike `pos + need` it cannot wrap for near-usize::MAX `need`.
         anyhow::ensure!(bytes.len() - pos >= need, "truncated weight data");
-        let data: Vec<f32> = bytes[pos..pos + need]
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect();
+        let data: Vec<f32> = bytes[pos..pos + need].chunks_exact(4).map(le_f32).collect();
         pos += need;
         ws.push(Matrix::from_vec(rows, cols, data));
     }
@@ -237,14 +235,14 @@ pub fn deserialize_snapshot(bytes: &[u8]) -> Result<TrainSnapshot> {
 
 fn snap_u32(bytes: &[u8], pos: &mut usize) -> Result<u32> {
     anyhow::ensure!(bytes.len() >= *pos + 4, "truncated training snapshot");
-    let v = u32::from_le_bytes(bytes[*pos..*pos + 4].try_into().unwrap());
+    let v = le_u32(&bytes[*pos..]);
     *pos += 4;
     Ok(v)
 }
 
 fn snap_u64(bytes: &[u8], pos: &mut usize) -> Result<u64> {
     anyhow::ensure!(bytes.len() >= *pos + 8, "truncated training snapshot");
-    let v = u64::from_le_bytes(bytes[*pos..*pos + 8].try_into().unwrap());
+    let v = le_u64(&bytes[*pos..]);
     *pos += 8;
     Ok(v)
 }
@@ -263,10 +261,7 @@ fn read_section(bytes: &[u8], pos: &mut usize) -> Result<Vec<Matrix>> {
             .and_then(|e| e.checked_mul(4))
             .ok_or_else(|| anyhow::anyhow!("implausible snapshot matrix shape {rows}x{cols}"))?;
         anyhow::ensure!(bytes.len() - *pos >= need, "truncated snapshot matrix data");
-        let data: Vec<f32> = bytes[*pos..*pos + need]
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect();
+        let data: Vec<f32> = bytes[*pos..*pos + need].chunks_exact(4).map(le_f32).collect();
         *pos += need;
         ms.push(Matrix::from_vec(rows, cols, data));
     }

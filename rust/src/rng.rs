@@ -141,6 +141,9 @@ impl Rng {
             all.truncate(k);
             return all;
         }
+        // analyze: allow(determinism): membership test only — the set's
+        // iteration order is never observed, so hashing cannot leak into
+        // the sampled sequence.
         let mut seen = std::collections::HashSet::with_capacity(k * 2);
         let mut out = Vec::with_capacity(k);
         while out.len() < k {

@@ -147,6 +147,8 @@ impl RuntimeContext {
             .iter()
             .map(|m| matrix_to_literal(m))
             .collect::<Result<_>>()?;
+        // analyze: allow(no-unwrap-in-fallible): ensure_compiled above
+        // inserted the cache entry or returned Err.
         let exe = self.cache.get(op).expect("just compiled");
         let result = exe
             .execute::<xla::Literal>(&literals)

@@ -78,6 +78,7 @@ impl BatchEngine {
 
     /// Model output dimension (response `y` length).
     pub fn out_dim(&self) -> usize {
+        // analyze: allow(no-unwrap-in-fallible): Mlp guarantees dims.len() >= 2.
         *self.mlp.dims.last().unwrap()
     }
 
@@ -165,6 +166,8 @@ impl Batcher {
         assert!(max_batch >= 1, "max_batch must be >= 1");
         let (features, out_dim) = (engine.features(), engine.out_dim());
         let (tx, rx) = std::sync::mpsc::channel();
+        // analyze: allow(no-unwrap-in-fallible): thread spawn fails only on
+        // resource exhaustion at server startup — abort is the right answer.
         let thread = std::thread::Builder::new()
             .name("serve-batcher".into())
             .spawn(move || batch_loop(rx, engine, max_batch, max_wait, stats, trace_path))
@@ -174,6 +177,8 @@ impl Batcher {
 
     /// A submission handle for one connection/worker.
     pub fn submitter(&self) -> Sender<BatchJob> {
+        // analyze: allow(no-unwrap-in-fallible): tx is Some until Drop, and
+        // Drop takes &mut self — no shared handle can outlive it.
         self.tx.as_ref().expect("batcher running").clone()
     }
 
@@ -268,12 +273,17 @@ fn batch_loop(
                 engine.col_into(j, &mut ybuf);
                 let am = argmax(&ybuf);
                 let pred = engine.problem().wire_pred(&ybuf);
+                // analyze: allow(deny-alloc): the reply crosses a channel and
+                // must own its scores; one Vec per answered request is the
+                // serve path's documented per-reply cost.
                 let _ = job
                     .reply
                     .send(BatchReply::Ok { id: job.id, y: ybuf.clone(), argmax: am, pred });
                 j += 1;
             } else {
                 stats.record_error();
+                // analyze: allow(deny-alloc): error path only — malformed
+                // requests are off the steady-state batch cycle.
                 let msg = format!(
                     "feature-length mismatch: got {}, model wants {features}",
                     job.x.len()

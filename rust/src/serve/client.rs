@@ -146,6 +146,8 @@ pub fn run_load<A: ToSocketAddrs + Clone + Send + Sync>(
                 })
             })
             .collect();
+        // analyze: allow(no-unwrap-in-fallible): a panicked load thread is a
+        // harness bug; re-raising it beats folding it into the error totals.
         handles
             .into_iter()
             .map(|h| h.join().expect("load thread panicked"))

@@ -86,6 +86,8 @@ impl Server {
         for i in 0..cfg.threads {
             let l = listener.try_clone()?;
             let stop = server.stop.clone();
+            // analyze: allow(no-unwrap-in-fallible): batcher is Some from
+            // construction above until Drop.
             let tx = server.batcher.as_ref().expect("batcher running").submitter();
             let stats = server.stats.clone();
             server.acceptors.push(

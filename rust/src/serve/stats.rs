@@ -94,6 +94,9 @@ impl ServeStats {
     /// never reallocate; past capacity the oldest slot is overwritten.
     #[inline]
     pub fn record_latency_us(&self, us: u64) {
+        // analyze: allow(no-unwrap-in-fallible): a poisoned latency lock
+        // means a serve thread already panicked mid-update — propagating
+        // the panic here is the correct (and only) escalation.
         let mut ring = self.latencies.lock().expect("stats lock");
         if ring.samples.len() < LATENCY_RING {
             ring.samples.push(us);
@@ -127,10 +130,12 @@ impl ServeStats {
         let cols = self.batch_cols.load(Ordering::Relaxed);
         let depth = self.queue_depth.load(Ordering::Relaxed);
         let mut lat: Vec<f64> = {
+            // analyze: allow(no-unwrap-in-fallible): poisoned-lock policy
+            // as in record_latency_us — escalate the original panic.
             let ring = self.latencies.lock().expect("stats lock");
             ring.samples.iter().map(|&us| us as f64).collect()
         };
-        lat.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        lat.sort_by(|a, b| a.total_cmp(b));
         let mut out = String::with_capacity(512);
         let _ = writeln!(out, "# TYPE serve_requests_total counter");
         let _ = writeln!(out, "serve_requests_total {requests}");

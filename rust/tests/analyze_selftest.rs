@@ -1,0 +1,223 @@
+//! Selftest for `gradfree analyze`: one bad fixture per lint (must be
+//! flagged at the right file:line) beside a good twin (must pass), the
+//! waiver scoping rules, the ratchet round-trip, and an integration pass
+//! over the real crate sources against the committed baseline.
+//!
+//! Fixtures go through [`analyze_texts`] with scope-hitting fake paths —
+//! the engine keys every lint off the src-relative path, so a fixture
+//! named `cluster/fallible.rs` is linted exactly like a real cluster
+//! module.
+
+use gradfree_admm::analyze::baseline::{Baseline, Counts};
+use gradfree_admm::analyze::{analyze_dir, analyze_texts, Finding, Report};
+use gradfree_admm::config::Json;
+use std::path::Path;
+
+fn report_for(path: &str, text: &str) -> Report {
+    analyze_texts(&[(path.to_string(), text.to_string())])
+}
+
+/// Unwaived findings of one lint, as (line, waived) pairs.
+fn hits<'a>(r: &'a Report, lint: &str) -> Vec<&'a Finding> {
+    r.findings.iter().filter(|f| f.lint == lint).collect()
+}
+
+#[test]
+fn deny_alloc_flags_hot_fns_only() {
+    let r = report_for(
+        "linalg/gemm.rs",
+        "\npub fn gemm_nn_into(c: &mut Matrix, a: &Matrix, b: &Matrix) {\n    \
+         let scratch = vec![0.0f32; 4];\n    \
+         let s: Vec<f32> = rows.iter().map(|r| r * 2.0).collect();\n}\n\
+         pub fn helper(n: usize) -> Vec<f32> {\n    let v = vec![0.0f32; n];\n    v\n}\n",
+    );
+    let f = hits(&r, "deny-alloc");
+    // Both allocations in the manifest fn flagged; the helper's is not.
+    assert_eq!(f.len(), 2, "{:?}", r.findings);
+    assert_eq!((f[0].line, f[1].line), (3, 4));
+    assert!(f.iter().all(|f| !f.waived && f.message.contains("gemm_nn_into")));
+}
+
+#[test]
+fn collective_symmetry_flags_guarded_and_unwaited() {
+    let bad = "\nfn bad_guarded(comm: &mut C, rank: usize, buf: &mut [f32]) -> Result<()> {\n    \
+         if rank == 0 {\n        comm.allreduce_sum(buf)?;\n    }\n    Ok(())\n}\n\
+         fn bad_unwaited(comm: &mut C, buf: &mut [f32]) -> Result<()> {\n    \
+         let h = comm.iallreduce_sum(buf)?;\n    Ok(())\n}\n";
+    let r = report_for("coordinator/spmd.rs", bad);
+    let f = hits(&r, "collective-symmetry");
+    assert_eq!(f.len(), 2, "{:?}", r.findings);
+    // The guarded collective pins the call line; the missing wait pins
+    // the issue line.
+    assert_eq!(f[0].line, 4);
+    assert_eq!(f[1].line, 9);
+    assert!(f[1].message.contains("bad_unwaited"));
+
+    // Good twin: rank-guarded *local* work, collectives outside, and a
+    // nonblocking issue paired with a wait in the same fn.
+    let good = "\nfn good_symmetric(comm: &mut C, rank: usize, buf: &mut [f32]) -> Result<()> {\n    \
+         if rank == 0 {\n        stage_local(buf);\n    }\n    \
+         comm.allreduce_sum(buf)?;\n    \
+         let h = comm.ibroadcast(0, buf)?;\n    comm.wait(h)?;\n    Ok(())\n}\n";
+    let r = report_for("coordinator/spmd.rs", good);
+    assert!(hits(&r, "collective-symmetry").is_empty(), "{:?}", r.findings);
+}
+
+#[test]
+fn determinism_flags_clock_and_order_sources() {
+    let r = report_for(
+        "linalg/clock.rs",
+        "\nfn bad_clock() {\n    let t0 = Instant::now();\n    \
+         let m: HashMap<u32, f32> = new_map();\n}\n\
+         fn good_clock() {\n    let m: BTreeMap<u32, f32> = new_map();\n}\n",
+    );
+    let f = hits(&r, "determinism");
+    assert_eq!(f.len(), 2, "{:?}", r.findings);
+    assert_eq!((f[0].line, f[1].line), (3, 4));
+}
+
+#[test]
+fn unwrap_lint_skips_combinators_and_tests() {
+    let r = report_for(
+        "cluster/fallible.rs",
+        "\nfn bad(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n\
+         fn good(x: Option<u32>) -> u32 {\n    x.unwrap_or(0)\n}\n\
+         #[cfg(test)]\nmod tests {\n    fn in_test(x: Option<u32>) -> u32 {\n        \
+         x.unwrap()\n    }\n}\n",
+    );
+    let f = hits(&r, "no-unwrap-in-fallible");
+    // Only the production `.unwrap()`: `unwrap_or` is a combinator and
+    // the `#[cfg(test)]` body is out of scope.
+    assert_eq!(f.len(), 1, "{:?}", r.findings);
+    assert_eq!(f[0].line, 3);
+}
+
+#[test]
+fn lock_across_collective_tracks_guard_lifetime() {
+    let r = report_for(
+        "cluster/ledger.rs",
+        "\nimpl Ledger {\n    fn bad_hold(&self) -> Result<()> {\n        \
+         let guard = self.state.lock()?;\n        \
+         self.comm.barrier()?;\n        drop(guard);\n        Ok(())\n    }\n    \
+         fn good_drop(&self) -> Result<()> {\n        \
+         let guard = self.state.lock()?;\n        let v = *guard;\n        \
+         drop(guard);\n        self.comm.barrier()?;\n        Ok(())\n    }\n}\n",
+    );
+    let f = hits(&r, "lock-across-collective");
+    // bad_hold: barrier while the guard is live.  good_drop: the guard
+    // dies at `drop(...)` before the barrier — clean.
+    assert_eq!(f.len(), 1, "{:?}", r.findings);
+    assert_eq!(f[0].line, 5);
+}
+
+#[test]
+fn waivers_cover_one_statement_and_stay_in_report() {
+    let r = report_for(
+        "linalg/waived.rs",
+        "\nfn noted() {\n    \
+         let m: HashMap<u32, f32> = new_map(); // analyze: allow(determinism): fixture\n    \
+         // analyze: allow(determinism): standalone form\n    \
+         let t0 = Instant::now();\n    \
+         let late = Instant::now();\n}\n",
+    );
+    let f = hits(&r, "determinism");
+    assert_eq!(f.len(), 3, "{:?}", r.findings);
+    // Trailing waiver covers its line; the standalone one covers exactly
+    // the next statement — the third site stays unwaived.
+    assert_eq!(
+        f.iter().map(|f| (f.line, f.waived)).collect::<Vec<_>>(),
+        vec![(3, true), (5, true), (6, false)]
+    );
+    // Waived findings never reach the ratchet currency.
+    assert_eq!(
+        r.counts(),
+        [(("determinism".to_string(), "linalg/waived.rs".to_string()), 1)]
+            .into_iter()
+            .collect::<Counts>()
+    );
+    assert_eq!(r.waived(), 2);
+}
+
+#[test]
+fn ratchet_round_trips_and_fails_on_increase() {
+    let mut counts = Counts::new();
+    counts.insert(("no-unwrap-in-fallible".into(), "cluster/comm.rs".into()), 13);
+    counts.insert(("deny-alloc".into(), "serve/batcher.rs".into()), 2);
+    let base = Baseline::from_counts(counts.clone());
+    let reparsed = Baseline::parse(&base.render()).unwrap();
+    assert_eq!(base.allow, reparsed.allow);
+    // At the allowance: clean.
+    let d = reparsed.compare(&counts);
+    assert!(d.regressions.is_empty() && d.improvements.is_empty());
+    // Seed one extra finding: that (lint, file) regresses, nothing else.
+    let mut worse = counts.clone();
+    worse.insert(("deny-alloc".into(), "serve/batcher.rs".into()), 3);
+    let d = reparsed.compare(&worse);
+    assert_eq!(d.regressions.len(), 1);
+    assert_eq!(d.regressions[0].file, "serve/batcher.rs");
+    assert_eq!((d.regressions[0].allowed, d.regressions[0].found), (2, 3));
+    // Burn-down shows as an improvement, never an error.
+    let mut better = counts;
+    better.insert(("no-unwrap-in-fallible".into(), "cluster/comm.rs".into()), 5);
+    let d = reparsed.compare(&better);
+    assert!(d.regressions.is_empty());
+    assert_eq!(d.improvements.len(), 1);
+}
+
+/// The committed tree must pass against the committed baseline — this is
+/// the same check CI's `analyze` job runs, minus the process boundary.
+#[test]
+fn committed_tree_is_clean_against_committed_baseline() {
+    // Integration tests run with cwd = the crate dir (rust/).
+    let report = analyze_dir(Path::new("src")).unwrap();
+    let base = Baseline::parse(&std::fs::read_to_string("analyze.allow").unwrap()).unwrap();
+    let delta = base.compare(&report.counts());
+    assert!(
+        delta.regressions.is_empty(),
+        "lint regressions vs analyze.allow: {:?}",
+        delta.regressions
+    );
+    // The SPMD schedule itself must be symmetric and lock-clean — these
+    // two lints are hard-clean, not grandfathered (satellite invariant).
+    for lint in ["collective-symmetry", "lock-across-collective"] {
+        let live: Vec<_> =
+            report.findings.iter().filter(|f| f.lint == lint && !f.waived).collect();
+        assert!(live.is_empty(), "{lint}: {live:?}");
+    }
+}
+
+/// The JSON report is real JSON by the crate's own parser, with the
+/// schema fields CI consumers rely on.
+#[test]
+fn json_report_round_trips() {
+    let r = report_for(
+        "cluster/fallible.rs",
+        "\nfn bad(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n",
+    );
+    let counts = r.counts();
+    let base = Baseline::default();
+    let delta = base.compare(&counts);
+    let json = r.to_json("src", &delta);
+    let re = Json::parse(&json.to_string_pretty()).unwrap();
+    assert_eq!(re.get("schema").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(re.get("src").unwrap().as_str().unwrap(), "src");
+    let findings = re.get("findings").unwrap().as_arr().unwrap();
+    assert_eq!(findings.len(), 1);
+    assert_eq!(findings[0].get("line").unwrap().as_usize().unwrap(), 3);
+    assert!(!findings[0].get("waived").unwrap().as_bool().unwrap());
+    // One regression (no allowance for the fixture's finding).
+    let regs = re.get("regressions").unwrap().as_arr().unwrap();
+    assert_eq!(regs.len(), 1);
+    assert_eq!(regs[0].get("found").unwrap().as_usize().unwrap(), 1);
+    // counts.{lint}.{file} nests the same number.
+    let n = re
+        .get("counts")
+        .unwrap()
+        .get("no-unwrap-in-fallible")
+        .unwrap()
+        .get("cluster/fallible.rs")
+        .unwrap()
+        .as_usize()
+        .unwrap();
+    assert_eq!(n, 1);
+}
