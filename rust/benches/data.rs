@@ -1,0 +1,53 @@
+//! Out-of-core strong scaling at HIGGS scale (paper §7's dataset regime
+//! without the RAM bill): generates a ≥1M-row HIGGS-like `GFDS01` file,
+//! then sweeps `StreamTrainer` worlds of 1/2/4/8 ranks where every rank
+//! streams exactly its column shard from disk.  Hard-asserts measured
+//! per-rank file I/O equals `HEADER_LEN + shard·(4·features + 4)` and
+//! sanity-checks each multi-rank point against its calibrated
+//! `ScalingProfile` prediction.
+//!
+//! Output: bench_out/BENCH_DATA.json (schema 1).
+//!
+//!   cargo bench --bench data [-- --rows N --iters I]
+
+use gradfree_admm::bench::banner;
+use gradfree_admm::bench::dataset::{run_data_bench, DataBenchSpec};
+use gradfree_admm::cli::Args;
+
+fn main() -> gradfree_admm::Result<()> {
+    let args = Args::parse();
+    let d = DataBenchSpec::default();
+    let spec = DataBenchSpec {
+        rows: args.parsed_or("rows", d.rows)?,
+        test_rows: args.parsed_or("test-rows", d.test_rows)?,
+        iters: args.parsed_or("iters", d.iters)?,
+        ..d
+    };
+    banner(
+        "data",
+        &format!(
+            "out-of-core GFDS01 streaming, worlds {:?} over {} HIGGS-like rows",
+            spec.worlds, spec.rows
+        ),
+        "§7 scaling regime on HIGGS-scale data",
+    );
+
+    let (rows, path) = run_data_bench(&spec)?;
+    println!(
+        "\n{:>6} {:>10} {:>13} {:>13} {:>16}",
+        "world", "opt_s", "rows/s", "pred_s", "bytes/rank[0]"
+    );
+    for r in &rows {
+        println!(
+            "{:>6} {:>10.3} {:>13.0} {:>13.3e} {:>16}",
+            r.world,
+            r.opt_seconds,
+            r.rows_per_sec,
+            r.profile_pred_s,
+            r.bytes_read_per_rank.first().copied().unwrap_or(0)
+        );
+    }
+    println!("\nmeasured per-rank file I/O == shard formula on every point ✓");
+    println!("written: {path}");
+    Ok(())
+}

@@ -39,13 +39,14 @@ pub const LINTS: &[(&str, &str)] = &[
 
 /// Modules under the typed-`CommError` discipline: every failure must
 /// surface as a contextual `Result`, never a panic.
-const FALLIBLE_SCOPE: &[&str] = &["cluster/", "serve/", "nn/io.rs", "runtime/"];
+const FALLIBLE_SCOPE: &[&str] = &["cluster/", "serve/", "nn/io.rs", "runtime/", "dataset/"];
 
 /// Modules on the bit-identical path: the full determinism rules,
 /// including wall-clock reads (`Instant::now`-derived values feed folds
 /// only through the telemetry wrappers in `trace`, which stay outside
 /// the model fingerprint by construction).
-const DETERMINISM_SCOPE: &[&str] = &["linalg/", "coordinator/", "problem/", "data/", "rng.rs"];
+const DETERMINISM_SCOPE: &[&str] =
+    &["linalg/", "coordinator/", "problem/", "data/", "dataset/", "rng.rs"];
 
 /// `cluster/` fold code: collection-iteration-order rules apply, but
 /// wall-clock reads are allowed — collective deadlines and wait
@@ -91,10 +92,18 @@ const HOT_MANIFEST: &[(&str, &[&str])] = &[
             "allreduce_scalars",
             "broadcast_scalars",
             "ensure_entry",
+            "take_buf",
+            "retire_done",
             "deposit",
             "ready",
             "fold_into",
+            "lock",
+            "wait_50ms",
         ],
+    ),
+    (
+        "dataset/reader.rs",
+        &["read_shard_into", "seek_to", "read_exact_counted"],
     ),
     ("trace/mod.rs", &["start", "record", "record_from", "record_us"]),
     (
@@ -255,8 +264,10 @@ fn is_branch_guard(guard: &str) -> bool {
 
 /// Does this statement bind a `MutexGuard` that outlives the statement?
 /// Recognizes the direct forms `let g = x.lock()` / `.lock().unwrap()` /
-/// `.lock().expect("…")`; a `.lock()` temporary consumed inline (e.g.
-/// `x.lock().unwrap().len()`) dies at the semicolon and is not tracked.
+/// `.lock().expect("…")` plus the poison-tolerant free-function form
+/// `let g = lock(&m)` (`cluster/comm.rs`); a `.lock()` temporary consumed
+/// inline (e.g. `x.lock().unwrap().len()`) dies at the semicolon and is
+/// not tracked.
 fn lock_binding(stmt: &str) -> Option<String> {
     let t = stmt.trim_start();
     let t = t.strip_prefix("let ")?;
@@ -271,17 +282,21 @@ fn lock_binding(stmt: &str) -> Option<String> {
         return None;
     }
     let name = &t[..j];
-    let k = stmt.rfind(".lock(")?;
-    let tail: String = stmt[k..].chars().filter(|c| !c.is_whitespace()).collect();
-    let held = tail == ".lock()"
-        || tail == ".lock()?"
-        || tail == ".lock().unwrap()"
-        || (tail.starts_with(".lock().expect(") && tail.ends_with(')'));
-    if held {
-        Some(name.to_string())
-    } else {
-        None
+    if let Some(k) = stmt.rfind(".lock(") {
+        let tail: String = stmt[k..].chars().filter(|c| !c.is_whitespace()).collect();
+        let held = tail == ".lock()"
+            || tail == ".lock()?"
+            || tail == ".lock().unwrap()"
+            || (tail.starts_with(".lock().expect(") && tail.ends_with(')'));
+        if held {
+            return Some(name.to_string());
+        }
     }
+    let rhs = stmt.split_once('=')?.1.trim();
+    if rhs.starts_with("lock(") && rhs.ends_with(')') {
+        return Some(name.to_string());
+    }
+    None
 }
 
 /// `drop(g)` / `std::mem::drop(g)` — name of the dropped binding.

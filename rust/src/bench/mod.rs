@@ -3,6 +3,7 @@
 //! helpers every figure bench uses.  Benches are `harness = false` binaries
 //! under `rust/benches/`; outputs land in `bench_out/`.
 
+pub mod dataset;
 pub mod scaling;
 
 use std::time::Instant;

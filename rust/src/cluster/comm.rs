@@ -579,32 +579,124 @@ impl Collectives {
     }
 }
 
+/// Poison-tolerant mutex lock.  A rank that panics while holding a comm
+/// lock has already poisoned the world through its `Drop`-armed abort
+/// flag, so survivors recover the guard and exit through the abort path
+/// instead of unwinding a second time on `PoisonError`.
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// Poison-tolerant 50 ms condvar wait — the abort/deadline poll interval
+/// every blocking point in this module shares.
+fn wait_50ms<'a, T>(
+    cv: &Condvar,
+    g: std::sync::MutexGuard<'a, T>,
+) -> std::sync::MutexGuard<'a, T> {
+    match cv.wait_timeout(g, Duration::from_millis(50)) {
+        Ok((g, _timeout)) => g,
+        Err(p) => p.into_inner().0,
+    }
+}
+
 /// One in-flight op on the [`NbLedger`]: the per-rank deposit slots plus
 /// arrival/fold refcounts.  Shells and deposit buffers are recycled, so
-/// the steady state allocates nothing.
+/// the steady state allocates nothing.  The slots live behind the op's
+/// *own* lock (ledger handles them through an `Arc`), and arrival is a
+/// lock-free atomic — see the [`NbLedger`] doc for why.
 struct NbOp {
+    /// Arrival count; readable without any lock, so a completer's condvar
+    /// poll never contends with a peer folding a different op.
+    deposited: std::sync::atomic::AtomicUsize,
+    /// Every rank has folded — the shell is retirable ([`NbLedger`]
+    /// recycles it under the index lock).
+    done: AtomicBool,
+    state: Mutex<NbOpState>,
+}
+
+/// The lock-guarded interior of an [`NbOp`].
+struct NbOpState {
     kind: PendingKind,
     deposits: Vec<Option<Matrix>>,
-    deposited: usize,
     folded: usize,
 }
 
 impl NbOp {
     fn empty() -> NbOp {
         NbOp {
-            kind: PendingKind::Allreduce,
-            deposits: Vec::new(),
-            deposited: 0,
-            folded: 0,
+            deposited: std::sync::atomic::AtomicUsize::new(0),
+            done: AtomicBool::new(false),
+            state: Mutex::new(NbOpState {
+                kind: PendingKind::Allreduce,
+                deposits: Vec::new(),
+                folded: 0,
+            }),
         }
     }
 
-    fn reset(&mut self, kind: PendingKind, world: usize) {
-        self.kind = kind;
-        self.deposits.clear();
-        self.deposits.resize_with(world, || None);
-        self.deposited = 0;
-        self.folded = 0;
+    /// Re-arm a recycled shell for a new sequence number.  Interior
+    /// mutability only (never `Arc::get_mut`): late completers of the
+    /// shell's previous life may still be dropping their clones.
+    fn reset(&self, kind: PendingKind, world: usize) {
+        {
+            let mut st = lock(&self.state);
+            st.kind = kind;
+            st.deposits.clear();
+            st.deposits.resize_with(world, || None);
+            st.folded = 0;
+        }
+        self.deposited.store(0, Ordering::Relaxed);
+        self.done.store(false, Ordering::Relaxed);
+    }
+
+    /// Park `slot` as `rank`'s contribution and publish the arrival.
+    fn deposit(&self, rank: usize, slot: Matrix) {
+        {
+            let mut st = lock(&self.state);
+            debug_assert!(st.deposits[rank].is_none(), "rank {rank} deposited twice");
+            st.deposits[rank] = Some(slot);
+        }
+        self.deposited.fetch_add(1, Ordering::Release);
+    }
+
+    /// Atomic-only readiness — the condvar loop polls this without
+    /// touching the state mutex.  (Only the root deposits a broadcast,
+    /// so one arrival completes it.)
+    fn ready(&self, kind: PendingKind, world: usize) -> bool {
+        match kind {
+            PendingKind::Allreduce => self.deposited.load(Ordering::Acquire) == world,
+            PendingKind::Broadcast { .. } => self.deposited.load(Ordering::Acquire) >= 1,
+        }
+    }
+
+    /// Fold the ready op into `buf` (rank-order — bit-identical to the
+    /// serial sum).  Returns true for the last rank to fold, which then
+    /// retires front shells on the ledger.
+    fn fold_into(&self, kind: PendingKind, rank: usize, world: usize, buf: &mut Matrix) -> bool {
+        let mut st = lock(&self.state);
+        match kind {
+            PendingKind::Allreduce => {
+                buf.copy_from(st.deposits[0].as_ref().expect("rank 0 deposited"));
+                for d in st.deposits.iter().skip(1) {
+                    buf.add_assign(d.as_ref().expect("rank deposited"));
+                }
+            }
+            PendingKind::Broadcast { root } => {
+                if rank != root {
+                    buf.copy_from(st.deposits[root].as_ref().expect("root deposited"));
+                }
+            }
+        }
+        st.folded += 1;
+        let last = st.folded == world;
+        drop(st);
+        if last {
+            self.done.store(true, Ordering::Release);
+        }
+        last
     }
 }
 
@@ -615,20 +707,21 @@ impl NbOp {
 /// *different* kind at the same number is a schedule desync and errors
 /// (mirroring the TCP transport's opcode check).
 ///
-/// Known tradeoff: each rank's fold runs under the single ledger mutex,
-/// so concurrent folds of one op serialize (the ops `VecDeque` may move
-/// entries on push/pop, so fold reads cannot safely escape the lock
-/// without per-op stable storage — a ROADMAP follow-up).  The folds are
-/// memory-bound memcpy/add over buffers that all ranks read anyway, and
-/// the pipelined schedule staggers when ranks reach them, so the
-/// serialization has not shown up in the scaling bench; revisit with
-/// `Arc`-per-op storage if Local worlds grow past a socket.
+/// Entries are `Arc`-per-op: the ledger mutex guards only the sequence
+/// *index* (the `VecDeque` and the recycling pools), while each op's
+/// deposit slots sit behind that op's own lock and its readiness is a
+/// lock-free atomic.  Deposit copies run outside every lock and folds of
+/// different ops run concurrently — ranks draining a pipelined schedule
+/// meet only on the brief index operations instead of serializing their
+/// memory-bound folds through one world-wide mutex, and a completer
+/// polling for stragglers never contends with a peer folding an older
+/// op.  Lock order is strictly ledger → op state (never the reverse).
 struct NbLedger {
     /// Sequence number of `ops[0]`.
     base: u64,
-    ops: VecDeque<NbOp>,
+    ops: VecDeque<Arc<NbOp>>,
     free_bufs: Vec<Matrix>,
-    free_ops: Vec<NbOp>,
+    free_ops: Vec<Arc<NbOp>>,
 }
 
 impl NbLedger {
@@ -642,7 +735,7 @@ impl NbLedger {
     }
 
     /// Find or create the entry for `seq`, verifying kind agreement.
-    fn ensure_entry(&mut self, seq: u64, kind: PendingKind, world: usize) -> Result<usize> {
+    fn ensure_entry(&mut self, seq: u64, kind: PendingKind, world: usize) -> Result<Arc<NbOp>> {
         anyhow::ensure!(seq >= self.base, "nonblocking op {seq} already completed");
         let idx = (seq - self.base) as usize;
         // Entries are created in sequence order (every rank issues its
@@ -654,29 +747,31 @@ impl NbLedger {
             self.base + self.ops.len() as u64
         );
         if idx == self.ops.len() {
-            let mut op = self.free_ops.pop().unwrap_or_else(NbOp::empty);
+            let op = self.free_ops.pop().unwrap_or_else(|| Arc::new(NbOp::empty()));
             op.reset(kind, world);
             self.ops.push_back(op);
         }
-        let op = &self.ops[idx];
+        let op = Arc::clone(&self.ops[idx]);
+        let st = lock(&op.state);
         anyhow::ensure!(
-            op.kind == kind,
+            st.kind == kind,
             "nonblocking collective desync at op {seq}: this rank issued {kind:?}, \
              a peer issued {:?} (ranks must issue collectives in the same program order)",
-            op.kind
+            st.kind
         );
-        Ok(idx)
+        drop(st);
+        Ok(op)
     }
 
-    fn deposit(&mut self, idx: usize, rank: usize, m: &Matrix) {
-        // The pool mixes deposit shapes (Gram pairs, weight panels, …),
-        // so pick the *smallest sufficient* buffer rather than an
-        // arbitrary one: a large buffer never gets wasted on a small
-        // deposit while a bigger deposit reallocates, and the pool
-        // deterministically converges to zero steady-state allocations
-        // regardless of recycle order (capacities only grow).
-        let need = m.len();
-        let mut slot = match self
+    /// Take a deposit buffer for a `need`-float contribution.  The pool
+    /// mixes deposit shapes (Gram pairs, weight panels, …), so pick the
+    /// *smallest sufficient* buffer rather than an arbitrary one: a large
+    /// buffer never gets wasted on a small deposit while a bigger deposit
+    /// reallocates, and the pool deterministically converges to zero
+    /// steady-state allocations regardless of recycle order (capacities
+    /// only grow).
+    fn take_buf(&mut self, need: usize) -> Matrix {
+        match self
             .free_bufs
             .iter()
             .enumerate()
@@ -686,60 +781,24 @@ impl NbLedger {
         {
             Some(i) => self.free_bufs.swap_remove(i),
             None => self.free_bufs.pop().unwrap_or_default(),
-        };
-        slot.copy_from(m);
-        let op = &mut self.ops[idx];
-        debug_assert!(op.deposits[rank].is_none(), "rank {rank} deposited twice");
-        op.deposits[rank] = Some(slot);
-        op.deposited += 1;
-    }
-
-    fn ready(&self, seq: u64, kind: PendingKind, world: usize) -> bool {
-        let idx = (seq - self.base) as usize;
-        let op = &self.ops[idx];
-        match kind {
-            PendingKind::Allreduce => op.deposited == world,
-            PendingKind::Broadcast { root } => op.deposits[root].is_some(),
         }
     }
 
-    /// Fold the ready op into `buf` (rank-order — bit-identical to the
-    /// serial sum) and recycle its buffers once every rank has folded.
-    fn fold_into(
-        &mut self,
-        seq: u64,
-        kind: PendingKind,
-        rank: usize,
-        world: usize,
-        buf: &mut Matrix,
-    ) {
-        let idx = (seq - self.base) as usize;
-        let op = &mut self.ops[idx];
-        match kind {
-            PendingKind::Allreduce => {
-                buf.copy_from(op.deposits[0].as_ref().expect("rank 0 deposited"));
-                for d in op.deposits.iter().skip(1) {
-                    buf.add_assign(d.as_ref().expect("rank deposited"));
-                }
-            }
-            PendingKind::Broadcast { root } => {
-                if rank != root {
-                    buf.copy_from(op.deposits[root].as_ref().expect("root deposited"));
-                }
-            }
-        }
-        op.folded += 1;
-        if op.folded == world {
-            for d in op.deposits.iter_mut() {
-                if let Some(m) = d.take() {
-                    self.free_bufs.push(m);
-                }
-            }
-            // Completion is in sequence order, so only front entries can
-            // be fully folded.
-            while self.ops.front().is_some_and(|o| o.folded == world) {
-                let shell = self.ops.pop_front().expect("checked front");
+    /// Pop fully-folded front entries, recycling their deposit buffers
+    /// and shells.  Completion is in sequence order, so only front
+    /// entries can be done; called by each op's last folder.
+    fn retire_done(&mut self) {
+        while self.ops.front().is_some_and(|o| o.done.load(Ordering::Acquire)) {
+            if let Some(shell) = self.ops.pop_front() {
                 self.base += 1;
+                {
+                    let mut st = lock(&shell.state);
+                    for d in st.deposits.iter_mut() {
+                        if let Some(m) = d.take() {
+                            self.free_bufs.push(m);
+                        }
+                    }
+                }
                 self.free_ops.push(shell);
             }
         }
@@ -876,14 +935,19 @@ impl LocalComm {
                 PendingKind::Allreduce => true,
                 PendingKind::Broadcast { root } => root == self.rank,
             };
-            {
-                let mut nb = self.shared.nb.lock().unwrap();
-                let idx = nb.ensure_entry(seq, kind, self.world)?;
-                if depositor {
-                    nb.deposit(idx, self.rank, &buf);
-                }
+            let (entry, slot) = {
+                let mut nb = lock(&self.shared.nb);
+                let entry = nb.ensure_entry(seq, kind, self.world)?;
+                let slot = depositor.then(|| nb.take_buf(buf.len()));
+                (entry, slot)
+            };
+            if let Some(mut slot) = slot {
+                // The contribution memcpy runs outside every lock — peers
+                // issuing or folding other ops proceed concurrently.
+                slot.copy_from(&buf);
+                entry.deposit(self.rank, slot);
+                self.shared.nb_cv.notify_all();
             }
-            self.shared.nb_cv.notify_all();
         }
         Ok(PendingOp { seq, kind, buf, issued: Instant::now() })
     }
@@ -903,14 +967,19 @@ impl LocalComm {
             self.count(kind, buf.len());
             return Ok(buf);
         }
-        {
+        let entry = {
             let deadline = Instant::now() + self.timeout;
-            let mut nb = self.shared.nb.lock().unwrap();
+            let mut nb = lock(&self.shared.nb);
+            // This rank issued `seq` and has not folded it, so the entry
+            // cannot have been retired — the index is always in range.
+            let entry = Arc::clone(&nb.ops[(seq - nb.base) as usize]);
             loop {
                 // Readiness before abort: a completable op completes even
                 // while a post-run drop is poisoning the world (same
                 // ordering argument as the barrier's generation check).
-                if nb.ready(seq, kind, self.world) {
+                // The check is atomic-only, so the ledger lock this poll
+                // loop holds never blocks a peer's fold.
+                if entry.ready(kind, self.world) {
                     break;
                 }
                 if self.shared.abort.load(Ordering::SeqCst) {
@@ -919,14 +988,15 @@ impl LocalComm {
                 if Instant::now() >= deadline {
                     return Err(self.timeout_err("collective wait"));
                 }
-                let (nb2, _timeout) = self
-                    .shared
-                    .nb_cv
-                    .wait_timeout(nb, Duration::from_millis(50))
-                    .unwrap();
-                nb = nb2;
+                nb = wait_50ms(&self.shared.nb_cv, nb);
             }
-            nb.fold_into(seq, kind, self.rank, self.world, &mut buf);
+            entry
+        };
+        // Fold under the per-op lock only: folds of different ops (and
+        // the deposit copies of ops still being issued) run concurrently.
+        let last = entry.fold_into(kind, self.rank, self.world, &mut buf);
+        if last {
+            lock(&self.shared.nb).retire_done();
         }
         if self.rank == 0 {
             self.count(kind, buf.len());
@@ -942,7 +1012,7 @@ impl LocalComm {
             return self.check_abort();
         }
         self.check_abort()?;
-        let mut g = self.shared.gate.lock().unwrap();
+        let mut g = lock(&self.shared.gate);
         g.arrived += 1;
         if g.arrived == self.world {
             g.arrived = 0;
@@ -953,12 +1023,7 @@ impl LocalComm {
         let gen = g.generation;
         let deadline = Instant::now() + self.timeout;
         loop {
-            let (g2, _timeout) = self
-                .shared
-                .cv
-                .wait_timeout(g, Duration::from_millis(50))
-                .unwrap();
-            g = g2;
+            g = wait_50ms(&self.shared.cv, g);
             if g.generation != gen {
                 return Ok(());
             }
@@ -983,7 +1048,7 @@ impl LocalComm {
             return self.check_abort();
         }
         {
-            let mut slot = self.shared.scalar_slots[self.rank].lock().unwrap();
+            let mut slot = lock(&self.shared.scalar_slots[self.rank]);
             slot.clear();
             slot.extend_from_slice(vals);
         }
@@ -991,7 +1056,7 @@ impl LocalComm {
         {
             vals.fill(0.0);
             for (r, slot_mutex) in self.shared.scalar_slots.iter().enumerate() {
-                let slot = slot_mutex.lock().unwrap();
+                let slot = lock(slot_mutex);
                 anyhow::ensure!(
                     slot.len() == vals.len(),
                     "scalar allreduce length mismatch: rank {r} sent {}, expected {}",
@@ -1016,13 +1081,13 @@ impl LocalComm {
             return self.check_abort();
         }
         if self.rank == root {
-            let mut slot = self.shared.scalar_slots[root].lock().unwrap();
+            let mut slot = lock(&self.shared.scalar_slots[root]);
             slot.clear();
             slot.extend_from_slice(vals);
         }
         self.barrier()?;
         if self.rank != root {
-            let slot = self.shared.scalar_slots[root].lock().unwrap();
+            let slot = lock(&self.shared.scalar_slots[root]);
             anyhow::ensure!(
                 slot.len() == vals.len(),
                 "scalar broadcast length mismatch: root sent {}, expected {}",

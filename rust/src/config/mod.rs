@@ -382,6 +382,19 @@ pub struct TrainConfig {
     /// per-process (not part of the wire fingerprint): any subset of a
     /// world may trace without changing a bit of the training run.
     pub trace_path: String,
+    /// Train from a dataset file (`--data file.csv|file.gfds`) instead
+    /// of a synthetic generator.  The format is auto-detected by magic:
+    /// `GFDS01` files take the columnar binary path (streamed
+    /// out-of-core at `dataset::STREAM_THRESHOLD_BYTES` and above),
+    /// anything else parses as CSV.  Not part of the wire fingerprint —
+    /// the dataset itself is fingerprinted into the TCP handshake
+    /// (`Dataset::fingerprint` / `GfdsReader::fingerprint`).
+    pub data_path: String,
+    /// Force the out-of-core streaming path for a `GFDS01` `--data` file
+    /// regardless of its size (`--stream`).  Bit-identical to the in-RAM
+    /// path by the `tests/dataset_io.rs` pins, so this is a memory/speed
+    /// knob, not a semantic one — and therefore not fingerprinted.
+    pub stream: bool,
 }
 
 impl Default for TrainConfig {
@@ -417,6 +430,8 @@ impl Default for TrainConfig {
             resume: String::new(),
             fault: None,
             trace_path: String::new(),
+            data_path: String::new(),
+            stream: false,
         }
     }
 }
@@ -528,6 +543,10 @@ impl TrainConfig {
                 self.world()
             );
         }
+        anyhow::ensure!(
+            !self.stream || !self.data_path.is_empty(),
+            "--stream needs --data <file.gfds>"
+        );
         Ok(())
     }
 
@@ -573,6 +592,8 @@ impl TrainConfig {
                 "resume" => c.resume = val.as_str()?.to_string(),
                 "fault" => c.fault = Some(FaultPlan::parse(val.as_str()?)?),
                 "trace" => c.trace_path = val.as_str()?.to_string(),
+                "data" => c.data_path = val.as_str()?.to_string(),
+                "stream" => c.stream = val.as_bool()?,
                 other => anyhow::bail!("unknown config key '{other}'"),
             }
         }
@@ -681,6 +702,12 @@ impl TrainConfig {
         }
         if let Some(v) = args.get("trace") {
             self.trace_path = v.to_string();
+        }
+        if let Some(v) = args.get("data") {
+            self.data_path = v.to_string();
+        }
+        if args.has("stream") {
+            self.stream = true;
         }
         self.validate()
     }
@@ -1136,6 +1163,34 @@ mod tests {
         assert!(bad.validate().is_err());
         let mut bad = TrainConfig::default();
         bad.fault = Some(FaultPlan { rank: 9, iter: 0, kind: FaultKind::Crash });
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn data_path_and_stream_knobs() {
+        let mut c = TrainConfig::default();
+        let args = Args::parse_from(
+            ["--data", "d.gfds", "--stream"].iter().map(|s| s.to_string()),
+        );
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.data_path, "d.gfds");
+        assert!(c.stream);
+        // The loader knobs pick where bytes come from, not what the SPMD
+        // schedule does — the streamed and in-RAM paths are bit-identical,
+        // so the wire fingerprint must not move.
+        assert_eq!(c.spmd_fingerprint(), TrainConfig::default().spmd_fingerprint());
+
+        // JSON spellings
+        let c = TrainConfig::from_json(
+            &Json::parse(r#"{"data": "f.csv", "stream": false}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.data_path, "f.csv");
+        assert!(!c.stream);
+
+        // --stream without --data is a config error
+        let mut bad = TrainConfig::default();
+        bad.stream = true;
         assert!(bad.validate().is_err());
     }
 

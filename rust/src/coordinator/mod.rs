@@ -12,17 +12,23 @@
 //!   oracle the gradient baselines fan out over;
 //! * `trainer` — the public driver: forms a `Local` (threads) or `Tcp`
 //!   (processes) world, runs every rank, tracks convergence and traffic,
-//!   and calibrates the scaling profile used by figs 1a/2a.
+//!   and calibrates the scaling profile used by figs 1a/2a;
+//! * `stream` — the out-of-core driver: same worlds, same rank loop,
+//!   but each rank streams exactly its column shard from a `GFDS01`
+//!   file (`dataset::GfdsReader`) instead of slicing an in-RAM matrix —
+//!   bit-identical to `trainer` on equal data.
 
 mod backend;
 pub mod recurrent;
 pub mod spmd;
+pub mod stream;
 mod trainer;
 pub mod updates;
 
 pub use backend::{BackendKind, NativeBackend, PjrtBackend, WorkerBackendImpl};
 pub use spmd::{train_rank, ShardedObjective, SpmdOpts};
+pub use stream::StreamTrainer;
 pub use trainer::{
-    allreduce_bytes_per_iter, allreduce_bytes_per_iter_for, broadcast_bytes_per_iter, AdmmTrainer,
-    TrainOutcome, TrainStats,
+    allreduce_bytes_per_iter, allreduce_bytes_per_iter_for, broadcast_bytes_per_iter,
+    scaling_profile_for, AdmmTrainer, TrainOutcome, TrainStats,
 };

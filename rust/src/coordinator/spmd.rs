@@ -165,18 +165,18 @@ impl RankState {
 /// `y_exp` is this rank's **already expanded shard** of the supervision
 /// panel (label expansion is column-independent, so expanding the slice
 /// is bit-identical to slicing the expansion — each rank pays O(shard),
-/// not O(dataset)).
+/// not O(dataset)).  `x_shard` is owned so the out-of-core path can hand
+/// over a freshly streamed shard without a full-matrix intermediary.
 fn init_rank_state(
     cfg: &TrainConfig,
     shard: crate::data::Shard,
     y_exp: Matrix,
-    x: &Matrix,
+    x_shard: Matrix,
 ) -> RankState {
     let rank = shard.rank;
     let n = shard.len();
     let layers = cfg.layers();
     let mut rng = Rng::stream(cfg.seed, 1000 + rank as u64);
-    let x_shard = x.col_range(shard.c0, shard.c1);
     let (acts, zs) = match cfg.init {
         // Paper §6: i.i.d. unit Gaussians.
         InitScheme::Gaussian => (
@@ -248,6 +248,33 @@ pub fn train_rank(
     test: &Dataset,
     opts: &SpmdOpts,
 ) -> Result<TrainOutcome> {
+    anyhow::ensure!(
+        train.features() == cfg.dims[0],
+        "dataset has {} features, config dims[0] = {}",
+        train.features(),
+        cfg.dims[0]
+    );
+    let shard = crate::data::shard_ranges(train.x.cols(), comm.world_size())[comm.rank()];
+    let x_shard = train.x.col_range(shard.c0, shard.c1);
+    let y_raw_shard = train.y.col_range(shard.c0, shard.c1);
+    train_rank_sharded(cfg, comm, shard, x_shard, &y_raw_shard, test, opts)
+}
+
+/// The shard-level training entry: identical to [`train_rank`] except
+/// the caller hands over this rank's column shard directly, so the
+/// out-of-core `GFDS01` path (`coordinator::stream`) can feed a rank
+/// without ever materializing the full matrix.  `train_rank` is sugar
+/// that slices an in-RAM [`Dataset`] and delegates here — the two paths
+/// share every line of the loop, which is what pins them bit-identical.
+pub(crate) fn train_rank_sharded(
+    cfg: &TrainConfig,
+    comm: &mut Collectives,
+    shard: crate::data::Shard,
+    x_shard: Matrix,
+    y_raw_shard: &Matrix,
+    test: &Dataset,
+    opts: &SpmdOpts,
+) -> Result<TrainOutcome> {
     cfg.validate()?;
     let world = comm.world_size();
     let rank = comm.rank();
@@ -257,9 +284,17 @@ pub fn train_rank(
         cfg.world()
     );
     anyhow::ensure!(
-        train.features() == cfg.dims[0],
+        shard.rank == rank && shard.len() == x_shard.cols(),
+        "shard [{}, {}) for rank {} handed to rank {rank} with {} columns",
+        shard.c0,
+        shard.c1,
+        shard.rank,
+        x_shard.cols()
+    );
+    anyhow::ensure!(
+        x_shard.rows() == cfg.dims[0],
         "dataset has {} features, config dims[0] = {}",
-        train.features(),
+        x_shard.rows(),
         cfg.dims[0]
     );
     let d_l = *cfg.dims.last().unwrap();
@@ -267,12 +302,10 @@ pub fn train_rank(
     // column-independent, so this is bit-identical to slicing a full
     // expansion) — O(shard) per rank instead of O(dataset) × world.
     // AdmmTrainer::new has already validated the full panels once.
-    let shard = crate::data::shard_ranges(train.x.cols(), world)[rank];
-    let y_raw_shard = train.y.col_range(shard.c0, shard.c1);
-    cfg.problem.validate_labels(&y_raw_shard, d_l)?;
-    let y_exp_shard = cfg.problem.expand_labels(&y_raw_shard, d_l);
+    cfg.problem.validate_labels(y_raw_shard, d_l)?;
+    let y_exp_shard = cfg.problem.expand_labels(y_raw_shard, d_l);
 
-    let mut st = init_rank_state(cfg, shard, y_exp_shard, &train.x);
+    let mut st = init_rank_state(cfg, shard, y_exp_shard, x_shard);
     let mut backend = BackendKind::from_config(cfg).build()?;
     // The algorithm shapes the traffic counters (and, over TCP, must
     // match the topology `connect` formed — the fingerprint guarantees
@@ -1024,23 +1057,60 @@ fn update_duals(cfg: &TrainConfig, st: &mut RankState) -> Result<()> {
 
 /// Data-parallel `(Σ loss, Σ grads)` oracle for the gradient baselines —
 /// the SPMD replacement for the old worker pool's `LossGrad` phase.  The
-/// full dataset is sharded over `cfg.workers` column ranges; each call
-/// fans the weight replica out to scoped rank threads and folds the
-/// results **in rank order** (bit-identical to the seed pool's fold).
+/// training set is sharded over `cfg.workers` column ranges, each owned
+/// by a **persistent rank thread** that builds its numeric backend once
+/// at pool construction and then serves `loss_grad` calls over a command
+/// channel; results fold **in rank order**, bit-identical to the seed
+/// pool's fold and to the per-call scoped-thread oracle this replaces.
 ///
-/// Backends are constructed per call inside each rank thread — PJRT
-/// contexts are thread-affine, so they cannot be cached across the
-/// scoped threads a call spawns.  The native backend (the only one the
-/// in-repo baselines drive through this substrate) is a four-field
-/// struct, free to build; PJRT callers pay an artifact reload per
-/// `loss_grad` call, which a persistent rank pool would avoid (ROADMAP
-/// follow-up — it would reintroduce exactly the command-channel
-/// machinery the SPMD redesign removed, so it waits for a real user).
+/// The persistence matters for PJRT: contexts are thread-affine, so the
+/// old per-call scoped threads forced an artifact reload on every
+/// objective call — a full line search paid it dozens of times.  Here
+/// each rank thread keeps its backend alive for the pool's lifetime
+/// (build errors are latched and surfaced on the first call).  Dropping
+/// the pool closes the command channels and joins the threads.
 pub struct ShardedObjective {
-    shards: Vec<(Matrix, Matrix)>,
-    backend_kind: BackendKind,
-    act: crate::config::Activation,
+    workers: Vec<RankWorker>,
     n: usize,
+}
+
+/// One persistent rank thread: weights go down `tx` (shared via `Arc` —
+/// one clone of the replica per call, not per rank), results come back
+/// on `rx` in issue order.
+struct RankWorker {
+    tx: Option<std::sync::mpsc::Sender<std::sync::Arc<Vec<Matrix>>>>,
+    rx: std::sync::mpsc::Receiver<Result<(f64, Vec<Matrix>)>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Spawn one rank thread owning its `(x, y)` shard.  The backend is
+/// built once, inside the thread (PJRT contexts are thread-affine);
+/// a build failure is kept and returned on every subsequent call.
+fn spawn_rank_worker(
+    kind: BackendKind,
+    act: crate::config::Activation,
+    x: Matrix,
+    y: Matrix,
+) -> RankWorker {
+    let (tx, work_rx) = std::sync::mpsc::channel::<std::sync::Arc<Vec<Matrix>>>();
+    let (res_tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let mut backend = kind.build();
+        while let Ok(ws) = work_rx.recv() {
+            let res = match &mut backend {
+                Ok(b) => b.loss_grad(&ws, &x, &y, act),
+                Err(e) => Err(anyhow::anyhow!("backend build failed: {e:#}")),
+            };
+            if res_tx.send(res).is_err() {
+                return; // pool dropped mid-call
+            }
+        }
+    });
+    RankWorker {
+        tx: Some(tx),
+        rx,
+        handle: Some(handle),
+    }
 }
 
 impl ShardedObjective {
@@ -1049,16 +1119,57 @@ impl ShardedObjective {
     pub fn new(cfg: &TrainConfig, x: &Matrix, y: &Matrix) -> Result<ShardedObjective> {
         anyhow::ensure!(x.cols() == y.cols(), "x/y column mismatch");
         anyhow::ensure!(y.rows() == *cfg.dims.last().unwrap(), "y rows != d_L");
-        let shards = crate::data::shard_ranges(x.cols(), cfg.workers)
+        let kind = BackendKind::from_config(cfg);
+        let workers = crate::data::shard_ranges(x.cols(), cfg.workers)
             .iter()
-            .map(|s| (x.col_range(s.c0, s.c1), y.col_range(s.c0, s.c1)))
+            .map(|s| {
+                spawn_rank_worker(
+                    kind.clone(),
+                    cfg.act,
+                    x.col_range(s.c0, s.c1),
+                    y.col_range(s.c0, s.c1),
+                )
+            })
             .collect();
-        Ok(ShardedObjective {
-            shards,
-            backend_kind: BackendKind::from_config(cfg),
-            act: cfg.act,
-            n: x.cols(),
-        })
+        Ok(ShardedObjective { workers, n: x.cols() })
+    }
+
+    /// Build the pool straight from a `GFDS01` file: each rank's shard is
+    /// streamed into its worker (normalized with the caller's
+    /// train-fitted stats, labels validated and expanded per shard), so
+    /// the full matrix never exists in one allocation — the baselines'
+    /// out-of-core twin of `coordinator::stream`.
+    pub fn from_gfds(
+        cfg: &TrainConfig,
+        path: &str,
+        n_train: usize,
+        norm: &crate::data::Normalizer,
+    ) -> Result<ShardedObjective> {
+        let mut reader = crate::dataset::GfdsReader::open(path)?;
+        anyhow::ensure!(
+            reader.features() == cfg.dims[0],
+            "dataset has {} features, config dims[0] = {}",
+            reader.features(),
+            cfg.dims[0]
+        );
+        anyhow::ensure!(
+            n_train <= reader.samples(),
+            "requested {n_train} training samples, {path} holds {}",
+            reader.samples()
+        );
+        let d_l = *cfg.dims.last().unwrap();
+        let kind = BackendKind::from_config(cfg);
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for s in crate::data::shard_ranges(n_train, cfg.workers) {
+            let mut x = Matrix::default();
+            let mut y_raw = Matrix::default();
+            reader.read_shard_into(s.c0, s.c1, &mut x, &mut y_raw)?;
+            norm.apply(&mut x);
+            cfg.problem.validate_labels(&y_raw, d_l)?;
+            let y = cfg.problem.expand_labels(&y_raw, d_l);
+            workers.push(spawn_rank_worker(kind.clone(), cfg.act, x, y));
+        }
+        Ok(ShardedObjective { workers, n: n_train })
     }
 
     pub fn samples(&self) -> usize {
@@ -1066,32 +1177,19 @@ impl ShardedObjective {
     }
 
     /// Σ over ranks of (loss, per-layer grads), folded in rank order.
-    pub fn loss_grad(&self, ws: &[Matrix]) -> Result<(f64, Vec<Matrix>)> {
-        let results: Vec<Result<(f64, Vec<Matrix>)>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = self
-                .shards
-                .iter()
-                .map(|(x, y)| {
-                    let kind = self.backend_kind.clone();
-                    let act = self.act;
-                    scope.spawn(move || -> Result<(f64, Vec<Matrix>)> {
-                        let mut backend = kind.build()?;
-                        backend.loss_grad(ws, x, y, act)
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| match h.join() {
-                    Ok(r) => r,
-                    Err(_) => Err(anyhow::anyhow!("loss-grad rank panicked")),
-                })
-                .collect()
-        });
+    pub fn loss_grad(&mut self, ws: &[Matrix]) -> Result<(f64, Vec<Matrix>)> {
+        let ws = std::sync::Arc::new(ws.to_vec());
+        for (rank, w) in self.workers.iter().enumerate() {
+            let alive = w.tx.as_ref().map(|tx| tx.send(ws.clone()).is_ok());
+            anyhow::ensure!(alive == Some(true), "loss-grad rank {rank} exited early");
+        }
         let mut total = 0.0f64;
         let mut grads: Option<Vec<Matrix>> = None;
-        for res in results {
-            let (loss, g) = res?;
+        for (rank, w) in self.workers.iter().enumerate() {
+            let (loss, g) = w
+                .rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("loss-grad rank {rank} panicked"))??;
             total += loss;
             match &mut grads {
                 None => grads = Some(g),
@@ -1103,6 +1201,22 @@ impl ShardedObjective {
             }
         }
         Ok((total, grads.expect("at least one rank")))
+    }
+}
+
+impl Drop for ShardedObjective {
+    fn drop(&mut self) {
+        // Closing the command channels ends each worker's recv loop;
+        // join so no thread outlives the shards it borrowed (it owns
+        // them, but a clean join keeps test processes leak-free).
+        for w in &mut self.workers {
+            w.tx.take();
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
     }
 }
 

@@ -1,0 +1,333 @@
+//! `StreamTrainer` — the out-of-core twin of [`AdmmTrainer`]: trains
+//! straight from a `GFDS01` file (`dataset::GfdsReader`) without ever
+//! materializing the full feature matrix in one allocation.
+//!
+//! Division of labor per rank:
+//!
+//! * **construction** (one pass, this process): open the file, fit the
+//!   per-feature normalizer on the training range in two streaming
+//!   passes (bit-identical to [`Normalizer::fit`] on the materialized
+//!   block — pinned in `dataset::reader`), and read the trailing
+//!   `n_test` columns as the in-RAM test split (rank 0 needs it for
+//!   eval; it is small by construction).
+//! * **training**: each rank opens its *own* reader, streams exactly its
+//!   `shard_ranges(n_train, world)` column shard into recycled matrices,
+//!   normalizes it in place, and enters
+//!   [`spmd::train_rank_sharded`] — the same loop the in-RAM path runs,
+//!   which is what pins the two paths **bit-identical** (checkpoints
+//!   byte-compare across {local,tcp} × {bulk,pipelined};
+//!   `tests/dataset_io.rs`).
+//!
+//! Per-rank I/O is exactly `HEADER_LEN + shard·(4·features + 4)` bytes
+//! (the header sniff plus the shard's feature and label runs — no rank
+//! ever reads another rank's columns); the measured counts are exported
+//! via [`StreamTrainer::bytes_read_per_rank`] and asserted against that
+//! formula in `bench::dataset`.
+//!
+//! Over TCP the handshake fingerprint mixes the file's shape digest and
+//! the test-split size instead of the full-content digest the in-RAM
+//! trainer uses — hashing a 10.5M-row file per connect would cost a full
+//! scan.  Divergent *contents* under an identical shape are caught by
+//! the first eval's scalar allreduce drifting, not the handshake; the
+//! shape digest still rejects the common mistakes (different file,
+//! different row count, different split).
+
+use crate::cluster::{Collectives, TcpComm};
+use crate::config::{Backend, MultiplierMode, TrainConfig, Transport};
+use crate::coordinator::spmd::{self, SpmdOpts};
+use crate::coordinator::trainer::TrainOutcome;
+use crate::data::{Dataset, Normalizer};
+use crate::dataset::GfdsReader;
+use crate::linalg::Matrix;
+use crate::Result;
+
+/// Out-of-core ADMM trainer over a `GFDS01` file.  The last `n_test`
+/// samples are the held-out test split (mirroring `Dataset::split_test`);
+/// the first `samples − n_test` are the training range every rank shards.
+pub struct StreamTrainer {
+    cfg: TrainConfig,
+    path: String,
+    n_train: usize,
+    n_test: usize,
+    /// Shape digest of the file (see `GfdsReader::fingerprint`), mixed
+    /// into the TCP handshake.
+    data_fingerprint: u64,
+    norm: Normalizer,
+    test: Dataset,
+    /// Stop as soon as the test metric crosses this.
+    pub target_acc: Option<f64>,
+    /// Record feasibility penalties each eval.
+    pub track_penalty: bool,
+    pub verbose: bool,
+    /// Measured file bytes each rank read for its shard (populated by
+    /// [`train`](StreamTrainer::train); all ranks under `Local`, this
+    /// process's rank only under `Tcp`).
+    pub bytes_read_per_rank: Vec<u64>,
+}
+
+impl StreamTrainer {
+    /// Open `path`, fit the normalizer on the training range and load
+    /// the test tail.  Validations mirror `AdmmTrainer::new` so a config
+    /// rejected there is rejected here too.
+    pub fn new(cfg: TrainConfig, path: &str, n_test: usize) -> Result<StreamTrainer> {
+        cfg.validate()?;
+        let mut reader = GfdsReader::open(path)?;
+        anyhow::ensure!(
+            reader.features() == cfg.dims[0],
+            "dataset has {} features, config dims[0] = {}",
+            reader.features(),
+            cfg.dims[0]
+        );
+        anyhow::ensure!(
+            n_test >= 1 && n_test < reader.samples(),
+            "test split {n_test} out of range for the {} samples in {path}",
+            reader.samples()
+        );
+        if cfg.backend == Backend::Pjrt {
+            let manifest = crate::runtime::Manifest::load(&cfg.artifacts_dir)?;
+            manifest.validate_train_config(&cfg)?;
+        }
+        if cfg.multiplier_mode == MultiplierMode::Classical {
+            anyhow::ensure!(
+                cfg.backend == Backend::Native,
+                "classical ADMM ablation requires --backend native"
+            );
+        }
+        let n = reader.samples();
+        let n_train = n - n_test;
+        let norm = reader.fit_normalizer(0, n_train)?;
+        let mut test = reader.read_range(n_train, n)?;
+        cfg.problem.validate_labels(&test.y, *cfg.dims.last().unwrap())?;
+        norm.apply(&mut test.x);
+        Ok(StreamTrainer {
+            data_fingerprint: reader.fingerprint(),
+            path: path.to_string(),
+            n_train,
+            n_test,
+            norm,
+            test,
+            target_acc: None,
+            track_penalty: false,
+            verbose: false,
+            bytes_read_per_rank: Vec::new(),
+            cfg,
+        })
+    }
+
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    /// Samples in the training range (the test tail excluded).
+    pub fn train_samples(&self) -> usize {
+        self.n_train
+    }
+
+    pub fn test_samples(&self) -> usize {
+        self.n_test
+    }
+
+    /// Form the configured world and run every rank from its streamed
+    /// shard; returns this process's outcome (rank 0 carries the curve).
+    pub fn train(&mut self) -> Result<TrainOutcome> {
+        let opts = SpmdOpts {
+            target_metric: self.target_acc,
+            track_penalty: self.track_penalty,
+            verbose: self.verbose,
+        };
+        match self.cfg.transport {
+            Transport::Local => {
+                let cfg = &self.cfg;
+                let (path, norm, test) = (self.path.as_str(), &self.norm, &self.test);
+                let n_train = self.n_train;
+                let opts_ref = &opts;
+                let timeout = std::time::Duration::from_secs_f64(cfg.comm_timeout);
+                let world = Collectives::local_world_with_timeout(cfg.workers, timeout);
+                let mut results: Vec<Result<(TrainOutcome, u64)>> = std::thread::scope(|s| {
+                    let handles: Vec<_> = world
+                        .into_iter()
+                        .map(|mut comm| {
+                            s.spawn(move || {
+                                let res = stream_rank(
+                                    cfg, &mut comm, path, n_train, norm, test, opts_ref,
+                                );
+                                if res.is_err() {
+                                    // Poison the world so peers blocked in
+                                    // a collective error out, not hang.
+                                    comm.abort();
+                                }
+                                res
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| match h.join() {
+                            Ok(r) => r,
+                            Err(_) => Err(anyhow::anyhow!("rank thread panicked")),
+                        })
+                        .collect()
+                });
+                // Surface the root failure: peer ranks report derivative
+                // "world aborted" errors once a rank has failed.
+                if results.iter().any(|r| r.is_err()) {
+                    let mut first_err = None;
+                    for (rank, r) in results.into_iter().enumerate() {
+                        if let Err(e) = r {
+                            let msg = format!("{e:#}");
+                            if !msg.contains("aborted") {
+                                return Err(e.context(format!("rank {rank} failed")));
+                            }
+                            first_err.get_or_insert((rank, e));
+                        }
+                    }
+                    let (rank, e) = first_err.expect("checked any err");
+                    return Err(e.context(format!("rank {rank} failed")));
+                }
+                self.bytes_read_per_rank = results
+                    .iter()
+                    .map(|r| r.as_ref().map(|(_, b)| *b).unwrap_or(0))
+                    .collect();
+                let (out, _) = results.remove(0).expect("rank 0 outcome");
+                Ok(out)
+            }
+            Transport::Tcp => {
+                let fp = self.cfg.spmd_fingerprint()
+                    ^ opts.fingerprint()
+                    ^ self.data_fingerprint.rotate_left(1)
+                    ^ (self.n_test as u64).rotate_left(33);
+                let mut comm = Collectives::Tcp(TcpComm::connect_with_timeout(
+                    self.cfg.rank,
+                    self.cfg.world_size,
+                    &self.cfg.peers,
+                    fp,
+                    self.cfg.allreduce,
+                    std::time::Duration::from_secs_f64(self.cfg.comm_timeout),
+                )?);
+                let res = stream_rank(
+                    &self.cfg,
+                    &mut comm,
+                    &self.path,
+                    self.n_train,
+                    &self.norm,
+                    &self.test,
+                    &opts,
+                );
+                if res.is_err() {
+                    comm.abort();
+                }
+                let (out, bytes) = res?;
+                self.bytes_read_per_rank = vec![bytes];
+                Ok(out)
+            }
+        }
+    }
+}
+
+/// One rank's streamed entry: open a private reader, read exactly this
+/// rank's shard, normalize it with the train-fitted stats (normalization
+/// is per-element, so shard-then-normalize is bit-identical to the
+/// in-RAM path's normalize-then-shard), and run the shared loop.
+/// Returns the outcome plus the file bytes this rank read.
+fn stream_rank(
+    cfg: &TrainConfig,
+    comm: &mut Collectives,
+    path: &str,
+    n_train: usize,
+    norm: &Normalizer,
+    test: &Dataset,
+    opts: &SpmdOpts,
+) -> Result<(TrainOutcome, u64)> {
+    let mut reader = GfdsReader::open(path)?;
+    anyhow::ensure!(
+        n_train <= reader.samples(),
+        "training range {n_train} exceeds the {} samples in {path}",
+        reader.samples()
+    );
+    let shard = crate::data::shard_ranges(n_train, comm.world_size())[comm.rank()];
+    let mut x = Matrix::default();
+    let mut y_raw = Matrix::default();
+    reader.read_shard_into(shard.c0, shard.c1, &mut x, &mut y_raw)?;
+    norm.apply(&mut x);
+    let bytes = reader.bytes_read();
+    let out = spmd::train_rank_sharded(cfg, comm, shard, x, &y_raw, test, opts)?;
+    Ok((out, bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::AdmmTrainer;
+    use crate::dataset::{write_dataset, HEADER_LEN};
+
+    fn tmp(name: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("gfds_stream_{}_{name}", std::process::id()))
+            .to_str()
+            .unwrap()
+            .to_string()
+    }
+
+    /// The acceptance pin at unit scale: training from a `GFDS01` file
+    /// must produce bit-identical weights to the in-RAM path (which
+    /// normalizes the full matrix and then shards), on both schedules.
+    #[test]
+    fn stream_training_is_bit_identical_to_in_ram() {
+        let d = crate::data::blobs(6, 300, 2.5, 3);
+        let path = tmp("equiv.gfds");
+        write_dataset(&path, &d).unwrap();
+
+        for schedule in [crate::config::Schedule::Bulk, crate::config::Schedule::Pipelined] {
+            let cfg = TrainConfig {
+                dims: vec![6, 5, 1],
+                gamma: 1.0,
+                iters: 4,
+                warmup_iters: 2,
+                workers: 3,
+                eval_every: 2,
+                schedule,
+                ..TrainConfig::default()
+            };
+            // In-RAM path, exactly as `main::load_data` prepares it.
+            let (mut train, mut test) = d.clone().split_test(60);
+            let norm = Normalizer::fit(&train.x);
+            norm.apply(&mut train.x);
+            norm.apply(&mut test.x);
+            let mut ram = AdmmTrainer::new(cfg.clone(), &train, &test).unwrap();
+            let ram_out = ram.train().unwrap();
+
+            let mut st = StreamTrainer::new(cfg, &path, 60).unwrap();
+            assert_eq!(st.train_samples(), 240);
+            let stream_out = st.train().unwrap();
+
+            for (a, b) in ram_out.weights.iter().zip(&stream_out.weights) {
+                assert_eq!(a.as_slice(), b.as_slice(), "paths diverged ({schedule:?})");
+            }
+            // Per-rank I/O is exactly the shard formula: header sniff +
+            // shard · (features + label) floats.
+            let per_col = (6 * 4 + 4) as u64;
+            let want: Vec<u64> = crate::data::shard_ranges(240, 3)
+                .iter()
+                .map(|s| HEADER_LEN as u64 + s.len() as u64 * per_col)
+                .collect();
+            assert_eq!(st.bytes_read_per_rank, want);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn stream_trainer_rejects_bad_splits_and_dims() {
+        let d = crate::data::blobs(4, 30, 2.5, 1);
+        let path = tmp("reject.gfds");
+        write_dataset(&path, &d).unwrap();
+        let cfg = TrainConfig { dims: vec![4, 3, 1], ..TrainConfig::default() };
+        let err = StreamTrainer::new(cfg.clone(), &path, 30).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        let err = StreamTrainer::new(cfg, &path, 0).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        let bad = TrainConfig { dims: vec![7, 3, 1], ..TrainConfig::default() };
+        let err = StreamTrainer::new(bad, &path, 5).unwrap_err().to_string();
+        assert!(err.contains("features"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+}

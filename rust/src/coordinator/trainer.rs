@@ -273,26 +273,40 @@ impl AdmmTrainer {
         iters_to_threshold: usize,
         cost: CostModel,
     ) -> ScalingProfile {
-        let per_iter_worker = stats.worker_seconds / stats.iters_run.max(1) as f64;
-        let world = self.cfg.world();
-        // `world` ranks each processed cols/world columns concurrently:
-        // one core would take world× the observed phase wall per column.
-        let compute_col_s = per_iter_worker * world as f64 / cols_total as f64;
-        ScalingProfile {
-            cols_total,
-            compute_col_s,
-            leader_s: stats.leader_seconds / stats.iters_run.max(1) as f64,
-            // Always the *logical* Gram bytes — `TrainStats` carries the
-            // configured algorithm's rank-0 wire share (e.g. the ring's
-            // 2·(N−1)/N of the calibration world), which must not leak
-            // into the extrapolation; the profile re-prices the logical
-            // buffer per `allreduce` at every extrapolated core count.
-            allreduce_bytes: allreduce_bytes_per_iter(&self.cfg.dims),
-            broadcast_bytes: stats.broadcast_bytes_per_iter,
-            iters_to_threshold,
-            allreduce: self.cfg.allreduce,
-            cost,
-        }
+        scaling_profile_for(&self.cfg, stats, cols_total, iters_to_threshold, cost)
+    }
+}
+
+/// Calibrate a [`ScalingProfile`] from any finished run's stats — shared
+/// by [`AdmmTrainer::scaling_profile`] and the out-of-core paths
+/// (`coordinator::stream` / `bench::dataset`), which never construct a
+/// trainer.
+pub fn scaling_profile_for(
+    cfg: &TrainConfig,
+    stats: &TrainStats,
+    cols_total: usize,
+    iters_to_threshold: usize,
+    cost: CostModel,
+) -> ScalingProfile {
+    let per_iter_worker = stats.worker_seconds / stats.iters_run.max(1) as f64;
+    let world = cfg.world();
+    // `world` ranks each processed cols/world columns concurrently:
+    // one core would take world× the observed phase wall per column.
+    let compute_col_s = per_iter_worker * world as f64 / cols_total as f64;
+    ScalingProfile {
+        cols_total,
+        compute_col_s,
+        leader_s: stats.leader_seconds / stats.iters_run.max(1) as f64,
+        // Always the *logical* Gram bytes — `TrainStats` carries the
+        // configured algorithm's rank-0 wire share (e.g. the ring's
+        // 2·(N−1)/N of the calibration world), which must not leak
+        // into the extrapolation; the profile re-prices the logical
+        // buffer per `allreduce` at every extrapolated core count.
+        allreduce_bytes: allreduce_bytes_per_iter(&cfg.dims),
+        broadcast_bytes: stats.broadcast_bytes_per_iter,
+        iters_to_threshold,
+        allreduce: cfg.allreduce,
+        cost,
     }
 }
 

@@ -209,29 +209,41 @@ pub fn higgs_like(samples: usize, seed: u64) -> Dataset {
     let mut rng = Rng::stream(seed, 303);
     let mut x = Matrix::zeros(F, samples);
     let mut y = Matrix::zeros(1, samples);
+    let mut feat = [0.0f32; F];
     for c in 0..samples {
-        let mut feat = [0.0f32; F];
-        for v in feat.iter_mut() {
-            *v = rng.normal() as f32;
-        }
-        // Nonlinear signal over the "low-level" features.
-        let s1 = feat[0] * feat[1]; // XOR-like pairing
-        let s2 = feat[2] * feat[2] - feat[3] * feat[3]; // quadratic difference
-        let s3 = feat[4] * feat[5] * if feat[6] > 0.0 { 1.0 } else { -1.0 };
-        let score = 0.9 * s1 + 0.7 * s2 + 0.6 * s3;
-        // Label noise sets the Bayes ceiling.
-        let noisy = score as f64 + 1.1 * rng.normal();
-        let label = if noisy > 0.0 { 1.0f32 } else { 0.0 };
-        // Two "derived" features leak a little of the score (like HIGGS'
-        // high-level mass features) so shallow nets gain traction.
-        feat[26] = 0.35 * score + 0.9 * rng.normal() as f32;
-        feat[27] = 0.25 * score.abs() + 0.9 * rng.normal() as f32;
+        let label = higgs_sample(&mut rng, &mut feat);
         for (r, &v) in feat.iter().enumerate() {
             *x.at_mut(r, c) = v;
         }
         *y.at_mut(0, c) = label;
     }
     Dataset::new(x, y)
+}
+
+/// Draw one HIGGS-like sample: fills `feat` and returns the 0/1 label.
+///
+/// This is the single source of the per-sample recipe, shared by the
+/// in-RAM [`higgs_like`] above and the streaming
+/// `dataset::write_higgs_like` writer — equal `(samples, seed)` runs of
+/// the two paths are bit-identical **by construction** (both consume
+/// `Rng::stream(seed, 303)` through exactly these draws, in this order).
+pub(crate) fn higgs_sample(rng: &mut Rng, feat: &mut [f32; 28]) -> f32 {
+    for v in feat.iter_mut() {
+        *v = rng.normal() as f32;
+    }
+    // Nonlinear signal over the "low-level" features.
+    let s1 = feat[0] * feat[1]; // XOR-like pairing
+    let s2 = feat[2] * feat[2] - feat[3] * feat[3]; // quadratic difference
+    let s3 = feat[4] * feat[5] * if feat[6] > 0.0 { 1.0 } else { -1.0 };
+    let score = 0.9 * s1 + 0.7 * s2 + 0.6 * s3;
+    // Label noise sets the Bayes ceiling.
+    let noisy = score as f64 + 1.1 * rng.normal();
+    let label = if noisy > 0.0 { 1.0f32 } else { 0.0 };
+    // Two "derived" features leak a little of the score (like HIGGS'
+    // high-level mass features) so shallow nets gain traction.
+    feat[26] = 0.35 * score + 0.9 * rng.normal() as f32;
+    feat[27] = 0.25 * score.abs() + 0.9 * rng.normal() as f32;
+    label
 }
 
 #[cfg(test)]

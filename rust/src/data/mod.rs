@@ -14,6 +14,7 @@ mod shard;
 pub use generators::{
     blobs, higgs_like, multi_blobs, svhn_like, synth_regression, GeneratorSpec,
 };
+pub(crate) use generators::higgs_sample;
 pub use shard::{shard_ranges, Shard};
 
 use crate::linalg::Matrix;
@@ -106,6 +107,15 @@ impl Normalizer {
             mean[r] = m as f32;
             inv_std[r] = if var > 1e-12 { (1.0 / var.sqrt()) as f32 } else { 1.0 };
         }
+        Normalizer { mean, inv_std }
+    }
+
+    /// Rebuild a normalizer from already-computed per-feature statistics
+    /// — the out-of-core `dataset` reader fits them in streaming passes
+    /// without materializing `x` (bit-identical to [`Normalizer::fit`],
+    /// pinned in `dataset::reader`).
+    pub(crate) fn from_stats(mean: Vec<f32>, inv_std: Vec<f32>) -> Normalizer {
+        assert_eq!(mean.len(), inv_std.len(), "stat length mismatch");
         Normalizer { mean, inv_std }
     }
 

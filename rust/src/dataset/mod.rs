@@ -1,0 +1,220 @@
+//! Out-of-core columnar dataset path: the `GFDS01` on-disk format plus a
+//! streaming reader/writer pair, so HIGGS-scale runs (paper §7.2: 10.5M
+//! rows across thousands of cores) never materialize the full sample
+//! matrix on any rank.
+//!
+//! ## Format (`GFDS01`)
+//!
+//! ```text
+//! offset  size            field
+//! 0       6               magic "GFDS01"
+//! 6       1               dtype code (0 = f32 little-endian)
+//! 7       4               features (u32 LE)
+//! 11      8               samples  (u64 LE)
+//! 19      samples·features·4   feature block, sample-major: sample c's
+//!                              `features` f32 values are contiguous
+//! …       samples·4       label block, one f32 per sample
+//! ```
+//!
+//! The feature block is **column-major** with respect to the in-RAM
+//! `(features × samples)` [`Matrix`] layout: one training sample = one
+//! matrix column = one contiguous byte run.  A rank's column shard
+//! `[c0, c1)` is therefore a single contiguous range starting at
+//! [`GfdsHeader::col_offset`], and [`GfdsReader::read_shard_into`] hands
+//! each SPMD rank exactly its shard with `HEADER_LEN +
+//! shard_len·(features·4 + 4)` bytes read — nothing else.
+//!
+//! Like the `GFADMM`/`GFTS` checkpoint formats (`nn/io.rs`), every load
+//! validates magic, dtype, checked shape arithmetic and the exact file
+//! length ("truncated" / "trailing bytes" — descriptive errors, never a
+//! panic), and every write goes through the `<path>.tmp` + rename idiom
+//! so a crash mid-write never leaves a truncated dataset behind.
+//!
+//! ## Streaming vs in-RAM decision rule
+//!
+//! `gradfree train --data file.gfds` sniffs the magic and keeps the
+//! in-RAM path for small files (cheapest, and bit-identical by the
+//! roundtrip pins here); at [`STREAM_THRESHOLD_BYTES`] and above — or
+//! under explicit `--stream` — it switches to the out-of-core
+//! `coordinator::stream` path, which is pinned bit-identical to the
+//! in-RAM path by `tests/dataset_io.rs`.
+
+mod reader;
+mod writer;
+
+pub use reader::GfdsReader;
+pub use writer::{convert_csv, write_dataset, write_higgs_like, GfdsWriter};
+
+use crate::bytes::{le_u32, le_u64};
+use crate::data::Dataset;
+use crate::Result;
+
+/// File magic, version-tagged like `GFADMM02`/`GFTS01`.
+pub const MAGIC: &[u8; 6] = b"GFDS01";
+/// Fixed header size: magic + dtype byte + features u32 + samples u64.
+pub const HEADER_LEN: usize = 19;
+/// The only dtype this version defines: f32 little-endian.
+pub const DTYPE_F32: u8 = 0;
+/// Files at least this large default to the streaming path (64 MiB —
+/// past any plausible CPU cache, far under HIGGS scale); `--stream`
+/// forces it for smaller files (the bit-identity tests do exactly that).
+pub const STREAM_THRESHOLD_BYTES: u64 = 64 << 20;
+
+/// Decoded `GFDS01` header: the dataset's shape.  All byte offsets into
+/// the file derive from this (u64 arithmetic, validated overflow-free at
+/// construction).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GfdsHeader {
+    pub features: usize,
+    pub samples: usize,
+}
+
+impl GfdsHeader {
+    pub fn new(features: usize, samples: usize) -> Result<GfdsHeader> {
+        anyhow::ensure!(features > 0, "dataset needs at least one feature");
+        anyhow::ensure!(
+            features <= u32::MAX as usize,
+            "implausible dataset shape {features}x{samples}"
+        );
+        let h = GfdsHeader { features, samples };
+        anyhow::ensure!(
+            h.checked_file_len().is_some(),
+            "implausible dataset shape {features}x{samples}"
+        );
+        Ok(h)
+    }
+
+    pub fn encode(&self) -> [u8; HEADER_LEN] {
+        let mut out = [0u8; HEADER_LEN];
+        out[..6].copy_from_slice(MAGIC);
+        out[6] = DTYPE_F32;
+        out[7..11].copy_from_slice(&(self.features as u32).to_le_bytes());
+        out[11..19].copy_from_slice(&(self.samples as u64).to_le_bytes());
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<GfdsHeader> {
+        anyhow::ensure!(bytes.len() >= HEADER_LEN, "truncated dataset header");
+        anyhow::ensure!(&bytes[..6] == MAGIC, "bad magic (not a GFDS01 dataset)");
+        let dtype = bytes[6];
+        anyhow::ensure!(
+            dtype == DTYPE_F32,
+            "unsupported dtype code {dtype} (GFDS01 defines only 0 = f32 LE)"
+        );
+        let features = le_u32(&bytes[7..]) as usize;
+        let samples = le_u64(&bytes[11..]);
+        anyhow::ensure!(
+            samples <= usize::MAX as u64,
+            "implausible dataset shape {features}x{samples}"
+        );
+        GfdsHeader::new(features, samples as usize)
+    }
+
+    /// Bytes per sample in the feature block.
+    pub fn sample_stride(&self) -> u64 {
+        self.features as u64 * 4
+    }
+
+    /// File offset of sample column `c`'s feature run.
+    pub fn col_offset(&self, c: usize) -> u64 {
+        HEADER_LEN as u64 + c as u64 * self.sample_stride()
+    }
+
+    /// File offset of sample `c`'s label.
+    pub fn label_offset(&self, c: usize) -> u64 {
+        HEADER_LEN as u64 + self.samples as u64 * self.sample_stride() + c as u64 * 4
+    }
+
+    /// Exact file length the header implies (the trailing length check).
+    pub fn file_len(&self) -> u64 {
+        self.label_offset(self.samples)
+    }
+
+    fn checked_file_len(&self) -> Option<u64> {
+        let feat_bytes = (self.features as u64).checked_mul(4)?;
+        let block = (self.samples as u64).checked_mul(feat_bytes)?;
+        let labels = (self.samples as u64).checked_mul(4)?;
+        (HEADER_LEN as u64).checked_add(block)?.checked_add(labels)
+    }
+}
+
+/// Sniff a file's magic: `true` iff it starts with `GFDS01`.  Any I/O
+/// error reads as "not a GFDS file" — the caller's non-GFDS loader will
+/// produce the real diagnostic.
+pub fn is_gfds(path: &str) -> bool {
+    let mut head = [0u8; 6];
+    match std::fs::File::open(path) {
+        Ok(mut f) => std::io::Read::read_exact(&mut f, &mut head).is_ok() && &head == MAGIC,
+        Err(_) => false,
+    }
+}
+
+/// Materialize a whole `GFDS01` file as an in-RAM [`Dataset`] (the
+/// small-data fast case of the decision rule above).
+pub fn load_gfds(path: &str) -> Result<Dataset> {
+    let mut r = GfdsReader::open(path)?;
+    let n = r.samples();
+    r.read_range(0, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_roundtrip() {
+        let h = GfdsHeader::new(28, 1_000_000).unwrap();
+        let got = GfdsHeader::decode(&h.encode()).unwrap();
+        assert_eq!(got, h);
+        assert_eq!(h.file_len(), 19 + 1_000_000 * (28 * 4 + 4));
+        assert_eq!(h.col_offset(0), 19);
+        assert_eq!(h.col_offset(3), 19 + 3 * 28 * 4);
+        assert_eq!(h.label_offset(0), 19 + 1_000_000 * 28 * 4);
+    }
+
+    #[test]
+    fn header_rejects_corruption() {
+        let h = GfdsHeader::new(4, 10).unwrap();
+        let bytes = h.encode();
+        // truncation anywhere in the header
+        for cut in [0, 5, 10, HEADER_LEN - 1] {
+            let err = GfdsHeader::decode(&bytes[..cut]).unwrap_err().to_string();
+            assert!(err.contains("truncated"), "cut {cut}: {err}");
+        }
+        let mut bad = bytes;
+        bad[0] = b'X';
+        let err = GfdsHeader::decode(&bad).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+        let mut bad = h.encode();
+        bad[6] = 7; // unknown dtype
+        let err = GfdsHeader::decode(&bad).unwrap_err().to_string();
+        assert!(err.contains("dtype"), "{err}");
+    }
+
+    #[test]
+    fn header_rejects_overflowing_shapes() {
+        // features·samples·4 must not wrap u64 past the length check.
+        let err = GfdsHeader::new(u32::MAX as usize, usize::MAX).unwrap_err().to_string();
+        assert!(err.contains("implausible"), "{err}");
+        let mut bytes = GfdsHeader::new(1, 1).unwrap().encode();
+        bytes[7..11].copy_from_slice(&u32::MAX.to_le_bytes());
+        bytes[11..19].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = GfdsHeader::decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("implausible"), "{err}");
+        assert!(GfdsHeader::new(0, 5).is_err(), "zero features must be rejected");
+    }
+
+    #[test]
+    fn magic_sniff() {
+        let dir = std::env::temp_dir();
+        let p1 = dir.join(format!("gfds_sniff_{}.gfds", std::process::id()));
+        std::fs::write(&p1, GfdsHeader::new(2, 0).unwrap().encode()).unwrap();
+        assert!(is_gfds(p1.to_str().unwrap()));
+        let p2 = dir.join(format!("gfds_sniff_{}.csv", std::process::id()));
+        std::fs::write(&p2, "1.0,2.0,1\n").unwrap();
+        assert!(!is_gfds(p2.to_str().unwrap()));
+        assert!(!is_gfds("/nonexistent/no/such/file"));
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+    }
+}

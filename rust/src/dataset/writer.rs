@@ -1,0 +1,233 @@
+//! `GFDS01` writers: streaming sample-at-a-time writes (the generator
+//! path — row count limited only by disk), whole-`Dataset` dumps, and
+//! the CSV converter behind `gradfree gen-data --format binary`.
+
+use super::GfdsHeader;
+use crate::data::Dataset;
+use crate::Result;
+use std::io::Write;
+
+/// Streaming `GFDS01` writer.  Feature bytes go straight to disk through
+/// a `BufWriter` as samples are pushed; labels (4 bytes/sample — 40 MB
+/// even at the full 10.5M-row HIGGS scale) are buffered in RAM and
+/// appended by [`finish`](GfdsWriter::finish), which also performs the
+/// `<path>.tmp` → `path` rename so a crash mid-write never leaves a
+/// truncated dataset at the target path.
+pub struct GfdsWriter {
+    out: std::io::BufWriter<std::fs::File>,
+    header: GfdsHeader,
+    tmp: String,
+    path: String,
+    pushed: usize,
+    labels: Vec<f32>,
+}
+
+impl GfdsWriter {
+    pub fn create(path: &str, features: usize, samples: usize) -> Result<GfdsWriter> {
+        let header = GfdsHeader::new(features, samples)?;
+        let tmp = format!("{path}.tmp");
+        let file = std::fs::File::create(&tmp)
+            .map_err(|e| anyhow::anyhow!("writing {tmp}: {e}"))?;
+        let mut out = std::io::BufWriter::with_capacity(1 << 20, file);
+        out.write_all(&header.encode())
+            .map_err(|e| anyhow::anyhow!("writing {tmp}: {e}"))?;
+        Ok(GfdsWriter {
+            out,
+            header,
+            tmp,
+            path: path.to_string(),
+            pushed: 0,
+            labels: Vec::with_capacity(samples.min(1 << 20)),
+        })
+    }
+
+    /// Append one sample (its `features` values and label).
+    pub fn push_sample(&mut self, feat: &[f32], label: f32) -> Result<()> {
+        anyhow::ensure!(
+            feat.len() == self.header.features,
+            "sample {}: {} features, header declares {}",
+            self.pushed,
+            feat.len(),
+            self.header.features
+        );
+        anyhow::ensure!(
+            self.pushed < self.header.samples,
+            "more samples pushed than the {} declared",
+            self.header.samples
+        );
+        for v in feat {
+            self.out
+                .write_all(&v.to_le_bytes())
+                .map_err(|e| anyhow::anyhow!("writing {}: {e}", self.tmp))?;
+        }
+        self.labels.push(label);
+        self.pushed += 1;
+        Ok(())
+    }
+
+    /// Write the label block, flush, and atomically rename into place.
+    pub fn finish(mut self) -> Result<()> {
+        anyhow::ensure!(
+            self.pushed == self.header.samples,
+            "{} of {} declared samples written",
+            self.pushed,
+            self.header.samples
+        );
+        for v in &self.labels {
+            self.out
+                .write_all(&v.to_le_bytes())
+                .map_err(|e| anyhow::anyhow!("writing {}: {e}", self.tmp))?;
+        }
+        self.out
+            .flush()
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", self.tmp))?;
+        std::fs::rename(&self.tmp, &self.path)
+            .map_err(|e| anyhow::anyhow!("renaming {} over {}: {e}", self.tmp, self.path))?;
+        Ok(())
+    }
+}
+
+/// Dump an in-RAM [`Dataset`] as `GFDS01` (column `c` of `x` becomes
+/// sample `c`'s contiguous feature run).
+pub fn write_dataset(path: &str, d: &Dataset) -> Result<()> {
+    let f = d.features();
+    let n = d.samples();
+    let mut w = GfdsWriter::create(path, f, n)?;
+    let mut feat = vec![0.0f32; f];
+    for c in 0..n {
+        for (r, v) in feat.iter_mut().enumerate() {
+            *v = d.x.at(r, c);
+        }
+        w.push_sample(&feat, d.y.at(0, c))?;
+    }
+    w.finish()
+}
+
+/// Stream a HIGGS-like dataset of `samples` rows straight to disk —
+/// never holding more than one sample (plus the label buffer) in RAM, so
+/// the row count is limited only by disk.  Draws each sample through the
+/// same `data::higgs_sample` recipe as the in-RAM `data::higgs_like`
+/// generator, so for equal `(samples, seed)` the two paths produce
+/// **bit-identical** data (pinned by the tests below).
+pub fn write_higgs_like(path: &str, samples: usize, seed: u64) -> Result<()> {
+    let mut rng = crate::rng::Rng::stream(seed, 303);
+    let mut w = GfdsWriter::create(path, 28, samples)?;
+    let mut feat = [0.0f32; 28];
+    for _ in 0..samples {
+        let label = crate::data::higgs_sample(&mut rng, &mut feat);
+        w.push_sample(&feat, label)?;
+    }
+    w.finish()
+}
+
+/// Convert a CSV dataset (the `load_csv` dialect) to `GFDS01`.
+pub fn convert_csv(src: &str, dst: &str, label_first: bool) -> Result<()> {
+    let d = crate::data::load_csv(src, label_first)?;
+    write_dataset(dst, &d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{higgs_like, load_csv, svhn_like};
+    use crate::dataset::load_gfds;
+
+    fn tmp(name: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("gfds_writer_{}_{name}", std::process::id()))
+            .to_str()
+            .unwrap()
+            .to_string()
+    }
+
+    #[test]
+    fn dataset_roundtrips_bit_for_bit() {
+        let d = svhn_like(23, 4);
+        let path = tmp("roundtrip.gfds");
+        write_dataset(&path, &d).unwrap();
+        let got = load_gfds(&path).unwrap();
+        assert_eq!(got.fingerprint(), d.fingerprint());
+        let xb: Vec<u32> = got.x.as_slice().iter().map(|v| v.to_bits()).collect();
+        let wb: Vec<u32> = d.x.as_slice().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(xb, wb);
+        assert!(!std::path::Path::new(&format!("{path}.tmp")).exists());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn streaming_higgs_matches_in_ram_generator() {
+        let path = tmp("higgs.gfds");
+        write_higgs_like(&path, 200, 7).unwrap();
+        let got = load_gfds(&path).unwrap();
+        let want = higgs_like(200, 7);
+        assert_eq!(got.fingerprint(), want.fingerprint(), "streamed != in-RAM draw");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn csv_converter_preserves_values() {
+        let csv = tmp("conv.csv");
+        std::fs::write(&csv, "1.0,2.5,1\n-3.0,0.125,0\n").unwrap();
+        let gfds = tmp("conv.gfds");
+        convert_csv(&csv, &gfds, false).unwrap();
+        let got = load_gfds(&gfds).unwrap();
+        let want = load_csv(&csv, false).unwrap();
+        assert_eq!(got.fingerprint(), want.fingerprint());
+        std::fs::remove_file(&csv).ok();
+        std::fs::remove_file(&gfds).ok();
+    }
+
+    #[test]
+    fn writer_enforces_declared_shape() {
+        let path = tmp("shape.gfds");
+        let mut w = GfdsWriter::create(&path, 3, 2).unwrap();
+        let err = w.push_sample(&[1.0, 2.0], 0.0).unwrap_err().to_string();
+        assert!(err.contains("features"), "{err}");
+        w.push_sample(&[1.0, 2.0, 3.0], 1.0).unwrap();
+        // finishing short of the declared count is an error, not a
+        // truncated file at the target path
+        let err = w.finish().unwrap_err().to_string();
+        assert!(err.contains("declared"), "{err}");
+        assert!(!std::path::Path::new(&path).exists());
+        std::fs::remove_file(&format!("{path}.tmp")).ok();
+    }
+
+    #[test]
+    fn reader_rejects_file_corruption() {
+        // the full corruption matrix over an actual file, GFADMM02-style
+        let d = higgs_like(10, 3);
+        let path = tmp("corrupt.gfds");
+        write_dataset(&path, &d).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let case = |name: &str, mutated: Vec<u8>, needles: &[&str]| {
+            let p = tmp(&format!("corrupt_{name}.gfds"));
+            std::fs::write(&p, mutated).unwrap();
+            let err = match crate::dataset::GfdsReader::open(&p) {
+                Ok(_) => panic!("{name}: corrupt file opened cleanly"),
+                Err(e) => e.to_string(),
+            };
+            assert!(
+                needles.iter().any(|n| err.contains(n)),
+                "{name}: unexpected error {err}"
+            );
+            std::fs::remove_file(&p).ok();
+        };
+        for cut in [0, 5, 18, 19, bytes.len() - 1] {
+            case("trunc", bytes[..cut].to_vec(), &["truncated", "magic"]);
+        }
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        case("magic", bad, &["magic"]);
+        let mut bad = bytes.clone();
+        bad[6] = 9;
+        case("dtype", bad, &["dtype"]);
+        let mut bad = bytes.clone();
+        bad.push(0);
+        case("trailing", bad, &["trailing bytes"]);
+        let mut bad = bytes.clone();
+        bad[7..11].copy_from_slice(&u32::MAX.to_le_bytes());
+        bad[11..19].copy_from_slice(&u64::MAX.to_le_bytes());
+        case("overflow", bad, &["implausible"]);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -40,6 +40,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dataset;
 pub mod linalg;
 pub mod metrics;
 pub mod nn;

@@ -17,8 +17,9 @@ use gradfree_admm::baselines::{self, LocalObjective, SgdOpts};
 use gradfree_admm::cli::Args;
 use gradfree_admm::cluster::CostModel;
 use gradfree_admm::config::{ServeConfig, TrainConfig, Transport};
-use gradfree_admm::coordinator::AdmmTrainer;
+use gradfree_admm::coordinator::{AdmmTrainer, StreamTrainer, TrainOutcome};
 use gradfree_admm::data::{self, Dataset, Normalizer};
+use gradfree_admm::dataset as gfds;
 use gradfree_admm::metrics::write_curves_csv;
 use gradfree_admm::nn::Mlp;
 use gradfree_admm::problem::Problem;
@@ -64,6 +65,11 @@ fn print_usage() {
          --loss hinge|l2|multihinge            problem kind (default hinge)\n  \
          --dataset blobs|svhn|higgs|regress|multiblobs|<csv path>\n  \
          \x20                (default matches preset/loss)\n  \
+         --data file      dataset file (format sniffed by magic: GFDS01 binary or\n  \
+         \x20                CSV); --test-samples splits off the tail (default n/6)\n  \
+         --stream         train out-of-core from a GFDS01 --data file: each rank\n  \
+         \x20                streams exactly its column shard (automatic for files\n  \
+         \x20                ≥ 64 MB; bit-identical to the in-RAM path)\n  \
          --samples N --test-samples N --seed S\n  \
          --backend native|pjrt  --workers N  --threads N  --iters N  --warmup N\n  \
          --gamma G --beta B --momentum M --multiplier-mode bregman|none|classical\n  \
@@ -93,7 +99,9 @@ fn print_usage() {
          baseline: --method sgd|cg|lbfgs --lr --batch --bmomentum --epochs --max-iters\n\
          scale:    --cores 1,2,4,8 --model-cores 64,1024,7200 --target-acc A\n\
          gen-data: --dataset blobs|svhn|higgs|regress|multiblobs --samples N\n\
-         \x20          [--classes K] --out file.csv\n\
+         \x20          [--classes K] [--format csv|binary] --out file.{{csv,gfds}}\n\
+         \x20          (binary = GFDS01; higgs+binary streams to disk, so rows are\n\
+         \x20          limited only by disk); or --from-csv in.csv --format binary\n\
          predict:  --model ckpt.gfadmm [--dataset ...]\n\
          serve:    --model ckpt.gfadmm [--host H] [--port P] [--threads N]\n\
          \x20          [--max-batch N] [--max-wait-us U] [--serve-config file.json]\n\
@@ -112,10 +120,52 @@ fn print_usage() {
 
 /// Build (train, test) per the CLI flags; features are z-scored with
 /// train-set statistics (HIGGS-like needs it; harmless elsewhere).
+/// `--data file` takes priority over `--dataset` and sniffs the format
+/// by magic: a `GFDS01` file loads through `dataset::load_gfds`,
+/// anything else through the CSV loader.  (Files past the streaming
+/// threshold never reach this in-RAM path — `cmd_train` routes them to
+/// the `StreamTrainer`.)
 fn load_data(args: &Args, cfg: &TrainConfig) -> Result<(Dataset, Dataset)> {
     let seed = cfg.seed;
-    let dataset = args.get_or("dataset", default_dataset(&cfg.name, cfg.problem));
-    let (mut train, mut test) = match dataset {
+    let dataset = if cfg.data_path.is_empty() {
+        args.get_or("dataset", default_dataset(&cfg.name, cfg.problem))
+    } else {
+        cfg.data_path.as_str()
+    };
+    let (mut train, mut test) = if cfg.data_path.is_empty() {
+        synthetic_data(args, cfg, dataset, seed)?
+    } else {
+        let d = if gfds::is_gfds(&cfg.data_path) {
+            gfds::load_gfds(&cfg.data_path)?
+        } else {
+            data::load_csv(&cfg.data_path, args.has("label-first"))?
+        };
+        let nt = args.parsed_or("test-samples", d.samples() / 6)?;
+        d.split_test(nt)
+    };
+    anyhow::ensure!(
+        train.features() == cfg.dims[0],
+        "dataset '{dataset}' has {} features but config dims[0]={} — pass --dims",
+        train.features(),
+        cfg.dims[0]
+    );
+    cfg.problem.validate_labels(&train.y, *cfg.dims.last().unwrap())?;
+    cfg.problem.validate_labels(&test.y, *cfg.dims.last().unwrap())?;
+    let norm = Normalizer::fit(&train.x);
+    norm.apply(&mut train.x);
+    norm.apply(&mut test.x);
+    Ok((train, test))
+}
+
+/// The `--dataset` synthetic generators (and the bare-path CSV fallback
+/// the flag has always accepted).
+fn synthetic_data(
+    args: &Args,
+    cfg: &TrainConfig,
+    dataset: &str,
+    seed: u64,
+) -> Result<(Dataset, Dataset)> {
+    Ok(match dataset {
         "blobs" => {
             let n = args.parsed_or("samples", 4000usize)?;
             let nt = args.parsed_or("test-samples", n / 5)?;
@@ -151,19 +201,7 @@ fn load_data(args: &Args, cfg: &TrainConfig) -> Result<(Dataset, Dataset)> {
             let nt = args.parsed_or("test-samples", d.samples() / 6)?;
             d.split_test(nt)
         }
-    };
-    anyhow::ensure!(
-        train.features() == cfg.dims[0],
-        "dataset '{dataset}' has {} features but config dims[0]={} — pass --dims",
-        train.features(),
-        cfg.dims[0]
-    );
-    cfg.problem.validate_labels(&train.y, *cfg.dims.last().unwrap())?;
-    cfg.problem.validate_labels(&test.y, *cfg.dims.last().unwrap())?;
-    let norm = Normalizer::fit(&train.x);
-    norm.apply(&mut train.x);
-    norm.apply(&mut test.x);
-    Ok((train, test))
+    })
 }
 
 fn default_dataset(preset: &str, problem: Problem) -> &'static str {
@@ -189,6 +227,9 @@ fn config_from_args(args: &Args) -> Result<TrainConfig> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
+    if use_streaming(&cfg) {
+        return cmd_train_stream(args, cfg);
+    }
     let (train, test) = load_data(args, &cfg)?;
     // In a TCP world every process runs this same command with its own
     // --rank; only rank 0 records the curve and owns the output files.
@@ -225,24 +266,104 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     let out = match trainer.train() {
         Ok(out) => out,
-        Err(e) => {
-            // One greppable line for supervisors (CI greps for it), with
-            // the typed comm-error kind when one is in the chain.
-            let kind = e
-                .chain()
-                .find_map(|c| c.downcast_ref::<gradfree_admm::cluster::CommError>())
-                .map(|k| format!(" [{k}]"))
-                .unwrap_or_default();
-            eprintln!("train aborted:{kind} {e:#}");
-            return Err(e);
-        }
+        Err(e) => return Err(surface_train_error(e)),
     };
+    report_train_outcome(args, trainer.config(), &out, is_rank0)
+}
+
+/// Route `--data` files to the out-of-core `StreamTrainer`: always when
+/// `--stream` is passed, and automatically when a `GFDS01` file is past
+/// the streaming threshold (`dataset::STREAM_THRESHOLD_BYTES`) — small
+/// files stay on the in-RAM fast path, which the two paths' pinned
+/// bit-identity makes purely an implementation detail.
+fn use_streaming(cfg: &TrainConfig) -> bool {
+    if cfg.data_path.is_empty() || !gfds::is_gfds(&cfg.data_path) {
+        return false;
+    }
+    cfg.stream
+        || std::fs::metadata(&cfg.data_path)
+            .map(|m| m.len() >= gfds::STREAM_THRESHOLD_BYTES)
+            .unwrap_or(false)
+}
+
+/// `gradfree train --data file.gfds --stream`: the out-of-core arm.
+/// Each rank streams exactly its column shard from the file; outputs,
+/// flags and reporting match the in-RAM arm (the runs are bit-identical
+/// on equal data), plus a per-rank bytes-read line.
+fn cmd_train_stream(args: &Args, cfg: TrainConfig) -> Result<()> {
+    let is_rank0 = cfg.transport == Transport::Local || cfg.rank == 0;
+    let n_total = gfds::GfdsReader::open(&cfg.data_path)?.samples();
+    let n_test = args.parsed_or("test-samples", n_total / 6)?;
+    let path = cfg.data_path.clone();
+    println!(
+        "ADMM train (streaming GFDS01): config={} dims={:?} act={} loss={} backend={} \
+         transport={}{} world={} allreduce={} schedule={} γ={} β={} mode={} data={} \
+         train={}x{} test={}",
+        cfg.name,
+        cfg.dims,
+        cfg.act.name(),
+        cfg.problem.name(),
+        cfg.backend.name(),
+        cfg.transport.name(),
+        if cfg.transport == Transport::Tcp {
+            format!(" rank={}", cfg.rank)
+        } else {
+            String::new()
+        },
+        cfg.world(),
+        cfg.allreduce.name(),
+        cfg.schedule.name(),
+        cfg.gamma,
+        cfg.beta,
+        cfg.multiplier_mode.name(),
+        path,
+        cfg.dims[0],
+        n_total - n_test,
+        n_test
+    );
+    let mut trainer = StreamTrainer::new(cfg, &path, n_test)?;
+    trainer.verbose = !args.has("quiet");
+    trainer.track_penalty = args.has("penalty");
+    if let Some(t) = args.get("target-acc") {
+        trainer.target_acc = Some(t.parse()?);
+    }
+    let out = match trainer.train() {
+        Ok(out) => out,
+        Err(e) => return Err(surface_train_error(e)),
+    };
+    println!(
+        "shard I/O: bytes read per rank {:?} (header + shard·(4·features+4))",
+        trainer.bytes_read_per_rank
+    );
+    report_train_outcome(args, trainer.config(), &out, is_rank0)
+}
+
+/// One greppable line for supervisors (CI greps for it), with the typed
+/// comm-error kind when one is in the chain.
+fn surface_train_error(e: anyhow::Error) -> anyhow::Error {
+    let kind = e
+        .chain()
+        .find_map(|c| c.downcast_ref::<gradfree_admm::cluster::CommError>())
+        .map(|k| format!(" [{k}]"))
+        .unwrap_or_default();
+    eprintln!("train aborted:{kind} {e:#}");
+    e
+}
+
+/// Post-run reporting shared by the in-RAM and streaming arms: metric
+/// summary, straggler telemetry, trace/curve/model outputs.
+fn report_train_outcome(
+    args: &Args,
+    cfg: &TrainConfig,
+    out: &TrainOutcome,
+    is_rank0: bool,
+) -> Result<()> {
     if !is_rank0 {
         // Non-zero ranks hold the same replicated weights but no curve;
         // checkpoint/CSV writing is rank 0's job.
         println!(
             "rank {} done: iters={} opt_time={:.3}s (curve and outputs are written by rank 0)",
-            trainer.config().rank,
+            cfg.rank,
             out.stats.iters_run,
             out.stats.opt_seconds
         );
@@ -264,7 +385,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!(
         "comm wait (Σ over {} rank(s)): allreduce {:.3}s  broadcast {:.3}s  \
          scalars {:.3}s  barrier {:.3}s  total {:.3}s",
-        trainer.config().world(),
+        cfg.world(),
         w[0],
         w[1],
         w[2],
@@ -287,16 +408,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         // counts and seconds summed over the world.
         println!(
             "phase breakdown (Σ over {} rank(s)):\n{}",
-            trainer.config().world(),
+            cfg.world(),
             gradfree_admm::trace::format_phase_table(&out.stats.phases_world)
         );
     }
-    if !trainer.config().trace_path.is_empty() {
+    if !cfg.trace_path.is_empty() {
         println!(
             "trace written to {} (Chrome trace-event JSON — open in ui.perfetto.dev; \
              ranks r>0 write {}.rankR)",
-            trainer.config().trace_path,
-            trainer.config().trace_path
+            cfg.trace_path,
+            cfg.trace_path
         );
     }
     let gaps = out.recorder.eval_gap_summary();
@@ -315,7 +436,6 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("curve written to {path}");
     }
     if let Some(path) = args.get("save") {
-        let cfg = trainer.config();
         gradfree_admm::nn::save_model(path, &out.weights, cfg.act, cfg.problem)?;
         println!("model saved to {path}");
     }
@@ -527,12 +647,41 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 }
 
 fn cmd_gen_data(args: &Args) -> Result<()> {
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("--out <file.csv|file.gfds> required"))?;
+    let format = args.get_or("format", "csv");
+    anyhow::ensure!(
+        matches!(format, "csv" | "binary"),
+        "unknown --format '{format}' (csv|binary)"
+    );
+    // CSV → GFDS01 conversion path (real datasets like the actual HIGGS
+    // download enter the binary pipeline here).
+    if let Some(src) = args.get("from-csv") {
+        anyhow::ensure!(
+            format == "binary",
+            "--from-csv writes GFDS01 — pass --format binary"
+        );
+        gfds::convert_csv(src, out, args.has("label-first"))?;
+        let r = gfds::GfdsReader::open(out)?;
+        println!(
+            "converted {src} -> {out} ({} samples x {} features, GFDS01)",
+            r.samples(),
+            r.features()
+        );
+        return Ok(());
+    }
     let dataset = args.get_or("dataset", "blobs");
     let n = args.parsed_or("samples", 1000usize)?;
     let seed = args.parsed_or("seed", 0u64)?;
-    let out = args
-        .get("out")
-        .ok_or_else(|| anyhow::anyhow!("--out <file.csv> required"))?;
+    // HIGGS-like + binary streams sample-at-a-time straight to disk —
+    // the row count is limited only by disk, never by RAM (and the draw
+    // is bit-identical to the in-RAM generator at any size).
+    if format == "binary" && dataset == "higgs" {
+        gfds::write_higgs_like(out, n, seed)?;
+        println!("wrote {n} samples x 28 features to {out} (GFDS01, streamed)");
+        return Ok(());
+    }
     let d = match dataset {
         "blobs" => data::blobs(16, n, 2.5, seed),
         "svhn" => data::svhn_like(n, seed),
@@ -544,6 +693,15 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
         }
         other => anyhow::bail!("unknown dataset '{other}'"),
     };
+    if format == "binary" {
+        gfds::write_dataset(out, &d)?;
+        println!(
+            "wrote {} samples x {} features to {out} (GFDS01)",
+            d.samples(),
+            d.features()
+        );
+        return Ok(());
+    }
     let mut text = String::new();
     for c in 0..d.samples() {
         use std::fmt::Write as _;

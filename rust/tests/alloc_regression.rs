@@ -453,4 +453,36 @@ fn steady_state_hot_loops_allocate_nothing() {
             );
         }
     }
+
+    // ---- GFDS01 streaming shard reads --------------------------------
+    // The out-of-core data path's steady-state promise: once the chunk
+    // buffer and the caller's x/y matrices are warm, re-reading a column
+    // shard with `GfdsReader::read_shard_into` is pure I/O — zero heap
+    // allocations, including for a shifted shard of the same width (the
+    // deny-alloc manifest covers every path through the body; this pins
+    // one real file end to end).
+    use gradfree_admm::dataset::{write_dataset, GfdsReader};
+    let gfds_path = std::env::temp_dir()
+        .join(format!("gfds_alloc_{}.gfds", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string();
+    let d = gradfree_admm::data::blobs(7, 60, 2.0, 11);
+    write_dataset(&gfds_path, &d).unwrap();
+    let mut reader = GfdsReader::open(&gfds_path).unwrap();
+    let (mut sx, mut sy) = (Matrix::default(), Matrix::default());
+    // Warm: the first read sizes x/y, the second proves stability.
+    reader.read_shard_into(10, 45, &mut sx, &mut sy).unwrap();
+    reader.read_shard_into(10, 45, &mut sx, &mut sy).unwrap();
+    let ((), gfds_allocs) = armed(|| {
+        reader.read_shard_into(10, 45, &mut sx, &mut sy).unwrap();
+        reader.read_shard_into(12, 47, &mut sx, &mut sy).unwrap();
+    });
+    assert_eq!(
+        gfds_allocs, 0,
+        "steady-state GFDS01 shard reads must not allocate ({gfds_allocs} allocations)"
+    );
+    assert_eq!(sx.as_slice(), d.x.col_range(12, 47).as_slice());
+    assert_eq!(sy.as_slice(), d.y.col_range(12, 47).as_slice());
+    std::fs::remove_file(&gfds_path).ok();
 }

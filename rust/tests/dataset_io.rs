@@ -1,0 +1,206 @@
+//! End-to-end `GFDS01` data path: `gen-data --format binary` and the
+//! CSV→GFDS01 converter agree byte-for-byte, and training out-of-core
+//! (`--data file.gfds --stream`) produces checkpoints **byte-identical**
+//! to the in-RAM CSV path across {local, tcp} × {bulk, pipelined} — the
+//! PR's acceptance matrix, exercised through real `gradfree`
+//! subprocesses like `tests/transport_equivalence.rs`.  Also runs the
+//! `bench::dataset` sweep at test scale so `bench_out/BENCH_DATA.json`
+//! always exists after `cargo test` (CI greps it).
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+
+use gradfree_admm::bench::dataset::{run_data_bench, DataBenchSpec};
+use gradfree_admm::data::shard_ranges;
+use gradfree_admm::dataset::HEADER_LEN;
+
+fn loopback_available() -> bool {
+    TcpListener::bind("127.0.0.1:0").is_ok()
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("gfds_io_{}_{name}", std::process::id()))
+}
+
+/// Run the real `gradfree` binary to completion, asserting success.
+fn run(args: &[String]) {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_gradfree"))
+        .args(args)
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::piped())
+        .output()
+        .expect("running gradfree");
+    assert!(
+        out.status.success(),
+        "gradfree {args:?} failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+/// Spawn a `gradfree` subprocess (one SPMD rank) without waiting.
+fn spawn_rank(args: &[String]) -> std::process::Child {
+    std::process::Command::new(env!("CARGO_BIN_EXE_gradfree"))
+        .args(args)
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawning gradfree rank")
+}
+
+fn strs(args: &[&str]) -> Vec<String> {
+    args.iter().map(|s| s.to_string()).collect()
+}
+
+/// Write the blobs dataset as CSV and as GFDS01 (via the converter) to
+/// `base.{csv,gfds}`; returns the two paths.
+fn gen_pair(base: &str, samples: usize, seed: u64) -> (PathBuf, PathBuf) {
+    let csv = tmp(&format!("{base}.csv"));
+    let gfds = tmp(&format!("{base}.gfds"));
+    run(&strs(&[
+        "gen-data", "--dataset", "blobs",
+        "--samples", &samples.to_string(),
+        "--seed", &seed.to_string(),
+        "--out", csv.to_str().unwrap(),
+    ]));
+    run(&strs(&[
+        "gen-data", "--from-csv", csv.to_str().unwrap(),
+        "--format", "binary",
+        "--out", gfds.to_str().unwrap(),
+    ]));
+    (csv, gfds)
+}
+
+/// `gen-data --format binary` writes the same bytes the CSV→GFDS01
+/// converter produces: the CSV text round-trips every f32 exactly, so
+/// the two routes to a binary file cannot diverge.
+#[test]
+fn gen_data_binary_matches_csv_conversion() {
+    let (_csv, converted) = gen_pair("conv", 180, 9);
+    let direct = tmp("direct.gfds");
+    run(&strs(&[
+        "gen-data", "--dataset", "blobs", "--samples", "180", "--seed", "9",
+        "--format", "binary", "--out", direct.to_str().unwrap(),
+    ]));
+    let a = std::fs::read(&converted).unwrap();
+    let b = std::fs::read(&direct).unwrap();
+    assert_eq!(a, b, "converted and directly-generated GFDS01 files differ");
+    std::fs::remove_file(tmp("conv.csv")).ok();
+    std::fs::remove_file(&converted).ok();
+    std::fs::remove_file(&direct).ok();
+}
+
+fn train_args(data: &str, schedule: &str, extra: &[&str]) -> Vec<String> {
+    let mut v = strs(&[
+        "train", "--dims", "16x5x1", "--data", data, "--test-samples", "70",
+        "--iters", "4", "--warmup", "2", "--gamma", "1", "--seed", "5",
+        "--schedule", schedule, "--quiet",
+    ]);
+    v.extend(extra.iter().map(|s| s.to_string()));
+    v
+}
+
+/// The acceptance pin, local transport: training from the GFDS01 file
+/// out-of-core writes a checkpoint byte-identical to the in-RAM CSV
+/// path, on both schedules.
+#[test]
+fn stream_checkpoint_matches_in_ram_local() {
+    let (csv, gfds) = gen_pair("local", 420, 9);
+    for schedule in ["bulk", "pipelined"] {
+        let ck_ram = tmp(&format!("local_ram_{schedule}.gfadmm"));
+        let ck_stream = tmp(&format!("local_stream_{schedule}.gfadmm"));
+        run(&train_args(csv.to_str().unwrap(), schedule, &[
+            "--workers", "2", "--save", ck_ram.to_str().unwrap(),
+        ]));
+        run(&train_args(gfds.to_str().unwrap(), schedule, &[
+            "--stream", "--workers", "2", "--save", ck_stream.to_str().unwrap(),
+        ]));
+        let a = std::fs::read(&ck_ram).unwrap();
+        let b = std::fs::read(&ck_stream).unwrap();
+        assert_eq!(a, b, "stream vs in-RAM checkpoints differ (local, {schedule})");
+        std::fs::remove_file(&ck_ram).ok();
+        std::fs::remove_file(&ck_stream).ok();
+    }
+    std::fs::remove_file(&csv).ok();
+    std::fs::remove_file(&gfds).ok();
+}
+
+/// The acceptance pin, TCP transport: two genuinely separate OS
+/// processes streaming their shards from the same GFDS01 file produce
+/// the same checkpoint as the in-RAM CSV run, on both schedules.
+#[test]
+fn stream_checkpoint_matches_in_ram_tcp() {
+    if !loopback_available() {
+        return;
+    }
+    let (csv, gfds) = gen_pair("tcp", 420, 9);
+    for schedule in ["bulk", "pipelined"] {
+        let ck_ram = tmp(&format!("tcp_ram_{schedule}.gfadmm"));
+        let ck_stream = tmp(&format!("tcp_stream_{schedule}.gfadmm"));
+        // In-RAM CSV reference at the same world size (local threads).
+        run(&train_args(csv.to_str().unwrap(), schedule, &[
+            "--workers", "2", "--save", ck_ram.to_str().unwrap(),
+        ]));
+        // Reserve a hub port (freed immediately; rank 0 re-binds it).
+        let port = {
+            let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+            probe.local_addr().unwrap().port()
+        };
+        let hub = format!("127.0.0.1:{port}");
+        let rank0 = spawn_rank(&train_args(gfds.to_str().unwrap(), schedule, &[
+            "--stream", "--transport", "tcp", "--world-size", "2", "--rank", "0",
+            "--peers", &hub, "--save", ck_stream.to_str().unwrap(),
+        ]));
+        let rank1 = spawn_rank(&train_args(gfds.to_str().unwrap(), schedule, &[
+            "--stream", "--transport", "tcp", "--world-size", "2", "--rank", "1",
+            "--peers", &hub,
+        ]));
+        for (rank, child) in [(0, rank0), (1, rank1)] {
+            let out = child.wait_with_output().expect("rank wait");
+            assert!(
+                out.status.success(),
+                "tcp stream rank {rank} ({schedule}) failed: {}",
+                String::from_utf8_lossy(&out.stderr)
+            );
+        }
+        let a = std::fs::read(&ck_ram).unwrap();
+        let b = std::fs::read(&ck_stream).unwrap();
+        assert_eq!(a, b, "stream vs in-RAM checkpoints differ (tcp, {schedule})");
+        std::fs::remove_file(&ck_ram).ok();
+        std::fs::remove_file(&ck_stream).ok();
+    }
+    std::fs::remove_file(&csv).ok();
+    std::fs::remove_file(&gfds).ok();
+}
+
+/// Tier-1 smoke of the out-of-core scaling sweep: `cargo test` leaves a
+/// real `bench_out/BENCH_DATA.json` behind (CI greps it), with the
+/// per-rank I/O already asserted equal to the shard formula inside
+/// `run_data_bench`.
+#[test]
+fn data_bench_smoke_emits_bench_json_with_formula_agreement() {
+    let spec = DataBenchSpec {
+        rows: 3_000,
+        test_rows: 500,
+        dims: vec![28, 8, 1],
+        iters: 2,
+        worlds: vec![1, 2],
+        seed: 11,
+    };
+    let (rows, path) = run_data_bench(&spec).unwrap();
+    assert_eq!(rows.len(), 2);
+    let per_col = (4 * 28 + 4) as u64;
+    for r in &rows {
+        let want: Vec<u64> = shard_ranges(2_500, r.world)
+            .iter()
+            .map(|s| HEADER_LEN as u64 + s.len() as u64 * per_col)
+            .collect();
+        assert_eq!(r.bytes_read_per_rank, want);
+        assert!(r.rows_per_sec > 0.0);
+        assert!(r.profile_pred_s.is_finite() && r.profile_pred_s > 0.0);
+    }
+    let json = std::fs::read_to_string(&path).unwrap();
+    assert!(json.contains("\"schema\": 1"), "{json}");
+    assert!(json.contains("\"rows_per_sec\""), "{json}");
+    assert!(json.contains("\"bytes_read_per_rank\""), "{json}");
+    assert!(json.contains("\"bytes_match_formula\": true"), "{json}");
+}
