@@ -1,16 +1,30 @@
 //! bench-serve: end-to-end latency/throughput of the inference server.
 //!
-//! Drives `serve::Server` over real TCP with the `serve::client` load
-//! generator at a target QPS (default: closed loop), once with singleton
-//! dispatch (`max_batch = 1`) and once micro-batched (`max_batch ≥ 8`),
-//! on the same model and workload.  Reports p50/p95/p99/mean latency and
-//! throughput per scenario and writes them machine-readable to
-//! `bench_out/BENCH_SERVE.json` so successive PRs can track the serving
-//! perf trajectory (the acceptance gate is batched throughput > singleton
-//! throughput).
+//! Drives `serve::Server` over real TCP with the event-driven keep-alive
+//! load generator (`serve::client::run_load`) across four scenarios on
+//! the same model and workload:
 //!
-//!   cargo bench --bench serve [-- --dims 648x300x1 --conns 16 --requests 200
-//!                                 --qps 0 --max-batch 32 --max-wait-us 200]
+//!   singleton    16 conns, no pipelining, `max_batch = 1` — the floor
+//!   batched      64 conns, pipelined, micro-batched — the PR-2 pool shape
+//!   c10k         ≥1024 persistent connections, pipelined — the event
+//!                loop's reason to exist; also probes `{"op":"stats"}`
+//!                and prints the block (CI greps
+//!                `serve_connections_dropped_total 0` from it)
+//!   reload       batched load with a `{"op":"reload"}` hot swap landing
+//!                mid-run; asserts responses after the swap are
+//!                bit-identical to a fresh server on the same checkpoint
+//!
+//! Reports p50/p95/p99/mean latency and throughput per scenario and
+//! writes them machine-readable to `bench_out/BENCH_SERVE.json`
+//! (schema 2: per-scenario `conns`/`pipeline`, `reload_bit_identical`)
+//! so successive PRs can track the serving perf trajectory.  Gates:
+//! batched throughput > singleton throughput, zero dropped connections
+//! everywhere, reload bit-identity.
+//!
+//!   cargo bench --bench serve [-- --dims 648x300x1 --conns 64 --requests 200
+//!                                 --c10k-conns 1024 --c10k-requests 25
+//!                                 --pipeline 4 --qps 0
+//!                                 --max-batch 32 --max-wait-us 200]
 
 use std::collections::BTreeMap;
 
@@ -19,11 +33,14 @@ use gradfree_admm::cli::Args;
 use gradfree_admm::config::{Activation, Json, ServeConfig};
 use gradfree_admm::metrics::{latency_summary, LatencySummary};
 use gradfree_admm::nn::Mlp;
+use gradfree_admm::problem::Problem;
 use gradfree_admm::rng::Rng;
-use gradfree_admm::serve::{run_load, LoadOpts, Server};
+use gradfree_admm::serve::{run_load, Client, LoadOpts, Server};
 
 struct Scenario {
     label: &'static str,
+    conns: usize,
+    pipeline: usize,
     max_batch: usize,
     max_wait_us: u64,
     throughput_rps: f64,
@@ -46,21 +63,16 @@ fn latency_json(ms_scale: f64, s: &LatencySummary) -> Json {
 
 fn write_bench_serve_json(
     dims: &[usize],
-    opts: &LoadOpts,
     scenarios: &[Scenario],
     speedup: f64,
+    reload_bit_identical: bool,
 ) -> gradfree_admm::Result<String> {
     let mut root = BTreeMap::new();
-    root.insert("schema".into(), num(1.0));
+    root.insert("schema".into(), num(2.0));
     root.insert(
         "model_dims".into(),
         Json::Arr(dims.iter().map(|&d| num(d as f64)).collect()),
     );
-    let mut w = BTreeMap::new();
-    w.insert("conns".into(), num(opts.conns as f64));
-    w.insert("requests_per_conn".into(), num(opts.requests_per_conn as f64));
-    w.insert("target_qps".into(), num(opts.target_qps));
-    root.insert("workload".into(), Json::Obj(w));
     root.insert(
         "scenarios".into(),
         Json::Arr(
@@ -69,6 +81,8 @@ fn write_bench_serve_json(
                 .map(|s| {
                     let mut m = BTreeMap::new();
                     m.insert("label".into(), Json::Str(s.label.into()));
+                    m.insert("conns".into(), num(s.conns as f64));
+                    m.insert("pipeline".into(), num(s.pipeline as f64));
                     m.insert("max_batch".into(), num(s.max_batch as f64));
                     m.insert("max_wait_us".into(), num(s.max_wait_us as f64));
                     m.insert("throughput_rps".into(), num(s.throughput_rps));
@@ -79,11 +93,171 @@ fn write_bench_serve_json(
         ),
     );
     root.insert("batched_over_singleton_throughput".into(), num(speedup));
+    root.insert("reload_bit_identical".into(), Json::Bool(reload_bit_identical));
     let dir = std::path::Path::new("bench_out");
     std::fs::create_dir_all(dir)?;
     let path = dir.join("BENCH_SERVE.json");
     std::fs::write(&path, Json::Obj(root).to_string_pretty())?;
     Ok(path.display().to_string())
+}
+
+struct Case {
+    label: &'static str,
+    conns: usize,
+    requests_per_conn: usize,
+    pipeline: usize,
+    max_batch: usize,
+    max_wait_us: u64,
+    stats_probe: bool,
+}
+
+fn run_case(
+    case: &Case,
+    cfg_base: &ServeConfig,
+    ws: &[Matrixish],
+    inputs: &[Vec<f32>],
+    target_qps: f64,
+) -> gradfree_admm::Result<Scenario> {
+    let cfg = ServeConfig {
+        port: 0,
+        max_conns: (case.conns + 8).max(64),
+        max_batch: case.max_batch,
+        max_wait_us: case.max_wait_us,
+        ..cfg_base.clone()
+    };
+    let server = Server::start(&cfg, ws.to_vec(), Activation::Relu, Problem::BinaryHinge)?;
+    let opts = LoadOpts {
+        conns: case.conns,
+        requests_per_conn: case.requests_per_conn,
+        pipeline: case.pipeline,
+        target_qps,
+    };
+    let report = run_load(server.addr(), inputs, opts)?;
+    let stats = server.stats();
+    if case.stats_probe {
+        // The live counters, straight off the server — CI greps this
+        // block for `serve_connections_dropped_total 0`.
+        let mut probe = Client::connect(server.addr())?;
+        let _ = probe.predict(&inputs[0])?; // warm the probe conn
+        println!("--- {} stats probe ---", case.label);
+        print!("{}", stats.render_prometheus());
+        println!("--- end stats probe ---");
+    }
+    let dropped = stats.conns_dropped();
+    server.shutdown();
+    anyhow::ensure!(
+        report.errors == 0,
+        "{}: {} request errors under load",
+        case.label,
+        report.errors
+    );
+    anyhow::ensure!(dropped == 0, "{}: server dropped {dropped} connections", case.label);
+    let latency = latency_summary(&report.latencies_s);
+    let rps = report.throughput_rps();
+    println!(
+        "{:10} conns={:<5} pipeline={:<2} max_batch={:<3} max_wait_us={:<4} {:>9.0} req/s   \
+         latency ms: mean {:.3}  p50 {:.3}  p95 {:.3}  p99 {:.3}",
+        case.label,
+        case.conns,
+        case.pipeline,
+        case.max_batch,
+        case.max_wait_us,
+        rps,
+        latency.mean * 1e3,
+        latency.p50 * 1e3,
+        latency.p95 * 1e3,
+        latency.p99 * 1e3,
+    );
+    Ok(Scenario {
+        label: case.label,
+        conns: case.conns,
+        pipeline: case.pipeline,
+        max_batch: case.max_batch,
+        max_wait_us: case.max_wait_us,
+        throughput_rps: rps,
+        latency,
+    })
+}
+
+type Matrixish = gradfree_admm::linalg::Matrix;
+
+/// Batched load with a hot reload landing mid-run: the swap must drop no
+/// connections and post-swap responses must be bit-identical to a fresh
+/// server started from the same checkpoint.
+fn run_reload_case(
+    cfg_base: &ServeConfig,
+    ws: &[Matrixish],
+    inputs: &[Vec<f32>],
+    conns: usize,
+    pipeline: usize,
+) -> gradfree_admm::Result<bool> {
+    let dir = std::env::temp_dir().join(format!("bench_serve_reload_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let ckpt = dir.join("model.gfadmm");
+    let ckpt_str = ckpt.display().to_string();
+    gradfree_admm::nn::save_model(&ckpt_str, ws, Activation::Relu, Problem::BinaryHinge)?;
+
+    let cfg = ServeConfig {
+        port: 0,
+        max_conns: (conns + 8).max(64),
+        model_path: ckpt_str.clone(),
+        ..cfg_base.clone()
+    };
+    let server = Server::start(&cfg, ws.to_vec(), Activation::Relu, Problem::BinaryHinge)?;
+    let addr = server.addr();
+
+    // Fresh reference server on the same checkpoint: the bit-identity target.
+    let ref_cfg = ServeConfig { port: 0, ..cfg_base.clone() };
+    let ref_server = Server::start(&ref_cfg, ws.to_vec(), Activation::Relu, Problem::BinaryHinge)?;
+    let mut ref_client = Client::connect(ref_server.addr())?;
+    let want: Vec<Vec<f32>> =
+        inputs.iter().map(|x| ref_client.predict(x).map(|r| r.y)).collect::<Result<_, _>>()?;
+
+    // Background load while the reload lands.
+    let opts = LoadOpts { conns, requests_per_conn: 100, pipeline, target_qps: 0.0 };
+    let (report, identical) = std::thread::scope(|s| -> gradfree_admm::Result<_> {
+        let load = s.spawn(move || run_load(addr, inputs, opts));
+        // Reload mid-load over a live connection.
+        let mut ctl = Client::connect(addr)?;
+        let before = ctl.predict(&inputs[0])?;
+        let ack = ctl.control(r#"{"op":"reload"}"#)?;
+        anyhow::ensure!(
+            ack.contains("\"ok\":\"reload\""),
+            "reload not acknowledged: {ack}"
+        );
+        // Post-swap predictions, same connection and a fresh one.
+        let after = ctl.predict(&inputs[0])?;
+        let mut fresh = Client::connect(addr)?;
+        let mut identical = bits_eq(&before.y, &want[0]) && bits_eq(&after.y, &want[0]);
+        for (i, x) in inputs.iter().enumerate() {
+            let got = fresh.predict(x)?;
+            identical &= bits_eq(&got.y, &want[i]);
+        }
+        let report = match load.join() {
+            Ok(r) => r?,
+            Err(_) => anyhow::bail!("load thread panicked"),
+        };
+        Ok((report, identical))
+    })?;
+    let stats = server.stats();
+    let dropped = stats.conns_dropped();
+    let reloads = stats.reloads();
+    server.shutdown();
+    ref_server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+    anyhow::ensure!(report.errors == 0, "reload: {} request errors under load", report.errors);
+    anyhow::ensure!(dropped == 0, "reload: server dropped {dropped} connections");
+    anyhow::ensure!(reloads >= 1, "reload: swap never landed");
+    println!(
+        "reload     conns={conns:<5} pipeline={pipeline:<2} swaps={reloads} \
+         {:>9.0} req/s   bit-identical to fresh server: {identical}",
+        report.throughput_rps()
+    );
+    Ok(identical)
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
 }
 
 fn main() -> gradfree_admm::Result<()> {
@@ -94,17 +268,18 @@ fn main() -> gradfree_admm::Result<()> {
         .map(|s| s.trim().parse::<usize>())
         .collect::<std::result::Result<_, _>>()
         .map_err(|e| anyhow::anyhow!("bad --dims: {e}"))?;
-    let opts = LoadOpts {
-        conns: args.parsed_or("conns", 16usize)?,
-        requests_per_conn: args.parsed_or("requests", 200usize)?,
-        target_qps: args.parsed_or("qps", 0.0f64)?,
-    };
+    let conns: usize = args.parsed_or("conns", 64usize)?;
+    let requests: usize = args.parsed_or("requests", 200usize)?;
+    let c10k_conns: usize = args.parsed_or("c10k-conns", 1024usize)?;
+    let c10k_requests: usize = args.parsed_or("c10k-requests", 25usize)?;
+    let pipeline: usize = args.parsed_or("pipeline", 4usize)?;
+    let target_qps: f64 = args.parsed_or("qps", 0.0f64)?;
     let max_batch: usize = args.parsed_or("max-batch", 32)?;
     let max_wait_us: u64 = args.parsed_or("max-wait-us", 200)?;
 
     banner(
         "bench-serve",
-        "micro-batched inference server latency/throughput",
+        "event-driven micro-batched inference server latency/throughput",
         "§5 (sample-parallel compute) applied to the serving path",
     );
 
@@ -116,63 +291,59 @@ fn main() -> gradfree_admm::Result<()> {
         .map(|_| (0..dims[0]).map(|_| rng.normal() as f32).collect())
         .collect();
     println!(
-        "model dims {dims:?}; {} conns x {} reqs, target_qps={}\n",
-        opts.conns, opts.requests_per_conn, opts.target_qps
+        "model dims {dims:?}; batched: {conns} conns x {requests} reqs, \
+         c10k: {c10k_conns} conns x {c10k_requests} reqs, pipeline={pipeline}, \
+         target_qps={target_qps}\n"
     );
 
-    let cases: Vec<(&'static str, usize, u64)> = vec![
-        ("singleton", 1, 0),
-        ("batched", max_batch.max(8), max_wait_us),
+    let cfg_base = ServeConfig { max_batch, max_wait_us, ..ServeConfig::default() };
+    let cases = [
+        Case {
+            label: "singleton",
+            conns: conns.min(16),
+            requests_per_conn: requests,
+            pipeline: 1,
+            max_batch: 1,
+            max_wait_us: 0,
+            stats_probe: false,
+        },
+        Case {
+            label: "batched",
+            conns,
+            requests_per_conn: requests,
+            pipeline,
+            max_batch: max_batch.max(8),
+            max_wait_us,
+            stats_probe: false,
+        },
+        Case {
+            label: "c10k",
+            conns: c10k_conns,
+            requests_per_conn: c10k_requests,
+            pipeline,
+            max_batch: max_batch.max(8),
+            max_wait_us,
+            stats_probe: true,
+        },
     ];
     let mut scenarios = Vec::new();
-    for (label, mb, wait) in cases {
-        let cfg = ServeConfig {
-            host: "127.0.0.1".into(),
-            port: 0,
-            threads: opts.conns,
-            max_batch: mb,
-            max_wait_us: wait,
-            problem: None,
-        };
-        let server = Server::start(
-            &cfg,
-            ws.clone(),
-            Activation::Relu,
-            gradfree_admm::problem::Problem::BinaryHinge,
-        )?;
-        let report = run_load(server.addr(), &inputs, opts)?;
-        server.shutdown();
-        anyhow::ensure!(
-            report.errors == 0,
-            "{label}: {} request errors under load",
-            report.errors
-        );
-        let latency = latency_summary(&report.latencies_s);
-        let rps = report.throughput_rps();
-        println!(
-            "{label:10} max_batch={mb:<3} max_wait_us={wait:<4} {:>9.0} req/s   \
-             latency ms: mean {:.3}  p50 {:.3}  p95 {:.3}  p99 {:.3}",
-            rps,
-            latency.mean * 1e3,
-            latency.p50 * 1e3,
-            latency.p95 * 1e3,
-            latency.p99 * 1e3,
-        );
-        scenarios.push(Scenario {
-            label,
-            max_batch: mb,
-            max_wait_us: wait,
-            throughput_rps: rps,
-            latency,
-        });
+    for case in &cases {
+        scenarios.push(run_case(case, &cfg_base, &ws, &inputs, target_qps)?);
     }
+
+    let reload_bit_identical =
+        run_reload_case(&cfg_base, &ws, &inputs, conns.min(64), pipeline)?;
+    anyhow::ensure!(
+        reload_bit_identical,
+        "hot reload changed response bits vs a fresh server on the same checkpoint"
+    );
 
     let speedup = scenarios[1].throughput_rps / scenarios[0].throughput_rps;
     println!(
         "\nmicro-batching (batch {}) vs singleton throughput: {speedup:.2}x",
         scenarios[1].max_batch
     );
-    let path = write_bench_serve_json(&dims, &opts, &scenarios, speedup)?;
+    let path = write_bench_serve_json(&dims, &scenarios, speedup, reload_bit_identical)?;
     println!("written: {path}");
     Ok(())
 }

@@ -48,10 +48,12 @@ const FALLIBLE_SCOPE: &[&str] = &["cluster/", "serve/", "nn/io.rs", "runtime/", 
 const DETERMINISM_SCOPE: &[&str] =
     &["linalg/", "coordinator/", "problem/", "data/", "dataset/", "rng.rs"];
 
-/// `cluster/` fold code: collection-iteration-order rules apply, but
-/// wall-clock reads are allowed — collective deadlines and wait
-/// telemetry are wall-clock by design and never feed the fold values.
-const DETERMINISM_ORDER_ONLY_SCOPE: &[&str] = &["cluster/"];
+/// `cluster/` fold code and the serve event loop: collection-iteration-
+/// order rules apply, but wall-clock reads are allowed — collective
+/// deadlines, batch-window deadlines, and idle timeouts are wall-clock by
+/// design and never feed the fold/forward values (a response is
+/// bit-identical whatever batch it rides; see serve/mod.rs).
+const DETERMINISM_ORDER_ONLY_SCOPE: &[&str] = &["cluster/", "serve/"];
 
 /// Files whose functions must issue collectives rank-symmetrically.
 const SYMMETRY_SCOPE: &[&str] = &["coordinator/spmd.rs"];
@@ -108,8 +110,43 @@ const HOT_MANIFEST: &[(&str, &[&str])] = &[
     ("trace/mod.rs", &["start", "record", "record_from", "record_us"]),
     (
         "serve/batcher.rs",
-        &["begin", "set_col", "forward", "col_into", "predict_into", "batch_loop"],
+        &["begin", "set_col", "forward", "col_into", "predict_into"],
     ),
+    (
+        // The event loop's socket-to-socket predict path.  accept_ready
+        // and do_reload are deliberately absent: the first allocates a
+        // slot's buffers on first use, the second rebuilds the engine.
+        "serve/server.rs",
+        &[
+            "fill_rbuf",
+            "drain_wbuf",
+            "poll_timeout_ms",
+            "build_pollset",
+            "parse_conn",
+            "drain_and_dispatch",
+            "dispatch",
+            "flush_all",
+        ],
+    ),
+    (
+        // In-place parse/serialize: straight from the read buffer into
+        // the feature arena, straight from scores into the write buffer.
+        "serve/protocol.rs",
+        &[
+            "parse_line",
+            "parse_request_obj",
+            "parse_string_into",
+            "parse_number",
+            "parse_features",
+            "skip_value",
+            "skip_string",
+            "push_num",
+            "write_response",
+            "write_request",
+            "write_error",
+        ],
+    ),
+    ("serve/poll.rs", &["clear", "register", "poll", "entry"]),
 ];
 
 /// A token pattern: literal text, an optional required follow set (empty

@@ -674,19 +674,31 @@ impl NbOp {
 
     /// Fold the ready op into `buf` (rank-order — bit-identical to the
     /// serial sum).  Returns true for the last rank to fold, which then
-    /// retires front shells on the ledger.
-    fn fold_into(&self, kind: PendingKind, rank: usize, world: usize, buf: &mut Matrix) -> bool {
+    /// retires front shells on the ledger.  A missing deposit after
+    /// `ready()` reported the op complete means the readiness accounting
+    /// desynced from the deposit slots — surfaced as a typed `Desync`
+    /// error rather than a panic so the training loop's fault handling
+    /// (checkpoint + abort) sees it like any other comm failure.
+    fn fold_into(
+        &self,
+        kind: PendingKind,
+        rank: usize,
+        world: usize,
+        buf: &mut Matrix,
+    ) -> Result<bool> {
         let mut st = lock(&self.state);
         match kind {
             PendingKind::Allreduce => {
-                buf.copy_from(st.deposits[0].as_ref().expect("rank 0 deposited"));
-                for d in st.deposits.iter().skip(1) {
-                    buf.add_assign(d.as_ref().expect("rank deposited"));
+                let first = st.deposits[0].as_ref().ok_or_else(|| missing_deposit(0))?;
+                buf.copy_from(first);
+                for (r, d) in st.deposits.iter().enumerate().skip(1) {
+                    buf.add_assign(d.as_ref().ok_or_else(|| missing_deposit(r))?);
                 }
             }
             PendingKind::Broadcast { root } => {
                 if rank != root {
-                    buf.copy_from(st.deposits[root].as_ref().expect("root deposited"));
+                    let d = st.deposits[root].as_ref().ok_or_else(|| missing_deposit(root))?;
+                    buf.copy_from(d);
                 }
             }
         }
@@ -696,8 +708,18 @@ impl NbOp {
         if last {
             self.done.store(true, Ordering::Release);
         }
-        last
+        Ok(last)
     }
+}
+
+/// Error for a deposit slot found empty after readiness was published.
+/// Out-of-line so the hot fold loop carries no formatting machinery.
+#[cold]
+fn missing_deposit(rank: usize) -> anyhow::Error {
+    comm_err(
+        CommError::Desync,
+        format!("collective marked ready but rank {rank} never deposited"),
+    )
 }
 
 /// Sequence-numbered op ledger shared by all handles of one local world.
@@ -994,7 +1016,7 @@ impl LocalComm {
         };
         // Fold under the per-op lock only: folds of different ops (and
         // the deposit copies of ops still being issued) run concurrently.
-        let last = entry.fold_into(kind, self.rank, self.world, &mut buf);
+        let last = entry.fold_into(kind, self.rank, self.world, &mut buf)?;
         if last {
             lock(&self.shared.nb).retire_done();
         }

@@ -749,26 +749,44 @@ impl TrainConfig {
 }
 
 /// Inference-server configuration (`gradfree serve`): bind address, the
-/// connection-handler pool, and the micro-batcher's admission knobs.
+/// event loop's connection capacity and buffer sizes, and the batch
+/// window's admission knobs.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     /// Bind host (serve loopback by default; set 0.0.0.0 to expose).
     pub host: String,
     /// Bind port; 0 asks the OS for an ephemeral port (tests, benches).
     pub port: u16,
-    /// Connection-handler threads — the maximum number of concurrently
-    /// served TCP connections.
-    pub threads: usize,
+    /// Connection-slot capacity of the event loop — the maximum number of
+    /// concurrently open TCP connections.  When every slot is in use the
+    /// listener is simply not polled: new connections wait in the kernel
+    /// backlog instead of being dropped.
+    pub max_conns: usize,
     /// Upper bound on requests packed into one forward-pass micro-batch.
     pub max_batch: usize,
-    /// How long the batcher waits for the batch to fill once the first
+    /// How long the loop waits for the batch to fill once the first
     /// request of a batch has arrived (0 = dispatch immediately).
     pub max_wait_us: u64,
+    /// Per-connection read-buffer bytes — also the maximum request-line
+    /// length (an over-long line gets an error reply and the connection
+    /// is closed).
+    pub read_buf: usize,
+    /// Per-connection write-buffer bytes.  Responses are serialized
+    /// straight into this buffer; a connection whose buffer cannot
+    /// reserve a full response stops being polled for reads until the
+    /// client drains it (backpressure, not allocation).
+    pub write_buf: usize,
+    /// Close connections idle longer than this many seconds (0 = never).
+    pub idle_timeout_s: u64,
+    /// Checkpoint path the server was started from; re-read on `SIGHUP`
+    /// or `{"op":"reload"}` to hot-swap weights.  Set by `gradfree
+    /// serve --model`; empty disables hot reload.
+    pub model_path: String,
     /// Decode override (`--loss`).  `None` (the default) trusts the
     /// checkpoint: `GFADMM02` files record their problem kind, `GFADMM01`
     /// files default to binary hinge.
     pub problem: Option<Problem>,
-    /// Chrome-trace span timeline for the batcher thread (`--trace
+    /// Chrome-trace span timeline for the event-loop thread (`--trace
     /// out.json`, empty = off): queue/batch/forward/write spans, written
     /// on shutdown.
     pub trace_path: String,
@@ -779,9 +797,13 @@ impl Default for ServeConfig {
         ServeConfig {
             host: "127.0.0.1".into(),
             port: 7878,
-            threads: 4,
+            max_conns: 4096,
             max_batch: 32,
             max_wait_us: 200,
+            read_buf: 16 * 1024,
+            write_buf: 16 * 1024,
+            idle_timeout_s: 0,
+            model_path: String::new(),
             problem: None,
             trace_path: String::new(),
         }
@@ -791,12 +813,27 @@ impl Default for ServeConfig {
 impl ServeConfig {
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(!self.host.is_empty(), "empty bind host");
-        anyhow::ensure!(self.threads >= 1, "need at least one handler thread");
+        anyhow::ensure!(self.max_conns >= 1, "need at least one connection slot");
+        anyhow::ensure!(
+            self.max_conns <= 65536,
+            "implausible max_conns {} (cap 65536)",
+            self.max_conns
+        );
         anyhow::ensure!(self.max_batch >= 1, "max_batch must be >= 1");
         anyhow::ensure!(
             self.max_batch <= 4096,
             "implausible max_batch {} (cap 4096)",
             self.max_batch
+        );
+        anyhow::ensure!(
+            self.read_buf >= 1024,
+            "read_buf {} too small (min 1024 bytes)",
+            self.read_buf
+        );
+        anyhow::ensure!(
+            self.write_buf >= 4096,
+            "write_buf {} too small (min 4096 bytes — a stats block must fit)",
+            self.write_buf
         );
         Ok(())
     }
@@ -808,11 +845,19 @@ impl ServeConfig {
             match k.as_str() {
                 "host" => c.host = val.as_str()?.to_string(),
                 "port" => c.port = u16::try_from(val.as_usize()?)?,
-                "threads" => c.threads = val.as_usize()?,
+                "max_conns" => c.max_conns = val.as_usize()?,
                 "max_batch" => c.max_batch = val.as_usize()?,
                 "max_wait_us" => c.max_wait_us = val.as_usize()? as u64,
+                "read_buf" => c.read_buf = val.as_usize()?,
+                "write_buf" => c.write_buf = val.as_usize()?,
+                "idle_timeout_s" => c.idle_timeout_s = val.as_usize()? as u64,
+                "model" => c.model_path = val.as_str()?.to_string(),
                 "loss" => c.problem = Some(Problem::parse(val.as_str()?)?),
                 "trace" => c.trace_path = val.as_str()?.to_string(),
+                "threads" => anyhow::bail!(
+                    "serve config key 'threads' was removed: the event loop serves \
+                     max_conns connections on one thread (set 'max_conns' instead)"
+                ),
                 other => anyhow::bail!("unknown serve config key '{other}'"),
             }
         }
@@ -826,15 +871,23 @@ impl ServeConfig {
             self.host = v.to_string();
         }
         self.port = args.parsed_or("port", self.port)?;
-        self.threads = args.parsed_or("threads", self.threads)?;
+        self.max_conns = args.parsed_or("max-conns", self.max_conns)?;
         self.max_batch = args.parsed_or("max-batch", self.max_batch)?;
         self.max_wait_us = args.parsed_or("max-wait-us", self.max_wait_us)?;
+        self.read_buf = args.parsed_or("read-buf", self.read_buf)?;
+        self.write_buf = args.parsed_or("write-buf", self.write_buf)?;
+        self.idle_timeout_s = args.parsed_or("idle-timeout-s", self.idle_timeout_s)?;
         if let Some(v) = args.get("loss") {
             self.problem = Some(Problem::parse(v)?);
         }
         if let Some(v) = args.get("trace") {
             self.trace_path = v.to_string();
         }
+        anyhow::ensure!(
+            args.get("threads").is_none(),
+            "--threads was removed: the event loop serves max_conns connections \
+             on one thread (use --max-conns)"
+        );
         self.validate()
     }
 
@@ -856,23 +909,32 @@ mod tests {
     #[test]
     fn serve_config_json_and_cli_overrides() {
         let c = ServeConfig::from_json(
-            &Json::parse(r#"{"port": 9000, "max_batch": 8, "max_wait_us": 50}"#).unwrap(),
+            &Json::parse(
+                r#"{"port": 9000, "max_batch": 8, "max_wait_us": 50,
+                    "max_conns": 2048, "read_buf": 8192, "idle_timeout_s": 30,
+                    "model": "model.gfadmm"}"#,
+            )
+            .unwrap(),
         )
         .unwrap();
         assert_eq!(c.port, 9000);
         assert_eq!(c.max_batch, 8);
         assert_eq!(c.max_wait_us, 50);
-        assert_eq!(c.threads, 4); // default preserved
+        assert_eq!(c.max_conns, 2048);
+        assert_eq!(c.read_buf, 8192);
+        assert_eq!(c.write_buf, 16 * 1024); // default preserved
+        assert_eq!(c.idle_timeout_s, 30);
+        assert_eq!(c.model_path, "model.gfadmm");
         assert_eq!(c.addr(), "127.0.0.1:9000");
 
         let mut c = ServeConfig::default();
         let args = Args::parse_from(
-            ["--port", "0", "--max-batch", "1", "--threads", "2"]
+            ["--port", "0", "--max-batch", "1", "--max-conns", "64", "--write-buf", "8192"]
                 .iter()
                 .map(|s| s.to_string()),
         );
         c.apply_args(&args).unwrap();
-        assert_eq!((c.port, c.max_batch, c.threads), (0, 1, 2));
+        assert_eq!((c.port, c.max_batch, c.max_conns, c.write_buf), (0, 1, 64, 8192));
     }
 
     #[test]
@@ -883,8 +945,27 @@ mod tests {
         c.max_batch = 0;
         assert!(c.validate().is_err());
         let mut c = ServeConfig::default();
-        c.threads = 0;
+        c.max_conns = 0;
         assert!(c.validate().is_err());
+        let mut c = ServeConfig::default();
+        c.read_buf = 16;
+        assert!(c.validate().is_err());
+        let mut c = ServeConfig::default();
+        c.write_buf = 16;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn serve_config_threads_key_is_a_hard_error() {
+        // The thread-pool server's knob: removed, not silently ignored.
+        let err = ServeConfig::from_json(&Json::parse(r#"{"threads": 4}"#).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("removed"), "{err}");
+        let mut c = ServeConfig::default();
+        let args =
+            Args::parse_from(["--threads", "4"].iter().map(|s| s.to_string()));
+        assert!(c.apply_args(&args).unwrap_err().to_string().contains("removed"));
     }
 
     #[test]

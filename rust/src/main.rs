@@ -103,10 +103,11 @@ fn print_usage() {
          \x20          (binary = GFDS01; higgs+binary streams to disk, so rows are\n\
          \x20          limited only by disk); or --from-csv in.csv --format binary\n\
          predict:  --model ckpt.gfadmm [--dataset ...]\n\
-         serve:    --model ckpt.gfadmm [--host H] [--port P] [--threads N]\n\
-         \x20          [--max-batch N] [--max-wait-us U] [--serve-config file.json]\n\
-         \x20          [--trace out.json] [--loss ...] (default: the checkpoint's\n\
-         \x20          problem kind)\n\
+         serve:    --model ckpt.gfadmm [--host H] [--port P] [--max-conns N]\n\
+         \x20          [--max-batch N] [--max-wait-us U] [--read-buf B] [--write-buf B]\n\
+         \x20          [--idle-timeout-s S] [--serve-config file.json] [--trace out.json]\n\
+         \x20          [--loss ...] (default: the checkpoint's problem kind); hot\n\
+         \x20          reload: SIGHUP or a {{\"op\":\"reload\"}} line re-reads the model\n\
          analyze:  [--src rust/src] [--baseline analyze.allow] [--json report.json]\n\
          \x20          [--update-baseline] [--list-lints] [--verbose]  static lints\n\
          \x20          (deny-alloc, collective-symmetry, determinism,\n\
@@ -481,6 +482,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => ServeConfig::default(),
     };
     cfg.apply_args(args)?;
+    cfg.model_path = model_path.to_string();
     let problem = cfg.problem.unwrap_or(ckpt_problem);
     let dims: Vec<usize> = std::iter::once(ws[0].cols())
         .chain(ws.iter().map(|w| w.rows()))
@@ -488,17 +490,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let server = gradfree_admm::serve::Server::start(&cfg, ws, act, problem)?;
     println!(
         "serving {model_path} (dims={dims:?} act={} loss={} metric={}) on {}  \
-         [threads={} max_batch={} max_wait_us={}]",
+         [max_conns={} max_batch={} max_wait_us={}]",
         act.name(),
         problem.name(),
         problem.metric_name(),
         server.addr(),
-        cfg.threads,
+        cfg.max_conns,
         cfg.max_batch,
         cfg.max_wait_us
     );
     println!(r#"protocol: {{"id":N,"x":[..]}} -> {{"argmax":K,"id":N,"y":[..]}} (one JSON object per line; non-hinge models add "pred")"#);
     println!(r#"stats: {{"op":"stats"}} -> live counters as a Prometheus-style text block"#);
+    println!(r#"reload: SIGHUP or {{"op":"reload"}} re-reads {model_path} and hot-swaps weights"#);
     server.wait();
     Ok(())
 }

@@ -1,32 +1,25 @@
-//! Micro-batching scheduler: packs concurrently queued predict requests
-//! into one column-batched forward pass.
+//! The serve path's compute core: packs gathered predict requests into
+//! one column-batched forward pass.
 //!
-//! Two layers:
+//! [`BatchEngine`] owns the weight ensemble (behind an `Arc` snapshot so
+//! hot reload can swap it atomically) and a reusable [`MlpWorkspace`];
+//! the gather (`begin`/`set_col`) → `forward` → scatter (`col_into`)
+//! cycle performs zero heap allocations once warmed at the widest batch
+//! (pinned by `tests/alloc_regression.rs`, same counting-allocator
+//! harness as the training hot path).
 //!
-//! * [`BatchEngine`] — the pure compute core.  Owns the weight ensemble
-//!   and a reusable [`MlpWorkspace`]; the gather (`begin`/`set_col`) →
-//!   `forward` → scatter (`col_into`) cycle performs zero heap
-//!   allocations once warmed at the widest batch (pinned by
-//!   `tests/alloc_regression.rs`, same counting-allocator harness as the
-//!   training hot path).
-//! * [`Batcher`] — the admission loop on its own thread.  It blocks on an
-//!   mpsc queue for the first request of a batch, then keeps admitting
-//!   until `max_batch` requests are staged or `max_wait` has elapsed, runs
-//!   the engine once, and scatters per-request replies back through each
-//!   job's channel.  Queue order is preserved, so a connection's pipelined
-//!   requests come back in submission order.
+//! Batch *scheduling* lives in `server.rs`: the event loop stages parsed
+//! requests directly from connection read buffers and runs the engine
+//! once per admission window — there is no batcher thread or channel hop
+//! anymore (the pre-event-loop server had both; they were pure overhead
+//! once the loop owned admission order).
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
-use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
 
-use super::stats::ServeStats;
 use crate::config::Activation;
 use crate::linalg::Matrix;
 use crate::nn::{Mlp, MlpWorkspace};
 use crate::problem::Problem;
-use crate::trace::{Phase, Tracer};
 use crate::Result;
 
 /// Index of the maximum score (ties break low — deterministic).
@@ -44,7 +37,10 @@ pub fn argmax(y: &[f32]) -> usize {
 /// the gather/scatter staging buffer.
 pub struct BatchEngine {
     mlp: Mlp,
-    ws: Vec<Matrix>,
+    /// The weight snapshot.  `Arc` so hot reload can hand the previous
+    /// snapshot's readers their ensemble while the server swaps in a new
+    /// engine built from the re-read checkpoint.
+    ws: Arc<Vec<Matrix>>,
     work: MlpWorkspace,
     /// Column-batched input under assembly (features × batch).
     x: Matrix,
@@ -56,14 +52,25 @@ impl BatchEngine {
     /// `problem` — recorded in `GFADMM02` checkpoints — selects the
     /// decoded `pred` each reply carries.
     pub fn new(ws: Vec<Matrix>, act: Activation, problem: Problem) -> Result<Self> {
+        Self::from_shared(Arc::new(ws), act, problem)
+    }
+
+    /// Build around an already-shared snapshot (hot reload keeps the old
+    /// snapshot alive for any outstanding readers).
+    pub fn from_shared(ws: Arc<Vec<Matrix>>, act: Activation, problem: Problem) -> Result<Self> {
         anyhow::ensure!(!ws.is_empty(), "empty weight ensemble");
         let mut dims = vec![ws[0].cols()];
-        for w in &ws {
+        for w in ws.iter() {
             dims.push(w.rows());
         }
         let mlp = Mlp::with_problem(dims, act, problem)?;
         mlp.check_weights(&ws)?;
         Ok(BatchEngine { mlp, ws, work: MlpWorkspace::default(), x: Matrix::default() })
+    }
+
+    /// The live weight snapshot (cheap to clone; shared, immutable).
+    pub fn weights(&self) -> Arc<Vec<Matrix>> {
+        self.ws.clone()
     }
 
     /// The problem kind the engine decodes with.
@@ -116,187 +123,6 @@ impl BatchEngine {
         self.set_col(0, xs);
         self.forward();
         self.col_into(0, out);
-    }
-}
-
-/// One queued predict request: features in, one reply out through the
-/// submitter's channel (connections reuse a single reply channel for all
-/// their requests — replies arrive in submission order).
-pub struct BatchJob {
-    pub id: u64,
-    pub x: Vec<f32>,
-    pub reply: Sender<BatchReply>,
-    /// Admission time — start of the queue span and of the latency sample.
-    pub submitted: Instant,
-}
-
-/// The batcher's answer to one job.  `pred` is the problem-decoded
-/// prediction destined for the wire (`None` for binary hinge, whose
-/// responses keep the legacy field set).
-pub enum BatchReply {
-    Ok { id: u64, y: Vec<f32>, argmax: usize, pred: Option<f32> },
-    Err { id: u64, msg: String },
-}
-
-/// Handle to the batcher thread.  Dropping it (after all submitters are
-/// gone) drains the queue and joins the thread.
-pub struct Batcher {
-    tx: Option<Sender<BatchJob>>,
-    thread: Option<JoinHandle<()>>,
-    features: usize,
-    out_dim: usize,
-}
-
-impl Batcher {
-    /// Spawn the batcher thread around an engine (private stats, no trace).
-    pub fn start(engine: BatchEngine, max_batch: usize, max_wait: Duration) -> Batcher {
-        Self::start_with(engine, max_batch, max_wait, Arc::new(ServeStats::new()), String::new())
-    }
-
-    /// Spawn with shared [`ServeStats`] and an optional Chrome-trace
-    /// output path (empty = tracing off); the server passes both so the
-    /// `{"op":"stats"}` endpoint and `--trace` observe the batcher.
-    pub fn start_with(
-        engine: BatchEngine,
-        max_batch: usize,
-        max_wait: Duration,
-        stats: Arc<ServeStats>,
-        trace_path: String,
-    ) -> Batcher {
-        assert!(max_batch >= 1, "max_batch must be >= 1");
-        let (features, out_dim) = (engine.features(), engine.out_dim());
-        let (tx, rx) = std::sync::mpsc::channel();
-        // analyze: allow(no-unwrap-in-fallible): thread spawn fails only on
-        // resource exhaustion at server startup — abort is the right answer.
-        let thread = std::thread::Builder::new()
-            .name("serve-batcher".into())
-            .spawn(move || batch_loop(rx, engine, max_batch, max_wait, stats, trace_path))
-            .expect("spawn batcher thread");
-        Batcher { tx: Some(tx), thread: Some(thread), features, out_dim }
-    }
-
-    /// A submission handle for one connection/worker.
-    pub fn submitter(&self) -> Sender<BatchJob> {
-        // analyze: allow(no-unwrap-in-fallible): tx is Some until Drop, and
-        // Drop takes &mut self — no shared handle can outlive it.
-        self.tx.as_ref().expect("batcher running").clone()
-    }
-
-    pub fn features(&self) -> usize {
-        self.features
-    }
-
-    pub fn out_dim(&self) -> usize {
-        self.out_dim
-    }
-}
-
-impl Drop for Batcher {
-    fn drop(&mut self) {
-        // Close our submission side; the loop exits once every outstanding
-        // submitter clone is gone and the queue is drained.
-        self.tx.take();
-        if let Some(t) = self.thread.take() {
-            let _ = t.join();
-        }
-    }
-}
-
-/// The admission loop: stage up to `max_batch` jobs within `max_wait` of
-/// the first, run one forward pass, scatter replies in arrival order.
-fn batch_loop(
-    rx: Receiver<BatchJob>,
-    mut engine: BatchEngine,
-    max_batch: usize,
-    max_wait: Duration,
-    stats: Arc<ServeStats>,
-    trace_path: String,
-) {
-    let features = engine.features();
-    let mut staged: Vec<BatchJob> = Vec::with_capacity(max_batch);
-    let mut ybuf: Vec<f32> = Vec::with_capacity(engine.out_dim());
-    // Span timeline for this thread (`serve --trace`): a preallocated
-    // event ring recorded allocation-free, written once on shutdown.
-    let mut tracer =
-        if trace_path.is_empty() { Tracer::disabled() } else { Tracer::enabled(0, 1 << 16) };
-    loop {
-        match rx.recv() {
-            Ok(job) => staged.push(job),
-            Err(_) => break, // all submitters gone, queue drained
-        }
-        let deadline = Instant::now() + max_wait;
-        while staged.len() < max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(job) => staged.push(job),
-                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
-            }
-        }
-
-        // Gather the well-formed jobs into columns.
-        let t0 = tracer.start();
-        let mut cols = 0;
-        for job in &staged {
-            // Queue span: admission (`submit_line`) → the batch forming.
-            tracer.record_from(Phase::Queue, job.submitted, 0);
-            stats.queue_dec();
-            if job.x.len() == features {
-                cols += 1;
-            }
-        }
-        engine.begin(cols);
-        let mut j = 0;
-        for job in &staged {
-            if job.x.len() == features {
-                engine.set_col(j, &job.x);
-                j += 1;
-            }
-        }
-        tracer.record(Phase::Batch, t0, cols as u64);
-        if cols > 0 {
-            let t0 = tracer.start();
-            engine.forward();
-            tracer.record(Phase::Forward, t0, cols as u64);
-        }
-        stats.record_batch(cols as u64);
-
-        // Scatter replies in arrival order (send failures mean the
-        // connection went away — drop the reply on the floor).
-        let t0 = tracer.start();
-        let mut j = 0;
-        for job in staged.drain(..) {
-            stats.record_latency_us(job.submitted.elapsed().as_micros() as u64);
-            if job.x.len() == features {
-                engine.col_into(j, &mut ybuf);
-                let am = argmax(&ybuf);
-                let pred = engine.problem().wire_pred(&ybuf);
-                // analyze: allow(deny-alloc): the reply crosses a channel and
-                // must own its scores; one Vec per answered request is the
-                // serve path's documented per-reply cost.
-                let _ = job
-                    .reply
-                    .send(BatchReply::Ok { id: job.id, y: ybuf.clone(), argmax: am, pred });
-                j += 1;
-            } else {
-                stats.record_error();
-                // analyze: allow(deny-alloc): error path only — malformed
-                // requests are off the steady-state batch cycle.
-                let msg = format!(
-                    "feature-length mismatch: got {}, model wants {features}",
-                    job.x.len()
-                );
-                let _ = job.reply.send(BatchReply::Err { id: job.id, msg });
-            }
-        }
-        tracer.record(Phase::Write, t0, j as u64);
-    }
-    if tracer.is_enabled() {
-        if let Err(e) = crate::trace::write_chrome_trace(&trace_path, &tracer) {
-            eprintln!("serve: writing trace {trace_path}: {e:#}");
-        }
     }
 }
 
@@ -375,98 +201,22 @@ mod tests {
     }
 
     #[test]
-    fn batcher_packs_and_scatters_concurrent_jobs() {
-        let (eng, mlp, ws, x) = engine();
+    fn shared_snapshot_swap_matches_fresh_engine() {
+        // The hot-reload primitive: an engine built from a shared snapshot
+        // is bit-identical to one built from the owned ensemble.
+        let (mut eng, mlp, ws, x) = engine();
+        let snap = eng.weights();
+        let mut swapped =
+            BatchEngine::from_shared(snap, Activation::Relu, Problem::BinaryHinge).unwrap();
         let want = mlp.forward(&ws, &x);
-        // Generous wait so the burst below lands in few forward passes.
-        let batcher = Batcher::start(eng, 8, Duration::from_millis(20));
-        let (rtx, rrx) = std::sync::mpsc::channel();
-        let tx = batcher.submitter();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
         for c in 0..x.cols() {
-            tx.send(BatchJob {
-                id: c as u64,
-                x: col(&x, c),
-                reply: rtx.clone(),
-                submitted: Instant::now(),
-            })
-            .unwrap();
-        }
-        // Mis-shaped job replies with an error, in order.
-        tx.send(BatchJob { id: 99, x: vec![1.0; 3], reply: rtx.clone(), submitted: Instant::now() })
-            .unwrap();
-        for c in 0..x.cols() {
-            match rrx.recv().unwrap() {
-                BatchReply::Ok { id, y, argmax: am, pred } => {
-                    assert_eq!(id, c as u64);
-                    let want_col: Vec<f32> = (0..want.rows()).map(|r| want.at(r, c)).collect();
-                    assert_eq!(y, want_col);
-                    assert_eq!(am, argmax(&want_col));
-                    assert_eq!(pred, None); // binary hinge keeps the legacy wire
-                }
-                BatchReply::Err { .. } => panic!("unexpected error for job {c}"),
+            eng.predict_into(&col(&x, c), &mut a);
+            swapped.predict_into(&col(&x, c), &mut b);
+            for r in 0..want.rows() {
+                assert_eq!(a[r].to_bits(), want.at(r, c).to_bits(), "col {c}");
+                assert_eq!(a[r].to_bits(), b[r].to_bits(), "col {c}");
             }
         }
-        match rrx.recv().unwrap() {
-            BatchReply::Err { id, msg } => {
-                assert_eq!(id, 99);
-                assert!(msg.contains("mismatch"), "{msg}");
-            }
-            BatchReply::Ok { .. } => panic!("mis-shaped job must error"),
-        }
-        drop(tx);
-        drop(batcher); // joins cleanly with the queue drained
-    }
-
-    #[test]
-    fn batcher_zero_wait_serves_singletons() {
-        let (eng, mlp, ws, x) = engine();
-        let want = mlp.forward(&ws, &x);
-        let batcher = Batcher::start(eng, 1, Duration::ZERO);
-        let (rtx, rrx) = std::sync::mpsc::channel();
-        let tx = batcher.submitter();
-        tx.send(BatchJob { id: 0, x: col(&x, 0), reply: rtx, submitted: Instant::now() }).unwrap();
-        match rrx.recv().unwrap() {
-            BatchReply::Ok { y, .. } => {
-                assert_eq!(y[0].to_bits(), want.at(0, 0).to_bits());
-            }
-            BatchReply::Err { msg, .. } => panic!("{msg}"),
-        }
-    }
-
-    #[test]
-    fn batcher_carries_problem_pred_through_replies() {
-        // A multiclass engine's replies must carry the argmax decode.
-        let mlp = Mlp::with_problem(vec![4, 5, 3], Activation::Relu, Problem::MulticlassHinge)
-            .unwrap();
-        let mut rng = Rng::seed_from(15);
-        let ws = mlp.init_weights(&mut rng);
-        let x = Matrix::randn(4, 6, &mut rng);
-        let want = mlp.forward(&ws, &x);
-        let eng = BatchEngine::new(ws, Activation::Relu, Problem::MulticlassHinge).unwrap();
-        let batcher = Batcher::start(eng, 4, Duration::from_millis(5));
-        let (rtx, rrx) = std::sync::mpsc::channel();
-        let tx = batcher.submitter();
-        for c in 0..x.cols() {
-            tx.send(BatchJob {
-                id: c as u64,
-                x: col(&x, c),
-                reply: rtx.clone(),
-                submitted: Instant::now(),
-            })
-            .unwrap();
-        }
-        for c in 0..x.cols() {
-            match rrx.recv().unwrap() {
-                BatchReply::Ok { id, y, pred, .. } => {
-                    assert_eq!(id, c as u64);
-                    let want_col: Vec<f32> = (0..3).map(|r| want.at(r, c)).collect();
-                    assert_eq!(y, want_col);
-                    assert_eq!(pred, Some(argmax(&want_col) as f32));
-                }
-                BatchReply::Err { msg, .. } => panic!("{msg}"),
-            }
-        }
-        drop(tx);
-        drop(batcher);
     }
 }

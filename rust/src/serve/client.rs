@@ -1,10 +1,21 @@
 //! Client side of the serve protocol: a blocking line-protocol client and
-//! the closed-loop/paced load generator behind `cargo bench --bench serve`.
+//! the event-driven keep-alive load generator behind `cargo bench --bench
+//! serve`.
+//!
+//! The load generator mirrors the server's architecture: each worker
+//! thread multiplexes a chunk of persistent nonblocking connections over
+//! the `poll` shim, keeping up to `LoadOpts::pipeline` requests in flight
+//! per connection.  Connections are opened once and reused for the whole
+//! run — connection churn never appears in the measured latencies — which
+//! is what makes C10K-shaped load (1024+ concurrent sockets) practical
+//! from a single process.
 
-use std::io::{BufRead, BufReader, Write};
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
+use super::poll::{Poller, POLLERR, POLLHUP, POLLIN, POLLOUT};
 use super::protocol::{self, Response};
 use crate::Result;
 
@@ -50,6 +61,25 @@ impl Client {
         Ok(resp)
     }
 
+    /// Send one raw control line (e.g. `{"op":"stats"}` or
+    /// `{"op":"reload"}`) and return the first reply line verbatim.
+    /// Callers reading multi-line replies (the stats block) should keep
+    /// calling `control_next_line`.
+    pub fn control(&mut self, line: &str) -> Result<String> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        self.control_next_line()
+    }
+
+    /// Read one more raw line of a control reply.
+    pub fn control_next_line(&mut self) -> Result<String> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        anyhow::ensure!(n > 0, "server closed the connection");
+        Ok(line.trim_end().to_string())
+    }
+
     /// Pipeline a burst: write every request back-to-back, then read the
     /// responses (the protocol answers in order).
     pub fn predict_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Response>> {
@@ -75,13 +105,15 @@ impl Client {
 /// Load-generator knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct LoadOpts {
-    /// Concurrent connections (one thread each).
+    /// Concurrent persistent connections.
     pub conns: usize,
-    /// Synchronous requests issued per connection.
+    /// Requests issued per connection over the run.
     pub requests_per_conn: usize,
+    /// Requests kept in flight per connection (the pipelining window);
+    /// 0 and 1 both mean synchronous request/response.
+    pub pipeline: usize,
     /// Aggregate pacing target across all connections; 0 = closed loop
-    /// (each connection fires its next request as soon as the previous
-    /// response lands).
+    /// (each connection refills its window as soon as responses land).
     pub target_qps: f64,
 }
 
@@ -102,8 +134,31 @@ impl LoadReport {
     }
 }
 
-/// Drive a server with `opts.conns` concurrent connections cycling over
-/// `inputs`, at `target_qps` (or flat out).  Returns pooled latencies for
+/// Connections per load-gen worker thread: enough that 1024 connections
+/// need only a handful of threads, few enough that one worker's event
+/// loop stays responsive.
+const CONNS_PER_WORKER: usize = 256;
+
+/// One persistent load-gen connection's state machine.
+struct LoadConn {
+    stream: TcpStream,
+    /// Global connection index (input-cycling offset).
+    cid: usize,
+    /// Serialized requests not yet accepted by the socket.
+    outbox: Vec<u8>,
+    rbuf: Vec<u8>,
+    rlen: usize,
+    /// `(id, send time)` of requests awaiting responses, FIFO — the
+    /// server answers a connection in submission order.
+    inflight: VecDeque<(u64, Instant)>,
+    issued: usize,
+    next_id: u64,
+    dead: bool,
+}
+
+/// Drive a server with `opts.conns` persistent keep-alive connections
+/// cycling over `inputs`, each holding up to `opts.pipeline` requests in
+/// flight, at `target_qps` (or flat out).  Returns pooled latencies for
 /// `metrics::latency_summary`.
 pub fn run_load<A: ToSocketAddrs + Clone + Send + Sync>(
     addr: A,
@@ -113,37 +168,23 @@ pub fn run_load<A: ToSocketAddrs + Clone + Send + Sync>(
     anyhow::ensure!(opts.conns >= 1, "need at least one connection");
     anyhow::ensure!(!inputs.is_empty(), "need at least one input vector");
     let t0 = Instant::now();
+    // Per-connection pacing interval such that the aggregate hits
+    // target_qps when every connection keeps up.
     let interval = if opts.target_qps > 0.0 {
         Some(Duration::from_secs_f64(opts.conns as f64 / opts.target_qps))
     } else {
         None
     };
     let addr_ref = &addr;
-    let per_conn: Vec<Result<(Vec<f64>, usize)>> = std::thread::scope(|s| {
-        let handles: Vec<_> = (0..opts.conns)
-            .map(|c| {
-                s.spawn(move || -> Result<(Vec<f64>, usize)> {
-                    let mut client = Client::connect(addr_ref.clone())?;
-                    let mut lat = Vec::with_capacity(opts.requests_per_conn);
-                    let mut errors = 0usize;
-                    let start = Instant::now();
-                    for i in 0..opts.requests_per_conn {
-                        if let Some(iv) = interval {
-                            let due = start + iv.mul_f64(i as f64);
-                            let now = Instant::now();
-                            if due > now {
-                                std::thread::sleep(due - now);
-                            }
-                        }
-                        let x = &inputs[(c + i * opts.conns) % inputs.len()];
-                        let t = Instant::now();
-                        match client.predict(x) {
-                            Ok(_) => lat.push(t.elapsed().as_secs_f64()),
-                            Err(_) => errors += 1,
-                        }
-                    }
-                    Ok((lat, errors))
-                })
+    let chunks: Vec<(usize, usize)> = (0..opts.conns)
+        .step_by(CONNS_PER_WORKER)
+        .map(|start| (start, CONNS_PER_WORKER.min(opts.conns - start)))
+        .collect();
+    let per_chunk: Vec<Result<(Vec<f64>, usize)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = chunks
+            .iter()
+            .map(|&(start, count)| {
+                s.spawn(move || drive_chunk(addr_ref, start, count, inputs, opts, interval))
             })
             .collect();
         // analyze: allow(no-unwrap-in-fallible): a panicked load thread is a
@@ -156,11 +197,202 @@ pub fn run_load<A: ToSocketAddrs + Clone + Send + Sync>(
     let wall_s = t0.elapsed().as_secs_f64();
     let mut latencies_s = Vec::with_capacity(opts.conns * opts.requests_per_conn);
     let mut errors = 0;
-    for r in per_conn {
+    for r in per_chunk {
         let (lat, errs) = r?;
         latencies_s.extend(lat);
         errors += errs;
     }
     let ok = latencies_s.len();
     Ok(LoadReport { latencies_s, wall_s, ok, errors })
+}
+
+/// Connect with exponential backoff: a burst of hundreds of simultaneous
+/// connects can transiently overflow the listener backlog.
+fn connect_backoff<A: ToSocketAddrs>(addr: &A) -> Result<TcpStream> {
+    let mut delay = Duration::from_millis(5);
+    for _ in 0..6 {
+        if let Ok(s) = TcpStream::connect(addr) {
+            return Ok(s);
+        }
+        std::thread::sleep(delay);
+        delay *= 2;
+    }
+    Ok(TcpStream::connect(addr)?)
+}
+
+/// One worker: an event loop multiplexing `count` persistent connections.
+fn drive_chunk<A: ToSocketAddrs>(
+    addr: &A,
+    start: usize,
+    count: usize,
+    inputs: &[Vec<f32>],
+    opts: LoadOpts,
+    interval: Option<Duration>,
+) -> Result<(Vec<f64>, usize)> {
+    let total = opts.requests_per_conn;
+    let window = opts.pipeline.max(1);
+    let mut conns: Vec<LoadConn> = Vec::with_capacity(count);
+    for k in 0..count {
+        let stream = connect_backoff(addr)?;
+        let _ = stream.set_nodelay(true);
+        stream.set_nonblocking(true)?;
+        conns.push(LoadConn {
+            stream,
+            cid: start + k,
+            outbox: Vec::with_capacity(16 * 1024),
+            rbuf: vec![0u8; 64 * 1024],
+            rlen: 0,
+            inflight: VecDeque::with_capacity(window),
+            issued: 0,
+            next_id: 0,
+            dead: false,
+        });
+    }
+    let mut poller = Poller::with_capacity(count);
+    let mut lat: Vec<f64> = Vec::with_capacity(count * total);
+    let mut errors = 0usize;
+    let run_start = Instant::now();
+    loop {
+        // Admission: refill each connection's pipeline window.
+        let mut all_done = true;
+        for conn in &mut conns {
+            if conn.dead {
+                continue;
+            }
+            while conn.issued < total && conn.inflight.len() < window {
+                if let Some(iv) = interval {
+                    if Instant::now() < run_start + iv.mul_f64(conn.issued as f64) {
+                        break; // paced: not due yet
+                    }
+                }
+                let x = &inputs[(conn.cid + conn.issued * opts.conns) % inputs.len()];
+                let id = conn.next_id;
+                conn.next_id += 1;
+                protocol::write_request(&mut conn.outbox, id, x);
+                conn.outbox.push(b'\n');
+                conn.inflight.push_back((id, Instant::now()));
+                conn.issued += 1;
+            }
+            if !(conn.issued == total && conn.inflight.is_empty() && conn.outbox.is_empty()) {
+                all_done = false;
+            }
+        }
+        if all_done {
+            break;
+        }
+        poller.clear();
+        for (k, conn) in conns.iter().enumerate() {
+            if conn.dead {
+                continue;
+            }
+            let mut interest = 0i16;
+            if !conn.inflight.is_empty() {
+                interest |= POLLIN;
+            }
+            if !conn.outbox.is_empty() {
+                interest |= POLLOUT;
+            }
+            if interest != 0 {
+                poller.register(&conn.stream, k, interest);
+            }
+        }
+        if poller.is_empty() {
+            // Everything is paced-idle; sleep a tick and re-check.
+            std::thread::sleep(Duration::from_millis(1));
+            continue;
+        }
+        poller.poll(if interval.is_some() { 1 } else { 50 });
+        for e in 0..poller.len() {
+            let (k, rev) = poller.entry(e);
+            let conn = &mut conns[k];
+            if rev & POLLOUT != 0 {
+                pump_writes(conn);
+            }
+            if rev & (POLLIN | POLLHUP | POLLERR) != 0 {
+                pump_reads(conn, &mut lat, &mut errors);
+            }
+        }
+        for conn in &mut conns {
+            if conn.dead && (!conn.inflight.is_empty() || conn.issued < total) {
+                // A died connection fails its outstanding window and
+                // everything it never got to send.
+                errors += conn.inflight.len() + (total - conn.issued);
+                conn.inflight.clear();
+                conn.issued = total;
+                conn.outbox.clear();
+            }
+        }
+    }
+    Ok((lat, errors))
+}
+
+fn pump_writes(conn: &mut LoadConn) {
+    while !conn.outbox.is_empty() {
+        match conn.stream.write(&conn.outbox) {
+            Ok(0) => {
+                conn.dead = true;
+                return;
+            }
+            Ok(n) => {
+                conn.outbox.drain(..n);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                return;
+            }
+        }
+    }
+}
+
+fn pump_reads(conn: &mut LoadConn, lat: &mut Vec<f64>, errors: &mut usize) {
+    loop {
+        if conn.rlen == conn.rbuf.len() {
+            // A response bigger than the read buffer is a protocol breach.
+            conn.dead = true;
+            return;
+        }
+        let LoadConn { stream, rbuf, rlen, .. } = conn;
+        let n = match stream.read(&mut rbuf[*rlen..]) {
+            Ok(0) => {
+                conn.dead = true;
+                break;
+            }
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                break;
+            }
+        };
+        *rlen += n;
+        let mut consumed = 0usize;
+        while let Some(rel) = conn.rbuf[consumed..conn.rlen].iter().position(|&b| b == b'\n') {
+            let end = consumed + rel;
+            let line = &conn.rbuf[consumed..end];
+            consumed = end + 1;
+            let text = String::from_utf8_lossy(line);
+            let trimmed = text.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            // FIFO matching: the server answers each connection in
+            // submission order, so this response closes the oldest
+            // in-flight request (error lines close it as a failure).
+            let Some((id, sent)) = conn.inflight.pop_front() else {
+                *errors += 1; // unsolicited line
+                continue;
+            };
+            match protocol::parse_response(trimmed) {
+                Ok(resp) if resp.id == id => lat.push(sent.elapsed().as_secs_f64()),
+                _ => *errors += 1,
+            }
+        }
+        if consumed > 0 {
+            conn.rbuf.copy_within(consumed..conn.rlen, 0);
+            conn.rlen -= consumed;
+        }
+    }
 }

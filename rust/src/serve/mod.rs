@@ -1,5 +1,5 @@
-//! Inference serving: a micro-batched prediction server over a
-//! dependency-free JSON line protocol on TCP.
+//! Inference serving: an event-driven, micro-batched prediction server
+//! over a dependency-free JSON line protocol on TCP.
 //!
 //! The paper's observation (§5) that ADMM compute is embarrassingly
 //! parallel in *sample columns* applies unchanged to inference: requests
@@ -10,34 +10,42 @@
 //! (`nn::io`, `gradfree train --save`) to answering network requests
 //! (`gradfree serve`).
 //!
-//! # Architecture
+//! # Architecture (C10K event loop)
 //!
 //! ```text
-//!  TCP clients ──► acceptor/handler pool ──► mpsc queue ──► batcher thread
-//!   (client.rs)      (server.rs, N threads)                  (batcher.rs)
-//!                                                          packs ≤ max_batch
-//!                                                          columns, waits
-//!                                                          ≤ max_wait_us,
-//!                                                          one forward pass,
-//!                                                          scatters replies
+//!  TCP clients ──► nonblocking listener ─► connection slab ─► batch window
+//!   (client.rs)     ╰────────── one event-loop thread (server.rs) ────────╯
+//!                    poll readiness (poll.rs) → per-connection state
+//!                    machine: read → parse in place (protocol.rs) → stage
+//!                    into the batch arena → forward (batcher.rs) → write
 //! ```
 //!
-//! * [`BatchEngine`] (batcher.rs) owns the weights and a reusable
-//!   [`crate::nn::MlpWorkspace`]; after the first maximal batch warms the
-//!   buffers, the gather → forward → scatter cycle performs **zero heap
-//!   allocations** (pinned by `tests/alloc_regression.rs`).  Because every
-//!   GEMM kernel accumulates each output element in a batch-width-
-//!   independent order (`linalg::gemm`), a request's scores are
-//!   bit-identical whether it rides a full micro-batch or a singleton.
-//! * The batcher (one thread) drains the queue: it dispatches as soon as
-//!   `max_batch` requests are staged or `max_wait_us` has elapsed since the
-//!   first staged request — latency is bounded by one wait window plus one
-//!   forward pass.
-//! * The server (server.rs) runs a fixed pool of `threads` handler threads,
-//!   each accepting and serving one connection at a time; a pipelined burst
-//!   of lines on one connection is drained into the same micro-batch.
-//!   Shutdown is graceful: stop flag + self-connect wake-ups, then the
-//!   batcher drains and joins.
+//! * One thread owns everything: a nonblocking listener plus a slab of
+//!   `max_conns` connection slots, multiplexed with the level-triggered
+//!   readiness shim in `poll.rs`.  There is no thread pool and no channel
+//!   hop — the event loop *is* the batcher.  It dispatches the staged
+//!   batch as soon as `max_batch` requests are gathered or `max_wait_us`
+//!   has elapsed since the first staged request.
+//! * Requests are parsed **in place** from the connection read buffer
+//!   (`protocol::parse_line`) with features written straight into the
+//!   batch arena, and responses are serialized straight into the
+//!   connection write buffer — the steady-state predict path performs
+//!   **zero heap allocations socket-to-socket** (pinned by
+//!   `tests/alloc_regression.rs`).  Because every GEMM kernel accumulates
+//!   each output element in a batch-width-independent order
+//!   (`linalg::gemm`), a request's scores are bit-identical whether it
+//!   rides a full micro-batch or a singleton.
+//! * Backpressure is "stop registering": a connection whose write buffer
+//!   cannot reserve a full response, or whose requests cannot be staged,
+//!   is simply not polled for readability until capacity frees; when no
+//!   slot is free the listener itself is unregistered and the kernel
+//!   backlog holds new connections.  Nothing is dropped.
+//! * [`BatchEngine`] (batcher.rs) owns the weight ensemble behind an
+//!   `Arc` snapshot; `SIGHUP` or a `{"op":"reload"}` line makes the loop
+//!   re-read the checkpoint and atomically swap engines between batches —
+//!   in-flight connections are untouched (see server.rs).
+//! * Shutdown is graceful: stop flag + wake connect, one final dispatch,
+//!   then a bounded flush of pending write buffers.
 //!
 //! # Wire protocol (JSON lines over TCP)
 //!
@@ -50,11 +58,13 @@
 //! ← {"error": "…", "id": 7}                  malformed request / bad shape
 //! ```
 //!
-//! A line of `{"op":"stats"}` is a control request: it bypasses the
-//! batcher and answers with a Prometheus-style text block of live
-//! counters (requests, errors, batches, mean batch width, queue depth,
-//! request-latency p50/p95/p99 — see `stats.rs`).  With `--trace
-//! out.json` the batcher thread also records queue/batch/forward/write
+//! A line of `{"op":"stats"}` is a control request answered with a
+//! Prometheus-style text block of live counters (requests, errors,
+//! batches, connection counters, request-latency p50/p95/p99, and —
+//! always last — `serve_model_version`; see `stats.rs`).  A line of
+//! `{"op":"reload"}` re-reads the checkpoint the server was started from
+//! and answers `{"ok":"reload","version":N}` once the swap lands.  With
+//! `--trace out.json` the loop also records queue/batch/forward/write
 //! spans to a Chrome trace-event file written on shutdown.
 //!
 //! `id` is an opaque non-negative integer echoed back so pipelining clients
@@ -63,10 +73,11 @@
 //! regression value for `l2` checkpoints, the predicted class for
 //! `multihinge`); binary-hinge responses omit it, keeping their wire
 //! format byte-identical to the pre-`Problem` protocol (clients compare
-//! `y[0]` against the 0.5 threshold, i.e. `Problem::decode`).  Checkpoints
-//! use the self-describing `GFADMM02` binary format (problem-kind-aware;
-//! legacy `GFADMM01` files load as binary hinge) documented in `nn/io.rs`
-//! and EXPERIMENTS.md §Serving.
+//! `y[0]` against the 0.5 threshold, i.e. `Problem::decode`).  The wire
+//! format is unchanged from the thread-pool server — only the engine
+//! behind it moved.  Checkpoints use the self-describing `GFADMM02`
+//! binary format (problem-kind-aware; legacy `GFADMM01` files load as
+//! binary hinge) documented in `nn/io.rs` and EXPERIMENTS.md §Serving.
 //!
 //! # Quickstart
 //!
@@ -74,19 +85,22 @@
 //! gradfree train --preset quickstart --save model.gfadmm
 //! gradfree serve --model model.gfadmm --port 7878 &
 //! printf '{"id":1,"x":[0.1,…]}\n' | nc 127.0.0.1 7878
+//! kill -HUP $(pidof gradfree)        # hot-reload model.gfadmm in place
 //! cargo bench --bench serve          # latency/throughput, BENCH_SERVE.json
 //! ```
 
 pub mod batcher;
 pub mod client;
+pub mod poll;
 pub mod protocol;
 pub mod server;
 pub mod stats;
 
-pub use batcher::{argmax, BatchEngine, BatchJob, BatchReply, Batcher};
+pub use batcher::{argmax, BatchEngine};
 pub use client::{run_load, Client, LoadOpts, LoadReport};
 pub use stats::ServeStats;
 pub use protocol::{
-    error_line, parse_request, parse_response, request_line, response_line, Request, Response,
+    error_line, parse_line, parse_request, parse_response, request_line, response_line,
+    ParsedLine, ProtoError, Request, Response,
 };
 pub use server::Server;

@@ -1,8 +1,26 @@
 //! The serve wire protocol: one JSON object per line (see `serve` module
-//! docs for the grammar).  Built on `config::json` — requests and
-//! responses are parsed and emitted through the same `Json` tree the rest
-//! of the repo uses, so the protocol inherits its escape handling and the
-//! non-finite → `null` serialization rule.
+//! docs for the grammar), parsed **in place** from the connection's read
+//! buffer and serialized straight into its write buffer.
+//!
+//! The hot path never builds a `config::json` value tree: [`parse_line`]
+//! walks the raw bytes of one request line, appending feature values to
+//! the caller's recycled arena, unescaping field names into a bounded
+//! stack scratch ([`ESCAPE_SCRATCH`] bytes — longer keys can only be
+//! unknown fields, which are validated and skipped), and reporting
+//! failures as typed [`ProtoError`]s.  [`write_response`]/[`write_error`]
+//! append response bytes to a preallocated `Vec<u8>` whose capacity the
+//! server reserves up front, so a steady-state predict request allocates
+//! nothing from socket to socket (pinned end-to-end by
+//! `tests/alloc_regression.rs`).
+//!
+//! **The wire format is unchanged** from the value-tree protocol:
+//! [`push_num`] reproduces the `config::json` `Json::Num` rules exactly
+//! (non-finite → `null`, integral magnitudes below 1e15 print as
+//! integers, everything else shortest-round-trip `{n}`), responses keep
+//! the alphabetical `argmax`,`id`[,`pred`],`y` field order the old
+//! `BTreeMap` emission produced, and string escaping matches
+//! `config::json`'s `write_escaped`.  The byte-parity tests below pin
+//! representative lines verbatim.
 //!
 //! f32 fidelity: scores travel as JSON numbers printed from `f64`.  An
 //! `f32` widened to `f64` is exact, Rust's shortest-round-trip formatting
@@ -10,14 +28,23 @@
 //! `f32` — so `parse_response(response_line(..))` returns bit-identical
 //! scores (asserted by `roundtrip_preserves_f32_bits` below).  The one
 //! exception: JSON has no NaN/Infinity literals, so non-finite scores
-//! (possible with a non-finite checkpoint or an f32 overflow in the
-//! forward pass) serialize as `null`, which `parse_response` reads back
-//! as NaN rather than rejecting the response.
-
-use std::collections::BTreeMap;
+//! serialize as `null`, which `parse_response` reads back as NaN.
 
 use crate::config::Json;
 use crate::Result;
+
+/// Parser-internal result carrying a typed [`ProtoError`] (the crate-wide
+/// `Result` alias is anyhow-only).
+type PResult<T> = std::result::Result<T, ProtoError>;
+
+/// Bounded per-string unescape scratch: field names and `"op"` values
+/// decode into a stack buffer of this size.  Longer strings still parse
+/// (and are length-tracked for exact matching) but cannot name a known
+/// field, which is correct — every known name is short.
+pub const ESCAPE_SCRATCH: usize = 64;
+
+/// JSON nesting depth cap for skipped unknown-field values.
+const MAX_DEPTH: usize = 32;
 
 /// A parsed predict request: `{"id": N, "x": [..]}`.
 #[derive(Clone, Debug, PartialEq)]
@@ -43,6 +70,547 @@ pub struct Response {
     pub pred: Option<f32>,
 }
 
+/// What one well-formed request line asks for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParsedLine {
+    /// A predict request.  `count` is the number of feature values the
+    /// line carried (the parser appends `min(count, cap)` of them to the
+    /// arena); the server compares `count` against the model's input
+    /// dimension.
+    Predict { id: u64, count: usize },
+    /// `{"op":"stats"}` — answer with the live counter block.
+    Stats,
+    /// `{"op":"reload"}` — re-read the checkpoint and swap weights.
+    Reload,
+}
+
+/// Typed parse failures, each displayable as the wire error message.
+/// `at` offsets are byte positions within the request line.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProtoError {
+    /// Structural failure: `what` was expected at byte `at`.
+    Syntax { what: &'static str, at: usize },
+    /// A string escape that isn't legal JSON (`\q`, `\uZZZZ`, …).
+    BadEscape { at: usize },
+    /// A number-shaped token `f64::from_str` rejected (`1e`, `--3`, …).
+    BadNumber { at: usize },
+    /// Unknown-field value nested deeper than [`MAX_DEPTH`].
+    TooDeep { at: usize },
+    /// Non-whitespace bytes after the closing `}`.
+    Trailing { at: usize },
+    /// The same known field appeared twice.
+    DuplicateField { name: &'static str },
+    MissingId,
+    MissingFeatures,
+    EmptyFeatures,
+    /// `id` is not a non-negative integer ≤ 2^53.
+    BadId,
+    /// A non-number inside the `x` array, at byte `at`.
+    BadFeature { at: usize },
+    /// An `"op"` value other than `stats`/`reload`.
+    UnknownOp,
+    /// The line is not a JSON object.
+    NotAnObject,
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            ProtoError::Syntax { what, at } => write!(f, "bad request: expected {what} at byte {at}"),
+            ProtoError::BadEscape { at } => write!(f, "bad request: invalid string escape at byte {at}"),
+            ProtoError::BadNumber { at } => write!(f, "bad request: malformed number at byte {at}"),
+            ProtoError::TooDeep { at } => write!(f, "bad request: nesting too deep at byte {at}"),
+            ProtoError::Trailing { at } => write!(f, "bad request: trailing bytes at byte {at}"),
+            ProtoError::DuplicateField { name } => write!(f, "bad request: duplicate field \"{name}\""),
+            ProtoError::MissingId => f.write_str("missing field \"id\""),
+            ProtoError::MissingFeatures => f.write_str("missing field \"x\""),
+            ProtoError::EmptyFeatures => f.write_str("empty feature vector"),
+            ProtoError::BadId => f.write_str("id must be a non-negative integer"),
+            ProtoError::BadFeature { at } => write!(f, "\"x\" must be an array of numbers (byte {at})"),
+            ProtoError::UnknownOp => f.write_str("unknown op (want \"stats\" or \"reload\")"),
+            ProtoError::NotAnObject => f.write_str("bad request: expected a JSON object"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+/// Parse one request line in place.  Feature values are appended to `xs`
+/// (the server's recycled flat arena) — at most `cap` of them, though the
+/// returned `count` keeps counting past the cap so shape errors can say
+/// how many the line carried.  On any error `xs` is truncated back to
+/// its starting length, so a failed parse leaves the arena untouched.
+pub fn parse_line(line: &[u8], xs: &mut Vec<f32>, cap: usize) -> PResult<ParsedLine> {
+    let mark = xs.len();
+    let mut p = P { b: line, i: 0 };
+    let out = p.parse_request_obj(xs, cap);
+    if out.is_err() {
+        xs.truncate(mark);
+    }
+    out
+}
+
+/// Which known field a key names.
+enum Key {
+    Id,
+    X,
+    Op,
+    Other,
+}
+
+struct P<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl P<'_> {
+    fn skip_ws(&mut self) {
+        while matches!(self.b.get(self.i), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    /// Consume `c` if it is next; report whether it was.
+    fn eat(&mut self, c: u8) -> bool {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek();
+        if c.is_some() {
+            self.i += 1;
+        }
+        c
+    }
+
+    fn parse_request_obj(&mut self, xs: &mut Vec<f32>, cap: usize) -> PResult<ParsedLine> {
+        self.skip_ws();
+        if !self.eat(b'{') {
+            return Err(ProtoError::NotAnObject);
+        }
+        let mut id: Option<u64> = None;
+        let mut count: Option<usize> = None;
+        let mut op: Option<ParsedLine> = None;
+        let mut scratch = [0u8; ESCAPE_SCRATCH];
+        self.skip_ws();
+        if !self.eat(b'}') {
+            loop {
+                self.skip_ws();
+                let klen = self.parse_string_into(&mut scratch)?;
+                let key = match (klen, &scratch[..klen.min(ESCAPE_SCRATCH)]) {
+                    (2, b"id") => Key::Id,
+                    (1, b"x") => Key::X,
+                    (2, b"op") => Key::Op,
+                    _ => Key::Other,
+                };
+                self.skip_ws();
+                if !self.eat(b':') {
+                    return Err(ProtoError::Syntax { what: "':'", at: self.i });
+                }
+                self.skip_ws();
+                match key {
+                    Key::Id => {
+                        if id.is_some() {
+                            return Err(ProtoError::DuplicateField { name: "id" });
+                        }
+                        let n = self.parse_number()?;
+                        if !(n >= 0.0 && n.fract() == 0.0 && n <= 2f64.powi(53)) {
+                            return Err(ProtoError::BadId);
+                        }
+                        id = Some(n as u64);
+                    }
+                    Key::X => {
+                        if count.is_some() {
+                            return Err(ProtoError::DuplicateField { name: "x" });
+                        }
+                        count = Some(self.parse_features(xs, cap)?);
+                    }
+                    Key::Op => {
+                        if op.is_some() {
+                            return Err(ProtoError::DuplicateField { name: "op" });
+                        }
+                        let vlen = self.parse_string_into(&mut scratch)?;
+                        op = Some(match (vlen, &scratch[..vlen.min(ESCAPE_SCRATCH)]) {
+                            (5, b"stats") => ParsedLine::Stats,
+                            (6, b"reload") => ParsedLine::Reload,
+                            _ => return Err(ProtoError::UnknownOp),
+                        });
+                    }
+                    Key::Other => self.skip_value(0)?,
+                }
+                self.skip_ws();
+                if self.eat(b',') {
+                    continue;
+                }
+                if self.eat(b'}') {
+                    break;
+                }
+                return Err(ProtoError::Syntax { what: "',' or '}'", at: self.i });
+            }
+        }
+        self.skip_ws();
+        if self.i != self.b.len() {
+            return Err(ProtoError::Trailing { at: self.i });
+        }
+        // A control op wins over any predict fields riding along (the old
+        // server's substring detection had the same precedence).
+        if let Some(ctrl) = op {
+            return Ok(ctrl);
+        }
+        let id = id.ok_or(ProtoError::MissingId)?;
+        let count = count.ok_or(ProtoError::MissingFeatures)?;
+        if count == 0 {
+            return Err(ProtoError::EmptyFeatures);
+        }
+        Ok(ParsedLine::Predict { id, count })
+    }
+
+    /// Parse a JSON string, unescaping into `out` (first
+    /// [`ESCAPE_SCRATCH`] bytes).  Returns the full unescaped length, so
+    /// callers can distinguish `"id"` from a longer key whose stored
+    /// prefix happens to match.
+    fn parse_string_into(&mut self, out: &mut [u8; ESCAPE_SCRATCH]) -> PResult<usize> {
+        if !self.eat(b'"') {
+            return Err(ProtoError::Syntax { what: "'\"'", at: self.i });
+        }
+        let mut n = 0usize;
+        let mut push = |out: &mut [u8; ESCAPE_SCRATCH], n: &mut usize, b: u8| {
+            if *n < ESCAPE_SCRATCH {
+                out[*n] = b;
+            }
+            *n += 1;
+        };
+        loop {
+            let at = self.i;
+            let c = self.bump().ok_or(ProtoError::Syntax { what: "closing '\"'", at })?;
+            match c {
+                b'"' => return Ok(n),
+                b'\\' => {
+                    let e = self.bump().ok_or(ProtoError::BadEscape { at })?;
+                    match e {
+                        b'"' => push(out, &mut n, b'"'),
+                        b'\\' => push(out, &mut n, b'\\'),
+                        b'/' => push(out, &mut n, b'/'),
+                        b'n' => push(out, &mut n, b'\n'),
+                        b't' => push(out, &mut n, b'\t'),
+                        b'r' => push(out, &mut n, b'\r'),
+                        b'b' => push(out, &mut n, 0x08),
+                        b'f' => push(out, &mut n, 0x0c),
+                        b'u' => {
+                            let cp = self.hex4().ok_or(ProtoError::BadEscape { at })?;
+                            let ch = char::from_u32(cp).unwrap_or('\u{FFFD}');
+                            let mut utf8 = [0u8; 4];
+                            for &b in ch.encode_utf8(&mut utf8).as_bytes() {
+                                push(out, &mut n, b);
+                            }
+                        }
+                        _ => return Err(ProtoError::BadEscape { at }),
+                    }
+                }
+                c => push(out, &mut n, c),
+            }
+        }
+    }
+
+    /// Four hex digits after `\u`.
+    fn hex4(&mut self) -> Option<u32> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let d = match self.bump()? {
+                c @ b'0'..=b'9' => (c - b'0') as u32,
+                c @ b'a'..=b'f' => (c - b'a') as u32 + 10,
+                c @ b'A'..=b'F' => (c - b'A') as u32 + 10,
+                _ => return None,
+            };
+            v = v * 16 + d;
+        }
+        Some(v)
+    }
+
+    /// Scan a number-shaped token and parse it with `f64::from_str` (the
+    /// same accept set the value-tree parser had).
+    fn parse_number(&mut self) -> PResult<f64> {
+        let start = self.i;
+        while matches!(self.peek(), Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')) {
+            self.i += 1;
+        }
+        if self.i == start {
+            return Err(ProtoError::Syntax { what: "a number", at: start });
+        }
+        // The scanned bytes are pure ASCII, so from_utf8 cannot fail.
+        let text = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| ProtoError::BadNumber { at: start })?;
+        text.parse::<f64>().map_err(|_| ProtoError::BadNumber { at: start })
+    }
+
+    /// Parse the `x` array, appending up to `cap` values to `xs`; the
+    /// return value counts every element in the line.
+    fn parse_features(&mut self, xs: &mut Vec<f32>, cap: usize) -> PResult<usize> {
+        if !self.eat(b'[') {
+            return Err(ProtoError::Syntax { what: "'['", at: self.i });
+        }
+        self.skip_ws();
+        if self.eat(b']') {
+            return Ok(0);
+        }
+        let mut n = 0usize;
+        loop {
+            self.skip_ws();
+            let at = self.i;
+            let v = match self.parse_number() {
+                Ok(v) => v,
+                Err(ProtoError::Syntax { .. }) => return Err(ProtoError::BadFeature { at }),
+                Err(e) => return Err(e),
+            };
+            if n < cap {
+                xs.push(v as f32);
+            }
+            n += 1;
+            self.skip_ws();
+            if self.eat(b',') {
+                continue;
+            }
+            if self.eat(b']') {
+                return Ok(n);
+            }
+            return Err(ProtoError::Syntax { what: "',' or ']'", at: self.i });
+        }
+    }
+
+    /// Validate-and-discard any JSON value (unknown fields).
+    fn skip_value(&mut self, depth: usize) -> PResult<()> {
+        if depth > MAX_DEPTH {
+            return Err(ProtoError::TooDeep { at: self.i });
+        }
+        self.skip_ws();
+        match self.peek() {
+            Some(b'"') => self.skip_string(),
+            Some(b'{') => {
+                self.i += 1;
+                self.skip_ws();
+                if self.eat(b'}') {
+                    return Ok(());
+                }
+                loop {
+                    self.skip_ws();
+                    self.skip_string()?;
+                    self.skip_ws();
+                    if !self.eat(b':') {
+                        return Err(ProtoError::Syntax { what: "':'", at: self.i });
+                    }
+                    self.skip_value(depth + 1)?;
+                    self.skip_ws();
+                    if self.eat(b',') {
+                        continue;
+                    }
+                    if self.eat(b'}') {
+                        return Ok(());
+                    }
+                    return Err(ProtoError::Syntax { what: "',' or '}'", at: self.i });
+                }
+            }
+            Some(b'[') => {
+                self.i += 1;
+                self.skip_ws();
+                if self.eat(b']') {
+                    return Ok(());
+                }
+                loop {
+                    self.skip_value(depth + 1)?;
+                    self.skip_ws();
+                    if self.eat(b',') {
+                        continue;
+                    }
+                    if self.eat(b']') {
+                        return Ok(());
+                    }
+                    return Err(ProtoError::Syntax { what: "',' or ']'", at: self.i });
+                }
+            }
+            Some(b't') => self.eat_lit(b"true"),
+            Some(b'f') => self.eat_lit(b"false"),
+            Some(b'n') => self.eat_lit(b"null"),
+            Some(_) => self.parse_number().map(|_| ()),
+            None => Err(ProtoError::Syntax { what: "a value", at: self.i }),
+        }
+    }
+
+    /// Validate a string without storing it (long unknown keys/values).
+    fn skip_string(&mut self) -> PResult<()> {
+        if !self.eat(b'"') {
+            return Err(ProtoError::Syntax { what: "'\"'", at: self.i });
+        }
+        loop {
+            let at = self.i;
+            match self.bump().ok_or(ProtoError::Syntax { what: "closing '\"'", at })? {
+                b'"' => return Ok(()),
+                b'\\' => match self.bump().ok_or(ProtoError::BadEscape { at })? {
+                    b'"' | b'\\' | b'/' | b'n' | b't' | b'r' | b'b' | b'f' => {}
+                    b'u' => {
+                        self.hex4().ok_or(ProtoError::BadEscape { at })?;
+                    }
+                    _ => return Err(ProtoError::BadEscape { at }),
+                },
+                _ => {}
+            }
+        }
+    }
+
+    fn eat_lit(&mut self, lit: &'static [u8]) -> PResult<()> {
+        let at = self.i;
+        if self.b.len() >= at + lit.len() && &self.b[at..at + lit.len()] == lit {
+            self.i += lit.len();
+            Ok(())
+        } else {
+            Err(ProtoError::Syntax { what: "a value", at })
+        }
+    }
+}
+
+// ---- serialization (straight into the connection write buffer) --------
+
+/// Append `n` in the repo's canonical JSON number format — byte-identical
+/// to `config::json`'s `Json::Num` emission: non-finite → `null`,
+/// integral magnitudes below 1e15 (excluding `-0.0`) print as integers,
+/// everything else uses Rust's shortest-round-trip `{n}`.
+pub fn push_num(out: &mut Vec<u8>, n: f64) {
+    use std::io::Write as _;
+    if !n.is_finite() {
+        out.extend_from_slice(b"null");
+    } else if n.fract() == 0.0 && n.abs() < 1e15 && !(n == 0.0 && n.is_sign_negative()) {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{n}");
+    }
+}
+
+/// Append one success response line (no trailing newline), field order
+/// and number formatting byte-identical to the value-tree emission.
+pub fn write_response(out: &mut Vec<u8>, id: u64, y: &[f32], argmax: usize, pred: Option<f32>) {
+    out.extend_from_slice(b"{\"argmax\":");
+    push_num(out, argmax as f64);
+    out.extend_from_slice(b",\"id\":");
+    push_num(out, id as f64);
+    if let Some(p) = pred {
+        out.extend_from_slice(b",\"pred\":");
+        push_num(out, p as f64);
+    }
+    out.extend_from_slice(b",\"y\":[");
+    for (i, &v) in y.iter().enumerate() {
+        if i > 0 {
+            out.push(b',');
+        }
+        push_num(out, v as f64);
+    }
+    out.extend_from_slice(b"]}");
+}
+
+/// Append one request line (client side; no trailing newline).
+pub fn write_request(out: &mut Vec<u8>, id: u64, x: &[f32]) {
+    out.extend_from_slice(b"{\"id\":");
+    push_num(out, id as f64);
+    out.extend_from_slice(b",\"x\":[");
+    for (i, &v) in x.iter().enumerate() {
+        if i > 0 {
+            out.push(b',');
+        }
+        push_num(out, v as f64);
+    }
+    out.extend_from_slice(b"]}");
+}
+
+/// `fmt::Write` adapter that JSON-escapes into a byte buffer with the
+/// exact `config::json::write_escaped` rules.
+struct JsonStr<'a>(&'a mut Vec<u8>);
+
+impl std::fmt::Write for JsonStr<'_> {
+    fn write_str(&mut self, s: &str) -> std::fmt::Result {
+        use std::io::Write as _;
+        for ch in s.chars() {
+            match ch {
+                '"' => self.0.extend_from_slice(b"\\\""),
+                '\\' => self.0.extend_from_slice(b"\\\\"),
+                '\n' => self.0.extend_from_slice(b"\\n"),
+                '\r' => self.0.extend_from_slice(b"\\r"),
+                '\t' => self.0.extend_from_slice(b"\\t"),
+                c if (c as u32) < 0x20 => {
+                    let _ = write!(self.0, "\\u{:04x}", c as u32);
+                }
+                c => {
+                    let mut utf8 = [0u8; 4];
+                    self.0.extend_from_slice(c.encode_utf8(&mut utf8).as_bytes());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Append one error response line (no trailing newline), formatting the
+/// message straight into the buffer (no intermediate `String`).
+pub fn write_error(out: &mut Vec<u8>, id: Option<u64>, msg: std::fmt::Arguments<'_>) {
+    use std::fmt::Write as _;
+    out.extend_from_slice(b"{\"error\":\"");
+    let _ = JsonStr(out).write_fmt(msg);
+    out.push(b'"');
+    if let Some(id) = id {
+        out.extend_from_slice(b",\"id\":");
+        push_num(out, id as f64);
+    }
+    out.push(b'}');
+}
+
+// ---- the string API (tests, client, problem_regression) ---------------
+
+fn into_string(out: Vec<u8>) -> String {
+    // Serializers only emit UTF-8; lossy is a no-op (and total).
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Parse one request line (string API over [`parse_line`]; control ops
+/// are not predict requests and error here).
+pub fn parse_request(line: &str) -> Result<Request> {
+    let mut x = Vec::new();
+    match parse_line(line.as_bytes(), &mut x, usize::MAX) {
+        Ok(ParsedLine::Predict { id, .. }) => Ok(Request { id, x }),
+        Ok(_) => anyhow::bail!("control op, not a predict request"),
+        Err(e) => Err(anyhow::Error::new(e)),
+    }
+}
+
+/// Serialize one request line (client side; no trailing newline).
+pub fn request_line(id: u64, x: &[f32]) -> String {
+    let mut out = Vec::new();
+    write_request(&mut out, id, x);
+    into_string(out)
+}
+
+/// Serialize one success response line (no trailing newline).  `pred` is
+/// the problem-decoded prediction; `None` (every binary-hinge response)
+/// emits the legacy field set unchanged.
+pub fn response_line(id: u64, y: &[f32], argmax: usize, pred: Option<f32>) -> String {
+    let mut out = Vec::new();
+    write_response(&mut out, id, y, argmax, pred);
+    into_string(out)
+}
+
+/// Serialize one error response line (no trailing newline).  `id` is
+/// echoed when the request parsed far enough to recover one.
+pub fn error_line(id: Option<u64>, msg: &str) -> String {
+    let mut out = Vec::new();
+    write_error(&mut out, id, format_args!("{msg}"));
+    into_string(out)
+}
+
 fn id_of(v: &Json) -> Result<u64> {
     let n = v.field("id")?.as_f64()?;
     anyhow::ensure!(
@@ -52,60 +620,9 @@ fn id_of(v: &Json) -> Result<u64> {
     Ok(n as u64)
 }
 
-/// Parse one request line.
-pub fn parse_request(line: &str) -> Result<Request> {
-    let v = Json::parse(line)?;
-    let id = id_of(&v)?;
-    let xs = v.field("x")?.as_arr()?;
-    anyhow::ensure!(!xs.is_empty(), "empty feature vector");
-    let x = xs
-        .iter()
-        .map(|e| e.as_f64().map(|f| f as f32))
-        .collect::<Result<Vec<f32>>>()?;
-    Ok(Request { id, x })
-}
-
-/// Serialize one request line (client side; no trailing newline).
-pub fn request_line(id: u64, x: &[f32]) -> String {
-    let mut m = BTreeMap::new();
-    m.insert("id".to_string(), Json::Num(id as f64));
-    m.insert(
-        "x".to_string(),
-        Json::Arr(x.iter().map(|&v| Json::Num(v as f64)).collect()),
-    );
-    Json::Obj(m).to_string_compact()
-}
-
-/// Serialize one success response line (no trailing newline).  `pred` is
-/// the problem-decoded prediction; `None` (every binary-hinge response)
-/// emits the legacy field set unchanged.
-pub fn response_line(id: u64, y: &[f32], argmax: usize, pred: Option<f32>) -> String {
-    let mut m = BTreeMap::new();
-    m.insert("argmax".to_string(), Json::Num(argmax as f64));
-    m.insert("id".to_string(), Json::Num(id as f64));
-    if let Some(p) = pred {
-        m.insert("pred".to_string(), Json::Num(p as f64));
-    }
-    m.insert(
-        "y".to_string(),
-        Json::Arr(y.iter().map(|&v| Json::Num(v as f64)).collect()),
-    );
-    Json::Obj(m).to_string_compact()
-}
-
-/// Serialize one error response line (no trailing newline).  `id` is
-/// echoed when the request parsed far enough to recover one.
-pub fn error_line(id: Option<u64>, msg: &str) -> String {
-    let mut m = BTreeMap::new();
-    m.insert("error".to_string(), Json::Str(msg.to_string()));
-    if let Some(id) = id {
-        m.insert("id".to_string(), Json::Num(id as f64));
-    }
-    Json::Obj(m).to_string_compact()
-}
-
 /// Parse one response line; a protocol-level `{"error": ..}` response
-/// becomes an `Err` carrying the server's message.
+/// becomes an `Err` carrying the server's message.  (Client side — the
+/// value tree is fine off the server's hot path.)
 pub fn parse_response(line: &str) -> Result<Response> {
     let v = Json::parse(line)?;
     if let Some(e) = v.get("error") {
@@ -213,6 +730,11 @@ mod tests {
         assert_eq!(error_line(None, "bad"), r#"{"error":"bad"}"#);
         let err = parse_response(r#"{"error":"boom","id":3}"#).unwrap_err();
         assert!(err.to_string().contains("boom"));
+        // Message escaping matches config::json's write_escaped.
+        assert_eq!(
+            error_line(None, "a\"b\\c\nd\u{1}"),
+            "{\"error\":\"a\\\"b\\\\c\\nd\\u0001\"}"
+        );
     }
 
     #[test]
@@ -230,5 +752,97 @@ mod tests {
         assert!(r.y[0].is_nan() && r.y[2].is_nan());
         assert_eq!(r.y[1], 0.5);
         assert_eq!(r.argmax, 1);
+    }
+
+    // ---- the in-place parser's typed surface --------------------------
+
+    fn parse(line: &str) -> PResult<ParsedLine> {
+        let mut xs = Vec::new();
+        parse_line(line.as_bytes(), &mut xs, usize::MAX)
+    }
+
+    #[test]
+    fn typed_errors_name_the_failure() {
+        assert_eq!(parse("not json"), Err(ProtoError::NotAnObject));
+        assert_eq!(parse("[1,2]"), Err(ProtoError::NotAnObject));
+        assert_eq!(parse(r#"{"x":[1]}"#), Err(ProtoError::MissingId));
+        assert_eq!(parse(r#"{"id":1}"#), Err(ProtoError::MissingFeatures));
+        assert_eq!(parse(r#"{"id":1,"x":[]}"#), Err(ProtoError::EmptyFeatures));
+        assert_eq!(parse(r#"{"id":-1,"x":[1]}"#), Err(ProtoError::BadId));
+        assert_eq!(parse(r#"{"id":1.5,"x":[1]}"#), Err(ProtoError::BadId));
+        assert_eq!(parse(r#"{"id":9007199254740994,"x":[1]}"#), Err(ProtoError::BadId));
+        assert_eq!(parse(r#"{"id":1,"x":["a"]}"#), Err(ProtoError::BadFeature { at: 13 }));
+        assert_eq!(parse(r#"{"id":1,"x":[1],"id":2}"#), Err(ProtoError::DuplicateField { name: "id" }));
+        assert_eq!(parse(r#"{"op":"gc"}"#), Err(ProtoError::UnknownOp));
+        assert_eq!(parse(r#"{"id":1,"x":[1]} extra"#), Err(ProtoError::Trailing { at: 17 }));
+        assert_eq!(parse(r#"{"id":1,"x":[1e]}"#), Err(ProtoError::BadNumber { at: 13 }));
+        assert_eq!(parse(r#"{"\uZZZZ":1,"id":1,"x":[1]}"#), Err(ProtoError::BadEscape { at: 2 }));
+        assert!(matches!(parse(r#"{"id":"#), Err(ProtoError::Syntax { .. })));
+        assert!(matches!(parse("{"), Err(ProtoError::Syntax { .. })));
+    }
+
+    #[test]
+    fn control_ops_and_field_escapes() {
+        assert_eq!(parse(r#"{"op":"stats"}"#), Ok(ParsedLine::Stats));
+        assert_eq!(parse(r#"{"op":"reload"}"#), Ok(ParsedLine::Reload));
+        assert_eq!(parse(r#"  {"op" : "stats"}  "#), Ok(ParsedLine::Stats));
+        // op wins over predict fields riding along (old precedence)
+        assert_eq!(parse(r#"{"op":"stats","id":1,"x":[1]}"#), Ok(ParsedLine::Stats));
+        // escaped field names unescape before matching: "\u0069d" == "id"
+        assert_eq!(
+            parse(r#"{"\u0069d":4,"x":[1,2]}"#),
+            Ok(ParsedLine::Predict { id: 4, count: 2 })
+        );
+    }
+
+    #[test]
+    fn unknown_fields_are_validated_and_skipped() {
+        assert_eq!(
+            parse(r#"{"meta":{"a":[1,{"b":null}],"s":"x"},"id":9,"x":[1],"flag":true}"#),
+            Ok(ParsedLine::Predict { id: 9, count: 1 })
+        );
+        // ...but they must still be well-formed JSON
+        assert!(matches!(
+            parse(r#"{"meta":{"a":},"id":9,"x":[1]}"#),
+            Err(ProtoError::Syntax { .. })
+        ));
+        // and bounded in depth
+        let mut deep = String::from(r#"{"id":1,"x":[1],"d":"#);
+        for _ in 0..64 {
+            deep.push('[');
+        }
+        for _ in 0..64 {
+            deep.push(']');
+        }
+        deep.push('}');
+        assert!(matches!(parse(&deep), Err(ProtoError::TooDeep { .. })));
+    }
+
+    #[test]
+    fn arena_cap_stores_prefix_but_counts_all() {
+        let mut xs = vec![7.0f32]; // pre-existing arena content survives
+        let got = parse_line(br#"{"id":1,"x":[1,2,3,4,5]}"#, &mut xs, 3).unwrap();
+        assert_eq!(got, ParsedLine::Predict { id: 1, count: 5 });
+        assert_eq!(xs, vec![7.0, 1.0, 2.0, 3.0]);
+        // a failed parse truncates back to the pre-call arena
+        let before = xs.clone();
+        assert!(parse_line(br#"{"id":1,"x":[1,2,oops]}"#, &mut xs, 10).is_err());
+        assert_eq!(xs, before);
+    }
+
+    #[test]
+    fn in_place_serializers_match_string_api() {
+        let mut buf = Vec::new();
+        write_response(&mut buf, 7, &[0.125, 2.5], 1, None);
+        assert_eq!(buf, response_line(7, &[0.125, 2.5], 1, None).as_bytes());
+        buf.clear();
+        write_response(&mut buf, 3, &[1.5], 0, Some(1.5));
+        assert_eq!(buf, br#"{"argmax":0,"id":3,"pred":1.5,"y":[1.5]}"#);
+        buf.clear();
+        write_error(&mut buf, Some(3), format_args!("boom"));
+        assert_eq!(buf, br#"{"error":"boom","id":3}"#);
+        buf.clear();
+        write_request(&mut buf, 42, &[0.5, -1.25, 3.0]);
+        assert_eq!(buf, request_line(42, &[0.5, -1.25, 3.0]).as_bytes());
     }
 }

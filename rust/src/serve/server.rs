@@ -1,48 +1,85 @@
-//! The TCP front of the serve subsystem: a fixed pool of handler threads
-//! accepting connections on a shared listener, speaking the line protocol
-//! (`protocol.rs`) and feeding the micro-batcher (`batcher.rs`).
+//! The TCP front of the serve subsystem: one event-loop thread driving
+//! every connection through a nonblocking readiness loop (`poll.rs`),
+//! speaking the line protocol (`protocol.rs`) in place and running the
+//! batch engine (`batcher.rs`) directly — there is no handler pool and no
+//! batcher thread anymore.
 //!
 //! Design notes:
 //!
-//! * **Fixed thread pool, connection-per-thread.**  Each of the
-//!   `ServeConfig::threads` handler threads accepts one connection at a
-//!   time on a `try_clone` of the listener and serves it to completion —
-//!   the pool size bounds concurrent connections, and there is no
-//!   per-connection spawn on the accept path.
-//! * **Pipelining.**  After the blocking read of a request line, any
-//!   further complete lines already buffered on the connection are drained
-//!   and submitted in the same burst, so a client that writes N requests
-//!   back-to-back gets them packed into the same micro-batch.  Responses
-//!   are always written in request order.
+//! * **Event loop, connection slab.**  `ServeConfig::max_conns` slots,
+//!   each a [`Conn`] state machine (reading → parsing → batching →
+//!   writing) with a fixed read buffer and a bounded write buffer, both
+//!   recycled across connections on the same slot.  A generation counter
+//!   per slot keeps staged work from writing into a connection that died
+//!   and was replaced mid-batch.
+//! * **Backpressure is "don't register".**  A connection is polled
+//!   readable only while the loop can actually absorb another request:
+//!   the batch has room, the write buffer can reserve worst-case response
+//!   bytes, and the read buffer isn't full.  When the listener has no
+//!   free slot it isn't polled either — the kernel backlog holds new
+//!   connections instead of the server dropping them.
+//! * **Zero-alloc steady state.**  Requests parse straight out of the
+//!   read buffer into a recycled feature arena, responses serialize
+//!   straight into the write buffer, and the poll set rebuilds inside
+//!   preallocated vectors — `tests/alloc_regression.rs` pins the whole
+//!   accept→parse→batch→forward→serialize→write cycle at zero heap
+//!   allocations once warmed.
+//! * **The loop is the batcher.**  Parsed requests stage into the next
+//!   micro-batch; the batch dispatches when `max_batch` requests are
+//!   staged or `max_wait_us` has passed since the first.  Queue order is
+//!   preserved, so a connection's pipelined requests come back in
+//!   submission order.
+//! * **Hot reload.**  `SIGHUP` or `{"op":"reload"}` re-reads the
+//!   checkpoint at `ServeConfig::model_path` and swaps the engine between
+//!   batches — in-flight connections keep their sockets, the next batch
+//!   runs on the new weights, and `{"op":"reload"}` callers get
+//!   `{"ok":"reload","version":N}` (or an error line, with the old
+//!   weights still serving) once the swap lands.
 //! * **Graceful shutdown.**  `Server::shutdown` (also on Drop) raises a
-//!   stop flag, self-connects once per acceptor to unblock `accept`, joins
-//!   the pool, and finally drops the batcher, which drains its queue and
-//!   joins its thread.  Handlers read with a short timeout so an idle open
-//!   connection observes the flag within ~100 ms instead of pinning its
-//!   thread until the client closes.
+//!   stop flag; the loop notices within one poll timeout (≤ 100 ms),
+//!   dispatches whatever is staged, flushes write buffers briefly, and
+//!   exits, closing the listener and every connection.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::batcher::{BatchEngine, BatchJob, BatchReply, Batcher};
-use super::protocol;
+use super::batcher::{argmax, BatchEngine};
+use super::poll::{Poller, POLLERR, POLLHUP, POLLIN, POLLNVAL, POLLOUT};
+use super::protocol::{self, ParsedLine};
 use super::stats::ServeStats;
+use super::poll;
 use crate::config::{Activation, ServeConfig};
 use crate::linalg::Matrix;
 use crate::problem::Problem;
+use crate::trace::{Phase, Tracer};
 use crate::Result;
+
+/// Poll token for the listener (connection slots use their index).
+const LISTENER: usize = usize::MAX;
+
+/// Write-buffer bytes reserved before answering `{"op":"stats"}` (the
+/// rendered block is a few hundred bytes; 4 KiB leaves headroom).
+const STATS_RESERVE: usize = 4096;
+
+/// Write-buffer bytes reserved per pending `{"op":"reload"}` ack.
+const RELOAD_RESERVE: usize = 160;
+
+/// Worst-case serialized response (newline included) for an `out_dim`
+/// model: fixed fields plus 32 bytes per score covers the longest
+/// shortest-round-trip f64 print with separators.
+fn resp_max_for(out_dim: usize) -> usize {
+    (96 + 32 * out_dim).max(256)
+}
 
 /// A running inference server; shuts down gracefully on `shutdown` / Drop.
 pub struct Server {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
-    acceptors: Vec<JoinHandle<()>>,
-    batcher: Option<Batcher>,
+    thread: Option<JoinHandle<()>>,
     stats: Arc<ServeStats>,
 }
 
@@ -61,46 +98,22 @@ impl Server {
         cfg.validate()?;
         let engine = BatchEngine::new(ws, act, cfg.problem.unwrap_or(problem))?;
         let stats = Arc::new(ServeStats::new());
-        let batcher = Batcher::start_with(
-            engine,
-            cfg.max_batch,
-            Duration::from_micros(cfg.max_wait_us),
-            stats.clone(),
-            cfg.trace_path.clone(),
-        );
+        stats.set_model_version(1);
         let listener = TcpListener::bind(cfg.addr())
             .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr()))?;
+        listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
-        // Build the handle before spawning so an error partway through the
-        // pool (try_clone/spawn failing under fd or thread exhaustion)
-        // drops a Server whose cleanup stops and joins the acceptors
-        // already running — otherwise their submitter clones would keep
-        // the batcher alive and `?` would deadlock in Batcher::drop.
-        let mut server = Server {
-            addr,
-            stop: Arc::new(AtomicBool::new(false)),
-            acceptors: Vec::with_capacity(cfg.threads),
-            batcher: Some(batcher),
-            stats,
-        };
-        for i in 0..cfg.threads {
-            let l = listener.try_clone()?;
-            let stop = server.stop.clone();
-            // analyze: allow(no-unwrap-in-fallible): batcher is Some from
-            // construction above until Drop.
-            let tx = server.batcher.as_ref().expect("batcher running").submitter();
-            let stats = server.stats.clone();
-            server.acceptors.push(
-                std::thread::Builder::new()
-                    .name(format!("serve-conn-{i}"))
-                    .spawn(move || accept_loop(l, stop, tx, stats))
-                    .map_err(|e| anyhow::anyhow!("spawning handler thread: {e}"))?,
-            );
-        }
-        // The acceptors own listener clones; dropping the original here
-        // keeps the socket open exactly as long as the pool runs.
-        drop(listener);
-        Ok(server)
+        poll::install_sighup();
+        // Listener + conns + a few spare fds (checkpoint reads, wake
+        // connects); best-effort — a lower limit just caps concurrency.
+        let _ = poll::raise_nofile_limit(cfg.max_conns as u64 + 64);
+        let stop = Arc::new(AtomicBool::new(false));
+        let el = EventLoop::new(listener, engine, cfg, stats.clone(), stop.clone());
+        let thread = std::thread::Builder::new()
+            .name("serve-loop".into())
+            .spawn(move || el.run())
+            .map_err(|e| anyhow::anyhow!("spawning serve loop: {e}"))?;
+        Ok(Server { addr, stop, thread: Some(thread), stats })
     }
 
     /// The bound address (the real port when the config asked for 0).
@@ -117,35 +130,27 @@ impl Server {
         self.stats.clone()
     }
 
-    /// Graceful shutdown: stop accepting, finish in-flight connections,
-    /// drain the batcher.
+    /// Graceful shutdown: stop accepting, answer what's staged, flush.
     pub fn shutdown(mut self) {
         self.stop_and_join();
     }
 
-    /// Block until the pool exits (a stop flag raised by another handle —
+    /// Block until the loop exits (a stop flag raised by another handle —
     /// or forever, for the `gradfree serve` foreground process).
     pub fn wait(mut self) {
-        for t in self.acceptors.drain(..) {
+        if let Some(t) = self.thread.take() {
             let _ = t.join();
         }
-        self.batcher.take();
     }
 
     fn stop_and_join(&mut self) {
-        if self.stop.swap(true, Ordering::SeqCst) {
-            return; // already stopped
-        }
-        // One wake-up connect per (possibly accept-blocked) handler.
-        for _ in &self.acceptors {
-            let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(200));
-        }
-        for t in self.acceptors.drain(..) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake a poll that may be mid-timeout (also exercises the accept
+        // path one last time; the loop checks the flag before serving).
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(200));
+        if let Some(t) = self.thread.take() {
             let _ = t.join();
         }
-        // Last submitter handles died with the acceptors; this drains the
-        // queue and joins the batcher thread.
-        self.batcher.take();
     }
 }
 
@@ -155,167 +160,659 @@ impl Drop for Server {
     }
 }
 
-fn accept_loop(
-    listener: TcpListener,
-    stop: Arc<AtomicBool>,
-    tx: Sender<BatchJob>,
-    stats: Arc<ServeStats>,
-) {
-    loop {
-        match listener.accept() {
-            Ok((stream, _)) => {
-                if stop.load(Ordering::SeqCst) {
-                    return; // wake-up connect (or a straggler) — exit
-                }
-                let _ = handle_conn(stream, &tx, &stop, &stats);
-            }
-            Err(_) => {
-                if stop.load(Ordering::SeqCst) {
-                    return;
-                }
-                // Transient accept error (EMFILE, ECONNABORTED, …): back
-                // off instead of spinning.
-                std::thread::sleep(Duration::from_millis(10));
-            }
+/// Per-slot connection state.  Buffers persist across connections on the
+/// same slot (allocated at first accept, recycled thereafter); `gen`
+/// invalidates staged batch entries and reload waiters when the slot
+/// turns over.
+struct Conn {
+    stream: Option<TcpStream>,
+    gen: u64,
+    /// Fixed-size read buffer; `rlen` bytes are live.
+    rbuf: Vec<u8>,
+    rlen: usize,
+    /// Write buffer: bytes `wpos..` are pending on the socket.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Worst-case bytes reserved for staged-but-unwritten responses.
+    reserved: usize,
+    /// Fatal protocol error: flush what's buffered, then close.
+    closing: bool,
+    /// Complete line(s) left unparsed by backpressure — revisit when
+    /// batch/write capacity frees up, without waiting for new bytes.
+    dirty: bool,
+    last_active: Instant,
+}
+
+impl Conn {
+    fn vacant() -> Conn {
+        Conn {
+            stream: None,
+            gen: 0,
+            rbuf: Vec::new(),
+            rlen: 0,
+            wbuf: Vec::new(),
+            wpos: 0,
+            reserved: 0,
+            closing: false,
+            dirty: false,
+            last_active: Instant::now(),
         }
-        if stop.load(Ordering::SeqCst) {
-            return;
+    }
+
+    fn pending(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+}
+
+/// One staged predict request: features live in the loop's arena at
+/// `xoff`, the response goes to `slot` if its generation still matches.
+struct Staged {
+    slot: usize,
+    gen: u64,
+    id: u64,
+    xoff: usize,
+    submitted: Instant,
+}
+
+enum IoOutcome {
+    Progress,
+    Idle,
+    Close,
+}
+
+/// Nonblocking read into the connection's buffer until it fills or the
+/// socket runs dry.
+fn fill_rbuf(conn: &mut Conn) -> IoOutcome {
+    let mut progress = false;
+    loop {
+        if conn.rlen == conn.rbuf.len() {
+            break; // full — parse_conn decides between backpressure and oversize
+        }
+        let Conn { stream, rbuf, rlen, .. } = conn;
+        let Some(s) = stream.as_mut() else { return IoOutcome::Close };
+        match s.read(&mut rbuf[*rlen..]) {
+            Ok(0) => return IoOutcome::Close, // peer closed
+            Ok(n) => {
+                *rlen += n;
+                progress = true;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return IoOutcome::Close,
+        }
+    }
+    if progress {
+        IoOutcome::Progress
+    } else {
+        IoOutcome::Idle
+    }
+}
+
+/// Nonblocking write of the pending bytes; compacts the buffer when the
+/// socket blocks mid-flush (memmove within capacity — no allocation).
+fn drain_wbuf(conn: &mut Conn) -> IoOutcome {
+    loop {
+        if conn.wpos == conn.wbuf.len() {
+            conn.wbuf.clear();
+            conn.wpos = 0;
+            return IoOutcome::Progress;
+        }
+        let Conn { stream, wbuf, wpos, .. } = conn;
+        let Some(s) = stream.as_mut() else { return IoOutcome::Close };
+        match s.write(&wbuf[*wpos..]) {
+            Ok(0) => return IoOutcome::Close,
+            Ok(n) => *wpos += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                let len = wbuf.len();
+                wbuf.copy_within(*wpos..len, 0);
+                wbuf.truncate(len - *wpos);
+                *wpos = 0;
+                return IoOutcome::Idle;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return IoOutcome::Close,
         }
     }
 }
 
-/// What a drained request line turned into, in arrival order: a job the
-/// batcher will answer, an immediate parse-error response, or a stats
-/// block rendered at write time.
-enum Pending {
-    Submitted,
-    Error(String),
-    Stats,
+struct EventLoop {
+    listener: TcpListener,
+    conns: Vec<Conn>,
+    free: Vec<usize>,
+    poller: Poller,
+    engine: BatchEngine,
+    staged: Vec<Staged>,
+    /// Flat feature arena for the batch under assembly.
+    arena: Vec<f32>,
+    ybuf: Vec<f32>,
+    /// `(slot, gen)` of connections awaiting a reload ack.
+    waiters: Vec<(usize, u64)>,
+    stats: Arc<ServeStats>,
+    stop: Arc<AtomicBool>,
+    reload_pending: bool,
+    tracer: Tracer,
+    // Scalar config, copied out of ServeConfig at start:
+    max_batch: usize,
+    max_wait: Duration,
+    rcap: usize,
+    wcap: usize,
+    idle_timeout: Duration,
+    model_path: String,
+    problem_override: Option<Problem>,
+    trace_path: String,
+    resp_max: usize,
+    version: u64,
+    last_idle_check: Instant,
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    tx: &Sender<BatchJob>,
-    stop: &AtomicBool,
-    stats: &ServeStats,
-) -> std::io::Result<()> {
-    let _ = stream.set_nodelay(true);
-    // A read timeout keeps an idle connection from pinning its handler
-    // past shutdown: the blocking read below re-checks the stop flag every
-    // period instead of blocking until the client closes.
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
-    let mut writer = stream.try_clone()?;
-    // Sized for a pipelined burst of wide requests (a 648-feature line is
-    // ~8 KiB — the BufReader default — which would leave `buffer()` empty
-    // and defeat same-connection micro-batching).
-    let mut reader = BufReader::with_capacity(256 * 1024, stream);
-    // One reply channel per connection: the batcher preserves submission
-    // order, so responses pair with requests positionally.
-    let (rtx, rrx) = std::sync::mpsc::channel::<BatchReply>();
-    let mut line = String::new();
-    let mut pending: Vec<Pending> = Vec::new();
-    loop {
-        line.clear();
-        // Blocking read of the next request line, stop-aware: on timeout,
-        // bytes already read stay appended to `line` (the protocol is
-        // ASCII, so no multi-byte scalar can straddle a retry) and the
-        // next read_line call picks up where it left off.
-        loop {
-            match reader.read_line(&mut line) {
-                Ok(0) => return Ok(()), // client closed
-                Ok(_) => break,
-                Err(e)
-                    if e.kind() == std::io::ErrorKind::WouldBlock
-                        || e.kind() == std::io::ErrorKind::TimedOut =>
-                {
-                    if stop.load(Ordering::SeqCst) {
-                        return Ok(());
+impl EventLoop {
+    fn new(
+        listener: TcpListener,
+        engine: BatchEngine,
+        cfg: &ServeConfig,
+        stats: Arc<ServeStats>,
+        stop: Arc<AtomicBool>,
+    ) -> EventLoop {
+        let tracer = if cfg.trace_path.is_empty() {
+            Tracer::disabled()
+        } else {
+            Tracer::enabled(0, 1 << 16)
+        };
+        EventLoop {
+            listener,
+            conns: (0..cfg.max_conns).map(|_| Conn::vacant()).collect(),
+            free: (0..cfg.max_conns).rev().collect(),
+            poller: Poller::with_capacity(cfg.max_conns + 1),
+            staged: Vec::with_capacity(cfg.max_batch),
+            arena: Vec::with_capacity(cfg.max_batch * engine.features()),
+            ybuf: Vec::with_capacity(engine.out_dim()),
+            waiters: Vec::with_capacity(cfg.max_conns),
+            resp_max: resp_max_for(engine.out_dim()),
+            engine,
+            stats,
+            stop,
+            reload_pending: false,
+            tracer,
+            max_batch: cfg.max_batch,
+            max_wait: Duration::from_micros(cfg.max_wait_us),
+            rcap: cfg.read_buf,
+            wcap: cfg.write_buf,
+            idle_timeout: Duration::from_secs(cfg.idle_timeout_s),
+            model_path: cfg.model_path.clone(),
+            problem_override: cfg.problem,
+            trace_path: cfg.trace_path.clone(),
+            version: 1,
+            last_idle_check: Instant::now(),
+        }
+    }
+
+    fn run(mut self) {
+        while !self.stop.load(Ordering::SeqCst) {
+            if poll::take_sighup() {
+                self.reload_pending = true;
+            }
+            // Leftover work first: lines deferred by backpressure, a batch
+            // past its deadline, a reload waiting for an empty stage.
+            self.drain_and_dispatch();
+            self.build_pollset();
+            self.poller.poll(self.poll_timeout_ms());
+            for k in 0..self.poller.len() {
+                let (token, rev) = self.poller.entry(k);
+                if token == LISTENER {
+                    if rev & POLLIN != 0 {
+                        self.accept_ready();
+                    }
+                    continue;
+                }
+                if rev & (POLLERR | POLLHUP | POLLNVAL) != 0 && rev & POLLIN == 0 {
+                    // Dead socket with nothing left to read.  (POLLHUP with
+                    // readable data drains through the read path first.)
+                    self.close(token, false);
+                    continue;
+                }
+                if rev & POLLIN != 0 {
+                    match fill_rbuf(&mut self.conns[token]) {
+                        IoOutcome::Progress => {
+                            self.conns[token].last_active = Instant::now();
+                            self.parse_conn(token);
+                        }
+                        IoOutcome::Close => self.close(token, false),
+                        IoOutcome::Idle => {}
                     }
                 }
-                Err(e) => return Err(e),
+                // POLLOUT is handled by flush_all below.
+            }
+            self.drain_and_dispatch();
+            self.flush_all();
+            self.idle_sweep();
+        }
+        self.shutdown_drain();
+        if self.tracer.is_enabled() {
+            if let Err(e) = crate::trace::write_chrome_trace(&self.trace_path, &self.tracer) {
+                eprintln!("serve: writing trace {}: {e:#}", self.trace_path);
             }
         }
-        pending.clear();
-        submit_line(&line, tx, &rtx, &mut pending, stats);
-        // Drain any complete lines the client pipelined behind this one so
-        // the whole burst can share a micro-batch.
-        while reader.buffer().contains(&b'\n') {
-            line.clear();
-            if reader.read_line(&mut line)? == 0 {
+    }
+
+    /// How long the poll may sleep: until the batch deadline when a batch
+    /// is forming, else a bounded idle tick (stop-flag latency).
+    fn poll_timeout_ms(&self) -> i32 {
+        match self.staged.first() {
+            Some(first) => {
+                let deadline = first.submitted + self.max_wait;
+                let now = Instant::now();
+                if deadline <= now {
+                    0
+                } else {
+                    // Sub-millisecond remainders poll(0)-spin to the
+                    // deadline — bounded by max_wait, good for latency.
+                    (deadline - now).as_millis().min(100) as i32
+                }
+            }
+            None => 100,
+        }
+    }
+
+    /// Register the listener and every connection whose state machine
+    /// wants readiness.  Backpressure lives here: no free slot → listener
+    /// unpolled (kernel backlog holds); batch full / no response
+    /// reservation / read buffer full → connection not polled readable.
+    fn build_pollset(&mut self) {
+        self.poller.clear();
+        if !self.free.is_empty() {
+            self.poller.register(&self.listener, LISTENER, POLLIN);
+        }
+        let can_stage = self.staged.len() < self.max_batch;
+        for slot in 0..self.conns.len() {
+            let conn = &self.conns[slot];
+            let Some(stream) = conn.stream.as_ref() else { continue };
+            let mut interest = 0i16;
+            if !conn.closing
+                && conn.rlen < conn.rbuf.len()
+                && can_stage
+                && conn.pending() + conn.reserved + self.resp_max <= self.wcap
+            {
+                interest |= POLLIN;
+            }
+            if conn.pending() > 0 {
+                interest |= POLLOUT;
+            }
+            if interest != 0 {
+                self.poller.register(stream, slot, interest);
+            }
+        }
+    }
+
+    /// Accept until the socket runs dry or the slab fills.
+    fn accept_ready(&mut self) {
+        loop {
+            if self.free.is_empty() {
+                return;
+            }
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    let _ = stream.set_nonblocking(true);
+                    let _ = stream.set_nodelay(true);
+                    let Some(slot) = self.free.pop() else { return };
+                    let rcap = self.rcap;
+                    let wcap = self.wcap;
+                    let conn = &mut self.conns[slot];
+                    conn.gen = conn.gen.wrapping_add(1);
+                    if conn.rbuf.len() != rcap {
+                        conn.rbuf = vec![0u8; rcap]; // first use of this slot
+                    }
+                    conn.wbuf.clear();
+                    if conn.wbuf.capacity() < wcap {
+                        conn.wbuf.reserve_exact(wcap); // first use: capacity = wcap
+                    }
+                    conn.rlen = 0;
+                    conn.wpos = 0;
+                    conn.reserved = 0;
+                    conn.closing = false;
+                    conn.dirty = false;
+                    conn.last_active = Instant::now();
+                    conn.stream = Some(stream);
+                    self.stats.conn_opened();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                // Transient accept failure (ECONNABORTED, EMFILE …): give
+                // up for this sweep instead of spinning.
+                Err(_) => return,
+            }
+        }
+    }
+
+    /// Tear down a connection and recycle its slot.  `dropped` marks a
+    /// server-initiated kill (protocol-fatal), not a client hangup.
+    fn close(&mut self, slot: usize, dropped: bool) {
+        let conn = &mut self.conns[slot];
+        if conn.stream.take().is_none() {
+            return; // already closed this sweep
+        }
+        conn.gen = conn.gen.wrapping_add(1); // invalidate staged + waiters
+        conn.rlen = 0;
+        conn.wbuf.clear();
+        conn.wpos = 0;
+        conn.reserved = 0;
+        conn.closing = false;
+        conn.dirty = false;
+        self.free.push(slot);
+        self.stats.conn_closed();
+        if dropped {
+            self.stats.record_dropped();
+        }
+    }
+
+    /// Consume complete request lines from a connection's read buffer —
+    /// staging predicts, answering control ops and errors in place — until
+    /// the buffer runs out of lines or backpressure stops admission.
+    fn parse_conn(&mut self, slot: usize) {
+        let features = self.engine.features();
+        let resp_max = self.resp_max;
+        let wcap = self.wcap;
+        let mut consumed = 0usize;
+        loop {
+            let conn = &mut self.conns[slot];
+            if conn.closing || conn.stream.is_none() {
                 break;
             }
-            submit_line(&line, tx, &rtx, &mut pending, stats);
-        }
-        // Write responses in request order.
-        for p in &pending {
-            match p {
-                Pending::Error(msg) => {
-                    writer.write_all(msg.as_bytes())?;
-                    writer.write_all(b"\n")?;
+            let rlen = conn.rlen;
+            let Some(rel) = conn.rbuf[consumed..rlen].iter().position(|&b| b == b'\n') else {
+                // No complete line left.  A full buffer that is all one
+                // unterminated line can never complete: kill it.
+                if consumed == 0 && rlen == conn.rbuf.len() && !conn.rbuf.is_empty() {
+                    self.stats.record_error();
+                    protocol::write_error(
+                        &mut conn.wbuf,
+                        None,
+                        format_args!("request too large (over {} bytes)", conn.rbuf.len()),
+                    );
+                    conn.wbuf.push(b'\n');
+                    conn.closing = true;
+                    self.stats.record_dropped();
                 }
-                Pending::Stats => {
-                    // Multi-line text block (already newline-terminated).
-                    writer.write_all(stats.render_prometheus().as_bytes())?;
-                }
-                Pending::Submitted => match rrx.recv() {
-                    Ok(BatchReply::Ok { id, y, argmax, pred }) => {
-                        writer
-                            .write_all(protocol::response_line(id, &y, argmax, pred).as_bytes())?;
-                        writer.write_all(b"\n")?;
-                    }
-                    Ok(BatchReply::Err { id, msg }) => {
-                        writer.write_all(protocol::error_line(Some(id), &msg).as_bytes())?;
-                        writer.write_all(b"\n")?;
-                    }
-                    // Batcher gone mid-request: the server is shutting
-                    // down; close the connection.
-                    Err(_) => return Ok(()),
-                },
+                break;
+            };
+            let end = consumed + rel;
+            let room = wcap.saturating_sub(conn.pending() + conn.reserved);
+            let line = &conn.rbuf[consumed..end];
+            if line.iter().all(|b| b.is_ascii_whitespace()) {
+                consumed = end + 1; // blank keep-alive line
+                continue;
             }
+            if self.staged.len() >= self.max_batch {
+                conn.dirty = true; // batch full: leave the line for later
+                break;
+            }
+            let mark = self.arena.len();
+            match protocol::parse_line(line, &mut self.arena, features) {
+                Ok(ParsedLine::Predict { id, count }) => {
+                    if count != features {
+                        self.arena.truncate(mark);
+                        if room < 256 {
+                            conn.dirty = true;
+                            break;
+                        }
+                        self.stats.record_error();
+                        protocol::write_error(
+                            &mut conn.wbuf,
+                            Some(id),
+                            format_args!(
+                                "feature-length mismatch: got {count}, model wants {features}"
+                            ),
+                        );
+                        conn.wbuf.push(b'\n');
+                    } else {
+                        if room < resp_max {
+                            self.arena.truncate(mark);
+                            conn.dirty = true;
+                            break;
+                        }
+                        self.staged.push(Staged {
+                            slot,
+                            gen: conn.gen,
+                            id,
+                            xoff: mark,
+                            submitted: Instant::now(),
+                        });
+                        conn.reserved += resp_max;
+                        self.stats.record_request();
+                        self.stats.queue_inc();
+                    }
+                }
+                Ok(ParsedLine::Stats) => {
+                    if room < STATS_RESERVE {
+                        conn.dirty = true;
+                        break;
+                    }
+                    // Control op — off the hot path; the render may allocate.
+                    let block = self.stats.render_prometheus();
+                    conn.wbuf.extend_from_slice(block.as_bytes());
+                }
+                Ok(ParsedLine::Reload) => {
+                    if room < RELOAD_RESERVE {
+                        conn.dirty = true;
+                        break;
+                    }
+                    conn.reserved += RELOAD_RESERVE;
+                    self.waiters.push((slot, conn.gen));
+                    self.reload_pending = true;
+                }
+                Err(e) => {
+                    if room < 256 {
+                        conn.dirty = true;
+                        break;
+                    }
+                    self.stats.record_error();
+                    protocol::write_error(&mut conn.wbuf, None, format_args!("{e}"));
+                    conn.wbuf.push(b'\n');
+                }
+            }
+            consumed = end + 1;
         }
-        writer.flush()?;
+        let conn = &mut self.conns[slot];
+        if consumed > 0 {
+            conn.rbuf.copy_within(consumed..conn.rlen, 0);
+            conn.rlen -= consumed;
+        }
+        // dirty only survives while a complete line is actually waiting;
+        // a fully-drained buffer stops getting revisited.
+        if conn.dirty && !conn.rbuf[..conn.rlen].contains(&b'\n') {
+            conn.dirty = false;
+        }
     }
-}
 
-/// Parse and enqueue one request line, recording what the response slot
-/// will be.  Blank lines are ignored (keep-alive friendly).
-fn submit_line(
-    line: &str,
-    tx: &Sender<BatchJob>,
-    rtx: &Sender<BatchReply>,
-    pending: &mut Vec<Pending>,
-    stats: &ServeStats,
-) {
-    let trimmed = line.trim();
-    if trimmed.is_empty() {
-        return;
-    }
-    // Control op: `{"op":"stats"}` answers with the live counter block
-    // without entering the batcher.  Detected before the request parser so
-    // protocol.rs (and the predict wire format) stays byte-identical.
-    if trimmed.contains("\"op\"") && trimmed.contains("\"stats\"") {
-        pending.push(Pending::Stats);
-        return;
-    }
-    match protocol::parse_request(trimmed) {
-        Ok(req) => {
-            let job =
-                BatchJob { id: req.id, x: req.x, reply: rtx.clone(), submitted: Instant::now() };
-            match tx.send(job) {
-                Ok(()) => {
-                    stats.record_request();
-                    stats.queue_inc();
-                    pending.push(Pending::Submitted);
+    /// Work the parse → dispatch cycle until it stops making progress:
+    /// re-parse backpressured connections while the batch has room,
+    /// dispatch when full or past deadline, run a pending reload once the
+    /// stage is empty.
+    fn drain_and_dispatch(&mut self) {
+        loop {
+            if self.staged.len() < self.max_batch {
+                for slot in 0..self.conns.len() {
+                    if self.staged.len() >= self.max_batch {
+                        break;
+                    }
+                    if self.conns[slot].dirty && self.conns[slot].stream.is_some() {
+                        self.parse_conn(slot);
+                    }
                 }
-                Err(_) => pending.push(Pending::Error(protocol::error_line(
-                    Some(req.id),
-                    "server shutting down",
-                ))),
+            }
+            let due = self.staged.len() >= self.max_batch
+                || self
+                    .staged
+                    .first()
+                    .is_some_and(|f| Instant::now() >= f.submitted + self.max_wait);
+            if !due {
+                break;
+            }
+            self.dispatch();
+        }
+        if self.reload_pending && self.staged.is_empty() {
+            self.do_reload();
+        }
+    }
+
+    /// Run one batch: gather staged features into columns, forward once,
+    /// serialize each response into its connection's write buffer.
+    fn dispatch(&mut self) {
+        if self.staged.is_empty() {
+            return;
+        }
+        let cols = self.staged.len();
+        let features = self.engine.features();
+        let t0 = self.tracer.start();
+        for s in &self.staged {
+            // Queue span: admission (parse) → the batch forming.
+            self.tracer.record_from(Phase::Queue, s.submitted, 0);
+            self.stats.queue_dec();
+        }
+        self.engine.begin(cols);
+        for (j, s) in self.staged.iter().enumerate() {
+            self.engine.set_col(j, &self.arena[s.xoff..s.xoff + features]);
+        }
+        self.tracer.record(Phase::Batch, t0, cols as u64);
+        let t0 = self.tracer.start();
+        self.engine.forward();
+        self.tracer.record(Phase::Forward, t0, cols as u64);
+        self.stats.record_batch(cols as u64);
+        let t0 = self.tracer.start();
+        for (j, s) in self.staged.iter().enumerate() {
+            self.stats.record_latency_us(s.submitted.elapsed().as_micros() as u64);
+            let conn = &mut self.conns[s.slot];
+            if conn.gen != s.gen || conn.stream.is_none() || conn.closing {
+                continue; // connection died while staged
+            }
+            self.engine.col_into(j, &mut self.ybuf);
+            let am = argmax(&self.ybuf);
+            let pred = self.engine.problem().wire_pred(&self.ybuf);
+            protocol::write_response(&mut conn.wbuf, s.id, &self.ybuf, am, pred);
+            conn.wbuf.push(b'\n');
+            conn.reserved = conn.reserved.saturating_sub(self.resp_max);
+        }
+        self.tracer.record(Phase::Write, t0, cols as u64);
+        self.staged.clear();
+        self.arena.clear();
+    }
+
+    /// Swap in a freshly loaded checkpoint (stage must be empty so no
+    /// batch straddles the weight change).  Failure keeps the old engine
+    /// serving and reports the error to the waiters.
+    fn do_reload(&mut self) {
+        self.reload_pending = false;
+        let result = if self.model_path.is_empty() {
+            Err(anyhow::anyhow!("no --model checkpoint path; hot reload disabled"))
+        } else {
+            crate::nn::load_model(&self.model_path).and_then(|(ws, act, problem)| {
+                BatchEngine::new(ws, act, self.problem_override.unwrap_or(problem))
+            })
+        };
+        let ack: std::result::Result<u64, String> = match result {
+            Ok(engine) => {
+                self.engine = engine;
+                self.version += 1;
+                self.resp_max = resp_max_for(self.engine.out_dim());
+                self.arena = Vec::with_capacity(self.max_batch * self.engine.features());
+                self.ybuf = Vec::with_capacity(self.engine.out_dim());
+                self.stats.record_reload(self.version);
+                eprintln!(
+                    "serve: reloaded {} (version {}, features={}, out_dim={})",
+                    self.model_path,
+                    self.version,
+                    self.engine.features(),
+                    self.engine.out_dim()
+                );
+                Ok(self.version)
+            }
+            Err(e) => {
+                eprintln!("serve: reload failed, keeping current weights: {e:#}");
+                Err(format!("{e:#}"))
+            }
+        };
+        for (slot, gen) in std::mem::take(&mut self.waiters) {
+            let conn = &mut self.conns[slot];
+            if conn.gen != gen || conn.stream.is_none() {
+                continue;
+            }
+            conn.reserved = conn.reserved.saturating_sub(RELOAD_RESERVE);
+            match &ack {
+                Ok(version) => {
+                    conn.wbuf.extend_from_slice(b"{\"ok\":\"reload\",\"version\":");
+                    protocol::push_num(&mut conn.wbuf, *version as f64);
+                    conn.wbuf.extend_from_slice(b"}\n");
+                }
+                Err(msg) => {
+                    protocol::write_error(&mut conn.wbuf, None, format_args!("reload failed: {msg}"));
+                    conn.wbuf.push(b'\n');
+                }
             }
         }
-        Err(e) => {
-            stats.record_error();
-            pending.push(Pending::Error(protocol::error_line(None, &format!("{e:#}"))));
+    }
+
+    /// Opportunistic write pass over every connection with pending bytes;
+    /// closes drained `closing` connections and dead sockets.
+    fn flush_all(&mut self) {
+        for slot in 0..self.conns.len() {
+            if self.conns[slot].stream.is_none() {
+                continue;
+            }
+            if self.conns[slot].pending() == 0 {
+                if self.conns[slot].closing {
+                    self.close(slot, false); // dropped counted at mark time
+                }
+                continue;
+            }
+            match drain_wbuf(&mut self.conns[slot]) {
+                IoOutcome::Close => self.close(slot, false),
+                IoOutcome::Progress => {
+                    self.conns[slot].last_active = Instant::now();
+                    if self.conns[slot].closing {
+                        self.close(slot, false);
+                    }
+                }
+                IoOutcome::Idle => {}
+            }
+        }
+    }
+
+    /// Close connections idle past `idle_timeout` (checked at most once a
+    /// second; 0 disables — keep-alive clients stay as long as they like).
+    fn idle_sweep(&mut self) {
+        if self.idle_timeout.is_zero() || self.last_idle_check.elapsed() < Duration::from_secs(1) {
+            return;
+        }
+        self.last_idle_check = Instant::now();
+        for slot in 0..self.conns.len() {
+            if self.conns[slot].stream.is_some()
+                && self.conns[slot].last_active.elapsed() > self.idle_timeout
+            {
+                self.close(slot, false);
+            }
+        }
+    }
+
+    /// Final drain on shutdown: answer the staged batch, then give the
+    /// sockets a bounded grace period to take the last responses.
+    fn shutdown_drain(&mut self) {
+        self.dispatch();
+        let deadline = Instant::now() + Duration::from_millis(250);
+        loop {
+            let mut blocked = false;
+            for slot in 0..self.conns.len() {
+                if self.conns[slot].stream.is_none() || self.conns[slot].pending() == 0 {
+                    continue;
+                }
+                match drain_wbuf(&mut self.conns[slot]) {
+                    IoOutcome::Close => self.close(slot, false),
+                    IoOutcome::Idle => blocked = true,
+                    IoOutcome::Progress => {}
+                }
+            }
+            if !blocked || Instant::now() >= deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
         }
     }
 }

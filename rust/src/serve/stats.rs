@@ -1,11 +1,13 @@
 //! Live serve-path counters behind the `{"op":"stats"}` endpoint.
 //!
-//! [`ServeStats`] is shared (`Arc`) between every connection handler and
-//! the batcher thread.  The recording side is lock-free atomics plus one
-//! short mutex hold for the latency ring — no allocation on the hot path
-//! (the ring is preallocated; pinned by `tests/alloc_regression.rs`).
-//! Rendering (the cold path) snapshots the ring, sorts a copy and prints
-//! a Prometheus-style text block.
+//! [`ServeStats`] is shared (`Arc`) between the event-loop thread and any
+//! `Server::stats()` observers.  The recording side is lock-free atomics
+//! plus one short mutex hold for the latency ring — no allocation on the
+//! hot path (the ring is preallocated; pinned by
+//! `tests/alloc_regression.rs`).  Rendering (the cold path) snapshots the
+//! ring, sorts a copy and prints a Prometheus-style text block whose last
+//! line is always `serve_model_version` — probes can use it as the block
+//! terminator.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -29,6 +31,17 @@ pub struct ServeStats {
     batch_cols: AtomicU64,
     /// Jobs admitted but not yet answered.
     queue_depth: AtomicU64,
+    /// Connections ever accepted.
+    conns_accepted: AtomicU64,
+    /// Connections currently open.
+    conns_open: AtomicU64,
+    /// Connections the server killed (protocol-fatal, e.g. an oversized
+    /// request) — client hangups and idle closes don't count.
+    conns_dropped: AtomicU64,
+    /// Successful hot checkpoint reloads.
+    reloads: AtomicU64,
+    /// Weight-snapshot version (1 at startup, +1 per successful reload).
+    model_version: AtomicU64,
     /// Ring of recent request latencies in µs (submit → reply), oldest
     /// overwritten in place once full.
     latencies: Mutex<LatencyRing>,
@@ -48,6 +61,11 @@ impl Default for ServeStats {
             batches: AtomicU64::new(0),
             batch_cols: AtomicU64::new(0),
             queue_depth: AtomicU64::new(0),
+            conns_accepted: AtomicU64::new(0),
+            conns_open: AtomicU64::new(0),
+            conns_dropped: AtomicU64::new(0),
+            reloads: AtomicU64::new(0),
+            model_version: AtomicU64::new(0),
             latencies: Mutex::new(LatencyRing {
                 samples: Vec::with_capacity(LATENCY_RING),
                 next: 0,
@@ -119,6 +137,55 @@ impl ServeStats {
         self.queue_depth.load(Ordering::Relaxed)
     }
 
+    #[inline]
+    pub fn conn_opened(&self) {
+        self.conns_accepted.fetch_add(1, Ordering::Relaxed);
+        self.conns_open.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn conn_closed(&self) {
+        let _ = self.conns_open.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
+            Some(d.saturating_sub(1))
+        });
+    }
+
+    #[inline]
+    pub fn record_dropped(&self) {
+        self.conns_dropped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One successful hot reload; `version` is the new snapshot version.
+    pub fn record_reload(&self, version: u64) {
+        self.reloads.fetch_add(1, Ordering::Relaxed);
+        self.model_version.store(version, Ordering::Relaxed);
+    }
+
+    /// Set the snapshot version gauge without counting a reload (startup).
+    pub fn set_model_version(&self, version: u64) {
+        self.model_version.store(version, Ordering::Relaxed);
+    }
+
+    pub fn conns_accepted(&self) -> u64 {
+        self.conns_accepted.load(Ordering::Relaxed)
+    }
+
+    pub fn conns_open(&self) -> u64 {
+        self.conns_open.load(Ordering::Relaxed)
+    }
+
+    pub fn conns_dropped(&self) -> u64 {
+        self.conns_dropped.load(Ordering::Relaxed)
+    }
+
+    pub fn reloads(&self) -> u64 {
+        self.reloads.load(Ordering::Relaxed)
+    }
+
+    pub fn model_version(&self) -> u64 {
+        self.model_version.load(Ordering::Relaxed)
+    }
+
     /// Render the Prometheus-style text block the `{"op":"stats"}`
     /// endpoint answers with (`# TYPE` lines plus plain samples; latency
     /// quantiles follow the summary-metric labeling convention).
@@ -153,6 +220,23 @@ impl ServeStats {
             let v = if lat.is_empty() { 0.0 } else { percentile(&lat, q) };
             let _ = writeln!(out, "serve_latency_us{{quantile=\"{label}\"}} {v:.0}");
         }
+        let accepted = self.conns_accepted.load(Ordering::Relaxed);
+        let open = self.conns_open.load(Ordering::Relaxed);
+        let dropped = self.conns_dropped.load(Ordering::Relaxed);
+        let reloads = self.reloads.load(Ordering::Relaxed);
+        let version = self.model_version.load(Ordering::Relaxed);
+        let _ = writeln!(out, "# TYPE serve_connections_accepted_total counter");
+        let _ = writeln!(out, "serve_connections_accepted_total {accepted}");
+        let _ = writeln!(out, "# TYPE serve_connections_open gauge");
+        let _ = writeln!(out, "serve_connections_open {open}");
+        let _ = writeln!(out, "# TYPE serve_connections_dropped_total counter");
+        let _ = writeln!(out, "serve_connections_dropped_total {dropped}");
+        let _ = writeln!(out, "# TYPE serve_reloads_total counter");
+        let _ = writeln!(out, "serve_reloads_total {reloads}");
+        // Keep serve_model_version the last line: stats probes read until
+        // they see it and treat it as the end-of-block marker.
+        let _ = writeln!(out, "# TYPE serve_model_version gauge");
+        let _ = writeln!(out, "serve_model_version {version}");
         out
     }
 }
@@ -186,6 +270,37 @@ mod tests {
         assert!(text.contains("serve_queue_depth 4"), "{text}");
         assert!(text.contains("serve_latency_us{quantile=\"0.5\"} 200"), "{text}");
         assert!(text.contains("serve_latency_us{quantile=\"0.99\"} 400"), "{text}");
+    }
+
+    #[test]
+    fn connection_and_reload_counters_render_with_version_last() {
+        let s = ServeStats::new();
+        s.set_model_version(1);
+        for _ in 0..3 {
+            s.conn_opened();
+        }
+        s.conn_closed();
+        s.record_dropped();
+        s.record_reload(2);
+        assert_eq!(s.conns_accepted(), 3);
+        assert_eq!(s.conns_open(), 2);
+        assert_eq!(s.conns_dropped(), 1);
+        assert_eq!(s.reloads(), 1);
+        assert_eq!(s.model_version(), 2);
+        let text = s.render_prometheus();
+        assert!(text.contains("serve_connections_accepted_total 3"), "{text}");
+        assert!(text.contains("serve_connections_open 2"), "{text}");
+        assert!(text.contains("serve_connections_dropped_total 1"), "{text}");
+        assert!(text.contains("serve_reloads_total 1"), "{text}");
+        // The version gauge is the documented block terminator.
+        assert_eq!(text.trim_end().lines().last(), Some("serve_model_version 2"), "{text}");
+    }
+
+    #[test]
+    fn open_gauge_saturates_at_zero() {
+        let s = ServeStats::new();
+        s.conn_closed();
+        assert_eq!(s.conns_open(), 0);
     }
 
     #[test]

@@ -5,9 +5,12 @@
 //! have warmed up; so must the baselines' `loss_grad_into` substrate,
 //! the serve batcher's gather → forward → scatter cycle
 //! (`serve::BatchEngine`) at any batch width up to the warmed maximum,
-//! and the `Local` transport's steady-state **allreduce** (per-rank
-//! recycled reduction slots — the fix for the seed `CommWorld`'s three
-//! clones-per-call behind one mutex).
+//! the serve event loop's full **socket-to-socket** request cycle
+//! (readiness poll → `fill_rbuf` → in-place parse → stage → forward →
+//! serialize into the write buffer → `drain_wbuf`) on a warmed
+//! connection, and the `Local` transport's steady-state **allreduce**
+//! (per-rank recycled reduction slots — the fix for the seed
+//! `CommWorld`'s three clones-per-call behind one mutex).
 //!
 //! Every collective section below runs with an **enabled tracer**
 //! (`--trace` armed): recording a span is two `Instant` reads plus a push
@@ -485,4 +488,78 @@ fn steady_state_hot_loops_allocate_nothing() {
     assert_eq!(sx.as_slice(), d.x.col_range(12, 47).as_slice());
     assert_eq!(sy.as_slice(), d.y.col_range(12, 47).as_slice());
     std::fs::remove_file(&gfds_path).ok();
+
+    // ---- serve path: socket-to-socket event loop ---------------------
+    // The C10K tentpole's end-to-end claim: once a connection's slot
+    // buffers, the batch arena and the engine workspace are warm, a full
+    // accept-less request cycle — readiness poll → `fill_rbuf` →
+    // in-place parse → stage → forward → serialize into the write
+    // buffer → `drain_wbuf` — allocates nothing on the serve thread.
+    // The counting allocator is process-global, so the client half of
+    // the armed window is raw `write_all`/`read` on prebuilt bytes and
+    // a preallocated response buffer: the whole process stays silent.
+    if std::net::TcpListener::bind("127.0.0.1:0").is_ok() {
+        use std::io::{Read, Write};
+        let cfg = gradfree_admm::config::ServeConfig {
+            port: 0,
+            max_batch: 4,
+            max_wait_us: 0,
+            ..gradfree_admm::config::ServeConfig::default()
+        };
+        let server = gradfree_admm::serve::Server::start(
+            &cfg,
+            ws.clone(),
+            Activation::Relu,
+            Problem::BinaryHinge,
+        )
+        .unwrap();
+        let mut sock = std::net::TcpStream::connect(server.addr()).unwrap();
+        sock.set_nodelay(true).unwrap();
+        // Prebuild a burst as wide as the configured batch, plus a
+        // response buffer, before arming; narrower dispatches (the loop
+        // batches whatever has arrived when max_wait_us=0 expires) only
+        // reuse buffers the first burst already sized.
+        let mut burst = String::new();
+        for id in 0..4u64 {
+            let feats: Vec<f32> = (0..7).map(|r| x.at(r, id as usize)).collect();
+            burst.push_str(&gradfree_admm::serve::request_line(id, &feats));
+        }
+        let burst = burst.into_bytes();
+        let mut resp = vec![0u8; 4096];
+        let mut cycle = |sock: &mut std::net::TcpStream, resp: &mut [u8]| -> usize {
+            sock.write_all(&burst).unwrap();
+            let (mut got, mut len) = (0usize, 0usize);
+            while got < 4 {
+                let n = sock.read(&mut resp[len..]).unwrap();
+                assert!(n > 0, "server closed the connection mid-cycle");
+                got += resp[len..len + n].iter().filter(|&&b| b == b'\n').count();
+                len += n;
+            }
+            len
+        };
+        // Warm: the first burst sizes the slot buffers and pins the
+        // arena at batch width 4; the second proves stability and
+        // captures the reference bytes for the bit-compare below.
+        cycle(&mut sock, &mut resp);
+        let warm_len = cycle(&mut sock, &mut resp);
+        let warm = resp[..warm_len].to_vec();
+        let ((), sock_allocs) = armed(|| {
+            for _ in 0..5 {
+                let n = cycle(&mut sock, &mut resp);
+                assert_eq!(n, warm_len);
+            }
+        });
+        assert_eq!(
+            sock_allocs, 0,
+            "steady-state socket-to-socket serve cycle must not allocate \
+             ({sock_allocs} allocations)"
+        );
+        assert_eq!(
+            &resp[..warm_len],
+            &warm[..],
+            "armed-window responses must be bit-identical to the warm cycle"
+        );
+        drop(sock);
+        server.shutdown();
+    }
 }

@@ -62,15 +62,8 @@ fn col(x: &Matrix, c: usize) -> Vec<f32> {
     (0..x.rows()).map(|r| x.at(r, c)).collect()
 }
 
-fn serve_cfg(max_batch: usize, max_wait_us: u64, threads: usize) -> ServeConfig {
-    ServeConfig {
-        host: "127.0.0.1".into(),
-        port: 0,
-        threads,
-        max_batch,
-        max_wait_us,
-        problem: None,
-    }
+fn serve_cfg(max_batch: usize, max_wait_us: u64) -> ServeConfig {
+    ServeConfig { port: 0, max_batch, max_wait_us, ..ServeConfig::default() }
 }
 
 #[test]
@@ -91,7 +84,7 @@ fn served_predictions_match_library_forward_bitwise() {
     let mlp = Mlp::new(vec![6, 5, 1], act).unwrap();
     let want = mlp.forward(&ws2, &x);
 
-    let server = Server::start(&serve_cfg(8, 300, 4), ws2, act2, problem2).unwrap();
+    let server = Server::start(&serve_cfg(8, 300), ws2, act2, problem2).unwrap();
     let addr = server.addr();
 
     // Concurrent clients: 3 singleton-request threads over disjoint column
@@ -137,7 +130,7 @@ fn server_handles_malformed_and_shape_errors_then_recovers() {
     let (ws, act, x) = trained_model();
     let mlp = Mlp::new(vec![6, 5, 1], act).unwrap();
     let want = mlp.forward(&ws, &x);
-    let server = Server::start(&serve_cfg(4, 100, 2), ws, act, Problem::BinaryHinge).unwrap();
+    let server = Server::start(&serve_cfg(4, 100), ws, act, Problem::BinaryHinge).unwrap();
 
     // Malformed JSON over a raw socket → error response, and the very same
     // connection keeps speaking the protocol afterwards.
@@ -178,7 +171,7 @@ fn multi_output_argmax_over_network() {
     let x = Matrix::randn(4, 20, &mut rng);
     let want = mlp.forward(&ws, &x);
     let server =
-        Server::start(&serve_cfg(8, 100, 2), ws, Activation::HardSigmoid, Problem::BinaryHinge)
+        Server::start(&serve_cfg(8, 100), ws, Activation::HardSigmoid, Problem::BinaryHinge)
             .unwrap();
     let mut client = Client::connect(server.addr()).unwrap();
     for c in 0..x.cols() {
@@ -278,7 +271,7 @@ fn l2_and_multihinge_train_checkpoint_serve_roundtrip() {
         // serve it; responses must decode exactly as the library does
         let mlp = Mlp::with_problem(case.dims.clone(), act2, problem2).unwrap();
         let want = mlp.forward(&ws2, &test.x);
-        let server = Server::start(&serve_cfg(8, 200, 2), ws2, act2, problem2).unwrap();
+        let server = Server::start(&serve_cfg(8, 200), ws2, act2, problem2).unwrap();
         let mut client = Client::connect(server.addr()).unwrap();
         for c in 0..16 {
             let resp = client.predict(&col(&test.x, c)).unwrap();
@@ -308,7 +301,7 @@ fn graceful_shutdown_closes_the_port() {
     let mlp = Mlp::new(vec![3, 2], Activation::Relu).unwrap();
     let ws = mlp.init_weights(&mut rng);
     let server =
-        Server::start(&serve_cfg(2, 50, 2), ws, Activation::Relu, Problem::BinaryHinge).unwrap();
+        Server::start(&serve_cfg(2, 50), ws, Activation::Relu, Problem::BinaryHinge).unwrap();
     let addr = server.addr();
     // Live: a client can connect and round-trip.
     let mut client = Client::connect(addr).unwrap();

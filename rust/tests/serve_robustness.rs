@@ -1,0 +1,331 @@
+//! Robustness corpus for the event-driven server: malformed and hostile
+//! wire input (slow-loris partial frames, oversize lines, bad escapes),
+//! connection-slot reclaim under a tiny slab, idle reaping, and hot
+//! checkpoint reload — swap success, swap failure, and bit-identity of
+//! responses across the swap.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use gradfree_admm::config::{Activation, ServeConfig};
+use gradfree_admm::linalg::Matrix;
+use gradfree_admm::nn::{save_model, Mlp};
+use gradfree_admm::problem::Problem;
+use gradfree_admm::rng::Rng;
+use gradfree_admm::serve::{Client, Server};
+
+fn loopback_available() -> bool {
+    match std::net::TcpListener::bind("127.0.0.1:0") {
+        Ok(_) => true,
+        Err(e) => {
+            eprintln!("skipping serve robustness test: cannot bind loopback ({e})");
+            false
+        }
+    }
+}
+
+/// A small random model (3 inputs, 2 outputs) plus a probe input.
+fn model(seed: u64) -> (Vec<Matrix>, Mlp) {
+    let mlp = Mlp::new(vec![3, 4, 2], Activation::Relu).unwrap();
+    let mut rng = Rng::seed_from(seed);
+    let ws = mlp.init_weights(&mut rng);
+    (ws, mlp)
+}
+
+fn cfg() -> ServeConfig {
+    ServeConfig { port: 0, max_batch: 4, max_wait_us: 100, ..ServeConfig::default() }
+}
+
+/// Raw line-protocol socket: write whole lines, read whole replies.
+struct Raw {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl Raw {
+    fn connect(addr: std::net::SocketAddr) -> Raw {
+        let s = TcpStream::connect(addr).unwrap();
+        s.set_nodelay(true).unwrap();
+        Raw { w: s.try_clone().unwrap(), r: BufReader::new(s) }
+    }
+
+    fn send(&mut self, line: &[u8]) {
+        self.w.write_all(line).unwrap();
+        self.w.write_all(b"\n").unwrap();
+    }
+
+    fn recv(&mut self) -> String {
+        let mut line = String::new();
+        let n = self.r.read_line(&mut line).unwrap();
+        assert!(n > 0, "server closed the connection unexpectedly");
+        line.trim_end().to_string()
+    }
+}
+
+#[test]
+fn malformed_corpus_gets_typed_errors_and_the_connection_survives() {
+    if !loopback_available() {
+        return;
+    }
+    let (ws, mlp) = model(3);
+    let want = mlp.forward(&ws, &Matrix::from_vec(3, 1, vec![0.5, -1.0, 2.0]));
+    let server = Server::start(&cfg(), ws, Activation::Relu, Problem::BinaryHinge).unwrap();
+    let mut raw = Raw::connect(server.addr());
+
+    // Every corpus entry gets an `{"error":...}` reply whose message names
+    // the failure, and the connection keeps speaking the protocol after.
+    let corpus: &[(&[u8], &str)] = &[
+        (b"this is not json", "expected a JSON object"),
+        (b"[1,2,3]", "expected a JSON object"),
+        (br#"{"id":1,"x":[1,2,3]} trailing"#, "trailing bytes"),
+        (br#"{"id":1,"x":[1,"a",3]}"#, "array of numbers"),
+        (br#"{"id":1,"x":[1,2,--3]}"#, "malformed number"),
+        (br#"{"id":1,"x":[]}"#, "empty feature vector"),
+        (br#"{"x":[1,2,3]}"#, "missing field \"id\""),
+        (br#"{"id":2}"#, "missing field \"x\""),
+        (br#"{"id":-4,"x":[1,2,3]}"#, "non-negative integer"),
+        (br#"{"id":1,"id":2,"x":[1,2,3]}"#, "duplicate field"),
+        (br#"{"id":1,"x":[1,2,3],"note":"bad \q escape"}"#, "invalid string escape"),
+        (br#"{"id":1,"x":[1,2,3],"note":"\uZZZZ"}"#, "invalid string escape"),
+        (br#"{"op":"selfdestruct"}"#, "unknown op"),
+        (br#"{"id":9,"x":[1,2]}"#, "mismatch"),
+    ];
+    for (line, needle) in corpus {
+        raw.send(line);
+        let reply = raw.recv();
+        assert!(
+            reply.contains("\"error\"") && reply.contains(needle),
+            "corpus line {:?}: reply {reply:?} missing {needle:?}",
+            String::from_utf8_lossy(line)
+        );
+    }
+
+    // Deep nesting in an unknown field is bounded, not stack-recursed.
+    let mut deep = br#"{"id":1,"x":[1,2,3],"junk":"#.to_vec();
+    deep.extend(std::iter::repeat(b'[').take(64));
+    deep.extend(std::iter::repeat(b']').take(64));
+    deep.push(b'}');
+    raw.send(&deep);
+    assert!(raw.recv().contains("nesting too deep"));
+
+    // Recovery: the same connection still predicts, bit-identically.
+    raw.send(br#"{"id":7,"x":[0.5,-1.0,2.0]}"#);
+    let reply = raw.recv();
+    assert!(reply.contains("\"id\":7"), "{reply}");
+    let resp = gradfree_admm::serve::parse_response(&reply).unwrap();
+    for (r, v) in resp.y.iter().enumerate() {
+        assert_eq!(v.to_bits(), want.at(r, 0).to_bits());
+    }
+    let stats = server.stats();
+    assert!(stats.errors() >= corpus.len() as u64, "errors counted");
+    assert_eq!(stats.conns_dropped(), 0, "no connection was dropped");
+    server.shutdown();
+}
+
+#[test]
+fn slow_loris_partial_frames_assemble_into_one_request() {
+    if !loopback_available() {
+        return;
+    }
+    let (ws, mlp) = model(5);
+    let want = mlp.forward(&ws, &Matrix::from_vec(3, 1, vec![1.0, 2.0, 3.0]));
+    let server = Server::start(&cfg(), ws, Activation::Relu, Problem::BinaryHinge).unwrap();
+    let mut raw = Raw::connect(server.addr());
+    // One request dribbled a few bytes at a time across many writes: the
+    // event loop must buffer partial frames without blocking anyone.
+    let line = br#"{"id":11,"x":[1,2,3]}"#;
+    for chunk in line.chunks(3) {
+        raw.w.write_all(chunk).unwrap();
+        raw.w.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    raw.w.write_all(b"\n").unwrap();
+    let reply = raw.recv();
+    let resp = gradfree_admm::serve::parse_response(&reply).unwrap();
+    assert_eq!(resp.id, 11);
+    for (r, v) in resp.y.iter().enumerate() {
+        assert_eq!(v.to_bits(), want.at(r, 0).to_bits());
+    }
+    server.shutdown();
+}
+
+#[test]
+fn oversize_line_is_rejected_and_slot_reclaimed() {
+    if !loopback_available() {
+        return;
+    }
+    let (ws, _) = model(7);
+    // Tiny slab + tiny read buffer: 2 slots, 1 KiB lines.
+    let cfg = ServeConfig { max_conns: 2, read_buf: 1024, ..cfg() };
+    let server = Server::start(&cfg, ws, Activation::Relu, Problem::BinaryHinge).unwrap();
+
+    for round in 0..3 {
+        let mut raw = Raw::connect(server.addr());
+        // One unterminated line exactly filling the 1 KiB read buffer (no
+        // surplus queued, so the close is a clean FIN, not an RST): error
+        // reply, then close.
+        let prefix: &[u8] = br#"{"id":1,"x":["#;
+        let giant = vec![b'9'; 1024 - prefix.len()];
+        raw.w.write_all(prefix).unwrap();
+        raw.w.write_all(&giant).unwrap();
+        let reply = raw.recv();
+        assert!(
+            reply.contains("\"error\"") && reply.contains("request too large"),
+            "round {round}: {reply}"
+        );
+        // The server closes its side after the error line.
+        let mut rest = Vec::new();
+        let _ = raw.r.read_to_end(&mut rest); // EOF (or reset) — both closed
+        assert!(rest.is_empty(), "round {round}: bytes after close: {rest:?}");
+    }
+    // Slots were reclaimed each round (2 slots, 3 kills) and the server
+    // still serves normal clients.
+    let mut client = Client::connect(server.addr()).unwrap();
+    let resp = client.predict(&[1.0, 2.0, 3.0]).unwrap();
+    assert_eq!(resp.y.len(), 2);
+    let stats = server.stats();
+    assert_eq!(stats.conns_dropped(), 3, "each oversize kill counted once");
+    server.shutdown();
+}
+
+#[test]
+fn tiny_slab_recycles_slots_across_many_connections() {
+    if !loopback_available() {
+        return;
+    }
+    let (ws, _) = model(9);
+    let cfg = ServeConfig { max_conns: 3, ..cfg() };
+    let server = Server::start(&cfg, ws, Activation::Relu, Problem::BinaryHinge).unwrap();
+    // Far more sequential connections than slots: every one must be served.
+    for i in 0..20 {
+        let mut client = Client::connect(server.addr()).unwrap();
+        let resp = client.predict(&[i as f32, 1.0, -1.0]).unwrap();
+        assert_eq!(resp.y.len(), 2, "connection {i}");
+    }
+    let stats = server.stats();
+    assert!(stats.conns_accepted() >= 20);
+    assert_eq!(stats.conns_dropped(), 0);
+    server.shutdown();
+}
+
+#[test]
+fn idle_timeout_reaps_quiet_connections() {
+    if !loopback_available() {
+        return;
+    }
+    let (ws, _) = model(11);
+    let cfg = ServeConfig { idle_timeout_s: 1, ..cfg() };
+    let server = Server::start(&cfg, ws, Activation::Relu, Problem::BinaryHinge).unwrap();
+    let mut raw = Raw::connect(server.addr());
+    raw.send(br#"{"id":1,"x":[1,2,3]}"#);
+    let _ = raw.recv();
+    // Quiet past the timeout: the server closes its side.
+    raw.w.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut rest = Vec::new();
+    raw.r.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "unexpected bytes before idle close: {rest:?}");
+    server.shutdown();
+}
+
+#[test]
+fn hot_reload_swaps_weights_without_dropping_connections() {
+    if !loopback_available() {
+        return;
+    }
+    let (ws_old, mlp) = model(21);
+    let (ws_new, _) = model(22);
+    let x = vec![0.25f32, -0.75, 1.5];
+    let want_old = mlp.forward(&ws_old, &Matrix::from_vec(3, 1, x.clone()));
+    let want_new = mlp.forward(&ws_new, &Matrix::from_vec(3, 1, x.clone()));
+
+    let dir = std::env::temp_dir().join(format!("gf_serve_reload_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("model.gfadmm").display().to_string();
+    save_model(&ckpt, &ws_old, Activation::Relu, Problem::BinaryHinge).unwrap();
+
+    let cfg = ServeConfig { model_path: ckpt.clone(), ..cfg() };
+    let server = Server::start(&cfg, ws_old, Activation::Relu, Problem::BinaryHinge).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+
+    let before = client.predict(&x).unwrap();
+    for (r, v) in before.y.iter().enumerate() {
+        assert_eq!(v.to_bits(), want_old.at(r, 0).to_bits(), "pre-reload row {r}");
+    }
+
+    // Swap the checkpoint on disk, then reload over the same connection.
+    save_model(&ckpt, &ws_new, Activation::Relu, Problem::BinaryHinge).unwrap();
+    let ack = client.control(r#"{"op":"reload"}"#).unwrap();
+    assert!(ack.contains("\"ok\":\"reload\"") && ack.contains("\"version\":2"), "{ack}");
+
+    // Same connection, new weights — bit-identical to the library pass.
+    let after = client.predict(&x).unwrap();
+    for (r, v) in after.y.iter().enumerate() {
+        assert_eq!(v.to_bits(), want_new.at(r, 0).to_bits(), "post-reload row {r}");
+    }
+    let stats = server.stats();
+    assert_eq!(stats.model_version(), 2);
+    assert_eq!(stats.reloads(), 1);
+    assert_eq!(stats.conns_dropped(), 0);
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn failed_reload_keeps_the_old_weights_serving() {
+    if !loopback_available() {
+        return;
+    }
+    let (ws, mlp) = model(31);
+    let x = vec![1.0f32, 0.0, -1.0];
+    let want = mlp.forward(&ws, &Matrix::from_vec(3, 1, x.clone()));
+
+    let dir = std::env::temp_dir().join(format!("gf_serve_badreload_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("model.gfadmm").display().to_string();
+    save_model(&ckpt, &ws, Activation::Relu, Problem::BinaryHinge).unwrap();
+
+    let cfg = ServeConfig { model_path: ckpt.clone(), ..cfg() };
+    let server = Server::start(&cfg, ws, Activation::Relu, Problem::BinaryHinge).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+
+    // Corrupt the checkpoint, then ask for a reload: typed error line,
+    // old weights keep serving, version unchanged.
+    std::fs::write(&ckpt, b"not a checkpoint").unwrap();
+    let ack = client.control(r#"{"op":"reload"}"#).unwrap();
+    assert!(ack.contains("\"error\"") && ack.contains("reload failed"), "{ack}");
+
+    let resp = client.predict(&x).unwrap();
+    for (r, v) in resp.y.iter().enumerate() {
+        assert_eq!(v.to_bits(), want.at(r, 0).to_bits(), "row {r}");
+    }
+    let stats = server.stats();
+    assert_eq!(stats.model_version(), 1);
+    assert_eq!(stats.reloads(), 0);
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stats_block_ends_with_model_version() {
+    if !loopback_available() {
+        return;
+    }
+    let (ws, _) = model(41);
+    let server = Server::start(&cfg(), ws, Activation::Relu, Problem::BinaryHinge).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+    let _ = client.predict(&[1.0, 2.0, 3.0]).unwrap();
+    // Drain the multi-line stats block until its documented terminator.
+    let mut line = client.control(r#"{"op":"stats"}"#).unwrap();
+    let mut saw_requests = false;
+    let mut lines = 0;
+    while !line.starts_with("serve_model_version") {
+        saw_requests |= line.starts_with("serve_requests_total");
+        line = client.control_next_line().unwrap();
+        lines += 1;
+        assert!(lines < 256, "stats block never terminated");
+    }
+    assert!(saw_requests, "stats block carries request counters");
+    assert_eq!(line.trim(), "serve_model_version 1");
+    server.shutdown();
+}
